@@ -1,0 +1,112 @@
+//! Regenerate the paper's Table 1 + Figure 3: pure environment
+//! simulation throughput for every executor on Atari-like and
+//! MuJoCo-like tasks, plus the thread-count scaling series.
+//!
+//! Run: `cargo run --release --example throughput_report -- [--steps N]`
+//! (`--quick` shrinks the step count for CI.)
+
+use envpool::cli::Args;
+use envpool::coordinator::throughput::run_throughput;
+use envpool::metrics::table::{fmt_fps, Table};
+
+const METHODS: &[(&str, &str)] = &[
+    ("For-loop", "forloop"),
+    ("Subprocess", "subprocess"),
+    ("Sample-Factory", "sample-factory"),
+    ("EnvPool (sync)", "envpool-sync"),
+    ("EnvPool (async)", "envpool-async"),
+];
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps: u64 = if args.flag("quick") { 2_000 } else { args.parse_or("steps", 20_000) };
+    let threads: usize = args.parse_or("num-threads", 2);
+    let seed = 0u64;
+    // paper's guidance: N = 2-3x threads, M = threads
+    let num_envs = 3 * threads;
+    let batch = threads;
+
+    println!("# Table 1 analog — this machine ({} hw threads visible)", num_threads_visible());
+    println!("# steps/cell = {steps}, threads = {threads}, N = {num_envs}, M = {batch}\n");
+
+    let mut t = Table::new(["Method", "Atari (Pong-v5) FPS", "MuJoCo (Ant-v4) FPS"]);
+    for (label, kind) in METHODS {
+        let atari = run_throughput("Pong-v5", kind, num_envs, batch, threads, steps, seed)
+            .map_err(|e| anyhow::anyhow!("{label}/atari: {e}"))?;
+        let mujoco = run_throughput("Ant-v4", kind, num_envs, batch, threads, steps, seed)
+            .map_err(|e| anyhow::anyhow!("{label}/mujoco: {e}"))?;
+        t.row([label.to_string(), fmt_fps(atari), fmt_fps(mujoco)]);
+    }
+    // numa+async: shard the pool (the paper's DGX-A100 row; here 2 shards)
+    {
+        use envpool::pool::{NumaPool, PoolConfig};
+        use envpool::rng::Pcg32;
+        let fps = numa_fps("Pong-v5", num_envs, batch, threads, steps, seed)?;
+        let fps_m = numa_fps("Ant-v4", num_envs, batch, threads, steps, seed)?;
+        t.row(["EnvPool (numa+async)".to_string(), fmt_fps(fps), fmt_fps(fps_m)]);
+
+        fn numa_fps(
+            task: &str,
+            num_envs: usize,
+            batch: usize,
+            threads: usize,
+            steps: u64,
+            seed: u64,
+        ) -> anyhow::Result<f64> {
+            let shards = 2;
+            let n = num_envs.div_ceil(shards) * shards;
+            let m = batch.div_ceil(shards) * shards;
+            let cfg = PoolConfig::new(task)
+                .num_envs(n)
+                .batch_size(m)
+                .num_threads(threads.max(shards))
+                .seed(seed);
+            let mut pool = NumaPool::make(cfg, shards).map_err(|e| anyhow::anyhow!("{e}"))?;
+            pool.async_reset();
+            let mut outs = pool.make_outputs();
+            let spec = envpool::envs::registry::spec_for(task).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mult = envpool::coordinator::throughput::frame_multiplier(task) as f64;
+            let mut rng = Pcg32::new(seed, 1);
+            let mut actions = Vec::new();
+            let mut done_steps = 0u64;
+            let t0 = std::time::Instant::now();
+            while done_steps < steps {
+                pool.recv_all(&mut outs);
+                let mut ids = Vec::new();
+                for o in &outs {
+                    ids.extend_from_slice(&o.env_ids);
+                }
+                envpool::coordinator::throughput::random_actions(
+                    &spec.action_space,
+                    ids.len(),
+                    &mut rng,
+                    &mut actions,
+                );
+                pool.send(&actions, &ids).map_err(|e| anyhow::anyhow!("{e}"))?;
+                done_steps += ids.len() as u64;
+            }
+            Ok(done_steps as f64 / t0.elapsed().as_secs_f64() * mult)
+        }
+    }
+    println!("{}", t.render());
+
+    // Figure 3 analog: scaling with worker threads.
+    println!("\n# Figure 3 analog — FPS vs worker threads (Pong-v5)");
+    let mut f = Table::new(["Threads", "Subprocess", "EnvPool (sync)", "EnvPool (async)"]);
+    for w in [1usize, 2, 4] {
+        let n = 3 * w;
+        let sub = run_throughput("Pong-v5", "subprocess", w.max(1), w, w, steps / 2, seed)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let sync = run_throughput("Pong-v5", "envpool-sync", n, n, w, steps / 2, seed)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let asy = run_throughput("Pong-v5", "envpool-async", n, w, w, steps / 2, seed)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        f.row([w.to_string(), fmt_fps(sub), fmt_fps(sync), fmt_fps(asy)]);
+    }
+    println!("{}", f.render());
+    Ok(())
+}
+
+fn num_threads_visible() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

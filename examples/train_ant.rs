@@ -1,0 +1,107 @@
+//! PPO on the MuJoCo-like locomotion tasks (Ant-v4 / cheetah_run) —
+//! regenerates the paper's Figures 5/6/8/10 (rl_games + CleanRL MuJoCo
+//! example runs) and Figures 11/12 (Acme cheetah-run comparisons) on
+//! this testbed's substitute substrate.
+//!
+//! Modes:
+//!   (default)        one Ant-v4 run with N=64 (Table-5 hyperparameters)
+//!   --compare        Fig 5/10 analog: subprocess(Ray stand-in) vs EnvPool
+//!   --sweep-n        Fig 6/12 analog: N ∈ {1, 8, 64} (ant) / {8,32,128} (cheetah)
+//!   --parity         Fig 8 analog: same-N sample-efficiency parity
+//!   --env cheetah    switch to cheetah_run (dm_control-style)
+//!   --compare-dummy  Fig 11 analog: for-loop (DummyVecEnv stand-in) vs EnvPool
+
+use envpool::cli::Args;
+use envpool::config::{ExecutorKind, TrainConfig};
+use envpool::coordinator::ppo;
+
+fn base_cfg(args: &Args) -> TrainConfig {
+    let cheetah = args.get("env", "ant") == "cheetah";
+    let mut cfg = TrainConfig {
+        env_id: if cheetah { "cheetah_run".into() } else { "Ant-v4".into() },
+        executor: ExecutorKind::EnvPoolSync,
+        num_envs: if cheetah { 32 } else { 64 },
+        batch_size: 0, // set below
+        num_threads: 2,
+        total_steps: 200_000,
+        learning_rate: 3e-4,
+        update_epochs: 2,
+        ..TrainConfig::default()
+    };
+    cfg.batch_size = cfg.num_envs;
+    cfg.num_envs = args.parse_or("num-envs", cfg.num_envs);
+    cfg.batch_size = cfg.num_envs;
+    cfg.total_steps = args.parse_or("total-steps", cfg.total_steps);
+    cfg.seed = args.parse_or("seed", 1);
+    cfg
+}
+
+fn run(cfg: &TrainConfig, label: &str) -> anyhow::Result<()> {
+    let s = ppo::train(cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "{label:<18} N={:<4} wall={:>7.1}s fps={:>7.0} final={:>8.1} best={:>8.1} episodes={}",
+        s.num_envs,
+        s.wall_secs,
+        s.env_steps as f64 / s.wall_secs,
+        s.final_return,
+        s.best_return,
+        s.episodes
+    );
+    let path = format!("{}_{}_curve.csv", cfg.env_id.replace('-', "_"), label);
+    s.write_curve_csv(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cheetah = args.get("env", "ant") == "cheetah";
+
+    if args.flag("compare") {
+        println!("# Fig 5/10 analog: subprocess (Ray stand-in) vs EnvPool, same N");
+        for ex in [ExecutorKind::Subprocess, ExecutorKind::EnvPoolSync] {
+            let mut cfg = base_cfg(&args);
+            cfg.executor = ex;
+            run(&cfg, &format!("{ex}"))?;
+        }
+        return Ok(());
+    }
+    if args.flag("compare-dummy") {
+        println!("# Fig 11 analog: for-loop (DummyVecEnv stand-in) vs EnvPool, N=32");
+        for ex in [ExecutorKind::ForLoop, ExecutorKind::EnvPoolSync] {
+            let mut cfg = base_cfg(&args);
+            cfg.executor = ex;
+            run(&cfg, &format!("{ex}"))?;
+        }
+        return Ok(());
+    }
+    if args.flag("sweep-n") {
+        let ns: &[usize] = if cheetah { &[8, 32, 128] } else { &[1, 8, 64] };
+        println!("# Fig 6/12 analog: num_envs sweep (same step budget)");
+        for &n in ns {
+            let mut cfg = base_cfg(&args);
+            cfg.num_envs = n;
+            cfg.batch_size = n;
+            run(&cfg, &format!("n{n}"))?;
+        }
+        return Ok(());
+    }
+    if args.flag("parity") {
+        println!("# Fig 8 analog: executor parity (sample efficiency), same N");
+        for ex in [ExecutorKind::ForLoop, ExecutorKind::EnvPoolSync] {
+            let mut cfg = base_cfg(&args);
+            cfg.executor = ex;
+            run(&cfg, &format!("{ex}"))?;
+        }
+        return Ok(());
+    }
+
+    let cfg = base_cfg(&args);
+    println!("training PPO on {} (N={})...", cfg.env_id, cfg.num_envs);
+    let (s, prof) = ppo::train_profiled(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{}", s.render());
+    println!("{}", prof.render(&format!("{}/envpool-sync", cfg.env_id)));
+    for p in s.curve.iter().step_by((s.curve.len() / 12).max(1)) {
+        println!("  steps {:>8}  t={:>7.1}s  return {:>8.1}", p.env_steps, p.wall_secs, p.mean_return);
+    }
+    Ok(())
+}

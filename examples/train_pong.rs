@@ -1,0 +1,92 @@
+//! PPO on the Atari-like Pong (4×84×84 pixel observations) — the paper's
+//! flagship end-to-end demo ("train Atari Pong in five minutes"). On this
+//! single-core container the absolute time differs; what the run shows is
+//! the full pixel pipeline composing: EnvPool frames -> AOT policy ->
+//! AOT train step.
+//!
+//! Modes:
+//!   (default)   one Pong run with N=8 (paper Table-3 hyperparameters)
+//!   --parity    Fig 7 analog: same-N executor parity
+//!   --sweep-n   Fig 6 analog: N ∈ {8, 16} (tuned high-throughput config)
+//!   --compare   Fig 5/9 analog: subprocess vs EnvPool wall time
+
+use envpool::cli::Args;
+use envpool::config::{ExecutorKind, TrainConfig};
+use envpool::coordinator::ppo;
+
+fn base_cfg(args: &Args) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        env_id: "Pong-v5".into(),
+        executor: ExecutorKind::EnvPoolSync,
+        num_envs: 8,
+        batch_size: 8,
+        num_threads: 2,
+        total_steps: 40_960, // a few iterations by default (pixel obs are heavy)
+        learning_rate: 2.5e-4,
+        clip_coef: 0.1,
+        ..TrainConfig::default()
+    };
+    cfg.num_envs = args.parse_or("num-envs", cfg.num_envs);
+    cfg.batch_size = cfg.num_envs;
+    cfg.total_steps = args.parse_or("total-steps", cfg.total_steps);
+    cfg.seed = args.parse_or("seed", 1);
+    cfg
+}
+
+fn run(cfg: &TrainConfig, label: &str) -> anyhow::Result<()> {
+    let s = ppo::train(cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "{label:<14} N={:<3} wall={:>7.1}s fps={:>6.0} final={:>6.1} best={:>6.1} episodes={}",
+        s.num_envs,
+        s.wall_secs,
+        s.env_steps as f64 / s.wall_secs,
+        s.final_return,
+        s.best_return,
+        s.episodes
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+
+    if args.flag("parity") {
+        println!("# Fig 7 analog: executor parity on Pong (N=8)");
+        for ex in [ExecutorKind::ForLoop, ExecutorKind::EnvPoolSync] {
+            let mut cfg = base_cfg(&args);
+            cfg.executor = ex;
+            run(&cfg, &format!("{ex}"))?;
+        }
+        return Ok(());
+    }
+    if args.flag("compare") {
+        println!("# Fig 5/9 analog: subprocess vs EnvPool on Pong, same N");
+        for ex in [ExecutorKind::Subprocess, ExecutorKind::EnvPoolSync] {
+            let mut cfg = base_cfg(&args);
+            cfg.executor = ex;
+            run(&cfg, &format!("{ex}"))?;
+        }
+        return Ok(());
+    }
+    if args.flag("sweep-n") {
+        println!("# Fig 6 analog: default N=8 vs tuned N=16 Pong config");
+        for n in [8usize, 16] {
+            let mut cfg = base_cfg(&args);
+            cfg.num_envs = n;
+            cfg.batch_size = n;
+            run(&cfg, &format!("n{n}"))?;
+        }
+        return Ok(());
+    }
+
+    let cfg = base_cfg(&args);
+    println!(
+        "training PPO on Pong-v5 pixels (N={}, {} steps)...",
+        cfg.num_envs, cfg.total_steps
+    );
+    let (s, prof) = ppo::train_profiled(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{}", s.render());
+    println!("{}", prof.render("pong/envpool-sync"));
+    s.write_curve_csv("pong_curve.csv").map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(())
+}

@@ -1,0 +1,218 @@
+"""AOT lowering: JAX/Pallas (L1+L2) -> HLO text artifacts + manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Per training configuration three entries are lowered:
+
+  policy_<name>.hlo.txt  (params..., obs[B,D])          -> dist + value
+  train_<name>.hlo.txt   (params..., m..., v..., t, minibatch..., lr)
+                                                         -> updated state
+  gae_<name>.hlo.txt     (rew, val, last_val, done, trunc) -> (adv, ret)
+
+``manifest.json`` records every shape and the parameter order so the
+Rust runtime (rust/src/runtime/artifact.rs) can drive the executables
+without any Python at run time. Initial parameters are exported to
+``params_<name>.bin`` (raw little-endian f32, concatenated in spec
+order).
+"""
+
+import argparse
+import functools
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import kernels, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# training configurations (paper Appendix F hyperparameters)
+
+CONFIGS = {}
+
+
+def _cfg(name, task, obs_dim, act_dim, continuous, hidden, num_envs, num_steps,
+         num_minibatches, clip=0.2, vf=0.5, ent=0.01, mgn=0.5,
+         gamma=0.99, lam=0.95):
+    CONFIGS[name] = dict(
+        task=task, obs_dim=obs_dim, act_dim=act_dim, continuous=continuous,
+        hidden=hidden, num_envs=num_envs, num_steps=num_steps,
+        num_minibatches=num_minibatches, clip=clip, vf=vf, ent=ent, mgn=mgn,
+        gamma=gamma, lam=lam,
+    )
+
+
+# CartPole quickstart/e2e (Figure 6-style N sweep: 1 / 8 / 64)
+_cfg("cartpole_n1", "CartPole-v1", 4, 2, False, 64, 1, 128, 4, clip=0.2)
+_cfg("cartpole_n8", "CartPole-v1", 4, 2, False, 64, 8, 128, 4, clip=0.2)
+_cfg("cartpole_n64", "CartPole-v1", 4, 2, False, 64, 64, 128, 4, clip=0.2)
+# Atari-like Pong: Table 3 hyperparameters (N=8), tuned variant N=16
+_cfg("pong_n8", "Pong-v5", 4 * 84 * 84, 6, False, 256, 8, 128, 4, clip=0.1)
+_cfg("pong_n16", "Pong-v5", 4 * 84 * 84, 6, False, 256, 16, 64, 4, clip=0.1)
+# Breakout for the Figure-4 profile
+_cfg("breakout_n8", "Breakout-v5", 4 * 84 * 84, 4, False, 256, 8, 128, 4, clip=0.1)
+# MuJoCo-like: Table 5 hyperparameters (N=64), sweep variants
+_cfg("ant_n1", "Ant-v4", 21, 8, True, 64, 1, 128, 4, ent=0.0)
+_cfg("ant_n8", "Ant-v4", 21, 8, True, 64, 8, 64, 4, ent=0.0)
+_cfg("ant_n64", "Ant-v4", 21, 8, True, 64, 64, 64, 4, ent=0.0)
+_cfg("hopper_n8", "Hopper-v4", 11, 3, True, 64, 8, 64, 4, ent=0.0)
+# dm_control cheetah run for the Acme figures (11: N=32; 12: sweep)
+_cfg("cheetah_n8", "cheetah_run", 17, 6, True, 64, 8, 64, 4, ent=0.0)
+_cfg("cheetah_n32", "cheetah_run", 17, 6, True, 64, 32, 64, 4, ent=0.0)
+_cfg("cheetah_n128", "cheetah_run", 17, 6, True, 64, 128, 64, 4, ent=0.0)
+# Pendulum: smallest continuous task, used by the runtime smoke tests
+_cfg("pendulum_n4", "Pendulum-v1", 3, 1, True, 64, 4, 64, 4, ent=0.0)
+
+
+def lower_config(name, cfg, out_dir, use_pallas):
+    kernels.use_pallas(use_pallas)
+    obs_dim, act_dim = cfg["obs_dim"], cfg["act_dim"]
+    cont, hidden = cfg["continuous"], cfg["hidden"]
+    N, T, nmb = cfg["num_envs"], cfg["num_steps"], cfg["num_minibatches"]
+    mb = (N * T) // nmb
+
+    spec = model.param_spec(obs_dim, act_dim, hidden, cont)
+    p_shapes = [s for _, s in spec]
+    f32 = jnp.float32
+
+    def sds(shape):
+        return jax.ShapeDtypeStruct(shape, f32)
+
+    params_s = [sds(s) for s in p_shapes]
+
+    # --- policy entry ---
+    def policy_fn(*args):
+        params = list(args[:-1])
+        obs = args[-1]
+        return model.policy_outputs(params, obs, cont)
+
+    pol_lowered = jax.jit(policy_fn).lower(*params_s, sds((N, obs_dim)))
+    pol_file = f"policy_{name}.hlo.txt"
+    with open(os.path.join(out_dir, pol_file), "w") as f:
+        f.write(to_hlo_text(pol_lowered))
+
+    # --- train entry ---
+    act_shape = (mb, act_dim) if cont else (mb,)
+
+    def train_fn(*args):
+        P = len(p_shapes)
+        params = list(args[0:P])
+        m = list(args[P:2 * P])
+        v = list(args[2 * P:3 * P])
+        t = args[3 * P]
+        obs, actions, logp, adv, ret, lr = args[3 * P + 1:]
+        out = model.train_step(
+            params, m, v, t, (obs, actions, logp, adv, ret), lr, cont,
+            clip_coef=cfg["clip"], vf_coef=cfg["vf"], ent_coef=cfg["ent"],
+            max_grad_norm=cfg["mgn"],
+        )
+        new_params, new_m, new_v, t2, loss, pg, vl, ent, kl = out
+        return (*new_params, *new_m, *new_v, t2, loss, pg, vl, ent, kl)
+
+    train_args = (
+        params_s + params_s + params_s
+        + [sds(())]
+        + [sds((mb, obs_dim)), sds(act_shape), sds((mb,)), sds((mb,)), sds((mb,)), sds(())]
+    )
+    # donate params/opt state buffers: they are consumed every call
+    ndon = 3 * len(p_shapes) + 1
+    train_lowered = jax.jit(
+        train_fn, donate_argnums=tuple(range(ndon))
+    ).lower(*train_args)
+    train_file = f"train_{name}.hlo.txt"
+    with open(os.path.join(out_dir, train_file), "w") as f:
+        f.write(to_hlo_text(train_lowered))
+
+    # --- gae entry ---
+    def gae_fn(rew, val, last, done, trunc):
+        return model.gae_outputs(rew, val, last, done, trunc, cfg["gamma"], cfg["lam"])
+
+    gae_lowered = jax.jit(gae_fn).lower(
+        sds((T, N)), sds((T, N)), sds((N,)), sds((T, N)), sds((T, N))
+    )
+    gae_file = f"gae_{name}.hlo.txt"
+    with open(os.path.join(out_dir, gae_file), "w") as f:
+        f.write(to_hlo_text(gae_lowered))
+
+    # --- initial parameters ---
+    params0 = model.init_params(obs_dim, act_dim, hidden, cont, seed=0)
+    params_file = f"params_{name}.bin"
+    with open(os.path.join(out_dir, params_file), "wb") as f:
+        for p in params0:
+            f.write(struct.pack(f"<{p.size}f", *np.asarray(p, np.float32).ravel()))
+
+    return dict(
+        task=cfg["task"], obs_dim=obs_dim, act_dim=act_dim,
+        continuous=cont, hidden=hidden, num_envs=N, num_steps=T,
+        num_minibatches=nmb, minibatch_size=mb,
+        gamma=cfg["gamma"], lam=cfg["lam"],
+        params=[[n, list(s)] for n, s in spec],
+        files=dict(policy=pol_file, train=train_file, gae=gae_file,
+                   params=params_file),
+        pallas=use_pallas,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--pallas", action="store_true",
+                    help="lower through the Pallas kernels (interpret=True)")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated subset (default: all)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [n for n in args.configs.split(",") if n] or list(CONFIGS)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"configs": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for name in names:
+        cfg = CONFIGS[name]
+        key = f"{name}_pallas" if args.pallas else name
+        print(f"lowering {key} (task={cfg['task']}, N={cfg['num_envs']})...")
+        manifest["configs"][key] = lower_config(key, cfg, args.out_dir, args.pallas)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # Flat `key = value` mirror for the Rust runtime (no JSON dep there).
+    flat_path = os.path.join(args.out_dir, "manifest.txt")
+    with open(flat_path, "w") as f:
+        f.write("# generated by compile.aot — flat mirror of manifest.json\n")
+        f.write(f"configs = {','.join(sorted(manifest['configs']))}\n")
+        for key, e in sorted(manifest["configs"].items()):
+            for field in ("task", "obs_dim", "act_dim", "hidden", "num_envs",
+                          "num_steps", "num_minibatches", "minibatch_size",
+                          "gamma", "lam"):
+                f.write(f"{key}.{field} = {e[field]}\n")
+            f.write(f"{key}.continuous = {str(e['continuous']).lower()}\n")
+            params = ",".join(f"{n}:{'x'.join(map(str, s)) if s else '1'}"
+                              for n, s in e["params"])
+            f.write(f"{key}.params = {params}\n")
+            for fk, fv in e["files"].items():
+                f.write(f"{key}.files.{fk} = {fv}\n")
+    print(f"wrote {manifest_path} + manifest.txt ({len(manifest['configs'])} configs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""L1 Pallas kernels + pure-jnp reference oracles.
+
+`use_pallas(True)` routes the L2 model through the Pallas kernels
+(interpret=True so the lowered HLO runs on any PJRT backend); the default
+jnp path is mathematically identical (verified by `python/tests/`) and
+lowers to leaner HLO for the CPU-only e2e training examples. Both paths
+lower into the same AOT artifact pipeline.
+"""
+
+_USE_PALLAS = False
+
+
+def use_pallas(on: bool) -> None:
+    """Globally select the Pallas kernel path for model building."""
+    global _USE_PALLAS
+    _USE_PALLAS = bool(on)
+
+
+def pallas_enabled() -> bool:
+    return _USE_PALLAS

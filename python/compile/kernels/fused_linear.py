@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: tiled fused ``linear + bias + activation``.
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): the (B,I)·(I,O) product is
+tiled into MXU-shaped blocks; each grid cell owns a (bm, bn) output tile,
+accumulates over the K dimension in VMEM, and applies the bias and
+nonlinearity *before* the tile leaves VMEM — one HBM round-trip per tile
+instead of matmul-write + activation-read. ``BlockSpec`` expresses the
+HBM↔VMEM schedule that a CUDA version would express with threadblocks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; the interpret lowering emits plain HLO (correct on any
+backend) and the real-TPU performance model lives in DESIGN.md §6.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, act: str, n_k: int, bk: int):
+    """One (bm, bn) output tile: accumulate over k strips, fuse bias+act."""
+
+    def body(k, acc):
+        x_blk = x_ref[:, pl.dslice(k * bk, bk)]
+        w_blk = w_ref[pl.dslice(k * bk, bk), :]
+        return acc + x_blk @ w_blk
+
+    acc0 = jnp.zeros(o_ref.shape, o_ref.dtype)
+    bias = b_ref[...]
+    y = jax.lax.fori_loop(0, n_k, body, acc0) + bias[None, :]
+    if act == "tanh":
+        y = jnp.tanh(y)
+    elif act == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` not exceeding `target` (keeps the grid
+    exact without padding logic)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _pallas_linear(x, w, b, act: str, bm: int = 64, bn: int = 128):
+    """Raw fused y = act(x @ w + b) as a Pallas call (no autodiff rule).
+
+    Block sizes (bm, bn) target the 128-lane MXU tile; they are clamped
+    to divisors of the actual dims so tiny policy layers still work.
+    """
+    B, I = x.shape
+    I2, O = w.shape
+    assert I == I2 and b.shape == (O,)
+    bm = _block(B, bm)
+    bn = _block(O, bn)
+    # K blocking: at most 128-wide strips, must divide I.
+    bk = _block(I, 128)
+    n_k = I // bk
+
+    grid = (B // bm, O // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, act=act, n_k=n_k, bk=bk),
+        out_shape=jax.ShapeDtypeStruct((B, O), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, I), lambda i, j: (i, 0)),
+            pl.BlockSpec((I, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w, b)
+
+
+# --------------------------------------------------------------------------
+# custom VJP: the backward pass is three more instances of the same tiled
+# kernel (dx = ĝ·Wᵀ, dW = xᵀ·ĝ, with ĝ = g ⊙ act′ computed from the saved
+# output), so the whole train graph stays on the L1 kernel.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_act(x, w, b, act: str = "tanh"):
+    """Fused y = act(x @ w + b) with reverse-mode support."""
+    return _pallas_linear(x, w, b, act)
+
+
+def _fwd(x, w, b, act):
+    y = _pallas_linear(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _bwd(act, res, g):
+    x, w, y = res
+    if act == "tanh":
+        g = g * (1.0 - y * y)
+    elif act == "relu":
+        g = g * (y > 0.0).astype(g.dtype)
+    zero_i = jnp.zeros((x.shape[1],), x.dtype)
+    zero_o = jnp.zeros((w.shape[1],), w.dtype)
+    dx = _pallas_linear(g, w.T, zero_i, "none")       # [B,O]·[O,I]
+    dw = _pallas_linear(x.T, g, zero_o, "none")       # [I,B]·[B,O]
+    db = g.sum(0)
+    return dx, dw, db
+
+
+linear_act.defvjp(_fwd, _bwd)
+
+
+def vmem_footprint_bytes(B: int, I: int, O: int, bm: int = 64, bn: int = 128) -> int:
+    """Estimated VMEM bytes per grid step (DESIGN.md §6 perf model):
+    x tile + w strip + out tile, f32."""
+    bm = _block(B, bm)
+    bn = _block(O, bn)
+    return 4 * (bm * I + I * bn + bm * bn)

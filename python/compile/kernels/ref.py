@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for the L1 kernels.
+
+These are the ground truth the Pallas kernels are verified against
+(``python/tests/test_kernels.py``) and the fast lowering path for the
+CPU-only end-to-end examples.
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def linear_act(x, w, b, act: str):
+    """y = act(x @ w + b). Activations: 'tanh' | 'relu' | 'none'."""
+    y = x @ w + b
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "relu":
+        return jax.nn.relu(y)
+    if act == "none":
+        return y
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def gae(rewards, values, last_value, dones, truncs, gamma: float, lam: float):
+    """Generalized Advantage Estimation (reverse scan), time-major.
+
+    Args:
+      rewards: [T, B]
+      values:  [T, B]   (value of the state the action was taken in)
+      last_value: [B]   (bootstrap value of the final next-state)
+      dones:   [T, B]   (true termination; kills the bootstrap)
+      truncs:  [T, B]   (time-limit truncation; keeps the bootstrap value
+                         but stops advantage propagation across episodes)
+      gamma, lam: scalars.
+
+    Returns (advantages [T, B], returns [T, B]).
+    """
+    rewards, values, last_value, dones, truncs = map(
+        jnp.asarray, (rewards, values, last_value, dones, truncs)
+    )
+
+    def body(carry, x):
+        rew_t, val_t, done_t, trunc_t = x
+        adv_next, v_next = carry
+        nonterminal = 1.0 - done_t
+        # at a truncation we may bootstrap the value but must not leak
+        # the *advantage* of the next episode
+        nonboundary = nonterminal * (1.0 - trunc_t)
+        delta = rew_t + gamma * v_next * nonterminal - val_t
+        adv = delta + gamma * lam * nonboundary * adv_next
+        return (adv, val_t), adv
+
+    # `reverse=True` (rather than scanning over a reversed index array +
+    # reversing the stacked output) keeps explicit `reverse` ops out of
+    # the lowered HLO — xla_extension 0.5.1 mis-executes that pattern
+    # (EXPERIMENTS.md §Notes).
+    (_, _), advs = jax.lax.scan(
+        body,
+        (jnp.zeros_like(last_value), last_value),
+        (rewards, values, dones, truncs),
+        reverse=True,
+    )
+    return advs, advs + values

@@ -1,0 +1,215 @@
+"""L2: JAX actor-critic model + PPO update, built on the L1 kernels.
+
+Everything here is *build-time only*: `aot.py` lowers these functions to
+HLO text once; the Rust coordinator executes the artifacts via PJRT with
+Python nowhere on the request path.
+
+Parameters are a flat, ordered list of arrays (the AOT calling
+convention — see `param_spec`):
+
+    [W0, b0, W1, b1, W_pi, b_pi, W_v, b_v]            (discrete)
+    [W0, b0, W1, b1, W_mu, b_mu, log_std, W_v, b_v]   (continuous)
+
+PPO follows CleanRL / the original paper (clipped surrogate, value-loss
+clipping optional off, entropy bonus, global-norm clipping, Adam).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import fused_linear, ref
+
+
+def _linear(x, w, b, act):
+    if kernels.pallas_enabled():
+        return fused_linear.linear_act(x, w, b, act)
+    return ref.linear_act(x, w, b, act)
+
+
+# --------------------------------------------------------------------------
+# parameters
+
+
+def param_spec(obs_dim: int, act_dim: int, hidden: int, continuous: bool):
+    """Ordered (name, shape) list defining the AOT calling convention."""
+    spec = [
+        ("w0", (obs_dim, hidden)),
+        ("b0", (hidden,)),
+        ("w1", (hidden, hidden)),
+        ("b1", (hidden,)),
+    ]
+    if continuous:
+        spec += [
+            ("w_mu", (hidden, act_dim)),
+            ("b_mu", (act_dim,)),
+            ("log_std", (act_dim,)),
+        ]
+    else:
+        spec += [("w_pi", (hidden, act_dim)), ("b_pi", (act_dim,))]
+    spec += [("w_v", (hidden, 1)), ("b_v", (1,))]
+    return spec
+
+
+def _orthogonal(rng, shape, gain):
+    a = rng.standard_normal(shape).astype(np.float32)
+    q, r = np.linalg.qr(a if shape[0] >= shape[1] else a.T)
+    q = q * np.sign(np.diag(r))
+    if shape[0] < shape[1]:
+        q = q.T
+    return (gain * q[: shape[0], : shape[1]]).astype(np.float32)
+
+
+def init_params(obs_dim, act_dim, hidden, continuous, seed=0):
+    """CleanRL-style orthogonal init (gain sqrt(2); 0.01 policy head,
+    1.0 value head)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in param_spec(obs_dim, act_dim, hidden, continuous):
+        if name.startswith("w"):
+            if name in ("w_pi", "w_mu"):
+                gain = 0.01
+            elif name == "w_v":
+                gain = 1.0
+            else:
+                gain = float(np.sqrt(2.0))
+            out.append(_orthogonal(rng, shape, gain))
+        elif name == "log_std":
+            out.append(np.zeros(shape, np.float32))
+        else:
+            out.append(np.zeros(shape, np.float32))
+    return out
+
+
+# --------------------------------------------------------------------------
+# forward passes
+
+
+def policy_forward(params, obs, continuous: bool):
+    """Returns (dist, value[B]): dist is logits [B, A] (discrete) or
+    (mu [B, A], log_std [A]) (continuous)."""
+    if continuous:
+        w0, b0, w1, b1, w_mu, b_mu, log_std, w_v, b_v = params
+    else:
+        w0, b0, w1, b1, w_pi, b_pi, w_v, b_v = params
+    h = _linear(obs, w0, b0, "tanh")
+    h = _linear(h, w1, b1, "tanh")
+    v = (_linear(h, w_v, b_v, "none"))[:, 0]
+    if continuous:
+        mu = _linear(h, w_mu, b_mu, "none")
+        return (mu, log_std), v
+    logits = _linear(h, w_pi, b_pi, "none")
+    return logits, v
+
+
+def policy_outputs(params, obs, continuous: bool):
+    """The AOT `policy` entry: flat tuple of arrays.
+
+    discrete:   (logits [B, A], value [B])
+    continuous: (mu [B, A], log_std_b [B, A], value [B])
+    """
+    dist, v = policy_forward(params, obs, continuous)
+    if continuous:
+        mu, log_std = dist
+        return mu, jnp.broadcast_to(log_std[None, :], mu.shape), v
+    return dist, v
+
+
+def log_prob(dist, actions, continuous: bool):
+    """Log-probability and entropy under the policy distribution."""
+    if continuous:
+        mu, log_std = dist
+        std = jnp.exp(log_std)
+        lp = -0.5 * (((actions - mu) / std) ** 2 + 2 * log_std + jnp.log(2 * jnp.pi))
+        ent = (log_std + 0.5 * jnp.log(2 * jnp.pi * jnp.e)) * jnp.ones_like(mu)
+        return lp.sum(-1), ent.sum(-1)
+    logits = dist
+    logp_all = jax.nn.log_softmax(logits)
+    lp = jnp.take_along_axis(logp_all, actions.astype(jnp.int32)[:, None], axis=1)[:, 0]
+    p = jnp.exp(logp_all)
+    ent = -(p * logp_all).sum(-1)
+    return lp, ent
+
+
+# --------------------------------------------------------------------------
+# PPO update (one minibatch) + Adam
+
+
+def ppo_loss(params, mb, continuous, clip_coef, vf_coef, ent_coef, norm_adv=True):
+    obs, actions, old_logp, adv, ret = mb
+    dist, value = policy_forward(params, obs, continuous)
+    logp, entropy = log_prob(dist, actions, continuous)
+    logratio = logp - old_logp
+    ratio = jnp.exp(logratio)
+    if norm_adv:
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    pg1 = -adv * ratio
+    pg2 = -adv * jnp.clip(ratio, 1.0 - clip_coef, 1.0 + clip_coef)
+    pg_loss = jnp.maximum(pg1, pg2).mean()
+    v_loss = 0.5 * ((value - ret) ** 2).mean()
+    ent = entropy.mean()
+    loss = pg_loss + vf_coef * v_loss - ent_coef * ent
+    approx_kl = ((ratio - 1.0) - logratio).mean()
+    return loss, (pg_loss, v_loss, ent, approx_kl)
+
+
+def adam_init(params):
+    return [jnp.zeros_like(p) for p in params], [jnp.zeros_like(p) for p in params]
+
+
+def train_step(
+    params,
+    m,
+    v,
+    t,
+    mb,
+    lr,
+    continuous,
+    clip_coef=0.2,
+    vf_coef=0.5,
+    ent_coef=0.0,
+    max_grad_norm=0.5,
+    beta1=0.9,
+    beta2=0.999,
+    eps=1e-5,
+):
+    """One PPO minibatch update with global-norm clipping + Adam.
+
+    The AOT `train` entry. `t` is the (f32 scalar) Adam step count;
+    `lr` a f32 scalar so Rust can anneal it without recompiling.
+    Returns (params', m', v', t', loss, pg_loss, v_loss, entropy, kl).
+    """
+    (loss, (pg_loss, v_loss, ent, kl)), grads = jax.value_and_grad(
+        ppo_loss, has_aux=True
+    )(params, mb, continuous, clip_coef, vf_coef, ent_coef)
+
+    gnorm = jnp.sqrt(sum((g * g).sum() for g in grads))
+    scale = jnp.minimum(1.0, max_grad_norm / (gnorm + 1e-8))
+    grads = [g * scale for g in grads]
+
+    t2 = t + 1.0
+    bc1 = 1.0 - beta1**t2
+    bc2 = 1.0 - beta2**t2
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi2 = beta1 * mi + (1 - beta1) * g
+        vi2 = beta2 * vi + (1 - beta2) * g * g
+        p2 = p - lr * (mi2 / bc1) / (jnp.sqrt(vi2 / bc2) + eps)
+        new_params.append(p2)
+        new_m.append(mi2)
+        new_v.append(vi2)
+    return new_params, new_m, new_v, t2, loss, pg_loss, v_loss, ent, kl
+
+
+# --------------------------------------------------------------------------
+# GAE entry
+
+
+def gae_outputs(rewards, values, last_value, dones, truncs, gamma, lam):
+    """The AOT `gae` entry: dispatches to the Pallas kernel when enabled."""
+    if kernels.pallas_enabled():
+        from .kernels import gae as gae_k
+
+        return gae_k.gae(rewards, values, last_value, dones, truncs, gamma, lam)
+    return ref.gae(rewards, values, last_value, dones, truncs, gamma, lam)

@@ -1,0 +1,40 @@
+//! Bench: Figure 3 — throughput vs number of worker threads for each
+//! executor (the scaling curves). On this 1-core container the absolute
+//! curves are flat; the measured quantity is per-step engine overhead
+//! as the configuration scales (see DESIGN.md hardware note).
+
+use envpool::bench_util::Bencher;
+use envpool::coordinator::throughput::run_throughput;
+use envpool::metrics::table::{fmt_fps, Table};
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+    let steps: u64 = if quick { 1_000 } else { 8_000 };
+
+    for task in ["Pong-v5", "Ant-v4"] {
+        println!("== Figure 3: {task} FPS vs workers ==");
+        let mut t = Table::new(["Workers", "Subprocess", "Sample-Factory", "EnvPool (sync)", "EnvPool (async)"]);
+        for w in [1usize, 2, 4, 8] {
+            let n = 3 * w;
+            let mut sub = 0.0;
+            let mut sf = 0.0;
+            let mut sync = 0.0;
+            let mut asy = 0.0;
+            b.run(&format!("fig3/{task}/subprocess/w{w}"), steps as f64, || {
+                sub = run_throughput(task, "subprocess", w, w, w, steps, 0).unwrap();
+            });
+            b.run(&format!("fig3/{task}/sample-factory/w{w}"), steps as f64, || {
+                sf = run_throughput(task, "sample-factory", n, n, w, steps, 0).unwrap();
+            });
+            b.run(&format!("fig3/{task}/envpool-sync/w{w}"), steps as f64, || {
+                sync = run_throughput(task, "envpool-sync", n, n, w, steps, 0).unwrap();
+            });
+            b.run(&format!("fig3/{task}/envpool-async/w{w}"), steps as f64, || {
+                asy = run_throughput(task, "envpool-async", n, w, w, steps, 0).unwrap();
+            });
+            t.row([w.to_string(), fmt_fps(sub), fmt_fps(sf), fmt_fps(sync), fmt_fps(asy)]);
+        }
+        println!("{}", t.render());
+    }
+}

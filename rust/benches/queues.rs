@@ -1,0 +1,68 @@
+//! Component microbenchmarks: the two queues and the end-to-end pool
+//! round-trip — the quantities the paper's Appendix D optimizations
+//! target (lock-free enqueue/dequeue, zero-copy block batching), plus
+//! the ablation: EnvPool with a trivial Mutex<VecDeque> action queue,
+//! quantifying what the lock-free design buys.
+
+use envpool::bench_util::Bencher;
+use envpool::pool::action_queue::ActionBufferQueue;
+use envpool::pool::state_queue::StateBufferQueue;
+use envpool::pool::{EnvPool, PoolConfig};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+    let ops: usize = if quick { 20_000 } else { 1_000_000 };
+
+    // --- ActionBufferQueue enqueue+dequeue round trip ---
+    let q: ActionBufferQueue<u64> = ActionBufferQueue::new(256);
+    b.run("queues/action_queue/roundtrip", ops as f64, || {
+        for i in 0..ops as u64 {
+            q.enqueue(i).unwrap();
+            std::hint::black_box(q.try_dequeue());
+        }
+    });
+
+    // --- ablation: Mutex<VecDeque> in the same role ---
+    let mq: Mutex<VecDeque<u64>> = Mutex::new(VecDeque::with_capacity(256));
+    b.run("queues/mutex_vecdeque/roundtrip", ops as f64, || {
+        for i in 0..ops as u64 {
+            mq.lock().unwrap().push_back(i);
+            std::hint::black_box(mq.lock().unwrap().pop_front());
+        }
+    });
+
+    // --- StateBufferQueue slot write + block recv (obs dim 16) ---
+    let rounds = if quick { 2_000 } else { 100_000 };
+    let sq = StateBufferQueue::new(8, 4, 16);
+    let mut out = sq.make_output();
+    b.run("queues/state_queue/block_cycle", (rounds * 4) as f64, || {
+        for r in 0..rounds {
+            for k in 0..4u32 {
+                let t = sq.acquire();
+                sq.write(t, k, r as f32, false, false, |obs| obs.fill(k as f32));
+            }
+            sq.recv_into(&mut out);
+        }
+    });
+
+    // --- whole-pool round trip on the cheapest env (overhead floor) ---
+    let steps = if quick { 2_000 } else { 50_000 };
+    let mut pool = EnvPool::make(
+        PoolConfig::new("CartPole-v1").num_envs(6).batch_size(2).num_threads(2).seed(0),
+    )
+    .unwrap();
+    pool.async_reset();
+    let mut pout = pool.make_output();
+    b.run("queues/pool/send_recv_cartpole", steps as f64, || {
+        let mut done = 0usize;
+        while done < steps {
+            pool.recv_into(&mut pout);
+            let actions = vec![0.0f32; pout.len()];
+            pool.send(&actions, &pout.env_ids.clone()).unwrap();
+            done += pout.len();
+        }
+    });
+}

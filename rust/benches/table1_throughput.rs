@@ -1,0 +1,33 @@
+//! Bench: Table 1 — end-to-end simulation throughput per executor on
+//! Atari-like and MuJoCo-like tasks. `cargo bench --bench table1_throughput`
+//! (set ENVPOOL_BENCH_QUICK=1 for a fast pass).
+
+use envpool::bench_util::Bencher;
+use envpool::coordinator::throughput::run_throughput;
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+    let steps: u64 = if quick { 1_000 } else { 10_000 };
+    let threads = 2usize;
+    let n = 3 * threads;
+
+    println!("== Table 1: simulation throughput (frames/s incl. frameskip) ==");
+    for task in ["Pong-v5", "Ant-v4"] {
+        for (label, kind, ne, bs) in [
+            ("forloop", "forloop", n, n),
+            ("subprocess", "subprocess", threads, threads),
+            ("sample-factory", "sample-factory", n, n),
+            ("envpool-sync", "envpool-sync", n, n),
+            ("envpool-async", "envpool-async", n, threads),
+        ] {
+            // one bench sample = `steps` env steps; report fps separately
+            let mut fps = 0.0;
+            b.run(&format!("table1/{task}/{label}"), steps as f64, || {
+                fps = run_throughput(task, kind, ne, bs, threads, steps, 0).unwrap();
+            });
+            let mult = envpool::coordinator::throughput::frame_multiplier(task);
+            println!("  -> {task}/{label}: {fps:.0} frames/s ({:.0} env-steps/s)", fps / mult as f64);
+        }
+    }
+}

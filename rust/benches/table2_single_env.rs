@@ -1,0 +1,41 @@
+//! Bench: Table 2 — single-environment (N=1) overhead: the baseline
+//! executor vs EnvPool on Atari / MuJoCo / dm_control. The paper's point
+//! is that even one env gets a speedup from eliminating the Python layer;
+//! ours is that the pool adds negligible overhead over a bare for-loop
+//! while the subprocess transport (the Python stand-in) pays heavily.
+
+use envpool::bench_util::Bencher;
+use envpool::coordinator::throughput::{frame_multiplier, run_throughput};
+use envpool::metrics::table::{fmt_fps, Table};
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+    let steps: u64 = if quick { 1_000 } else { 20_000 };
+
+    println!("== Table 2: single-env (N=1) frames/s ==");
+    let mut t = Table::new(["Task", "For-loop", "Subprocess", "EnvPool", "EnvPool/Subproc"]);
+    for task in ["Pong-v5", "Ant-v4", "cheetah_run"] {
+        let mut fl = 0.0;
+        let mut sp = 0.0;
+        let mut ep = 0.0;
+        b.run(&format!("table2/{task}/forloop"), steps as f64, || {
+            fl = run_throughput(task, "forloop", 1, 1, 1, steps, 0).unwrap();
+        });
+        b.run(&format!("table2/{task}/subprocess"), steps as f64, || {
+            sp = run_throughput(task, "subprocess", 1, 1, 1, steps, 0).unwrap();
+        });
+        b.run(&format!("table2/{task}/envpool"), steps as f64, || {
+            ep = run_throughput(task, "envpool-sync", 1, 1, 1, steps, 0).unwrap();
+        });
+        let _ = frame_multiplier(task);
+        t.row([
+            task.to_string(),
+            fmt_fps(fl),
+            fmt_fps(sp),
+            fmt_fps(ep),
+            format!("{:.2}x", ep / sp),
+        ]);
+    }
+    println!("{}", t.render());
+}

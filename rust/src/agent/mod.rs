@@ -1,0 +1,11 @@
+//! Agent-side components living in Rust: the parameter store, rollout
+//! buffer, action samplers, and a reference GAE used to cross-check the
+//! AOT kernel.
+
+pub mod params;
+pub mod rollout;
+pub mod sampler;
+pub mod gae;
+
+pub use params::ParamStore;
+pub use rollout::RolloutBuffer;

@@ -1,0 +1,91 @@
+//! Parameter store: the ordered flat set of policy/optimizer tensors the
+//! AOT executables consume and produce. Host vectors are the source of
+//! truth; literals are materialized per call (cheap at policy-MLP sizes
+//! — see EXPERIMENTS.md §Perf for the measurement).
+
+use crate::runtime::artifact::{ArtifactConfig, Manifest, ParamMeta};
+use crate::runtime::literal::tensor_f32;
+use crate::Result;
+
+/// Ordered parameter tensors (+ shapes).
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub meta: Vec<ParamMeta>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    /// Load the initial parameters exported by aot.py.
+    pub fn load(manifest: &Manifest, cfg: &ArtifactConfig) -> Result<ParamStore> {
+        Ok(ParamStore { meta: cfg.params.clone(), values: manifest.load_params(cfg)? })
+    }
+
+    /// Zero tensors with the same shapes (Adam m/v init).
+    pub fn zeros_like(&self) -> ParamStore {
+        ParamStore {
+            meta: self.meta.clone(),
+            values: self.meta.iter().map(|m| vec![0.0; m.numel()]).collect(),
+        }
+    }
+
+    /// Materialize XLA literals in spec order.
+    pub fn literals(&self) -> Result<Vec<xla::Literal>> {
+        self.meta
+            .iter()
+            .zip(&self.values)
+            .map(|(m, v)| tensor_f32(v, &m.shape))
+            .collect()
+    }
+
+    /// Upload to device buffers in spec order (the hot-path transport —
+    /// see EXPERIMENTS.md §Perf on why buffers, not literals).
+    pub fn buffers(&self, rt: &crate::runtime::Runtime) -> Result<Vec<xla::PjRtBuffer>> {
+        self.meta
+            .iter()
+            .zip(&self.values)
+            .map(|(m, v)| rt.buf_f32(v, &m.shape))
+            .collect()
+    }
+
+    /// Replace values from executable outputs (same order).
+    pub fn update_from(&mut self, outs: &[xla::Literal]) -> Result<()> {
+        debug_assert_eq!(outs.len(), self.values.len());
+        for (v, l) in self.values.iter_mut().zip(outs) {
+            *v = crate::runtime::literal::to_vec_f32(l)?;
+        }
+        Ok(())
+    }
+
+    /// Total parameter count (reporting).
+    pub fn numel(&self) -> usize {
+        self.meta.iter().map(|m| m.numel()).sum()
+    }
+
+    /// L2 norm over all tensors (divergence tripwire in the trainer).
+    pub fn global_norm(&self) -> f32 {
+        self.values
+            .iter()
+            .flat_map(|v| v.iter())
+            .map(|x| x * x)
+            .sum::<f32>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_zeros_and_norm() {
+        let m = Manifest::load("artifacts").unwrap();
+        let cfg = m.for_task("CartPole-v1", 8).unwrap();
+        let p = ParamStore::load(&m, cfg).unwrap();
+        assert!(p.numel() > 4 * 64);
+        assert!(p.global_norm() > 0.0);
+        let z = p.zeros_like();
+        assert_eq!(z.numel(), p.numel());
+        assert_eq!(z.global_norm(), 0.0);
+        assert_eq!(p.literals().unwrap().len(), p.meta.len());
+    }
+}

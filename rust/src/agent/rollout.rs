@@ -1,0 +1,154 @@
+//! Time-major rollout storage for PPO: `[T, N, ...]` arrays matching the
+//! GAE executable's layout, plus minibatch gathering for the train step.
+
+use crate::rng::Pcg32;
+
+/// Fixed-size rollout buffer.
+#[derive(Debug, Clone)]
+pub struct RolloutBuffer {
+    pub t_len: usize,
+    pub n: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    /// `[T, N, obs_dim]`
+    pub obs: Vec<f32>,
+    /// `[T, N, act_dim]`
+    pub actions: Vec<f32>,
+    /// `[T, N]`
+    pub logp: Vec<f32>,
+    /// `[T, N]`
+    pub rewards: Vec<f32>,
+    /// `[T, N]` — 1.0 where the transition ended an episode (terminal)
+    pub dones: Vec<f32>,
+    /// `[T, N]` — 1.0 where it was truncated
+    pub truncs: Vec<f32>,
+    /// `[T, N]` — V(s_t) under the behaviour policy
+    pub values: Vec<f32>,
+}
+
+impl RolloutBuffer {
+    pub fn new(t_len: usize, n: usize, obs_dim: usize, act_dim: usize) -> Self {
+        RolloutBuffer {
+            t_len,
+            n,
+            obs_dim,
+            act_dim,
+            obs: vec![0.0; t_len * n * obs_dim],
+            actions: vec![0.0; t_len * n * act_dim],
+            logp: vec![0.0; t_len * n],
+            rewards: vec![0.0; t_len * n],
+            dones: vec![0.0; t_len * n],
+            truncs: vec![0.0; t_len * n],
+            values: vec![0.0; t_len * n],
+        }
+    }
+
+    /// Store one time slice (all N envs) at step `t`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn store(
+        &mut self,
+        t: usize,
+        obs: &[f32],
+        actions: &[f32],
+        logp: &[f32],
+        values: &[f32],
+        rewards: &[f32],
+        dones: &[u8],
+        truncs: &[u8],
+    ) {
+        debug_assert!(t < self.t_len);
+        let n = self.n;
+        self.obs[t * n * self.obs_dim..(t + 1) * n * self.obs_dim].copy_from_slice(obs);
+        self.actions[t * n * self.act_dim..(t + 1) * n * self.act_dim].copy_from_slice(actions);
+        self.logp[t * n..(t + 1) * n].copy_from_slice(logp);
+        self.values[t * n..(t + 1) * n].copy_from_slice(values);
+        self.rewards[t * n..(t + 1) * n].copy_from_slice(rewards);
+        for i in 0..n {
+            self.dones[t * n + i] = dones[i] as f32;
+            self.truncs[t * n + i] = truncs[i] as f32;
+        }
+    }
+
+    /// Total rows (T·N).
+    pub fn rows(&self) -> usize {
+        self.t_len * self.n
+    }
+
+    /// Gather a minibatch by flat row indices into the provided buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gather(
+        &self,
+        idx: &[usize],
+        adv: &[f32],
+        ret: &[f32],
+        mb_obs: &mut Vec<f32>,
+        mb_actions: &mut Vec<f32>,
+        mb_logp: &mut Vec<f32>,
+        mb_adv: &mut Vec<f32>,
+        mb_ret: &mut Vec<f32>,
+    ) {
+        mb_obs.clear();
+        mb_actions.clear();
+        mb_logp.clear();
+        mb_adv.clear();
+        mb_ret.clear();
+        for &i in idx {
+            mb_obs.extend_from_slice(&self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            mb_actions.extend_from_slice(&self.actions[i * self.act_dim..(i + 1) * self.act_dim]);
+            mb_logp.push(self.logp[i]);
+            mb_adv.push(adv[i]);
+            mb_ret.push(ret[i]);
+        }
+    }
+
+    /// A shuffled permutation of row indices (one per epoch).
+    pub fn shuffled_indices(&self, rng: &mut Pcg32) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.rows()).collect();
+        for i in (1..idx.len()).rev() {
+            let j = rng.below((i + 1) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_and_gather_roundtrip() {
+        let mut buf = RolloutBuffer::new(2, 3, 2, 1);
+        for t in 0..2 {
+            let obs: Vec<f32> = (0..6).map(|i| (t * 10 + i) as f32).collect();
+            let act = [0.0, 1.0, 2.0];
+            let logp = [-0.1, -0.2, -0.3];
+            let val = [1.0, 2.0, 3.0];
+            let rew = [0.5; 3];
+            buf.store(t, &obs, &act, &logp, &val, &rew, &[0, 1, 0], &[0, 0, 1]);
+        }
+        assert_eq!(buf.dones[1 * 3 + 1], 1.0);
+        assert_eq!(buf.truncs[3 + 2], 1.0);
+
+        let adv: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let ret: Vec<f32> = (0..6).map(|i| i as f32 * 2.0).collect();
+        let (mut o, mut a, mut l, mut ad, mut r) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        buf.gather(&[4, 1], &adv, &ret, &mut o, &mut a, &mut l, &mut ad, &mut r);
+        // row 4 = t1,env1: obs [12,13]
+        assert_eq!(o, vec![12.0, 13.0, 2.0, 3.0]);
+        assert_eq!(a, vec![1.0, 1.0]);
+        assert_eq!(ad, vec![4.0, 1.0]);
+        assert_eq!(r, vec![8.0, 2.0]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let buf = RolloutBuffer::new(4, 4, 1, 1);
+        let mut rng = Pcg32::new(3, 3);
+        let idx = buf.shuffled_indices(&mut rng);
+        let mut sorted = idx.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..16).collect::<Vec<_>>());
+    }
+}

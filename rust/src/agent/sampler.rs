@@ -1,0 +1,125 @@
+//! Action sampling on the Rust side: the policy executable returns
+//! distribution parameters; sampling + log-prob happen here so the AOT
+//! artifact stays RNG-free (deterministic, seedable from L3).
+
+use crate::rng::Pcg32;
+
+/// Sample categorical actions from row-major logits `[B, A]`.
+/// Returns (actions as f32 ids, log-probs).
+pub fn categorical(logits: &[f32], batch: usize, n_act: usize, rng: &mut Pcg32) -> (Vec<f32>, Vec<f32>) {
+    let mut actions = Vec::with_capacity(batch);
+    let mut logps = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let row = &logits[b * n_act..(b + 1) * n_act];
+        // Gumbel-max: argmax(logit + g) ~ Categorical(softmax(logits))
+        let mut best = 0;
+        let mut best_v = f32::NEG_INFINITY;
+        for (a, &l) in row.iter().enumerate() {
+            let u = rng.uniform().max(1e-10);
+            let g = -(-(u.ln())).ln();
+            if l + g > best_v {
+                best_v = l + g;
+                best = a;
+            }
+        }
+        actions.push(best as f32);
+        logps.push(log_prob_categorical(row, best));
+    }
+    (actions, logps)
+}
+
+/// log P(a) under softmax(logits).
+pub fn log_prob_categorical(logits_row: &[f32], action: usize) -> f32 {
+    let max = logits_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = max + logits_row.iter().map(|l| (l - max).exp()).sum::<f32>().ln();
+    logits_row[action] - lse
+}
+
+/// Greedy (argmax) actions for evaluation.
+pub fn greedy(logits: &[f32], batch: usize, n_act: usize) -> Vec<f32> {
+    (0..batch)
+        .map(|b| {
+            let row = &logits[b * n_act..(b + 1) * n_act];
+            row.iter()
+                .enumerate()
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                .unwrap()
+                .0 as f32
+        })
+        .collect()
+}
+
+/// Sample Gaussian actions from `mu`/`log_std` (both `[B, A]`).
+/// Returns (actions, log-probs).
+pub fn gaussian(
+    mu: &[f32],
+    log_std: &[f32],
+    batch: usize,
+    act_dim: usize,
+    rng: &mut Pcg32,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut actions = vec![0.0f32; batch * act_dim];
+    let mut logps = vec![0.0f32; batch];
+    for b in 0..batch {
+        let mut lp = 0.0f32;
+        for k in 0..act_dim {
+            let i = b * act_dim + k;
+            let std = log_std[i].exp();
+            let eps = rng.normal();
+            let a = mu[i] + std * eps;
+            actions[i] = a;
+            lp += gaussian_logp_1d(a, mu[i], log_std[i]);
+        }
+        logps[b] = lp;
+    }
+    (actions, logps)
+}
+
+/// One-dimensional Gaussian log-density.
+#[inline]
+pub fn gaussian_logp_1d(a: f32, mu: f32, log_std: f32) -> f32 {
+    let std = log_std.exp();
+    let z = (a - mu) / std;
+    -0.5 * z * z - log_std - 0.5 * (2.0 * std::f32::consts::PI).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categorical_respects_probabilities() {
+        let mut rng = Pcg32::new(0, 0);
+        // logits [0, ln(3)]: p = [0.25, 0.75]
+        let logits: Vec<f32> = (0..1000).flat_map(|_| [0.0f32, 3.0f32.ln()]).collect();
+        let (acts, logps) = categorical(&logits, 1000, 2, &mut rng);
+        let ones = acts.iter().filter(|&&a| a == 1.0).count();
+        assert!((650..850).contains(&ones), "P(1)=0.75, got {ones}/1000");
+        for (a, lp) in acts.iter().zip(&logps) {
+            let want = if *a == 1.0 { 0.75f32.ln() } else { 0.25f32.ln() };
+            assert!((lp - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let logits = [0.1, 0.9, -1.0, 5.0, 2.0, 3.0];
+        assert_eq!(greedy(&logits, 2, 3), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn gaussian_moments_and_logp() {
+        let mut rng = Pcg32::new(7, 0);
+        let b = 4000;
+        let mu = vec![1.0f32; b];
+        let log_std = vec![0.0f32; b]; // std = 1
+        let (acts, logps) = gaussian(&mu, &log_std, b, 1, &mut rng);
+        let mean: f32 = acts.iter().sum::<f32>() / b as f32;
+        let var: f32 = acts.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / b as f32;
+        assert!((mean - 1.0).abs() < 0.06, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+        // at the mean the density is highest: -0.5 ln(2π)
+        let lp_at_mu = gaussian_logp_1d(1.0, 1.0, 0.0);
+        assert!(logps.iter().all(|&lp| lp <= lp_at_mu + 1e-6));
+    }
+}

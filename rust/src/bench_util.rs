@@ -1,0 +1,98 @@
+//! Tiny benchmarking harness (the vendored crate set has no `criterion`).
+//!
+//! `cargo bench` targets use [`Bencher`] to run warmup + timed iterations
+//! and print mean / std / throughput lines in a stable, grep-able format
+//! that the EXPERIMENTS.md tables are built from.
+
+use crate::metrics::stats::Streaming;
+use std::time::Instant;
+
+/// One benchmark runner with warmup and repeated timed samples.
+pub struct Bencher {
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Warmup iterations before sampling.
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { samples: 10, warmup: 2 }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    /// Work units (frames, ops...) per invocation — used for throughput.
+    pub units: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        if self.mean_secs == 0.0 { 0.0 } else { self.units / self.mean_secs }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<42} mean {:>10.6}s  std {:>9.6}s  throughput {:>14.1}/s",
+            self.name,
+            self.mean_secs,
+            self.std_secs,
+            self.throughput()
+        )
+    }
+}
+
+impl Bencher {
+    /// Quick-mode bencher for CI (`ENVPOOL_BENCH_QUICK=1` shrinks samples).
+    pub fn from_env() -> Bencher {
+        if std::env::var("ENVPOOL_BENCH_QUICK").is_ok() {
+            Bencher { samples: 3, warmup: 1 }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Run `f` (which performs `units` units of work per call) and report.
+    pub fn run<F: FnMut()>(&self, name: &str, units: f64, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut s = Streaming::new();
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            f();
+            s.push(t.elapsed().as_secs_f64());
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            mean_secs: s.mean(),
+            std_secs: s.std(),
+            units,
+        };
+        println!("{}", r.report());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher { samples: 3, warmup: 1 };
+        let mut count = 0u64;
+        let r = b.run("noop", 100.0, || {
+            count += 1;
+            std::hint::black_box(());
+        });
+        assert_eq!(count, 4); // warmup + samples
+        assert!(r.throughput() > 0.0);
+        assert!(r.report().contains("noop"));
+    }
+}

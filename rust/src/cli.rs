@@ -1,0 +1,135 @@
+//! Minimal command-line argument parser (the vendored crate set has no
+//! `clap`). Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments; typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own argv, skipping program name (and an optional
+    /// expected subcommand which is returned separately by the caller).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Is the boolean flag present? `--flag` or `--flag=true`.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map_or(false, |v| v == "true" || v == "1")
+    }
+
+    /// String option with default.
+    pub fn get<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.options.get(name).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Optional string option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default; panics with a clear message on bad parse.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => default,
+            Some(v) => match v.parse() {
+                Ok(x) => x,
+                Err(e) => panic!("--{name}={v}: {e}"),
+            },
+        }
+    }
+
+    /// Comma-separated list of a parseable type.
+    pub fn list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().unwrap_or_else(|e| panic!("--{name} item {s}: {e}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("bench --env Pong-v5 --num-envs 8 run");
+        assert_eq!(a.positional, vec!["bench", "run"]);
+        assert_eq!(a.get("env", ""), "Pong-v5");
+        assert_eq!(a.parse_or::<usize>("num-envs", 0), 8);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("--mode=async --verbose --steps=100");
+        assert_eq!(a.get("mode", ""), "async");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.parse_or::<u64>("steps", 0), 100);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get("missing", "d"), "d");
+        assert_eq!(a.parse_or::<f32>("missing", 1.5), 1.5);
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("--n 1,2,8");
+        assert_eq!(a.list::<usize>("n", &[]), vec![1, 2, 8]);
+        assert_eq!(a.list::<usize>("m", &[4]), vec![4]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b", ""), "v");
+    }
+}

@@ -1,0 +1,84 @@
+//! Configuration system: typed structs populated from `key = value` files
+//! (a minimal TOML-flat subset) and `--key value` CLI overrides, in that
+//! precedence order (CLI wins). No serde in the vendored set, so parsing
+//! is explicit and validated.
+
+mod train;
+pub use train::{ExecutorKind, TrainConfig};
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Flat key→value store loaded from a config file.
+#[derive(Debug, Default, Clone)]
+pub struct KvFile {
+    pub values: BTreeMap<String, String>,
+}
+
+impl KvFile {
+    /// Parse `key = value` lines; `#` starts a comment; blank lines ignored.
+    pub fn parse(text: &str) -> Result<KvFile> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected `key = value`, got {raw:?}", lineno + 1))
+            })?;
+            values.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        Ok(KvFile { values })
+    }
+
+    /// Load from a path.
+    pub fn load(path: &str) -> Result<KvFile> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Typed getter with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad value for {key}: {v:?}"))),
+        }
+    }
+
+    /// String getter with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let f = KvFile::parse("a = 1\n# comment\nname = \"pong\"\n\nlr = 2.5e-4 # inline").unwrap();
+        assert_eq!(f.parse_or("a", 0usize).unwrap(), 1);
+        assert_eq!(f.get("name", ""), "pong");
+        assert!((f.parse_or("lr", 0.0f64).unwrap() - 2.5e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(KvFile::parse("just words").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let f = KvFile::parse("").unwrap();
+        assert_eq!(f.parse_or("missing", 7u32).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let f = KvFile::parse("x = notanumber").unwrap();
+        assert!(f.parse_or("x", 0usize).is_err());
+    }
+}

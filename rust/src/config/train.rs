@@ -1,0 +1,233 @@
+//! PPO training configuration, mirroring the paper's Appendix F tables
+//! (Table 3: CleanRL Atari PPO; Table 5: CleanRL MuJoCo PPO with N=64).
+
+use super::KvFile;
+use crate::cli::Args;
+use crate::{Error, Result};
+
+/// Which executor drives the vectorized environments (paper Fig. 4 axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Single-thread sequential stepping (paper "For-loop").
+    ForLoop,
+    /// One OS process per env, per-step barrier (paper "Subprocess").
+    Subprocess,
+    /// EnvPool in synchronous mode (`batch_size == num_envs`).
+    EnvPoolSync,
+    /// EnvPool in asynchronous mode (`batch_size < num_envs`).
+    EnvPoolAsync,
+    /// Sample-Factory-style double-buffered async workers.
+    SampleFactory,
+}
+
+impl std::str::FromStr for ExecutorKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "forloop" | "for-loop" => ExecutorKind::ForLoop,
+            "subprocess" => ExecutorKind::Subprocess,
+            "envpool" | "envpool-sync" | "sync" => ExecutorKind::EnvPoolSync,
+            "envpool-async" | "async" => ExecutorKind::EnvPoolAsync,
+            "sample-factory" | "sf" => ExecutorKind::SampleFactory,
+            other => return Err(Error::Config(format!("unknown executor {other:?}"))),
+        })
+    }
+}
+
+impl std::fmt::Display for ExecutorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ExecutorKind::ForLoop => "forloop",
+            ExecutorKind::Subprocess => "subprocess",
+            ExecutorKind::EnvPoolSync => "envpool-sync",
+            ExecutorKind::EnvPoolAsync => "envpool-async",
+            ExecutorKind::SampleFactory => "sample-factory",
+        };
+        f.write_str(s)
+    }
+}
+
+/// PPO hyperparameters + system knobs. Defaults follow the original PPO
+/// paper / CleanRL (paper Appendix F Table 3).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Environment task id, e.g. "CartPole-v1", "Pong-v5", "Ant-v4".
+    pub env_id: String,
+    /// Executor paradigm under test.
+    pub executor: ExecutorKind,
+    /// Number of parallel environments N.
+    pub num_envs: usize,
+    /// EnvPool batch size M (async mode); defaults to N (sync).
+    pub batch_size: usize,
+    /// Worker threads for EnvPool / Sample-Factory.
+    pub num_threads: usize,
+    /// Total environment steps to train for.
+    pub total_steps: u64,
+    /// Rollout length per environment per iteration.
+    pub num_steps: usize,
+    /// Discount factor gamma.
+    pub gamma: f32,
+    /// GAE lambda.
+    pub gae_lambda: f32,
+    /// Number of minibatches per epoch.
+    pub num_minibatches: usize,
+    /// PPO update epochs per rollout.
+    pub update_epochs: usize,
+    /// Learning rate (annealed linearly to 0 when `anneal_lr`).
+    pub learning_rate: f32,
+    /// Whether to anneal the lr to zero over training.
+    pub anneal_lr: bool,
+    /// PPO clip coefficient epsilon.
+    pub clip_coef: f32,
+    /// Value loss coefficient c1.
+    pub vf_coef: f32,
+    /// Entropy coefficient c2.
+    pub ent_coef: f32,
+    /// Global grad-norm threshold omega.
+    pub max_grad_norm: f32,
+    /// RNG seed.
+    pub seed: u64,
+    /// Normalize observations with a running estimate (MuJoCo-style).
+    pub normalize_obs: bool,
+    /// Directory containing AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            env_id: "CartPole-v1".into(),
+            executor: ExecutorKind::EnvPoolSync,
+            num_envs: 8,
+            batch_size: 8,
+            num_threads: 4,
+            total_steps: 100_000,
+            num_steps: 128,
+            gamma: 0.99,
+            gae_lambda: 0.95,
+            num_minibatches: 4,
+            update_epochs: 4,
+            learning_rate: 2.5e-4,
+            anneal_lr: true,
+            clip_coef: 0.1,
+            vf_coef: 0.5,
+            ent_coef: 0.01,
+            max_grad_norm: 0.5,
+            seed: 1,
+            normalize_obs: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply `key = value` file values.
+    pub fn apply_file(&mut self, f: &KvFile) -> Result<()> {
+        self.env_id = f.get("env_id", &self.env_id);
+        if let Some(e) = f.values.get("executor") {
+            self.executor = e.parse()?;
+        }
+        self.num_envs = f.parse_or("num_envs", self.num_envs)?;
+        self.batch_size = f.parse_or("batch_size", self.num_envs)?;
+        self.num_threads = f.parse_or("num_threads", self.num_threads)?;
+        self.total_steps = f.parse_or("total_steps", self.total_steps)?;
+        self.num_steps = f.parse_or("num_steps", self.num_steps)?;
+        self.gamma = f.parse_or("gamma", self.gamma)?;
+        self.gae_lambda = f.parse_or("gae_lambda", self.gae_lambda)?;
+        self.num_minibatches = f.parse_or("num_minibatches", self.num_minibatches)?;
+        self.update_epochs = f.parse_or("update_epochs", self.update_epochs)?;
+        self.learning_rate = f.parse_or("learning_rate", self.learning_rate)?;
+        self.anneal_lr = f.parse_or("anneal_lr", self.anneal_lr)?;
+        self.clip_coef = f.parse_or("clip_coef", self.clip_coef)?;
+        self.vf_coef = f.parse_or("vf_coef", self.vf_coef)?;
+        self.ent_coef = f.parse_or("ent_coef", self.ent_coef)?;
+        self.max_grad_norm = f.parse_or("max_grad_norm", self.max_grad_norm)?;
+        self.seed = f.parse_or("seed", self.seed)?;
+        self.normalize_obs = f.parse_or("normalize_obs", self.normalize_obs)?;
+        self.artifacts_dir = f.get("artifacts_dir", &self.artifacts_dir);
+        Ok(())
+    }
+
+    /// Apply CLI overrides (these win over file values).
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(e) = a.opt("env") {
+            self.env_id = e.to_string();
+        }
+        if let Some(e) = a.opt("executor") {
+            self.executor = e.parse()?;
+        }
+        self.num_envs = a.parse_or("num-envs", self.num_envs);
+        self.batch_size = a.parse_or("batch-size", self.num_envs);
+        self.num_threads = a.parse_or("num-threads", self.num_threads);
+        self.total_steps = a.parse_or("total-steps", self.total_steps);
+        self.num_steps = a.parse_or("num-steps", self.num_steps);
+        self.learning_rate = a.parse_or("lr", self.learning_rate);
+        self.update_epochs = a.parse_or("update-epochs", self.update_epochs);
+        self.num_minibatches = a.parse_or("minibatches", self.num_minibatches);
+        self.seed = a.parse_or("seed", self.seed);
+        if let Some(d) = a.opt("artifacts") {
+            self.artifacts_dir = d.to_string();
+        }
+        self.validate()
+    }
+
+    /// Check invariants the pool/trainer rely on.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_envs == 0 {
+            return Err(Error::Config("num_envs must be > 0".into()));
+        }
+        if self.batch_size == 0 || self.batch_size > self.num_envs {
+            return Err(Error::Config(format!(
+                "batch_size must be in [1, num_envs]; got {} vs {}",
+                self.batch_size, self.num_envs
+            )));
+        }
+        let rollout = self.num_envs * self.num_steps;
+        if rollout % self.num_minibatches != 0 {
+            return Err(Error::Config(format!(
+                "rollout size {rollout} not divisible by num_minibatches {}",
+                self.num_minibatches
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn file_then_cli_precedence() {
+        let mut c = TrainConfig::default();
+        let f = KvFile::parse("num_envs = 16\nlearning_rate = 1e-3").unwrap();
+        c.apply_file(&f).unwrap();
+        assert_eq!(c.num_envs, 16);
+        let a = Args::parse(["--num-envs".into(), "32".into()]);
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.num_envs, 32);
+        assert!((c.learning_rate - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_size_bounds_enforced() {
+        let mut c = TrainConfig::default();
+        c.num_envs = 4;
+        c.batch_size = 8;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn executor_parse_roundtrip() {
+        for s in ["forloop", "subprocess", "envpool-sync", "envpool-async", "sample-factory"] {
+            let k: ExecutorKind = s.parse().unwrap();
+            assert_eq!(k.to_string(), s);
+        }
+        assert!("bogus".parse::<ExecutorKind>().is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Training/benchmark coordination: the PPO loop over the AOT policy
+//! ([`ppo`]), the Figure-4 profiler categories, greedy evaluation, and
+//! the pure-simulation throughput driver behind Table 1 / Figure 3.
+
+pub mod throughput;
+pub mod ppo;
+pub mod eval;

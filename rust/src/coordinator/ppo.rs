@@ -1,0 +1,330 @@
+//! The PPO training coordinator: EnvPool (or a baseline executor) on the
+//! environment side, AOT-compiled JAX/Pallas executables on the compute
+//! side, everything orchestrated from Rust.
+//!
+//! Semantics follow CleanRL's PPO (the paper's reference integration):
+//! vectorized sync rollouts of `num_steps`, GAE with done|truncated
+//! merged (CleanRL treats both as episode ends), minibatch shuffling per
+//! epoch, linear lr annealing, and EnvPool-style auto-reset where the
+//! action after a terminal transition produces the reset observation as
+//! a zero-reward step — exactly what real EnvPool integrations see.
+
+use crate::agent::params::ParamStore;
+use crate::agent::rollout::RolloutBuffer;
+use crate::agent::sampler;
+use crate::config::{ExecutorKind, TrainConfig};
+use crate::executors::{ForLoopExecutor, PoolVectorEnv, SubprocessExecutor, VectorEnv};
+use crate::metrics::timer::{Category, TimeBreakdown};
+use crate::pool::{EnvPool, PoolConfig};
+use crate::rng::Pcg32;
+use crate::runtime::trainer_exec::Minibatch;
+use crate::runtime::{GaeExec, Manifest, Policy, Runtime, TrainExec};
+use crate::{Error, Result};
+use std::time::Instant;
+
+/// One point of a learning curve.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    /// Cumulative environment steps.
+    pub env_steps: u64,
+    /// Wall-clock seconds since training start.
+    pub wall_secs: f64,
+    /// Mean episodic return over the trailing window.
+    pub mean_return: f32,
+}
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainSummary {
+    pub env_id: String,
+    pub executor: ExecutorKind,
+    pub num_envs: usize,
+    pub env_steps: u64,
+    pub iterations: usize,
+    pub wall_secs: f64,
+    pub episodes: usize,
+    pub final_return: f32,
+    pub best_return: f32,
+    pub param_count: usize,
+    pub curve: Vec<CurvePoint>,
+}
+
+impl TrainSummary {
+    /// Human-readable block for the CLI / EXPERIMENTS.md.
+    pub fn render(&self) -> String {
+        format!(
+            "== train {} / {} ==\n\
+             envs              {}\n\
+             env steps         {}\n\
+             iterations        {}\n\
+             wall time         {:.1}s  ({:.0} env-steps/s)\n\
+             episodes          {}\n\
+             final return      {:.1} (best window {:.1})\n\
+             policy params     {}",
+            self.env_id,
+            self.executor,
+            self.num_envs,
+            self.env_steps,
+            self.iterations,
+            self.wall_secs,
+            self.env_steps as f64 / self.wall_secs.max(1e-9),
+            self.episodes,
+            self.final_return,
+            self.best_return,
+            self.param_count,
+        )
+    }
+
+    /// Write the learning curve as CSV (`env_steps,wall_secs,mean_return`).
+    pub fn write_curve_csv(&self, path: &str) -> Result<()> {
+        let mut s = String::from("env_steps,wall_secs,mean_return\n");
+        for p in &self.curve {
+            s.push_str(&format!("{},{:.3},{:.3}\n", p.env_steps, p.wall_secs, p.mean_return));
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
+    Ok(match cfg.executor {
+        ExecutorKind::ForLoop => {
+            Box::new(ForLoopExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
+        }
+        ExecutorKind::Subprocess => {
+            Box::new(SubprocessExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
+        }
+        ExecutorKind::EnvPoolSync => {
+            let pool = EnvPool::make(
+                PoolConfig::new(&cfg.env_id)
+                    .num_envs(cfg.num_envs)
+                    .sync()
+                    .num_threads(cfg.num_threads)
+                    .seed(cfg.seed),
+            )?;
+            Box::new(PoolVectorEnv::new(pool)?)
+        }
+        ExecutorKind::EnvPoolAsync | ExecutorKind::SampleFactory => {
+            return Err(Error::Config(format!(
+                "the PPO trainer drives the synchronous vectorized contract; \
+                 executor {} is benchmark-only (see `envpool bench`)",
+                cfg.executor
+            )));
+        }
+    })
+}
+
+/// Train per `cfg`; returns the summary.
+pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
+    let (s, _) = train_profiled(cfg)?;
+    Ok(s)
+}
+
+/// Train per `cfg`, also returning the Figure-4 time breakdown.
+pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let art = manifest.for_task(&cfg.env_id, cfg.num_envs)?;
+    let t_len = art.num_steps;
+    let n = art.num_envs;
+    let rt = Runtime::cpu()?;
+    let policy = Policy::load(&rt, art)?;
+    let trainer = TrainExec::load(&rt, art)?;
+    let gae = GaeExec::load(&rt, art)?;
+    let mut params = ParamStore::load(&manifest, art)?;
+    let mut adam_m = params.zeros_like();
+    let mut adam_v = params.zeros_like();
+    let mut adam_t = 0.0f32;
+
+    let mut ex = build_executor(cfg)?;
+    let mut prof = TimeBreakdown::new();
+    let mut rng = Pcg32::new(cfg.seed ^ 0x70706f, 999);
+
+    let steps_per_iter = (t_len * n) as u64;
+    let iterations = (cfg.total_steps / steps_per_iter).max(1) as usize;
+    let minibatch = art.minibatch_size;
+    let n_minibatches = art.num_minibatches;
+    let epochs = cfg.update_epochs;
+
+    let act_cols = if art.continuous { art.act_dim } else { 1 };
+    let mut buf = RolloutBuffer::new(t_len, n, art.obs_dim, act_cols);
+    let mut out = ex.make_output();
+    ex.reset(&mut out)?;
+    let mut obs = out.obs.clone();
+
+    // episodic return tracking
+    let mut ep_ret = vec![0.0f32; n];
+    let mut completed: Vec<f32> = Vec::new();
+    let window = 20usize;
+
+    // minibatch gather scratch
+    let (mut mb_obs, mut mb_act, mut mb_logp, mut mb_adv, mut mb_ret) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+
+    let start = Instant::now();
+    let mut curve = Vec::new();
+    let mut best = f32::NEG_INFINITY;
+
+    for iter in 0..iterations {
+        // ---- rollout ----
+        for t in 0..t_len {
+            let pol = prof.time(Category::Inference, || policy.forward(&rt, &params, &obs))?;
+            let (actions, logp) = if art.continuous {
+                sampler::gaussian(&pol.dist, &pol.log_std, n, art.act_dim, &mut rng)
+            } else {
+                sampler::categorical(&pol.dist, n, art.act_dim, &mut rng)
+            };
+            prof.time(Category::EnvStep, || ex.step(&actions, &mut out))?;
+            prof.time(Category::Other, || {
+                buf.store(t, &obs, &actions, &logp, &pol.value, &out.rew, &out.done, &out.trunc);
+                for i in 0..n {
+                    ep_ret[i] += out.rew[i];
+                    if out.finished(i) {
+                        completed.push(ep_ret[i]);
+                        ep_ret[i] = 0.0;
+                    }
+                }
+                obs.copy_from_slice(&out.obs);
+            });
+        }
+
+        // ---- advantages (AOT GAE kernel) ----
+        let last_pol = prof.time(Category::Inference, || policy.forward(&rt, &params, &obs))?;
+        // CleanRL merges truncation into done for GAE purposes.
+        let merged: Vec<f32> = buf
+            .dones
+            .iter()
+            .zip(&buf.truncs)
+            .map(|(&d, &tr)| if d != 0.0 || tr != 0.0 { 1.0 } else { 0.0 })
+            .collect();
+        let zeros = vec![0.0f32; t_len * n];
+        let (adv, ret) = prof.time(Category::Training, || {
+            gae.compute(&rt, &buf.rewards, &buf.values, &last_pol.value, &merged, &zeros)
+        })?;
+
+        // ---- updates ----
+        let lr = if cfg.anneal_lr {
+            cfg.learning_rate * (1.0 - iter as f32 / iterations as f32)
+        } else {
+            cfg.learning_rate
+        };
+        for _epoch in 0..epochs {
+            let idx = buf.shuffled_indices(&mut rng);
+            for k in 0..n_minibatches {
+                let sl = &idx[k * minibatch..(k + 1) * minibatch];
+                prof.time(Category::Other, || {
+                    buf.gather(sl, &adv, &ret, &mut mb_obs, &mut mb_act, &mut mb_logp,
+                               &mut mb_adv, &mut mb_ret);
+                });
+                let mb = Minibatch {
+                    obs: &mb_obs,
+                    actions: &mb_act,
+                    logp: &mb_logp,
+                    adv: &mb_adv,
+                    ret: &mb_ret,
+                };
+                let stats = prof.time(Category::Training, || {
+                    trainer.step(&rt, &mut params, &mut adam_m, &mut adam_v, &mut adam_t, &mb, lr)
+                })?;
+                if !stats.loss.is_finite() {
+                    return Err(Error::Config(format!(
+                        "loss diverged at iteration {iter} (loss={})",
+                        stats.loss
+                    )));
+                }
+            }
+        }
+        prof.bump_iteration();
+
+        // ---- bookkeeping ----
+        let tail: Vec<f32> = completed.iter().rev().take(window).cloned().collect();
+        let mean_ret = if tail.is_empty() {
+            f32::NAN
+        } else {
+            tail.iter().sum::<f32>() / tail.len() as f32
+        };
+        if mean_ret.is_finite() {
+            best = best.max(mean_ret);
+        }
+        curve.push(CurvePoint {
+            env_steps: steps_per_iter * (iter as u64 + 1),
+            wall_secs: start.elapsed().as_secs_f64(),
+            mean_return: mean_ret,
+        });
+    }
+
+    let wall = start.elapsed().as_secs_f64();
+    let final_ret = curve.last().map(|p| p.mean_return).unwrap_or(f32::NAN);
+    let summary = TrainSummary {
+        env_id: cfg.env_id.clone(),
+        executor: cfg.executor,
+        num_envs: n,
+        env_steps: steps_per_iter * iterations as u64,
+        iterations,
+        wall_secs: wall,
+        episodes: completed.len(),
+        final_return: final_ret,
+        best_return: best,
+        param_count: params.numel(),
+        curve,
+    };
+    Ok((summary, prof))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_cfg(env: &str, n: usize, steps: u64) -> TrainConfig {
+        TrainConfig {
+            env_id: env.into(),
+            executor: ExecutorKind::EnvPoolSync,
+            num_envs: n,
+            batch_size: n,
+            num_threads: 2,
+            total_steps: steps,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn smoke_train_cartpole_two_iterations() {
+        let cfg = smoke_cfg("CartPole-v1", 8, 2 * 8 * 128);
+        let (s, prof) = train_profiled(&cfg).unwrap();
+        assert_eq!(s.iterations, 2);
+        assert_eq!(s.env_steps, 2048);
+        assert!(s.episodes > 0, "random-ish cartpole episodes must finish");
+        assert!(s.final_return.is_finite());
+        assert!(prof.total(Category::EnvStep).as_nanos() > 0);
+        assert!(prof.total(Category::Training).as_nanos() > 0);
+        assert!(prof.total(Category::Inference).as_nanos() > 0);
+    }
+
+    #[test]
+    fn smoke_train_continuous_pendulum() {
+        let cfg = smoke_cfg("Pendulum-v1", 4, 4 * 64);
+        let s = train(&cfg).unwrap();
+        assert_eq!(s.iterations, 1);
+        assert!(s.env_steps == 256);
+    }
+
+    #[test]
+    fn async_executor_rejected_for_training() {
+        let mut cfg = smoke_cfg("CartPole-v1", 8, 1024);
+        cfg.executor = ExecutorKind::EnvPoolAsync;
+        assert!(train(&cfg).is_err());
+    }
+
+    #[test]
+    fn forloop_matches_envpool_learning_signal() {
+        // Same seed => identical rollouts => identical curve between
+        // executors (the "pure speedup without cost" property end to end).
+        let mut a = smoke_cfg("CartPole-v1", 8, 1024);
+        a.executor = ExecutorKind::ForLoop;
+        let mut b = smoke_cfg("CartPole-v1", 8, 1024);
+        b.executor = ExecutorKind::EnvPoolSync;
+        let sa = train(&a).unwrap();
+        let sb = train(&b).unwrap();
+        assert_eq!(sa.episodes, sb.episodes);
+        assert_eq!(sa.final_return, sb.final_return);
+    }
+}

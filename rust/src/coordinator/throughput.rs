@@ -1,0 +1,164 @@
+//! Pure environment-simulation throughput (paper §4.1): drive an
+//! executor with random actions and count frames per second. One call =
+//! one cell of Table 1 / one point of Figure 3.
+
+use crate::config::ExecutorKind;
+use crate::envs::registry;
+use crate::envs::spec::ActionSpace;
+use crate::executors::{ForLoopExecutor, SampleFactoryExecutor, SubprocessExecutor, VectorEnv};
+use crate::pool::{EnvPool, PoolConfig};
+use crate::rng::Pcg32;
+use crate::Result;
+use std::time::Instant;
+
+/// Fill `actions` with uniformly random valid actions.
+pub fn random_actions(space: &ActionSpace, n: usize, rng: &mut Pcg32, actions: &mut Vec<f32>) {
+    actions.clear();
+    match *space {
+        ActionSpace::Discrete(k) => {
+            for _ in 0..n {
+                actions.push(rng.below(k as u32) as f32);
+            }
+        }
+        ActionSpace::Continuous { dim, low, high } => {
+            for _ in 0..n * dim {
+                actions.push(rng.range(low, high));
+            }
+        }
+    }
+}
+
+/// Frameskip multiplier used when reporting paper-comparable "frames":
+/// the paper counts Atari FPS with frameskip 4 and MuJoCo with 5 substeps.
+pub fn frame_multiplier(task: &str) -> u64 {
+    if task.contains("Pong") || task.contains("Breakout") {
+        crate::envs::atari::FRAMESKIP as u64
+    } else if task.ends_with("-v4") || task == "cheetah_run" {
+        crate::envs::mujoco::FRAME_SKIP as u64
+    } else {
+        1
+    }
+}
+
+/// Run `steps` env steps under the named executor, returning frames/s
+/// (env steps × frameskip per second, the paper's metric).
+pub fn run_throughput(
+    task: &str,
+    executor: &str,
+    num_envs: usize,
+    batch_size: usize,
+    threads: usize,
+    steps: u64,
+    seed: u64,
+) -> Result<f64> {
+    let kind: ExecutorKind = executor.parse()?;
+    let spec = registry::spec_for(task)?;
+    let mut rng = Pcg32::new(seed ^ 0xBE7C4, 0);
+    let mut actions = Vec::new();
+    let mult = frame_multiplier(task) as f64;
+
+    let fps = match kind {
+        ExecutorKind::ForLoop => {
+            let mut ex = ForLoopExecutor::new(task, num_envs, seed)?;
+            time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
+        }
+        ExecutorKind::Subprocess => {
+            let mut ex = SubprocessExecutor::new(task, num_envs, seed)?;
+            time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
+        }
+        ExecutorKind::EnvPoolSync => {
+            let pool = EnvPool::make(
+                PoolConfig::new(task).num_envs(num_envs).sync().num_threads(threads).seed(seed),
+            )?;
+            let mut ex = crate::executors::PoolVectorEnv::new(pool)?;
+            time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
+        }
+        ExecutorKind::EnvPoolAsync => {
+            let mut pool = EnvPool::make(
+                PoolConfig::new(task)
+                    .num_envs(num_envs)
+                    .batch_size(batch_size)
+                    .num_threads(threads)
+                    .seed(seed),
+            )?;
+            pool.async_reset();
+            let mut out = pool.make_output();
+            let mut done_steps = 0u64;
+            let t0 = Instant::now();
+            while done_steps < steps {
+                pool.recv_into(&mut out);
+                random_actions(&spec.action_space, out.len(), &mut rng, &mut actions);
+                pool.send(&actions, &out.env_ids.clone())?;
+                done_steps += out.len() as u64;
+            }
+            done_steps as f64 / t0.elapsed().as_secs_f64()
+        }
+        ExecutorKind::SampleFactory => {
+            let mut ex = SampleFactoryExecutor::new(task, num_envs, threads.max(1), seed)?;
+            let mut out = ex.make_output();
+            let mut done_steps = 0u64;
+            let t0 = Instant::now();
+            while done_steps < steps {
+                let w = ex.recv_into(&mut out);
+                random_actions(&spec.action_space, out.len(), &mut rng, &mut actions);
+                ex.send(w, &actions);
+                done_steps += out.len() as u64;
+            }
+            done_steps as f64 / t0.elapsed().as_secs_f64()
+        }
+    };
+    Ok(fps * mult)
+}
+
+fn time_sync_executor(
+    ex: &mut dyn VectorEnv,
+    steps: u64,
+    rng: &mut Pcg32,
+    actions: &mut Vec<f32>,
+) -> Result<f64> {
+    let mut out = ex.make_output();
+    ex.reset(&mut out)?;
+    let space = ex.spec().action_space.clone();
+    let n = ex.num_envs();
+    let mut done_steps = 0u64;
+    let t0 = Instant::now();
+    while done_steps < steps {
+        random_actions(&space, n, rng, actions);
+        ex.step(actions, &mut out)?;
+        done_steps += n as u64;
+    }
+    Ok(done_steps as f64 / t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_actions_respect_spaces() {
+        let mut rng = Pcg32::new(0, 0);
+        let mut a = Vec::new();
+        random_actions(&ActionSpace::Discrete(4), 100, &mut rng, &mut a);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|&x| (0.0..4.0).contains(&x) && x.fract() == 0.0));
+        random_actions(&ActionSpace::Continuous { dim: 3, low: -1.0, high: 1.0 }, 10, &mut rng, &mut a);
+        assert_eq!(a.len(), 30);
+        assert!(a.iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn frame_multipliers() {
+        assert_eq!(frame_multiplier("Pong-v5"), 4);
+        assert_eq!(frame_multiplier("Ant-v4"), 5);
+        assert_eq!(frame_multiplier("cheetah_run"), 5);
+        assert_eq!(frame_multiplier("CartPole-v1"), 1);
+    }
+
+    #[test]
+    fn throughput_runs_for_each_in_process_executor() {
+        for ex in ["forloop", "envpool-sync", "envpool-async", "sample-factory"] {
+            let fps = run_throughput("CartPole-v1", ex, 4, 2, 2, 400, 0).unwrap();
+            assert!(fps > 0.0, "{ex}: {fps}");
+        }
+    }
+}

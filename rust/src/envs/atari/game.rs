@@ -1,0 +1,57 @@
+//! The `Game` trait: raw arcade game logic at native frame rate,
+//! decoupled from preprocessing (which lives in [`super::preproc`]).
+
+use crate::rng::Pcg32;
+
+/// One arcade game (Pong, Breakout, ...). Coordinates are in native
+/// pixels (`[0, NATIVE)`), one `tick` is one native frame (60 Hz-ish).
+pub trait Game: Send {
+    /// Number of discrete (minimal) actions.
+    fn n_actions(&self) -> usize;
+
+    /// Task id suffix, e.g. `"Pong"`.
+    fn name(&self) -> &'static str;
+
+    /// Start a new game (full reset: score/lives cleared).
+    fn reset(&mut self, rng: &mut Pcg32);
+
+    /// Advance one native frame under `action`; returns (reward, game_over).
+    fn tick(&mut self, action: usize, rng: &mut Pcg32) -> (f32, bool);
+
+    /// Rasterize the current screen into `frame` (NATIVE×NATIVE grayscale).
+    fn render(&self, frame: &mut [u8]);
+
+    /// Remaining lives (1 if the game has no life system). Used by the
+    /// episodic-life wrapper.
+    fn lives(&self) -> u32;
+}
+
+/// Axis-aligned box with f32 center coordinates, used by both games.
+#[derive(Debug, Clone, Copy)]
+pub struct Rect {
+    pub x: f32,
+    pub y: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+impl Rect {
+    pub fn intersects(&self, o: &Rect) -> bool {
+        (self.x - o.x).abs() * 2.0 < self.w + o.w && (self.y - o.y).abs() * 2.0 < self.h + o.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_intersection() {
+        let a = Rect { x: 10.0, y: 10.0, w: 4.0, h: 4.0 };
+        let b = Rect { x: 13.0, y: 10.0, w: 4.0, h: 4.0 };
+        let c = Rect { x: 20.0, y: 10.0, w: 4.0, h: 4.0 };
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c));
+        assert!(a.intersects(&a));
+    }
+}

@@ -1,0 +1,27 @@
+//! Atari-like arcade environments (ALE substitute — see DESIGN.md §2).
+//!
+//! Real ALE is a 6502 emulator; what matters for the *execution engine*
+//! benchmarks is the per-step cost profile: advance game logic a few
+//! frames, rasterize a grayscale screen, and run the DQN preprocessing
+//! stack. This module implements faithful Pong and Breakout game logic,
+//! rasterizes at a native 168×168 resolution, and applies the standard
+//! preprocessing (frameskip 4, max-pool over the last 2 frames, resize to
+//! 84×84, stack 4 frames) so the observation tensor matches `Pong-v5`'s
+//! `(4, 84, 84)` exactly.
+
+pub mod game;
+pub mod pong;
+pub mod breakout;
+pub mod render;
+pub mod preproc;
+
+pub use preproc::AtariEnv;
+
+/// Native rasterization resolution (downsampled 2× to 84×84).
+pub const NATIVE: usize = 168;
+/// Output observation edge length.
+pub const SCREEN: usize = 84;
+/// Frames advanced per env step (ALE frameskip).
+pub const FRAMESKIP: usize = 4;
+/// Stacked frames in the observation.
+pub const STACK: usize = 4;

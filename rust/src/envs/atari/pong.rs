@@ -1,0 +1,229 @@
+//! Pong game logic: agent paddle on the right, tracking AI on the left,
+//! first to 21 points. Minimal-action set {NOOP, FIRE, UP, DOWN, UPFIRE,
+//! DOWNFIRE} as in `Pong-v5` (6 actions).
+
+use super::game::{Game, Rect};
+use super::NATIVE;
+use crate::rng::Pcg32;
+
+const PADDLE_W: f32 = 4.0;
+const PADDLE_H: f32 = 22.0;
+const BALL: f32 = 4.0;
+const PADDLE_SPEED: f32 = 4.0;
+const AI_SPEED: f32 = 2.6; // slightly slower than the agent: beatable
+const SERVE_DELAY: u32 = 20;
+const WIN_SCORE: u32 = 21;
+
+pub struct Pong {
+    ball: Rect,
+    vx: f32,
+    vy: f32,
+    left_y: f32,
+    right_y: f32,
+    score_left: u32,
+    score_right: u32,
+    serve_timer: u32,
+    serving_right: bool,
+    over: bool,
+}
+
+impl Pong {
+    pub fn new() -> Self {
+        Pong {
+            ball: Rect { x: 84.0, y: 84.0, w: BALL, h: BALL },
+            vx: 0.0,
+            vy: 0.0,
+            left_y: 84.0,
+            right_y: 84.0,
+            score_left: 0,
+            score_right: 0,
+            serve_timer: SERVE_DELAY,
+            serving_right: true,
+            over: false,
+        }
+    }
+
+    fn serve(&mut self, rng: &mut Pcg32) {
+        self.ball.x = NATIVE as f32 / 2.0;
+        self.ball.y = rng.range(40.0, NATIVE as f32 - 40.0);
+        let dir = if self.serving_right { 1.0 } else { -1.0 };
+        self.vx = dir * 2.2;
+        self.vy = rng.range(-1.8, 1.8);
+    }
+}
+
+impl Default for Pong {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Pong {
+    fn n_actions(&self) -> usize {
+        6
+    }
+
+    fn name(&self) -> &'static str {
+        "Pong"
+    }
+
+    fn lives(&self) -> u32 {
+        1
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32) {
+        *self = Pong::new();
+        self.ball.y = rng.range(60.0, 108.0);
+    }
+
+    fn tick(&mut self, action: usize, rng: &mut Pcg32) -> (f32, bool) {
+        if self.over {
+            return (0.0, true);
+        }
+        // Agent paddle: UP = 2/4, DOWN = 3/5 (ALE minimal set ordering).
+        let dy = match action {
+            2 | 4 => -PADDLE_SPEED,
+            3 | 5 => PADDLE_SPEED,
+            _ => 0.0,
+        };
+        let half = PADDLE_H / 2.0;
+        self.right_y = (self.right_y + dy).clamp(half, NATIVE as f32 - half);
+
+        // AI paddle tracks the ball with capped speed + deadzone.
+        let diff = self.ball.y - self.left_y;
+        if diff.abs() > 2.0 {
+            self.left_y += diff.signum() * AI_SPEED;
+            self.left_y = self.left_y.clamp(half, NATIVE as f32 - half);
+        }
+
+        // Serve pause after each point (like the real game's dead time).
+        if self.serve_timer > 0 {
+            self.serve_timer -= 1;
+            if self.serve_timer == 0 {
+                self.serve(rng);
+            }
+            return (0.0, false);
+        }
+
+        self.ball.x += self.vx;
+        self.ball.y += self.vy;
+
+        // Wall bounces.
+        if self.ball.y < BALL / 2.0 {
+            self.ball.y = BALL / 2.0;
+            self.vy = self.vy.abs();
+        } else if self.ball.y > NATIVE as f32 - BALL / 2.0 {
+            self.ball.y = NATIVE as f32 - BALL / 2.0;
+            self.vy = -self.vy.abs();
+        }
+
+        // Paddle collisions: reflect, add english by contact offset.
+        let left = Rect { x: 10.0, y: self.left_y, w: PADDLE_W, h: PADDLE_H };
+        let right = Rect { x: NATIVE as f32 - 10.0, y: self.right_y, w: PADDLE_W, h: PADDLE_H };
+        if self.vx < 0.0 && self.ball.intersects(&left) {
+            self.vx = -self.vx * 1.03; // slight speed-up each rally
+            self.vy += (self.ball.y - self.left_y) / half * 1.2;
+        } else if self.vx > 0.0 && self.ball.intersects(&right) {
+            self.vx = -self.vx * 1.03;
+            self.vy += (self.ball.y - self.right_y) / half * 1.2;
+        }
+        self.vx = self.vx.clamp(-6.0, 6.0);
+        self.vy = self.vy.clamp(-4.0, 4.0);
+
+        // Scoring.
+        let mut reward = 0.0;
+        if self.ball.x < 0.0 {
+            self.score_right += 1;
+            reward = 1.0;
+            self.serving_right = false;
+            self.serve_timer = SERVE_DELAY;
+        } else if self.ball.x > NATIVE as f32 {
+            self.score_left += 1;
+            reward = -1.0;
+            self.serving_right = true;
+            self.serve_timer = SERVE_DELAY;
+        }
+        if self.score_left >= WIN_SCORE || self.score_right >= WIN_SCORE {
+            self.over = true;
+        }
+        (reward, self.over)
+    }
+
+    fn render(&self, frame: &mut [u8]) {
+        super::render::clear(frame, 44); // Pong's dark background
+        // center line
+        super::render::vline_dashed(frame, NATIVE / 2, 90);
+        super::render::rect(frame, 10.0, self.left_y, PADDLE_W, PADDLE_H, 200);
+        super::render::rect(frame, NATIVE as f32 - 10.0, self.right_y, PADDLE_W, PADDLE_H, 200);
+        if self.serve_timer == 0 {
+            super::render::rect(frame, self.ball.x, self.ball.y, BALL, BALL, 255);
+        }
+        // score bars at the top (length ~ score) so the screen encodes score
+        super::render::hbar(frame, 4, 20, self.score_left as usize * 3, 160);
+        super::render::hbar(frame, 4, NATIVE - 20 - self.score_right as usize * 3,
+            self.score_right as usize * 3, 160);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_episode(policy: impl Fn(&Pong) -> usize, seed: u64) -> (f32, u32) {
+        let mut g = Pong::new();
+        let mut rng = Pcg32::new(seed, 0);
+        g.reset(&mut rng);
+        let mut total = 0.0;
+        let mut ticks = 0;
+        loop {
+            let a = policy(&g);
+            let (r, done) = g.tick(a, &mut rng);
+            total += r;
+            ticks += 1;
+            if done || ticks > 200_000 {
+                return (total, ticks);
+            }
+        }
+    }
+
+    #[test]
+    fn noop_loses_21_points() {
+        let (total, _) = run_episode(|_| 0, 3);
+        assert_eq!(total, -21.0, "idle agent must lose every point");
+    }
+
+    #[test]
+    fn tracking_policy_scores_points() {
+        // Perfect tracking beats the capped-speed AI eventually.
+        let (total, _) = run_episode(
+            |g| {
+                if g.ball.y < g.right_y - 2.0 {
+                    2
+                } else if g.ball.y > g.right_y + 2.0 {
+                    3
+                } else {
+                    0
+                }
+            },
+            5,
+        );
+        assert!(total > 0.0, "tracking agent should win on balance, got {total}");
+    }
+
+    #[test]
+    fn episode_reward_bounded() {
+        let (total, _) = run_episode(|_| 2, 9);
+        assert!((-21.0..=21.0).contains(&total));
+    }
+
+    #[test]
+    fn render_draws_something() {
+        let mut g = Pong::new();
+        let mut rng = Pcg32::new(0, 0);
+        g.reset(&mut rng);
+        let mut f = vec![0u8; NATIVE * NATIVE];
+        g.render(&mut f);
+        let lit = f.iter().filter(|&&p| p > 100).count();
+        assert!(lit > 50, "paddles/line should be visible, {lit} bright px");
+    }
+}

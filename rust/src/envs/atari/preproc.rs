@@ -1,0 +1,233 @@
+//! DQN preprocessing stack wrapped around a [`Game`]: frameskip 4 with
+//! max-pool over the last two native frames, 2× downsample to 84×84,
+//! 4-frame stacking — producing the canonical `(4, 84, 84)` observation.
+
+use super::game::Game;
+use super::{FRAMESKIP, NATIVE, SCREEN, STACK};
+use crate::envs::env::{discrete_action, Env, Step};
+use crate::envs::spec::{ActionSpace, EnvSpec};
+use crate::rng::Pcg32;
+
+/// Atari-style environment over any [`Game`].
+pub struct AtariEnv<G: Game> {
+    spec: EnvSpec,
+    game: G,
+    rng: Pcg32,
+    /// Two native frame buffers for the flicker max-pool.
+    frame_a: Vec<u8>,
+    frame_b: Vec<u8>,
+    /// Ring of stacked 84×84 planes; `head` is the *newest* plane.
+    stack: Vec<f32>,
+    head: usize,
+    steps: usize,
+    episodic_life: bool,
+    lives: u32,
+}
+
+impl<G: Game> AtariEnv<G> {
+    pub fn new(game: G, seed: u64, env_id: u64) -> Self {
+        let id = format!("{}-v5", game.name());
+        let n_act = game.n_actions();
+        AtariEnv {
+            spec: EnvSpec {
+                id,
+                obs_shape: vec![STACK, SCREEN, SCREEN],
+                action_space: ActionSpace::Discrete(n_act),
+                max_episode_steps: 27_000, // 108k frames / frameskip
+            },
+            game,
+            rng: Pcg32::new(seed ^ 0x41544152, env_id),
+            frame_a: vec![0; NATIVE * NATIVE],
+            frame_b: vec![0; NATIVE * NATIVE],
+            stack: vec![0.0; STACK * SCREEN * SCREEN],
+            head: 0,
+            steps: 0,
+            episodic_life: false,
+            lives: 0,
+        }
+    }
+
+    /// Enable episodic-life mode: life loss ends the (training) episode
+    /// without resetting the game — the standard DQN wrapper.
+    pub fn with_episodic_life(mut self, on: bool) -> Self {
+        self.episodic_life = on;
+        self
+    }
+
+    /// Push the current pooled screen into the stack ring.
+    fn push_screen(&mut self) {
+        self.head = (self.head + 1) % STACK;
+        let plane = SCREEN * SCREEN;
+        let dst = &mut self.stack[self.head * plane..(self.head + 1) * plane];
+        super::render::downsample_into(&self.frame_a, dst);
+    }
+
+    /// Write the stacked observation, newest plane last (channel order
+    /// oldest→newest, matching gym's FrameStack).
+    fn write_obs(&self, obs: &mut [f32]) {
+        let plane = SCREEN * SCREEN;
+        for k in 0..STACK {
+            let src_idx = (self.head + 1 + k) % STACK; // oldest first
+            let src = &self.stack[src_idx * plane..(src_idx + 1) * plane];
+            obs[k * plane..(k + 1) * plane].copy_from_slice(src);
+        }
+    }
+}
+
+impl<G: Game> Env for AtariEnv<G> {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        // Full reset only when the game is actually over (episodic-life
+        // continuation otherwise), as the standard wrapper does.
+        if !self.episodic_life || self.game.lives() == 0 || self.steps == 0 {
+            self.game.reset(&mut self.rng);
+        }
+        self.lives = self.game.lives();
+        self.steps = 0;
+        self.stack.fill(0.0);
+        self.game.render(&mut self.frame_a);
+        self.push_screen();
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let a = discrete_action(action, self.spec.action_space.n());
+        let mut reward = 0.0;
+        let mut done = false;
+        // frameskip with max-pool of the last two frames
+        for k in 0..FRAMESKIP {
+            let (r, d) = self.game.tick(a, &mut self.rng);
+            reward += r;
+            if k == FRAMESKIP - 2 {
+                self.game.render(&mut self.frame_b);
+            } else if k == FRAMESKIP - 1 {
+                self.game.render(&mut self.frame_a);
+                super::render::max_frames(&mut self.frame_a, &self.frame_b);
+            }
+            if d {
+                done = true;
+                // render whatever we have if we died early in the skip
+                if k < FRAMESKIP - 1 {
+                    self.game.render(&mut self.frame_a);
+                }
+                break;
+            }
+        }
+        self.push_screen();
+        self.steps += 1;
+
+        // Episodic life: losing a life terminates the training episode.
+        if self.episodic_life && !done {
+            let now = self.game.lives();
+            if now < self.lives {
+                done = true;
+            }
+            self.lives = now;
+        }
+
+        let truncated = !done && self.steps >= self.spec.max_episode_steps;
+        self.write_obs(obs);
+        Step { reward, done, truncated }
+    }
+}
+
+/// Construct `Pong-v5`.
+pub fn pong(seed: u64, env_id: u64) -> AtariEnv<super::pong::Pong> {
+    AtariEnv::new(super::pong::Pong::new(), seed, env_id)
+}
+
+/// Construct `Breakout-v5` (episodic-life on, as the training stack uses).
+pub fn breakout(seed: u64, env_id: u64) -> AtariEnv<super::breakout::Breakout> {
+    AtariEnv::new(super::breakout::Breakout::new(), seed, env_id).with_episodic_life(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_shape_and_range() {
+        let mut env = pong(0, 0);
+        let dim = env.spec().obs_dim();
+        assert_eq!(dim, 4 * 84 * 84);
+        let mut obs = vec![0.0f32; dim];
+        env.reset(&mut obs);
+        for _ in 0..10 {
+            env.step(&[0.0], &mut obs);
+        }
+        assert!(obs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        assert!(obs.iter().any(|&x| x > 0.1), "screen should not be black");
+    }
+
+    #[test]
+    fn stack_shifts_over_time() {
+        let mut env = pong(1, 0);
+        let dim = env.spec().obs_dim();
+        let mut obs = vec![0.0f32; dim];
+        env.reset(&mut obs);
+        // step enough for the ball to be in play and moving
+        for _ in 0..30 {
+            env.step(&[2.0], &mut obs);
+        }
+        let plane = 84 * 84;
+        let newest = &obs[3 * plane..4 * plane];
+        let oldest = &obs[0..plane];
+        let diff: f32 = newest.iter().zip(oldest).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1.0, "planes should differ as the game animates, diff={diff}");
+    }
+
+    #[test]
+    fn pong_idle_eventually_done_with_negative_score() {
+        let mut env = pong(2, 1);
+        let dim = env.spec().obs_dim();
+        let mut obs = vec![0.0f32; dim];
+        env.reset(&mut obs);
+        let mut total = 0.0;
+        for _ in 0..60_000 {
+            let s = env.step(&[0.0], &mut obs);
+            total += s.reward;
+            if s.done {
+                assert_eq!(total, -21.0);
+                return;
+            }
+        }
+        panic!("idle pong episode must end");
+    }
+
+    #[test]
+    fn breakout_episodic_life_terminates_on_life_loss() {
+        let mut env = breakout(3, 0);
+        let dim = env.spec().obs_dim();
+        let mut obs = vec![0.0f32; dim];
+        env.reset(&mut obs);
+        // FIRE then idle: lose the first life -> done must fire with lives>0
+        for _ in 0..20_000 {
+            let s = env.step(&[1.0, 0.0][..1].as_ref(), &mut obs);
+            if s.done {
+                assert!(env.game.lives() > 0, "episodic life ends before game over");
+                return;
+            }
+        }
+        panic!("life should be lost");
+    }
+
+    #[test]
+    fn deterministic_same_seed() {
+        let run = |seed: u64| {
+            let mut env = pong(seed, 7);
+            let dim = env.spec().obs_dim();
+            let mut obs = vec![0.0f32; dim];
+            env.reset(&mut obs);
+            let mut acc = 0.0f32;
+            for i in 0..100 {
+                let s = env.step(&[(i % 6) as f32], &mut obs);
+                acc += s.reward + obs[1000] + obs[5000];
+            }
+            acc
+        };
+        assert_eq!(run(11), run(11));
+    }
+}

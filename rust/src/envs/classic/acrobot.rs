@@ -1,0 +1,183 @@
+//! Acrobot-v1 (Sutton 1996): two-link underactuated pendulum, torque on
+//! the second joint, swing the tip above the bar. Gym dynamics with RK4.
+
+use crate::envs::env::{discrete_action, Env, Step};
+use crate::envs::spec::{ActionSpace, EnvSpec};
+use crate::rng::Pcg32;
+
+const DT: f32 = 0.2;
+const L1: f32 = 1.0;
+const M1: f32 = 1.0;
+const M2: f32 = 1.0;
+const LC1: f32 = 0.5;
+const LC2: f32 = 0.5;
+const I1: f32 = 1.0;
+const I2: f32 = 1.0;
+const G: f32 = 9.8;
+const MAX_VEL1: f32 = 4.0 * std::f32::consts::PI;
+const MAX_VEL2: f32 = 9.0 * std::f32::consts::PI;
+
+/// Acrobot environment. Observation
+/// `[cosθ1, sinθ1, cosθ2, sinθ2, θ̇1, θ̇2]`, actions {-1, 0, +1} torque.
+pub struct Acrobot {
+    spec: EnvSpec,
+    rng: Pcg32,
+    /// `[theta1, theta2, dtheta1, dtheta2]`
+    s: [f32; 4],
+    steps: usize,
+}
+
+fn wrap(x: f32, lo: f32, hi: f32) -> f32 {
+    lo + (x - lo).rem_euclid(hi - lo)
+}
+
+/// Equations of motion from Sutton & Barto / Gym `_dsdt`.
+fn dsdt(s: &[f32; 5]) -> [f32; 5] {
+    let [theta1, theta2, dtheta1, dtheta2, a] = *s;
+    let d1 = M1 * LC1 * LC1
+        + M2 * (L1 * L1 + LC2 * LC2 + 2.0 * L1 * LC2 * theta2.cos())
+        + I1
+        + I2;
+    let d2 = M2 * (LC2 * LC2 + L1 * LC2 * theta2.cos()) + I2;
+    let phi2 = M2 * LC2 * G * (theta1 + theta2 - std::f32::consts::FRAC_PI_2).cos();
+    let phi1 = -M2 * L1 * LC2 * dtheta2 * dtheta2 * theta2.sin()
+        - 2.0 * M2 * L1 * LC2 * dtheta2 * dtheta1 * theta2.sin()
+        + (M1 * LC1 + M2 * L1) * G * (theta1 - std::f32::consts::FRAC_PI_2).cos()
+        + phi2;
+    let ddtheta2 = (a + d2 / d1 * phi1
+        - M2 * L1 * LC2 * dtheta1 * dtheta1 * theta2.sin()
+        - phi2)
+        / (M2 * LC2 * LC2 + I2 - d2 * d2 / d1);
+    let ddtheta1 = -(d2 * ddtheta2 + phi1) / d1;
+    [dtheta1, dtheta2, ddtheta1, ddtheta2, 0.0]
+}
+
+/// One RK4 step of the augmented state (state + constant torque lane).
+fn rk4(y0: [f32; 5], dt: f32) -> [f32; 5] {
+    let add = |y: &[f32; 5], k: &[f32; 5], h: f32| {
+        let mut o = [0.0f32; 5];
+        for i in 0..5 {
+            o[i] = y[i] + k[i] * h;
+        }
+        o
+    };
+    let k1 = dsdt(&y0);
+    let k2 = dsdt(&add(&y0, &k1, dt / 2.0));
+    let k3 = dsdt(&add(&y0, &k2, dt / 2.0));
+    let k4 = dsdt(&add(&y0, &k3, dt));
+    let mut out = y0;
+    for i in 0..5 {
+        out[i] = y0[i] + dt / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+    }
+    out
+}
+
+impl Acrobot {
+    pub fn new(seed: u64, env_id: u64) -> Self {
+        Acrobot {
+            spec: EnvSpec {
+                id: "Acrobot-v1".into(),
+                obs_shape: vec![6],
+                action_space: ActionSpace::Discrete(3),
+                max_episode_steps: 500,
+            },
+            rng: Pcg32::new(seed ^ 0x616372, env_id),
+            s: [0.0; 4],
+            steps: 0,
+        }
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.s[0].cos();
+        obs[1] = self.s[0].sin();
+        obs[2] = self.s[1].cos();
+        obs[3] = self.s[1].sin();
+        obs[4] = self.s[2];
+        obs[5] = self.s[3];
+    }
+
+    fn terminal(&self) -> bool {
+        -self.s[0].cos() - (self.s[1] + self.s[0]).cos() > 1.0
+    }
+}
+
+impl Env for Acrobot {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        for x in &mut self.s {
+            *x = self.rng.range(-0.1, 0.1);
+        }
+        self.steps = 0;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let torque = discrete_action(action, 3) as f32 - 1.0;
+        let y = rk4([self.s[0], self.s[1], self.s[2], self.s[3], torque], DT);
+        self.s[0] = wrap(y[0], -std::f32::consts::PI, std::f32::consts::PI);
+        self.s[1] = wrap(y[1], -std::f32::consts::PI, std::f32::consts::PI);
+        self.s[2] = y[2].clamp(-MAX_VEL1, MAX_VEL1);
+        self.s[3] = y[3].clamp(-MAX_VEL2, MAX_VEL2);
+        self.steps += 1;
+        let done = self.terminal();
+        let truncated = !done && self.steps >= self.spec.max_episode_steps;
+        self.write_obs(obs);
+        Step { reward: if done { 0.0 } else { -1.0 }, done, truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_hanging_down() {
+        let mut env = Acrobot::new(0, 0);
+        let mut obs = [0.0f32; 6];
+        env.reset(&mut obs);
+        // theta near 0 => cos near 1 (hanging), not terminal.
+        assert!(obs[0] > 0.99);
+        assert!(!env.terminal());
+    }
+
+    #[test]
+    fn velocities_clamped() {
+        let mut env = Acrobot::new(1, 1);
+        let mut obs = [0.0f32; 6];
+        env.reset(&mut obs);
+        for _ in 0..500 {
+            let s = env.step(&[2.0], &mut obs);
+            assert!(obs[4].abs() <= MAX_VEL1 + 1e-4);
+            assert!(obs[5].abs() <= MAX_VEL2 + 1e-4);
+            if s.finished() {
+                env.reset(&mut obs);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_pumping_solves() {
+        // Torque with the second link's velocity direction pumps energy.
+        let mut env = Acrobot::new(5, 2);
+        let mut obs = [0.0f32; 6];
+        env.reset(&mut obs);
+        for _ in 0..3 {
+            for _ in 0..500 {
+                let a = if obs[5] >= 0.0 { 2.0 } else { 0.0 };
+                let s = env.step(&[a], &mut obs);
+                if s.done {
+                    assert_eq!(s.reward, 0.0);
+                    return;
+                }
+                if s.truncated {
+                    break;
+                }
+            }
+            env.reset(&mut obs);
+        }
+        panic!("pumping should raise the tip within 3 episodes");
+    }
+}

@@ -1,0 +1,161 @@
+//! CartPole-v1: the classic pole-balancing task (Barto, Sutton & Anderson
+//! 1983), with exactly the Gym dynamics and termination bounds.
+
+use crate::envs::env::{discrete_action, Env, Step};
+use crate::envs::spec::{ActionSpace, EnvSpec};
+use crate::rng::Pcg32;
+
+const GRAVITY: f32 = 9.8;
+const MASS_CART: f32 = 1.0;
+const MASS_POLE: f32 = 0.1;
+const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
+const LENGTH: f32 = 0.5; // half pole length
+const POLE_MASS_LENGTH: f32 = MASS_POLE * LENGTH;
+const FORCE_MAG: f32 = 10.0;
+const TAU: f32 = 0.02;
+const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
+const X_LIMIT: f32 = 2.4;
+
+/// CartPole environment. Observation `[x, x_dot, theta, theta_dot]`,
+/// actions {push left, push right}, reward 1 per step while upright.
+pub struct CartPole {
+    spec: EnvSpec,
+    rng: Pcg32,
+    state: [f32; 4],
+    steps: usize,
+    needs_reset: bool,
+}
+
+impl CartPole {
+    pub fn new(seed: u64, env_id: u64) -> Self {
+        CartPole {
+            spec: EnvSpec {
+                id: "CartPole-v1".into(),
+                obs_shape: vec![4],
+                action_space: ActionSpace::Discrete(2),
+                max_episode_steps: 500,
+            },
+            rng: Pcg32::new(seed, env_id),
+            state: [0.0; 4],
+            steps: 0,
+            needs_reset: true,
+        }
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[..4].copy_from_slice(&self.state);
+    }
+}
+
+impl Env for CartPole {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        for s in &mut self.state {
+            *s = self.rng.range(-0.05, 0.05);
+        }
+        self.steps = 0;
+        self.needs_reset = false;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        debug_assert!(!self.needs_reset, "step() after terminal without reset()");
+        let a = discrete_action(action, 2);
+        let force = if a == 1 { FORCE_MAG } else { -FORCE_MAG };
+        let [x, x_dot, theta, theta_dot] = self.state;
+        let (sin_t, cos_t) = theta.sin_cos();
+        let temp = (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin_t) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
+        // Semi-explicit Euler, matching Gym's "euler" kinematics integrator.
+        self.state = [
+            x + TAU * x_dot,
+            x_dot + TAU * x_acc,
+            theta + TAU * theta_dot,
+            theta_dot + TAU * theta_acc,
+        ];
+        self.steps += 1;
+
+        let fell = self.state[0].abs() > X_LIMIT || self.state[2].abs() > THETA_LIMIT;
+        let truncated = !fell && self.steps >= self.spec.max_episode_steps;
+        self.needs_reset = fell || truncated;
+        self.write_obs(obs);
+        Step { reward: 1.0, done: fell, truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_near_zero() {
+        let mut env = CartPole::new(0, 0);
+        let mut obs = [0.0f32; 4];
+        env.reset(&mut obs);
+        assert!(obs.iter().all(|x| x.abs() <= 0.05));
+    }
+
+    #[test]
+    fn constant_action_eventually_falls() {
+        let mut env = CartPole::new(1, 0);
+        let mut obs = [0.0f32; 4];
+        env.reset(&mut obs);
+        let mut steps = 0;
+        loop {
+            let s = env.step(&[1.0], &mut obs);
+            steps += 1;
+            assert_eq!(s.reward, 1.0);
+            if s.finished() {
+                assert!(s.done, "pushing one way must terminate by falling, not truncation");
+                break;
+            }
+            assert!(steps < 500, "should have fallen");
+        }
+        assert!(steps < 200, "constant push falls fast, took {steps}");
+    }
+
+    #[test]
+    fn truncates_at_500() {
+        // A crude balancing policy: push against the pole lean.
+        let mut env = CartPole::new(2, 0);
+        let mut obs = [0.0f32; 4];
+        env.reset(&mut obs);
+        for t in 0..500 {
+            let a = if obs[2] + 0.3 * obs[3] > 0.0 { 1.0 } else { 0.0 };
+            let s = env.step(&[a], &mut obs);
+            if s.finished() {
+                assert!(t > 50, "balancer should survive a while, died at {t}");
+                if s.truncated {
+                    assert_eq!(t, 499);
+                }
+                return;
+            }
+        }
+        panic!("episode must finish within 500 steps");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut env = CartPole::new(seed, 3);
+            let mut obs = [0.0f32; 4];
+            env.reset(&mut obs);
+            let mut tot = 0.0;
+            for i in 0..50 {
+                let s = env.step(&[(i % 2) as f32], &mut obs);
+                tot += s.reward + obs[0];
+                if s.finished() {
+                    env.reset(&mut obs);
+                }
+            }
+            tot
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

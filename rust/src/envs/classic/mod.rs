@@ -1,0 +1,11 @@
+//! Classic-control environments with the textbook (Gym) dynamics.
+
+pub mod cartpole;
+pub mod mountain_car;
+pub mod pendulum;
+pub mod acrobot;
+
+pub use acrobot::Acrobot;
+pub use cartpole::CartPole;
+pub use mountain_car::MountainCar;
+pub use pendulum::Pendulum;

@@ -1,0 +1,129 @@
+//! MountainCar-v0 (Moore 1990), Gym dynamics: an underpowered car must
+//! build momentum to reach the flag on the right hill.
+
+use crate::envs::env::{discrete_action, Env, Step};
+use crate::envs::spec::{ActionSpace, EnvSpec};
+use crate::rng::Pcg32;
+
+const MIN_POS: f32 = -1.2;
+const MAX_POS: f32 = 0.6;
+const MAX_SPEED: f32 = 0.07;
+const GOAL_POS: f32 = 0.5;
+const FORCE: f32 = 0.001;
+const GRAVITY: f32 = 0.0025;
+
+/// MountainCar environment. Observation `[position, velocity]`, actions
+/// {push left, no-op, push right}, reward -1 per step until the goal.
+pub struct MountainCar {
+    spec: EnvSpec,
+    rng: Pcg32,
+    pos: f32,
+    vel: f32,
+    steps: usize,
+}
+
+impl MountainCar {
+    pub fn new(seed: u64, env_id: u64) -> Self {
+        MountainCar {
+            spec: EnvSpec {
+                id: "MountainCar-v0".into(),
+                obs_shape: vec![2],
+                action_space: ActionSpace::Discrete(3),
+                max_episode_steps: 200,
+            },
+            rng: Pcg32::new(seed ^ 0x6d63, env_id),
+            pos: 0.0,
+            vel: 0.0,
+            steps: 0,
+        }
+    }
+}
+
+impl Env for MountainCar {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.pos = self.rng.range(-0.6, -0.4);
+        self.vel = 0.0;
+        self.steps = 0;
+        obs[0] = self.pos;
+        obs[1] = self.vel;
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let a = discrete_action(action, 3) as f32 - 1.0; // -1, 0, +1
+        self.vel += a * FORCE - GRAVITY * (3.0 * self.pos).cos();
+        self.vel = self.vel.clamp(-MAX_SPEED, MAX_SPEED);
+        self.pos += self.vel;
+        self.pos = self.pos.clamp(MIN_POS, MAX_POS);
+        if self.pos <= MIN_POS && self.vel < 0.0 {
+            self.vel = 0.0; // inelastic left wall
+        }
+        self.steps += 1;
+        let done = self.pos >= GOAL_POS;
+        let truncated = !done && self.steps >= self.spec.max_episode_steps;
+        obs[0] = self.pos;
+        obs[1] = self.vel;
+        Step { reward: -1.0, done, truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_never_reaches_goal() {
+        let mut env = MountainCar::new(0, 0);
+        let mut obs = [0.0f32; 2];
+        env.reset(&mut obs);
+        for _ in 0..200 {
+            let s = env.step(&[1.0], &mut obs);
+            assert!(!s.done, "no-op cannot climb the hill");
+            if s.truncated {
+                return;
+            }
+        }
+        panic!("must truncate at 200");
+    }
+
+    #[test]
+    fn bang_bang_policy_reaches_goal() {
+        // Energy pumping: push in the direction of current velocity.
+        let mut env = MountainCar::new(3, 1);
+        let mut obs = [0.0f32; 2];
+        env.reset(&mut obs);
+        for _ in 0..5 {
+            for _ in 0..200 {
+                let a = if obs[1] >= 0.0 { 2.0 } else { 0.0 };
+                let s = env.step(&[a], &mut obs);
+                if s.done {
+                    assert!(obs[0] >= GOAL_POS);
+                    return;
+                }
+                if s.truncated {
+                    break;
+                }
+            }
+            env.reset(&mut obs);
+        }
+        panic!("energy pumping should reach the flag within a few episodes");
+    }
+
+    #[test]
+    fn velocity_bounded() {
+        let mut env = MountainCar::new(9, 2);
+        let mut obs = [0.0f32; 2];
+        env.reset(&mut obs);
+        for i in 0..500 {
+            let s = env.step(&[(i % 3) as f32], &mut obs);
+            assert!(obs[1].abs() <= MAX_SPEED + 1e-6);
+            assert!((MIN_POS..=MAX_POS).contains(&obs[0]));
+            if s.finished() {
+                env.reset(&mut obs);
+            }
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Pendulum-v1: continuous-control swing-up with the Gym dynamics —
+//! the smallest continuous-action task, used by the Gaussian-policy tests.
+
+use crate::envs::env::{Env, Step};
+use crate::envs::spec::{ActionSpace, EnvSpec};
+use crate::rng::Pcg32;
+
+const MAX_SPEED: f32 = 8.0;
+const MAX_TORQUE: f32 = 2.0;
+const DT: f32 = 0.05;
+const G: f32 = 10.0;
+const M: f32 = 1.0;
+const L: f32 = 1.0;
+
+/// Pendulum environment. Observation `[cos θ, sin θ, θ̇]`, one torque
+/// action in `[-2, 2]`, reward `-(θ² + 0.1 θ̇² + 0.001 u²)`.
+pub struct Pendulum {
+    spec: EnvSpec,
+    rng: Pcg32,
+    theta: f32,
+    theta_dot: f32,
+    steps: usize,
+}
+
+fn angle_normalize(x: f32) -> f32 {
+    let two_pi = 2.0 * std::f32::consts::PI;
+    ((x + std::f32::consts::PI).rem_euclid(two_pi)) - std::f32::consts::PI
+}
+
+impl Pendulum {
+    pub fn new(seed: u64, env_id: u64) -> Self {
+        Pendulum {
+            spec: EnvSpec {
+                id: "Pendulum-v1".into(),
+                obs_shape: vec![3],
+                action_space: ActionSpace::Continuous { dim: 1, low: -MAX_TORQUE, high: MAX_TORQUE },
+                max_episode_steps: 200,
+            },
+            rng: Pcg32::new(seed ^ 0x70656e, env_id),
+            theta: 0.0,
+            theta_dot: 0.0,
+            steps: 0,
+        }
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.theta.cos();
+        obs[1] = self.theta.sin();
+        obs[2] = self.theta_dot;
+    }
+}
+
+impl Env for Pendulum {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.theta = self.rng.range(-std::f32::consts::PI, std::f32::consts::PI);
+        self.theta_dot = self.rng.range(-1.0, 1.0);
+        self.steps = 0;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let u = action[0].clamp(-MAX_TORQUE, MAX_TORQUE);
+        let th = angle_normalize(self.theta);
+        let cost = th * th + 0.1 * self.theta_dot * self.theta_dot + 0.001 * u * u;
+        // Gym dynamics (theta measured from upright).
+        self.theta_dot += (3.0 * G / (2.0 * L) * self.theta.sin() + 3.0 / (M * L * L) * u) * DT;
+        self.theta_dot = self.theta_dot.clamp(-MAX_SPEED, MAX_SPEED);
+        self.theta += self.theta_dot * DT;
+        self.steps += 1;
+        self.write_obs(obs);
+        Step {
+            reward: -cost,
+            done: false,
+            truncated: self.steps >= self.spec.max_episode_steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reward_nonpositive_and_bounded() {
+        let mut env = Pendulum::new(0, 0);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut obs);
+        for _ in 0..200 {
+            let s = env.step(&[1.0], &mut obs);
+            assert!(s.reward <= 0.0);
+            // max cost = pi^2 + 0.1*64 + 0.001*4
+            assert!(s.reward >= -(std::f32::consts::PI.powi(2) + 6.4 + 0.004) - 1e-4);
+        }
+    }
+
+    #[test]
+    fn obs_is_unit_circle() {
+        let mut env = Pendulum::new(4, 1);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut obs);
+        for _ in 0..100 {
+            env.step(&[-2.0], &mut obs);
+            let r = obs[0] * obs[0] + obs[1] * obs[1];
+            assert!((r - 1.0).abs() < 1e-5);
+            assert!(obs[2].abs() <= MAX_SPEED);
+        }
+    }
+
+    #[test]
+    fn truncates_never_terminates() {
+        let mut env = Pendulum::new(8, 2);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut obs);
+        for t in 0..200 {
+            let s = env.step(&[0.0], &mut obs);
+            assert!(!s.done);
+            assert_eq!(s.truncated, t == 199);
+        }
+    }
+
+    #[test]
+    fn angle_normalize_range() {
+        for i in -100..100 {
+            let x = angle_normalize(i as f32 * 0.37);
+            assert!((-std::f32::consts::PI..=std::f32::consts::PI).contains(&x));
+        }
+    }
+}

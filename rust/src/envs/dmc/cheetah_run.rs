@@ -1,0 +1,82 @@
+//! `cheetah run` (dm_control substitute): the HalfCheetah body with the
+//! Control Suite's shaped run reward — `r = clip(vx / target, 0, 1)` —
+//! and fixed 1000-step episodes with no early termination.
+
+use crate::envs::env::{Env, Step};
+use crate::envs::mujoco::walker::{Task, WalkerEnv};
+use crate::envs::mujoco::{DT, FRAME_SKIP};
+use crate::envs::spec::EnvSpec;
+
+/// Target running speed for full reward (dm_control uses 10 m/s).
+pub const TARGET_SPEED: f32 = 6.0;
+
+/// The dm_control `cheetah run` task.
+pub struct CheetahRun {
+    inner: WalkerEnv,
+    spec: EnvSpec,
+}
+
+impl CheetahRun {
+    pub fn new(seed: u64, env_id: u64) -> Self {
+        let inner = WalkerEnv::new(Task::HalfCheetah, seed, env_id);
+        let mut spec = inner.spec().clone();
+        spec.id = "cheetah_run".into();
+        spec.max_episode_steps = 1000;
+        CheetahRun { inner, spec }
+    }
+}
+
+impl Env for CheetahRun {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.inner.reset(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let n = self.spec.obs_dim();
+        let s = self.inner.step(action, obs);
+        // Recover vx from the observation layout: index 2 + n_joints.
+        let n_joints = self.spec.action_space.dim();
+        let vx = obs[2 + n_joints];
+        let reward = (vx / TARGET_SPEED).clamp(0.0, 1.0);
+        debug_assert_eq!(n, obs.len());
+        // Control Suite tasks have no failure termination: only time limit.
+        let truncated = s.truncated || s.done;
+        let _ = (DT, FRAME_SKIP); // constants shared with the gym task
+        Step { reward, done: false, truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reward_in_unit_interval() {
+        let mut env = CheetahRun::new(0, 0);
+        let mut obs = vec![0.0; env.spec().obs_dim()];
+        let n = env.spec().action_space.dim();
+        env.reset(&mut obs);
+        for i in 0..300 {
+            let a: Vec<f32> = (0..n).map(|k| ((i + k) as f32).sin()).collect();
+            let s = env.step(&a, &mut obs);
+            assert!((0.0..=1.0).contains(&s.reward), "r={}", s.reward);
+            assert!(!s.done);
+        }
+    }
+
+    #[test]
+    fn episode_is_1000_steps() {
+        let mut env = CheetahRun::new(1, 0);
+        let mut obs = vec![0.0; env.spec().obs_dim()];
+        env.reset(&mut obs);
+        let zeros = vec![0.0f32; env.spec().action_space.dim()];
+        for t in 0..1000 {
+            let s = env.step(&zeros, &mut obs);
+            assert_eq!(s.truncated, t == 999, "t={t}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! dm_control-style tasks (DeepMind Control Suite substitute) and the
+//! dm_env `TimeStep` API, mirroring EnvPool's dual gym/dm API support.
+
+pub mod cheetah_run;
+pub mod timestep;
+
+pub use cheetah_run::CheetahRun;
+pub use timestep::{DmEnvAdapter, StepType, TimeStep};

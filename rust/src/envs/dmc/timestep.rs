@@ -1,0 +1,124 @@
+//! dm_env API surface: `TimeStep { step_type, reward, discount, obs }`
+//! and an adapter that exposes any [`Env`] through it — EnvPool supports
+//! both gym and dm APIs over one engine (paper Appendix A.2).
+
+use crate::envs::env::Env;
+
+/// dm_env step types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepType {
+    First,
+    Mid,
+    Last,
+}
+
+/// A dm_env timestep (observation lives in the caller's buffer, as
+/// everywhere in this crate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeStep {
+    pub step_type: StepType,
+    pub reward: f32,
+    /// 0.0 on true termination, 1.0 otherwise (including truncation —
+    /// dm_env's discount encodes bootstrappability).
+    pub discount: f32,
+}
+
+impl TimeStep {
+    pub fn first() -> TimeStep {
+        TimeStep { step_type: StepType::First, reward: 0.0, discount: 1.0 }
+    }
+
+    pub fn is_last(&self) -> bool {
+        self.step_type == StepType::Last
+    }
+}
+
+/// Wrap a gym-style [`Env`] as a dm_env.
+pub struct DmEnvAdapter<E: Env> {
+    env: E,
+    needs_reset: bool,
+}
+
+impl<E: Env> DmEnvAdapter<E> {
+    pub fn new(env: E) -> Self {
+        DmEnvAdapter { env, needs_reset: true }
+    }
+
+    pub fn spec(&self) -> &crate::envs::spec::EnvSpec {
+        self.env.spec()
+    }
+
+    /// dm_env `reset()`.
+    pub fn reset(&mut self, obs: &mut [f32]) -> TimeStep {
+        self.env.reset(obs);
+        self.needs_reset = false;
+        TimeStep::first()
+    }
+
+    /// dm_env `step()`: auto-resets after a Last step, as dm_env specifies.
+    pub fn step(&mut self, action: &[f32], obs: &mut [f32]) -> TimeStep {
+        if self.needs_reset {
+            return self.reset(obs);
+        }
+        let s = self.env.step(action, obs);
+        if s.finished() {
+            self.needs_reset = true;
+            TimeStep {
+                step_type: StepType::Last,
+                reward: s.reward,
+                discount: if s.done { 0.0 } else { 1.0 },
+            }
+        } else {
+            TimeStep { step_type: StepType::Mid, reward: s.reward, discount: 1.0 }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::classic::CartPole;
+
+    #[test]
+    fn lifecycle_first_mid_last() {
+        let mut env = DmEnvAdapter::new(CartPole::new(0, 0));
+        let mut obs = vec![0.0; 4];
+        let ts = env.reset(&mut obs);
+        assert_eq!(ts.step_type, StepType::First);
+        let mut saw_last = false;
+        for _ in 0..600 {
+            let ts = env.step(&[1.0], &mut obs);
+            if ts.is_last() {
+                saw_last = true;
+                // push-one-way cartpole falls: true termination => discount 0
+                assert_eq!(ts.discount, 0.0);
+                break;
+            }
+            assert_eq!(ts.step_type, StepType::Mid);
+            assert_eq!(ts.discount, 1.0);
+        }
+        assert!(saw_last);
+        // next step auto-resets
+        let ts = env.step(&[0.0], &mut obs);
+        assert_eq!(ts.step_type, StepType::First);
+    }
+
+    #[test]
+    fn truncation_keeps_discount_one() {
+        use crate::envs::dmc::CheetahRun;
+        let mut env = DmEnvAdapter::new(CheetahRun::new(0, 0));
+        let mut obs = vec![0.0; env.spec().obs_dim()];
+        env.reset(&mut obs);
+        let zeros = vec![0.0f32; env.spec().action_space.dim()];
+        let mut last = None;
+        for _ in 0..1000 {
+            let ts = env.step(&zeros, &mut obs);
+            if ts.is_last() {
+                last = Some(ts);
+                break;
+            }
+        }
+        let ts = last.expect("must truncate at 1000");
+        assert_eq!(ts.discount, 1.0, "truncation is bootstrappable");
+    }
+}

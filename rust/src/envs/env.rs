@@ -1,0 +1,76 @@
+//! The core `Env` trait.
+//!
+//! Observations are written **into caller-provided buffers** rather than
+//! returned: this is the hook the paper's StateBufferQueue optimization
+//! needs — a worker thread steps the env and writes the observation
+//! directly into its pre-allocated slot in the current block, eliminating
+//! the collect-then-batch copies the Python subprocess executor pays
+//! (paper Appendix D, "Data Movement").
+
+use super::spec::EnvSpec;
+
+/// Result of one environment step (the non-observation part).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Step {
+    /// Scalar reward for this transition.
+    pub reward: f32,
+    /// Episode terminated (true termination, not time limit).
+    pub done: bool,
+    /// Episode truncated by a time limit (reported separately so GAE can
+    /// bootstrap through truncations, as Gym v26 / EnvPool do).
+    pub truncated: bool,
+}
+
+impl Step {
+    /// Terminal for control purposes (either way the env needs a reset).
+    pub fn finished(&self) -> bool {
+        self.done || self.truncated
+    }
+}
+
+/// A single RL environment instance.
+///
+/// Actions arrive as flat `&[f32]` slices of length
+/// `spec.action_space.dim()`; discrete envs read `action[0]` as an integer
+/// id. This keeps the pool's action transport a single contiguous buffer
+/// for every task type.
+pub trait Env: Send {
+    /// Static spec (shape/space metadata).
+    fn spec(&self) -> &EnvSpec;
+
+    /// Reset the episode and write the initial observation into `obs`
+    /// (length `spec().obs_dim()`).
+    fn reset(&mut self, obs: &mut [f32]);
+
+    /// Advance one step with `action`, writing the next observation into
+    /// `obs` and returning reward/termination. Implementations must *not*
+    /// auto-reset; the pool does that (so executors agree on semantics).
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step;
+}
+
+/// Helper for discrete envs: decode the flat action lane to an id,
+/// clamping to the valid range so malformed inputs cannot index OOB.
+#[inline]
+pub fn discrete_action(action: &[f32], n: usize) -> usize {
+    debug_assert!(n > 0);
+    (action[0] as i64).clamp(0, n as i64 - 1) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_finished() {
+        assert!(!Step { reward: 0.0, done: false, truncated: false }.finished());
+        assert!(Step { reward: 0.0, done: true, truncated: false }.finished());
+        assert!(Step { reward: 0.0, done: false, truncated: true }.finished());
+    }
+
+    #[test]
+    fn discrete_decode_clamps() {
+        assert_eq!(discrete_action(&[2.0], 6), 2);
+        assert_eq!(discrete_action(&[-1.0], 6), 0);
+        assert_eq!(discrete_action(&[99.0], 6), 5);
+    }
+}

@@ -1,0 +1,36 @@
+//! RL environment substrates.
+//!
+//! The paper evaluates on Atari, MuJoCo, dm_control and classic-control
+//! environments. None of those C/C++ engines are available here, so each
+//! family is rebuilt from scratch with the same observation/action/reward
+//! interface and — importantly for the benchmarks — the same *cost
+//! profile* (see DESIGN.md §2 for the substitution argument):
+//!
+//! - [`classic`] — CartPole, MountainCar, Pendulum, Acrobot with the
+//!   textbook dynamics (exactly the Gym equations).
+//! - [`atari`] — an arcade simulator (Pong, Breakout) that renders real
+//!   grayscale frames and applies the standard DQN preprocessing stack
+//!   (frameskip 4, 2-frame max-pool, resize to 84×84, 4-frame stack).
+//! - [`mujoco`] — a planar articulated rigid-body physics engine
+//!   (sequential-impulse solver) with Hopper / HalfCheetah / Ant-like
+//!   models, 5 physics substeps per env step as in Gym MuJoCo.
+//! - [`dmc`] — dm_control-style tasks (cheetah run) over the same engine,
+//!   exposed through a dm_env-like `TimeStep`.
+//! - [`wrappers`] — time limit, reward clipping, episodic life,
+//!   observation normalization.
+//!
+//! All environments implement [`Env`] and are constructed by name through
+//! [`registry::make_env`], mirroring `envpool.make(task_id, ...)`.
+
+pub mod spec;
+pub mod env;
+pub mod classic;
+pub mod atari;
+pub mod mujoco;
+pub mod dmc;
+pub mod wrappers;
+pub mod registry;
+
+pub use env::{Env, Step};
+pub use registry::{make_env, spec_for};
+pub use spec::{ActionSpace, EnvSpec};

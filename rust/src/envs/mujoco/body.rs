@@ -1,0 +1,113 @@
+//! Rigid bodies: capsule links with mass, rotational inertia, and pose.
+
+use super::math::{v2, Vec2};
+
+/// A rigid capsule link. The capsule axis runs along the body's local
+/// x-axis from `-half_len` to `+half_len`; `radius` pads the endpoints
+/// for ground contact.
+#[derive(Debug, Clone)]
+pub struct Body {
+    /// World position of the center of mass.
+    pub pos: Vec2,
+    /// Orientation (radians).
+    pub angle: f32,
+    /// Linear velocity.
+    pub vel: Vec2,
+    /// Angular velocity.
+    pub omega: f32,
+    /// Inverse mass (0 = static).
+    pub inv_mass: f32,
+    /// Inverse rotational inertia (0 = static).
+    pub inv_inertia: f32,
+    /// Capsule half-length along local x.
+    pub half_len: f32,
+    /// Capsule radius.
+    pub radius: f32,
+}
+
+impl Body {
+    /// A dynamic capsule of given mass, half-length and radius. Inertia is
+    /// the thin-rod formula `m L² / 12` with `L = 2·half_len` (plus a
+    /// small floor so point-like links stay well-conditioned).
+    pub fn capsule(mass: f32, half_len: f32, radius: f32) -> Body {
+        let l = 2.0 * half_len;
+        let inertia = (mass * l * l / 12.0).max(mass * radius * radius * 0.5).max(1e-4);
+        Body {
+            pos: Vec2::ZERO,
+            angle: 0.0,
+            vel: Vec2::ZERO,
+            omega: 0.0,
+            inv_mass: 1.0 / mass,
+            inv_inertia: 1.0 / inertia,
+            half_len,
+            radius,
+        }
+    }
+
+    /// Transform a local point to world space.
+    #[inline]
+    pub fn world_point(&self, local: Vec2) -> Vec2 {
+        self.pos + local.rotate(self.angle)
+    }
+
+    /// World-space velocity of a point given by world offset `r` from COM.
+    #[inline]
+    pub fn velocity_at(&self, r: Vec2) -> Vec2 {
+        self.vel + Vec2::cross_scalar(self.omega, r)
+    }
+
+    /// Apply an impulse `p` at world offset `r` from the COM.
+    #[inline]
+    pub fn apply_impulse(&mut self, p: Vec2, r: Vec2) {
+        self.vel += p * self.inv_mass;
+        self.omega += self.inv_inertia * r.cross(p);
+    }
+
+    /// The two capsule endpoints in world space (contact candidates).
+    pub fn endpoints(&self) -> [Vec2; 2] {
+        [self.world_point(v2(-self.half_len, 0.0)), self.world_point(v2(self.half_len, 0.0))]
+    }
+
+    /// Kinetic energy (for stability tests).
+    pub fn kinetic_energy(&self) -> f32 {
+        let m = if self.inv_mass > 0.0 { 1.0 / self.inv_mass } else { 0.0 };
+        let i = if self.inv_inertia > 0.0 { 1.0 / self.inv_inertia } else { 0.0 };
+        0.5 * m * self.vel.dot(self.vel) + 0.5 * i * self.omega * self.omega
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capsule_inertia_positive() {
+        let b = Body::capsule(2.0, 0.5, 0.05);
+        assert!(b.inv_mass > 0.0 && b.inv_inertia > 0.0);
+    }
+
+    #[test]
+    fn world_point_rotates() {
+        let mut b = Body::capsule(1.0, 1.0, 0.1);
+        b.pos = v2(5.0, 5.0);
+        b.angle = std::f32::consts::FRAC_PI_2;
+        let p = b.world_point(v2(1.0, 0.0));
+        assert!((p.x - 5.0).abs() < 1e-5 && (p.y - 6.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn impulse_changes_momentum() {
+        let mut b = Body::capsule(2.0, 0.5, 0.05);
+        b.apply_impulse(v2(4.0, 0.0), v2(0.0, 0.5));
+        assert!((b.vel.x - 2.0).abs() < 1e-6); // p/m
+        assert!(b.omega < 0.0); // r × p = (0,0.5)×(4,0) = -2
+    }
+
+    #[test]
+    fn endpoints_at_rest() {
+        let b = Body::capsule(1.0, 0.3, 0.05);
+        let [a, c] = b.endpoints();
+        assert!((a.x + 0.3).abs() < 1e-6);
+        assert!((c.x - 0.3).abs() < 1e-6);
+    }
+}

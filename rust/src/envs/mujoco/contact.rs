@@ -1,0 +1,179 @@
+//! Ground contact: each capsule endpoint is a contact candidate against
+//! the half-plane `y = 0`, resolved with non-penetration + Coulomb
+//! friction impulses (sequential impulses, Baumgarte position bias).
+
+use super::body::Body;
+use super::math::{v2, Vec2};
+
+/// Friction coefficient for the ground plane.
+pub const FRICTION: f32 = 1.0;
+/// Baumgarte factor for penetration correction.
+pub const BETA: f32 = 0.2;
+/// Penetration slop tolerated without correction.
+pub const SLOP: f32 = 0.005;
+
+/// One active contact point for the current substep.
+#[derive(Debug, Clone)]
+pub struct Contact {
+    pub body: usize,
+    /// Which capsule endpoint (0/1) — the warm-start matching key.
+    pub point: usize,
+    /// Offset from the body COM to the contact point (world frame).
+    pub r: Vec2,
+    /// Penetration depth (>= 0).
+    pub depth: f32,
+    /// Accumulated normal impulse.
+    pub jn: f32,
+    /// Accumulated tangent impulse.
+    pub jt: f32,
+    /// Velocity bias from Baumgarte.
+    pub bias: f32,
+}
+
+/// Collect ground contacts over all bodies' capsule endpoints. `prev` is
+/// last substep's contact set: persisting contacts inherit their
+/// accumulated impulses, which are immediately re-applied (warm start).
+pub fn collect(bodies: &mut [Body], inv_dt: f32, out: &mut Vec<Contact>, prev: &[Contact]) {
+    out.clear();
+    for i in 0..bodies.len() {
+        if bodies[i].inv_mass == 0.0 {
+            continue;
+        }
+        let (endpoints, radius, pos) = {
+            let b = &bodies[i];
+            (b.endpoints(), b.radius, b.pos)
+        };
+        for (k, p) in endpoints.into_iter().enumerate() {
+            let lowest = p.y - radius;
+            if lowest < 0.0 {
+                let depth = -lowest;
+                let contact_point = v2(p.x, 0.0);
+                let mut c = Contact {
+                    body: i,
+                    point: k,
+                    r: contact_point - pos,
+                    depth,
+                    jn: 0.0,
+                    jt: 0.0,
+                    // No Baumgarte velocity bias: penetration is fixed by
+                    // the positional pass (`correct_positions`), which
+                    // cannot inject kinetic energy.
+                    bias: 0.0,
+                };
+                let _ = inv_dt;
+                if let Some(old) = prev.iter().find(|o| o.body == i && o.point == k) {
+                    c.jn = old.jn;
+                    c.jt = old.jt;
+                    bodies[i].apply_impulse(v2(c.jt, c.jn), c.r);
+                }
+                out.push(c);
+            }
+        }
+    }
+}
+
+/// One velocity iteration over all contacts.
+pub fn solve(bodies: &mut [Body], contacts: &mut [Contact]) {
+    for c in contacts.iter_mut() {
+        let b = &mut bodies[c.body];
+        // normal (y) impulse with restitution-free non-penetration
+        let vn = b.velocity_at(c.r).y;
+        let k_n = b.inv_mass + b.inv_inertia * c.r.x * c.r.x;
+        if k_n > 0.0 {
+            let d_jn = -(vn - c.bias) / k_n;
+            let old = c.jn;
+            c.jn = (old + d_jn).max(0.0);
+            let applied = c.jn - old;
+            b.apply_impulse(v2(0.0, applied), c.r);
+        }
+        // tangent (x) friction impulse clamped by μ·jn
+        let vt = b.velocity_at(c.r).x;
+        let k_t = b.inv_mass + b.inv_inertia * c.r.y * c.r.y;
+        if k_t > 0.0 {
+            let d_jt = -vt / k_t;
+            let max_f = FRICTION * c.jn;
+            let old = c.jt;
+            c.jt = (old + d_jt).clamp(-max_f, max_f);
+            let applied = c.jt - old;
+            b.apply_impulse(v2(applied, 0.0), c.r);
+        }
+    }
+}
+
+/// One positional iteration: push penetrating endpoints out of the
+/// ground by moving positions/angles directly (pseudo-impulses).
+pub fn correct_positions(bodies: &mut [Body]) {
+    for i in 0..bodies.len() {
+        if bodies[i].inv_mass == 0.0 {
+            continue;
+        }
+        let (endpoints, radius, pos) = {
+            let b = &bodies[i];
+            (b.endpoints(), b.radius, b.pos)
+        };
+        for p in endpoints {
+            let depth = radius - p.y;
+            if depth > SLOP {
+                let r = v2(p.x, 0.0) - pos;
+                let b = &mut bodies[i];
+                let k_n = b.inv_mass + b.inv_inertia * r.x * r.x;
+                if k_n > 0.0 {
+                    let mag = (BETA * (depth - SLOP)).min(0.2) / k_n;
+                    b.pos.y += mag * b.inv_mass;
+                    b.angle += b.inv_inertia * r.cross(v2(0.0, mag));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_contact_above_ground() {
+        let mut b = Body::capsule(1.0, 0.5, 0.05);
+        b.pos = v2(0.0, 1.0);
+        let mut cs = vec![];
+        collect(&mut [b], 100.0, &mut cs, &[]);
+        assert!(cs.is_empty());
+    }
+
+    #[test]
+    fn penetrating_body_gets_contacts() {
+        let mut b = Body::capsule(1.0, 0.5, 0.05);
+        b.pos = v2(0.0, 0.02); // endpoints at y=0.02, radius 0.05 -> depth 0.03
+        let mut cs = vec![];
+        collect(&mut [b], 100.0, &mut cs, &[]);
+        assert_eq!(cs.len(), 2);
+        assert!((cs[0].depth - 0.03).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normal_impulse_stops_falling() {
+        let mut bodies = vec![Body::capsule(1.0, 0.5, 0.05)];
+        bodies[0].pos = v2(0.0, 0.03);
+        bodies[0].vel = v2(0.0, -3.0);
+        let mut cs = vec![];
+        collect(&mut bodies, 100.0, &mut cs, &[]);
+        for _ in 0..10 {
+            solve(&mut bodies, &mut cs);
+        }
+        assert!(bodies[0].vel.y >= -1e-3, "downward velocity removed, vy={}", bodies[0].vel.y);
+    }
+
+    #[test]
+    fn friction_damps_sliding() {
+        let mut bodies = vec![Body::capsule(1.0, 0.5, 0.05)];
+        bodies[0].pos = v2(0.0, 0.04);
+        bodies[0].vel = v2(2.0, -1.0);
+        let mut cs = vec![];
+        collect(&mut bodies, 100.0, &mut cs, &[]);
+        for _ in 0..10 {
+            solve(&mut bodies, &mut cs);
+        }
+        assert!(bodies[0].vel.x < 2.0, "friction should slow sliding");
+        assert!(bodies[0].vel.x >= 0.0, "friction cannot reverse motion");
+    }
+}

@@ -1,0 +1,250 @@
+//! The physics world: gravity, motors, joints, contacts, integration.
+//!
+//! Substep order (sequential impulses):
+//! 1. integrate external forces (gravity, motor torques) into velocities;
+//! 2. prepare constraints (anchors, Baumgarte biases, limit states);
+//! 3. iterate velocity constraints (joints + contacts);
+//! 4. integrate positions from the corrected velocities.
+
+use super::body::Body;
+use super::contact::{self, Contact};
+use super::joint::RevoluteJoint;
+
+/// Gravity (m/s², downward).
+pub const GRAVITY: f32 = 9.81;
+/// Velocity-constraint iterations per substep.
+pub const ITERATIONS: usize = 12;
+/// Position-correction iterations per substep.
+pub const POSITION_ITERATIONS: usize = 6;
+/// Baumgarte factor for joint position drift.
+pub const JOINT_BETA: f32 = 0.2;
+/// Linear/angular velocity damping rate (per second — joint friction /
+/// air drag stand-in).
+pub const DAMPING: f32 = 0.2;
+/// Hard velocity caps: a cheap, deterministic guard against solver
+/// blow-ups under adversarial torque sequences (MuJoCo bounds energy via
+/// implicit damping; we bound it explicitly).
+pub const MAX_SPEED: f32 = 40.0;
+/// Angular velocity cap (rad/s).
+pub const MAX_OMEGA: f32 = 60.0;
+
+/// An articulated rigid-body world over a flat ground plane.
+#[derive(Debug, Clone, Default)]
+pub struct World {
+    pub bodies: Vec<Body>,
+    pub joints: Vec<RevoluteJoint>,
+    contacts: Vec<Contact>,
+    prev_contacts: Vec<Contact>,
+}
+
+impl World {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a body, returning its index.
+    pub fn add_body(&mut self, b: Body) -> usize {
+        self.bodies.push(b);
+        self.bodies.len() - 1
+    }
+
+    /// Add a joint, returning its index.
+    pub fn add_joint(&mut self, j: RevoluteJoint) -> usize {
+        self.joints.push(j);
+        self.joints.len() - 1
+    }
+
+    /// Indices of actuated joints (gear > 0), in declaration order —
+    /// this is the action vector layout.
+    pub fn actuated(&self) -> Vec<usize> {
+        (0..self.joints.len()).filter(|&i| self.joints[i].gear > 0.0).collect()
+    }
+
+    /// Advance one substep of `dt` seconds with `ctrl` applied to the
+    /// actuated joints (in [`World::actuated`] order, values in [-1, 1]).
+    pub fn step(&mut self, dt: f32, ctrl: &[f32]) {
+        let inv_dt = 1.0 / dt;
+
+        // 1. external forces
+        let damp = 1.0 - DAMPING * dt;
+        for b in &mut self.bodies {
+            if b.inv_mass > 0.0 {
+                b.vel.y -= GRAVITY * dt;
+                // light damping keeps long chains from ringing
+                b.vel = b.vel * damp;
+                b.omega *= damp;
+            }
+        }
+        let mut ci = 0;
+        for j in &self.joints {
+            if j.gear > 0.0 {
+                let tau = ctrl.get(ci).copied().unwrap_or(0.0).clamp(-1.0, 1.0) * j.gear;
+                ci += 1;
+                let (a, b) = (j.body_a, j.body_b);
+                self.bodies[a].omega -= self.bodies[a].inv_inertia * tau * dt;
+                self.bodies[b].omega += self.bodies[b].inv_inertia * tau * dt;
+            }
+        }
+
+        // 2. prepare constraints (+ warm start from last substep)
+        for j in &mut self.joints {
+            j.prepare(&mut self.bodies, inv_dt, JOINT_BETA);
+        }
+        std::mem::swap(&mut self.contacts, &mut self.prev_contacts);
+        contact::collect(&mut self.bodies, inv_dt, &mut self.contacts, &self.prev_contacts);
+
+        // 3. velocity iterations
+        for _ in 0..ITERATIONS {
+            for j in &mut self.joints {
+                j.solve_velocity(&mut self.bodies);
+            }
+            contact::solve(&mut self.bodies, &mut self.contacts);
+        }
+
+        // 4. clamp + integrate positions
+        for b in &mut self.bodies {
+            let sp = b.vel.len();
+            if sp > MAX_SPEED {
+                b.vel = b.vel * (MAX_SPEED / sp);
+            }
+            b.omega = b.omega.clamp(-MAX_OMEGA, MAX_OMEGA);
+            b.pos += b.vel * dt;
+            b.angle += b.omega * dt;
+        }
+
+        // 5. split position correction (nonlinear Gauss-Seidel): removes
+        // joint drift, limit violation and ground penetration without
+        // touching momenta.
+        for _ in 0..POSITION_ITERATIONS {
+            let mut worst = 0.0f32;
+            for j in &self.joints {
+                worst = worst.max(j.solve_position(&mut self.bodies, JOINT_BETA));
+            }
+            contact::correct_positions(&mut self.bodies);
+            if worst < 5e-4 {
+                break;
+            }
+        }
+    }
+
+    /// Total kinetic energy (stability probes in tests).
+    pub fn kinetic_energy(&self) -> f32 {
+        self.bodies.iter().map(|b| b.kinetic_energy()).sum()
+    }
+
+    /// Any non-finite state anywhere?
+    pub fn is_bad(&self) -> bool {
+        self.bodies.iter().any(|b| {
+            b.pos.is_bad() || b.vel.is_bad() || !b.angle.is_finite() || !b.omega.is_finite()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::mujoco::math::v2;
+
+    #[test]
+    fn free_fall_matches_gravity() {
+        let mut w = World::new();
+        let mut b = Body::capsule(1.0, 0.2, 0.05);
+        b.pos = v2(0.0, 10.0);
+        w.add_body(b);
+        let dt = 0.01;
+        for _ in 0..100 {
+            w.step(dt, &[]);
+        }
+        // ~1s of fall: v ≈ g·t (damping makes it slightly less), y ≈ 10 - g t²/2
+        let v = w.bodies[0].vel.y;
+        assert!(v < -7.5 && v > -10.5, "fall speed {v}");
+        assert!(w.bodies[0].pos.y < 6.5);
+    }
+
+    #[test]
+    fn resting_on_ground_is_stable() {
+        let mut w = World::new();
+        let mut b = Body::capsule(1.0, 0.5, 0.05);
+        b.pos = v2(0.0, 0.05);
+        w.add_body(b);
+        for _ in 0..500 {
+            w.step(0.01, &[]);
+        }
+        assert!(!w.is_bad());
+        let y = w.bodies[0].pos.y;
+        assert!(y > 0.0 && y < 0.12, "should rest near radius height, y={y}");
+        assert!(w.kinetic_energy() < 0.05, "ke={}", w.kinetic_energy());
+    }
+
+    #[test]
+    fn pendulum_swings_and_conserves_roughly() {
+        // static anchor body + swinging rod
+        let mut w = World::new();
+        let mut anchor = Body::capsule(1.0, 0.05, 0.01);
+        anchor.inv_mass = 0.0;
+        anchor.inv_inertia = 0.0;
+        anchor.pos = v2(0.0, 2.0);
+        let a = w.add_body(anchor);
+        let mut rod = Body::capsule(1.0, 0.5, 0.02);
+        rod.pos = v2(0.5, 2.0); // horizontal, hinged at (0,2)
+        let r = w.add_body(rod);
+        w.add_joint(RevoluteJoint::new(a, r, v2(0.0, 0.0), v2(-0.5, 0.0)));
+        let mut min_y = f32::INFINITY;
+        for _ in 0..200 {
+            w.step(0.005, &[]);
+            min_y = min_y.min(w.bodies[r].pos.y);
+            // hinge must not drift: rod anchor stays near (0,2)
+            let anchor_pt = w.bodies[r].world_point(v2(-0.5, 0.0));
+            assert!((anchor_pt - v2(0.0, 2.0)).len() < 0.12, "hinge drift {anchor_pt:?}");
+        }
+        assert!(min_y < 1.7, "rod should swing down, min_y={min_y}");
+        assert!(!w.is_bad());
+    }
+
+    #[test]
+    fn motor_torque_spins_joint() {
+        let mut w = World::new();
+        let mut anchor = Body::capsule(1.0, 0.05, 0.01);
+        anchor.inv_mass = 0.0;
+        anchor.inv_inertia = 0.0;
+        anchor.pos = v2(0.0, 5.0);
+        let a = w.add_body(anchor);
+        let mut rod = Body::capsule(0.5, 0.3, 0.02);
+        rod.pos = v2(0.3, 5.0);
+        let r = w.add_body(rod);
+        w.add_joint(RevoluteJoint::new(a, r, v2(0.0, 0.0), v2(-0.3, 0.0)).with_gear(5.0));
+        for _ in 0..50 {
+            w.step(0.01, &[1.0]);
+        }
+        assert!(w.bodies[r].omega > 0.5, "motor should spin the rod, omega={}", w.bodies[r].omega);
+    }
+
+    #[test]
+    fn random_torques_never_nan() {
+        use crate::rng::Pcg32;
+        let mut w = World::new();
+        // small chain: 3 links
+        let mut prev = {
+            let mut b = Body::capsule(2.0, 0.3, 0.05);
+            b.pos = v2(0.0, 1.0);
+            w.add_body(b)
+        };
+        for i in 1..3 {
+            let mut b = Body::capsule(1.0, 0.3, 0.05);
+            b.pos = v2(0.6 * i as f32, 1.0);
+            let idx = w.add_body(b);
+            w.add_joint(
+                RevoluteJoint::new(prev, idx, v2(0.3, 0.0), v2(-0.3, 0.0))
+                    .with_limit(-1.0, 1.0)
+                    .with_gear(10.0),
+            );
+            prev = idx;
+        }
+        let mut rng = Pcg32::new(99, 0);
+        for _ in 0..2000 {
+            let ctrl = [rng.range(-1.0, 1.0), rng.range(-1.0, 1.0)];
+            w.step(0.01, &ctrl);
+            assert!(!w.is_bad(), "physics exploded");
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Revolute joints with angle limits and torque motors, solved with
+//! sequential impulses (Box2D-lite style point-to-point constraint plus
+//! an angular limit constraint).
+
+use super::body::Body;
+use super::math::{solve22, Vec2};
+
+/// A revolute (hinge) joint pinning a point of body `a` to a point of
+/// body `b`, with optional relative-angle limits and a torque motor.
+#[derive(Debug, Clone)]
+pub struct RevoluteJoint {
+    pub body_a: usize,
+    pub body_b: usize,
+    /// Anchor in body a's local frame.
+    pub local_anchor_a: Vec2,
+    /// Anchor in body b's local frame.
+    pub local_anchor_b: Vec2,
+    /// Relative-angle limits `(lo, hi)` about the reference angle.
+    pub limit: Option<(f32, f32)>,
+    /// Rest relative angle (`angle_b - angle_a` at assembly).
+    pub ref_angle: f32,
+    /// Motor torque scale (N·m per unit action); 0 disables the motor.
+    pub gear: f32,
+    // --- solver scratch (per-step warm-start state) ---
+    pub(crate) r_a: Vec2,
+    pub(crate) r_b: Vec2,
+    pub(crate) bias: Vec2,
+    pub(crate) impulse: Vec2,
+    pub(crate) limit_impulse: f32,
+    pub(crate) limit_bias: f32,
+    pub(crate) limit_state: LimitState,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum LimitState {
+    Inactive,
+    AtLower,
+    AtUpper,
+}
+
+impl RevoluteJoint {
+    pub fn new(body_a: usize, body_b: usize, local_anchor_a: Vec2, local_anchor_b: Vec2) -> Self {
+        RevoluteJoint {
+            body_a,
+            body_b,
+            local_anchor_a,
+            local_anchor_b,
+            limit: None,
+            ref_angle: 0.0,
+            gear: 0.0,
+            r_a: Vec2::ZERO,
+            r_b: Vec2::ZERO,
+            bias: Vec2::ZERO,
+            impulse: Vec2::ZERO,
+            limit_impulse: 0.0,
+            limit_bias: 0.0,
+            limit_state: LimitState::Inactive,
+        }
+    }
+
+    pub fn with_limit(mut self, lo: f32, hi: f32) -> Self {
+        self.limit = Some((lo, hi));
+        self
+    }
+
+    pub fn with_gear(mut self, gear: f32) -> Self {
+        self.gear = gear;
+        self
+    }
+
+    /// Relative joint angle about the reference configuration.
+    #[inline]
+    pub fn angle(&self, bodies: &[Body]) -> f32 {
+        bodies[self.body_b].angle - bodies[self.body_a].angle - self.ref_angle
+    }
+
+    /// Relative joint angular velocity.
+    #[inline]
+    pub fn speed(&self, bodies: &[Body]) -> f32 {
+        bodies[self.body_b].omega - bodies[self.body_a].omega
+    }
+
+    /// Precompute anchors and Baumgarte bias for this substep, then
+    /// warm-start: re-apply last substep's accumulated impulses so the
+    /// iterative solver starts near the converged solution (Box2D-style;
+    /// without this, long chains under gravity never converge in a
+    /// bounded iteration budget).
+    pub(crate) fn prepare(&mut self, bodies: &mut [Body], _inv_dt: f32, _beta: f32) {
+        let (a, b) = (&bodies[self.body_a], &bodies[self.body_b]);
+        self.r_a = self.local_anchor_a.rotate(a.angle);
+        self.r_b = self.local_anchor_b.rotate(b.angle);
+        // Positional drift is corrected by the split position pass
+        // (`solve_position`), NOT a velocity bias — Baumgarte bias injects
+        // kinetic energy and made resting stacks vibrate.
+        self.bias = Vec2::ZERO;
+        self.limit_bias = 0.0;
+        self.limit_state = match self.limit {
+            None => LimitState::Inactive,
+            Some((lo, hi)) => {
+                let ang = self.angle(bodies);
+                if ang <= lo {
+                    LimitState::AtLower
+                } else if ang >= hi {
+                    LimitState::AtUpper
+                } else {
+                    LimitState::Inactive
+                }
+            }
+        };
+        // warm start from the previous substep's accumulated impulses
+        if self.limit_state == LimitState::Inactive {
+            self.limit_impulse = 0.0;
+        }
+        let p = self.impulse;
+        let (ia, ib) = (self.body_a, self.body_b);
+        let (ra, rb) = (self.r_a, self.r_b);
+        bodies[ia].apply_impulse(-p, ra);
+        bodies[ib].apply_impulse(p, rb);
+        let li = self.limit_impulse;
+        bodies[ia].omega -= bodies[ia].inv_inertia * li;
+        bodies[ib].omega += bodies[ib].inv_inertia * li;
+    }
+
+    /// One velocity iteration: point constraint + angle limit.
+    pub(crate) fn solve_velocity(&mut self, bodies: &mut [Body]) {
+        let (ia, ib) = (self.body_a, self.body_b);
+        // angular limit first (touches only omega)
+        if self.limit_state != LimitState::Inactive {
+            let rel = bodies[ib].omega - bodies[ia].omega - self.limit_bias;
+            let inv_k = bodies[ia].inv_inertia + bodies[ib].inv_inertia;
+            if inv_k > 0.0 {
+                let mut imp = -rel / inv_k;
+                // clamp accumulated impulse by limit side
+                let old = self.limit_impulse;
+                match self.limit_state {
+                    LimitState::AtLower => {
+                        self.limit_impulse = (old + imp).max(0.0);
+                    }
+                    LimitState::AtUpper => {
+                        self.limit_impulse = (old + imp).min(0.0);
+                    }
+                    LimitState::Inactive => unreachable!(),
+                }
+                imp = self.limit_impulse - old;
+                bodies[ia].omega -= bodies[ia].inv_inertia * imp;
+                bodies[ib].omega += bodies[ib].inv_inertia * imp;
+            }
+        }
+
+        // point-to-point constraint
+        let (ma, ia_inv) = (bodies[ia].inv_mass, bodies[ia].inv_inertia);
+        let (mb, ib_inv) = (bodies[ib].inv_mass, bodies[ib].inv_inertia);
+        let (ra, rb) = (self.r_a, self.r_b);
+        let k11 = ma + mb + ia_inv * ra.y * ra.y + ib_inv * rb.y * rb.y;
+        let k12 = -ia_inv * ra.x * ra.y - ib_inv * rb.x * rb.y;
+        let k22 = ma + mb + ia_inv * ra.x * ra.x + ib_inv * rb.x * rb.x;
+
+        let va = bodies[ia].velocity_at(ra);
+        let vb = bodies[ib].velocity_at(rb);
+        let c_dot = vb - va + self.bias;
+        let p = solve22(k11, k12, k22, -c_dot);
+        self.impulse += p;
+
+        let pa = -p;
+        bodies[ia].apply_impulse(pa, ra);
+        bodies[ib].apply_impulse(p, rb);
+    }
+
+    /// One nonlinear Gauss-Seidel *position* iteration: moves
+    /// positions/angles directly (no momentum change) to remove anchor
+    /// separation and limit violation. Returns the anchor error length.
+    pub(crate) fn solve_position(&self, bodies: &mut [Body], beta: f32) -> f32 {
+        let (ia, ib) = (self.body_a, self.body_b);
+
+        // angular limit positional pushback
+        if let Some((lo, hi)) = self.limit {
+            let ang = self.angle(bodies);
+            let viol = if ang < lo {
+                ang - lo // negative
+            } else if ang > hi {
+                ang - hi // positive
+            } else {
+                0.0
+            };
+            if viol != 0.0 {
+                let inv_k = bodies[ia].inv_inertia + bodies[ib].inv_inertia;
+                if inv_k > 0.0 {
+                    let corr = (-beta * viol).clamp(-0.2, 0.2) / inv_k;
+                    bodies[ia].angle -= bodies[ia].inv_inertia * corr;
+                    bodies[ib].angle += bodies[ib].inv_inertia * corr;
+                }
+            }
+        }
+
+        // point-to-point positional correction
+        let ra = self.local_anchor_a.rotate(bodies[ia].angle);
+        let rb = self.local_anchor_b.rotate(bodies[ib].angle);
+        let err = (bodies[ib].pos + rb) - (bodies[ia].pos + ra);
+        let elen = err.len();
+        if elen > 1e-6 {
+            let (ma, ia_inv) = (bodies[ia].inv_mass, bodies[ia].inv_inertia);
+            let (mb, ib_inv) = (bodies[ib].inv_mass, bodies[ib].inv_inertia);
+            let k11 = ma + mb + ia_inv * ra.y * ra.y + ib_inv * rb.y * rb.y;
+            let k12 = -ia_inv * ra.x * ra.y - ib_inv * rb.x * rb.y;
+            let k22 = ma + mb + ia_inv * ra.x * ra.x + ib_inv * rb.x * rb.x;
+            let mut corr = err * beta;
+            let clen = corr.len();
+            if clen > 0.2 {
+                corr = corr * (0.2 / clen);
+            }
+            let p = solve22(k11, k12, k22, -corr);
+            // pseudo-impulse: applied to positions, not velocities
+            bodies[ia].pos += p * -ma;
+            bodies[ia].angle -= ia_inv * ra.cross(p);
+            bodies[ib].pos += p * mb;
+            bodies[ib].angle += ib_inv * rb.cross(p);
+        }
+        elen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::mujoco::math::v2;
+
+    fn two_bodies() -> Vec<Body> {
+        let mut a = Body::capsule(1.0, 0.5, 0.05);
+        let mut b = Body::capsule(1.0, 0.5, 0.05);
+        a.pos = v2(0.0, 0.0);
+        b.pos = v2(1.0, 0.0); // joined at (0.5, 0)
+        vec![a, b]
+    }
+
+    #[test]
+    fn joint_angle_zero_at_assembly() {
+        let bodies = two_bodies();
+        let j = RevoluteJoint::new(0, 1, v2(0.5, 0.0), v2(-0.5, 0.0));
+        assert_eq!(j.angle(&bodies), 0.0);
+        assert_eq!(j.speed(&bodies), 0.0);
+    }
+
+    #[test]
+    fn velocity_constraint_removes_relative_anchor_velocity() {
+        let mut bodies = two_bodies();
+        bodies[1].vel = v2(0.0, 2.0); // b moving away vertically
+        let mut j = RevoluteJoint::new(0, 1, v2(0.5, 0.0), v2(-0.5, 0.0));
+        j.prepare(&mut bodies, 100.0, 0.0); // no bias: pure velocity solve
+        for _ in 0..20 {
+            j.solve_velocity(&mut bodies);
+        }
+        let va = bodies[0].velocity_at(j.r_a);
+        let vb = bodies[1].velocity_at(j.r_b);
+        let rel = vb - va;
+        assert!(rel.len() < 1e-3, "anchor velocities should match, rel={rel:?}");
+    }
+
+    #[test]
+    fn limit_resists_exceeding() {
+        let mut bodies = two_bodies();
+        bodies[1].omega = 5.0; // spinning past upper limit
+        bodies[1].angle = 0.6;
+        let mut j = RevoluteJoint::new(0, 1, v2(0.5, 0.0), v2(-0.5, 0.0)).with_limit(-0.5, 0.5);
+        j.prepare(&mut bodies, 100.0, 0.0);
+        assert_eq!(j.limit_state, LimitState::AtUpper);
+        for _ in 0..10 {
+            j.solve_velocity(&mut bodies);
+        }
+        assert!(
+            bodies[1].omega - bodies[0].omega <= 1e-3,
+            "limit must stop further opening"
+        );
+    }
+}

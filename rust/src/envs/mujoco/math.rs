@@ -1,0 +1,147 @@
+//! 2-D vector math for the physics engine.
+
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+/// A 2-D vector.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec2 {
+    pub x: f32,
+    pub y: f32,
+}
+
+/// Construct a [`Vec2`].
+#[inline]
+pub const fn v2(x: f32, y: f32) -> Vec2 {
+    Vec2 { x, y }
+}
+
+impl Vec2 {
+    pub const ZERO: Vec2 = v2(0.0, 0.0);
+
+    #[inline]
+    pub fn dot(self, o: Vec2) -> f32 {
+        self.x * o.x + self.y * o.y
+    }
+
+    /// 2-D cross product (scalar z-component).
+    #[inline]
+    pub fn cross(self, o: Vec2) -> f32 {
+        self.x * o.y - self.y * o.x
+    }
+
+    /// Cross of a scalar angular velocity with a vector: `w × r`.
+    #[inline]
+    pub fn cross_scalar(w: f32, r: Vec2) -> Vec2 {
+        v2(-w * r.y, w * r.x)
+    }
+
+    #[inline]
+    pub fn len(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+
+    /// Rotate by angle `a` (radians).
+    #[inline]
+    pub fn rotate(self, a: f32) -> Vec2 {
+        let (s, c) = a.sin_cos();
+        v2(c * self.x - s * self.y, s * self.x + c * self.y)
+    }
+
+    /// Perpendicular (rotate +90°).
+    #[inline]
+    pub fn perp(self) -> Vec2 {
+        v2(-self.y, self.x)
+    }
+
+    /// Any component non-finite?
+    #[inline]
+    pub fn is_bad(self) -> bool {
+        !self.x.is_finite() || !self.y.is_finite()
+    }
+}
+
+impl Add for Vec2 {
+    type Output = Vec2;
+    #[inline]
+    fn add(self, o: Vec2) -> Vec2 {
+        v2(self.x + o.x, self.y + o.y)
+    }
+}
+
+impl AddAssign for Vec2 {
+    #[inline]
+    fn add_assign(&mut self, o: Vec2) {
+        self.x += o.x;
+        self.y += o.y;
+    }
+}
+
+impl Sub for Vec2 {
+    type Output = Vec2;
+    #[inline]
+    fn sub(self, o: Vec2) -> Vec2 {
+        v2(self.x - o.x, self.y - o.y)
+    }
+}
+
+impl Mul<f32> for Vec2 {
+    type Output = Vec2;
+    #[inline]
+    fn mul(self, s: f32) -> Vec2 {
+        v2(self.x * s, self.y * s)
+    }
+}
+
+impl Neg for Vec2 {
+    type Output = Vec2;
+    #[inline]
+    fn neg(self) -> Vec2 {
+        v2(-self.x, -self.y)
+    }
+}
+
+/// Symmetric 2×2 matrix solve for the joint effective-mass system.
+/// Solves `K x = b` where `K = [[k11, k12], [k12, k22]]`.
+#[inline]
+pub fn solve22(k11: f32, k12: f32, k22: f32, b: Vec2) -> Vec2 {
+    let det = k11 * k22 - k12 * k12;
+    if det.abs() < 1e-12 {
+        return Vec2::ZERO;
+    }
+    let inv = 1.0 / det;
+    v2(inv * (k22 * b.x - k12 * b.y), inv * (k11 * b.y - k12 * b.x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotate_quarter_turn() {
+        let r = v2(1.0, 0.0).rotate(std::f32::consts::FRAC_PI_2);
+        assert!((r.x).abs() < 1e-6 && (r.y - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_identities() {
+        let a = v2(3.0, 4.0);
+        assert_eq!(a.cross(a), 0.0);
+        let w = 2.0;
+        let r = v2(1.0, 0.0);
+        let wr = Vec2::cross_scalar(w, r);
+        assert_eq!(wr, v2(0.0, 2.0));
+    }
+
+    #[test]
+    fn solve22_recovers_solution() {
+        // K = [[4,1],[1,3]], x = (1,2) => b = (6,7)
+        let x = solve22(4.0, 1.0, 3.0, v2(6.0, 7.0));
+        assert!((x.x - 1.0).abs() < 1e-5);
+        assert!((x.y - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn solve22_singular_returns_zero() {
+        assert_eq!(solve22(1.0, 1.0, 1.0, v2(1.0, 1.0)), Vec2::ZERO);
+    }
+}

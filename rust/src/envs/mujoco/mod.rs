@@ -1,0 +1,28 @@
+//! Planar articulated rigid-body physics (MuJoCo substitute).
+//!
+//! MuJoCo itself is unavailable; what the paper's benchmarks exercise is
+//! the *cost profile* of an articulated-dynamics engine stepped
+//! `frame_skip = 5` times per env step. This module implements a planar
+//! (2-D) rigid-body engine in the Box2D-lite style: capsule links,
+//! revolute joints with limits and torque motors, ground contact with
+//! friction, all solved with sequential impulses + Baumgarte
+//! stabilization. On top of it, [`models`] defines Hopper, HalfCheetah
+//! and a planar Ant-like quadruped, and [`walker`] exposes them with
+//! Gym-MuJoCo observation/reward conventions (forward-velocity reward,
+//! control cost, healthy termination).
+
+pub mod math;
+pub mod body;
+pub mod joint;
+pub mod contact;
+pub mod dynamics;
+pub mod models;
+pub mod walker;
+
+pub use dynamics::World;
+pub use walker::WalkerEnv;
+
+/// Physics substep length (s). `frame_skip` substeps per env step.
+pub const DT: f32 = 0.01;
+/// Gym-MuJoCo-style frame skip.
+pub const FRAME_SKIP: usize = 5;

@@ -1,0 +1,232 @@
+//! Articulated walker models: Hopper, HalfCheetah, and a planar
+//! Ant-like quadruped, assembled from capsule links + revolute joints.
+//!
+//! Dimensions loosely follow the Gym MuJoCo models scaled to our planar
+//! engine; observation layouts match Gym where the planar reduction
+//! allows (Hopper: 11 dims, HalfCheetah: 17 dims — both as in Gym).
+
+use super::body::Body;
+use super::dynamics::World;
+use super::joint::RevoluteJoint;
+use super::math::{v2, Vec2};
+
+/// A built model plus its task constants.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub world: World,
+    /// Index of the torso body (reward/termination reference).
+    pub torso: usize,
+    /// Healthy torso-height range; episode terminates outside it.
+    pub healthy_z: Option<(f32, f32)>,
+    /// Max torso-angle deviation from the initial pose before termination.
+    pub healthy_angle_dev: Option<f32>,
+    /// Control cost weight.
+    pub ctrl_cost: f32,
+    /// Alive bonus per step.
+    pub healthy_reward: f32,
+    /// Forward-velocity reward weight.
+    pub forward_weight: f32,
+    /// Initial torso angle (healthy deviation is measured against this).
+    pub init_angle: f32,
+}
+
+/// Connect `b` to `a` with a revolute joint whose rest relative angle is
+/// the assembly pose, so `joint.angle() == 0` at build time.
+fn connect(
+    w: &mut World,
+    a: usize,
+    b: usize,
+    anchor_a: Vec2,
+    anchor_b: Vec2,
+    limit: (f32, f32),
+    gear: f32,
+) {
+    let ref_angle = w.bodies[b].angle - w.bodies[a].angle;
+    let mut j = RevoluteJoint::new(a, b, anchor_a, anchor_b)
+        .with_limit(limit.0, limit.1)
+        .with_gear(gear);
+    j.ref_angle = ref_angle;
+    w.add_joint(j);
+}
+
+/// Place a capsule with its *top* endpoint at `top`, hanging straight
+/// down (angle −π/2 so local +x points down). Returns the body index.
+fn hang(w: &mut World, top: Vec2, mass: f32, half: f32, radius: f32) -> usize {
+    let mut b = Body::capsule(mass, half, radius);
+    b.angle = -std::f32::consts::FRAC_PI_2;
+    b.pos = top + v2(0.0, -half);
+    w.add_body(b)
+}
+
+/// Hopper: vertical torso, thigh, leg, horizontal foot; 3 actuated
+/// joints. Gym Hopper analog (obs dim 11).
+pub fn hopper() -> Model {
+    let mut w = World::new();
+
+    // torso: vertical capsule, spans y 0.85..1.25
+    let mut torso = Body::capsule(3.6, 0.2, 0.05);
+    torso.angle = std::f32::consts::FRAC_PI_2; // +x up
+    torso.pos = v2(0.0, 1.05);
+    let torso = w.add_body(torso);
+
+    let thigh = hang(&mut w, v2(0.0, 0.85), 1.8, 0.2, 0.05); // 0.85..0.45
+    let leg = hang(&mut w, v2(0.0, 0.45), 1.2, 0.2, 0.04); // 0.45..0.05
+    let mut foot_b = Body::capsule(1.0, 0.13, 0.045);
+    foot_b.pos = v2(0.06, 0.05);
+    let foot = w.add_body(foot_b);
+
+    // torso bottom is local (-0.2, 0) because +x is up. Limits are kept
+    // tight enough that the chain cannot fold flat — the standing pose is
+    // passively metastable, as the Gym hopper's is over short horizons.
+    connect(&mut w, torso, thigh, v2(-0.2, 0.0), v2(-0.2, 0.0), (-0.7, 0.7), 6.0);
+    connect(&mut w, thigh, leg, v2(0.2, 0.0), v2(-0.2, 0.0), (-0.7, 0.7), 4.0);
+    // heel: foot local anchor back end
+    connect(&mut w, leg, foot, v2(0.2, 0.0), v2(-0.06, 0.0), (-0.4, 0.4), 2.5);
+
+    Model {
+        world: w,
+        torso,
+        healthy_z: Some((0.5, 2.0)),
+        healthy_angle_dev: Some(0.5),
+        ctrl_cost: 1e-3,
+        healthy_reward: 1.0,
+        forward_weight: 1.0,
+        init_angle: std::f32::consts::FRAC_PI_2,
+    }
+}
+
+/// HalfCheetah: horizontal torso with back and front legs of
+/// thigh/shin/foot each; 6 actuated joints (obs dim 17).
+pub fn half_cheetah() -> Model {
+    let mut w = World::new();
+
+    let mut torso = Body::capsule(6.0, 0.5, 0.05);
+    torso.pos = v2(0.0, 0.62);
+    let torso = w.add_body(torso);
+
+    let mut legs = Vec::new();
+    for (side, sign) in [(-0.5f32, -1.0f32), (0.5, 1.0)] {
+        let hip = v2(side, 0.62);
+        let thigh = hang(&mut w, hip, 1.5, 0.15, 0.045); // 0.62..0.32
+        let shin = hang(&mut w, hip + v2(0.0, -0.3), 1.2, 0.15, 0.04); // 0.32..0.02
+        let mut foot_b = Body::capsule(0.8, 0.09, 0.04);
+        foot_b.pos = hip + v2(sign * 0.07, -0.6);
+        let foot = w.add_body(foot_b);
+
+        connect(&mut w, torso, thigh, v2(side, 0.0), v2(-0.15, 0.0), (-0.6, 0.6), 6.0);
+        connect(&mut w, thigh, shin, v2(0.15, 0.0), v2(-0.15, 0.0), (-0.7, 0.7), 4.5);
+        connect(&mut w, shin, foot, v2(0.15, 0.0), v2(sign * -0.07, 0.0), (-0.4, 0.4), 3.0);
+        legs.push((thigh, shin, foot));
+    }
+
+    Model {
+        world: w,
+        torso,
+        healthy_z: None, // cheetah never terminates
+        healthy_angle_dev: None,
+        ctrl_cost: 0.1,
+        healthy_reward: 0.0,
+        forward_weight: 1.0,
+        init_angle: 0.0,
+    }
+}
+
+/// Planar Ant-like quadruped: horizontal torso, four two-segment legs;
+/// 8 actuated joints (obs dim 21). The paper's Ant is 3-D; this is the
+/// planar reduction with matching joint count per side profile
+/// (DESIGN.md §2).
+pub fn ant() -> Model {
+    let mut w = World::new();
+
+    let mut torso = Body::capsule(5.0, 0.35, 0.08);
+    torso.pos = v2(0.0, 0.72);
+    let torso = w.add_body(torso);
+
+    for hip_x in [-0.35f32, -0.12, 0.12, 0.35] {
+        let hip = v2(hip_x, 0.72);
+        let upper = hang(&mut w, hip, 1.0, 0.16, 0.045); // 0.72..0.40
+        let lower = hang(&mut w, hip + v2(0.0, -0.32), 0.8, 0.18, 0.04); // 0.40..0.04
+        connect(&mut w, torso, upper, v2(hip_x, 0.0), v2(-0.16, 0.0), (-0.6, 0.6), 5.0);
+        connect(&mut w, upper, lower, v2(0.16, 0.0), v2(-0.18, 0.0), (-0.7, 0.3), 4.0);
+    }
+
+    Model {
+        world: w,
+        torso,
+        healthy_z: Some((0.3, 1.4)),
+        healthy_angle_dev: Some(1.0),
+        ctrl_cost: 0.5,
+        healthy_reward: 1.0,
+        forward_weight: 1.0,
+        init_angle: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn settle(m: &mut Model, steps: usize) {
+        let n = m.world.actuated().len();
+        let zeros = vec![0.0f32; n];
+        for _ in 0..steps {
+            m.world.step(super::super::DT, &zeros);
+        }
+    }
+
+    #[test]
+    fn hopper_has_3_actuators_and_stands() {
+        let mut m = hopper();
+        assert_eq!(m.world.actuated().len(), 3);
+        settle(&mut m, 150);
+        assert!(!m.world.is_bad());
+        let z = m.world.bodies[m.torso].pos.y;
+        // the passive hopper is an inverted pendulum: it must still be
+        // upright after 1.5 s (it tips over around ~2.5 s, as expected)
+        assert!(z > 0.8, "hopper should still stand at 1.5s, z={z}");
+    }
+
+    #[test]
+    fn cheetah_has_6_actuators_and_is_stable() {
+        let mut m = half_cheetah();
+        assert_eq!(m.world.actuated().len(), 6);
+        settle(&mut m, 500);
+        assert!(!m.world.is_bad());
+        let z = m.world.bodies[m.torso].pos.y;
+        assert!(z > 0.15 && z < 1.0, "torso at sane height, z={z}");
+    }
+
+    #[test]
+    fn ant_has_8_actuators_and_is_stable() {
+        let mut m = ant();
+        assert_eq!(m.world.actuated().len(), 8);
+        settle(&mut m, 500);
+        assert!(!m.world.is_bad());
+        let z = m.world.bodies[m.torso].pos.y;
+        assert!(z > 0.2, "ant torso should stay up, z={z}");
+    }
+
+    #[test]
+    fn joints_start_at_zero_angle() {
+        for m in [hopper(), half_cheetah(), ant()] {
+            for j in &m.world.joints {
+                let a = j.angle(&m.world.bodies);
+                assert!(a.abs() < 1e-5, "assembly joint angle {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_control_never_nan() {
+        use crate::rng::Pcg32;
+        let mut rng = Pcg32::new(123, 0);
+        for mut m in [hopper(), half_cheetah(), ant()] {
+            let n = m.world.actuated().len();
+            for _ in 0..1500 {
+                let ctrl: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+                m.world.step(super::super::DT, &ctrl);
+                assert!(!m.world.is_bad());
+            }
+        }
+    }
+}

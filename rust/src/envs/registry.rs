@@ -1,0 +1,85 @@
+//! Task registry: `make_env("Pong-v5", seed, env_id)` — the Rust analog
+//! of `envpool.make(task_id, ...)`. Every supported task id is listed in
+//! [`ALL_TASKS`]; specs are obtainable without constructing an env.
+
+use super::atari::preproc;
+use super::classic::{Acrobot, CartPole, MountainCar, Pendulum};
+use super::dmc::CheetahRun;
+use super::env::Env;
+use super::mujoco::walker::{Task, WalkerEnv};
+use super::spec::EnvSpec;
+use crate::{Error, Result};
+
+/// Every registered task id.
+pub const ALL_TASKS: &[&str] = &[
+    "CartPole-v1",
+    "MountainCar-v0",
+    "Pendulum-v1",
+    "Acrobot-v1",
+    "Pong-v5",
+    "Breakout-v5",
+    "Hopper-v4",
+    "HalfCheetah-v4",
+    "Ant-v4",
+    "cheetah_run",
+];
+
+/// Construct an environment by task id. `seed` is the experiment seed;
+/// `env_id` is the instance index within a pool (each instance gets an
+/// independent RNG stream, making pool runs scheduling-invariant).
+pub fn make_env(task_id: &str, seed: u64, env_id: u64) -> Result<Box<dyn Env>> {
+    Ok(match task_id {
+        "CartPole-v1" => Box::new(CartPole::new(seed, env_id)),
+        "MountainCar-v0" => Box::new(MountainCar::new(seed, env_id)),
+        "Pendulum-v1" => Box::new(Pendulum::new(seed, env_id)),
+        "Acrobot-v1" => Box::new(Acrobot::new(seed, env_id)),
+        "Pong-v5" => Box::new(preproc::pong(seed, env_id)),
+        "Breakout-v5" => Box::new(preproc::breakout(seed, env_id)),
+        "Hopper-v4" => Box::new(WalkerEnv::new(Task::Hopper, seed, env_id)),
+        "HalfCheetah-v4" => Box::new(WalkerEnv::new(Task::HalfCheetah, seed, env_id)),
+        "Ant-v4" => Box::new(WalkerEnv::new(Task::Ant, seed, env_id)),
+        "cheetah_run" => Box::new(CheetahRun::new(seed, env_id)),
+        other => return Err(Error::UnknownEnv(other.to_string())),
+    })
+}
+
+/// Fetch the spec of a task without keeping the env.
+pub fn spec_for(task_id: &str) -> Result<EnvSpec> {
+    Ok(make_env(task_id, 0, 0)?.spec().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_construct_and_step() {
+        for &task in ALL_TASKS {
+            let mut env = make_env(task, 0, 0).unwrap();
+            let dim = env.spec().obs_dim();
+            let adim = env.spec().action_space.dim();
+            let mut obs = vec![0.0f32; dim];
+            env.reset(&mut obs);
+            let action = vec![0.0f32; adim];
+            for _ in 0..3 {
+                let s = env.step(&action, &mut obs);
+                assert!(s.reward.is_finite(), "{task}");
+                assert!(obs.iter().all(|x| x.is_finite()), "{task}");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_task_errors() {
+        assert!(matches!(make_env("Doom-v0", 0, 0), Err(Error::UnknownEnv(_))));
+    }
+
+    #[test]
+    fn spec_matches_env() {
+        for &task in ALL_TASKS {
+            let spec = spec_for(task).unwrap();
+            let env = make_env(task, 0, 0).unwrap();
+            assert_eq!(&spec, env.spec(), "{task}");
+        }
+    }
+}

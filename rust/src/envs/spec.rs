@@ -1,0 +1,92 @@
+//! Environment specifications: observation/action space metadata, the
+//! analogue of EnvPool's C++ `EnvSpec`.
+
+/// Action space of an environment.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ActionSpace {
+    /// `n` discrete actions, encoded on the wire as a single f32 holding
+    /// the integer action id (the pool moves flat f32 action buffers).
+    Discrete(usize),
+    /// Box action in `[low, high]^dim`.
+    Continuous { dim: usize, low: f32, high: f32 },
+}
+
+impl ActionSpace {
+    /// Number of f32 lanes one action occupies in a flat action buffer.
+    pub fn dim(&self) -> usize {
+        match self {
+            ActionSpace::Discrete(_) => 1,
+            ActionSpace::Continuous { dim, .. } => *dim,
+        }
+    }
+
+    /// Is this a discrete space?
+    pub fn is_discrete(&self) -> bool {
+        matches!(self, ActionSpace::Discrete(_))
+    }
+
+    /// Number of discrete actions, or the continuous dimension.
+    pub fn n(&self) -> usize {
+        match self {
+            ActionSpace::Discrete(n) => *n,
+            ActionSpace::Continuous { dim, .. } => *dim,
+        }
+    }
+
+    /// Clamp a continuous action in place to the box bounds (no-op for
+    /// discrete).
+    pub fn clamp(&self, a: &mut [f32]) {
+        if let ActionSpace::Continuous { low, high, .. } = self {
+            for x in a {
+                *x = x.clamp(*low, *high);
+            }
+        }
+    }
+}
+
+/// Static environment metadata; one per task id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnvSpec {
+    /// Task id, e.g. `"Pong-v5"`.
+    pub id: String,
+    /// Observation shape (e.g. `[4, 84, 84]` for Atari, `[27]` for Ant).
+    pub obs_shape: Vec<usize>,
+    /// Action space.
+    pub action_space: ActionSpace,
+    /// Episode step limit applied by the standard wrapper stack.
+    pub max_episode_steps: usize,
+}
+
+impl EnvSpec {
+    /// Flattened observation length.
+    pub fn obs_dim(&self) -> usize {
+        self.obs_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_dim_products() {
+        let s = EnvSpec {
+            id: "x".into(),
+            obs_shape: vec![4, 84, 84],
+            action_space: ActionSpace::Discrete(6),
+            max_episode_steps: 108_000,
+        };
+        assert_eq!(s.obs_dim(), 4 * 84 * 84);
+        assert_eq!(s.action_space.dim(), 1);
+        assert!(s.action_space.is_discrete());
+    }
+
+    #[test]
+    fn continuous_clamp() {
+        let sp = ActionSpace::Continuous { dim: 3, low: -1.0, high: 1.0 };
+        let mut a = [2.0, -3.0, 0.5];
+        sp.clamp(&mut a);
+        assert_eq!(a, [1.0, -1.0, 0.5]);
+        assert_eq!(sp.dim(), 3);
+    }
+}

@@ -1,0 +1,13 @@
+//! Environment wrappers, implemented on the C++^W Rust side as in
+//! EnvPool (the paper optimizes the "well-established Python wrappers"
+//! inside the engine): time limits, reward clipping, observation
+//! normalization. Frame stacking and episodic life live inside
+//! [`crate::envs::atari`] where they belong to the preprocessing stack.
+
+pub mod time_limit;
+pub mod reward_clip;
+pub mod normalize_obs;
+
+pub use normalize_obs::NormalizeObs;
+pub use reward_clip::RewardClip;
+pub use time_limit::TimeLimit;

@@ -1,0 +1,112 @@
+//! Running observation normalization (Welford), the MuJoCo-PPO staple.
+//! Kept on the env side so the policy network always sees ~N(0,1) inputs;
+//! statistics update only during training (freeze for evaluation).
+
+use crate::envs::env::{Env, Step};
+use crate::envs::spec::EnvSpec;
+
+/// Per-dimension running mean/var normalizer wrapper.
+pub struct NormalizeObs<E: Env> {
+    env: E,
+    count: f64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+    frozen: bool,
+    clip: f32,
+}
+
+impl<E: Env> NormalizeObs<E> {
+    pub fn new(env: E) -> Self {
+        let dim = env.spec().obs_dim();
+        NormalizeObs {
+            env,
+            count: 1e-4,
+            mean: vec![0.0; dim],
+            m2: vec![0.0; dim],
+            frozen: false,
+            clip: 10.0,
+        }
+    }
+
+    /// Stop updating statistics (for evaluation).
+    pub fn freeze(&mut self, on: bool) {
+        self.frozen = on;
+    }
+
+    fn update_and_normalize(&mut self, obs: &mut [f32]) {
+        if !self.frozen {
+            self.count += 1.0;
+            for (i, &x) in obs.iter().enumerate() {
+                let d = x as f64 - self.mean[i];
+                self.mean[i] += d / self.count;
+                self.m2[i] += d * (x as f64 - self.mean[i]);
+            }
+        }
+        for (i, x) in obs.iter_mut().enumerate() {
+            let var = (self.m2[i] / self.count).max(1e-8);
+            *x = (((*x as f64 - self.mean[i]) / var.sqrt()) as f32).clamp(-self.clip, self.clip);
+        }
+    }
+}
+
+impl<E: Env> Env for NormalizeObs<E> {
+    fn spec(&self) -> &EnvSpec {
+        self.env.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.env.reset(obs);
+        self.update_and_normalize(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let s = self.env.step(action, obs);
+        self.update_and_normalize(obs);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::classic::Pendulum;
+
+    #[test]
+    fn normalized_obs_have_sane_scale() {
+        let mut env = NormalizeObs::new(Pendulum::new(0, 0));
+        let mut obs = vec![0.0; 3];
+        env.reset(&mut obs);
+        let mut sum = vec![0.0f64; 3];
+        let mut n = 0.0;
+        for i in 0..2000 {
+            let s = env.step(&[((i % 7) as f32 - 3.0) / 2.0], &mut obs);
+            for (k, &x) in obs.iter().enumerate() {
+                assert!(x.abs() <= 10.0);
+                sum[k] += x as f64;
+            }
+            n += 1.0;
+            if s.finished() {
+                env.reset(&mut obs);
+            }
+        }
+        for &s in &sum {
+            assert!((s / n).abs() < 0.5, "running normalization should near-center, got {}", s / n);
+        }
+    }
+
+    #[test]
+    fn freeze_stops_updates() {
+        let mut env = NormalizeObs::new(Pendulum::new(1, 0));
+        let mut obs = vec![0.0; 3];
+        env.reset(&mut obs);
+        for _ in 0..100 {
+            env.step(&[1.0], &mut obs);
+        }
+        env.freeze(true);
+        let mean_before = env.mean.clone();
+        for _ in 0..100 {
+            env.step(&[1.0], &mut obs);
+        }
+        assert_eq!(mean_before, env.mean);
+    }
+}

@@ -1,0 +1,64 @@
+//! Reward clipping to `{-1, 0, +1}` via `sign(r)` — the DQN/Atari
+//! convention the paper's training runs use.
+
+use crate::envs::env::{Env, Step};
+use crate::envs::spec::EnvSpec;
+
+/// Clip rewards to their sign.
+pub struct RewardClip<E: Env> {
+    env: E,
+}
+
+impl<E: Env> RewardClip<E> {
+    pub fn new(env: E) -> Self {
+        RewardClip { env }
+    }
+}
+
+impl<E: Env> Env for RewardClip<E> {
+    fn spec(&self) -> &EnvSpec {
+        self.env.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.env.reset(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let mut s = self.env.step(action, obs);
+        s.reward = if s.reward > 0.0 {
+            1.0
+        } else if s.reward < 0.0 {
+            -1.0
+        } else {
+            0.0
+        };
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::atari::preproc;
+
+    #[test]
+    fn breakout_rewards_become_unit() {
+        // Breakout row scores are 1/4/7 — clipped they must be exactly 1.
+        let mut env = RewardClip::new(preproc::breakout(3, 0));
+        let mut obs = vec![0.0; env.spec().obs_dim()];
+        env.reset(&mut obs);
+        let mut saw_one = false;
+        for _ in 0..10_000 {
+            let s = env.step(&[1.0], &mut obs);
+            assert!(s.reward == 0.0 || s.reward == 1.0 || s.reward == -1.0);
+            if s.reward == 1.0 {
+                saw_one = true;
+            }
+            if s.finished() {
+                env.reset(&mut obs);
+            }
+        }
+        assert!(saw_one, "FIRE-spam should break at least one brick");
+    }
+}

@@ -1,0 +1,73 @@
+//! TimeLimit wrapper: truncates episodes after a step budget, overriding
+//! (tightening) whatever limit the inner env carries.
+
+use crate::envs::env::{Env, Step};
+use crate::envs::spec::EnvSpec;
+
+/// Truncate episodes at `limit` steps.
+pub struct TimeLimit<E: Env> {
+    env: E,
+    spec: EnvSpec,
+    limit: usize,
+    t: usize,
+}
+
+impl<E: Env> TimeLimit<E> {
+    pub fn new(env: E, limit: usize) -> Self {
+        let mut spec = env.spec().clone();
+        spec.max_episode_steps = limit;
+        TimeLimit { env, spec, limit, t: 0 }
+    }
+}
+
+impl<E: Env> Env for TimeLimit<E> {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.t = 0;
+        self.env.reset(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let mut s = self.env.step(action, obs);
+        self.t += 1;
+        if !s.done && self.t >= self.limit {
+            s.truncated = true;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::classic::Pendulum;
+
+    #[test]
+    fn truncates_early() {
+        let mut env = TimeLimit::new(Pendulum::new(0, 0), 10);
+        assert_eq!(env.spec().max_episode_steps, 10);
+        let mut obs = vec![0.0; 3];
+        env.reset(&mut obs);
+        for t in 0..10 {
+            let s = env.step(&[0.0], &mut obs);
+            assert_eq!(s.truncated, t == 9);
+            assert!(!s.done);
+        }
+    }
+
+    #[test]
+    fn reset_restarts_the_clock() {
+        let mut env = TimeLimit::new(Pendulum::new(1, 0), 5);
+        let mut obs = vec![0.0; 3];
+        env.reset(&mut obs);
+        for _ in 0..5 {
+            env.step(&[0.0], &mut obs);
+        }
+        env.reset(&mut obs);
+        let s = env.step(&[0.0], &mut obs);
+        assert!(!s.truncated);
+    }
+}

@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+/// Unified error type for envpool-rs.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Unknown environment id passed to `envs::registry::make`.
+    #[error("unknown environment task id: {0}")]
+    UnknownEnv(String),
+
+    /// Invalid pool / executor configuration.
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// An action batch referenced an env id outside the pool.
+    #[error("env id {id} out of range (num_envs = {num_envs})")]
+    BadEnvId { id: usize, num_envs: usize },
+
+    /// Action batch shape does not match the env ids given.
+    #[error("action batch length {actions} != env id count {ids}")]
+    ActionShape { actions: usize, ids: usize },
+
+    /// The pool was already closed (threads joined).
+    #[error("pool is closed")]
+    Closed,
+
+    /// XLA / PJRT error from the runtime layer.
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact (HLO / manifest) loading problems.
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// IPC framing error in the subprocess executor.
+    #[error("ipc: {0}")]
+    Ipc(String),
+
+    /// Underlying I/O error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

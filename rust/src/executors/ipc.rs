@@ -1,0 +1,196 @@
+//! Binary IPC framing for the subprocess executor: length-prefixed
+//! little-endian frames over pipes. This codec is the moral equivalent of
+//! the pickling `gym.vector.SubprocVecEnv` pays per step — the cost the
+//! paper's EnvPool eliminates.
+
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// Parent → worker messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Reset the env.
+    Reset,
+    /// Step with the given action lanes.
+    Step(Vec<f32>),
+    /// Terminate the worker.
+    Close,
+}
+
+/// Worker → parent messages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub obs: Vec<f32>,
+    pub rew: f32,
+    pub done: bool,
+    pub trunc: bool,
+}
+
+const TAG_RESET: u8 = 1;
+const TAG_STEP: u8 = 2;
+const TAG_CLOSE: u8 = 3;
+const TAG_RESP: u8 = 4;
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&(xs.len() as u32).to_le_bytes())?;
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let n = u32::from_le_bytes(len4) as usize;
+    if n > 64 * 1024 * 1024 {
+        return Err(Error::Ipc(format!("frame too large: {n}")));
+    }
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+impl Request {
+    pub fn write(&self, w: &mut impl Write) -> Result<()> {
+        match self {
+            Request::Reset => w.write_all(&[TAG_RESET])?,
+            Request::Close => w.write_all(&[TAG_CLOSE])?,
+            Request::Step(a) => {
+                w.write_all(&[TAG_STEP])?;
+                write_f32s(w, a)?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn read(r: &mut impl Read) -> Result<Request> {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        Ok(match tag[0] {
+            TAG_RESET => Request::Reset,
+            TAG_CLOSE => Request::Close,
+            TAG_STEP => Request::Step(read_f32s(r)?),
+            t => return Err(Error::Ipc(format!("bad request tag {t}"))),
+        })
+    }
+}
+
+impl Response {
+    pub fn write(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&[TAG_RESP])?;
+        w.write_all(&self.rew.to_le_bytes())?;
+        w.write_all(&[self.done as u8, self.trunc as u8])?;
+        write_f32s(w, &self.obs)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn read(r: &mut impl Read) -> Result<Response> {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        if tag[0] != TAG_RESP {
+            return Err(Error::Ipc(format!("bad response tag {}", tag[0])));
+        }
+        let mut rew4 = [0u8; 4];
+        r.read_exact(&mut rew4)?;
+        let mut flags = [0u8; 2];
+        r.read_exact(&mut flags)?;
+        Ok(Response {
+            rew: f32::from_le_bytes(rew4),
+            done: flags[0] != 0,
+            trunc: flags[1] != 0,
+            obs: read_f32s(r)?,
+        })
+    }
+}
+
+/// Worker-side main loop: serve one environment over `(stdin, stdout)`.
+/// The `envpool worker` subcommand lands here in the child process.
+pub fn worker_serve(
+    task_id: &str,
+    seed: u64,
+    env_id: u64,
+    r: &mut impl Read,
+    w: &mut impl Write,
+) -> Result<()> {
+    let mut env = crate::envs::registry::make_env(task_id, seed, env_id)?;
+    let dim = env.spec().obs_dim();
+    let mut obs = vec![0.0f32; dim];
+    let mut needs_reset = false;
+    loop {
+        match Request::read(r)? {
+            Request::Close => return Ok(()),
+            Request::Reset => {
+                env.reset(&mut obs);
+                needs_reset = false;
+                Response { obs: obs.clone(), rew: 0.0, done: false, trunc: false }.write(w)?;
+            }
+            Request::Step(a) => {
+                if needs_reset {
+                    needs_reset = false;
+                    env.reset(&mut obs);
+                    Response { obs: obs.clone(), rew: 0.0, done: false, trunc: false }.write(w)?;
+                } else {
+                    let s = env.step(&a, &mut obs);
+                    needs_reset = s.finished();
+                    Response { obs: obs.clone(), rew: s.reward, done: s.done, trunc: s.truncated }
+                        .write(w)?;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        for req in [Request::Reset, Request::Close, Request::Step(vec![1.5, -2.0, 0.0])] {
+            let mut buf = Vec::new();
+            req.write(&mut buf).unwrap();
+            let back = Request::read(&mut buf.as_slice()).unwrap();
+            assert_eq!(req, back);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response { obs: vec![0.25; 7], rew: -1.0, done: true, trunc: false };
+        let mut buf = Vec::new();
+        resp.write(&mut buf).unwrap();
+        let back = Response::read(&mut buf.as_slice()).unwrap();
+        assert_eq!(resp, back);
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        assert!(Request::read(&mut [9u8].as_slice()).is_err());
+        assert!(Response::read(&mut [9u8].as_slice()).is_err());
+    }
+
+    #[test]
+    fn worker_serve_in_memory() {
+        // Drive the worker loop over in-memory pipes (no process spawn):
+        // reset, a few steps, close.
+        let mut req_bytes = Vec::new();
+        Request::Reset.write(&mut req_bytes).unwrap();
+        for _ in 0..5 {
+            Request::Step(vec![1.0]).write(&mut req_bytes).unwrap();
+        }
+        Request::Close.write(&mut req_bytes).unwrap();
+        let mut out = Vec::new();
+        worker_serve("CartPole-v1", 0, 0, &mut req_bytes.as_slice(), &mut out).unwrap();
+        let mut r = out.as_slice();
+        for k in 0..6 {
+            let resp = Response::read(&mut r).unwrap();
+            assert_eq!(resp.obs.len(), 4, "frame {k}");
+        }
+        assert!(Response::read(&mut r).is_err(), "no extra frames");
+    }
+}

@@ -1,0 +1,27 @@
+//! Baseline vectorized-environment executors — the comparison systems of
+//! the paper's Table 1 / Figure 3, rebuilt faithfully:
+//!
+//! - [`forloop`] — single-thread sequential stepping (`gym.vector`'s
+//!   `DummyVecEnv` / the paper's "For-loop").
+//! - [`subprocess`] — one OS process per environment, synchronized every
+//!   step over pipes with serialized frames. This reproduces the
+//!   *mechanism* that makes Python's `SubprocVecEnv` slow: a full
+//!   barrier per step, two IPC copies, and a batching copy.
+//! - [`sample_factory`] — Sample Factory's double-buffered asynchronous
+//!   sampling: workers own fixed env sets and step them continuously,
+//!   publishing completed vectors without a global barrier.
+//!
+//! All executors (and [`crate::pool::EnvPool`] via an adapter) implement
+//! [`traits::VectorEnv`], so the PPO coordinator and the bench harnesses
+//! swap them freely.
+
+pub mod traits;
+pub mod forloop;
+pub mod ipc;
+pub mod subprocess;
+pub mod sample_factory;
+
+pub use forloop::ForLoopExecutor;
+pub use sample_factory::SampleFactoryExecutor;
+pub use subprocess::SubprocessExecutor;
+pub use traits::{PoolVectorEnv, VectorEnv};

@@ -1,0 +1,199 @@
+//! Sample-Factory-style executor (Petrenko et al. 2020): each worker
+//! thread owns a fixed set of environments and steps them continuously
+//! in a double-buffered fashion — while the consumer holds buffer A, the
+//! worker fills buffer B. There is no global per-step barrier, but —
+//! unlike EnvPool — batches are per-worker (fixed membership), and the
+//! consumer must poll workers round-robin.
+
+use crate::envs::env::Env;
+use crate::envs::registry;
+use crate::envs::spec::EnvSpec;
+use crate::pool::batch::BatchedTransition;
+use crate::pool::sem::Semaphore;
+use crate::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One worker's shared double buffer.
+struct WorkerShared {
+    /// Buffer the worker fills next (swapped with the consumer's).
+    ready: Mutex<BatchedTransition>,
+    /// Actions for the worker's envs (set by the consumer before release).
+    actions: Mutex<Vec<f32>>,
+    /// Worker may start the next rollout step.
+    go: Semaphore,
+    /// A filled buffer is available.
+    done: Semaphore,
+    stop: AtomicBool,
+}
+
+/// Double-buffered asynchronous sampler.
+pub struct SampleFactoryExecutor {
+    spec: EnvSpec,
+    shared: Vec<Arc<WorkerShared>>,
+    handles: Vec<JoinHandle<()>>,
+    envs_per_worker: usize,
+    /// Which worker to poll next (round-robin fairness).
+    cursor: usize,
+}
+
+impl SampleFactoryExecutor {
+    /// `num_envs` split evenly over `num_workers` threads.
+    pub fn new(task_id: &str, num_envs: usize, num_workers: usize, seed: u64) -> Result<Self> {
+        if num_workers == 0 || num_envs % num_workers != 0 {
+            return Err(crate::Error::Config(format!(
+                "num_envs {num_envs} must divide over {num_workers} workers"
+            )));
+        }
+        let spec = registry::spec_for(task_id)?;
+        let per = num_envs / num_workers;
+        let dim = spec.obs_dim();
+        let adim = spec.action_space.dim();
+        let mut shared = Vec::new();
+        let mut handles = Vec::new();
+        for w in 0..num_workers {
+            let sh = Arc::new(WorkerShared {
+                ready: Mutex::new(BatchedTransition::with_capacity(per, dim)),
+                actions: Mutex::new(vec![0.0; per * adim]),
+                go: Semaphore::new(0),
+                done: Semaphore::new(0),
+                stop: AtomicBool::new(false),
+            });
+            shared.push(sh.clone());
+            let task = task_id.to_string();
+            handles.push(std::thread::spawn(move || {
+                let mut envs: Vec<Box<dyn Env>> = (0..per)
+                    .map(|i| registry::make_env(&task, seed, (w * per + i) as u64).unwrap())
+                    .collect();
+                let mut needs_reset = vec![false; per];
+                let mut local = BatchedTransition::with_capacity(per, dim);
+                // initial reset fills the first buffer
+                for (i, env) in envs.iter_mut().enumerate() {
+                    env.reset(&mut local.obs[i * dim..(i + 1) * dim]);
+                    local.env_ids[i] = (w * per + i) as u32;
+                }
+                loop {
+                    // publish `local`, wait for actions, fill again
+                    {
+                        let mut slot = sh.ready.lock().unwrap();
+                        std::mem::swap(&mut *slot, &mut local);
+                    }
+                    sh.done.post();
+                    sh.go.wait();
+                    if sh.stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let actions = sh.actions.lock().unwrap().clone();
+                    for (i, env) in envs.iter_mut().enumerate() {
+                        let obs = &mut local.obs[i * dim..(i + 1) * dim];
+                        if needs_reset[i] {
+                            needs_reset[i] = false;
+                            env.reset(obs);
+                            local.rew[i] = 0.0;
+                            local.done[i] = 0;
+                            local.trunc[i] = 0;
+                        } else {
+                            let s = env.step(&actions[i * adim..(i + 1) * adim], obs);
+                            local.rew[i] = s.reward;
+                            local.done[i] = s.done as u8;
+                            local.trunc[i] = s.truncated as u8;
+                            needs_reset[i] = s.finished();
+                        }
+                        local.env_ids[i] = (w * per + i) as u32;
+                    }
+                }
+            }));
+        }
+        Ok(SampleFactoryExecutor { spec, shared, handles, envs_per_worker: per, cursor: 0 })
+    }
+
+    pub fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    pub fn envs_per_worker(&self) -> usize {
+        self.envs_per_worker
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.shared.len()
+    }
+
+    /// Receive the next available per-worker batch (round-robin). The
+    /// returned ids tell you whose actions to provide in [`Self::send`].
+    pub fn recv_into(&mut self, out: &mut BatchedTransition) -> usize {
+        let w = self.cursor;
+        self.cursor = (self.cursor + 1) % self.shared.len();
+        let sh = &self.shared[w];
+        sh.done.wait();
+        let mut slot = sh.ready.lock().unwrap();
+        std::mem::swap(&mut *slot, out);
+        w
+    }
+
+    /// Provide actions for worker `w`'s envs and release it for its next
+    /// step (double-buffer handoff).
+    pub fn send(&self, w: usize, actions: &[f32]) {
+        let sh = &self.shared[w];
+        sh.actions.lock().unwrap().copy_from_slice(actions);
+        sh.go.post();
+    }
+
+    /// A per-worker-sized output buffer.
+    pub fn make_output(&self) -> BatchedTransition {
+        BatchedTransition::with_capacity(self.envs_per_worker, self.spec.obs_dim())
+    }
+}
+
+impl Drop for SampleFactoryExecutor {
+    fn drop(&mut self) {
+        for sh in &self.shared {
+            sh.stop.store(true, Ordering::Relaxed);
+            sh.go.post();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_serves_all_workers() {
+        let mut ex = SampleFactoryExecutor::new("CartPole-v1", 8, 2, 3).unwrap();
+        let mut out = ex.make_output();
+        let mut seen = vec![0u32; 8];
+        for _ in 0..40 {
+            let w = ex.recv_into(&mut out);
+            for &id in &out.env_ids {
+                seen[id as usize] += 1;
+            }
+            let actions = vec![1.0f32; out.len()];
+            ex.send(w, &actions);
+        }
+        assert!(seen.iter().all(|&c| c > 0), "{seen:?}");
+    }
+
+    #[test]
+    fn uneven_split_rejected() {
+        assert!(SampleFactoryExecutor::new("CartPole-v1", 7, 2, 0).is_err());
+    }
+
+    #[test]
+    fn episodes_roll_over() {
+        let mut ex = SampleFactoryExecutor::new("CartPole-v1", 4, 1, 5).unwrap();
+        let mut out = ex.make_output();
+        let mut dones = 0;
+        for step in 0..400 {
+            let w = ex.recv_into(&mut out);
+            dones += out.done.iter().filter(|&&d| d != 0).count();
+            let actions: Vec<f32> = (0..out.len()).map(|k| ((step + k) % 2) as f32).collect();
+            ex.send(w, &actions);
+        }
+        assert!(dones > 3, "cartpole must terminate under alternating actions, saw {dones}");
+    }
+}

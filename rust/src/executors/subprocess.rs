@@ -1,0 +1,133 @@
+//! Subprocess baseline: one OS process per environment, a full barrier
+//! per vectorized step, length-prefixed IPC frames in both directions —
+//! the faithful Rust equivalent of `gym.vector.SubprocVecEnv`, the
+//! paper's main comparison point. Its per-step cost structure
+//! (synchronization + serialization + batching copy) is exactly what
+//! EnvPool's queues remove.
+
+use super::ipc::{Request, Response};
+use super::traits::VectorEnv;
+use crate::envs::registry;
+use crate::envs::spec::EnvSpec;
+use crate::pool::batch::BatchedTransition;
+use crate::{Error, Result};
+use std::io::{BufReader, BufWriter};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+
+struct WorkerProc {
+    child: Child,
+    tx: BufWriter<ChildStdin>,
+    rx: BufReader<ChildStdout>,
+}
+
+/// Process-per-env executor.
+pub struct SubprocessExecutor {
+    spec: EnvSpec,
+    workers: Vec<WorkerProc>,
+}
+
+/// Locate the `envpool` binary that serves the `worker` subcommand.
+/// Priority: `ENVPOOL_WORKER_BIN` env var, then next to the current exe,
+/// then one directory up (unit tests run from `target/<profile>/deps`).
+pub fn find_worker_bin() -> Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("ENVPOOL_WORKER_BIN") {
+        return Ok(p.into());
+    }
+    let exe = std::env::current_exe()?;
+    let dir = exe.parent().ok_or_else(|| Error::Config("no exe dir".into()))?;
+    for cand in [dir.join("envpool"), dir.join("../envpool")] {
+        if cand.is_file() {
+            return Ok(cand);
+        }
+    }
+    Err(Error::Config(
+        "cannot find the `envpool` worker binary; build it or set ENVPOOL_WORKER_BIN".into(),
+    ))
+}
+
+impl SubprocessExecutor {
+    pub fn new(task_id: &str, num_envs: usize, seed: u64) -> Result<Self> {
+        let bin = find_worker_bin()?;
+        let spec = registry::spec_for(task_id)?;
+        let mut workers = Vec::with_capacity(num_envs);
+        for i in 0..num_envs {
+            let mut child = Command::new(&bin)
+                .args([
+                    "worker",
+                    "--task",
+                    task_id,
+                    "--seed",
+                    &seed.to_string(),
+                    "--env-id",
+                    &i.to_string(),
+                ])
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .spawn()?;
+            let tx = BufWriter::new(child.stdin.take().expect("child stdin"));
+            let rx = BufReader::new(child.stdout.take().expect("child stdout"));
+            workers.push(WorkerProc { child, tx, rx });
+        }
+        Ok(SubprocessExecutor { spec, workers })
+    }
+
+    fn gather(&mut self, out: &mut BatchedTransition) -> Result<()> {
+        // The batching copy Python pays: collect each worker's response
+        // and copy it into the batch arrays.
+        let dim = self.spec.obs_dim();
+        out.obs_dim = dim;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            let resp: Response = Response::read(&mut w.rx)?;
+            if resp.obs.len() != dim {
+                return Err(Error::Ipc(format!(
+                    "worker {i} sent obs of {} (expected {dim})",
+                    resp.obs.len()
+                )));
+            }
+            out.obs[i * dim..(i + 1) * dim].copy_from_slice(&resp.obs);
+            out.rew[i] = resp.rew;
+            out.done[i] = resp.done as u8;
+            out.trunc[i] = resp.trunc as u8;
+            out.env_ids[i] = i as u32;
+        }
+        Ok(())
+    }
+}
+
+impl VectorEnv for SubprocessExecutor {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn reset(&mut self, out: &mut BatchedTransition) -> Result<()> {
+        for w in &mut self.workers {
+            Request::Reset.write(&mut w.tx)?;
+        }
+        self.gather(out)
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut BatchedTransition) -> Result<()> {
+        let adim = self.spec.action_space.dim();
+        // scatter: serialize + write each env's action (IPC copy #1)
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            Request::Step(actions[i * adim..(i + 1) * adim].to_vec()).write(&mut w.tx)?;
+        }
+        // barrier + gather (IPC copy #2 + batching copy)
+        self.gather(out)
+    }
+}
+
+impl Drop for SubprocessExecutor {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let _ = Request::Close.write(&mut w.tx);
+        }
+        for w in &mut self.workers {
+            let _ = w.child.wait();
+        }
+    }
+}

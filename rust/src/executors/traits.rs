@@ -1,0 +1,123 @@
+//! The common vectorized-environment interface all executors implement.
+
+use crate::envs::spec::EnvSpec;
+use crate::pool::batch::BatchedTransition;
+use crate::pool::envpool::EnvPool;
+use crate::Result;
+
+/// A vectorized environment executor: the synchronous `gym.vector`-style
+/// contract (`reset` all, `step` all), which every baseline implements
+/// natively and EnvPool implements in sync mode. The PPO trainer and the
+/// Figure-4 profiler drive this interface.
+pub trait VectorEnv: Send {
+    /// Env spec of the underlying task.
+    fn spec(&self) -> &EnvSpec;
+
+    /// Number of parallel environments.
+    fn num_envs(&self) -> usize;
+
+    /// Reset all envs; fills `out` with `num_envs` rows (env id order).
+    fn reset(&mut self, out: &mut BatchedTransition) -> Result<()>;
+
+    /// Step all envs with `actions` (row-major `[num_envs, act_dim]`,
+    /// in env id order). Fills `out` with `num_envs` rows in env id
+    /// order. Auto-resets finished envs on their next step.
+    fn step(&mut self, actions: &[f32], out: &mut BatchedTransition) -> Result<()>;
+
+    /// A correctly-sized output buffer.
+    fn make_output(&self) -> BatchedTransition {
+        BatchedTransition::with_capacity(self.num_envs(), self.spec().obs_dim())
+    }
+}
+
+/// EnvPool (sync mode) seen through the common executor interface.
+/// Rows are re-ordered to env-id order so all executors agree exactly.
+pub struct PoolVectorEnv {
+    pool: EnvPool,
+    scratch: BatchedTransition,
+    ids: Vec<u32>,
+}
+
+impl PoolVectorEnv {
+    /// Wrap a synchronous-mode pool (`batch_size == num_envs`).
+    pub fn new(pool: EnvPool) -> Result<Self> {
+        if pool.config().batch_size != pool.config().num_envs {
+            return Err(crate::Error::Config(
+                "PoolVectorEnv requires sync mode (batch_size == num_envs)".into(),
+            ));
+        }
+        let scratch = pool.make_output();
+        let ids = (0..pool.config().num_envs as u32).collect();
+        Ok(PoolVectorEnv { pool, scratch, ids })
+    }
+
+    fn reorder(&mut self, out: &mut BatchedTransition) {
+        // scratch rows arrive in completion order; emit in env id order.
+        let dim = self.scratch.obs_dim;
+        out.obs_dim = dim;
+        for k in 0..self.scratch.len() {
+            let id = self.scratch.env_ids[k] as usize;
+            out.obs[id * dim..(id + 1) * dim].copy_from_slice(self.scratch.obs_row(k));
+            out.rew[id] = self.scratch.rew[k];
+            out.done[id] = self.scratch.done[k];
+            out.trunc[id] = self.scratch.trunc[k];
+            out.env_ids[id] = id as u32;
+        }
+    }
+}
+
+impl VectorEnv for PoolVectorEnv {
+    fn spec(&self) -> &EnvSpec {
+        self.pool.spec()
+    }
+
+    fn num_envs(&self) -> usize {
+        self.pool.config().num_envs
+    }
+
+    fn reset(&mut self, out: &mut BatchedTransition) -> Result<()> {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.pool.reset_into(&mut scratch)?;
+        self.scratch = scratch;
+        self.reorder(out);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut BatchedTransition) -> Result<()> {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.pool.step_into(actions, &self.ids, &mut scratch)?;
+        self.scratch = scratch;
+        self.reorder(out);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::envpool::PoolConfig;
+
+    #[test]
+    fn pool_adapter_emits_env_id_order() {
+        let pool = EnvPool::make(
+            PoolConfig::new("CartPole-v1").num_envs(4).batch_size(4).num_threads(2).seed(1),
+        )
+        .unwrap();
+        let mut v = PoolVectorEnv::new(pool).unwrap();
+        let mut out = v.make_output();
+        v.reset(&mut out).unwrap();
+        assert_eq!(out.env_ids, vec![0, 1, 2, 3]);
+        let actions = vec![1.0f32; 4];
+        v.step(&actions, &mut out).unwrap();
+        assert_eq!(out.env_ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn async_pool_rejected() {
+        let pool = EnvPool::make(
+            PoolConfig::new("CartPole-v1").num_envs(4).batch_size(2).num_threads(2),
+        )
+        .unwrap();
+        assert!(PoolVectorEnv::new(pool).is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! # envpool-rs — EnvPool (NeurIPS 2022) reproduction in Rust
+//!
+//! A highly parallel reinforcement-learning environment execution engine,
+//! reproducing Weng et al., *EnvPool: A Highly Parallel Reinforcement
+//! Learning Environment Execution Engine* (NeurIPS 2022), as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's contribution: an asynchronous,
+//!   threadpool-based environment executor built from three components:
+//!   a lock-free [`pool::ActionBufferQueue`], a pinned
+//!   [`pool::ThreadPool`], and a pre-allocated, block-structured
+//!   [`pool::StateBufferQueue`]. Plus every substrate the paper evaluates
+//!   on: Atari-like ([`envs::atari`]), MuJoCo-like ([`envs::mujoco`]),
+//!   dm_control-like ([`envs::dmc`]) and classic-control environments,
+//!   and the baseline executors it compares against ([`executors`]).
+//! - **L2 (JAX, build-time)** — actor-critic forward/backward + PPO update,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`.
+//! - **L1 (Pallas, build-time)** — the fused linear and GAE kernels inside
+//!   the L2 graph, verified against pure-jnp oracles.
+//!
+//! The AOT artifacts are executed from Rust through PJRT ([`runtime`]);
+//! Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use envpool::pool::{EnvPool, PoolConfig};
+//!
+//! // Asynchronous mode: num_envs > batch_size (paper §3.2).
+//! let cfg = PoolConfig::new("CartPole-v1").num_envs(12).batch_size(8).num_threads(4);
+//! let mut pool = EnvPool::make(cfg).unwrap();
+//! pool.async_reset();
+//! for _ in 0..100 {
+//!     let batch = pool.recv().unwrap();
+//!     let actions = vec![0.0f32; batch.len()];
+//!     pool.send(&actions, &batch.env_ids).unwrap();
+//! }
+//! ```
+//!
+//! Synchronous mode is the special case `num_envs == batch_size`; the
+//! [`pool::EnvPool::step`] convenience wraps `send`+`recv`.
+
+pub mod error;
+pub mod rng;
+pub mod cli;
+pub mod prop;
+pub mod config;
+pub mod envs;
+pub mod pool;
+pub mod executors;
+pub mod runtime;
+pub mod agent;
+pub mod coordinator;
+pub mod metrics;
+pub mod bench_util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,143 @@
+//! envpool-rs CLI — leader entrypoint.
+//!
+//! Subcommands:
+//! - `envpool info`                      — list tasks and specs
+//! - `envpool bench ...`                 — pure env-simulation throughput
+//! - `envpool train ...`                 — PPO training over the AOT policy
+//! - `envpool profile ...`               — Figure-4 time breakdown
+//! - `envpool worker --task T --seed S --env-id I`
+//!                                       — subprocess-executor worker
+//!                                         (internal; speaks IPC on stdio)
+
+use envpool::cli::Args;
+use envpool::config::TrainConfig;
+use envpool::envs::registry;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    let args = Args::parse(argv);
+    let code = match sub.as_str() {
+        "worker" => cmd_worker(&args),
+        "info" => cmd_info(),
+        "bench" => cmd_bench(&args),
+        "train" => cmd_train(&args),
+        "profile" => cmd_profile(&args),
+        _ => {
+            eprintln!(
+                "usage: envpool <worker|info|bench|train|profile> [--key value ...]\n\
+                 see README.md for the full flag reference"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Subprocess-executor worker: serve one env over stdio.
+fn cmd_worker(args: &Args) -> i32 {
+    let task = args.get("task", "CartPole-v1").to_string();
+    let seed: u64 = args.parse_or("seed", 0);
+    let env_id: u64 = args.parse_or("env-id", 0);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut r = stdin.lock();
+    let mut w = std::io::BufWriter::new(stdout.lock());
+    match envpool::executors::ipc::worker_serve(&task, seed, env_id, &mut r, &mut w) {
+        Ok(()) => 0,
+        Err(e) => {
+            // Parent closing the pipe mid-read is a normal shutdown path.
+            eprintln!("worker exit: {e}");
+            0
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("envpool-rs — registered tasks:");
+    for &t in registry::ALL_TASKS {
+        let s = registry::spec_for(t).unwrap();
+        println!(
+            "  {:<16} obs {:?}  actions {:?}  max_steps {}",
+            t, s.obs_shape, s.action_space, s.max_episode_steps
+        );
+    }
+    0
+}
+
+/// Pure env-simulation throughput (the Table-1 measurement, one cell).
+fn cmd_bench(args: &Args) -> i32 {
+    let task = args.get("env", "Pong-v5").to_string();
+    let executor = args.get("executor", "envpool-async").to_string();
+    let num_envs: usize = args.parse_or("num-envs", 8);
+    let batch_size: usize = args.parse_or("batch-size", num_envs.div_ceil(2));
+    let threads: usize = args.parse_or("num-threads", 4);
+    let steps: u64 = args.parse_or("steps", 10_000);
+    let seed: u64 = args.parse_or("seed", 0);
+    match envpool::coordinator::throughput::run_throughput(
+        &task, &executor, num_envs, batch_size, threads, steps, seed,
+    ) {
+        Ok(fps) => {
+            println!(
+                "env={task} executor={executor} num_envs={num_envs} batch_size={batch_size} \
+                 threads={threads} steps={steps} fps={fps:.0}"
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.opt("config") {
+        match envpool::config::KvFile::load(path) {
+            Ok(f) => {
+                if let Err(e) = cfg.apply_file(&f) {
+                    eprintln!("config error: {e}");
+                    return 2;
+                }
+            }
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return 2;
+            }
+        }
+    }
+    if let Err(e) = cfg.apply_args(args) {
+        eprintln!("config error: {e}");
+        return 2;
+    }
+    match envpool::coordinator::ppo::train(&cfg) {
+        Ok(summary) => {
+            println!("{}", summary.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("train failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_profile(args: &Args) -> i32 {
+    let mut cfg = TrainConfig::default();
+    if let Err(e) = cfg.apply_args(args) {
+        eprintln!("config error: {e}");
+        return 2;
+    }
+    match envpool::coordinator::ppo::train_profiled(&cfg) {
+        Ok((summary, breakdown)) => {
+            println!("{}", summary.render());
+            println!("{}", breakdown.render(&format!("{} / {}", cfg.env_id, cfg.executor)));
+            0
+        }
+        Err(e) => {
+            eprintln!("profile failed: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Metrics: streaming statistics, scoped timers, throughput counters, and
+//! paper-style markdown table output.
+
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use stats::{Percentiles, Streaming};
+pub use table::Table;
+pub use timer::{Stopwatch, TimeBreakdown};

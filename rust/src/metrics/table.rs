@@ -1,0 +1,99 @@
+//! Markdown table writer used by the benchmark harnesses to print
+//! paper-style rows (Table 1, Table 2, Figure 3 series).
+
+/// A simple column-aligned markdown table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Table {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(r.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(r);
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as aligned GitHub markdown.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.header);
+        let sep: Vec<String> = w.iter().map(|&n| "-".repeat(n)).collect();
+        out.push_str(&line(&sep));
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+/// Format frames-per-second with thousands separators (paper style).
+pub fn fmt_fps(fps: f64) -> String {
+    let n = fps.round() as i64;
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 && ch != '-' {
+            out.push(',');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new(["Method", "Atari", "MuJoCo"]);
+        t.row(["For-loop", "4,893", "12,861"]);
+        t.row(["EnvPool (async)", "49,439", "105,126"]);
+        let r = t.render();
+        assert!(r.contains("| Method"));
+        assert!(r.lines().count() == 4);
+        assert!(r.contains("EnvPool (async)"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn fps_thousands() {
+        assert_eq!(fmt_fps(4893.4), "4,893");
+        assert_eq!(fmt_fps(1_069_922.0), "1,069,922");
+        assert_eq!(fmt_fps(12.0), "12");
+    }
+}

@@ -1,0 +1,168 @@
+//! Scoped timers and the Figure-4 time breakdown
+//! (environment step / inference / training / other).
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Category of time in the per-iteration profile, mirroring the paper's
+/// Figure 4 decomposition of CleanRL's PPO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Time in `env.step` / `send`+`recv`.
+    EnvStep,
+    /// Policy forward pass (action/logp/value).
+    Inference,
+    /// PPO minibatch updates (fwd+bwd+opt).
+    Training,
+    /// Everything else (storage, batching, metrics...).
+    Other,
+}
+
+impl Category {
+    pub const ALL: [Category; 4] =
+        [Category::EnvStep, Category::Inference, Category::Training, Category::Other];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::EnvStep => "env_step",
+            Category::Inference => "inference",
+            Category::Training => "training",
+            Category::Other => "other",
+        }
+    }
+}
+
+/// Accumulated wall time per category (the Figure-4 bars).
+#[derive(Debug, Clone, Default)]
+pub struct TimeBreakdown {
+    totals: [Duration; 4],
+    iterations: u64,
+}
+
+impl TimeBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn idx(c: Category) -> usize {
+        match c {
+            Category::EnvStep => 0,
+            Category::Inference => 1,
+            Category::Training => 2,
+            Category::Other => 3,
+        }
+    }
+
+    /// Add elapsed time to one category.
+    pub fn add(&mut self, c: Category, d: Duration) {
+        self.totals[Self::idx(c)] += d;
+    }
+
+    /// Time a closure, attributing it to `c`.
+    pub fn time<T>(&mut self, c: Category, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(c, t.elapsed());
+        out
+    }
+
+    pub fn bump_iteration(&mut self) {
+        self.iterations += 1;
+    }
+
+    pub fn total(&self, c: Category) -> Duration {
+        self.totals[Self::idx(c)]
+    }
+
+    pub fn grand_total(&self) -> Duration {
+        self.totals.iter().sum()
+    }
+
+    /// Fraction of total time per category.
+    pub fn fraction(&self, c: Category) -> f64 {
+        let g = self.grand_total().as_secs_f64();
+        if g == 0.0 { 0.0 } else { self.total(c).as_secs_f64() / g }
+    }
+
+    /// Per-iteration mean milliseconds for a category.
+    pub fn per_iter_ms(&self, c: Category) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.total(c).as_secs_f64() * 1e3 / self.iterations as f64
+        }
+    }
+
+    /// Render the Figure-4-style summary block.
+    pub fn render(&self, label: &str) -> String {
+        let mut s = format!("== time breakdown: {label} ({} iters) ==\n", self.iterations);
+        for c in Category::ALL {
+            s.push_str(&format!(
+                "  {:<10} {:>9.3}s  {:>5.1}%  ({:.3} ms/iter)\n",
+                c.name(),
+                self.total(c).as_secs_f64(),
+                100.0 * self.fraction(c),
+                self.per_iter_ms(c),
+            ));
+        }
+        s.push_str(&format!("  {:<10} {:>9.3}s\n", "total", self.grand_total().as_secs_f64()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = TimeBreakdown::new();
+        b.add(Category::EnvStep, Duration::from_millis(30));
+        b.add(Category::Inference, Duration::from_millis(10));
+        b.add(Category::EnvStep, Duration::from_millis(30));
+        b.bump_iteration();
+        b.bump_iteration();
+        assert_eq!(b.total(Category::EnvStep), Duration::from_millis(60));
+        assert!((b.fraction(Category::EnvStep) - 60.0 / 70.0).abs() < 1e-9);
+        assert!((b.per_iter_ms(Category::Inference) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut b = TimeBreakdown::new();
+        let v = b.time(Category::Training, || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(b.total(Category::Training) > Duration::ZERO);
+    }
+
+    #[test]
+    fn render_contains_categories() {
+        let b = TimeBreakdown::new();
+        let r = b.render("x");
+        for c in Category::ALL {
+            assert!(r.contains(c.name()));
+        }
+    }
+}

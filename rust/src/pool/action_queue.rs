@@ -1,0 +1,333 @@
+//! ActionBufferQueue (paper Appendix D.1): a lock-free bounded MPMC
+//! circular buffer with two atomic cursors and per-slot sequence numbers
+//! (Vyukov's algorithm — the per-slot sequence generalizes the paper's
+//! two-counter scheme to arbitrary producer/consumer interleavings), plus
+//! a semaphore so idle worker threads sleep instead of spinning.
+//!
+//! The paper sizes the buffer at `2N`; we round up to the next power of
+//! two for mask indexing.
+
+use super::sem::Semaphore;
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+struct Slot<T> {
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free MPMC queue with blocking (semaphore) dequeue.
+pub struct ActionBufferQueue<T> {
+    buf: Box<[Slot<T>]>,
+    mask: usize,
+    enqueue_pos: AtomicUsize,
+    dequeue_pos: AtomicUsize,
+    items: Semaphore,
+}
+
+unsafe impl<T: Send> Sync for ActionBufferQueue<T> {}
+unsafe impl<T: Send> Send for ActionBufferQueue<T> {}
+
+impl<T> ActionBufferQueue<T> {
+    /// Create with capacity at least `min_capacity` (paper: `2 * num_envs`).
+    pub fn new(min_capacity: usize) -> Self {
+        let cap = min_capacity.max(2).next_power_of_two();
+        let buf: Vec<Slot<T>> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        ActionBufferQueue {
+            buf: buf.into_boxed_slice(),
+            mask: cap - 1,
+            enqueue_pos: AtomicUsize::new(0),
+            dequeue_pos: AtomicUsize::new(0),
+            items: Semaphore::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Enqueue; returns `Err(v)` if the queue is full (a protocol
+    /// violation in the pool — there are never more than `N` outstanding
+    /// actions — but recoverable for library users).
+    pub fn enqueue(&self, v: T) -> Result<(), T> {
+        self.enqueue_nopost(v)?;
+        self.items.post();
+        Ok(())
+    }
+
+    /// Enqueue a batch with a single semaphore post (one futex wake
+    /// instead of `items.len()`): the `send` hot path's optimization —
+    /// measured in `benches/queues.rs` and EXPERIMENTS.md §Perf.
+    pub fn enqueue_batch(&self, items: impl ExactSizeIterator<Item = T>) -> usize {
+        let mut n = 0isize;
+        for mut v in items {
+            loop {
+                match self.enqueue_nopost(v) {
+                    Ok(()) => break,
+                    Err(back) => {
+                        v = back;
+                        // queue full: flush what we have so consumers drain it
+                        if n > 0 {
+                            self.items.post_n(n);
+                            n = 0;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }
+            n += 1;
+        }
+        if n > 0 {
+            self.items.post_n(n);
+        }
+        n as usize
+    }
+
+    fn enqueue_nopost(&self, v: T) -> Result<(), T> {
+        let mut pos = self.enqueue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                match self.enqueue_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.val.get()).write(v) };
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(actual) => pos = actual,
+                }
+            } else if diff < 0 {
+                return Err(v);
+            } else {
+                pos = self.enqueue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Pop one item without blocking; `None` if empty.
+    pub fn try_dequeue(&self) -> Option<T> {
+        let mut pos = self.dequeue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - (pos + 1) as isize;
+            if diff == 0 {
+                match self.dequeue_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = unsafe { (*slot.val.get()).assume_init_read() };
+                        slot.seq.store(pos + self.mask + 1, Ordering::Release);
+                        return Some(v);
+                    }
+                    Err(actual) => pos = actual,
+                }
+            } else if diff < 0 {
+                return None; // empty
+            } else {
+                pos = self.dequeue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Blocking dequeue: parks on the semaphore until an item arrives.
+    pub fn dequeue(&self) -> T {
+        loop {
+            self.items.wait();
+            if let Some(v) = self.try_dequeue() {
+                return v;
+            }
+            // Raced with another consumer: give the permit back.
+            self.items.post();
+            std::thread::yield_now();
+        }
+    }
+
+    /// Blocking dequeue with timeout.
+    pub fn dequeue_timeout(&self, d: Duration) -> Option<T> {
+        if !self.items.wait_timeout(d) {
+            return None;
+        }
+        match self.try_dequeue() {
+            Some(v) => Some(v),
+            None => {
+                self.items.post();
+                None
+            }
+        }
+    }
+
+    /// Approximate queue length (diagnostics).
+    pub fn len(&self) -> usize {
+        let e = self.enqueue_pos.load(Ordering::Relaxed);
+        let d = self.dequeue_pos.load(Ordering::Relaxed);
+        e.saturating_sub(d)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Drop for ActionBufferQueue<T> {
+    fn drop(&mut self) {
+        while self.try_dequeue().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+    use crate::prop_assert;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = ActionBufferQueue::new(8);
+        for i in 0..8 {
+            q.enqueue(i).unwrap();
+        }
+        for i in 0..8 {
+            assert_eq!(q.try_dequeue(), Some(i));
+        }
+        assert_eq!(q.try_dequeue(), None);
+    }
+
+    #[test]
+    fn full_queue_rejects() {
+        let q = ActionBufferQueue::new(4);
+        for i in 0..q.capacity() {
+            q.enqueue(i).unwrap();
+        }
+        assert!(q.enqueue(99).is_err());
+        q.try_dequeue();
+        q.enqueue(99).unwrap();
+    }
+
+    #[test]
+    fn capacity_rounds_to_pow2() {
+        assert_eq!(ActionBufferQueue::<u8>::new(6).capacity(), 8);
+        assert_eq!(ActionBufferQueue::<u8>::new(16).capacity(), 16);
+    }
+
+    #[test]
+    fn spmc_no_loss_no_dup() {
+        // One producer, several consumers: every item delivered exactly once.
+        let q = Arc::new(ActionBufferQueue::new(64));
+        let n_items = 10_000usize;
+        let n_consumers = 4;
+        let mut handles = vec![];
+        for _ in 0..n_consumers {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = vec![];
+                loop {
+                    let v: usize = q.dequeue();
+                    if v == usize::MAX {
+                        break;
+                    }
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for i in 0..n_items {
+            while q.enqueue(i).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        for _ in 0..n_consumers {
+            while q.enqueue(usize::MAX).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        let mut seen = vec![false; n_items];
+        for h in handles {
+            for v in h.join().unwrap() {
+                assert!(!seen[v], "duplicate delivery of {v}");
+                seen[v] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "lost items");
+    }
+
+    #[test]
+    fn enqueue_batch_single_post_delivers_all() {
+        let q = ActionBufferQueue::new(16);
+        let n = q.enqueue_batch((0..10u32).map(|i| i));
+        assert_eq!(n, 10);
+        assert_eq!(q.len(), 10);
+        for i in 0..10 {
+            assert_eq!(q.dequeue(), i, "blocking dequeue must see batch permits");
+        }
+    }
+
+    #[test]
+    fn enqueue_batch_handles_full_queue() {
+        let q = ActionBufferQueue::new(4);
+        // capacity 4; feed 6 items while a consumer drains concurrently
+        let q = std::sync::Arc::new(q);
+        let qc = q.clone();
+        let h = std::thread::spawn(move || (0..6).map(|_| qc.dequeue()).collect::<Vec<u32>>());
+        q.enqueue_batch((0..6u32).map(|i| i));
+        let got = h.join().unwrap();
+        let mut sorted = got.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dequeue_timeout_on_empty() {
+        let q: ActionBufferQueue<u32> = ActionBufferQueue::new(4);
+        assert_eq!(q.dequeue_timeout(Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn prop_interleaved_ops_preserve_multiset() {
+        forall("queue-multiset", |g| {
+            let cap = 1 << g.usize_in(2, 6);
+            let q = ActionBufferQueue::new(cap);
+            let mut model: std::collections::VecDeque<usize> = Default::default();
+            let ops = g.usize_in(1, 200);
+            let mut next = 0usize;
+            for _ in 0..ops {
+                if g.bool() {
+                    match q.enqueue(next) {
+                        Ok(()) => model.push_back(next),
+                        Err(_) => prop_assert!(
+                            model.len() == q.capacity(),
+                            "enqueue failed while not full ({} of {})",
+                            model.len(),
+                            q.capacity()
+                        ),
+                    }
+                    next += 1;
+                } else {
+                    let got = q.try_dequeue();
+                    let want = model.pop_front();
+                    prop_assert!(got == want, "dequeue mismatch: {got:?} vs {want:?}");
+                }
+            }
+            prop_assert!(q.len() == model.len(), "len mismatch");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,70 @@
+//! The batched transition container handed to the consumer by `recv` —
+//! one StateBufferQueue block's payload (paper Appendix D.2): contiguous
+//! observation matrix plus reward/done/truncated/env_id lanes.
+
+/// One batch of transitions, laid out exactly as the block memory is.
+#[derive(Debug, Clone, Default)]
+pub struct BatchedTransition {
+    /// Row-major `[batch, obs_dim]` observations.
+    pub obs: Vec<f32>,
+    /// Rewards, length `batch`.
+    pub rew: Vec<f32>,
+    /// Terminal flags (true termination), length `batch`.
+    pub done: Vec<u8>,
+    /// Truncation flags, length `batch`.
+    pub trunc: Vec<u8>,
+    /// Which env produced each row — the `info["env_id"]` of the paper's
+    /// API, needed to route the next actions.
+    pub env_ids: Vec<u32>,
+    /// Observation row width.
+    pub obs_dim: usize,
+}
+
+impl BatchedTransition {
+    /// Pre-allocate for `batch` rows of `obs_dim` observations.
+    pub fn with_capacity(batch: usize, obs_dim: usize) -> Self {
+        BatchedTransition {
+            obs: vec![0.0; batch * obs_dim],
+            rew: vec![0.0; batch],
+            done: vec![0; batch],
+            trunc: vec![0; batch],
+            env_ids: vec![0; batch],
+            obs_dim,
+        }
+    }
+
+    /// Number of rows in this batch.
+    pub fn len(&self) -> usize {
+        self.rew.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rew.is_empty()
+    }
+
+    /// Observation row `i`.
+    pub fn obs_row(&self, i: usize) -> &[f32] {
+        &self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]
+    }
+
+    /// Either finished flag for row `i`.
+    pub fn finished(&self, i: usize) -> bool {
+        self.done[i] != 0 || self.trunc[i] != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_addressable() {
+        let mut b = BatchedTransition::with_capacity(3, 4);
+        b.obs[4..8].copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        b.done[2] = 1;
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.obs_row(1), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(b.finished(2));
+        assert!(!b.finished(0));
+    }
+}

@@ -1,0 +1,376 @@
+//! The EnvPool facade: `make` → `send`/`recv` (async) or `step` (sync),
+//! mirroring the paper's Python API (Appendix A) in Rust.
+
+use super::action_queue::ActionBufferQueue;
+use super::batch::BatchedTransition;
+use super::state_queue::StateBufferQueue;
+use super::thread_pool::{EnvSlot, Task, ThreadPool};
+use crate::envs::registry;
+use crate::envs::spec::EnvSpec;
+use crate::{Error, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Pool construction parameters (builder style).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Task id, e.g. `"Pong-v5"`.
+    pub task_id: String,
+    /// Number of environment instances N.
+    pub num_envs: usize,
+    /// Batch size M returned by `recv` (`M == N` ⇒ synchronous mode).
+    pub batch_size: usize,
+    /// Worker threads (paper recommends ≈ CPU cores, with N = 2-3× that).
+    pub num_threads: usize,
+    /// Experiment seed.
+    pub seed: u64,
+    /// Pin worker threads to cores.
+    pub pin_cores: bool,
+}
+
+impl PoolConfig {
+    pub fn new(task_id: &str) -> Self {
+        PoolConfig {
+            task_id: task_id.to_string(),
+            num_envs: 1,
+            batch_size: 1,
+            num_threads: 1,
+            seed: 0,
+            pin_cores: false,
+        }
+    }
+
+    pub fn num_envs(mut self, n: usize) -> Self {
+        self.num_envs = n;
+        if self.batch_size > n {
+            self.batch_size = n;
+        }
+        self
+    }
+
+    pub fn batch_size(mut self, m: usize) -> Self {
+        self.batch_size = m;
+        self
+    }
+
+    pub fn num_threads(mut self, t: usize) -> Self {
+        self.num_threads = t;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn pin_cores(mut self, p: bool) -> Self {
+        self.pin_cores = p;
+        self
+    }
+
+    /// Synchronous-mode config (`batch_size = num_envs`).
+    pub fn sync(mut self) -> Self {
+        self.batch_size = self.num_envs;
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.num_envs == 0 {
+            return Err(Error::Config("num_envs must be > 0".into()));
+        }
+        if self.batch_size == 0 || self.batch_size > self.num_envs {
+            return Err(Error::Config(format!(
+                "batch_size {} must be in [1, num_envs {}]",
+                self.batch_size, self.num_envs
+            )));
+        }
+        if self.num_threads == 0 {
+            return Err(Error::Config("num_threads must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// The environment pool.
+pub struct EnvPool {
+    spec: EnvSpec,
+    cfg: PoolConfig,
+    envs: Arc<Vec<EnvSlot>>,
+    queue: Arc<ActionBufferQueue<Task>>,
+    states: Arc<StateBufferQueue>,
+    workers: Option<ThreadPool>,
+    /// Reusable output block for the owned-recv convenience API.
+    scratch: BatchedTransition,
+    started: bool,
+}
+
+impl EnvPool {
+    /// Construct the pool: instantiate `num_envs` environments (each with
+    /// its own RNG stream), pre-allocate the state queue, spawn workers.
+    pub fn make(cfg: PoolConfig) -> Result<EnvPool> {
+        cfg.validate()?;
+        let spec = registry::spec_for(&cfg.task_id)?;
+        let act_dim = spec.action_space.dim();
+        let mut slots = Vec::with_capacity(cfg.num_envs);
+        for i in 0..cfg.num_envs {
+            slots.push(EnvSlot {
+                env: Mutex::new(registry::make_env(&cfg.task_id, cfg.seed, i as u64)?),
+                action: Mutex::new(vec![0.0; act_dim]),
+                needs_reset: Mutex::new(false),
+            });
+        }
+        let envs = Arc::new(slots);
+        // paper: ActionBufferQueue sized 2N (+ room for shutdown tasks)
+        let queue = Arc::new(ActionBufferQueue::new(2 * cfg.num_envs + cfg.num_threads));
+        let states = Arc::new(StateBufferQueue::new(cfg.num_envs, cfg.batch_size, spec.obs_dim()));
+        let workers =
+            ThreadPool::spawn(cfg.num_threads, envs.clone(), queue.clone(), states.clone(), cfg.pin_cores);
+        let scratch = states.make_output();
+        Ok(EnvPool { spec, cfg, envs, queue, states, workers: Some(workers), scratch, started: false })
+    }
+
+    /// Env spec for this pool's task.
+    pub fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    pub fn config(&self) -> &PoolConfig {
+        &self.cfg
+    }
+
+    /// Total env steps executed by the workers so far.
+    pub fn total_steps(&self) -> u64 {
+        self.workers
+            .as_ref()
+            .map(|w| w.steps.load(std::sync::atomic::Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Kick off the pool: schedule a reset for every environment
+    /// (paper's `async_reset`; call exactly once before the recv loop).
+    pub fn async_reset(&mut self) {
+        assert!(!self.started, "async_reset may only be called once");
+        self.started = true;
+        for i in 0..self.cfg.num_envs {
+            self.enqueue(Task::Reset { env_id: i as u32 });
+        }
+    }
+
+    fn enqueue(&self, mut t: Task) {
+        loop {
+            match self.queue.enqueue(t) {
+                Ok(()) => return,
+                Err(back) => {
+                    t = back;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Send a batch of actions. `actions` is row-major
+    /// `[env_ids.len(), act_dim]`; `env_ids` routes each row (use the ids
+    /// from the last `recv`). Returns immediately (paper §3.1).
+    pub fn send(&self, actions: &[f32], env_ids: &[u32]) -> Result<()> {
+        let act_dim = self.spec.action_space.dim();
+        if actions.len() != env_ids.len() * act_dim {
+            return Err(Error::ActionShape { actions: actions.len(), ids: env_ids.len() });
+        }
+        for (k, &id) in env_ids.iter().enumerate() {
+            let i = id as usize;
+            if i >= self.cfg.num_envs {
+                return Err(Error::BadEnvId { id: i, num_envs: self.cfg.num_envs });
+            }
+            let mut slot = self.envs[i].action.lock().unwrap();
+            slot.copy_from_slice(&actions[k * act_dim..(k + 1) * act_dim]);
+        }
+        // single semaphore post for the whole batch (§Perf optimization)
+        self.queue
+            .enqueue_batch(env_ids.iter().map(|&id| Task::Step { env_id: id }));
+        Ok(())
+    }
+
+    /// Receive the next ready batch into a reusable buffer (hot path —
+    /// zero allocation, zero batching copies).
+    pub fn recv_into(&self, out: &mut BatchedTransition) {
+        self.states.recv_into(out);
+    }
+
+    /// Timed receive; false on timeout.
+    pub fn recv_into_timeout(&self, out: &mut BatchedTransition, d: Duration) -> bool {
+        self.states.recv_into_timeout(out, d)
+    }
+
+    /// Convenience receive returning a clone of the internal scratch
+    /// buffer (allocates; use [`Self::recv_into`] on hot paths).
+    pub fn recv(&mut self) -> Result<BatchedTransition> {
+        let mut out = std::mem::take(&mut self.scratch);
+        self.states.recv_into(&mut out);
+        self.scratch = out.clone();
+        Ok(out)
+    }
+
+    /// Synchronous vectorized step: send then recv. Only meaningful in
+    /// sync mode (`batch_size == num_envs`), where the returned batch
+    /// contains exactly the stepped envs.
+    pub fn step_into(
+        &self,
+        actions: &[f32],
+        env_ids: &[u32],
+        out: &mut BatchedTransition,
+    ) -> Result<()> {
+        self.send(actions, env_ids)?;
+        self.recv_into(out);
+        Ok(())
+    }
+
+    /// Reset all envs and collect the full first batch (sync mode only).
+    pub fn reset_into(&mut self, out: &mut BatchedTransition) -> Result<()> {
+        if self.cfg.batch_size != self.cfg.num_envs {
+            return Err(Error::Config(
+                "reset_into requires sync mode (batch_size == num_envs); use async_reset".into(),
+            ));
+        }
+        if !self.started {
+            self.started = true;
+        }
+        for i in 0..self.cfg.num_envs {
+            self.enqueue(Task::Reset { env_id: i as u32 });
+        }
+        self.recv_into(out);
+        Ok(())
+    }
+
+    /// A correctly-sized reusable output buffer.
+    pub fn make_output(&self) -> BatchedTransition {
+        self.states.make_output()
+    }
+
+    /// Shut down worker threads (also happens on drop).
+    pub fn close(&mut self) {
+        if let Some(mut w) = self.workers.take() {
+            w.shutdown();
+        }
+    }
+}
+
+impl Drop for EnvPool {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_mode_steps_all_envs() {
+        let cfg = PoolConfig::new("CartPole-v1").num_envs(4).batch_size(4).num_threads(2).seed(7);
+        let mut pool = EnvPool::make(cfg).unwrap();
+        let mut out = pool.make_output();
+        pool.reset_into(&mut out).unwrap();
+        assert_eq!(out.len(), 4);
+        let mut ids: Vec<u32> = out.env_ids.clone();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        for _ in 0..50 {
+            let actions: Vec<f32> = out.env_ids.iter().map(|_| 1.0).collect();
+            pool.step_into(&actions, &out.env_ids.clone(), &mut out).unwrap();
+            assert_eq!(out.len(), 4);
+            assert!(out.obs.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn async_mode_returns_batches_of_m() {
+        let cfg = PoolConfig::new("CartPole-v1").num_envs(8).batch_size(3).num_threads(2).seed(1);
+        let mut pool = EnvPool::make(cfg).unwrap();
+        pool.async_reset();
+        let mut out = pool.make_output();
+        let mut seen = vec![0u32; 8];
+        for _ in 0..100 {
+            pool.recv_into(&mut out);
+            assert_eq!(out.len(), 3);
+            for &id in &out.env_ids {
+                seen[id as usize] += 1;
+            }
+            let actions = vec![0.0f32; out.len()];
+            pool.send(&actions, &out.env_ids.clone()).unwrap();
+        }
+        // all envs participate; none dominates pathologically
+        assert!(seen.iter().all(|&c| c > 0), "every env must be served: {seen:?}");
+    }
+
+    #[test]
+    fn auto_reset_keeps_pool_running_forever() {
+        // CartPole episodes end quickly under random actions; the pool
+        // must keep producing batches across episode boundaries.
+        let cfg = PoolConfig::new("CartPole-v1").num_envs(4).batch_size(4).num_threads(2).seed(3);
+        let mut pool = EnvPool::make(cfg).unwrap();
+        let mut out = pool.make_output();
+        pool.reset_into(&mut out).unwrap();
+        let mut dones = 0;
+        for step in 0..500 {
+            let actions: Vec<f32> = (0..4).map(|k| ((step + k) % 2) as f32).collect();
+            pool.step_into(&actions, &out.env_ids.clone(), &mut out).unwrap();
+            dones += out.done.iter().filter(|&&d| d != 0).count();
+        }
+        assert!(dones > 5, "random cartpole must terminate episodes, saw {dones}");
+    }
+
+    #[test]
+    fn bad_inputs_are_rejected() {
+        let cfg = PoolConfig::new("CartPole-v1").num_envs(2).batch_size(2).num_threads(1);
+        let pool = EnvPool::make(cfg).unwrap();
+        assert!(matches!(
+            pool.send(&[0.0, 0.0], &[0]),
+            Err(Error::ActionShape { .. })
+        ));
+        assert!(matches!(
+            pool.send(&[0.0], &[9]),
+            Err(Error::BadEnvId { .. })
+        ));
+        assert!(EnvPool::make(PoolConfig::new("CartPole-v1").num_envs(0)).is_err());
+        assert!(EnvPool::make(PoolConfig::new("NoSuchEnv-v0")).is_err());
+    }
+
+    #[test]
+    fn continuous_actions_route_correctly() {
+        let cfg = PoolConfig::new("Pendulum-v1").num_envs(3).batch_size(3).num_threads(2).seed(2);
+        let mut pool = EnvPool::make(cfg).unwrap();
+        assert_eq!(pool.spec().action_space.dim(), 1);
+        let mut out = pool.make_output();
+        pool.reset_into(&mut out).unwrap();
+        for _ in 0..20 {
+            let actions: Vec<f32> = out.env_ids.iter().map(|&i| i as f32 - 1.0).collect();
+            pool.step_into(&actions, &out.env_ids.clone(), &mut out).unwrap();
+            // pendulum never terminates before 200 steps
+            assert!(out.done.iter().all(|&d| d == 0));
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        // Same seed, same per-env actions => same rewards regardless of
+        // worker parallelism (RNG streams are per-env).
+        let run = |threads: usize| -> Vec<f32> {
+            let cfg =
+                PoolConfig::new("CartPole-v1").num_envs(4).batch_size(4).num_threads(threads).seed(11);
+            let mut pool = EnvPool::make(cfg).unwrap();
+            let mut out = pool.make_output();
+            pool.reset_into(&mut out).unwrap();
+            let mut rewards = vec![0.0f32; 4];
+            for step in 0..60 {
+                let ids = out.env_ids.clone();
+                let actions: Vec<f32> = ids.iter().map(|&i| ((step + i as usize) % 2) as f32).collect();
+                pool.step_into(&actions, &ids, &mut out).unwrap();
+                for (k, &id) in out.env_ids.iter().enumerate() {
+                    rewards[id as usize] += out.rew[k] * (step as f32 + 1.0);
+                }
+            }
+            rewards
+        };
+        assert_eq!(run(1), run(3));
+    }
+}

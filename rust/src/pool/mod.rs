@@ -1,0 +1,35 @@
+//! EnvPool core — the paper's system contribution (§3).
+//!
+//! Three components, optimized exactly as the paper describes:
+//!
+//! - [`ActionBufferQueue`] — a lock-free circular buffer of capacity `2N`
+//!   with two atomic counters and a semaphore, caching actions from
+//!   `send` until worker threads consume them (paper Appendix D.1).
+//! - [`ThreadPool`] — a fixed set of worker threads (optionally pinned to
+//!   cores) that pop actions, step the owning environment, and write the
+//!   result straight into the state queue (paper §3.3).
+//! - [`StateBufferQueue`] — a circular queue of pre-allocated *blocks*,
+//!   each holding `batch_size` transition slots. A worker acquires a slot
+//!   with one atomic fetch-add and writes observation bytes in place;
+//!   when the write-count hits `batch_size` the block is handed to the
+//!   consumer whole — zero batching copies (paper Appendix D.2).
+//!
+//! Synchronous vs asynchronous execution (paper §3.2) falls out of the
+//! `num_envs` / `batch_size` pair: `M == N` makes consecutive
+//! `send`/`recv` equivalent to a synchronous vectorized step; `M < N`
+//! waits only for the fastest `M` environments, hiding the long tail.
+
+pub mod sem;
+pub mod action_queue;
+pub mod state_queue;
+pub mod thread_pool;
+pub mod batch;
+pub mod envpool;
+pub mod numa;
+
+pub use action_queue::ActionBufferQueue;
+pub use batch::BatchedTransition;
+pub use envpool::{EnvPool, PoolConfig};
+pub use numa::NumaPool;
+pub use state_queue::StateBufferQueue;
+pub use thread_pool::ThreadPool;

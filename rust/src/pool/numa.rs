@@ -1,0 +1,125 @@
+//! NUMA-sharded pool (paper "EnvPool (numa+async)"): one independent
+//! EnvPool per NUMA node, each with its own ActionBufferQueue /
+//! StateBufferQueue / workers, eliminating cross-node queue contention.
+//!
+//! On this single-socket container the shards are logical (no node
+//! binding is possible), but the structure — and the contention-isolation
+//! benefit it measures in `benches/table1_throughput` — is the same.
+
+use super::batch::BatchedTransition;
+use super::envpool::{EnvPool, PoolConfig};
+use crate::Result;
+
+/// A set of independent EnvPool shards addressed through one facade.
+/// Env ids are global: shard `k` owns ids `[k*per, (k+1)*per)`.
+pub struct NumaPool {
+    shards: Vec<EnvPool>,
+    envs_per_shard: usize,
+}
+
+impl NumaPool {
+    /// Split `cfg` across `nodes` shards. `num_envs`, `batch_size` and
+    /// `num_threads` must divide evenly (matching the paper's setup of
+    /// one identical pool per node).
+    pub fn make(cfg: PoolConfig, nodes: usize) -> Result<NumaPool> {
+        if nodes == 0 || cfg.num_envs % nodes != 0 || cfg.batch_size % nodes != 0 {
+            return Err(crate::Error::Config(format!(
+                "num_envs {} and batch_size {} must divide across {nodes} nodes",
+                cfg.num_envs, cfg.batch_size
+            )));
+        }
+        let per = cfg.num_envs / nodes;
+        let shards = (0..nodes)
+            .map(|k| {
+                let mut c = cfg.clone();
+                c.num_envs = per;
+                c.batch_size = cfg.batch_size / nodes;
+                c.num_threads = (cfg.num_threads / nodes).max(1);
+                c.seed = cfg.seed.wrapping_add(k as u64 * 0x9E37_79B9);
+                EnvPool::make(c)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(NumaPool { shards, envs_per_shard: per })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Kick off all shards.
+    pub fn async_reset(&mut self) {
+        for s in &mut self.shards {
+            s.async_reset();
+        }
+    }
+
+    /// Send actions routed by *global* env id.
+    pub fn send(&self, actions: &[f32], env_ids: &[u32]) -> Result<()> {
+        let act_dim = self.shards[0].spec().action_space.dim();
+        for (k, &gid) in env_ids.iter().enumerate() {
+            let shard = gid as usize / self.envs_per_shard;
+            let local = gid as usize % self.envs_per_shard;
+            self.shards[shard]
+                .send(&actions[k * act_dim..(k + 1) * act_dim], &[local as u32])?;
+        }
+        Ok(())
+    }
+
+    /// Receive one batch from every shard, concatenated, with env ids
+    /// translated back to global numbering. `outs` must hold one buffer
+    /// per shard (`make_outputs`).
+    pub fn recv_all(&self, outs: &mut [BatchedTransition]) {
+        for (k, s) in self.shards.iter().enumerate() {
+            s.recv_into(&mut outs[k]);
+            for id in &mut outs[k].env_ids {
+                *id += (k * self.envs_per_shard) as u32;
+            }
+        }
+    }
+
+    /// Per-shard reusable output buffers.
+    pub fn make_outputs(&self) -> Vec<BatchedTransition> {
+        self.shards.iter().map(|s| s.make_output()).collect()
+    }
+
+    /// Total steps across shards.
+    pub fn total_steps(&self) -> u64 {
+        self.shards.iter().map(|s| s.total_steps()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_cover_all_envs() {
+        let cfg = PoolConfig::new("CartPole-v1").num_envs(8).batch_size(4).num_threads(2).seed(5);
+        let mut pool = NumaPool::make(cfg, 2).unwrap();
+        assert_eq!(pool.num_shards(), 2);
+        pool.async_reset();
+        let mut outs = pool.make_outputs();
+        let mut seen = vec![0u32; 8];
+        for _ in 0..50 {
+            pool.recv_all(&mut outs);
+            let mut ids = vec![];
+            let mut actions = vec![];
+            for o in &outs {
+                for &id in &o.env_ids {
+                    seen[id as usize] += 1;
+                    ids.push(id);
+                    actions.push(0.0f32);
+                }
+            }
+            pool.send(&actions, &ids).unwrap();
+        }
+        assert!(seen.iter().all(|&c| c > 0), "{seen:?}");
+        assert!(seen[0..4].iter().sum::<u32>() > 0 && seen[4..8].iter().sum::<u32>() > 0);
+    }
+
+    #[test]
+    fn uneven_split_rejected() {
+        let cfg = PoolConfig::new("CartPole-v1").num_envs(6).batch_size(3).num_threads(2);
+        assert!(NumaPool::make(cfg, 4).is_err());
+    }
+}

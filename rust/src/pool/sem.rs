@@ -1,0 +1,118 @@
+//! A counting semaphore (std has none): Mutex<count> + Condvar. Used to
+//! park worker threads when the action queue is empty and consumers when
+//! no block is ready — exactly the two waits the paper's queues need.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Counting semaphore.
+pub struct Semaphore {
+    count: Mutex<isize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(initial: isize) -> Self {
+        Semaphore { count: Mutex::new(initial), cv: Condvar::new() }
+    }
+
+    /// Release `n` permits.
+    pub fn post_n(&self, n: isize) {
+        let mut c = self.count.lock().unwrap();
+        *c += n;
+        if n == 1 {
+            self.cv.notify_one();
+        } else {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Release one permit.
+    pub fn post(&self) {
+        self.post_n(1);
+    }
+
+    /// Acquire one permit, blocking.
+    pub fn wait(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c <= 0 {
+            c = self.cv.wait(c).unwrap();
+        }
+        *c -= 1;
+    }
+
+    /// Acquire one permit with a timeout; returns false on timeout.
+    pub fn wait_timeout(&self, d: Duration) -> bool {
+        let deadline = std::time::Instant::now() + d;
+        let mut c = self.count.lock().unwrap();
+        while *c <= 0 {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, res) = self.cv.wait_timeout(c, deadline - now).unwrap();
+            c = guard;
+            if res.timed_out() && *c <= 0 {
+                return false;
+            }
+        }
+        *c -= 1;
+        true
+    }
+
+    /// Current permit count (diagnostics only; racy by nature).
+    pub fn approx_count(&self) -> isize {
+        *self.count.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn post_then_wait() {
+        let s = Semaphore::new(0);
+        s.post();
+        s.wait(); // must not block
+        assert_eq!(s.approx_count(), 0);
+    }
+
+    #[test]
+    fn wait_timeout_expires() {
+        let s = Semaphore::new(0);
+        assert!(!s.wait_timeout(Duration::from_millis(10)));
+        s.post();
+        assert!(s.wait_timeout(Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let s = Arc::new(Semaphore::new(0));
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            for _ in 0..100 {
+                s2.wait();
+            }
+        });
+        for _ in 0..100 {
+            s.post();
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn post_n_releases_many() {
+        let s = Arc::new(Semaphore::new(0));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let s2 = s.clone();
+            handles.push(std::thread::spawn(move || s2.wait()));
+        }
+        s.post_n(4);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

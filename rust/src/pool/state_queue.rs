@@ -1,0 +1,293 @@
+//! StateBufferQueue (paper Appendix D.2): a circular queue of
+//! pre-allocated blocks, each holding `batch_size` transition slots.
+//!
+//! A worker that finishes an env step *acquires* a slot with one atomic
+//! fetch-add and writes the observation directly into the block's memory
+//! (first come, first served) — there is no collect-then-batch copy.
+//! When a block's write count reaches `batch_size` it is published to the
+//! consumer whole; `recv_into` swaps the block's buffers with the
+//! caller's recycled ones, which is the Rust equivalent of the paper's
+//! "ownership of the block is transferred to Python".
+//!
+//! Blocks complete in allocation order (slots are acquired *after* the
+//! env step finishes and written immediately), so consumption is FIFO.
+
+use super::batch::BatchedTransition;
+use super::sem::Semaphore;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+struct Block {
+    /// Generation counter: block is writable for global round `gen`.
+    gen: AtomicUsize,
+    /// Slots committed so far in the current round.
+    written: AtomicUsize,
+    data: UnsafeCell<BatchedTransition>,
+}
+
+unsafe impl Sync for Block {}
+
+/// The block-structured state queue.
+pub struct StateBufferQueue {
+    blocks: Vec<Block>,
+    batch_size: usize,
+    obs_dim: usize,
+    /// Global slot allocation cursor (slot -> block via div/mod).
+    alloc_pos: AtomicUsize,
+    /// Next block round to consume (single consumer).
+    consume_pos: AtomicUsize,
+    ready: Semaphore,
+}
+
+/// An acquired slot: write target for exactly one transition.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotTicket {
+    block: usize,
+    slot: usize,
+}
+
+impl StateBufferQueue {
+    /// `num_envs` bounds the number of in-flight transitions; block count
+    /// is sized so a worker can always acquire a slot as long as the
+    /// consumer keeps up (paper pre-allocates on the same reasoning).
+    pub fn new(num_envs: usize, batch_size: usize, obs_dim: usize) -> Self {
+        assert!(batch_size >= 1 && batch_size <= num_envs);
+        let num_blocks = num_envs.div_ceil(batch_size) + 2;
+        let blocks = (0..num_blocks)
+            .map(|i| Block {
+                gen: AtomicUsize::new(i), // block i serves round i first
+                written: AtomicUsize::new(0),
+                data: UnsafeCell::new(BatchedTransition::with_capacity(batch_size, obs_dim)),
+            })
+            .collect();
+        StateBufferQueue {
+            blocks,
+            batch_size,
+            obs_dim,
+            alloc_pos: AtomicUsize::new(0),
+            consume_pos: AtomicUsize::new(0),
+            ready: Semaphore::new(0),
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Acquire the next free slot (first come, first served). Spins (with
+    /// yield) in the rare case every block is still owned by the consumer.
+    pub fn acquire(&self) -> SlotTicket {
+        let g = self.alloc_pos.fetch_add(1, Ordering::Relaxed);
+        let round = g / self.batch_size;
+        let block = round % self.blocks.len();
+        let slot = g % self.batch_size;
+        // Wait until the block has been recycled up to our round.
+        let mut spins = 0u32;
+        while self.blocks[block].gen.load(Ordering::Acquire) != round {
+            spins += 1;
+            if spins > 64 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        SlotTicket { block, slot }
+    }
+
+    /// Write a transition into an acquired slot. `fill` writes the
+    /// observation directly into block memory and returns the
+    /// `(reward, done, truncated)` scalars — this is where the env step
+    /// itself runs, so the observation never exists anywhere else.
+    pub fn write_with(
+        &self,
+        t: SlotTicket,
+        env_id: u32,
+        fill: impl FnOnce(&mut [f32]) -> (f32, bool, bool),
+    ) {
+        let b = &self.blocks[t.block];
+        // Safety: slot indices within a round are unique (fetch-add), and
+        // the generation check in acquire() guarantees the consumer is
+        // not holding this block.
+        unsafe {
+            let data = &mut *b.data.get();
+            let o = t.slot * self.obs_dim;
+            let (rew, done, trunc) = fill(&mut data.obs[o..o + self.obs_dim]);
+            data.rew[t.slot] = rew;
+            data.done[t.slot] = done as u8;
+            data.trunc[t.slot] = trunc as u8;
+            data.env_ids[t.slot] = env_id;
+        }
+        let prev = b.written.fetch_add(1, Ordering::AcqRel);
+        if prev + 1 == self.batch_size {
+            self.ready.post();
+        }
+    }
+
+    /// Convenience wrapper over [`Self::write_with`] for pre-computed
+    /// scalars.
+    pub fn write(
+        &self,
+        t: SlotTicket,
+        env_id: u32,
+        rew: f32,
+        done: bool,
+        trunc: bool,
+        fill_obs: impl FnOnce(&mut [f32]),
+    ) {
+        self.write_with(t, env_id, |obs| {
+            fill_obs(obs);
+            (rew, done, trunc)
+        });
+    }
+
+    /// Consumer side: wait for the next block (FIFO) and swap its payload
+    /// into `out` (which must have been created by
+    /// [`BatchedTransition::with_capacity`] with matching sizes, or have
+    /// come from a previous `recv_into`). Zero copies, zero allocation.
+    pub fn recv_into(&self, out: &mut BatchedTransition) {
+        self.ready.wait();
+        self.take_ready(out);
+    }
+
+    /// Timed variant; returns false if nothing became ready.
+    pub fn recv_into_timeout(&self, out: &mut BatchedTransition, d: Duration) -> bool {
+        if !self.ready.wait_timeout(d) {
+            return false;
+        }
+        self.take_ready(out);
+        true
+    }
+
+    fn take_ready(&self, out: &mut BatchedTransition) {
+        let round = self.consume_pos.fetch_add(1, Ordering::Relaxed);
+        let bi = round % self.blocks.len();
+        let b = &self.blocks[bi];
+        // Blocks complete in order; the posted permit may belong to a
+        // later block in rare interleavings, so wait for ours.
+        let mut spins = 0u32;
+        while b.written.load(Ordering::Acquire) < self.batch_size {
+            spins += 1;
+            if spins > 64 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        debug_assert_eq!(b.gen.load(Ordering::Relaxed), round);
+        // Safety: all writers for this round have committed (written ==
+        // batch_size with Acquire), and no writer for a later round can
+        // touch the block until we bump `gen` below.
+        unsafe {
+            let data = &mut *b.data.get();
+            std::mem::swap(data, out);
+            debug_assert_eq!(out.rew.len(), self.batch_size);
+        }
+        b.written.store(0, Ordering::Relaxed);
+        b.gen.store(round + self.blocks.len(), Ordering::Release);
+    }
+
+    /// A correctly-sized reusable output buffer.
+    pub fn make_output(&self) -> BatchedTransition {
+        BatchedTransition::with_capacity(self.batch_size, self.obs_dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_thread_round_trip() {
+        let q = StateBufferQueue::new(4, 2, 3);
+        for i in 0..4u32 {
+            let t = q.acquire();
+            q.write(t, i, i as f32, false, false, |obs| {
+                obs.fill(i as f32);
+            });
+        }
+        let mut out = q.make_output();
+        q.recv_into(&mut out);
+        assert_eq!(out.env_ids, vec![0, 1]);
+        assert_eq!(out.obs_row(1), &[1.0, 1.0, 1.0]);
+        q.recv_into(&mut out);
+        assert_eq!(out.env_ids, vec![2, 3]);
+        assert_eq!(out.rew, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn blocks_recycle_many_rounds() {
+        let q = StateBufferQueue::new(4, 2, 1);
+        let mut out = q.make_output();
+        for round in 0..50u32 {
+            for k in 0..2u32 {
+                let t = q.acquire();
+                q.write(t, k, (round * 2 + k) as f32, false, false, |o| o[0] = round as f32);
+            }
+            q.recv_into(&mut out);
+            assert_eq!(out.rew, vec![(round * 2) as f32, (round * 2 + 1) as f32]);
+            assert_eq!(out.obs, vec![round as f32, round as f32]);
+        }
+    }
+
+    #[test]
+    fn concurrent_writers_fill_blocks() {
+        let q = Arc::new(StateBufferQueue::new(16, 4, 8));
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100u32 {
+                        let t = q.acquire();
+                        q.write(t, w * 1000 + i, 1.0, false, false, |obs| {
+                            obs.fill((w * 1000 + i) as f32);
+                        });
+                    }
+                })
+            })
+            .collect();
+        let mut out = q.make_output();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            q.recv_into(&mut out);
+            for i in 0..out.len() {
+                let id = out.env_ids[i];
+                assert!(seen.insert(id), "duplicate env_id {id}");
+                assert!(out.obs_row(i).iter().all(|&x| x == id as f32), "torn obs write");
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        assert_eq!(seen.len(), 400);
+    }
+
+    #[test]
+    fn timeout_when_incomplete() {
+        let q = StateBufferQueue::new(4, 2, 1);
+        let t = q.acquire();
+        q.write(t, 0, 0.0, false, false, |o| o[0] = 0.0);
+        // only 1 of 2 slots written
+        let mut out = q.make_output();
+        assert!(!q.recv_into_timeout(&mut out, Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn done_and_trunc_flags_roundtrip() {
+        let q = StateBufferQueue::new(2, 2, 1);
+        let t = q.acquire();
+        q.write(t, 0, 1.0, true, false, |o| o[0] = 0.0);
+        let t = q.acquire();
+        q.write(t, 1, -1.0, false, true, |o| o[0] = 0.0);
+        let mut out = q.make_output();
+        q.recv_into(&mut out);
+        assert_eq!(out.done, vec![1, 0]);
+        assert_eq!(out.trunc, vec![0, 1]);
+        assert!(out.finished(0) && out.finished(1));
+    }
+}

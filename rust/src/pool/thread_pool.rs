@@ -1,0 +1,164 @@
+//! The worker ThreadPool (paper §3.3): a fixed set of `std::thread`
+//! workers that pull env-step tasks from the ActionBufferQueue, execute
+//! them, and commit results straight into the StateBufferQueue. Threads
+//! can be pinned to cores to cut context switches and improve cache
+//! residency, as the paper recommends.
+
+use super::action_queue::ActionBufferQueue;
+use super::state_queue::StateBufferQueue;
+use crate::envs::env::Env;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A task for a worker.
+#[derive(Debug, Clone)]
+pub enum Task {
+    /// Step env `env_id` with the action currently in its action slot.
+    Step { env_id: u32 },
+    /// Reset env `env_id` and report its initial observation.
+    Reset { env_id: u32 },
+    /// Terminate the receiving worker.
+    Shutdown,
+}
+
+/// Per-environment state owned by the pool; each env is touched by at
+/// most one worker at a time (protocol: an env has at most one
+/// outstanding action), so the mutexes below are uncontended.
+pub struct EnvSlot {
+    pub env: Mutex<Box<dyn Env>>,
+    /// Pending action payload for this env (written by `send`).
+    pub action: Mutex<Vec<f32>>,
+    /// Env finished and must be reset on its next step (EnvPool-style
+    /// auto-reset: the reset observation is returned for the next action).
+    pub needs_reset: Mutex<bool>,
+}
+
+/// Worker pool. Owns the join handles; dropping shuts workers down.
+pub struct ThreadPool {
+    handles: Vec<JoinHandle<()>>,
+    queue: Arc<ActionBufferQueue<Task>>,
+    /// Total env steps executed (throughput accounting).
+    pub steps: Arc<AtomicU64>,
+}
+
+impl ThreadPool {
+    /// Spawn `num_threads` workers over the shared env table / queues.
+    /// `pin_cores` pins worker `i` to core `i % cores` (paper §3.3).
+    pub fn spawn(
+        num_threads: usize,
+        envs: Arc<Vec<EnvSlot>>,
+        queue: Arc<ActionBufferQueue<Task>>,
+        states: Arc<StateBufferQueue>,
+        pin_cores: bool,
+    ) -> ThreadPool {
+        let steps = Arc::new(AtomicU64::new(0));
+        let handles = (0..num_threads)
+            .map(|i| {
+                let envs = envs.clone();
+                let queue = queue.clone();
+                let states = states.clone();
+                let steps = steps.clone();
+                std::thread::Builder::new()
+                    .name(format!("envpool-worker-{i}"))
+                    .spawn(move || {
+                        if pin_cores {
+                            pin_to_core(i);
+                        }
+                        worker_loop(&envs, &queue, &states, &steps);
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { handles, queue, steps }
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Ask all workers to exit and join them.
+    pub fn shutdown(&mut self) {
+        for _ in 0..self.handles.len() {
+            let mut task = Task::Shutdown;
+            loop {
+                match self.queue.enqueue(task) {
+                    Ok(()) => break,
+                    Err(t) => {
+                        task = t;
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if !self.handles.is_empty() {
+            self.shutdown();
+        }
+    }
+}
+
+fn worker_loop(
+    envs: &[EnvSlot],
+    queue: &ActionBufferQueue<Task>,
+    states: &StateBufferQueue,
+    steps: &AtomicU64,
+) {
+    loop {
+        match queue.dequeue() {
+            Task::Shutdown => return,
+            Task::Reset { env_id } => {
+                let slot = &envs[env_id as usize];
+                let mut env = slot.env.lock().unwrap();
+                *slot.needs_reset.lock().unwrap() = false;
+                let t = states.acquire();
+                states.write(t, env_id, 0.0, false, false, |obs| env.reset(obs));
+            }
+            Task::Step { env_id } => {
+                let slot = &envs[env_id as usize];
+                let mut env = slot.env.lock().unwrap();
+                let action = slot.action.lock().unwrap();
+                let mut needs_reset = slot.needs_reset.lock().unwrap();
+                let t = states.acquire();
+                if *needs_reset {
+                    // EnvPool auto-reset: the action after a terminal
+                    // transition triggers reset; its "step" result is the
+                    // initial observation with zero reward.
+                    *needs_reset = false;
+                    states.write(t, env_id, 0.0, false, false, |obs| env.reset(obs));
+                } else {
+                    let mut finished = false;
+                    states.write_with(t, env_id, |obs| {
+                        let r = env.step(&action, obs);
+                        finished = r.finished();
+                        (r.reward, r.done, r.truncated)
+                    });
+                    if finished {
+                        *needs_reset = true;
+                    }
+                }
+                steps.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Pin the calling thread to a core (best effort, Linux only).
+pub fn pin_to_core(idx: usize) {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let cores = libc::sysconf(libc::_SC_NPROCESSORS_ONLN).max(1) as usize;
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(idx % cores, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    }
+    #[cfg(not(target_os = "linux"))]
+    let _ = idx;
+}

@@ -1,0 +1,126 @@
+//! Mini property-testing framework (the vendored crate set has no
+//! `proptest`). Seeded generators + a `forall` driver with shrinking-free
+//! but reproducible counterexample reporting: every failure prints the
+//! case index and seed so it can be replayed exactly.
+
+use crate::rng::Pcg32;
+
+/// Number of cases per property, overridable via `ENVPOOL_PROP_CASES`.
+pub fn num_cases() -> usize {
+    std::env::var("ENVPOOL_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generation context handed to properties.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg32,
+}
+
+impl<'a> Gen<'a> {
+    /// usize uniform in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    /// f32 uniform in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    /// Random boolean.
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Vector of given length generated per-element.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'s, T>(&mut self, xs: &'s [T]) -> &'s T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// A permutation of `0..n` (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.usize_in(0, i);
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+/// Run `prop` against `num_cases()` generated inputs. The property
+/// returns `Err(msg)` to signal failure; panics with seed + case index.
+pub fn forall<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed: u64 = std::env::var("ENVPOOL_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_CAFE);
+    for case in 0..num_cases() {
+        let mut rng = Pcg32::new(base_seed, case as u64);
+        let mut g = Gen { rng: &mut rng };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: ENVPOOL_PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing property-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutation_is_permutation() {
+        forall("perm", |g| {
+            let n = g.usize_in(1, 50);
+            let p = g.permutation(n);
+            let mut seen = vec![false; n];
+            for &x in &p {
+                prop_assert!(x < n, "out of range {x}");
+                prop_assert!(!seen[x], "duplicate {x}");
+                seen[x] = true;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        forall("bounds", |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let x = g.usize_in(lo, hi);
+            prop_assert!(x >= lo && x <= hi, "{x} not in [{lo},{hi}]");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failure_reports() {
+        forall("always-fails", |_| Err("nope".into()));
+    }
+}

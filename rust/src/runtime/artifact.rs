@@ -1,0 +1,214 @@
+//! Artifact manifest: parse `artifacts/manifest.txt` (the flat mirror of
+//! manifest.json emitted by `compile.aot`) and load initial parameter
+//! blobs.
+
+use crate::config::KvFile;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// One named parameter's metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered training configuration.
+#[derive(Debug, Clone)]
+pub struct ArtifactConfig {
+    pub key: String,
+    pub task: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: usize,
+    pub continuous: bool,
+    pub num_envs: usize,
+    pub num_steps: usize,
+    pub num_minibatches: usize,
+    pub minibatch_size: usize,
+    pub gamma: f32,
+    pub lam: f32,
+    pub params: Vec<ParamMeta>,
+    pub policy_file: PathBuf,
+    pub train_file: PathBuf,
+    pub gae_file: PathBuf,
+    pub params_file: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: Vec<ArtifactConfig>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let kv = KvFile::load(path.to_str().ok_or_else(|| Error::Artifact("bad path".into()))?)
+            .map_err(|e| Error::Artifact(format!("{}: {e}", path.display())))?;
+        let keys = kv.get("configs", "");
+        let mut configs = Vec::new();
+        for key in keys.split(',').filter(|s| !s.is_empty()) {
+            let g = |f: &str| kv.get(&format!("{key}.{f}"), "");
+            let gi = |f: &str| -> Result<usize> {
+                g(f).parse().map_err(|_| Error::Artifact(format!("{key}.{f} missing/bad")))
+            };
+            let gf = |f: &str| -> Result<f32> {
+                g(f).parse().map_err(|_| Error::Artifact(format!("{key}.{f} missing/bad")))
+            };
+            let params = g("params")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|item| {
+                    let (name, dims) = item
+                        .split_once(':')
+                        .ok_or_else(|| Error::Artifact(format!("bad param entry {item}")))?;
+                    let shape = dims
+                        .split('x')
+                        .map(|d| d.parse().map_err(|_| Error::Artifact(format!("bad dim {d}"))))
+                        .collect::<Result<Vec<usize>>>()?;
+                    Ok(ParamMeta { name: name.to_string(), shape })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            configs.push(ArtifactConfig {
+                key: key.to_string(),
+                task: g("task"),
+                obs_dim: gi("obs_dim")?,
+                act_dim: gi("act_dim")?,
+                hidden: gi("hidden")?,
+                continuous: g("continuous") == "true",
+                num_envs: gi("num_envs")?,
+                num_steps: gi("num_steps")?,
+                num_minibatches: gi("num_minibatches")?,
+                minibatch_size: gi("minibatch_size")?,
+                gamma: gf("gamma")?,
+                lam: gf("lam")?,
+                params,
+                policy_file: dir.join(g("files.policy")),
+                train_file: dir.join(g("files.train")),
+                gae_file: dir.join(g("files.gae")),
+                params_file: dir.join(g("files.params")),
+            });
+        }
+        if configs.is_empty() {
+            return Err(Error::Artifact(format!("no configs in {}", path.display())));
+        }
+        Ok(Manifest { dir, configs })
+    }
+
+    /// Find a config by exact key.
+    pub fn by_key(&self, key: &str) -> Result<&ArtifactConfig> {
+        self.configs
+            .iter()
+            .find(|c| c.key == key)
+            .ok_or_else(|| Error::Artifact(format!("no artifact config named {key:?}")))
+    }
+
+    /// Find the config for `(task, num_envs)` — how the trainer resolves
+    /// which executable set matches its TrainConfig.
+    pub fn for_task(&self, task: &str, num_envs: usize) -> Result<&ArtifactConfig> {
+        self.configs
+            .iter()
+            .find(|c| c.task == task && c.num_envs == num_envs && !c.key.ends_with("_pallas"))
+            .ok_or_else(|| {
+                let have: Vec<String> = self
+                    .configs
+                    .iter()
+                    .filter(|c| c.task == task)
+                    .map(|c| format!("{} (N={})", c.key, c.num_envs))
+                    .collect();
+                Error::Artifact(format!(
+                    "no artifacts for task {task:?} with num_envs {num_envs}; \
+                     available: {have:?} — add a config to python/compile/aot.py \
+                     and re-run `make artifacts`"
+                ))
+            })
+    }
+
+    /// Load the initial parameter blob for a config (raw f32 LE,
+    /// concatenated in spec order).
+    pub fn load_params(&self, cfg: &ArtifactConfig) -> Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(&cfg.params_file)?;
+        let total: usize = cfg.params.iter().map(|p| p.numel()).sum();
+        if bytes.len() != total * 4 {
+            return Err(Error::Artifact(format!(
+                "{}: {} bytes, expected {} ({} f32s)",
+                cfg.params_file.display(),
+                bytes.len(),
+                total * 4,
+                total
+            )));
+        }
+        let mut out = Vec::with_capacity(cfg.params.len());
+        let mut off = 0;
+        for p in &cfg.params {
+            let n = p.numel();
+            let vals = bytes[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.push(vals);
+            off += n * 4;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::load("artifacts").expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn manifest_parses_and_has_cartpole() {
+        let m = manifest();
+        let c = m.for_task("CartPole-v1", 8).unwrap();
+        assert_eq!(c.obs_dim, 4);
+        assert_eq!(c.act_dim, 2);
+        assert!(!c.continuous);
+        assert_eq!(c.params.len(), 8);
+        assert_eq!(c.params[0].shape, vec![4, 64]);
+        assert!(c.policy_file.is_file());
+        assert!(c.train_file.is_file());
+        assert!(c.gae_file.is_file());
+    }
+
+    #[test]
+    fn params_blob_loads_with_correct_sizes() {
+        let m = manifest();
+        let c = m.for_task("CartPole-v1", 8).unwrap();
+        let params = m.load_params(c).unwrap();
+        assert_eq!(params.len(), 8);
+        assert_eq!(params[0].len(), 4 * 64);
+        // orthogonal init => nonzero weights, zero biases
+        assert!(params[0].iter().any(|&x| x != 0.0));
+        assert!(params[1].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn continuous_config_has_log_std() {
+        let m = manifest();
+        let c = m.for_task("Ant-v4", 64).unwrap();
+        assert!(c.continuous);
+        assert!(c.params.iter().any(|p| p.name == "log_std"));
+    }
+
+    #[test]
+    fn unknown_lookup_is_helpful() {
+        let m = manifest();
+        let e = m.for_task("CartPole-v1", 999).unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

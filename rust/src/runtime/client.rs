@@ -1,0 +1,122 @@
+//! PJRT client wrapper with an executable cache: each HLO-text artifact
+//! is parsed and compiled once, then reused for the whole run.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// The process-wide XLA runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()?, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text file (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = path.as_ref().to_string_lossy().into_owned();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        if !path.as_ref().is_file() {
+            return Err(Error::Artifact(format!(
+                "{key} not found — run `make artifacts`"
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple
+    /// (aot.py lowers everything with `return_tuple=True`).
+    ///
+    /// NOTE: prefer [`Self::run_bufs`] on hot paths — the xla crate's
+    /// literal `execute` leaks its internal literal→buffer conversions
+    /// (~arg bytes per call; see EXPERIMENTS.md §Perf), while the buffer
+    /// path is clean.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = args
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        self.run_bufs(exe, &bufs)
+    }
+
+    /// Upload a host f32 tensor to a device buffer.
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a host f32 scalar.
+    pub fn buf_scalar(&self, x: f32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[x], &[], None)?)
+    }
+
+    /// Execute with device-buffer inputs; returns the decomposed output
+    /// tuple as host literals.
+    pub fn run_bufs(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute_b::<xla::PjRtBuffer>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literal::{tensor_f32, to_vec_f32};
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn load_and_run_policy_artifact() {
+        let rt = Runtime::cpu().unwrap();
+        let m = crate::runtime::artifact::Manifest::load("artifacts").unwrap();
+        let cfg = m.for_task("CartPole-v1", 8).unwrap();
+        let exe = rt.load(&cfg.policy_file).unwrap();
+        // cache hit second time
+        let _exe2 = rt.load(&cfg.policy_file).unwrap();
+
+        let params = m.load_params(cfg).unwrap();
+        let mut args: Vec<xla::Literal> = cfg
+            .params
+            .iter()
+            .zip(&params)
+            .map(|(meta, vals)| tensor_f32(vals, &meta.shape).unwrap())
+            .collect();
+        let obs = vec![0.1f32; 8 * 4];
+        args.push(tensor_f32(&obs, &[8, 4]).unwrap());
+        let out = rt.run(&exe, &args).unwrap();
+        assert_eq!(out.len(), 2, "discrete policy returns (logits, value)");
+        let logits = to_vec_f32(&out[0]).unwrap();
+        let value = to_vec_f32(&out[1]).unwrap();
+        assert_eq!(logits.len(), 8 * 2);
+        assert_eq!(value.len(), 8);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+}

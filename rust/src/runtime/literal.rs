@@ -1,0 +1,46 @@
+//! Typed helpers over `xla::Literal` (f32 tensors on the host side).
+
+use crate::Result;
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn tensor_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let l = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims_i64)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Read an f32 literal back to a host vector.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Read an f32 literal's first element (for scalar outputs).
+pub fn scalar_of(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let l = tensor_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), data);
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = scalar_f32(2.5);
+        assert_eq!(scalar_of(&l).unwrap(), 2.5);
+    }
+}

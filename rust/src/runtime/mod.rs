@@ -1,0 +1,16 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//! Python never runs at request time — the flow is
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.
+
+pub mod artifact;
+pub mod client;
+pub mod literal;
+pub mod policy;
+pub mod trainer_exec;
+
+pub use artifact::{ArtifactConfig, Manifest};
+pub use client::Runtime;
+pub use policy::{Policy, PolicyOutput};
+pub use trainer_exec::{GaeExec, TrainExec, TrainStats};

@@ -1,0 +1,109 @@
+//! The policy executable: batched actor-critic forward pass from the
+//! L3 hot loop.
+
+use super::artifact::ArtifactConfig;
+use super::client::Runtime;
+use super::literal::to_vec_f32;
+use crate::agent::params::ParamStore;
+use crate::Result;
+use std::sync::Arc;
+
+/// Host-side result of one policy call.
+#[derive(Debug, Clone)]
+pub struct PolicyOutput {
+    /// Discrete: logits `[B, A]`. Continuous: mean `[B, A]`.
+    pub dist: Vec<f32>,
+    /// Continuous only: per-sample log-std `[B, A]` (empty for discrete).
+    pub log_std: Vec<f32>,
+    /// State values `[B]`.
+    pub value: Vec<f32>,
+}
+
+/// Compiled policy forward pass.
+pub struct Policy {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub continuous: bool,
+}
+
+impl Policy {
+    pub fn load(rt: &Runtime, cfg: &ArtifactConfig) -> Result<Policy> {
+        Ok(Policy {
+            exe: rt.load(&cfg.policy_file)?,
+            batch: cfg.num_envs,
+            obs_dim: cfg.obs_dim,
+            act_dim: cfg.act_dim,
+            continuous: cfg.continuous,
+        })
+    }
+
+    /// Forward a `[batch, obs_dim]` observation matrix.
+    pub fn forward(&self, rt: &Runtime, params: &ParamStore, obs: &[f32]) -> Result<PolicyOutput> {
+        debug_assert_eq!(obs.len(), self.batch * self.obs_dim);
+        let mut args = params.buffers(rt)?;
+        args.push(rt.buf_f32(obs, &[self.batch, self.obs_dim])?);
+        let out = rt.run_bufs(&self.exe, &args)?;
+        if self.continuous {
+            // (mu, log_std_b, value)
+            Ok(PolicyOutput {
+                dist: to_vec_f32(&out[0])?,
+                log_std: to_vec_f32(&out[1])?,
+                value: to_vec_f32(&out[2])?,
+            })
+        } else {
+            // (logits, value)
+            Ok(PolicyOutput {
+                dist: to_vec_f32(&out[0])?,
+                log_std: Vec::new(),
+                value: to_vec_f32(&out[1])?,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    #[test]
+    fn discrete_and_continuous_policies_forward() {
+        let rt = Runtime::cpu().unwrap();
+        let m = Manifest::load("artifacts").unwrap();
+
+        let cfg = m.for_task("CartPole-v1", 8).unwrap();
+        let params = ParamStore::load(&m, cfg).unwrap();
+        let pol = Policy::load(&rt, cfg).unwrap();
+        let out = pol.forward(&rt, &params, &vec![0.05; 8 * 4]).unwrap();
+        assert_eq!(out.dist.len(), 16);
+        assert_eq!(out.value.len(), 8);
+        assert!(out.log_std.is_empty());
+
+        let cfg = m.for_task("Pendulum-v1", 4).unwrap();
+        let params = ParamStore::load(&m, cfg).unwrap();
+        let pol = Policy::load(&rt, cfg).unwrap();
+        let out = pol.forward(&rt, &params, &vec![0.1; 4 * 3]).unwrap();
+        assert_eq!(out.dist.len(), 4);
+        assert_eq!(out.log_std.len(), 4);
+        assert_eq!(out.value.len(), 4);
+        // log_std initialised to 0
+        assert!(out.log_std.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn identical_obs_rows_give_identical_outputs() {
+        let rt = Runtime::cpu().unwrap();
+        let m = Manifest::load("artifacts").unwrap();
+        let cfg = m.for_task("CartPole-v1", 8).unwrap();
+        let params = ParamStore::load(&m, cfg).unwrap();
+        let pol = Policy::load(&rt, cfg).unwrap();
+        let obs = vec![0.3; 8 * 4]; // all rows identical
+        let out = pol.forward(&rt, &params, &obs).unwrap();
+        for b in 1..8 {
+            assert_eq!(out.dist[0], out.dist[b * 2]);
+            assert_eq!(out.value[0], out.value[b]);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! The train-step and GAE executables.
+
+use super::artifact::ArtifactConfig;
+use super::client::Runtime;
+use super::literal::{scalar_of, to_vec_f32};
+use crate::agent::params::ParamStore;
+use crate::Result;
+use std::sync::Arc;
+
+/// Scalars reported by one PPO minibatch update.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub pg_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+}
+
+/// One minibatch of training data (host-side views).
+pub struct Minibatch<'a> {
+    pub obs: &'a [f32],
+    pub actions: &'a [f32],
+    pub logp: &'a [f32],
+    pub adv: &'a [f32],
+    pub ret: &'a [f32],
+}
+
+/// Compiled PPO train step (params, adam, minibatch, lr) -> updated state.
+pub struct TrainExec {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub minibatch: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub continuous: bool,
+    n_params: usize,
+}
+
+impl TrainExec {
+    pub fn load(rt: &Runtime, cfg: &ArtifactConfig) -> Result<TrainExec> {
+        Ok(TrainExec {
+            exe: rt.load(&cfg.train_file)?,
+            minibatch: cfg.minibatch_size,
+            obs_dim: cfg.obs_dim,
+            act_dim: cfg.act_dim,
+            continuous: cfg.continuous,
+            n_params: cfg.params.len(),
+        })
+    }
+
+    /// One update: mutates `params`, `m`, `v`, `t` in place and returns
+    /// the loss statistics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        rt: &Runtime,
+        params: &mut ParamStore,
+        m: &mut ParamStore,
+        v: &mut ParamStore,
+        t: &mut f32,
+        mb: &Minibatch<'_>,
+        lr: f32,
+    ) -> Result<TrainStats> {
+        let b = self.minibatch;
+        debug_assert_eq!(mb.obs.len(), b * self.obs_dim);
+        let mut args = params.buffers(rt)?;
+        args.extend(m.buffers(rt)?);
+        args.extend(v.buffers(rt)?);
+        args.push(rt.buf_scalar(*t)?);
+        args.push(rt.buf_f32(mb.obs, &[b, self.obs_dim])?);
+        if self.continuous {
+            args.push(rt.buf_f32(mb.actions, &[b, self.act_dim])?);
+        } else {
+            args.push(rt.buf_f32(mb.actions, &[b])?);
+        }
+        args.push(rt.buf_f32(mb.logp, &[b])?);
+        args.push(rt.buf_f32(mb.adv, &[b])?);
+        args.push(rt.buf_f32(mb.ret, &[b])?);
+        args.push(rt.buf_scalar(lr)?);
+
+        let out = rt.run_bufs(&self.exe, &args)?;
+        let p = self.n_params;
+        debug_assert_eq!(out.len(), 3 * p + 1 + 5);
+        params.update_from(&out[0..p])?;
+        m.update_from(&out[p..2 * p])?;
+        v.update_from(&out[2 * p..3 * p])?;
+        *t = scalar_of(&out[3 * p])?;
+        Ok(TrainStats {
+            loss: scalar_of(&out[3 * p + 1])?,
+            pg_loss: scalar_of(&out[3 * p + 2])?,
+            v_loss: scalar_of(&out[3 * p + 3])?,
+            entropy: scalar_of(&out[3 * p + 4])?,
+            approx_kl: scalar_of(&out[3 * p + 5])?,
+        })
+    }
+}
+
+/// Compiled GAE (the L1 reverse-scan kernel when lowered with --pallas).
+pub struct GaeExec {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub t: usize,
+    pub n: usize,
+}
+
+impl GaeExec {
+    pub fn load(rt: &Runtime, cfg: &ArtifactConfig) -> Result<GaeExec> {
+        Ok(GaeExec { exe: rt.load(&cfg.gae_file)?, t: cfg.num_steps, n: cfg.num_envs })
+    }
+
+    /// All inputs time-major `[T, N]`; returns (advantages, returns).
+    pub fn compute(
+        &self,
+        rt: &Runtime,
+        rewards: &[f32],
+        values: &[f32],
+        last_value: &[f32],
+        dones: &[f32],
+        truncs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (t, n) = (self.t, self.n);
+        let args = [
+            rt.buf_f32(rewards, &[t, n])?,
+            rt.buf_f32(values, &[t, n])?,
+            rt.buf_f32(last_value, &[n])?,
+            rt.buf_f32(dones, &[t, n])?,
+            rt.buf_f32(truncs, &[t, n])?,
+        ];
+        let out = rt.run_bufs(&self.exe, &args)?;
+        Ok((to_vec_f32(&out[0])?, to_vec_f32(&out[1])?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    #[test]
+    fn gae_exec_matches_rust_reference() {
+        let rt = Runtime::cpu().unwrap();
+        let m = Manifest::load("artifacts").unwrap();
+        let cfg = m.for_task("CartPole-v1", 8).unwrap();
+        let g = GaeExec::load(&rt, cfg).unwrap();
+        let (t, n) = (cfg.num_steps, cfg.num_envs);
+        let mut rng = crate::rng::Pcg32::new(5, 5);
+        let rewards: Vec<f32> = (0..t * n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let values: Vec<f32> = (0..t * n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let last: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let dones: Vec<f32> = (0..t * n).map(|_| (rng.uniform() < 0.05) as u8 as f32).collect();
+        let truncs = vec![0.0; t * n];
+        let (adv, ret) = g.compute(&rt, &rewards, &values, &last, &dones, &truncs).unwrap();
+        let (adv2, ret2) = crate::agent::gae::gae_ref(
+            &rewards, &values, &last, &dones, &truncs, t, n, cfg.gamma, cfg.lam,
+        );
+        for i in 0..t * n {
+            assert!((adv[i] - adv2[i]).abs() < 1e-3, "adv[{i}] {} vs {}", adv[i], adv2[i]);
+            assert!((ret[i] - ret2[i]).abs() < 1e-3, "ret[{i}]");
+        }
+    }
+
+    #[test]
+    fn train_step_updates_parameters() {
+        let rt = Runtime::cpu().unwrap();
+        let man = Manifest::load("artifacts").unwrap();
+        let cfg = man.for_task("CartPole-v1", 8).unwrap();
+        let mut params = ParamStore::load(&man, cfg).unwrap();
+        let before = params.values.clone();
+        let mut m = params.zeros_like();
+        let mut v = params.zeros_like();
+        let mut t = 0.0f32;
+        let tr = TrainExec::load(&rt, cfg).unwrap();
+        let b = cfg.minibatch_size;
+        let mut rng = crate::rng::Pcg32::new(1, 2);
+        let obs: Vec<f32> = (0..b * cfg.obs_dim).map(|_| rng.range(-0.1, 0.1)).collect();
+        let actions: Vec<f32> = (0..b).map(|_| rng.below(2) as f32).collect();
+        let logp = vec![-0.6931f32; b]; // log(0.5)
+        let adv: Vec<f32> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+        let ret: Vec<f32> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mb = Minibatch { obs: &obs, actions: &actions, logp: &logp, adv: &adv, ret: &ret };
+        let stats = tr.step(&rt, &mut params, &mut m, &mut v, &mut t, &mb, 1e-3).unwrap();
+        assert!(stats.loss.is_finite());
+        assert!(stats.entropy > 0.0, "fresh policy should have entropy, got {}", stats.entropy);
+        assert_eq!(t, 1.0);
+        assert!(params.values != before, "parameters must move");
+        assert!(m.global_norm() > 0.0, "adam m must accumulate");
+    }
+}

@@ -1,0 +1,91 @@
+//! Integration: all executors produce identical trajectories for the
+//! same seeds and actions — the semantic guarantee behind the paper's
+//! "pure speedup without cost" claim — including the subprocess executor
+//! (which spawns real worker processes of the `envpool` binary).
+
+use envpool::executors::{ForLoopExecutor, PoolVectorEnv, SubprocessExecutor, VectorEnv};
+use envpool::pool::{EnvPool, PoolConfig};
+
+fn set_worker_bin() {
+    // CARGO_BIN_EXE_* is provided to integration tests at compile time.
+    std::env::set_var("ENVPOOL_WORKER_BIN", env!("CARGO_BIN_EXE_envpool"));
+}
+
+fn run_trajectory(ex: &mut dyn VectorEnv, steps: usize) -> (Vec<f32>, Vec<u8>, f32) {
+    let n = ex.num_envs();
+    let adim = ex.spec().action_space.dim();
+    let mut out = ex.make_output();
+    ex.reset(&mut out).unwrap();
+    let mut rewards = Vec::new();
+    let mut dones = Vec::new();
+    let mut obs_hash = 0.0f32;
+    for step in 0..steps {
+        let actions: Vec<f32> =
+            (0..n * adim).map(|k| ((step + k) % 2) as f32).collect();
+        ex.step(&actions, &mut out).unwrap();
+        rewards.extend_from_slice(&out.rew);
+        dones.extend_from_slice(&out.done);
+        obs_hash += out.obs.iter().sum::<f32>();
+    }
+    (rewards, dones, obs_hash)
+}
+
+#[test]
+fn all_executors_agree_on_cartpole() {
+    set_worker_bin();
+    let seed = 123;
+    let n = 3;
+    let steps = 150;
+
+    let mut forloop = ForLoopExecutor::new("CartPole-v1", n, seed).unwrap();
+    let a = run_trajectory(&mut forloop, steps);
+
+    let pool = EnvPool::make(
+        PoolConfig::new("CartPole-v1").num_envs(n).batch_size(n).num_threads(2).seed(seed),
+    )
+    .unwrap();
+    let mut poolv = PoolVectorEnv::new(pool).unwrap();
+    let b = run_trajectory(&mut poolv, steps);
+
+    let mut subproc = SubprocessExecutor::new("CartPole-v1", n, seed).unwrap();
+    let c = run_trajectory(&mut subproc, steps);
+
+    assert_eq!(a.0, b.0, "forloop vs envpool rewards");
+    assert_eq!(a.1, b.1, "forloop vs envpool dones");
+    assert_eq!(a.2, b.2, "forloop vs envpool obs hash");
+    assert_eq!(a.0, c.0, "forloop vs subprocess rewards");
+    assert_eq!(a.1, c.1, "forloop vs subprocess dones");
+    assert_eq!(a.2, c.2, "forloop vs subprocess obs hash");
+}
+
+#[test]
+fn executors_agree_on_continuous_task() {
+    set_worker_bin();
+    let seed = 77;
+    let n = 2;
+    let steps = 60;
+
+    let mut forloop = ForLoopExecutor::new("Pendulum-v1", n, seed).unwrap();
+    let a = run_trajectory(&mut forloop, steps);
+
+    let mut subproc = SubprocessExecutor::new("Pendulum-v1", n, seed).unwrap();
+    let c = run_trajectory(&mut subproc, steps);
+
+    assert_eq!(a.0, c.0);
+    assert_eq!(a.2, c.2);
+}
+
+#[test]
+fn subprocess_atari_roundtrip() {
+    set_worker_bin();
+    // Full 4x84x84 frames across process boundaries.
+    let mut ex = SubprocessExecutor::new("Pong-v5", 2, 5).unwrap();
+    let mut out = ex.make_output();
+    ex.reset(&mut out).unwrap();
+    assert_eq!(out.obs.len(), 2 * 4 * 84 * 84);
+    for step in 0..20 {
+        let actions = vec![(step % 6) as f32, ((step + 3) % 6) as f32];
+        ex.step(&actions, &mut out).unwrap();
+        assert!(out.obs.iter().all(|x| x.is_finite()));
+    }
+}
