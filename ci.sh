@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: format, lint, build, test. Mirrors
+# .github/workflows/ci.yml so the same command works locally.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --all -- --check
+
+echo "== cargo clippy (deny warnings) =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "CI OK"

@@ -13,13 +13,19 @@ fn main() {
     let n = 3 * threads;
 
     println!("== Table 1: simulation throughput (frames/s incl. frameskip) ==");
-    for task in ["Pong-v5", "Ant-v4"] {
+    // CartPole rides along to cover the cheap-env regime where the
+    // chunked SoA backend (the `*-vec` rows) is the differentiator.
+    for task in ["Pong-v5", "Ant-v4", "CartPole-v1"] {
         for (label, kind, ne, bs) in [
             ("forloop", "forloop", n, n),
+            ("forloop-vec", "forloop-vec", n, n),
             ("subprocess", "subprocess", threads, threads),
             ("sample-factory", "sample-factory", n, n),
+            ("sample-factory-vec", "sample-factory-vec", n, n),
             ("envpool-sync", "envpool-sync", n, n),
+            ("envpool-sync-vec", "envpool-sync-vec", n, n),
             ("envpool-async", "envpool-async", n, threads),
+            ("envpool-async-vec", "envpool-async-vec", n, threads),
         ] {
             // one bench sample = `steps` env steps; report fps separately
             let mut fps = 0.0;

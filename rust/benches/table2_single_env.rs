@@ -38,4 +38,47 @@ fn main() {
         ]);
     }
     println!("{}", t.render());
+
+    // Cheap-env dispatch overhead: for classic control the env step is a
+    // handful of flops, so per-env task dispatch dominates and the paper's
+    // queues alone don't help — the chunked SoA backend
+    // (`ExecMode::Vectorized`) is the fix. Acceptance gate for this
+    // regime: vectorized ≥ 1.5× scalar on CartPole.
+    let cheap_steps: u64 = if quick { 4_000 } else { 200_000 };
+    let threads = 2usize;
+    let n = 8 * threads;
+    println!("== Table 2b: cheap-env (CartPole, N={n}) scalar vs vectorized env-steps/s ==");
+    let mut t2 = Table::new(["Executor", "Scalar", "Vectorized", "Vec/Scalar"]);
+    let mut gate_ratio = f64::NAN;
+    for (label, scalar_kind, vec_kind) in [
+        ("forloop", "forloop", "forloop-vec"),
+        ("sample-factory", "sample-factory", "sample-factory-vec"),
+        ("envpool-sync", "envpool-sync", "envpool-sync-vec"),
+        ("envpool-async", "envpool-async", "envpool-async-vec"),
+    ] {
+        let mut sc = 0.0;
+        let mut ve = 0.0;
+        b.run(&format!("table2b/cartpole/{label}/scalar"), cheap_steps as f64, || {
+            sc = run_throughput("CartPole-v1", scalar_kind, n, threads, threads, cheap_steps, 0)
+                .unwrap();
+        });
+        b.run(&format!("table2b/cartpole/{label}/vectorized"), cheap_steps as f64, || {
+            ve = run_throughput("CartPole-v1", vec_kind, n, threads, threads, cheap_steps, 0)
+                .unwrap();
+        });
+        if label == "envpool-sync" {
+            gate_ratio = ve / sc;
+        }
+        t2.row([label.to_string(), fmt_fps(sc), fmt_fps(ve), format!("{:.2}x", ve / sc)]);
+    }
+    println!("{}", t2.render());
+    if quick {
+        println!("(quick mode: skipping the 1.5x acceptance assertion)");
+    } else {
+        assert!(
+            gate_ratio >= 1.5,
+            "acceptance gate failed: envpool-sync vectorized/scalar = {gate_ratio:.2}x < 1.5x"
+        );
+        println!("acceptance gate OK: envpool-sync vectorized/scalar = {gate_ratio:.2}x");
+    }
 }

@@ -78,7 +78,8 @@ mod tests {
 
     #[test]
     fn load_zeros_and_norm() {
-        let m = Manifest::load("artifacts").unwrap();
+        let dir = crate::runtime::artifact::testsupport::synth_artifacts_dir();
+        let m = Manifest::load(&dir).unwrap();
         let cfg = m.for_task("CartPole-v1", 8).unwrap();
         let p = ParamStore::load(&m, cfg).unwrap();
         assert!(p.numel() > 4 * 64);

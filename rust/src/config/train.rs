@@ -5,19 +5,41 @@ use super::KvFile;
 use crate::cli::Args;
 use crate::{Error, Result};
 
-/// Which executor drives the vectorized environments (paper Fig. 4 axes).
+/// Which executor drives the vectorized environments (paper Fig. 4 axes,
+/// plus the `*-vec` variants added by the chunked/SoA execution layer).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecutorKind {
     /// Single-thread sequential stepping (paper "For-loop").
     ForLoop,
+    /// For-loop over a struct-of-arrays batch kernel (no pool).
+    ForLoopVec,
     /// One OS process per env, per-step barrier (paper "Subprocess").
     Subprocess,
     /// EnvPool in synchronous mode (`batch_size == num_envs`).
     EnvPoolSync,
+    /// EnvPool sync with `ExecMode::Vectorized` chunk workers.
+    EnvPoolSyncVec,
     /// EnvPool in asynchronous mode (`batch_size < num_envs`).
     EnvPoolAsync,
+    /// EnvPool async with `ExecMode::Vectorized` chunk workers.
+    EnvPoolAsyncVec,
     /// Sample-Factory-style double-buffered async workers.
     SampleFactory,
+    /// Sample-Factory workers stepping SoA batch kernels.
+    SampleFactoryVec,
+}
+
+impl ExecutorKind {
+    /// Pool execution mode implied by this executor kind — the single
+    /// source of truth for which kinds select the chunked SoA backend.
+    pub fn pool_exec_mode(self) -> crate::pool::ExecMode {
+        match self {
+            ExecutorKind::EnvPoolSyncVec | ExecutorKind::EnvPoolAsyncVec => {
+                crate::pool::ExecMode::Vectorized
+            }
+            _ => crate::pool::ExecMode::Scalar,
+        }
+    }
 }
 
 impl std::str::FromStr for ExecutorKind {
@@ -25,10 +47,14 @@ impl std::str::FromStr for ExecutorKind {
     fn from_str(s: &str) -> Result<Self> {
         Ok(match s {
             "forloop" | "for-loop" => ExecutorKind::ForLoop,
+            "forloop-vec" | "for-loop-vec" => ExecutorKind::ForLoopVec,
             "subprocess" => ExecutorKind::Subprocess,
             "envpool" | "envpool-sync" | "sync" => ExecutorKind::EnvPoolSync,
+            "envpool-sync-vec" | "sync-vec" => ExecutorKind::EnvPoolSyncVec,
             "envpool-async" | "async" => ExecutorKind::EnvPoolAsync,
+            "envpool-async-vec" | "async-vec" => ExecutorKind::EnvPoolAsyncVec,
             "sample-factory" | "sf" => ExecutorKind::SampleFactory,
+            "sample-factory-vec" | "sf-vec" => ExecutorKind::SampleFactoryVec,
             other => return Err(Error::Config(format!("unknown executor {other:?}"))),
         })
     }
@@ -38,10 +64,14 @@ impl std::fmt::Display for ExecutorKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let s = match self {
             ExecutorKind::ForLoop => "forloop",
+            ExecutorKind::ForLoopVec => "forloop-vec",
             ExecutorKind::Subprocess => "subprocess",
             ExecutorKind::EnvPoolSync => "envpool-sync",
+            ExecutorKind::EnvPoolSyncVec => "envpool-sync-vec",
             ExecutorKind::EnvPoolAsync => "envpool-async",
+            ExecutorKind::EnvPoolAsyncVec => "envpool-async-vec",
             ExecutorKind::SampleFactory => "sample-factory",
+            ExecutorKind::SampleFactoryVec => "sample-factory-vec",
         };
         f.write_str(s)
     }
@@ -224,10 +254,30 @@ mod tests {
 
     #[test]
     fn executor_parse_roundtrip() {
-        for s in ["forloop", "subprocess", "envpool-sync", "envpool-async", "sample-factory"] {
+        for s in [
+            "forloop",
+            "forloop-vec",
+            "subprocess",
+            "envpool-sync",
+            "envpool-sync-vec",
+            "envpool-async",
+            "envpool-async-vec",
+            "sample-factory",
+            "sample-factory-vec",
+        ] {
             let k: ExecutorKind = s.parse().unwrap();
             assert_eq!(k.to_string(), s);
         }
         assert!("bogus".parse::<ExecutorKind>().is_err());
+    }
+
+    #[test]
+    fn vec_kinds_imply_vectorized_pool_mode() {
+        use crate::pool::ExecMode;
+        assert_eq!(ExecutorKind::EnvPoolSyncVec.pool_exec_mode(), ExecMode::Vectorized);
+        assert_eq!(ExecutorKind::EnvPoolAsyncVec.pool_exec_mode(), ExecMode::Vectorized);
+        assert_eq!(ExecutorKind::EnvPoolSync.pool_exec_mode(), ExecMode::Scalar);
+        // non-pool executors run their own engines; mode is Scalar
+        assert_eq!(ExecutorKind::ForLoopVec.pool_exec_mode(), ExecMode::Scalar);
     }
 }

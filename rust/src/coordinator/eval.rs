@@ -58,8 +58,10 @@ mod tests {
 
     #[test]
     fn greedy_eval_runs_cartpole() {
-        let rt = Runtime::cpu().unwrap();
-        let m = Manifest::load("artifacts").unwrap();
+        // The compute tier is optional (vendored stub / missing
+        // artifacts): skip when absent.
+        let rt = crate::compute_or_skip!(Runtime::cpu());
+        let m = crate::compute_or_skip!(Manifest::load("artifacts"));
         let cfg = m.for_task("CartPole-v1", 8).unwrap();
         let params = ParamStore::load(&m, cfg).unwrap();
         let policy = Policy::load(&rt, cfg).unwrap();

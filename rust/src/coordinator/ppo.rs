@@ -13,7 +13,9 @@ use crate::agent::params::ParamStore;
 use crate::agent::rollout::RolloutBuffer;
 use crate::agent::sampler;
 use crate::config::{ExecutorKind, TrainConfig};
-use crate::executors::{ForLoopExecutor, PoolVectorEnv, SubprocessExecutor, VectorEnv};
+use crate::executors::{
+    ForLoopExecutor, PoolVectorEnv, SubprocessExecutor, VecForLoopExecutor, VectorEnv,
+};
 use crate::metrics::timer::{Category, TimeBreakdown};
 use crate::pool::{EnvPool, PoolConfig};
 use crate::rng::Pcg32;
@@ -86,31 +88,52 @@ impl TrainSummary {
     }
 }
 
+/// Executors that only make sense for throughput benchmarking — they
+/// cannot drive the trainer's synchronous vectorized contract.
+fn benchmark_only(k: ExecutorKind) -> bool {
+    matches!(
+        k,
+        ExecutorKind::EnvPoolAsync
+            | ExecutorKind::EnvPoolAsyncVec
+            | ExecutorKind::SampleFactory
+            | ExecutorKind::SampleFactoryVec
+    )
+}
+
+fn reject_benchmark_only(cfg: &TrainConfig) -> Error {
+    Error::Config(format!(
+        "the PPO trainer drives the synchronous vectorized contract; \
+         executor {} is benchmark-only (see `envpool bench`)",
+        cfg.executor
+    ))
+}
+
 fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
     Ok(match cfg.executor {
         ExecutorKind::ForLoop => {
             Box::new(ForLoopExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
         }
+        ExecutorKind::ForLoopVec => {
+            Box::new(VecForLoopExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
+        }
         ExecutorKind::Subprocess => {
             Box::new(SubprocessExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
         }
-        ExecutorKind::EnvPoolSync => {
+        ExecutorKind::EnvPoolSync | ExecutorKind::EnvPoolSyncVec => {
             let pool = EnvPool::make(
                 PoolConfig::new(&cfg.env_id)
                     .num_envs(cfg.num_envs)
                     .sync()
                     .num_threads(cfg.num_threads)
-                    .seed(cfg.seed),
+                    .seed(cfg.seed)
+                    .exec_mode(cfg.executor.pool_exec_mode()),
             )?;
             Box::new(PoolVectorEnv::new(pool)?)
         }
-        ExecutorKind::EnvPoolAsync | ExecutorKind::SampleFactory => {
-            return Err(Error::Config(format!(
-                "the PPO trainer drives the synchronous vectorized contract; \
-                 executor {} is benchmark-only (see `envpool bench`)",
-                cfg.executor
-            )));
-        }
+        ExecutorKind::EnvPoolAsync
+        | ExecutorKind::EnvPoolAsyncVec
+        | ExecutorKind::SampleFactory
+        | ExecutorKind::SampleFactoryVec => return Err(reject_benchmark_only(cfg)),
     })
 }
 
@@ -122,6 +145,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
 
 /// Train per `cfg`, also returning the Figure-4 time breakdown.
 pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)> {
+    // Reject benchmark-only executors up front (before any artifact /
+    // runtime loading) so configuration errors surface first; if this
+    // guard ever misses a kind, `build_executor` still returns the same
+    // error, just later.
+    if benchmark_only(cfg.executor) {
+        return Err(reject_benchmark_only(cfg));
+    }
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let art = manifest.for_task(&cfg.env_id, cfg.num_envs)?;
     let t_len = art.num_steps;
@@ -286,10 +316,12 @@ mod tests {
         }
     }
 
+    use crate::compute_or_skip;
+
     #[test]
     fn smoke_train_cartpole_two_iterations() {
         let cfg = smoke_cfg("CartPole-v1", 8, 2 * 8 * 128);
-        let (s, prof) = train_profiled(&cfg).unwrap();
+        let (s, prof) = compute_or_skip!(train_profiled(&cfg));
         assert_eq!(s.iterations, 2);
         assert_eq!(s.env_steps, 2048);
         assert!(s.episodes > 0, "random-ish cartpole episodes must finish");
@@ -302,16 +334,28 @@ mod tests {
     #[test]
     fn smoke_train_continuous_pendulum() {
         let cfg = smoke_cfg("Pendulum-v1", 4, 4 * 64);
-        let s = train(&cfg).unwrap();
+        let (s, _) = compute_or_skip!(train_profiled(&cfg));
         assert_eq!(s.iterations, 1);
         assert!(s.env_steps == 256);
     }
 
     #[test]
     fn async_executor_rejected_for_training() {
-        let mut cfg = smoke_cfg("CartPole-v1", 8, 1024);
-        cfg.executor = ExecutorKind::EnvPoolAsync;
-        assert!(train(&cfg).is_err());
+        // Benchmark-only executors must be rejected with a configuration
+        // error *before* any artifact / runtime loading.
+        for kind in [
+            ExecutorKind::EnvPoolAsync,
+            ExecutorKind::EnvPoolAsyncVec,
+            ExecutorKind::SampleFactory,
+            ExecutorKind::SampleFactoryVec,
+        ] {
+            let mut cfg = smoke_cfg("CartPole-v1", 8, 1024);
+            cfg.executor = kind;
+            match train(&cfg) {
+                Err(Error::Config(msg)) => assert!(msg.contains("benchmark-only"), "{msg}"),
+                other => panic!("{kind}: expected Config error, got {other:?}"),
+            }
+        }
     }
 
     #[test]
@@ -322,8 +366,8 @@ mod tests {
         a.executor = ExecutorKind::ForLoop;
         let mut b = smoke_cfg("CartPole-v1", 8, 1024);
         b.executor = ExecutorKind::EnvPoolSync;
-        let sa = train(&a).unwrap();
-        let sb = train(&b).unwrap();
+        let (sa, _) = compute_or_skip!(train_profiled(&a));
+        let (sb, _) = compute_or_skip!(train_profiled(&b));
         assert_eq!(sa.episodes, sb.episodes);
         assert_eq!(sa.final_return, sb.final_return);
     }

@@ -5,7 +5,9 @@
 use crate::config::ExecutorKind;
 use crate::envs::registry;
 use crate::envs::spec::ActionSpace;
-use crate::executors::{ForLoopExecutor, SampleFactoryExecutor, SubprocessExecutor, VectorEnv};
+use crate::executors::{
+    ForLoopExecutor, SampleFactoryExecutor, SubprocessExecutor, VecForLoopExecutor, VectorEnv,
+};
 use crate::pool::{EnvPool, PoolConfig};
 use crate::rng::Pcg32;
 use crate::Result;
@@ -62,24 +64,34 @@ pub fn run_throughput(
             let mut ex = ForLoopExecutor::new(task, num_envs, seed)?;
             time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
         }
+        ExecutorKind::ForLoopVec => {
+            let mut ex = VecForLoopExecutor::new(task, num_envs, seed)?;
+            time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
+        }
         ExecutorKind::Subprocess => {
             let mut ex = SubprocessExecutor::new(task, num_envs, seed)?;
             time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
         }
-        ExecutorKind::EnvPoolSync => {
+        ExecutorKind::EnvPoolSync | ExecutorKind::EnvPoolSyncVec => {
             let pool = EnvPool::make(
-                PoolConfig::new(task).num_envs(num_envs).sync().num_threads(threads).seed(seed),
+                PoolConfig::new(task)
+                    .num_envs(num_envs)
+                    .sync()
+                    .num_threads(threads)
+                    .seed(seed)
+                    .exec_mode(kind.pool_exec_mode()),
             )?;
             let mut ex = crate::executors::PoolVectorEnv::new(pool)?;
             time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
         }
-        ExecutorKind::EnvPoolAsync => {
+        ExecutorKind::EnvPoolAsync | ExecutorKind::EnvPoolAsyncVec => {
             let mut pool = EnvPool::make(
                 PoolConfig::new(task)
                     .num_envs(num_envs)
                     .batch_size(batch_size)
                     .num_threads(threads)
-                    .seed(seed),
+                    .seed(seed)
+                    .exec_mode(kind.pool_exec_mode()),
             )?;
             pool.async_reset();
             let mut out = pool.make_output();
@@ -93,8 +105,13 @@ pub fn run_throughput(
             }
             done_steps as f64 / t0.elapsed().as_secs_f64()
         }
-        ExecutorKind::SampleFactory => {
-            let mut ex = SampleFactoryExecutor::new(task, num_envs, threads.max(1), seed)?;
+        ExecutorKind::SampleFactory | ExecutorKind::SampleFactoryVec => {
+            let workers = threads.max(1);
+            let mut ex = if kind == ExecutorKind::SampleFactoryVec {
+                SampleFactoryExecutor::new_vectorized(task, num_envs, workers, seed)?
+            } else {
+                SampleFactoryExecutor::new(task, num_envs, workers, seed)?
+            };
             let mut out = ex.make_output();
             let mut done_steps = 0u64;
             let t0 = Instant::now();
@@ -156,7 +173,16 @@ mod tests {
 
     #[test]
     fn throughput_runs_for_each_in_process_executor() {
-        for ex in ["forloop", "envpool-sync", "envpool-async", "sample-factory"] {
+        for ex in [
+            "forloop",
+            "forloop-vec",
+            "envpool-sync",
+            "envpool-sync-vec",
+            "envpool-async",
+            "envpool-async-vec",
+            "sample-factory",
+            "sample-factory-vec",
+        ] {
             let fps = run_throughput("CartPole-v1", ex, 4, 2, 2, 400, 0).unwrap();
             assert!(fps > 0.0, "{ex}: {fps}");
         }

@@ -72,19 +72,59 @@ fn rk4(y0: [f32; 5], dt: f32) -> [f32; 5] {
     out
 }
 
+/// Maximum episode length (shared with the SoA kernel).
+pub(crate) const MAX_STEPS: usize = 500;
+
+/// The Acrobot-v1 spec (shared with the SoA kernel).
+pub(crate) fn spec() -> EnvSpec {
+    EnvSpec {
+        id: "Acrobot-v1".into(),
+        obs_shape: vec![6],
+        action_space: ActionSpace::Discrete(3),
+        max_episode_steps: MAX_STEPS,
+    }
+}
+
+/// Per-env RNG stream, keyed identically in the scalar and SoA paths.
+#[inline]
+pub(crate) fn rng(seed: u64, env_id: u64) -> Pcg32 {
+    Pcg32::new(seed ^ 0x616372, env_id)
+}
+
+/// Fresh-episode state draw (RNG call order shared with the SoA kernel).
+#[inline]
+pub(crate) fn reset_state(rng: &mut Pcg32) -> [f32; 4] {
+    let mut s = [0.0f32; 4];
+    for x in &mut s {
+        *x = rng.range(-0.1, 0.1);
+    }
+    s
+}
+
+/// One RK4 step + wrap/clamp of the acrobot state under a torque id in
+/// {0, 1, 2}. Shared by the scalar env and the SoA kernel so both paths
+/// are bitwise identical.
+#[inline]
+pub(crate) fn dynamics(s: [f32; 4], action: usize) -> [f32; 4] {
+    let torque = action as f32 - 1.0;
+    let y = rk4([s[0], s[1], s[2], s[3], torque], DT);
+    [
+        wrap(y[0], -std::f32::consts::PI, std::f32::consts::PI),
+        wrap(y[1], -std::f32::consts::PI, std::f32::consts::PI),
+        y[2].clamp(-MAX_VEL1, MAX_VEL1),
+        y[3].clamp(-MAX_VEL2, MAX_VEL2),
+    ]
+}
+
+/// Termination test: tip above the bar.
+#[inline]
+pub(crate) fn is_terminal(s: &[f32; 4]) -> bool {
+    -s[0].cos() - (s[1] + s[0]).cos() > 1.0
+}
+
 impl Acrobot {
     pub fn new(seed: u64, env_id: u64) -> Self {
-        Acrobot {
-            spec: EnvSpec {
-                id: "Acrobot-v1".into(),
-                obs_shape: vec![6],
-                action_space: ActionSpace::Discrete(3),
-                max_episode_steps: 500,
-            },
-            rng: Pcg32::new(seed ^ 0x616372, env_id),
-            s: [0.0; 4],
-            steps: 0,
-        }
+        Acrobot { spec: spec(), rng: rng(seed, env_id), s: [0.0; 4], steps: 0 }
     }
 
     fn write_obs(&self, obs: &mut [f32]) {
@@ -97,7 +137,7 @@ impl Acrobot {
     }
 
     fn terminal(&self) -> bool {
-        -self.s[0].cos() - (self.s[1] + self.s[0]).cos() > 1.0
+        is_terminal(&self.s)
     }
 }
 
@@ -107,20 +147,13 @@ impl Env for Acrobot {
     }
 
     fn reset(&mut self, obs: &mut [f32]) {
-        for x in &mut self.s {
-            *x = self.rng.range(-0.1, 0.1);
-        }
+        self.s = reset_state(&mut self.rng);
         self.steps = 0;
         self.write_obs(obs);
     }
 
     fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
-        let torque = discrete_action(action, 3) as f32 - 1.0;
-        let y = rk4([self.s[0], self.s[1], self.s[2], self.s[3], torque], DT);
-        self.s[0] = wrap(y[0], -std::f32::consts::PI, std::f32::consts::PI);
-        self.s[1] = wrap(y[1], -std::f32::consts::PI, std::f32::consts::PI);
-        self.s[2] = y[2].clamp(-MAX_VEL1, MAX_VEL1);
-        self.s[3] = y[3].clamp(-MAX_VEL2, MAX_VEL2);
+        self.s = dynamics(self.s, discrete_action(action, 3));
         self.steps += 1;
         let done = self.terminal();
         let truncated = !done && self.steps >= self.spec.max_episode_steps;

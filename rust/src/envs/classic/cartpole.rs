@@ -16,6 +16,46 @@ const TAU: f32 = 0.02;
 const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
 const X_LIMIT: f32 = 2.4;
 
+/// Maximum episode length (shared with the SoA kernel).
+pub(crate) const MAX_STEPS: usize = 500;
+
+/// One semi-explicit Euler step of the cart-pole dynamics, matching
+/// Gym's "euler" kinematics integrator. Shared by the scalar env and the
+/// struct-of-arrays kernel in [`crate::envs::vector`] so the two paths
+/// are bitwise identical.
+#[inline]
+pub(crate) fn dynamics(state: [f32; 4], action: usize) -> [f32; 4] {
+    let force = if action == 1 { FORCE_MAG } else { -FORCE_MAG };
+    let [x, x_dot, theta, theta_dot] = state;
+    let (sin_t, cos_t) = theta.sin_cos();
+    let temp = (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin_t) / TOTAL_MASS;
+    let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+        / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
+    let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
+    [
+        x + TAU * x_dot,
+        x_dot + TAU * x_acc,
+        theta + TAU * theta_dot,
+        theta_dot + TAU * theta_acc,
+    ]
+}
+
+/// Termination test (cart off the track or pole past the angle limit).
+#[inline]
+pub(crate) fn fell(state: &[f32; 4]) -> bool {
+    state[0].abs() > X_LIMIT || state[2].abs() > THETA_LIMIT
+}
+
+/// Fresh-episode state draw (RNG call order shared with the SoA kernel).
+#[inline]
+pub(crate) fn reset_state(rng: &mut Pcg32) -> [f32; 4] {
+    let mut s = [0.0f32; 4];
+    for x in &mut s {
+        *x = rng.range(-0.05, 0.05);
+    }
+    s
+}
+
 /// CartPole environment. Observation `[x, x_dot, theta, theta_dot]`,
 /// actions {push left, push right}, reward 1 per step while upright.
 pub struct CartPole {
@@ -26,16 +66,27 @@ pub struct CartPole {
     needs_reset: bool,
 }
 
+/// The CartPole-v1 spec (shared with the SoA kernel).
+pub(crate) fn spec() -> EnvSpec {
+    EnvSpec {
+        id: "CartPole-v1".into(),
+        obs_shape: vec![4],
+        action_space: ActionSpace::Discrete(2),
+        max_episode_steps: MAX_STEPS,
+    }
+}
+
+/// Per-env RNG stream, keyed identically in the scalar and SoA paths.
+#[inline]
+pub(crate) fn rng(seed: u64, env_id: u64) -> Pcg32 {
+    Pcg32::new(seed, env_id)
+}
+
 impl CartPole {
     pub fn new(seed: u64, env_id: u64) -> Self {
         CartPole {
-            spec: EnvSpec {
-                id: "CartPole-v1".into(),
-                obs_shape: vec![4],
-                action_space: ActionSpace::Discrete(2),
-                max_episode_steps: 500,
-            },
-            rng: Pcg32::new(seed, env_id),
+            spec: spec(),
+            rng: rng(seed, env_id),
             state: [0.0; 4],
             steps: 0,
             needs_reset: true,
@@ -53,9 +104,7 @@ impl Env for CartPole {
     }
 
     fn reset(&mut self, obs: &mut [f32]) {
-        for s in &mut self.state {
-            *s = self.rng.range(-0.05, 0.05);
-        }
+        self.state = reset_state(&mut self.rng);
         self.steps = 0;
         self.needs_reset = false;
         self.write_obs(obs);
@@ -64,23 +113,10 @@ impl Env for CartPole {
     fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
         debug_assert!(!self.needs_reset, "step() after terminal without reset()");
         let a = discrete_action(action, 2);
-        let force = if a == 1 { FORCE_MAG } else { -FORCE_MAG };
-        let [x, x_dot, theta, theta_dot] = self.state;
-        let (sin_t, cos_t) = theta.sin_cos();
-        let temp = (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin_t) / TOTAL_MASS;
-        let theta_acc = (GRAVITY * sin_t - cos_t * temp)
-            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
-        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
-        // Semi-explicit Euler, matching Gym's "euler" kinematics integrator.
-        self.state = [
-            x + TAU * x_dot,
-            x_dot + TAU * x_acc,
-            theta + TAU * theta_dot,
-            theta_dot + TAU * theta_acc,
-        ];
+        self.state = dynamics(self.state, a);
         self.steps += 1;
 
-        let fell = self.state[0].abs() > X_LIMIT || self.state[2].abs() > THETA_LIMIT;
+        let fell = fell(&self.state);
         let truncated = !fell && self.steps >= self.spec.max_episode_steps;
         self.needs_reset = fell || truncated;
         self.write_obs(obs);

@@ -12,6 +12,51 @@ const GOAL_POS: f32 = 0.5;
 const FORCE: f32 = 0.001;
 const GRAVITY: f32 = 0.0025;
 
+/// Maximum episode length (shared with the SoA kernel).
+pub(crate) const MAX_STEPS: usize = 200;
+
+/// The MountainCar-v0 spec (shared with the SoA kernel).
+pub(crate) fn spec() -> EnvSpec {
+    EnvSpec {
+        id: "MountainCar-v0".into(),
+        obs_shape: vec![2],
+        action_space: ActionSpace::Discrete(3),
+        max_episode_steps: MAX_STEPS,
+    }
+}
+
+/// Per-env RNG stream, keyed identically in the scalar and SoA paths.
+#[inline]
+pub(crate) fn rng(seed: u64, env_id: u64) -> Pcg32 {
+    Pcg32::new(seed ^ 0x6d63, env_id)
+}
+
+/// Fresh-episode position draw (velocity starts at 0).
+#[inline]
+pub(crate) fn reset_pos(rng: &mut Pcg32) -> f32 {
+    rng.range(-0.6, -0.4)
+}
+
+/// One step of the mountain-car dynamics (Gym equations), shared by the
+/// scalar env and the SoA kernel so both paths are bitwise identical.
+#[inline]
+pub(crate) fn dynamics(pos: f32, vel: f32, action: usize) -> (f32, f32) {
+    let a = action as f32 - 1.0; // -1, 0, +1
+    let mut vel = vel + a * FORCE - GRAVITY * (3.0 * pos).cos();
+    vel = vel.clamp(-MAX_SPEED, MAX_SPEED);
+    let pos = (pos + vel).clamp(MIN_POS, MAX_POS);
+    if pos <= MIN_POS && vel < 0.0 {
+        vel = 0.0; // inelastic left wall
+    }
+    (pos, vel)
+}
+
+/// Goal test.
+#[inline]
+pub(crate) fn at_goal(pos: f32) -> bool {
+    pos >= GOAL_POS
+}
+
 /// MountainCar environment. Observation `[position, velocity]`, actions
 /// {push left, no-op, push right}, reward -1 per step until the goal.
 pub struct MountainCar {
@@ -24,18 +69,7 @@ pub struct MountainCar {
 
 impl MountainCar {
     pub fn new(seed: u64, env_id: u64) -> Self {
-        MountainCar {
-            spec: EnvSpec {
-                id: "MountainCar-v0".into(),
-                obs_shape: vec![2],
-                action_space: ActionSpace::Discrete(3),
-                max_episode_steps: 200,
-            },
-            rng: Pcg32::new(seed ^ 0x6d63, env_id),
-            pos: 0.0,
-            vel: 0.0,
-            steps: 0,
-        }
+        MountainCar { spec: spec(), rng: rng(seed, env_id), pos: 0.0, vel: 0.0, steps: 0 }
     }
 }
 
@@ -45,7 +79,7 @@ impl Env for MountainCar {
     }
 
     fn reset(&mut self, obs: &mut [f32]) {
-        self.pos = self.rng.range(-0.6, -0.4);
+        self.pos = reset_pos(&mut self.rng);
         self.vel = 0.0;
         self.steps = 0;
         obs[0] = self.pos;
@@ -53,16 +87,10 @@ impl Env for MountainCar {
     }
 
     fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
-        let a = discrete_action(action, 3) as f32 - 1.0; // -1, 0, +1
-        self.vel += a * FORCE - GRAVITY * (3.0 * self.pos).cos();
-        self.vel = self.vel.clamp(-MAX_SPEED, MAX_SPEED);
-        self.pos += self.vel;
-        self.pos = self.pos.clamp(MIN_POS, MAX_POS);
-        if self.pos <= MIN_POS && self.vel < 0.0 {
-            self.vel = 0.0; // inelastic left wall
-        }
+        let a = discrete_action(action, 3);
+        (self.pos, self.vel) = dynamics(self.pos, self.vel, a);
         self.steps += 1;
-        let done = self.pos >= GOAL_POS;
+        let done = at_goal(self.pos);
         let truncated = !done && self.steps >= self.spec.max_episode_steps;
         obs[0] = self.pos;
         obs[1] = self.vel;

@@ -27,20 +27,50 @@ fn angle_normalize(x: f32) -> f32 {
     ((x + std::f32::consts::PI).rem_euclid(two_pi)) - std::f32::consts::PI
 }
 
+/// Maximum episode length (shared with the SoA kernel).
+pub(crate) const MAX_STEPS: usize = 200;
+
+/// The Pendulum-v1 spec (shared with the SoA kernel).
+pub(crate) fn spec() -> EnvSpec {
+    EnvSpec {
+        id: "Pendulum-v1".into(),
+        obs_shape: vec![3],
+        action_space: ActionSpace::Continuous { dim: 1, low: -MAX_TORQUE, high: MAX_TORQUE },
+        max_episode_steps: MAX_STEPS,
+    }
+}
+
+/// Per-env RNG stream, keyed identically in the scalar and SoA paths.
+#[inline]
+pub(crate) fn rng(seed: u64, env_id: u64) -> Pcg32 {
+    Pcg32::new(seed ^ 0x70656e, env_id)
+}
+
+/// Fresh-episode state draw: `(theta, theta_dot)` in RNG call order.
+#[inline]
+pub(crate) fn reset_state(rng: &mut Pcg32) -> (f32, f32) {
+    let theta = rng.range(-std::f32::consts::PI, std::f32::consts::PI);
+    let theta_dot = rng.range(-1.0, 1.0);
+    (theta, theta_dot)
+}
+
+/// One step of the pendulum dynamics (Gym equations): returns the new
+/// `(theta, theta_dot)` and the step cost. Shared by the scalar env and
+/// the SoA kernel so both paths are bitwise identical.
+#[inline]
+pub(crate) fn dynamics(theta: f32, theta_dot: f32, action: f32) -> (f32, f32, f32) {
+    let u = action.clamp(-MAX_TORQUE, MAX_TORQUE);
+    let th = angle_normalize(theta);
+    let cost = th * th + 0.1 * theta_dot * theta_dot + 0.001 * u * u;
+    let mut theta_dot = theta_dot + (3.0 * G / (2.0 * L) * theta.sin() + 3.0 / (M * L * L) * u) * DT;
+    theta_dot = theta_dot.clamp(-MAX_SPEED, MAX_SPEED);
+    let theta = theta + theta_dot * DT;
+    (theta, theta_dot, cost)
+}
+
 impl Pendulum {
     pub fn new(seed: u64, env_id: u64) -> Self {
-        Pendulum {
-            spec: EnvSpec {
-                id: "Pendulum-v1".into(),
-                obs_shape: vec![3],
-                action_space: ActionSpace::Continuous { dim: 1, low: -MAX_TORQUE, high: MAX_TORQUE },
-                max_episode_steps: 200,
-            },
-            rng: Pcg32::new(seed ^ 0x70656e, env_id),
-            theta: 0.0,
-            theta_dot: 0.0,
-            steps: 0,
-        }
+        Pendulum { spec: spec(), rng: rng(seed, env_id), theta: 0.0, theta_dot: 0.0, steps: 0 }
     }
 
     fn write_obs(&self, obs: &mut [f32]) {
@@ -56,20 +86,16 @@ impl Env for Pendulum {
     }
 
     fn reset(&mut self, obs: &mut [f32]) {
-        self.theta = self.rng.range(-std::f32::consts::PI, std::f32::consts::PI);
-        self.theta_dot = self.rng.range(-1.0, 1.0);
+        (self.theta, self.theta_dot) = reset_state(&mut self.rng);
         self.steps = 0;
         self.write_obs(obs);
     }
 
     fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
-        let u = action[0].clamp(-MAX_TORQUE, MAX_TORQUE);
-        let th = angle_normalize(self.theta);
-        let cost = th * th + 0.1 * self.theta_dot * self.theta_dot + 0.001 * u * u;
         // Gym dynamics (theta measured from upright).
-        self.theta_dot += (3.0 * G / (2.0 * L) * self.theta.sin() + 3.0 / (M * L * L) * u) * DT;
-        self.theta_dot = self.theta_dot.clamp(-MAX_SPEED, MAX_SPEED);
-        self.theta += self.theta_dot * DT;
+        let (theta, theta_dot, cost) = dynamics(self.theta, self.theta_dot, action[0]);
+        self.theta = theta;
+        self.theta_dot = theta_dot;
         self.steps += 1;
         self.write_obs(obs);
         Step {

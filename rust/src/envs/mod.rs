@@ -28,9 +28,11 @@ pub mod classic;
 pub mod atari;
 pub mod mujoco;
 pub mod dmc;
+pub mod vector;
 pub mod wrappers;
 pub mod registry;
 
 pub use env::{Env, Step};
-pub use registry::{make_env, spec_for};
+pub use registry::{make_env, make_vec_env, spec_for};
 pub use spec::{ActionSpace, EnvSpec};
+pub use vector::{ObsArena, SliceArena, VecEnv};

@@ -8,6 +8,7 @@ use super::dmc::CheetahRun;
 use super::env::Env;
 use super::mujoco::walker::{Task, WalkerEnv};
 use super::spec::EnvSpec;
+use super::vector::{AcrobotVec, CartPoleVec, MountainCarVec, PendulumVec, ScalarVec, VecEnv};
 use crate::{Error, Result};
 
 /// Every registered task id.
@@ -48,6 +49,30 @@ pub fn spec_for(task_id: &str) -> Result<EnvSpec> {
     Ok(make_env(task_id, 0, 0)?.spec().clone())
 }
 
+/// Construct a **vectorized** batch of `count` environments with global
+/// ids `first_env_id..first_env_id + count` — the vector analog of
+/// [`make_env`]. Classic-control tasks get dedicated struct-of-arrays
+/// kernels (bitwise identical to the scalar envs, see
+/// [`crate::envs::vector`]); every other task falls back to a
+/// [`ScalarVec`] chunk, which still amortizes per-task dispatch.
+pub fn make_vec_env(
+    task_id: &str,
+    seed: u64,
+    first_env_id: u64,
+    count: usize,
+) -> Result<Box<dyn VecEnv>> {
+    Ok(match task_id {
+        "CartPole-v1" => Box::new(CartPoleVec::new(seed, first_env_id, count)),
+        "MountainCar-v0" => Box::new(MountainCarVec::new(seed, first_env_id, count)),
+        "Pendulum-v1" => Box::new(PendulumVec::new(seed, first_env_id, count)),
+        "Acrobot-v1" => Box::new(AcrobotVec::new(seed, first_env_id, count)),
+        other if ALL_TASKS.contains(&other) => {
+            Box::new(ScalarVec::new(other, seed, first_env_id, count)?)
+        }
+        other => return Err(Error::UnknownEnv(other.to_string())),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,6 +97,22 @@ mod tests {
     #[test]
     fn unknown_task_errors() {
         assert!(matches!(make_env("Doom-v0", 0, 0), Err(Error::UnknownEnv(_))));
+        assert!(matches!(make_vec_env("Doom-v0", 0, 0, 1), Err(Error::UnknownEnv(_))));
+    }
+
+    #[test]
+    fn all_tasks_construct_vectorized() {
+        for &task in ALL_TASKS {
+            let mut v = make_vec_env(task, 0, 0, 2).unwrap();
+            assert_eq!(v.num_envs(), 2);
+            assert_eq!(v.spec(), &spec_for(task).unwrap(), "{task}");
+            let dim = v.spec().obs_dim();
+            let mut obs = vec![0.0f32; 2 * dim];
+            for lane in 0..2 {
+                v.reset_lane(lane, &mut obs[lane * dim..(lane + 1) * dim]);
+            }
+            assert!(obs.iter().all(|x| x.is_finite()), "{task}");
+        }
     }
 
     #[test]

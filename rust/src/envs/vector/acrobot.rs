@@ -1,0 +1,102 @@
+//! Struct-of-arrays Acrobot batch kernel (RK4 math and RNG streams
+//! shared with [`crate::envs::classic::acrobot`]).
+
+use super::{ObsArena, VecEnv};
+use crate::envs::classic::acrobot;
+use crate::envs::env::{discrete_action, Step};
+use crate::envs::spec::EnvSpec;
+use crate::rng::Pcg32;
+
+/// SoA batch of Acrobot environments. State lanes are
+/// `[theta1, theta2, dtheta1, dtheta2]`.
+pub struct AcrobotVec {
+    spec: EnvSpec,
+    rng: Vec<Pcg32>,
+    theta1: Vec<f32>,
+    theta2: Vec<f32>,
+    dtheta1: Vec<f32>,
+    dtheta2: Vec<f32>,
+    steps: Vec<u32>,
+}
+
+impl AcrobotVec {
+    /// Batch of `count` envs with global ids `first_env_id..+count`.
+    pub fn new(seed: u64, first_env_id: u64, count: usize) -> Self {
+        AcrobotVec {
+            spec: acrobot::spec(),
+            rng: (0..count).map(|l| acrobot::rng(seed, first_env_id + l as u64)).collect(),
+            theta1: vec![0.0; count],
+            theta2: vec![0.0; count],
+            dtheta1: vec![0.0; count],
+            dtheta2: vec![0.0; count],
+            steps: vec![0; count],
+        }
+    }
+
+    #[inline]
+    fn scatter(&mut self, lane: usize, s: [f32; 4]) {
+        self.theta1[lane] = s[0];
+        self.theta2[lane] = s[1];
+        self.dtheta1[lane] = s[2];
+        self.dtheta2[lane] = s[3];
+    }
+
+    #[inline]
+    fn write_obs(s: &[f32; 4], obs: &mut [f32]) {
+        obs[0] = s[0].cos();
+        obs[1] = s[0].sin();
+        obs[2] = s[1].cos();
+        obs[3] = s[1].sin();
+        obs[4] = s[2];
+        obs[5] = s[3];
+    }
+}
+
+impl VecEnv for AcrobotVec {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        let s = acrobot::reset_state(&mut self.rng[lane]);
+        self.scatter(lane, s);
+        self.steps[lane] = 0;
+        Self::write_obs(&s, obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        debug_assert_eq!(actions.len(), k);
+        debug_assert_eq!(reset_mask.len(), k);
+        debug_assert_eq!(out.len(), k);
+        for lane in 0..k {
+            if reset_mask[lane] != 0 {
+                self.reset_lane(lane, arena.row(lane));
+                out[lane] = Step::default();
+                continue;
+            }
+            let a = discrete_action(&actions[lane..lane + 1], 3);
+            let s = acrobot::dynamics(
+                [self.theta1[lane], self.theta2[lane], self.dtheta1[lane], self.dtheta2[lane]],
+                a,
+            );
+            self.scatter(lane, s);
+            self.steps[lane] += 1;
+
+            let done = acrobot::is_terminal(&s);
+            let truncated = !done && self.steps[lane] as usize >= acrobot::MAX_STEPS;
+            Self::write_obs(&s, arena.row(lane));
+            out[lane] = Step { reward: if done { 0.0 } else { -1.0 }, done, truncated };
+        }
+    }
+}

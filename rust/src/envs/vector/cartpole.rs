@@ -1,0 +1,90 @@
+//! Struct-of-arrays CartPole batch kernel. Per-lane math and RNG streams
+//! are shared with [`crate::envs::classic::cartpole`], making this path
+//! bitwise identical to stepping N scalar envs.
+
+use super::{ObsArena, VecEnv};
+use crate::envs::classic::cartpole;
+use crate::envs::env::{discrete_action, Step};
+use crate::envs::spec::EnvSpec;
+use crate::rng::Pcg32;
+
+/// SoA batch of CartPole environments.
+pub struct CartPoleVec {
+    spec: EnvSpec,
+    rng: Vec<Pcg32>,
+    x: Vec<f32>,
+    x_dot: Vec<f32>,
+    theta: Vec<f32>,
+    theta_dot: Vec<f32>,
+    steps: Vec<u32>,
+}
+
+impl CartPoleVec {
+    /// Batch of `count` envs with global ids `first_env_id..+count`.
+    pub fn new(seed: u64, first_env_id: u64, count: usize) -> Self {
+        CartPoleVec {
+            spec: cartpole::spec(),
+            rng: (0..count).map(|l| cartpole::rng(seed, first_env_id + l as u64)).collect(),
+            x: vec![0.0; count],
+            x_dot: vec![0.0; count],
+            theta: vec![0.0; count],
+            theta_dot: vec![0.0; count],
+            steps: vec![0; count],
+        }
+    }
+}
+
+impl VecEnv for CartPoleVec {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        let s = cartpole::reset_state(&mut self.rng[lane]);
+        self.x[lane] = s[0];
+        self.x_dot[lane] = s[1];
+        self.theta[lane] = s[2];
+        self.theta_dot[lane] = s[3];
+        self.steps[lane] = 0;
+        obs[..4].copy_from_slice(&s);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        debug_assert_eq!(actions.len(), k);
+        debug_assert_eq!(reset_mask.len(), k);
+        debug_assert_eq!(out.len(), k);
+        for lane in 0..k {
+            if reset_mask[lane] != 0 {
+                self.reset_lane(lane, arena.row(lane));
+                out[lane] = Step::default();
+                continue;
+            }
+            let a = discrete_action(&actions[lane..lane + 1], 2);
+            let s = cartpole::dynamics(
+                [self.x[lane], self.x_dot[lane], self.theta[lane], self.theta_dot[lane]],
+                a,
+            );
+            self.x[lane] = s[0];
+            self.x_dot[lane] = s[1];
+            self.theta[lane] = s[2];
+            self.theta_dot[lane] = s[3];
+            self.steps[lane] += 1;
+
+            let fell = cartpole::fell(&s);
+            let truncated = !fell && self.steps[lane] as usize >= cartpole::MAX_STEPS;
+            arena.row(lane)[..4].copy_from_slice(&s);
+            out[lane] = Step { reward: 1.0, done: fell, truncated };
+        }
+    }
+}

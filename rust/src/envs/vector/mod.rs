@@ -1,0 +1,181 @@
+//! Vectorized (struct-of-arrays) environment batches.
+//!
+//! # Why this layer exists
+//!
+//! The paper's lock-free queues (Appendix D) remove *transport* overhead,
+//! but for very cheap environments the remaining cost is *dispatch*: one
+//! task dequeue, one virtual call, one mutex acquisition, and one slot
+//! commit **per env per step**. A CartPole step is ~20 flops; the
+//! dispatch around it is an order of magnitude more. CuLE makes the same
+//! observation for GPU Atari (batch the emulator loop, not the
+//! transport) and Sample Factory keeps workers saturated with per-worker
+//! env batches. This module provides the execution half of that design:
+//! a [`VecEnv`] steps a whole batch of `K` environments in one call, so
+//! all per-task costs are amortized `K`-fold.
+//!
+//! # SoA layout
+//!
+//! Each kernel stores env state as parallel arrays (struct-of-arrays),
+//! e.g. [`CartPoleVec`] holds `x[]`, `x_dot[]`, `theta[]`, `theta_dot[]`
+//! rather than an array of 4-float structs. The step loop walks lanes
+//! sequentially with all state for a field contiguous in cache, and the
+//! per-lane math is the *same inlined function* the scalar env uses
+//! ([`crate::envs::classic`] exports its dynamics), which makes the two
+//! paths bitwise identical — the property test in `tests/vector_parity.rs`
+//! pins this.
+//!
+//! # Observation arenas — no per-env allocation
+//!
+//! Kernels never allocate observation buffers. The caller hands an
+//! [`ObsArena`], a view that yields the final destination row for each
+//! lane. The pool's chunked executor backs the arena directly with
+//! acquired [`crate::pool::StateBufferQueue`] slots (observations are
+//! written in place in block memory, the paper's zero-copy invariant);
+//! the synchronous executors back it with their contiguous output
+//! buffer ([`SliceArena`]).
+//!
+//! # Chunking math
+//!
+//! The chunked pool derives the chunk size `K = ceil(num_envs /
+//! num_threads)` so every worker owns at most one chunk's work per
+//! round; the last chunk takes the remainder (`num_envs - (chunks-1)*K`).
+//! With `K = 1` the design degenerates to the paper's per-env tasks;
+//! with `K = num_envs / num_threads` each thread wakeup serves a full
+//! chunk, cutting semaphore posts and task dequeues by `K×`.
+//!
+//! # Auto-reset semantics
+//!
+//! [`VecEnv::step_batch`] takes a `reset_mask`: lanes whose previous
+//! transition finished are *reset* instead of stepped, producing the
+//! fresh observation with zero reward — exactly the EnvPool auto-reset
+//! contract the scalar [`crate::pool::ThreadPool`] implements, so every
+//! executor agrees on episode-boundary semantics.
+
+pub mod acrobot;
+pub mod cartpole;
+pub mod mountain_car;
+pub mod pendulum;
+pub mod scalar;
+
+pub use acrobot::AcrobotVec;
+pub use cartpole::CartPoleVec;
+pub use mountain_car::MountainCarVec;
+pub use pendulum::PendulumVec;
+pub use scalar::ScalarVec;
+
+use super::env::Step;
+use super::spec::EnvSpec;
+
+/// Destination rows for a batch of observations. `row(lane)` returns the
+/// final storage for lane `lane`'s observation (length `obs_dim`) — a
+/// state-queue slot, an output-buffer row, or any other pre-allocated
+/// memory. Implementations must return disjoint rows for distinct lanes.
+pub trait ObsArena {
+    /// Observation row for batch lane `lane`.
+    fn row(&mut self, lane: usize) -> &mut [f32];
+}
+
+/// [`ObsArena`] over a contiguous row-major `[K, obs_dim]` buffer.
+pub struct SliceArena<'a> {
+    buf: &'a mut [f32],
+    dim: usize,
+}
+
+impl<'a> SliceArena<'a> {
+    /// View `buf` (length `K * dim`) as `K` rows of width `dim`.
+    pub fn new(buf: &'a mut [f32], dim: usize) -> Self {
+        debug_assert!(dim > 0 && buf.len() % dim == 0);
+        SliceArena { buf, dim }
+    }
+}
+
+impl ObsArena for SliceArena<'_> {
+    #[inline]
+    fn row(&mut self, lane: usize) -> &mut [f32] {
+        &mut self.buf[lane * self.dim..(lane + 1) * self.dim]
+    }
+}
+
+/// A fixed batch of environments stepped as one unit.
+///
+/// Lane `l` corresponds to global env id `first_env_id + l` (RNG streams
+/// are keyed by global id, so trajectories are independent of how envs
+/// are grouped into batches — the determinism tests rely on this).
+pub trait VecEnv: Send {
+    /// Spec of the underlying task (shared by every lane).
+    fn spec(&self) -> &EnvSpec;
+
+    /// Number of lanes (environments) in this batch.
+    fn num_envs(&self) -> usize;
+
+    /// Reset lane `lane`, writing its initial observation into `obs`
+    /// (length `spec().obs_dim()`).
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]);
+
+    /// Step every lane: `actions` is row-major `[K, act_dim]`. Lanes with
+    /// `reset_mask[lane] != 0` are reset instead of stepped (EnvPool
+    /// auto-reset) and report a default [`Step`] (zero reward, no flags).
+    /// Observations go through `arena.row(lane)`; step results into
+    /// `out[lane]`.
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_arena_rows_are_disjoint_and_ordered() {
+        let mut buf = vec![0.0f32; 6];
+        let mut a = SliceArena::new(&mut buf, 2);
+        a.row(1).copy_from_slice(&[1.0, 2.0]);
+        a.row(2)[0] = 3.0;
+        assert_eq!(buf, vec![0.0, 0.0, 1.0, 2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn cartpole_vec_matches_scalar_env_bitwise() {
+        use crate::envs::classic::CartPole;
+        use crate::envs::env::Env;
+
+        let seed = 42;
+        let n = 3;
+        let mut vec_env = CartPoleVec::new(seed, 0, n);
+        let mut scalars: Vec<CartPole> = (0..n).map(|i| CartPole::new(seed, i as u64)).collect();
+
+        let mut vobs = vec![0.0f32; n * 4];
+        let mut sobs = [0.0f32; 4];
+        for (l, env) in scalars.iter_mut().enumerate() {
+            vec_env.reset_lane(l, &mut vobs[l * 4..(l + 1) * 4]);
+            env.reset(&mut sobs);
+            assert_eq!(&vobs[l * 4..(l + 1) * 4], &sobs, "reset lane {l}");
+        }
+
+        let mut mask = vec![0u8; n];
+        let mut steps = vec![Step::default(); n];
+        for t in 0..200 {
+            let actions: Vec<f32> = (0..n).map(|l| ((t + l) % 2) as f32).collect();
+            {
+                let mut arena = SliceArena::new(&mut vobs, 4);
+                vec_env.step_batch(&actions, &mask, &mut arena, &mut steps);
+            }
+            for (l, env) in scalars.iter_mut().enumerate() {
+                if mask[l] != 0 {
+                    env.reset(&mut sobs);
+                    assert_eq!(steps[l], Step::default(), "reset step {t} lane {l}");
+                } else {
+                    let s = env.step(&actions[l..l + 1], &mut sobs);
+                    assert_eq!(steps[l], s, "step {t} lane {l}");
+                }
+                assert_eq!(&vobs[l * 4..(l + 1) * 4], &sobs, "obs {t} lane {l}");
+                mask[l] = steps[l].finished() as u8;
+            }
+        }
+    }
+}

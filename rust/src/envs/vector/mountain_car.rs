@@ -1,0 +1,80 @@
+//! Struct-of-arrays MountainCar batch kernel (math and RNG streams
+//! shared with [`crate::envs::classic::mountain_car`]).
+
+use super::{ObsArena, VecEnv};
+use crate::envs::classic::mountain_car;
+use crate::envs::env::{discrete_action, Step};
+use crate::envs::spec::EnvSpec;
+use crate::rng::Pcg32;
+
+/// SoA batch of MountainCar environments.
+pub struct MountainCarVec {
+    spec: EnvSpec,
+    rng: Vec<Pcg32>,
+    pos: Vec<f32>,
+    vel: Vec<f32>,
+    steps: Vec<u32>,
+}
+
+impl MountainCarVec {
+    /// Batch of `count` envs with global ids `first_env_id..+count`.
+    pub fn new(seed: u64, first_env_id: u64, count: usize) -> Self {
+        MountainCarVec {
+            spec: mountain_car::spec(),
+            rng: (0..count).map(|l| mountain_car::rng(seed, first_env_id + l as u64)).collect(),
+            pos: vec![0.0; count],
+            vel: vec![0.0; count],
+            steps: vec![0; count],
+        }
+    }
+}
+
+impl VecEnv for MountainCarVec {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        self.pos[lane] = mountain_car::reset_pos(&mut self.rng[lane]);
+        self.vel[lane] = 0.0;
+        self.steps[lane] = 0;
+        obs[0] = self.pos[lane];
+        obs[1] = self.vel[lane];
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        debug_assert_eq!(actions.len(), k);
+        debug_assert_eq!(reset_mask.len(), k);
+        debug_assert_eq!(out.len(), k);
+        for lane in 0..k {
+            if reset_mask[lane] != 0 {
+                self.reset_lane(lane, arena.row(lane));
+                out[lane] = Step::default();
+                continue;
+            }
+            let a = discrete_action(&actions[lane..lane + 1], 3);
+            let (pos, vel) = mountain_car::dynamics(self.pos[lane], self.vel[lane], a);
+            self.pos[lane] = pos;
+            self.vel[lane] = vel;
+            self.steps[lane] += 1;
+
+            let done = mountain_car::at_goal(pos);
+            let truncated = !done && self.steps[lane] as usize >= mountain_car::MAX_STEPS;
+            let obs = arena.row(lane);
+            obs[0] = pos;
+            obs[1] = vel;
+            out[lane] = Step { reward: -1.0, done, truncated };
+        }
+    }
+}

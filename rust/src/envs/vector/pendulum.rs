@@ -1,0 +1,86 @@
+//! Struct-of-arrays Pendulum batch kernel (math and RNG streams shared
+//! with [`crate::envs::classic::pendulum`]).
+
+use super::{ObsArena, VecEnv};
+use crate::envs::classic::pendulum;
+use crate::envs::env::Step;
+use crate::envs::spec::EnvSpec;
+use crate::rng::Pcg32;
+
+/// SoA batch of Pendulum environments.
+pub struct PendulumVec {
+    spec: EnvSpec,
+    rng: Vec<Pcg32>,
+    theta: Vec<f32>,
+    theta_dot: Vec<f32>,
+    steps: Vec<u32>,
+}
+
+impl PendulumVec {
+    /// Batch of `count` envs with global ids `first_env_id..+count`.
+    pub fn new(seed: u64, first_env_id: u64, count: usize) -> Self {
+        PendulumVec {
+            spec: pendulum::spec(),
+            rng: (0..count).map(|l| pendulum::rng(seed, first_env_id + l as u64)).collect(),
+            theta: vec![0.0; count],
+            theta_dot: vec![0.0; count],
+            steps: vec![0; count],
+        }
+    }
+
+    #[inline]
+    fn write_obs(&self, lane: usize, obs: &mut [f32]) {
+        obs[0] = self.theta[lane].cos();
+        obs[1] = self.theta[lane].sin();
+        obs[2] = self.theta_dot[lane];
+    }
+}
+
+impl VecEnv for PendulumVec {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        let (theta, theta_dot) = pendulum::reset_state(&mut self.rng[lane]);
+        self.theta[lane] = theta;
+        self.theta_dot[lane] = theta_dot;
+        self.steps[lane] = 0;
+        self.write_obs(lane, obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        debug_assert_eq!(actions.len(), k);
+        debug_assert_eq!(reset_mask.len(), k);
+        debug_assert_eq!(out.len(), k);
+        for lane in 0..k {
+            if reset_mask[lane] != 0 {
+                self.reset_lane(lane, arena.row(lane));
+                out[lane] = Step::default();
+                continue;
+            }
+            let (theta, theta_dot, cost) =
+                pendulum::dynamics(self.theta[lane], self.theta_dot[lane], actions[lane]);
+            self.theta[lane] = theta;
+            self.theta_dot[lane] = theta_dot;
+            self.steps[lane] += 1;
+            self.write_obs(lane, arena.row(lane));
+            out[lane] = Step {
+                reward: -cost,
+                done: false,
+                truncated: self.steps[lane] as usize >= pendulum::MAX_STEPS,
+            };
+        }
+    }
+}

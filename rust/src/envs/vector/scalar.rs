@@ -1,0 +1,87 @@
+//! Fallback [`VecEnv`] over a batch of boxed scalar environments. Tasks
+//! without a dedicated SoA kernel (Atari, MuJoCo, dm_control) still get
+//! the chunked-dispatch amortization — one task dequeue and one wakeup
+//! per `K` envs — just not the SoA state layout.
+
+use super::{ObsArena, VecEnv};
+use crate::envs::env::{Env, Step};
+use crate::envs::registry;
+use crate::envs::spec::EnvSpec;
+use crate::Result;
+
+/// A chunk of scalar envs behind the vectorized interface.
+pub struct ScalarVec {
+    spec: EnvSpec,
+    envs: Vec<Box<dyn Env>>,
+}
+
+impl ScalarVec {
+    /// Batch of `count` scalar envs with global ids `first_env_id..+count`.
+    pub fn new(task_id: &str, seed: u64, first_env_id: u64, count: usize) -> Result<Self> {
+        let envs = (0..count)
+            .map(|l| registry::make_env(task_id, seed, first_env_id + l as u64))
+            .collect::<Result<Vec<_>>>()?;
+        // Take the spec from a member env; construction (ROM/model load)
+        // is exactly what this fallback path wants to avoid duplicating.
+        let spec = match envs.first() {
+            Some(e) => e.spec().clone(),
+            None => registry::spec_for(task_id)?,
+        };
+        Ok(ScalarVec { spec, envs })
+    }
+}
+
+impl VecEnv for ScalarVec {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        self.envs[lane].reset(obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let adim = self.spec.action_space.dim();
+        debug_assert_eq!(actions.len(), self.envs.len() * adim);
+        for (lane, env) in self.envs.iter_mut().enumerate() {
+            let obs = arena.row(lane);
+            if reset_mask[lane] != 0 {
+                env.reset(obs);
+                out[lane] = Step::default();
+            } else {
+                out[lane] = env.step(&actions[lane * adim..(lane + 1) * adim], obs);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::vector::SliceArena;
+
+    #[test]
+    fn scalar_vec_steps_any_task() {
+        let mut v = ScalarVec::new("Pendulum-v1", 3, 0, 2).unwrap();
+        assert_eq!(v.num_envs(), 2);
+        let dim = v.spec().obs_dim();
+        let mut obs = vec![0.0f32; 2 * dim];
+        for lane in 0..2 {
+            v.reset_lane(lane, &mut obs[lane * dim..(lane + 1) * dim]);
+        }
+        let mut out = vec![Step::default(); 2];
+        let mut arena = SliceArena::new(&mut obs, dim);
+        v.step_batch(&[0.5, -0.5], &[0, 0], &mut arena, &mut out);
+        assert!(out.iter().all(|s| s.reward <= 0.0 && !s.done));
+    }
+}

@@ -1,43 +1,70 @@
-//! Crate-wide error type.
+//! Crate-wide error type. Hand-rolled `Display`/`Error` impls — the
+//! vendored crate set has no `thiserror`.
 
 /// Unified error type for envpool-rs.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Unknown environment id passed to `envs::registry::make`.
-    #[error("unknown environment task id: {0}")]
     UnknownEnv(String),
 
     /// Invalid pool / executor configuration.
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// An action batch referenced an env id outside the pool.
-    #[error("env id {id} out of range (num_envs = {num_envs})")]
     BadEnvId { id: usize, num_envs: usize },
 
     /// Action batch shape does not match the env ids given.
-    #[error("action batch length {actions} != env id count {ids}")]
     ActionShape { actions: usize, ids: usize },
 
     /// The pool was already closed (threads joined).
-    #[error("pool is closed")]
     Closed,
 
     /// XLA / PJRT error from the runtime layer.
-    #[error("xla: {0}")]
     Xla(String),
 
     /// Artifact (HLO / manifest) loading problems.
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// IPC framing error in the subprocess executor.
-    #[error("ipc: {0}")]
     Ipc(String),
 
     /// Underlying I/O error.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::UnknownEnv(id) => write!(f, "unknown environment task id: {id}"),
+            Error::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::BadEnvId { id, num_envs } => {
+                write!(f, "env id {id} out of range (num_envs = {num_envs})")
+            }
+            Error::ActionShape { actions, ids } => {
+                write!(f, "action batch length {actions} != env id count {ids}")
+            }
+            Error::Closed => write!(f, "pool is closed"),
+            Error::Xla(msg) => write!(f, "xla: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact: {msg}"),
+            Error::Ipc(msg) => write!(f, "ipc: {msg}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -48,3 +75,30 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_stable() {
+        assert_eq!(Error::UnknownEnv("X-v0".into()).to_string(), "unknown environment task id: X-v0");
+        assert_eq!(
+            Error::BadEnvId { id: 9, num_envs: 4 }.to_string(),
+            "env id 9 out of range (num_envs = 4)"
+        );
+        assert_eq!(
+            Error::ActionShape { actions: 2, ids: 1 }.to_string(),
+            "action batch length 2 != env id count 1"
+        );
+        assert_eq!(Error::Closed.to_string(), "pool is closed");
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.source().is_some());
+        assert!(e.to_string().starts_with("io: "));
+    }
+}

@@ -17,6 +17,7 @@
 
 pub mod traits;
 pub mod forloop;
+pub mod vector_forloop;
 pub mod ipc;
 pub mod subprocess;
 pub mod sample_factory;
@@ -25,3 +26,4 @@ pub use forloop::ForLoopExecutor;
 pub use sample_factory::SampleFactoryExecutor;
 pub use subprocess::SubprocessExecutor;
 pub use traits::{PoolVectorEnv, VectorEnv};
+pub use vector_forloop::VecForLoopExecutor;

@@ -5,9 +5,10 @@
 //! unlike EnvPool — batches are per-worker (fixed membership), and the
 //! consumer must poll workers round-robin.
 
-use crate::envs::env::Env;
+use crate::envs::env::Step;
 use crate::envs::registry;
 use crate::envs::spec::EnvSpec;
+use crate::envs::vector::{ScalarVec, SliceArena, VecEnv};
 use crate::pool::batch::BatchedTransition;
 use crate::pool::sem::Semaphore;
 use crate::Result;
@@ -39,8 +40,31 @@ pub struct SampleFactoryExecutor {
 }
 
 impl SampleFactoryExecutor {
-    /// `num_envs` split evenly over `num_workers` threads.
+    /// `num_envs` split evenly over `num_workers` threads, stepped
+    /// per-env (each worker wraps its set in a [`ScalarVec`]).
     pub fn new(task_id: &str, num_envs: usize, num_workers: usize, seed: u64) -> Result<Self> {
+        Self::with_backend(task_id, num_envs, num_workers, seed, false)
+    }
+
+    /// Like [`Self::new`] but each worker steps its env set through the
+    /// task's struct-of-arrays kernel ([`crate::envs::vector`]) — the
+    /// fair double-buffered baseline against `ExecMode::Vectorized`.
+    pub fn new_vectorized(
+        task_id: &str,
+        num_envs: usize,
+        num_workers: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        Self::with_backend(task_id, num_envs, num_workers, seed, true)
+    }
+
+    fn with_backend(
+        task_id: &str,
+        num_envs: usize,
+        num_workers: usize,
+        seed: u64,
+        vectorized: bool,
+    ) -> Result<Self> {
         if num_workers == 0 || num_envs % num_workers != 0 {
             return Err(crate::Error::Config(format!(
                 "num_envs {num_envs} must divide over {num_workers} workers"
@@ -63,14 +87,21 @@ impl SampleFactoryExecutor {
             shared.push(sh.clone());
             let task = task_id.to_string();
             handles.push(std::thread::spawn(move || {
-                let mut envs: Vec<Box<dyn Env>> = (0..per)
-                    .map(|i| registry::make_env(&task, seed, (w * per + i) as u64).unwrap())
-                    .collect();
-                let mut needs_reset = vec![false; per];
+                // Per-env semantics and RNG streams are identical either
+                // way (the SoA kernels are bitwise-equal to the scalar
+                // envs); `vectorized` only changes the stepping engine.
+                let first = (w * per) as u64;
+                let mut envs: Box<dyn VecEnv> = if vectorized {
+                    registry::make_vec_env(&task, seed, first, per).unwrap()
+                } else {
+                    Box::new(ScalarVec::new(&task, seed, first, per).unwrap())
+                };
+                let mut needs_reset = vec![0u8; per];
+                let mut results = vec![Step::default(); per];
                 let mut local = BatchedTransition::with_capacity(per, dim);
                 // initial reset fills the first buffer
-                for (i, env) in envs.iter_mut().enumerate() {
-                    env.reset(&mut local.obs[i * dim..(i + 1) * dim]);
+                for i in 0..per {
+                    envs.reset_lane(i, &mut local.obs[i * dim..(i + 1) * dim]);
                     local.env_ids[i] = (w * per + i) as u32;
                 }
                 loop {
@@ -85,21 +116,15 @@ impl SampleFactoryExecutor {
                         return;
                     }
                     let actions = sh.actions.lock().unwrap().clone();
-                    for (i, env) in envs.iter_mut().enumerate() {
-                        let obs = &mut local.obs[i * dim..(i + 1) * dim];
-                        if needs_reset[i] {
-                            needs_reset[i] = false;
-                            env.reset(obs);
-                            local.rew[i] = 0.0;
-                            local.done[i] = 0;
-                            local.trunc[i] = 0;
-                        } else {
-                            let s = env.step(&actions[i * adim..(i + 1) * adim], obs);
-                            local.rew[i] = s.reward;
-                            local.done[i] = s.done as u8;
-                            local.trunc[i] = s.truncated as u8;
-                            needs_reset[i] = s.finished();
-                        }
+                    {
+                        let mut arena = SliceArena::new(&mut local.obs, dim);
+                        envs.step_batch(&actions, &needs_reset, &mut arena, &mut results);
+                    }
+                    for (i, s) in results.iter().enumerate() {
+                        local.rew[i] = s.reward;
+                        local.done[i] = s.done as u8;
+                        local.trunc[i] = s.truncated as u8;
+                        needs_reset[i] = s.finished() as u8;
                         local.env_ids[i] = (w * per + i) as u32;
                     }
                 }
@@ -181,6 +206,33 @@ mod tests {
     #[test]
     fn uneven_split_rejected() {
         assert!(SampleFactoryExecutor::new("CartPole-v1", 7, 2, 0).is_err());
+        assert!(SampleFactoryExecutor::new_vectorized("CartPole-v1", 7, 2, 0).is_err());
+    }
+
+    #[test]
+    fn vectorized_backend_matches_scalar_backend() {
+        // Round-robin polling is deterministic, so the full transition
+        // stream must be identical between stepping engines.
+        let run = |vectorized: bool| -> (Vec<f32>, Vec<u8>) {
+            let mut ex = if vectorized {
+                SampleFactoryExecutor::new_vectorized("CartPole-v1", 4, 2, 9).unwrap()
+            } else {
+                SampleFactoryExecutor::new("CartPole-v1", 4, 2, 9).unwrap()
+            };
+            let mut out = ex.make_output();
+            let mut rew = Vec::new();
+            let mut done = Vec::new();
+            for step in 0..100 {
+                let w = ex.recv_into(&mut out);
+                rew.extend_from_slice(&out.rew);
+                done.extend_from_slice(&out.done);
+                let actions: Vec<f32> =
+                    out.env_ids.iter().map(|&id| ((step + id as usize) % 2) as f32).collect();
+                ex.send(w, &actions);
+            }
+            (rew, done)
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

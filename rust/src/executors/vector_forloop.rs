@@ -1,0 +1,106 @@
+//! Vectorized for-loop baseline: all environments stepped in the calling
+//! thread through one [`VecEnv`] batch kernel. The apples-to-apples
+//! comparison point for `ExecMode::Vectorized` — same SoA kernels, no
+//! pool — which isolates the kernel speedup from the dispatch speedup in
+//! the Table 1/2 benches.
+
+use super::traits::VectorEnv;
+use crate::envs::registry;
+use crate::envs::spec::EnvSpec;
+use crate::envs::vector::{SliceArena, VecEnv};
+use crate::envs::Step;
+use crate::pool::batch::BatchedTransition;
+use crate::Result;
+
+/// Sequential vectorized executor over a single SoA batch kernel.
+pub struct VecForLoopExecutor {
+    spec: EnvSpec,
+    envs: Box<dyn VecEnv>,
+    needs_reset: Vec<u8>,
+    results: Vec<Step>,
+}
+
+impl VecForLoopExecutor {
+    pub fn new(task_id: &str, num_envs: usize, seed: u64) -> Result<Self> {
+        let envs = registry::make_vec_env(task_id, seed, 0, num_envs)?;
+        Ok(VecForLoopExecutor {
+            spec: envs.spec().clone(),
+            envs,
+            needs_reset: vec![0; num_envs],
+            results: vec![Step::default(); num_envs],
+        })
+    }
+}
+
+impl VectorEnv for VecForLoopExecutor {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.envs.num_envs()
+    }
+
+    fn reset(&mut self, out: &mut BatchedTransition) -> Result<()> {
+        let dim = self.spec.obs_dim();
+        out.obs_dim = dim;
+        for i in 0..self.num_envs() {
+            self.envs.reset_lane(i, &mut out.obs[i * dim..(i + 1) * dim]);
+            out.rew[i] = 0.0;
+            out.done[i] = 0;
+            out.trunc[i] = 0;
+            out.env_ids[i] = i as u32;
+            self.needs_reset[i] = 0;
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut BatchedTransition) -> Result<()> {
+        let dim = self.spec.obs_dim();
+        out.obs_dim = dim;
+        {
+            let mut arena = SliceArena::new(&mut out.obs, dim);
+            self.envs.step_batch(actions, &self.needs_reset, &mut arena, &mut self.results);
+        }
+        for (i, s) in self.results.iter().enumerate() {
+            out.rew[i] = s.reward;
+            out.done[i] = s.done as u8;
+            out.trunc[i] = s.truncated as u8;
+            out.env_ids[i] = i as u32;
+            self.needs_reset[i] = s.finished() as u8;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executors::ForLoopExecutor;
+
+    #[test]
+    fn matches_scalar_forloop_bitwise_across_resets() {
+        for task in ["CartPole-v1", "MountainCar-v0", "Pendulum-v1", "Acrobot-v1"] {
+            let n = 3;
+            let seed = 11;
+            let mut a = ForLoopExecutor::new(task, n, seed).unwrap();
+            let mut b = VecForLoopExecutor::new(task, n, seed).unwrap();
+            let adim = a.spec().action_space.dim();
+            let mut oa = a.make_output();
+            let mut ob = b.make_output();
+            a.reset(&mut oa).unwrap();
+            b.reset(&mut ob).unwrap();
+            assert_eq!(oa.obs, ob.obs, "{task} reset");
+            for step in 0..250 {
+                let actions: Vec<f32> =
+                    (0..n * adim).map(|k| ((step + k) % 3) as f32 - 1.0).collect();
+                a.step(&actions, &mut oa).unwrap();
+                b.step(&actions, &mut ob).unwrap();
+                assert_eq!(oa.rew, ob.rew, "{task} step {step} rewards");
+                assert_eq!(oa.done, ob.done, "{task} step {step} dones");
+                assert_eq!(oa.trunc, ob.trunc, "{task} step {step} truncs");
+                assert_eq!(oa.obs, ob.obs, "{task} step {step} obs");
+            }
+        }
+    }
+}

@@ -38,7 +38,10 @@
 //! ```
 //!
 //! Synchronous mode is the special case `num_envs == batch_size`; the
-//! [`pool::EnvPool::step`] convenience wraps `send`+`recv`.
+//! [`pool::EnvPool::step_into`] convenience wraps `send`+`recv`. For
+//! cheap environments, `PoolConfig::exec_mode(ExecMode::Vectorized)`
+//! switches the workers to chunked struct-of-arrays execution
+//! ([`envs::vector`]), amortizing per-step dispatch overhead.
 
 pub mod error;
 pub mod rng;

@@ -62,6 +62,21 @@ impl<T> ActionBufferQueue<T> {
         Ok(())
     }
 
+    /// Enqueue, yielding until space frees up (the task-submission path
+    /// shared by both worker engines; under the pool protocol the queue
+    /// is sized so this never actually has to wait).
+    pub fn blocking_enqueue(&self, mut v: T) {
+        loop {
+            match self.enqueue(v) {
+                Ok(()) => return,
+                Err(back) => {
+                    v = back;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
     /// Enqueue a batch with a single semaphore post (one futex wake
     /// instead of `items.len()`): the `send` hot path's optimization —
     /// measured in `benches/queues.rs` and EXPERIMENTS.md §Perf.
@@ -220,6 +235,24 @@ mod tests {
         assert!(q.enqueue(99).is_err());
         q.try_dequeue();
         q.enqueue(99).unwrap();
+    }
+
+    #[test]
+    fn blocking_enqueue_waits_for_space() {
+        let q = Arc::new(ActionBufferQueue::new(4));
+        for i in 0..q.capacity() {
+            q.enqueue(i).unwrap();
+        }
+        let qc = q.clone();
+        let h = std::thread::spawn(move || qc.blocking_enqueue(99));
+        // free one slot; the blocked producer must complete
+        assert!(q.try_dequeue().is_some());
+        h.join().unwrap();
+        let mut drained = vec![];
+        while let Some(v) = q.try_dequeue() {
+            drained.push(v);
+        }
+        assert!(drained.contains(&99));
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use super::action_queue::ActionBufferQueue;
 use super::batch::BatchedTransition;
+use super::chunked::{Chunk, ChunkedThreadPool};
 use super::state_queue::StateBufferQueue;
 use super::thread_pool::{EnvSlot, Task, ThreadPool};
 use crate::envs::registry;
@@ -10,6 +11,20 @@ use crate::envs::spec::EnvSpec;
 use crate::{Error, Result};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// How worker threads execute environment steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// One task per env step (the paper's baseline design): maximal
+    /// scheduling freedom, best for expensive envs (Atari, MuJoCo).
+    #[default]
+    Scalar,
+    /// One task per **chunk** of `ceil(num_envs / num_threads)` envs,
+    /// stepped by a struct-of-arrays kernel writing observations straight
+    /// into state-queue slots. Amortizes wakeups/dispatch for cheap envs
+    /// (classic control) — see [`crate::envs::vector`].
+    Vectorized,
+}
 
 /// Pool construction parameters (builder style).
 #[derive(Debug, Clone)]
@@ -26,6 +41,8 @@ pub struct PoolConfig {
     pub seed: u64,
     /// Pin worker threads to cores.
     pub pin_cores: bool,
+    /// Step execution backend (per-env tasks vs per-chunk SoA kernels).
+    pub exec_mode: ExecMode,
 }
 
 impl PoolConfig {
@@ -37,6 +54,7 @@ impl PoolConfig {
             num_threads: 1,
             seed: 0,
             pin_cores: false,
+            exec_mode: ExecMode::Scalar,
         }
     }
 
@@ -68,6 +86,12 @@ impl PoolConfig {
         self
     }
 
+    /// Select the execution backend (see [`ExecMode`]).
+    pub fn exec_mode(mut self, m: ExecMode) -> Self {
+        self.exec_mode = m;
+        self
+    }
+
     /// Synchronous-mode config (`batch_size = num_envs`).
     pub fn sync(mut self) -> Self {
         self.batch_size = self.num_envs;
@@ -91,14 +115,24 @@ impl PoolConfig {
     }
 }
 
+/// The per-mode execution engine behind the pool facade.
+enum Engine {
+    /// Per-env tasks over a shared env table (paper baseline).
+    Scalar {
+        envs: Arc<Vec<EnvSlot>>,
+        queue: Arc<ActionBufferQueue<Task>>,
+        workers: Option<ThreadPool>,
+    },
+    /// Per-chunk tasks over struct-of-arrays backends.
+    Chunked { pool: Option<ChunkedThreadPool> },
+}
+
 /// The environment pool.
 pub struct EnvPool {
     spec: EnvSpec,
     cfg: PoolConfig,
-    envs: Arc<Vec<EnvSlot>>,
-    queue: Arc<ActionBufferQueue<Task>>,
     states: Arc<StateBufferQueue>,
-    workers: Option<ThreadPool>,
+    engine: Engine,
     /// Reusable output block for the owned-recv convenience API.
     scratch: BatchedTransition,
     started: bool,
@@ -111,22 +145,74 @@ impl EnvPool {
         cfg.validate()?;
         let spec = registry::spec_for(&cfg.task_id)?;
         let act_dim = spec.action_space.dim();
-        let mut slots = Vec::with_capacity(cfg.num_envs);
-        for i in 0..cfg.num_envs {
-            slots.push(EnvSlot {
-                env: Mutex::new(registry::make_env(&cfg.task_id, cfg.seed, i as u64)?),
-                action: Mutex::new(vec![0.0; act_dim]),
-                needs_reset: Mutex::new(false),
-            });
-        }
-        let envs = Arc::new(slots);
-        // paper: ActionBufferQueue sized 2N (+ room for shutdown tasks)
-        let queue = Arc::new(ActionBufferQueue::new(2 * cfg.num_envs + cfg.num_threads));
         let states = Arc::new(StateBufferQueue::new(cfg.num_envs, cfg.batch_size, spec.obs_dim()));
-        let workers =
-            ThreadPool::spawn(cfg.num_threads, envs.clone(), queue.clone(), states.clone(), cfg.pin_cores);
+        let engine = match cfg.exec_mode {
+            ExecMode::Scalar => {
+                let mut slots = Vec::with_capacity(cfg.num_envs);
+                for i in 0..cfg.num_envs {
+                    slots.push(EnvSlot {
+                        env: Mutex::new(registry::make_env(&cfg.task_id, cfg.seed, i as u64)?),
+                        action: Mutex::new(vec![0.0; act_dim]),
+                        needs_reset: Mutex::new(false),
+                    });
+                }
+                let envs = Arc::new(slots);
+                // paper: ActionBufferQueue sized 2N (+ room for shutdown tasks)
+                let queue = Arc::new(ActionBufferQueue::new(2 * cfg.num_envs + cfg.num_threads));
+                let workers = ThreadPool::spawn(
+                    cfg.num_threads,
+                    envs.clone(),
+                    queue.clone(),
+                    states.clone(),
+                    cfg.pin_cores,
+                );
+                Engine::Scalar { envs, queue, workers: Some(workers) }
+            }
+            ExecMode::Vectorized => {
+                // Chunking math: K = ceil(N / threads); the last chunk
+                // takes the remainder (see `envs::vector` module docs).
+                let chunk_size = cfg.num_envs.div_ceil(cfg.num_threads);
+                let num_chunks = cfg.num_envs.div_ceil(chunk_size);
+                // Liveness constraint for async mode: a chunk only steps
+                // once ALL its envs have actions, so with M > num_chunks
+                // every chunk can be left partially armed while the
+                // state queue's tail block holds up to M-1 rows — a
+                // cycle nothing breaks. Pigeonhole: N = staged + tail
+                // with staged <= N - num_chunks and tail <= M - 1, so
+                // deadlock needs M >= num_chunks + 1; M <= num_chunks is
+                // safe. Sync mode (M == N) is separately safe: sends
+                // arrive as a full batch and always arm every chunk.
+                if cfg.batch_size < cfg.num_envs && cfg.batch_size > num_chunks {
+                    return Err(Error::Config(format!(
+                        "vectorized async mode requires batch_size <= num_chunks \
+                         (= {num_chunks} here: {num_chunks} chunks of up to {chunk_size} envs) \
+                         or sync mode (batch_size == num_envs); got batch_size {}. \
+                         Lower batch_size, raise num_threads, or use ExecMode::Scalar",
+                        cfg.batch_size
+                    )));
+                }
+                let mut chunks = Vec::new();
+                let mut first = 0usize;
+                while first < cfg.num_envs {
+                    let len = chunk_size.min(cfg.num_envs - first);
+                    let backend =
+                        registry::make_vec_env(&cfg.task_id, cfg.seed, first as u64, len)?;
+                    chunks.push(Chunk::new(backend, first as u32, act_dim));
+                    first += len;
+                }
+                let pool = ChunkedThreadPool::spawn(
+                    cfg.num_threads,
+                    chunks,
+                    states.clone(),
+                    chunk_size,
+                    act_dim,
+                    cfg.pin_cores,
+                );
+                Engine::Chunked { pool: Some(pool) }
+            }
+        };
         let scratch = states.make_output();
-        Ok(EnvPool { spec, cfg, envs, queue, states, workers: Some(workers), scratch, started: false })
+        Ok(EnvPool { spec, cfg, states, engine, scratch, started: false })
     }
 
     /// Env spec for this pool's task.
@@ -140,10 +226,16 @@ impl EnvPool {
 
     /// Total env steps executed by the workers so far.
     pub fn total_steps(&self) -> u64 {
-        self.workers
-            .as_ref()
-            .map(|w| w.steps.load(std::sync::atomic::Ordering::Relaxed))
-            .unwrap_or(0)
+        match &self.engine {
+            Engine::Scalar { workers, .. } => workers
+                .as_ref()
+                .map(|w| w.steps.load(std::sync::atomic::Ordering::Relaxed))
+                .unwrap_or(0),
+            Engine::Chunked { pool } => pool
+                .as_ref()
+                .map(|p| p.steps.load(std::sync::atomic::Ordering::Relaxed))
+                .unwrap_or(0),
+        }
     }
 
     /// Kick off the pool: schedule a reset for every environment
@@ -151,21 +243,30 @@ impl EnvPool {
     pub fn async_reset(&mut self) {
         assert!(!self.started, "async_reset may only be called once");
         self.started = true;
-        for i in 0..self.cfg.num_envs {
-            self.enqueue(Task::Reset { env_id: i as u32 });
-        }
+        self.schedule_all_resets();
     }
 
-    fn enqueue(&self, mut t: Task) {
-        loop {
-            match self.queue.enqueue(t) {
-                Ok(()) => return,
-                Err(back) => {
-                    t = back;
-                    std::thread::yield_now();
+    /// Schedule a reset of every env/chunk on the worker side.
+    fn schedule_all_resets(&self) {
+        match &self.engine {
+            Engine::Scalar { .. } => {
+                for i in 0..self.cfg.num_envs {
+                    self.enqueue(Task::Reset { env_id: i as u32 });
+                }
+            }
+            Engine::Chunked { pool } => {
+                if let Some(p) = pool.as_ref() {
+                    p.schedule_reset_all();
                 }
             }
         }
+    }
+
+    fn enqueue(&self, t: Task) {
+        let Engine::Scalar { queue, .. } = &self.engine else {
+            unreachable!("enqueue is scalar-engine only");
+        };
+        queue.blocking_enqueue(t);
     }
 
     /// Send a batch of actions. `actions` is row-major
@@ -176,17 +277,26 @@ impl EnvPool {
         if actions.len() != env_ids.len() * act_dim {
             return Err(Error::ActionShape { actions: actions.len(), ids: env_ids.len() });
         }
-        for (k, &id) in env_ids.iter().enumerate() {
-            let i = id as usize;
-            if i >= self.cfg.num_envs {
-                return Err(Error::BadEnvId { id: i, num_envs: self.cfg.num_envs });
+        for &id in env_ids {
+            if id as usize >= self.cfg.num_envs {
+                return Err(Error::BadEnvId { id: id as usize, num_envs: self.cfg.num_envs });
             }
-            let mut slot = self.envs[i].action.lock().unwrap();
-            slot.copy_from_slice(&actions[k * act_dim..(k + 1) * act_dim]);
         }
-        // single semaphore post for the whole batch (§Perf optimization)
-        self.queue
-            .enqueue_batch(env_ids.iter().map(|&id| Task::Step { env_id: id }));
+        match &self.engine {
+            Engine::Scalar { envs, queue, .. } => {
+                for (k, &id) in env_ids.iter().enumerate() {
+                    let mut slot = envs[id as usize].action.lock().unwrap();
+                    slot.copy_from_slice(&actions[k * act_dim..(k + 1) * act_dim]);
+                }
+                // single semaphore post for the whole batch (§Perf optimization)
+                queue.enqueue_batch(env_ids.iter().map(|&id| Task::Step { env_id: id }));
+            }
+            Engine::Chunked { pool } => {
+                if let Some(p) = pool.as_ref() {
+                    p.send_actions(actions, env_ids);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -234,9 +344,7 @@ impl EnvPool {
         if !self.started {
             self.started = true;
         }
-        for i in 0..self.cfg.num_envs {
-            self.enqueue(Task::Reset { env_id: i as u32 });
-        }
+        self.schedule_all_resets();
         self.recv_into(out);
         Ok(())
     }
@@ -248,8 +356,17 @@ impl EnvPool {
 
     /// Shut down worker threads (also happens on drop).
     pub fn close(&mut self) {
-        if let Some(mut w) = self.workers.take() {
-            w.shutdown();
+        match &mut self.engine {
+            Engine::Scalar { workers, .. } => {
+                if let Some(mut w) = workers.take() {
+                    w.shutdown();
+                }
+            }
+            Engine::Chunked { pool } => {
+                if let Some(mut p) = pool.take() {
+                    p.shutdown();
+                }
+            }
         }
     }
 }
@@ -347,6 +464,111 @@ mod tests {
             pool.step_into(&actions, &out.env_ids.clone(), &mut out).unwrap();
             // pendulum never terminates before 200 steps
             assert!(out.done.iter().all(|&d| d == 0));
+        }
+    }
+
+    #[test]
+    fn vectorized_sync_mode_matches_scalar_exactly() {
+        // ExecMode must be purely an execution detail: same seeds + same
+        // actions => bitwise-identical batches (after env-id reordering).
+        let run = |mode: ExecMode| -> (Vec<f32>, Vec<f32>) {
+            let cfg = PoolConfig::new("CartPole-v1")
+                .num_envs(6)
+                .batch_size(6)
+                .num_threads(2)
+                .seed(17)
+                .exec_mode(mode);
+            let mut pool = EnvPool::make(cfg).unwrap();
+            let mut out = pool.make_output();
+            pool.reset_into(&mut out).unwrap();
+            let mut obs_trace = Vec::new();
+            let mut rew_trace = Vec::new();
+            for step in 0..100 {
+                let ids = out.env_ids.clone();
+                let actions: Vec<f32> =
+                    ids.iter().map(|&i| ((step + i as usize) % 2) as f32).collect();
+                pool.step_into(&actions, &ids, &mut out).unwrap();
+                // canonical env-id order for comparison
+                let mut order: Vec<usize> = (0..out.len()).collect();
+                order.sort_by_key(|&k| out.env_ids[k]);
+                for &k in &order {
+                    obs_trace.extend_from_slice(out.obs_row(k));
+                    rew_trace.push(out.rew[k]);
+                }
+            }
+            (obs_trace, rew_trace)
+        };
+        let (so, sr) = run(ExecMode::Scalar);
+        let (vo, vr) = run(ExecMode::Vectorized);
+        assert_eq!(sr, vr, "rewards diverge between exec modes");
+        assert_eq!(so, vo, "observations diverge between exec modes");
+    }
+
+    #[test]
+    fn vectorized_async_mode_serves_every_env() {
+        // 3 threads => 3 chunks of 3; batch_size 3 == num_chunks is the
+        // largest async batch the liveness constraint admits here.
+        let cfg = PoolConfig::new("Acrobot-v1")
+            .num_envs(9)
+            .batch_size(3)
+            .num_threads(3)
+            .seed(4)
+            .exec_mode(ExecMode::Vectorized);
+        let mut pool = EnvPool::make(cfg).unwrap();
+        pool.async_reset();
+        let mut out = pool.make_output();
+        let mut seen = vec![0u32; 9];
+        for _ in 0..60 {
+            pool.recv_into(&mut out);
+            assert_eq!(out.len(), 3);
+            for &id in &out.env_ids {
+                seen[id as usize] += 1;
+            }
+            let actions = vec![1.0f32; out.len()];
+            pool.send(&actions, &out.env_ids.clone()).unwrap();
+        }
+        assert!(seen.iter().all(|&c| c > 0), "every env must be served: {seen:?}");
+        assert!(pool.total_steps() > 0);
+    }
+
+    #[test]
+    fn vectorized_async_rejects_deadlock_prone_batch_size() {
+        // 2 threads => 2 chunks; an async batch of 3 could leave every
+        // chunk partially armed forever, so construction must fail.
+        let cfg = PoolConfig::new("CartPole-v1")
+            .num_envs(9)
+            .batch_size(3)
+            .num_threads(2)
+            .exec_mode(ExecMode::Vectorized);
+        match EnvPool::make(cfg) {
+            Err(Error::Config(msg)) => assert!(msg.contains("num_chunks"), "{msg}"),
+            other => panic!("expected Config rejection, got {:?}", other.map(|_| ())),
+        }
+        // Sync mode with the same shape is fine.
+        let cfg = PoolConfig::new("CartPole-v1")
+            .num_envs(9)
+            .batch_size(9)
+            .num_threads(2)
+            .exec_mode(ExecMode::Vectorized);
+        assert!(EnvPool::make(cfg).is_ok());
+    }
+
+    #[test]
+    fn vectorized_mode_runs_fallback_tasks_too() {
+        // Non-classic tasks route through the ScalarVec fallback chunk.
+        let cfg = PoolConfig::new("Pong-v5")
+            .num_envs(2)
+            .batch_size(2)
+            .num_threads(2)
+            .seed(1)
+            .exec_mode(ExecMode::Vectorized);
+        let mut pool = EnvPool::make(cfg).unwrap();
+        let mut out = pool.make_output();
+        pool.reset_into(&mut out).unwrap();
+        for _ in 0..3 {
+            let actions = vec![0.0f32; 2];
+            pool.step_into(&actions, &out.env_ids.clone(), &mut out).unwrap();
+            assert!(out.obs.iter().all(|x| x.is_finite()));
         }
     }
 

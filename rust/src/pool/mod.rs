@@ -18,18 +18,26 @@
 //! `num_envs` / `batch_size` pair: `M == N` makes consecutive
 //! `send`/`recv` equivalent to a synchronous vectorized step; `M < N`
 //! waits only for the fastest `M` environments, hiding the long tail.
+//!
+//! For cheap environments, per-env task dispatch itself dominates; the
+//! [`ChunkedThreadPool`] (`ExecMode::Vectorized`) amortizes it by making
+//! each task a chunk of `ceil(N / num_threads)` envs stepped by a
+//! struct-of-arrays kernel ([`crate::envs::vector`]) that writes
+//! observations directly into state-queue slots.
 
 pub mod sem;
 pub mod action_queue;
 pub mod state_queue;
 pub mod thread_pool;
+pub mod chunked;
 pub mod batch;
 pub mod envpool;
 pub mod numa;
 
 pub use action_queue::ActionBufferQueue;
 pub use batch::BatchedTransition;
-pub use envpool::{EnvPool, PoolConfig};
+pub use chunked::ChunkedThreadPool;
+pub use envpool::{EnvPool, ExecMode, PoolConfig};
 pub use numa::NumaPool;
 pub use state_queue::StateBufferQueue;
 pub use thread_pool::ThreadPool;

@@ -128,6 +128,46 @@ impl StateBufferQueue {
         }
     }
 
+    /// Direct access to an acquired slot's observation row, for writers
+    /// that fill several slots before committing any (the vectorized
+    /// chunk path: kernels write each lane's observation straight into
+    /// block memory, then [`Self::commit`] publishes the scalars).
+    ///
+    /// # Safety
+    ///
+    /// `t` must come from [`Self::acquire`] on this queue, must not yet
+    /// have been committed, and no other alias of this slot's row may be
+    /// live. Slot uniqueness (one `acquire` → one writer) makes distinct
+    /// tickets' rows disjoint; the generation check in `acquire`
+    /// guarantees the consumer is not holding the block.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slot_obs_mut(&self, t: SlotTicket) -> &mut [f32] {
+        let data = &mut *self.blocks[t.block].data.get();
+        let o = t.slot * self.obs_dim;
+        &mut data.obs[o..o + self.obs_dim]
+    }
+
+    /// Publish an acquired slot whose observation was already written in
+    /// place (via [`Self::slot_obs_mut`]): store the scalar lanes and
+    /// count the slot toward block completion. Exactly one `commit` (or
+    /// `write`/`write_with`) per acquired ticket.
+    pub fn commit(&self, t: SlotTicket, env_id: u32, rew: f32, done: bool, trunc: bool) {
+        let b = &self.blocks[t.block];
+        // Safety: same argument as `write_with` — the ticket is uniquely
+        // owned and the consumer cannot hold this block.
+        unsafe {
+            let data = &mut *b.data.get();
+            data.rew[t.slot] = rew;
+            data.done[t.slot] = done as u8;
+            data.trunc[t.slot] = trunc as u8;
+            data.env_ids[t.slot] = env_id;
+        }
+        let prev = b.written.fetch_add(1, Ordering::AcqRel);
+        if prev + 1 == self.batch_size {
+            self.ready.post();
+        }
+    }
+
     /// Convenience wrapper over [`Self::write_with`] for pre-computed
     /// scalars.
     pub fn write(
@@ -265,6 +305,28 @@ mod tests {
             w.join().unwrap();
         }
         assert_eq!(seen.len(), 400);
+    }
+
+    #[test]
+    fn slot_obs_then_commit_roundtrip() {
+        // The two-phase write path used by the vectorized chunk workers:
+        // observations land in block memory first, commits can arrive in
+        // any order within the block.
+        let q = StateBufferQueue::new(2, 2, 3);
+        let t0 = q.acquire();
+        let t1 = q.acquire();
+        unsafe { q.slot_obs_mut(t0) }.fill(7.0);
+        unsafe { q.slot_obs_mut(t1) }.fill(9.0);
+        q.commit(t1, 1, -1.0, false, true);
+        q.commit(t0, 0, 1.0, true, false);
+        let mut out = q.make_output();
+        q.recv_into(&mut out);
+        assert_eq!(out.obs_row(0), &[7.0, 7.0, 7.0]);
+        assert_eq!(out.obs_row(1), &[9.0, 9.0, 9.0]);
+        assert_eq!(out.rew, vec![1.0, -1.0]);
+        assert_eq!(out.done, vec![1, 0]);
+        assert_eq!(out.trunc, vec![0, 1]);
+        assert_eq!(out.env_ids, vec![0, 1]);
     }
 
     #[test]

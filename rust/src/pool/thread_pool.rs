@@ -80,16 +80,7 @@ impl ThreadPool {
     /// Ask all workers to exit and join them.
     pub fn shutdown(&mut self) {
         for _ in 0..self.handles.len() {
-            let mut task = Task::Shutdown;
-            loop {
-                match self.queue.enqueue(task) {
-                    Ok(()) => break,
-                    Err(t) => {
-                        task = t;
-                        std::thread::yield_now();
-                    }
-                }
-            }
+            self.queue.blocking_enqueue(Task::Shutdown);
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -150,15 +141,26 @@ fn worker_loop(
     }
 }
 
-/// Pin the calling thread to a core (best effort, Linux only).
+/// Pin the calling thread to a core (best effort, Linux only). The
+/// vendored crate set has no `libc`, so the one syscall wrapper needed is
+/// declared directly against the C library every linux-gnu binary links.
+#[cfg(target_os = "linux")]
 pub fn pin_to_core(idx: usize) {
-    #[cfg(target_os = "linux")]
-    unsafe {
-        let cores = libc::sysconf(libc::_SC_NPROCESSORS_ONLN).max(1) as usize;
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_SET(idx % cores, &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
     }
-    #[cfg(not(target_os = "linux"))]
-    let _ = idx;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // cpu_set_t is a 1024-bit mask on glibc; clamp so >1024-core hosts
+    // degrade to imperfect pinning instead of an out-of-bounds panic.
+    let core = (idx % cores).min(1023);
+    // Mirror glibc's CPU_SET: bit (cpu % bits) of unsigned-long word
+    // (cpu / bits) — word-wise, so the layout is endian-correct.
+    let mut mask = [0u64; 16];
+    mask[core / 64] |= 1u64 << (core % 64);
+    // Best effort: failure just means no pinning.
+    let _ = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
 }
+
+/// Pin the calling thread to a core (no-op off Linux).
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_core(_idx: usize) {}

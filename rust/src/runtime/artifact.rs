@@ -163,17 +163,95 @@ impl Manifest {
     }
 }
 
+/// Test support: synthesize a minimal-but-complete artifacts directory
+/// (manifest + params blob + placeholder HLO files) so the manifest and
+/// parameter-loading code paths are exercised without running
+/// `make artifacts`. Unit tests across the crate share this.
+#[cfg(test)]
+pub(crate) mod testsupport {
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+    const MANIFEST: &str = "\
+configs = cartpole_n8,pend_n4
+# discrete config
+cartpole_n8.task = CartPole-v1
+cartpole_n8.obs_dim = 4
+cartpole_n8.act_dim = 2
+cartpole_n8.hidden = 64
+cartpole_n8.continuous = false
+cartpole_n8.num_envs = 8
+cartpole_n8.num_steps = 128
+cartpole_n8.num_minibatches = 4
+cartpole_n8.minibatch_size = 256
+cartpole_n8.gamma = 0.99
+cartpole_n8.lam = 0.95
+cartpole_n8.params = w1:4x64,b1:64,w2:64x64,b2:64,wp:64x2,bp:2,wv:64x1,bv:1
+cartpole_n8.files.policy = cartpole_n8.policy.hlo
+cartpole_n8.files.train = cartpole_n8.train.hlo
+cartpole_n8.files.gae = cartpole_n8.gae.hlo
+cartpole_n8.files.params = cartpole_n8.params.bin
+# continuous config
+pend_n4.task = Pendulum-v1
+pend_n4.obs_dim = 3
+pend_n4.act_dim = 1
+pend_n4.hidden = 64
+pend_n4.continuous = true
+pend_n4.num_envs = 4
+pend_n4.num_steps = 64
+pend_n4.num_minibatches = 4
+pend_n4.minibatch_size = 64
+pend_n4.gamma = 0.99
+pend_n4.lam = 0.95
+pend_n4.params = w1:3x64,b1:64,wp:64x1,bp:1,log_std:1,wv:64x1,bv:1
+pend_n4.files.policy = pend_n4.policy.hlo
+pend_n4.files.train = pend_n4.train.hlo
+pend_n4.files.gae = pend_n4.gae.hlo
+pend_n4.files.params = pend_n4.params.bin
+";
+
+    /// Write a synthetic artifacts dir and return its path. Weight
+    /// tensors are filled with a nonzero pattern, bias tensors with
+    /// zeros (mirroring the orthogonal/zero init aot.py exports).
+    pub(crate) fn synth_artifacts_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "envpool-test-artifacts-{}-{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), MANIFEST).unwrap();
+        let m = super::Manifest::load(&dir).unwrap();
+        for cfg in &m.configs {
+            for f in [&cfg.policy_file, &cfg.train_file, &cfg.gae_file] {
+                std::fs::write(f, "HloModule placeholder\n").unwrap();
+            }
+            let mut blob = Vec::new();
+            for p in &cfg.params {
+                // "weights" (rank >= 2 or named log_std) nonzero, biases zero
+                let nonzero = p.shape.len() >= 2 || p.name == "log_std";
+                for i in 0..p.numel() {
+                    let v: f32 = if nonzero { 0.01 * (i % 97 + 1) as f32 } else { 0.0 };
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            std::fs::write(&cfg.params_file, blob).unwrap();
+        }
+        dir
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::testsupport::synth_artifacts_dir;
     use super::*;
-
-    fn manifest() -> Manifest {
-        Manifest::load("artifacts").expect("run `make artifacts` first")
-    }
 
     #[test]
     fn manifest_parses_and_has_cartpole() {
-        let m = manifest();
+        let dir = synth_artifacts_dir();
+        let m = Manifest::load(&dir).unwrap();
         let c = m.for_task("CartPole-v1", 8).unwrap();
         assert_eq!(c.obs_dim, 4);
         assert_eq!(c.act_dim, 2);
@@ -187,28 +265,49 @@ mod tests {
 
     #[test]
     fn params_blob_loads_with_correct_sizes() {
-        let m = manifest();
+        let dir = synth_artifacts_dir();
+        let m = Manifest::load(&dir).unwrap();
         let c = m.for_task("CartPole-v1", 8).unwrap();
         let params = m.load_params(c).unwrap();
         assert_eq!(params.len(), 8);
         assert_eq!(params[0].len(), 4 * 64);
-        // orthogonal init => nonzero weights, zero biases
+        // weight init nonzero, bias init zero
         assert!(params[0].iter().any(|&x| x != 0.0));
         assert!(params[1].iter().all(|&x| x == 0.0));
     }
 
     #[test]
+    fn truncated_params_blob_is_rejected() {
+        let dir = synth_artifacts_dir();
+        let m = Manifest::load(&dir).unwrap();
+        let c = m.for_task("CartPole-v1", 8).unwrap();
+        let blob = std::fs::read(&c.params_file).unwrap();
+        std::fs::write(&c.params_file, &blob[..blob.len() - 4]).unwrap();
+        assert!(matches!(m.load_params(c), Err(Error::Artifact(_))));
+    }
+
+    #[test]
     fn continuous_config_has_log_std() {
-        let m = manifest();
-        let c = m.for_task("Ant-v4", 64).unwrap();
+        let dir = synth_artifacts_dir();
+        let m = Manifest::load(&dir).unwrap();
+        let c = m.for_task("Pendulum-v1", 4).unwrap();
         assert!(c.continuous);
         assert!(c.params.iter().any(|p| p.name == "log_std"));
     }
 
     #[test]
     fn unknown_lookup_is_helpful() {
-        let m = manifest();
+        let dir = synth_artifacts_dir();
+        let m = Manifest::load(&dir).unwrap();
         let e = m.for_task("CartPole-v1", 999).unwrap_err();
         assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn missing_manifest_reports_artifact_error() {
+        assert!(matches!(
+            Manifest::load("definitely-not-an-artifacts-dir"),
+            Err(Error::Artifact(_))
+        ));
     }
 }

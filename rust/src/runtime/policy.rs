@@ -68,10 +68,12 @@ mod tests {
     use super::*;
     use crate::runtime::artifact::Manifest;
 
+    use crate::compute_or_skip;
+
     #[test]
     fn discrete_and_continuous_policies_forward() {
-        let rt = Runtime::cpu().unwrap();
-        let m = Manifest::load("artifacts").unwrap();
+        let rt = compute_or_skip!(Runtime::cpu());
+        let m = compute_or_skip!(Manifest::load("artifacts"));
 
         let cfg = m.for_task("CartPole-v1", 8).unwrap();
         let params = ParamStore::load(&m, cfg).unwrap();
@@ -94,8 +96,8 @@ mod tests {
 
     #[test]
     fn identical_obs_rows_give_identical_outputs() {
-        let rt = Runtime::cpu().unwrap();
-        let m = Manifest::load("artifacts").unwrap();
+        let rt = compute_or_skip!(Runtime::cpu());
+        let m = compute_or_skip!(Manifest::load("artifacts"));
         let cfg = m.for_task("CartPole-v1", 8).unwrap();
         let params = ParamStore::load(&m, cfg).unwrap();
         let pol = Policy::load(&rt, cfg).unwrap();

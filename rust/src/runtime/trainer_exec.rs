@@ -135,10 +135,12 @@ mod tests {
     use super::*;
     use crate::runtime::artifact::Manifest;
 
+    use crate::compute_or_skip;
+
     #[test]
     fn gae_exec_matches_rust_reference() {
-        let rt = Runtime::cpu().unwrap();
-        let m = Manifest::load("artifacts").unwrap();
+        let rt = compute_or_skip!(Runtime::cpu());
+        let m = compute_or_skip!(Manifest::load("artifacts"));
         let cfg = m.for_task("CartPole-v1", 8).unwrap();
         let g = GaeExec::load(&rt, cfg).unwrap();
         let (t, n) = (cfg.num_steps, cfg.num_envs);
@@ -160,8 +162,8 @@ mod tests {
 
     #[test]
     fn train_step_updates_parameters() {
-        let rt = Runtime::cpu().unwrap();
-        let man = Manifest::load("artifacts").unwrap();
+        let rt = compute_or_skip!(Runtime::cpu());
+        let man = compute_or_skip!(Manifest::load("artifacts"));
         let cfg = man.for_task("CartPole-v1", 8).unwrap();
         let mut params = ParamStore::load(&man, cfg).unwrap();
         let before = params.values.clone();

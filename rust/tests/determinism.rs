@@ -1,0 +1,124 @@
+//! Determinism across execution configurations: the same seed must give
+//! **identical per-env episode returns** no matter how many worker
+//! threads serve the pool, what batch size `recv` uses, or which
+//! `ExecMode` steps the envs. Per-env RNG streams keyed by global env id
+//! plus a per-env action policy make trajectories a function of
+//! `(seed, env_id)` alone.
+
+use envpool::envs::spec::ActionSpace;
+use envpool::pool::{EnvPool, ExecMode, PoolConfig};
+
+/// Drive an async pool until every env has completed `episodes`
+/// episodes; return the first `episodes` episodic returns per env.
+///
+/// The action for an env is a pure function of `(env_id, per-env action
+/// index)`, so each env sees the same action sequence in every
+/// configuration regardless of scheduling or batching.
+fn first_episode_returns(
+    task: &str,
+    n: usize,
+    batch: usize,
+    threads: usize,
+    mode: ExecMode,
+    episodes: usize,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut pool = EnvPool::make(
+        PoolConfig::new(task)
+            .num_envs(n)
+            .batch_size(batch)
+            .num_threads(threads)
+            .seed(seed)
+            .exec_mode(mode),
+    )
+    .unwrap();
+    let discrete = match pool.spec().action_space {
+        ActionSpace::Discrete(k) => k as u64,
+        ActionSpace::Continuous { .. } => 0,
+    };
+    // Episodes are bounded by the task's truncation limit, so this recv
+    // budget is generous; the panic below fires if it is insufficient.
+    let ep_bound = pool.spec().max_episode_steps + 60;
+    let max_recvs = (episodes + 1) * ep_bound * n / batch + 50;
+    pool.async_reset();
+    let mut out = pool.make_output();
+    let mut sent = vec![0u64; n];
+    let mut ep_ret = vec![0.0f32; n];
+    let mut returns: Vec<Vec<f32>> = vec![Vec::new(); n];
+    let mut actions: Vec<f32> = Vec::new();
+    for _ in 0..max_recvs {
+        if returns.iter().all(|r| r.len() >= episodes) {
+            break;
+        }
+        pool.recv_into(&mut out);
+        let ids = out.env_ids.clone();
+        actions.clear();
+        for (row, &id) in ids.iter().enumerate() {
+            let i = id as usize;
+            ep_ret[i] += out.rew[row];
+            if out.finished(row) {
+                returns[i].push(ep_ret[i]);
+                ep_ret[i] = 0.0;
+            }
+            let t = sent[i];
+            sent[i] += 1;
+            if discrete > 0 {
+                actions.push(((id as u64 * 3 + t * 5) % discrete) as f32);
+            } else {
+                actions.push(((id as u64 + t) % 7) as f32 / 3.5 - 1.0);
+            }
+        }
+        pool.send(&actions, &ids).unwrap();
+    }
+    for (i, r) in returns.iter_mut().enumerate() {
+        assert!(r.len() >= episodes, "env {i} finished only {} episodes", r.len());
+        r.truncate(episodes);
+    }
+    returns
+}
+
+/// The (threads, batch_size, mode) grid every task is checked over.
+/// Vectorized async rows keep `batch_size <= num_chunks` (the pool's
+/// liveness constraint); with 2 threads there are 2 chunks for every
+/// `n >= 2` here.
+fn grid(n: usize) -> Vec<(usize, usize, ExecMode)> {
+    vec![
+        (1, n, ExecMode::Scalar),
+        (2, n, ExecMode::Scalar),
+        (3, n.div_ceil(2), ExecMode::Scalar),
+        (1, n, ExecMode::Vectorized),
+        (2, n, ExecMode::Vectorized),
+        (2, 2, ExecMode::Vectorized),
+        (3, 1, ExecMode::Vectorized),
+        (2, 1, ExecMode::Scalar),
+    ]
+}
+
+fn check_task(task: &str, n: usize, episodes: usize, seed: u64) {
+    let reference = first_episode_returns(task, n, n, 1, ExecMode::Scalar, episodes, seed);
+    for (threads, batch, mode) in grid(n) {
+        let got = first_episode_returns(task, n, batch, threads, mode, episodes, seed);
+        assert_eq!(
+            reference, got,
+            "{task}: returns diverge at threads={threads} batch={batch} mode={mode:?}"
+        );
+    }
+}
+
+#[test]
+fn mountain_car_returns_invariant_to_execution_config() {
+    // Episodes are bounded by the 200-step truncation, so every config
+    // completes them quickly.
+    check_task("MountainCar-v0", 6, 2, 1234);
+}
+
+#[test]
+fn pendulum_returns_invariant_to_execution_config() {
+    // Continuous actions; episodes truncate at exactly 200 steps.
+    check_task("Pendulum-v1", 5, 2, 99);
+}
+
+#[test]
+fn cartpole_returns_invariant_to_execution_config() {
+    check_task("CartPole-v1", 4, 3, 7);
+}

@@ -1,0 +1,270 @@
+//! Vendored stub of the `xla` PJRT bindings (API-compatible with the
+//! subset the parent crate uses).
+//!
+//! The build environment carries no XLA/PJRT shared libraries, so this
+//! stub keeps the parent crate compiling and its pure-Rust tiers fully
+//! testable:
+//!
+//! - [`Literal`] is a **real** host-side f32 tensor (construct, reshape,
+//!   read back) — everything host-only works exactly as with the real
+//!   bindings.
+//! - [`PjRtClient::cpu`] returns [`Error::Unavailable`]; since every
+//!   device object ([`PjRtBuffer`], [`PjRtLoadedExecutable`]) can only be
+//!   created through a client, device paths are cleanly unreachable and
+//!   callers gate on the error (the parent crate's tests skip).
+//!
+//! Swapping this path dependency for the actual bindings restores the
+//! full runtime without any source change in the parent crate.
+
+use std::path::Path;
+
+/// Error type mirroring the real bindings' surface.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The PJRT runtime is not present in this build.
+    Unavailable(String),
+    /// Malformed usage of the host-side tensor API.
+    Shape(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(m) => write!(f, "PJRT unavailable: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the host tensor API can read back. Only `f32` is stored;
+/// the trait exists so call sites can keep the real bindings' turbofish.
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+/// Host tensor shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side f32 tensor (or a tuple of them), mirroring `xla::Literal`.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64], tuple: None }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { data: vec![x], dims: vec![], tuple: None }
+    }
+
+    /// Tuple literal (what executables return with `return_tuple=True`).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { data: Vec::new(), dims: Vec::new(), tuple: Some(elems) }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec(), tuple: None })
+    }
+
+    /// Read the tensor back as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error::Shape("to_vec on a tuple literal".into()));
+        }
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// First element (scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        match self.data.first() {
+            Some(&x) => Ok(T::from_f32(x)),
+            None => Err(Error::Shape("empty literal".into())),
+        }
+    }
+
+    /// Array shape (error for tuple literals).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return Err(Error::Shape("array_shape on a tuple literal".into()));
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.tuple {
+            Some(elems) => Ok(elems.clone()),
+            None => Err(Error::Shape("to_tuple on a non-tuple literal".into())),
+        }
+    }
+}
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::Unavailable(
+        "this build vendors the stub xla crate (no PJRT shared library); \
+         device execution is disabled"
+            .into(),
+    ))
+}
+
+/// Parsed HLO module (held as raw text in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact. Parsing/verification happens at compile
+    /// time in the real bindings; the stub only checks readability.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        match std::fs::read_to_string(path.as_ref()) {
+            Ok(text) => Ok(HloModuleProto { text }),
+            Err(e) => Err(Error::Shape(format!("{}: {e}", path.as_ref().display()))),
+        }
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// PJRT client handle. Construction always fails in the stub, which makes
+/// every device object below unreachable (their methods exist only so the
+/// parent crate typechecks).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (unreachable in the stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: AsRef<PjRtBuffer>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+impl AsRef<PjRtBuffer> for PjRtBuffer {
+    fn as_ref(&self) -> &PjRtBuffer {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(2.5);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+        let t = Literal::tuple(vec![Literal::scalar(1.0), Literal::vec1(&[2.0, 3.0])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("PJRT unavailable"));
+    }
+}
