@@ -26,6 +26,10 @@ fn main() {
             ("envpool-sync-vec", "envpool-sync-vec", n, n),
             ("envpool-async", "envpool-async", n, threads),
             ("envpool-async-vec", "envpool-async-vec", n, threads),
+            // NUMA-sharded rows (2 logical shards; see throughput::NUMA_NODES):
+            // n = 3*threads is even and threads = 2, so everything divides.
+            ("envpool-numa-async", "envpool-numa-async", n, threads),
+            ("envpool-numa-async-vec", "envpool-numa-async-vec", n, threads),
         ] {
             // one bench sample = `steps` env steps; report fps separately
             let mut fps = 0.0;

@@ -23,6 +23,10 @@ pub enum ExecutorKind {
     EnvPoolAsync,
     /// EnvPool async with `ExecMode::Vectorized` chunk workers.
     EnvPoolAsyncVec,
+    /// NUMA-sharded async EnvPool (one pool per logical node).
+    EnvPoolNumaAsync,
+    /// NUMA-sharded async EnvPool with `ExecMode::Vectorized` shards.
+    EnvPoolNumaAsyncVec,
     /// Sample-Factory-style double-buffered async workers.
     SampleFactory,
     /// Sample-Factory workers stepping SoA batch kernels.
@@ -34,9 +38,9 @@ impl ExecutorKind {
     /// source of truth for which kinds select the chunked SoA backend.
     pub fn pool_exec_mode(self) -> crate::pool::ExecMode {
         match self {
-            ExecutorKind::EnvPoolSyncVec | ExecutorKind::EnvPoolAsyncVec => {
-                crate::pool::ExecMode::Vectorized
-            }
+            ExecutorKind::EnvPoolSyncVec
+            | ExecutorKind::EnvPoolAsyncVec
+            | ExecutorKind::EnvPoolNumaAsyncVec => crate::pool::ExecMode::Vectorized,
             _ => crate::pool::ExecMode::Scalar,
         }
     }
@@ -53,6 +57,8 @@ impl std::str::FromStr for ExecutorKind {
             "envpool-sync-vec" | "sync-vec" => ExecutorKind::EnvPoolSyncVec,
             "envpool-async" | "async" => ExecutorKind::EnvPoolAsync,
             "envpool-async-vec" | "async-vec" => ExecutorKind::EnvPoolAsyncVec,
+            "envpool-numa-async" | "numa-async" => ExecutorKind::EnvPoolNumaAsync,
+            "envpool-numa-async-vec" | "numa-async-vec" => ExecutorKind::EnvPoolNumaAsyncVec,
             "sample-factory" | "sf" => ExecutorKind::SampleFactory,
             "sample-factory-vec" | "sf-vec" => ExecutorKind::SampleFactoryVec,
             other => return Err(Error::Config(format!("unknown executor {other:?}"))),
@@ -70,6 +76,8 @@ impl std::fmt::Display for ExecutorKind {
             ExecutorKind::EnvPoolSyncVec => "envpool-sync-vec",
             ExecutorKind::EnvPoolAsync => "envpool-async",
             ExecutorKind::EnvPoolAsyncVec => "envpool-async-vec",
+            ExecutorKind::EnvPoolNumaAsync => "envpool-numa-async",
+            ExecutorKind::EnvPoolNumaAsyncVec => "envpool-numa-async-vec",
             ExecutorKind::SampleFactory => "sample-factory",
             ExecutorKind::SampleFactoryVec => "sample-factory-vec",
         };
@@ -118,6 +126,9 @@ pub struct TrainConfig {
     /// RNG seed.
     pub seed: u64,
     /// Normalize observations with a running estimate (MuJoCo-style).
+    /// Honored by the EnvPool executors (engine-side wrapper stack,
+    /// identical in both exec modes); the bare baseline executors do
+    /// not wrap.
     pub normalize_obs: bool,
     /// Directory containing AOT artifacts.
     pub artifacts_dir: String,
@@ -262,6 +273,8 @@ mod tests {
             "envpool-sync-vec",
             "envpool-async",
             "envpool-async-vec",
+            "envpool-numa-async",
+            "envpool-numa-async-vec",
             "sample-factory",
             "sample-factory-vec",
         ] {
@@ -276,7 +289,9 @@ mod tests {
         use crate::pool::ExecMode;
         assert_eq!(ExecutorKind::EnvPoolSyncVec.pool_exec_mode(), ExecMode::Vectorized);
         assert_eq!(ExecutorKind::EnvPoolAsyncVec.pool_exec_mode(), ExecMode::Vectorized);
+        assert_eq!(ExecutorKind::EnvPoolNumaAsyncVec.pool_exec_mode(), ExecMode::Vectorized);
         assert_eq!(ExecutorKind::EnvPoolSync.pool_exec_mode(), ExecMode::Scalar);
+        assert_eq!(ExecutorKind::EnvPoolNumaAsync.pool_exec_mode(), ExecMode::Scalar);
         // non-pool executors run their own engines; mode is Scalar
         assert_eq!(ExecutorKind::ForLoopVec.pool_exec_mode(), ExecMode::Scalar);
     }

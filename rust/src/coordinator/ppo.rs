@@ -95,6 +95,8 @@ fn benchmark_only(k: ExecutorKind) -> bool {
         k,
         ExecutorKind::EnvPoolAsync
             | ExecutorKind::EnvPoolAsyncVec
+            | ExecutorKind::EnvPoolNumaAsync
+            | ExecutorKind::EnvPoolNumaAsyncVec
             | ExecutorKind::SampleFactory
             | ExecutorKind::SampleFactoryVec
     )
@@ -109,6 +111,23 @@ fn reject_benchmark_only(cfg: &TrainConfig) -> Error {
 }
 
 fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
+    // Benchmark-only executors first: that rejection is the actionable
+    // message (an async pool *does* wrap — it just cannot train).
+    if benchmark_only(cfg.executor) {
+        return Err(reject_benchmark_only(cfg));
+    }
+    // The engine-side wrapper stack lives in the pool; the bare baseline
+    // executors do not wrap. Reject the combination instead of silently
+    // training with different semantics per executor.
+    let pool_executor =
+        matches!(cfg.executor, ExecutorKind::EnvPoolSync | ExecutorKind::EnvPoolSyncVec);
+    if cfg.normalize_obs && !pool_executor {
+        return Err(Error::Config(format!(
+            "normalize_obs requires an EnvPool executor (engine-side wrapper stack); \
+             executor {} does not wrap",
+            cfg.executor
+        )));
+    }
     Ok(match cfg.executor {
         ExecutorKind::ForLoop => {
             Box::new(ForLoopExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
@@ -120,18 +139,25 @@ fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
             Box::new(SubprocessExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
         }
         ExecutorKind::EnvPoolSync | ExecutorKind::EnvPoolSyncVec => {
+            let wrappers = crate::envs::WrapConfig {
+                normalize_obs: cfg.normalize_obs,
+                ..crate::envs::WrapConfig::none()
+            };
             let pool = EnvPool::make(
                 PoolConfig::new(&cfg.env_id)
                     .num_envs(cfg.num_envs)
                     .sync()
                     .num_threads(cfg.num_threads)
                     .seed(cfg.seed)
-                    .exec_mode(cfg.executor.pool_exec_mode()),
+                    .exec_mode(cfg.executor.pool_exec_mode())
+                    .wrappers(wrappers),
             )?;
             Box::new(PoolVectorEnv::new(pool)?)
         }
         ExecutorKind::EnvPoolAsync
         | ExecutorKind::EnvPoolAsyncVec
+        | ExecutorKind::EnvPoolNumaAsync
+        | ExecutorKind::EnvPoolNumaAsyncVec
         | ExecutorKind::SampleFactory
         | ExecutorKind::SampleFactoryVec => return Err(reject_benchmark_only(cfg)),
     })

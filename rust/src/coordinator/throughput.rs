@@ -8,10 +8,17 @@ use crate::envs::spec::ActionSpace;
 use crate::executors::{
     ForLoopExecutor, SampleFactoryExecutor, SubprocessExecutor, VecForLoopExecutor, VectorEnv,
 };
-use crate::pool::{EnvPool, PoolConfig};
+use crate::pool::{EnvPool, NumaPool, PoolConfig};
 use crate::rng::Pcg32;
 use crate::Result;
 use std::time::Instant;
+
+/// Logical shard count used by the `envpool-numa-async[-vec]` executors.
+/// This container is single-socket, so the shards are logical (no node
+/// binding), but the structure — independent queues/workers per shard —
+/// is the paper's "EnvPool (numa+async)" row. `num_envs`, `batch_size`
+/// and `num_threads` must divide by this.
+pub const NUMA_NODES: usize = 2;
 
 /// Fill `actions` with uniformly random valid actions.
 pub fn random_actions(space: &ActionSpace, n: usize, rng: &mut Pcg32, actions: &mut Vec<f32>) {
@@ -105,6 +112,33 @@ pub fn run_throughput(
             }
             done_steps as f64 / t0.elapsed().as_secs_f64()
         }
+        ExecutorKind::EnvPoolNumaAsync | ExecutorKind::EnvPoolNumaAsyncVec => {
+            let mut pool = NumaPool::make(
+                PoolConfig::new(task)
+                    .num_envs(num_envs)
+                    .batch_size(batch_size)
+                    .num_threads(threads)
+                    .seed(seed)
+                    .exec_mode(kind.pool_exec_mode()),
+                NUMA_NODES,
+            )?;
+            pool.async_reset();
+            let mut outs = pool.make_outputs();
+            let mut ids: Vec<u32> = Vec::new();
+            let mut done_steps = 0u64;
+            let t0 = Instant::now();
+            while done_steps < steps {
+                pool.recv_all(&mut outs);
+                ids.clear();
+                for o in &outs {
+                    ids.extend_from_slice(&o.env_ids);
+                }
+                random_actions(&spec.action_space, ids.len(), &mut rng, &mut actions);
+                pool.send(&actions, &ids)?;
+                done_steps += ids.len() as u64;
+            }
+            done_steps as f64 / t0.elapsed().as_secs_f64()
+        }
         ExecutorKind::SampleFactory | ExecutorKind::SampleFactoryVec => {
             let workers = threads.max(1);
             let mut ex = if kind == ExecutorKind::SampleFactoryVec {
@@ -180,6 +214,8 @@ mod tests {
             "envpool-sync-vec",
             "envpool-async",
             "envpool-async-vec",
+            "envpool-numa-async",
+            "envpool-numa-async-vec",
             "sample-factory",
             "sample-factory-vec",
         ] {

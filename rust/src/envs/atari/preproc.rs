@@ -1,6 +1,11 @@
 //! DQN preprocessing stack wrapped around a [`Game`]: frameskip 4 with
 //! max-pool over the last two native frames, 2× downsample to 84×84,
 //! 4-frame stacking — producing the canonical `(4, 84, 84)` observation.
+//!
+//! The stack itself lives in [`PreprocState`], a per-lane state machine
+//! shared verbatim by the scalar [`AtariEnv`] and the batched
+//! [`AtariVec`](crate::envs::vector::AtariVec) kernel — one
+//! implementation, so the two execution paths are bitwise identical.
 
 use super::game::Game;
 use super::{FRAMESKIP, NATIVE, SCREEN, STACK};
@@ -8,10 +13,25 @@ use crate::envs::env::{discrete_action, Env, Step};
 use crate::envs::spec::{ActionSpace, EnvSpec};
 use crate::rng::Pcg32;
 
-/// Atari-style environment over any [`Game`].
-pub struct AtariEnv<G: Game> {
-    spec: EnvSpec,
-    game: G,
+/// Atari episode cap in env steps (108k frames / frameskip).
+pub(crate) const MAX_STEPS: usize = 27_000;
+
+/// The spec of an Atari task over `game` (shared by scalar env and
+/// batched kernel).
+pub(crate) fn spec_for<G: Game>(game: &G) -> EnvSpec {
+    EnvSpec {
+        id: format!("{}-v5", game.name()),
+        obs_shape: vec![STACK, SCREEN, SCREEN],
+        action_space: ActionSpace::Discrete(game.n_actions()),
+        max_episode_steps: MAX_STEPS,
+    }
+}
+
+/// One environment's preprocessing state: RNG stream, flicker buffers,
+/// frame stack, step/life counters. All the semantics of an Atari env
+/// step (frameskip, max-pool, episodic life, truncation) live in the
+/// methods here; [`AtariEnv`] and the batched kernel are adapters.
+pub(crate) struct PreprocState {
     rng: Pcg32,
     /// Two native frame buffers for the flicker max-pool.
     frame_a: Vec<u8>,
@@ -22,20 +42,12 @@ pub struct AtariEnv<G: Game> {
     steps: usize,
     episodic_life: bool,
     lives: u32,
+    n_actions: usize,
 }
 
-impl<G: Game> AtariEnv<G> {
-    pub fn new(game: G, seed: u64, env_id: u64) -> Self {
-        let id = format!("{}-v5", game.name());
-        let n_act = game.n_actions();
-        AtariEnv {
-            spec: EnvSpec {
-                id,
-                obs_shape: vec![STACK, SCREEN, SCREEN],
-                action_space: ActionSpace::Discrete(n_act),
-                max_episode_steps: 27_000, // 108k frames / frameskip
-            },
-            game,
+impl PreprocState {
+    pub(crate) fn new(n_actions: usize, seed: u64, env_id: u64) -> Self {
+        PreprocState {
             rng: Pcg32::new(seed ^ 0x41544152, env_id),
             frame_a: vec![0; NATIVE * NATIVE],
             frame_b: vec![0; NATIVE * NATIVE],
@@ -44,14 +56,12 @@ impl<G: Game> AtariEnv<G> {
             steps: 0,
             episodic_life: false,
             lives: 0,
+            n_actions,
         }
     }
 
-    /// Enable episodic-life mode: life loss ends the (training) episode
-    /// without resetting the game — the standard DQN wrapper.
-    pub fn with_episodic_life(mut self, on: bool) -> Self {
+    pub(crate) fn set_episodic_life(&mut self, on: bool) {
         self.episodic_life = on;
-        self
     }
 
     /// Push the current pooled screen into the stack ring.
@@ -64,7 +74,7 @@ impl<G: Game> AtariEnv<G> {
 
     /// Write the stacked observation, newest plane last (channel order
     /// oldest→newest, matching gym's FrameStack).
-    fn write_obs(&self, obs: &mut [f32]) {
+    pub(crate) fn write_obs(&self, obs: &mut [f32]) {
         let plane = SCREEN * SCREEN;
         for k in 0..STACK {
             let src_idx = (self.head + 1 + k) % STACK; // oldest first
@@ -72,46 +82,43 @@ impl<G: Game> AtariEnv<G> {
             obs[k * plane..(k + 1) * plane].copy_from_slice(src);
         }
     }
-}
 
-impl<G: Game> Env for AtariEnv<G> {
-    fn spec(&self) -> &EnvSpec {
-        &self.spec
-    }
-
-    fn reset(&mut self, obs: &mut [f32]) {
-        // Full reset only when the game is actually over (episodic-life
-        // continuation otherwise), as the standard wrapper does.
-        if !self.episodic_life || self.game.lives() == 0 || self.steps == 0 {
-            self.game.reset(&mut self.rng);
+    /// Reset the episode. Full game reset only when the game is actually
+    /// over (episodic-life continuation otherwise), as the standard
+    /// wrapper does.
+    pub(crate) fn reset<G: Game>(&mut self, game: &mut G) {
+        if !self.episodic_life || game.lives() == 0 || self.steps == 0 {
+            game.reset(&mut self.rng);
         }
-        self.lives = self.game.lives();
+        self.lives = game.lives();
         self.steps = 0;
         self.stack.fill(0.0);
-        self.game.render(&mut self.frame_a);
+        game.render(&mut self.frame_a);
         self.push_screen();
-        self.write_obs(obs);
     }
 
-    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
-        let a = discrete_action(action, self.spec.action_space.n());
+    /// One env step: frameskip with max-pool, episodic-life handling,
+    /// truncation. The caller writes the observation afterwards via
+    /// [`Self::write_obs`].
+    pub(crate) fn step<G: Game>(&mut self, game: &mut G, action: &[f32]) -> Step {
+        let a = discrete_action(action, self.n_actions);
         let mut reward = 0.0;
         let mut done = false;
         // frameskip with max-pool of the last two frames
         for k in 0..FRAMESKIP {
-            let (r, d) = self.game.tick(a, &mut self.rng);
+            let (r, d) = game.tick(a, &mut self.rng);
             reward += r;
             if k == FRAMESKIP - 2 {
-                self.game.render(&mut self.frame_b);
+                game.render(&mut self.frame_b);
             } else if k == FRAMESKIP - 1 {
-                self.game.render(&mut self.frame_a);
+                game.render(&mut self.frame_a);
                 super::render::max_frames(&mut self.frame_a, &self.frame_b);
             }
             if d {
                 done = true;
                 // render whatever we have if we died early in the skip
                 if k < FRAMESKIP - 1 {
-                    self.game.render(&mut self.frame_a);
+                    game.render(&mut self.frame_a);
                 }
                 break;
             }
@@ -121,16 +128,55 @@ impl<G: Game> Env for AtariEnv<G> {
 
         // Episodic life: losing a life terminates the training episode.
         if self.episodic_life && !done {
-            let now = self.game.lives();
+            let now = game.lives();
             if now < self.lives {
                 done = true;
             }
             self.lives = now;
         }
 
-        let truncated = !done && self.steps >= self.spec.max_episode_steps;
-        self.write_obs(obs);
+        let truncated = !done && self.steps >= MAX_STEPS;
         Step { reward, done, truncated }
+    }
+}
+
+/// Atari-style environment over any [`Game`] — the scalar (one-lane)
+/// adapter over [`PreprocState`].
+pub struct AtariEnv<G: Game> {
+    spec: EnvSpec,
+    pub(crate) game: G,
+    st: PreprocState,
+}
+
+impl<G: Game> AtariEnv<G> {
+    pub fn new(game: G, seed: u64, env_id: u64) -> Self {
+        let spec = spec_for(&game);
+        let st = PreprocState::new(game.n_actions(), seed, env_id);
+        AtariEnv { spec, game, st }
+    }
+
+    /// Enable episodic-life mode: life loss ends the (training) episode
+    /// without resetting the game — the standard DQN wrapper.
+    pub fn with_episodic_life(mut self, on: bool) -> Self {
+        self.st.set_episodic_life(on);
+        self
+    }
+}
+
+impl<G: Game> Env for AtariEnv<G> {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.st.reset(&mut self.game);
+        self.st.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let s = self.st.step(&mut self.game, action);
+        self.st.write_obs(obs);
+        s
     }
 }
 

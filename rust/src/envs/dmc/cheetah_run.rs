@@ -10,6 +10,31 @@ use crate::envs::spec::EnvSpec;
 /// Target running speed for full reward (dm_control uses 10 m/s).
 pub const TARGET_SPEED: f32 = 6.0;
 
+/// The Control Suite shaping over one walker transition: reward
+/// `clip(vx / TARGET_SPEED, 0, 1)`, no failure termination (a walker
+/// `done` becomes truncation). Single source of truth shared by the
+/// scalar [`CheetahRun`] and the batched
+/// [`crate::envs::vector::CheetahRunVec`] so the two surfaces cannot
+/// drift.
+#[inline]
+pub(crate) fn shape_step(vx: f32, inner: Step) -> Step {
+    Step {
+        reward: (vx / TARGET_SPEED).clamp(0.0, 1.0),
+        done: false,
+        truncated: inner.truncated || inner.done,
+    }
+}
+
+/// The `cheetah_run` spec over the inner HalfCheetah spec — the other
+/// half of the shared core (id + fixed 1000-step episodes), used by
+/// both the scalar task and the batched kernel.
+pub(crate) fn cheetah_spec(inner: &EnvSpec) -> EnvSpec {
+    let mut spec = inner.clone();
+    spec.id = "cheetah_run".into();
+    spec.max_episode_steps = 1000;
+    spec
+}
+
 /// The dm_control `cheetah run` task.
 pub struct CheetahRun {
     inner: WalkerEnv,
@@ -19,9 +44,7 @@ pub struct CheetahRun {
 impl CheetahRun {
     pub fn new(seed: u64, env_id: u64) -> Self {
         let inner = WalkerEnv::new(Task::HalfCheetah, seed, env_id);
-        let mut spec = inner.spec().clone();
-        spec.id = "cheetah_run".into();
-        spec.max_episode_steps = 1000;
+        let spec = cheetah_spec(inner.spec());
         CheetahRun { inner, spec }
     }
 }
@@ -41,12 +64,9 @@ impl Env for CheetahRun {
         // Recover vx from the observation layout: index 2 + n_joints.
         let n_joints = self.spec.action_space.dim();
         let vx = obs[2 + n_joints];
-        let reward = (vx / TARGET_SPEED).clamp(0.0, 1.0);
         debug_assert_eq!(n, obs.len());
-        // Control Suite tasks have no failure termination: only time limit.
-        let truncated = s.truncated || s.done;
         let _ = (DT, FRAME_SKIP); // constants shared with the gym task
-        Step { reward, done: false, truncated }
+        shape_step(vx, s)
     }
 }
 

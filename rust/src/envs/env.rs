@@ -48,6 +48,23 @@ pub trait Env: Send {
     fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step;
 }
 
+/// Boxed environments are environments too — this is what lets the
+/// registry stack generic wrappers over `Box<dyn Env>` trait objects
+/// (`TimeLimit<Box<dyn Env>>` and friends in `make_env_wrapped`).
+impl<E: Env + ?Sized> Env for Box<E> {
+    fn spec(&self) -> &EnvSpec {
+        (**self).spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        (**self).reset(obs)
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        (**self).step(action, obs)
+    }
+}
+
 /// Helper for discrete envs: decode the flat action lane to an id,
 /// clamping to the valid range so malformed inputs cannot index OOB.
 #[inline]

@@ -17,10 +17,16 @@
 //! - [`dmc`] — dm_control-style tasks (cheetah run) over the same engine,
 //!   exposed through a dm_env-like `TimeStep`.
 //! - [`wrappers`] — time limit, reward clipping, episodic life,
-//!   observation normalization.
+//!   observation normalization — each with a batch-wise `VecWrapper`
+//!   surface ([`wrappers::vec`]) and a one-lane scalar adapter over the
+//!   same cores.
 //!
 //! All environments implement [`Env`] and are constructed by name through
 //! [`registry::make_env`], mirroring `envpool.make(task_id, ...)`.
+//! Batched execution is first-class: every task also constructs through
+//! [`registry::make_vec_env`] as a [`VecEnv`] kernel, and
+//! [`registry::make_env_wrapped`] / [`registry::make_vec_env_wrapped`]
+//! compose the standard wrapper stack identically on both surfaces.
 
 pub mod spec;
 pub mod env;
@@ -33,6 +39,8 @@ pub mod wrappers;
 pub mod registry;
 
 pub use env::{Env, Step};
-pub use registry::{make_env, make_vec_env, spec_for};
+pub use registry::{
+    make_env, make_env_wrapped, make_vec_env, make_vec_env_wrapped, spec_for, WrapConfig,
+};
 pub use spec::{ActionSpace, EnvSpec};
 pub use vector::{ObsArena, SliceArena, VecEnv};

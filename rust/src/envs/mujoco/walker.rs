@@ -17,7 +17,7 @@ pub enum Task {
 }
 
 impl Task {
-    fn build(self) -> Model {
+    pub(crate) fn build(self) -> Model {
         match self {
             Task::Hopper => models::hopper(),
             Task::HalfCheetah => models::half_cheetah(),
@@ -25,12 +25,45 @@ impl Task {
         }
     }
 
-    fn id(self) -> &'static str {
+    pub(crate) fn id(self) -> &'static str {
         match self {
             Task::Hopper => "Hopper-v4",
             Task::HalfCheetah => "HalfCheetah-v4",
             Task::Ant => "Ant-v4",
         }
+    }
+}
+
+/// Per-env RNG stream, keyed identically in the scalar env and the SoA
+/// kernel ([`crate::envs::vector::WalkerVec`]) so trajectories match
+/// bitwise.
+#[inline]
+pub(crate) fn make_rng(seed: u64, env_id: u64) -> Pcg32 {
+    Pcg32::new(seed ^ 0x6d6a63, env_id)
+}
+
+/// Gym-style reset noise on pose and velocity. Shared by the scalar env
+/// and the SoA kernel: the RNG draw *order* (per body: angle, vel.x,
+/// vel.y, omega) is part of the determinism contract.
+pub(crate) fn apply_reset_noise(world: &mut super::dynamics::World, rng: &mut Pcg32) {
+    for b in &mut world.bodies {
+        if b.inv_mass > 0.0 {
+            b.angle += rng.range(-0.005, 0.005);
+            b.vel.x += rng.range(-0.01, 0.01);
+            b.vel.y += rng.range(-0.01, 0.01);
+            b.omega += rng.range(-0.01, 0.01);
+        }
+    }
+}
+
+/// The task spec for a walker with `n` actuated joints (shared with the
+/// SoA kernel).
+pub(crate) fn spec_for_task(task: Task, n: usize) -> EnvSpec {
+    EnvSpec {
+        id: task.id().into(),
+        obs_shape: vec![2 + n + 3 + n],
+        action_space: ActionSpace::Continuous { dim: n, low: -1.0, high: 1.0 },
+        max_episode_steps: 1000,
     }
 }
 
@@ -53,19 +86,13 @@ impl WalkerEnv {
         let proto = task.build();
         let actuated = proto.world.actuated();
         let n = actuated.len();
-        let obs_dim = 2 + n + 3 + n;
         WalkerEnv {
-            spec: EnvSpec {
-                id: task.id().into(),
-                obs_shape: vec![obs_dim],
-                action_space: ActionSpace::Continuous { dim: n, low: -1.0, high: 1.0 },
-                max_episode_steps: 1000,
-            },
+            spec: spec_for_task(task, n),
             task,
             model: proto.clone(),
             proto,
             actuated,
-            rng: Pcg32::new(seed ^ 0x6d6a63, env_id),
+            rng: make_rng(seed, env_id),
             steps: 0,
         }
     }
@@ -114,15 +141,7 @@ impl Env for WalkerEnv {
 
     fn reset(&mut self, obs: &mut [f32]) {
         self.model = self.proto.clone();
-        // Gym-style reset noise on pose and velocity.
-        for b in &mut self.model.world.bodies {
-            if b.inv_mass > 0.0 {
-                b.angle += self.rng.range(-0.005, 0.005);
-                b.vel.x += self.rng.range(-0.01, 0.01);
-                b.vel.y += self.rng.range(-0.01, 0.01);
-                b.omega += self.rng.range(-0.01, 0.01);
-            }
-        }
+        apply_reset_noise(&mut self.model.world, &mut self.rng);
         self.steps = 0;
         self.write_obs(obs);
     }

@@ -1,6 +1,12 @@
 //! Task registry: `make_env("Pong-v5", seed, env_id)` — the Rust analog
 //! of `envpool.make(task_id, ...)`. Every supported task id is listed in
 //! [`ALL_TASKS`]; specs are obtainable without constructing an env.
+//!
+//! The registry builds both execution surfaces from one table:
+//! [`make_env`] (scalar) and [`make_vec_env`] (batched — every task maps
+//! to a real kernel, see [`crate::envs::vector`]), plus the `_wrapped`
+//! variants which compose the standard wrapper stack identically in both
+//! modes from a shared [`WrapConfig`].
 
 use super::atari::preproc;
 use super::classic::{Acrobot, CartPole, MountainCar, Pendulum};
@@ -8,7 +14,13 @@ use super::dmc::CheetahRun;
 use super::env::Env;
 use super::mujoco::walker::{Task, WalkerEnv};
 use super::spec::EnvSpec;
-use super::vector::{AcrobotVec, CartPoleVec, MountainCarVec, PendulumVec, ScalarVec, VecEnv};
+use super::vector::atari::{breakout_vec, pong_vec};
+use super::vector::{
+    AcrobotVec, CartPoleVec, CheetahRunVec, MountainCarVec, PendulumVec, VecEnv, WalkerVec,
+};
+use super::wrappers::{
+    NormalizeObs, NormalizeObsVec, RewardClip, RewardClipVec, TimeLimit, TimeLimitVec,
+};
 use crate::{Error, Result};
 
 /// Every registered task id.
@@ -24,6 +36,35 @@ pub const ALL_TASKS: &[&str] = &[
     "Ant-v4",
     "cheetah_run",
 ];
+
+/// The standard wrapper stack, applied engine-side as in EnvPool.
+/// Composition order (innermost first): time limit → reward clip →
+/// observation normalization. The same config produces an identical
+/// stack through [`make_env_wrapped`] (scalar one-lane adapters) and
+/// [`make_vec_env_wrapped`] (the batch-wise `VecWrapper` layer) — the
+/// exec modes cannot diverge semantically.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WrapConfig {
+    /// Truncate episodes at this many steps (tightening the env's own
+    /// limit); `None` leaves the env limit in force.
+    pub time_limit: Option<usize>,
+    /// Clip rewards to `{-1, 0, +1}` (DQN convention).
+    pub reward_clip: bool,
+    /// Welford running observation normalization (per env/lane).
+    pub normalize_obs: bool,
+}
+
+impl WrapConfig {
+    /// No wrappers (the default).
+    pub fn none() -> Self {
+        WrapConfig::default()
+    }
+
+    /// Does this config add any wrapper at all?
+    pub fn is_empty(&self) -> bool {
+        self.time_limit.is_none() && !self.reward_clip && !self.normalize_obs
+    }
+}
 
 /// Construct an environment by task id. `seed` is the experiment seed;
 /// `env_id` is the instance index within a pool (each instance gets an
@@ -49,12 +90,29 @@ pub fn spec_for(task_id: &str) -> Result<EnvSpec> {
     Ok(make_env(task_id, 0, 0)?.spec().clone())
 }
 
+/// Spec of a task as seen through a wrapper stack (only the time limit
+/// changes the spec).
+pub fn spec_for_wrapped(task_id: &str, wrap: &WrapConfig) -> Result<EnvSpec> {
+    let mut spec = spec_for(task_id)?;
+    if let Some(limit) = wrap.time_limit {
+        // The wrapper can only tighten: the inner env still truncates at
+        // its native limit, so the effective cap is the minimum (the
+        // TimeLimit wrappers advertise the same).
+        spec.max_episode_steps = spec.max_episode_steps.min(limit);
+    }
+    Ok(spec)
+}
+
 /// Construct a **vectorized** batch of `count` environments with global
 /// ids `first_env_id..first_env_id + count` — the vector analog of
-/// [`make_env`]. Classic-control tasks get dedicated struct-of-arrays
-/// kernels (bitwise identical to the scalar envs, see
-/// [`crate::envs::vector`]); every other task falls back to a
-/// [`ScalarVec`] chunk, which still amortizes per-task dispatch.
+/// [`make_env`]. Every registered family maps to a real batch kernel:
+/// classic control to struct-of-arrays kernels (bitwise identical to the
+/// scalar envs), the walkers to [`WalkerVec`] (SoA qpos/qvel lanes,
+/// scalar solver per lane, bitwise), Atari to the batched
+/// [`AtariVec`](super::vector::AtariVec) adapter (bitwise), and
+/// `cheetah_run` to [`CheetahRunVec`]. There is **no scalar fallback**;
+/// [`super::vector::ScalarVec`] is an explicit opt-in for
+/// out-of-registry envs.
 pub fn make_vec_env(
     task_id: &str,
     seed: u64,
@@ -66,11 +124,58 @@ pub fn make_vec_env(
         "MountainCar-v0" => Box::new(MountainCarVec::new(seed, first_env_id, count)),
         "Pendulum-v1" => Box::new(PendulumVec::new(seed, first_env_id, count)),
         "Acrobot-v1" => Box::new(AcrobotVec::new(seed, first_env_id, count)),
-        other if ALL_TASKS.contains(&other) => {
-            Box::new(ScalarVec::new(other, seed, first_env_id, count)?)
-        }
+        "Pong-v5" => Box::new(pong_vec(seed, first_env_id, count)),
+        "Breakout-v5" => Box::new(breakout_vec(seed, first_env_id, count)),
+        "Hopper-v4" => Box::new(WalkerVec::new(Task::Hopper, seed, first_env_id, count)),
+        "HalfCheetah-v4" => Box::new(WalkerVec::new(Task::HalfCheetah, seed, first_env_id, count)),
+        "Ant-v4" => Box::new(WalkerVec::new(Task::Ant, seed, first_env_id, count)),
+        "cheetah_run" => Box::new(CheetahRunVec::new(seed, first_env_id, count)),
         other => return Err(Error::UnknownEnv(other.to_string())),
     })
+}
+
+/// [`make_env`] plus the standard wrapper stack (scalar surface: thin
+/// one-lane adapters over the same cores the vec wrappers run).
+pub fn make_env_wrapped(
+    task_id: &str,
+    seed: u64,
+    env_id: u64,
+    wrap: &WrapConfig,
+) -> Result<Box<dyn Env>> {
+    let mut env: Box<dyn Env> = make_env(task_id, seed, env_id)?;
+    if let Some(limit) = wrap.time_limit {
+        env = Box::new(TimeLimit::new(env, limit));
+    }
+    if wrap.reward_clip {
+        env = Box::new(RewardClip::new(env));
+    }
+    if wrap.normalize_obs {
+        env = Box::new(NormalizeObs::new(env));
+    }
+    Ok(env)
+}
+
+/// [`make_vec_env`] plus the standard wrapper stack (the batch-wise
+/// `VecWrapper` layer), composed in the same order as
+/// [`make_env_wrapped`].
+pub fn make_vec_env_wrapped(
+    task_id: &str,
+    seed: u64,
+    first_env_id: u64,
+    count: usize,
+    wrap: &WrapConfig,
+) -> Result<Box<dyn VecEnv>> {
+    let mut env = make_vec_env(task_id, seed, first_env_id, count)?;
+    if let Some(limit) = wrap.time_limit {
+        env = Box::new(TimeLimitVec::new(env, limit));
+    }
+    if wrap.reward_clip {
+        env = Box::new(RewardClipVec::new(env));
+    }
+    if wrap.normalize_obs {
+        env = Box::new(NormalizeObsVec::new(env));
+    }
+    Ok(env)
 }
 
 #[cfg(test)]
@@ -122,5 +227,40 @@ mod tests {
             let env = make_env(task, 0, 0).unwrap();
             assert_eq!(&spec, env.spec(), "{task}");
         }
+    }
+
+    #[test]
+    fn wrapped_constructors_apply_the_stack_in_both_modes() {
+        let wrap = WrapConfig { time_limit: Some(9), reward_clip: true, normalize_obs: true };
+        assert!(!wrap.is_empty());
+        assert!(WrapConfig::none().is_empty());
+        let spec = spec_for_wrapped("Pendulum-v1", &wrap).unwrap();
+        assert_eq!(spec.max_episode_steps, 9);
+
+        let mut env = make_env_wrapped("Pendulum-v1", 1, 0, &wrap).unwrap();
+        assert_eq!(env.spec().max_episode_steps, 9);
+        let mut obs = vec![0.0f32; 3];
+        env.reset(&mut obs);
+        for t in 0..9 {
+            let s = env.step(&[1.0], &mut obs);
+            assert!(s.reward == 0.0 || s.reward == -1.0, "clipped");
+            assert_eq!(s.truncated, t == 8, "time limit");
+            assert!(obs.iter().all(|x| x.abs() <= 10.0), "normalized");
+        }
+
+        let mut v = make_vec_env_wrapped("Pendulum-v1", 1, 0, 2, &wrap).unwrap();
+        assert_eq!(v.spec().max_episode_steps, 9);
+        assert_eq!(v.num_envs(), 2);
+    }
+
+    #[test]
+    fn empty_wrap_config_is_the_bare_env() {
+        let wrap = WrapConfig::none();
+        let env = make_env_wrapped("CartPole-v1", 0, 0, &wrap).unwrap();
+        assert_eq!(env.spec(), &spec_for("CartPole-v1").unwrap());
+        assert_eq!(
+            spec_for_wrapped("CartPole-v1", &wrap).unwrap(),
+            spec_for("CartPole-v1").unwrap()
+        );
     }
 }

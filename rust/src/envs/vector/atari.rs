@@ -1,0 +1,178 @@
+//! Batched Atari kernel: steps a chunk of emulator lanes in one call
+//! and runs the DQN preprocessing per lane straight into [`ObsArena`]
+//! rows.
+//!
+//! CuLE's observation is that the win for Atari comes from batching the
+//! *simulator loop itself* — emulator ticks plus preprocessing — not
+//! just the transport. [`AtariVec`] owns a lane of `(game, preproc)`
+//! pairs and serves a whole chunk per dispatch: one task dequeue, one
+//! wakeup, and one virtual call cover `K` envs' frameskip loops, and
+//! each lane's stacked `(4, 84, 84)` observation is written directly
+//! into its final destination row (a state-queue slot on the pool path
+//! — no intermediate frame buffer is ever materialized per step).
+//!
+//! Preprocessing semantics live in one place —
+//! [`PreprocState`](crate::envs::atari::preproc) — shared verbatim with
+//! the scalar [`AtariEnv`](crate::envs::atari::AtariEnv), so this path
+//! is **bitwise identical** to stepping `K` scalar envs (pinned by
+//! `tests/vector_parity.rs`).
+
+use super::{ObsArena, VecEnv};
+use crate::envs::atari::game::Game;
+use crate::envs::atari::preproc::{spec_for, PreprocState};
+use crate::envs::atari::{breakout::Breakout, pong::Pong};
+use crate::envs::env::Step;
+use crate::envs::spec::EnvSpec;
+
+/// One emulator lane: game state + its preprocessing state machine.
+struct Lane<G: Game> {
+    game: G,
+    st: PreprocState,
+}
+
+/// SoA-of-lanes Atari batch: `K` games stepped per dispatch.
+pub struct AtariVec<G: Game> {
+    spec: EnvSpec,
+    lanes: Vec<Lane<G>>,
+}
+
+impl<G: Game> AtariVec<G> {
+    /// Batch of `count` envs built by `make`, with global ids
+    /// `first_env_id..+count` (RNG streams keyed per id, exactly as the
+    /// scalar constructor does).
+    pub fn new(
+        make: impl Fn() -> G,
+        seed: u64,
+        first_env_id: u64,
+        count: usize,
+        episodic_life: bool,
+    ) -> Self {
+        let lanes: Vec<Lane<G>> = (0..count)
+            .map(|l| {
+                let game = make();
+                let mut st = PreprocState::new(game.n_actions(), seed, first_env_id + l as u64);
+                st.set_episodic_life(episodic_life);
+                Lane { game, st }
+            })
+            .collect();
+        // Derive the spec from lane 0 (a probe instance only for the
+        // degenerate empty batch).
+        let spec = match lanes.first() {
+            Some(l) => spec_for(&l.game),
+            None => spec_for(&make()),
+        };
+        AtariVec { spec, lanes }
+    }
+}
+
+/// Batched `Pong-v5` (same construction flags as `preproc::pong`).
+pub fn pong_vec(seed: u64, first_env_id: u64, count: usize) -> AtariVec<Pong> {
+    AtariVec::new(Pong::new, seed, first_env_id, count, false)
+}
+
+/// Batched `Breakout-v5` (episodic-life on, as `preproc::breakout`).
+pub fn breakout_vec(seed: u64, first_env_id: u64, count: usize) -> AtariVec<Breakout> {
+    AtariVec::new(Breakout::new, seed, first_env_id, count, true)
+}
+
+impl<G: Game> VecEnv for AtariVec<G> {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        let l = &mut self.lanes[lane];
+        l.st.reset(&mut l.game);
+        l.st.write_obs(obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.lanes.len();
+        debug_assert_eq!(actions.len(), k);
+        debug_assert_eq!(reset_mask.len(), k);
+        debug_assert_eq!(out.len(), k);
+        for (lane, l) in self.lanes.iter_mut().enumerate() {
+            if reset_mask[lane] != 0 {
+                l.st.reset(&mut l.game);
+                l.st.write_obs(arena.row(lane));
+                out[lane] = Step::default();
+            } else {
+                out[lane] = l.st.step(&mut l.game, &actions[lane..lane + 1]);
+                l.st.write_obs(arena.row(lane));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::atari::preproc;
+    use crate::envs::env::Env;
+    use crate::envs::vector::SliceArena;
+
+    #[test]
+    fn pong_vec_matches_scalar_env_bitwise() {
+        let seed = 9;
+        let n = 2;
+        let mut vec_env = pong_vec(seed, 0, n);
+        let dim = vec_env.spec().obs_dim();
+        let mut scalars: Vec<_> = (0..n).map(|i| preproc::pong(seed, i as u64)).collect();
+        let mut vobs = vec![0.0f32; n * dim];
+        let mut sobs = vec![0.0f32; dim];
+        for (l, env) in scalars.iter_mut().enumerate() {
+            vec_env.reset_lane(l, &mut vobs[l * dim..(l + 1) * dim]);
+            env.reset(&mut sobs);
+            assert_eq!(&vobs[l * dim..(l + 1) * dim], &sobs[..], "reset lane {l}");
+        }
+        let mask = vec![0u8; n];
+        let mut results = vec![Step::default(); n];
+        for t in 0..25 {
+            let actions: Vec<f32> = (0..n).map(|l| ((t + l) % 6) as f32).collect();
+            {
+                let mut arena = SliceArena::new(&mut vobs, dim);
+                vec_env.step_batch(&actions, &mask, &mut arena, &mut results);
+            }
+            for (l, env) in scalars.iter_mut().enumerate() {
+                let s = env.step(&actions[l..l + 1], &mut sobs);
+                assert_eq!(results[l], s, "step {t} lane {l}");
+                assert_eq!(&vobs[l * dim..(l + 1) * dim], &sobs[..], "obs {t} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn breakout_vec_carries_episodic_life() {
+        // Spam FIRE on one lane until a life is lost: the vec path must
+        // report done with the game not over, exactly like the scalar
+        // episodic-life wrapper.
+        let mut v = breakout_vec(3, 0, 1);
+        let dim = v.spec().obs_dim();
+        let mut obs = vec![0.0f32; dim];
+        v.reset_lane(0, &mut obs);
+        let mut results = vec![Step::default(); 1];
+        let mut mask = vec![0u8; 1];
+        for _ in 0..20_000 {
+            {
+                let mut arena = SliceArena::new(&mut obs, dim);
+                v.step_batch(&[1.0], &mask, &mut arena, &mut results);
+            }
+            if results[0].done {
+                assert!(v.lanes[0].game.lives() > 0, "episodic life ends before game over");
+                return;
+            }
+            mask[0] = results[0].finished() as u8;
+        }
+        panic!("life should be lost");
+    }
+}

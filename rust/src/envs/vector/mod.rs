@@ -24,6 +24,20 @@
 //! paths bitwise identical — the property test in `tests/vector_parity.rs`
 //! pins this.
 //!
+//! # Every family is batch-first
+//!
+//! Vectorized execution is the engine's primary abstraction, not a
+//! classic-control carve-out: every registered task has a real kernel.
+//! [`WalkerVec`] keeps MuJoCo qpos/qvel state in SoA lanes (physics
+//! reuses the scalar solver per lane — bitwise parity), [`AtariVec`]
+//! steps emulator lanes in one call with preprocessing shared verbatim
+//! with the scalar env, and [`CheetahRunVec`] layers the dm_control
+//! reward shaping batch-wise. [`ScalarVec`] — a chunk of boxed scalar
+//! envs behind this interface — remains as an *explicit opt-in* for
+//! out-of-registry envs; `registry::make_vec_env` never falls back to
+//! it. Wrappers compose batch-wise through
+//! [`crate::envs::wrappers::vec`].
+//!
 //! # Observation arenas — no per-env allocation
 //!
 //! Kernels never allocate observation buffers. The caller hands an
@@ -52,16 +66,20 @@
 //! executor agrees on episode-boundary semantics.
 
 pub mod acrobot;
+pub mod atari;
 pub mod cartpole;
 pub mod mountain_car;
 pub mod pendulum;
 pub mod scalar;
+pub mod walker;
 
 pub use acrobot::AcrobotVec;
+pub use atari::AtariVec;
 pub use cartpole::CartPoleVec;
 pub use mountain_car::MountainCarVec;
 pub use pendulum::PendulumVec;
 pub use scalar::ScalarVec;
+pub use walker::{CheetahRunVec, WalkerVec};
 
 use super::env::Step;
 use super::spec::EnvSpec;

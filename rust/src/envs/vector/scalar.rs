@@ -1,7 +1,9 @@
-//! Fallback [`VecEnv`] over a batch of boxed scalar environments. Tasks
-//! without a dedicated SoA kernel (Atari, MuJoCo, dm_control) still get
-//! the chunked-dispatch amortization — one task dequeue and one wakeup
-//! per `K` envs — just not the SoA state layout.
+//! **Explicit opt-in** [`VecEnv`] over a batch of boxed scalar
+//! environments. Every registered task now has a dedicated batch kernel
+//! and `registry::make_vec_env` no longer falls back here; construct a
+//! [`ScalarVec`] directly when an out-of-registry or experimental env
+//! needs the chunked-dispatch amortization — one task dequeue and one
+//! wakeup per `K` envs — without a SoA state layout.
 
 use super::{ObsArena, VecEnv};
 use crate::envs::env::{Env, Step};

@@ -1,0 +1,396 @@
+//! Struct-of-arrays MuJoCo-walker batch kernel ([`WalkerVec`]) and the
+//! dm_control shaping over it ([`CheetahRunVec`]).
+//!
+//! # Layout
+//!
+//! Task-level state lives in SoA *qpos/qvel lanes*: for each body field
+//! (`pos_x`, `pos_y`, `angle`, `vel_x`, `vel_y`, `omega`) one flat array
+//! indexed `[lane * num_bodies + body]`. Everything the task layer does
+//! — reward, healthy checks, truncation, observation extraction — runs
+//! as batch passes over these contiguous lanes, using static per-joint
+//! metadata captured once from the prototype model (all lanes share one
+//! articulation topology).
+//!
+//! # Physics and parity
+//!
+//! The constraint solver itself steps one lane at a time through the
+//! *scalar* [`World::step`](crate::envs::mujoco::World::step) — each
+//! lane keeps its own `World` because joint warm-start impulses and
+//! contact caches are per-trajectory state (sharing them across lanes
+//! would couple trajectories and break chunking invariance). After each
+//! lane's `frame_skip` substeps the body state is scattered back into
+//! the SoA lanes. Reusing the scalar solver makes the kernel
+//! **bitwise identical** to [`WalkerEnv`](crate::envs::mujoco::WalkerEnv)
+//! — the documented parity tolerance is exact equality (0 ulp), pinned
+//! by `tests/vector_parity.rs`; a future SIMD solver pass may relax the
+//! contract to a documented ≤1e-5 relative tolerance, at which point
+//! that test's assertion is the place to loosen.
+//!
+//! The throughput win for walkers is therefore the chunked-dispatch
+//! amortization plus the batch task passes — the solver cost dominates
+//! and is unchanged, which is why `benches/table2_single_env` gates
+//! vectorized ≥ scalar (not a multiple) on this family.
+
+use super::{ObsArena, VecEnv};
+use crate::envs::dmc::cheetah_run::{cheetah_spec, shape_step};
+use crate::envs::env::Step;
+use crate::envs::mujoco::models::Model;
+use crate::envs::mujoco::walker::{self, Task};
+use crate::envs::mujoco::{DT, FRAME_SKIP};
+use crate::envs::spec::EnvSpec;
+use crate::rng::Pcg32;
+
+/// SoA batch of walker environments (Hopper / HalfCheetah / Ant).
+pub struct WalkerVec {
+    spec: EnvSpec,
+    /// Prototype model: reset template + task constants + topology.
+    proto: Model,
+    /// Actuated joint indices (action layout), shared by all lanes.
+    actuated: Vec<usize>,
+    /// Per actuated joint: `(body_a, body_b, ref_angle)` — the static
+    /// metadata that lets observation extraction run on SoA lanes only.
+    jmeta: Vec<(usize, usize, f32)>,
+    /// Bodies per lane.
+    nb: usize,
+    rng: Vec<Pcg32>,
+    steps: Vec<u32>,
+    /// Per-lane solver state (bodies + joint/contact warm starts).
+    models: Vec<Model>,
+    // SoA qpos lanes, indexed [lane * nb + body].
+    pos_x: Vec<f32>,
+    pos_y: Vec<f32>,
+    angle: Vec<f32>,
+    // SoA qvel lanes.
+    vel_x: Vec<f32>,
+    vel_y: Vec<f32>,
+    omega: Vec<f32>,
+    /// Torso x before the current batch step (forward-reward scratch).
+    x_before: Vec<f32>,
+}
+
+impl WalkerVec {
+    /// Batch of `count` envs with global ids `first_env_id..+count`.
+    pub fn new(task: Task, seed: u64, first_env_id: u64, count: usize) -> Self {
+        let proto = task.build();
+        let actuated = proto.world.actuated();
+        let n = actuated.len();
+        let nb = proto.world.bodies.len();
+        let jmeta = actuated
+            .iter()
+            .map(|&ji| {
+                let j = &proto.world.joints[ji];
+                (j.body_a, j.body_b, j.ref_angle)
+            })
+            .collect();
+        WalkerVec {
+            spec: walker::spec_for_task(task, n),
+            actuated,
+            jmeta,
+            nb,
+            rng: (0..count).map(|l| walker::make_rng(seed, first_env_id + l as u64)).collect(),
+            steps: vec![0; count],
+            models: (0..count).map(|_| proto.clone()).collect(),
+            pos_x: vec![0.0; count * nb],
+            pos_y: vec![0.0; count * nb],
+            angle: vec![0.0; count * nb],
+            vel_x: vec![0.0; count * nb],
+            vel_y: vec![0.0; count * nb],
+            omega: vec![0.0; count * nb],
+            x_before: vec![0.0; count],
+            proto,
+        }
+    }
+
+    /// Copy lane `lane`'s body state from its world into the SoA lanes.
+    fn scatter(&mut self, lane: usize) {
+        let base = lane * self.nb;
+        let bodies = &self.models[lane].world.bodies;
+        for (b, body) in bodies.iter().enumerate() {
+            self.pos_x[base + b] = body.pos.x;
+            self.pos_y[base + b] = body.pos.y;
+            self.angle[base + b] = body.angle;
+            self.vel_x[base + b] = body.vel.x;
+            self.vel_y[base + b] = body.vel.y;
+            self.omega[base + b] = body.omega;
+        }
+    }
+
+    /// Healthy test on the SoA lanes — same predicate (and evaluation
+    /// order) as the scalar env's `healthy()`.
+    fn lane_healthy(&self, lane: usize) -> bool {
+        let t = lane * self.nb + self.proto.torso;
+        if let Some((lo, hi)) = self.proto.healthy_z {
+            if self.pos_y[t] < lo || self.pos_y[t] > hi {
+                return false;
+            }
+        }
+        if let Some(dev) = self.proto.healthy_angle_dev {
+            if (self.angle[t] - self.proto.init_angle).abs() > dev {
+                return false;
+            }
+        }
+        !self.lane_is_bad(lane)
+    }
+
+    /// Any non-finite state in lane `lane`?
+    fn lane_is_bad(&self, lane: usize) -> bool {
+        for i in lane * self.nb..(lane + 1) * self.nb {
+            if !self.pos_x[i].is_finite()
+                || !self.pos_y[i].is_finite()
+                || !self.angle[i].is_finite()
+                || !self.vel_x[i].is_finite()
+                || !self.vel_y[i].is_finite()
+                || !self.omega[i].is_finite()
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Write lane `lane`'s observation from the SoA lanes (the scalar
+    /// env's layout: `[z, angle, q.., vx, vz, omega, qd..]`).
+    fn write_obs_lane(&self, lane: usize, obs: &mut [f32]) {
+        let base = lane * self.nb;
+        let t = base + self.proto.torso;
+        let n = self.actuated.len();
+        obs[0] = self.pos_y[t];
+        obs[1] = self.angle[t] - self.proto.init_angle;
+        for (k, &(a, b, ref_angle)) in self.jmeta.iter().enumerate() {
+            obs[2 + k] = self.angle[base + b] - self.angle[base + a] - ref_angle;
+        }
+        obs[2 + n] = self.vel_x[t];
+        obs[3 + n] = self.vel_y[t];
+        obs[4 + n] = self.omega[t];
+        for (k, &(a, b, _)) in self.jmeta.iter().enumerate() {
+            obs[5 + n + k] = self.omega[base + b] - self.omega[base + a];
+        }
+    }
+}
+
+impl VecEnv for WalkerVec {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        self.models[lane] = self.proto.clone();
+        walker::apply_reset_noise(&mut self.models[lane].world, &mut self.rng[lane]);
+        self.steps[lane] = 0;
+        self.scatter(lane);
+        self.write_obs_lane(lane, obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        let adim = self.actuated.len();
+        debug_assert_eq!(actions.len(), k * adim);
+        debug_assert_eq!(reset_mask.len(), k);
+        debug_assert_eq!(out.len(), k);
+        // Phase 1 — auto-resets, then physics: each stepped lane runs
+        // `FRAME_SKIP` substeps of the scalar solver (bitwise parity)
+        // and scatters its body state back into the qpos/qvel lanes.
+        for lane in 0..k {
+            if reset_mask[lane] != 0 {
+                self.reset_lane(lane, arena.row(lane));
+                out[lane] = Step::default();
+                continue;
+            }
+            self.x_before[lane] = self.pos_x[lane * self.nb + self.proto.torso];
+            let act = &actions[lane * adim..(lane + 1) * adim];
+            let w = &mut self.models[lane].world;
+            for _ in 0..FRAME_SKIP {
+                w.step(DT, act);
+            }
+            self.scatter(lane);
+            self.steps[lane] += 1;
+        }
+        // Phase 2 — batch task pass over the SoA lanes: forward reward,
+        // control cost, healthy termination, truncation.
+        for lane in 0..k {
+            if reset_mask[lane] != 0 {
+                continue;
+            }
+            let x_after = self.pos_x[lane * self.nb + self.proto.torso];
+            let forward = (x_after - self.x_before[lane]) / (DT * FRAME_SKIP as f32);
+            let act = &actions[lane * adim..(lane + 1) * adim];
+            let ctrl: f32 = act.iter().map(|a| a * a).sum();
+            let healthy = self.lane_healthy(lane);
+            let reward = self.proto.forward_weight * forward
+                + if healthy { self.proto.healthy_reward } else { 0.0 }
+                - self.proto.ctrl_cost * ctrl;
+            let done = !healthy;
+            let truncated = !done && self.steps[lane] as usize >= self.spec.max_episode_steps;
+            out[lane] = Step { reward, done, truncated };
+        }
+        // Phase 3 — observation rows straight from the SoA lanes.
+        for lane in 0..k {
+            if reset_mask[lane] != 0 {
+                continue;
+            }
+            self.write_obs_lane(lane, arena.row(lane));
+        }
+    }
+}
+
+/// dm_control `cheetah run` over the SoA walker kernel: the HalfCheetah
+/// lanes with the Control Suite's shaped reward
+/// `clip(vx / TARGET_SPEED, 0, 1)` and no failure termination — the
+/// batched analog of [`CheetahRun`](crate::envs::dmc::CheetahRun),
+/// bitwise identical to it.
+pub struct CheetahRunVec {
+    inner: WalkerVec,
+    spec: EnvSpec,
+}
+
+impl CheetahRunVec {
+    /// Batch of `count` envs with global ids `first_env_id..+count`.
+    pub fn new(seed: u64, first_env_id: u64, count: usize) -> Self {
+        let inner = WalkerVec::new(Task::HalfCheetah, seed, first_env_id, count);
+        let spec = cheetah_spec(inner.spec());
+        CheetahRunVec { inner, spec }
+    }
+}
+
+impl VecEnv for CheetahRunVec {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.inner.num_envs()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        self.inner.reset_lane(lane, obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        self.inner.step_batch(actions, reset_mask, arena, out);
+        // Reshape rewards batch-wise: vx sits at obs[2 + n_joints] in
+        // the row just written (same recovery the scalar task uses, via
+        // the shared `shape_step` core).
+        let n_joints = self.spec.action_space.dim();
+        for lane in 0..out.len() {
+            if reset_mask[lane] != 0 {
+                continue;
+            }
+            let vx = arena.row(lane)[2 + n_joints];
+            out[lane] = shape_step(vx, out[lane]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::dmc::CheetahRun;
+    use crate::envs::env::Env;
+    use crate::envs::mujoco::WalkerEnv;
+    use crate::envs::vector::SliceArena;
+
+    /// Drive a scalar env and the matching kernel lane-for-lane with the
+    /// same action stream (including auto-resets) and demand bitwise
+    /// equality — the documented parity tolerance for this kernel.
+    fn check_parity(task: Task, steps: usize) {
+        let seed = 31;
+        let n = 2;
+        let mut vec_env = WalkerVec::new(task, seed, 0, n);
+        let dim = vec_env.spec().obs_dim();
+        let adim = vec_env.spec().action_space.dim();
+        let mut scalars: Vec<WalkerEnv> =
+            (0..n).map(|i| WalkerEnv::new(task, seed, i as u64)).collect();
+        let mut vobs = vec![0.0f32; n * dim];
+        let mut sobs = vec![0.0f32; dim];
+        for (l, env) in scalars.iter_mut().enumerate() {
+            vec_env.reset_lane(l, &mut vobs[l * dim..(l + 1) * dim]);
+            env.reset(&mut sobs);
+            assert_eq!(&vobs[l * dim..(l + 1) * dim], &sobs[..], "reset lane {l}");
+        }
+        let mut mask = vec![0u8; n];
+        let mut results = vec![Step::default(); n];
+        for t in 0..steps {
+            let actions: Vec<f32> = (0..n * adim).map(|k| ((t + k) as f32 * 0.37).sin()).collect();
+            {
+                let mut arena = SliceArena::new(&mut vobs, dim);
+                vec_env.step_batch(&actions, &mask, &mut arena, &mut results);
+            }
+            for (l, env) in scalars.iter_mut().enumerate() {
+                if mask[l] != 0 {
+                    env.reset(&mut sobs);
+                    assert_eq!(results[l], Step::default(), "reset step {t} lane {l}");
+                } else {
+                    let s = env.step(&actions[l * adim..(l + 1) * adim], &mut sobs);
+                    assert_eq!(results[l], s, "step {t} lane {l}");
+                }
+                assert_eq!(&vobs[l * dim..(l + 1) * dim], &sobs[..], "obs {t} lane {l}");
+                mask[l] = results[l].finished() as u8;
+            }
+        }
+    }
+
+    #[test]
+    fn hopper_vec_matches_scalar_bitwise() {
+        check_parity(Task::Hopper, 120);
+    }
+
+    #[test]
+    fn half_cheetah_vec_matches_scalar_bitwise() {
+        check_parity(Task::HalfCheetah, 80);
+    }
+
+    #[test]
+    fn ant_vec_matches_scalar_bitwise() {
+        check_parity(Task::Ant, 60);
+    }
+
+    #[test]
+    fn cheetah_run_vec_matches_scalar_bitwise() {
+        let seed = 17;
+        let n = 2;
+        let mut vec_env = CheetahRunVec::new(seed, 0, n);
+        let dim = vec_env.spec().obs_dim();
+        let adim = vec_env.spec().action_space.dim();
+        let mut scalars: Vec<CheetahRun> =
+            (0..n).map(|i| CheetahRun::new(seed, i as u64)).collect();
+        let mut vobs = vec![0.0f32; n * dim];
+        let mut sobs = vec![0.0f32; dim];
+        for (l, env) in scalars.iter_mut().enumerate() {
+            vec_env.reset_lane(l, &mut vobs[l * dim..(l + 1) * dim]);
+            env.reset(&mut sobs);
+            assert_eq!(&vobs[l * dim..(l + 1) * dim], &sobs[..], "reset lane {l}");
+        }
+        let mask = vec![0u8; n];
+        let mut results = vec![Step::default(); n];
+        for t in 0..80 {
+            let actions: Vec<f32> = (0..n * adim).map(|k| ((t + k) as f32 * 0.21).cos()).collect();
+            {
+                let mut arena = SliceArena::new(&mut vobs, dim);
+                vec_env.step_batch(&actions, &mask, &mut arena, &mut results);
+            }
+            for (l, env) in scalars.iter_mut().enumerate() {
+                let s = env.step(&actions[l * adim..(l + 1) * adim], &mut sobs);
+                assert_eq!(results[l], s, "step {t} lane {l}");
+                assert!(!results[l].done, "cheetah_run never terminates");
+                assert!((0.0..=1.0).contains(&results[l].reward));
+                assert_eq!(&vobs[l * dim..(l + 1) * dim], &sobs[..], "obs {t} lane {l}");
+            }
+        }
+    }
+}

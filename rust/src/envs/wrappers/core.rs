@@ -1,0 +1,138 @@
+//! Wrapper *cores*: the single source of truth for each wrapper's math.
+//!
+//! Both wrapper surfaces — the scalar [`crate::envs::env::Env`] wrappers
+//! and the batch-wise [`super::vec`] (`VecWrapper`) layer — are thin
+//! adapters over these cores: a scalar wrapper is exactly the one-lane
+//! use of the same state machine the vectorized wrapper runs per lane.
+//! This is what makes `ExecMode::Scalar` and `ExecMode::Vectorized`
+//! bitwise-identical through a wrapped stack (pinned by
+//! `tests/wrapper_parity.rs`): there are no two implementations to
+//! drift apart.
+
+use crate::envs::env::Step;
+
+/// Clip a reward to its sign (`{-1, 0, +1}`), the DQN/Atari convention.
+#[inline]
+pub fn clip_reward(r: f32) -> f32 {
+    if r > 0.0 {
+        1.0
+    } else if r < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Apply a time limit to a step result: after `t` steps of an episode,
+/// a non-terminal transition at or past `limit` becomes truncated
+/// (termination wins over truncation, as in Gym v26 / EnvPool).
+#[inline]
+pub fn apply_time_limit(s: &mut Step, t: usize, limit: usize) {
+    if !s.done && t >= limit {
+        s.truncated = true;
+    }
+}
+
+/// Per-dimension running mean/variance (Welford) observation normalizer —
+/// one lane's statistics. Scalar [`super::NormalizeObs`] owns one;
+/// [`super::vec::NormalizeObsVec`] owns one per lane (or one shared
+/// across lanes in shared-stats mode).
+#[derive(Debug, Clone)]
+pub struct RunningNorm {
+    count: f64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+    frozen: bool,
+    clip: f32,
+}
+
+impl RunningNorm {
+    /// Fresh statistics for `dim`-dimensional observations.
+    pub fn new(dim: usize) -> Self {
+        RunningNorm {
+            count: 1e-4,
+            mean: vec![0.0; dim],
+            m2: vec![0.0; dim],
+            frozen: false,
+            clip: 10.0,
+        }
+    }
+
+    /// Stop (or resume) updating statistics — freeze for evaluation.
+    pub fn freeze(&mut self, on: bool) {
+        self.frozen = on;
+    }
+
+    /// Current per-dimension running means (test/diagnostic hook).
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Welford-update the statistics with `obs` (unless frozen), then
+    /// normalize `obs` in place to ~N(0,1) clipped to `±clip`.
+    pub fn update_and_normalize(&mut self, obs: &mut [f32]) {
+        if !self.frozen {
+            self.count += 1.0;
+            for (i, &x) in obs.iter().enumerate() {
+                let d = x as f64 - self.mean[i];
+                self.mean[i] += d / self.count;
+                self.m2[i] += d * (x as f64 - self.mean[i]);
+            }
+        }
+        for (i, x) in obs.iter_mut().enumerate() {
+            let var = (self.m2[i] / self.count).max(1e-8);
+            *x = (((*x as f64 - self.mean[i]) / var.sqrt()) as f32).clamp(-self.clip, self.clip);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_reward_is_sign() {
+        assert_eq!(clip_reward(7.25), 1.0);
+        assert_eq!(clip_reward(-0.01), -1.0);
+        assert_eq!(clip_reward(0.0), 0.0);
+    }
+
+    #[test]
+    fn time_limit_truncates_only_non_terminal() {
+        let mut s = Step::default();
+        apply_time_limit(&mut s, 3, 5);
+        assert!(!s.truncated);
+        apply_time_limit(&mut s, 5, 5);
+        assert!(s.truncated && !s.done);
+        let mut done = Step { reward: 0.0, done: true, truncated: false };
+        apply_time_limit(&mut done, 9, 5);
+        assert!(done.done && !done.truncated, "termination wins over truncation");
+    }
+
+    #[test]
+    fn running_norm_centers_a_constant_stream() {
+        let mut n = RunningNorm::new(2);
+        let mut last = [0.0f32; 2];
+        for _ in 0..500 {
+            let mut obs = [3.0f32, -2.0];
+            n.update_and_normalize(&mut obs);
+            last = obs;
+        }
+        // A constant stream normalizes to ~0 once the mean converges.
+        assert!(last[0].abs() < 0.1 && last[1].abs() < 0.1, "{last:?}");
+    }
+
+    #[test]
+    fn freeze_stops_updates_but_keeps_normalizing() {
+        let mut n = RunningNorm::new(1);
+        for i in 0..100 {
+            n.update_and_normalize(&mut [i as f32]);
+        }
+        n.freeze(true);
+        let mean = n.mean().to_vec();
+        let mut a = [5.0f32];
+        n.update_and_normalize(&mut a);
+        assert_eq!(mean, n.mean());
+        assert!(a[0].is_finite());
+    }
+}

@@ -3,11 +3,27 @@
 //! inside the engine): time limits, reward clipping, observation
 //! normalization. Frame stacking and episodic life live inside
 //! [`crate::envs::atari`] where they belong to the preprocessing stack.
+//!
+//! The wrapper logic has a single source of truth, [`core`]; it is
+//! surfaced twice:
+//!
+//! - batch-wise, as the [`vec`] (`VecWrapper`) layer over [`crate::envs::vector::VecEnv`]
+//!   backends — the primary form, used by `ExecMode::Vectorized` chunks;
+//! - per-env, as thin one-lane adapters over the same cores
+//!   ([`TimeLimit`], [`RewardClip`], [`NormalizeObs`]) — used by
+//!   `ExecMode::Scalar` and the baseline executors.
+//!
+//! `registry::make_env_wrapped` / `registry::make_vec_env_wrapped`
+//! compose identical stacks from a shared `WrapConfig`, so switching
+//! `ExecMode` never changes semantics (`tests/wrapper_parity.rs`).
 
+pub mod core;
 pub mod time_limit;
 pub mod reward_clip;
 pub mod normalize_obs;
+pub mod vec;
 
 pub use normalize_obs::NormalizeObs;
 pub use reward_clip::RewardClip;
 pub use time_limit::TimeLimit;
+pub use vec::{NormalizeObsVec, RewardClipVec, TimeLimitVec};

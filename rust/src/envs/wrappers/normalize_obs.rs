@@ -1,51 +1,28 @@
 //! Running observation normalization (Welford), the MuJoCo-PPO staple.
 //! Kept on the env side so the policy network always sees ~N(0,1) inputs;
 //! statistics update only during training (freeze for evaluation).
+//! One-lane adapter over [`super::core::RunningNorm`] — the batch-wise
+//! [`super::vec::NormalizeObsVec`] runs the identical core per lane.
 
+use super::core::RunningNorm;
 use crate::envs::env::{Env, Step};
 use crate::envs::spec::EnvSpec;
 
 /// Per-dimension running mean/var normalizer wrapper.
 pub struct NormalizeObs<E: Env> {
     env: E,
-    count: f64,
-    mean: Vec<f64>,
-    m2: Vec<f64>,
-    frozen: bool,
-    clip: f32,
+    norm: RunningNorm,
 }
 
 impl<E: Env> NormalizeObs<E> {
     pub fn new(env: E) -> Self {
         let dim = env.spec().obs_dim();
-        NormalizeObs {
-            env,
-            count: 1e-4,
-            mean: vec![0.0; dim],
-            m2: vec![0.0; dim],
-            frozen: false,
-            clip: 10.0,
-        }
+        NormalizeObs { env, norm: RunningNorm::new(dim) }
     }
 
     /// Stop updating statistics (for evaluation).
     pub fn freeze(&mut self, on: bool) {
-        self.frozen = on;
-    }
-
-    fn update_and_normalize(&mut self, obs: &mut [f32]) {
-        if !self.frozen {
-            self.count += 1.0;
-            for (i, &x) in obs.iter().enumerate() {
-                let d = x as f64 - self.mean[i];
-                self.mean[i] += d / self.count;
-                self.m2[i] += d * (x as f64 - self.mean[i]);
-            }
-        }
-        for (i, x) in obs.iter_mut().enumerate() {
-            let var = (self.m2[i] / self.count).max(1e-8);
-            *x = (((*x as f64 - self.mean[i]) / var.sqrt()) as f32).clamp(-self.clip, self.clip);
-        }
+        self.norm.freeze(on);
     }
 }
 
@@ -56,12 +33,12 @@ impl<E: Env> Env for NormalizeObs<E> {
 
     fn reset(&mut self, obs: &mut [f32]) {
         self.env.reset(obs);
-        self.update_and_normalize(obs);
+        self.norm.update_and_normalize(obs);
     }
 
     fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
         let s = self.env.step(action, obs);
-        self.update_and_normalize(obs);
+        self.norm.update_and_normalize(obs);
         s
     }
 }
@@ -103,10 +80,10 @@ mod tests {
             env.step(&[1.0], &mut obs);
         }
         env.freeze(true);
-        let mean_before = env.mean.clone();
+        let mean_before = env.norm.mean().to_vec();
         for _ in 0..100 {
             env.step(&[1.0], &mut obs);
         }
-        assert_eq!(mean_before, env.mean);
+        assert_eq!(mean_before, env.norm.mean());
     }
 }

@@ -1,6 +1,9 @@
 //! Reward clipping to `{-1, 0, +1}` via `sign(r)` — the DQN/Atari
-//! convention the paper's training runs use.
+//! convention the paper's training runs use. One-lane adapter over
+//! [`super::core::clip_reward`], shared with the batch-wise
+//! [`super::vec::RewardClipVec`].
 
+use super::core::clip_reward;
 use crate::envs::env::{Env, Step};
 use crate::envs::spec::EnvSpec;
 
@@ -26,13 +29,7 @@ impl<E: Env> Env for RewardClip<E> {
 
     fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
         let mut s = self.env.step(action, obs);
-        s.reward = if s.reward > 0.0 {
-            1.0
-        } else if s.reward < 0.0 {
-            -1.0
-        } else {
-            0.0
-        };
+        s.reward = clip_reward(s.reward);
         s
     }
 }

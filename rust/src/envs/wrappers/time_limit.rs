@@ -1,6 +1,10 @@
 //! TimeLimit wrapper: truncates episodes after a step budget, overriding
-//! (tightening) whatever limit the inner env carries.
+//! (tightening) whatever limit the inner env carries. One-lane adapter
+//! over [`super::core::apply_time_limit`] — the same rule the batch-wise
+//! [`super::vec::TimeLimitVec`] applies per lane, so the two exec modes
+//! cannot drift apart.
 
+use super::core::apply_time_limit;
 use crate::envs::env::{Env, Step};
 use crate::envs::spec::EnvSpec;
 
@@ -15,7 +19,9 @@ pub struct TimeLimit<E: Env> {
 impl<E: Env> TimeLimit<E> {
     pub fn new(env: E, limit: usize) -> Self {
         let mut spec = env.spec().clone();
-        spec.max_episode_steps = limit;
+        // The wrapper can only tighten — the inner env keeps truncating
+        // at its native limit — so advertise the effective minimum.
+        spec.max_episode_steps = spec.max_episode_steps.min(limit);
         TimeLimit { env, spec, limit, t: 0 }
     }
 }
@@ -33,9 +39,7 @@ impl<E: Env> Env for TimeLimit<E> {
     fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
         let mut s = self.env.step(action, obs);
         self.t += 1;
-        if !s.done && self.t >= self.limit {
-            s.truncated = true;
-        }
+        apply_time_limit(&mut s, self.t, self.limit);
         s
     }
 }

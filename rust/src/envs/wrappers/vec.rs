@@ -1,0 +1,304 @@
+//! The `VecWrapper` layer: batch-wise wrappers over [`VecEnv`] backends.
+//!
+//! With `ExecMode::Vectorized` a whole chunk of environments is stepped
+//! by one kernel call, so wrappers must operate batch-wise too — a
+//! per-env scalar wrapper around a SoA kernel would reintroduce exactly
+//! the per-env dispatch the kernel amortizes away. Each wrapper here
+//! implements [`VecEnv`] over an inner [`VecEnv`], keeping per-lane
+//! state in parallel arrays and post-processing the whole batch after
+//! one `step_batch` call:
+//!
+//! - [`TimeLimitVec`] — per-lane step counters; truncates non-terminal
+//!   transitions at the limit (termination wins).
+//! - [`RewardClipVec`] — clips every lane's reward to its sign.
+//! - [`NormalizeObsVec`] — Welford running-stat normalization applied
+//!   to each lane's observation row *in place* in the [`ObsArena`]
+//!   (a state-queue slot on the pool path — the zero-copy invariant
+//!   survives wrapping). Statistics are per-lane by default, which
+//!   makes the stack bitwise-identical to per-env scalar wrappers; the
+//!   [`NormalizeObsVec::new_shared`] variant pools one statistic across
+//!   all lanes of the batch (gym `VecNormalize`-style), updated in lane
+//!   order so runs stay deterministic for a fixed chunking.
+//!
+//! The math lives in [`super::core`], shared with the scalar wrappers —
+//! the scalar surface is the one-lane adapter over the same cores, so
+//! `registry::make_env_wrapped` and `registry::make_vec_env_wrapped`
+//! compose the exact same stack in both exec modes.
+//!
+//! Auto-reset contract: lanes with `reset_mask[lane] != 0` are reset by
+//! the innermost kernel and report `Step::default()`; wrappers must
+//! reset their per-lane state for those lanes (and, for normalization,
+//! still transform the fresh observation — matching what the scalar
+//! wrapper's `reset` does).
+
+use super::core::{apply_time_limit, clip_reward, RunningNorm};
+use crate::envs::env::Step;
+use crate::envs::spec::EnvSpec;
+use crate::envs::vector::{ObsArena, VecEnv};
+
+/// Batch-wise time limit: truncate every lane's episode at `limit` steps.
+pub struct TimeLimitVec {
+    inner: Box<dyn VecEnv>,
+    spec: EnvSpec,
+    limit: usize,
+    t: Vec<u32>,
+}
+
+impl TimeLimitVec {
+    pub fn new(inner: Box<dyn VecEnv>, limit: usize) -> Self {
+        let mut spec = inner.spec().clone();
+        // Tighten-only, as the scalar adapter does: the inner kernel
+        // still truncates at its native limit.
+        spec.max_episode_steps = spec.max_episode_steps.min(limit);
+        let t = vec![0; inner.num_envs()];
+        TimeLimitVec { inner, spec, limit, t }
+    }
+}
+
+impl VecEnv for TimeLimitVec {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.inner.num_envs()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        self.t[lane] = 0;
+        self.inner.reset_lane(lane, obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        self.inner.step_batch(actions, reset_mask, arena, out);
+        for lane in 0..out.len() {
+            if reset_mask[lane] != 0 {
+                self.t[lane] = 0;
+                continue;
+            }
+            self.t[lane] += 1;
+            apply_time_limit(&mut out[lane], self.t[lane] as usize, self.limit);
+        }
+    }
+}
+
+/// Batch-wise reward clipping to `{-1, 0, +1}`.
+pub struct RewardClipVec {
+    inner: Box<dyn VecEnv>,
+}
+
+impl RewardClipVec {
+    pub fn new(inner: Box<dyn VecEnv>) -> Self {
+        RewardClipVec { inner }
+    }
+}
+
+impl VecEnv for RewardClipVec {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn num_envs(&self) -> usize {
+        self.inner.num_envs()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        self.inner.reset_lane(lane, obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        self.inner.step_batch(actions, reset_mask, arena, out);
+        for s in out.iter_mut() {
+            // Reset lanes carry reward 0, which clips to 0 — harmless.
+            s.reward = clip_reward(s.reward);
+        }
+    }
+}
+
+/// Per-lane (or shared) running statistics behind [`NormalizeObsVec`].
+enum Stats {
+    /// One independent statistic per lane — bitwise-identical to a
+    /// per-env scalar [`super::NormalizeObs`] stack (the default, and
+    /// what `ExecMode` parity requires).
+    PerLane(Vec<RunningNorm>),
+    /// One statistic pooled across all lanes, updated in lane order
+    /// (deterministic for a fixed chunking; batches mix faster).
+    Shared(RunningNorm),
+}
+
+/// Batch-wise running observation normalization.
+pub struct NormalizeObsVec {
+    inner: Box<dyn VecEnv>,
+    stats: Stats,
+}
+
+impl NormalizeObsVec {
+    /// Per-lane statistics (matches per-env scalar wrappers bitwise).
+    pub fn new(inner: Box<dyn VecEnv>) -> Self {
+        let dim = inner.spec().obs_dim();
+        let lanes = inner.num_envs();
+        let stats = Stats::PerLane((0..lanes).map(|_| RunningNorm::new(dim)).collect());
+        NormalizeObsVec { inner, stats }
+    }
+
+    /// One statistic shared by every lane of the batch.
+    pub fn new_shared(inner: Box<dyn VecEnv>) -> Self {
+        let dim = inner.spec().obs_dim();
+        NormalizeObsVec { inner, stats: Stats::Shared(RunningNorm::new(dim)) }
+    }
+
+    /// Freeze/unfreeze statistics (for evaluation).
+    pub fn freeze(&mut self, on: bool) {
+        match &mut self.stats {
+            Stats::PerLane(ns) => {
+                for n in ns {
+                    n.freeze(on);
+                }
+            }
+            Stats::Shared(n) => n.freeze(on),
+        }
+    }
+
+    fn normalize_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        match &mut self.stats {
+            Stats::PerLane(ns) => ns[lane].update_and_normalize(obs),
+            Stats::Shared(n) => n.update_and_normalize(obs),
+        }
+    }
+}
+
+impl VecEnv for NormalizeObsVec {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn num_envs(&self) -> usize {
+        self.inner.num_envs()
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        self.inner.reset_lane(lane, obs);
+        self.normalize_lane(lane, obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        self.inner.step_batch(actions, reset_mask, arena, out);
+        // Every lane got a fresh observation (stepped or auto-reset);
+        // normalize each row in place in its final destination.
+        for lane in 0..out.len() {
+            let row = arena.row(lane);
+            self.normalize_lane(lane, row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry;
+    use crate::envs::vector::SliceArena;
+
+    fn pendulum_vec(n: usize) -> Box<dyn VecEnv> {
+        registry::make_vec_env("Pendulum-v1", 3, 0, n).unwrap()
+    }
+
+    fn drive(env: &mut dyn VecEnv, steps: usize) -> (Vec<f32>, Vec<Step>) {
+        let n = env.num_envs();
+        let dim = env.spec().obs_dim();
+        let adim = env.spec().action_space.dim();
+        let mut obs = vec![0.0f32; n * dim];
+        for lane in 0..n {
+            env.reset_lane(lane, &mut obs[lane * dim..(lane + 1) * dim]);
+        }
+        let mut mask = vec![0u8; n];
+        let mut out = vec![Step::default(); n];
+        let mut obs_trace = Vec::new();
+        let mut step_trace = Vec::new();
+        for t in 0..steps {
+            let actions: Vec<f32> = (0..n * adim).map(|k| ((t + k) % 3) as f32 - 1.0).collect();
+            {
+                let mut arena = SliceArena::new(&mut obs, dim);
+                env.step_batch(&actions, &mask, &mut arena, &mut out);
+            }
+            for lane in 0..n {
+                mask[lane] = out[lane].finished() as u8;
+            }
+            obs_trace.extend_from_slice(&obs);
+            step_trace.extend_from_slice(&out);
+        }
+        (obs_trace, step_trace)
+    }
+
+    #[test]
+    fn time_limit_vec_truncates_every_lane() {
+        let mut env = TimeLimitVec::new(pendulum_vec(3), 5);
+        assert_eq!(env.spec().max_episode_steps, 5);
+        let (_, steps) = drive(&mut env, 12);
+        // Per-lane schedule: steps 0..4 run, step 4 truncates, step 5 is
+        // the auto-reset row, then the clock restarts.
+        for lane in 0..3 {
+            for t in 0..12 {
+                let s = steps[t * 3 + lane];
+                let phase = t % 6;
+                assert_eq!(s.truncated, phase == 4, "lane {lane} t {t}");
+                assert!(!s.done, "pendulum never terminates");
+            }
+        }
+    }
+
+    #[test]
+    fn reward_clip_vec_bounds_rewards() {
+        let mut env = RewardClipVec::new(pendulum_vec(2));
+        let (_, steps) = drive(&mut env, 30);
+        assert!(steps.iter().all(|s| s.reward == -1.0 || s.reward == 0.0));
+        assert!(steps.iter().any(|s| s.reward == -1.0), "pendulum costs are negative");
+    }
+
+    #[test]
+    fn normalize_obs_vec_keeps_obs_bounded_and_is_deterministic() {
+        let run = |shared: bool| {
+            let mut env = if shared {
+                NormalizeObsVec::new_shared(pendulum_vec(2))
+            } else {
+                NormalizeObsVec::new(pendulum_vec(2))
+            };
+            drive(&mut env, 50)
+        };
+        for shared in [false, true] {
+            let (obs, _) = run(shared);
+            assert!(obs.iter().all(|x| x.abs() <= 10.0 && x.is_finite()));
+            assert_eq!(run(shared).0, obs, "shared={shared} must be deterministic");
+        }
+        // Shared stats mix lanes, so the two modes genuinely differ.
+        assert_ne!(run(false).0, run(true).0);
+    }
+
+    #[test]
+    fn wrappers_preserve_lane_count_and_spec_id() {
+        let env = TimeLimitVec::new(
+            Box::new(RewardClipVec::new(Box::new(NormalizeObsVec::new(pendulum_vec(4))))),
+            99,
+        );
+        assert_eq!(env.num_envs(), 4);
+        assert_eq!(env.spec().id, "Pendulum-v1");
+        assert_eq!(env.spec().max_episode_steps, 99);
+    }
+}

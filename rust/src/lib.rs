@@ -42,6 +42,28 @@
 //! cheap environments, `PoolConfig::exec_mode(ExecMode::Vectorized)`
 //! switches the workers to chunked struct-of-arrays execution
 //! ([`envs::vector`]), amortizing per-step dispatch overhead.
+//!
+//! ## ExecMode support matrix
+//!
+//! Vectorized execution is the engine's primary abstraction: every
+//! registered env family has a real batch kernel, the wrapper stack
+//! ([`envs::wrappers`]) composes identically in both modes, and every
+//! pool flavor (including NUMA shards) accepts either `ExecMode`.
+//!
+//! | env family | `ExecMode::Scalar` | `ExecMode::Vectorized` kernel | parity |
+//! |---|---|---|---|
+//! | classic control (4 tasks) | per-env tasks | SoA state kernels (`CartPoleVec`, ...) | bitwise |
+//! | MuJoCo walkers (`Hopper/HalfCheetah/Ant-v4`) | per-env tasks | `WalkerVec` (SoA qpos/qvel lanes, scalar solver per lane) | bitwise |
+//! | Atari (`Pong/Breakout-v5`) | per-env tasks | `AtariVec` (batched emulator lanes, shared preproc) | bitwise |
+//! | dm_control (`cheetah_run`) | per-env tasks | `CheetahRunVec` (shaping over `WalkerVec`) | bitwise |
+//! | wrappers (`TimeLimit`/`RewardClip`/`NormalizeObs`) | one-lane adapters | batch-wise `VecWrapper` layer | bitwise (shared cores) |
+//!
+//! Executors: `forloop`/`subprocess` are scalar by construction;
+//! `forloop-vec` and `sample-factory-vec` drive the same kernels
+//! synchronously; `envpool-{sync,async}[-vec]` select the pool engine;
+//! `envpool-numa-async[-vec]` shards either engine across logical NUMA
+//! nodes ([`pool::NumaPool`]). Out-of-registry envs can still opt into
+//! chunked dispatch via [`envs::vector::ScalarVec`] explicitly.
 
 pub mod error;
 pub mod rng;

@@ -6,7 +6,7 @@ use super::batch::BatchedTransition;
 use super::chunked::{Chunk, ChunkedThreadPool};
 use super::state_queue::StateBufferQueue;
 use super::thread_pool::{EnvSlot, Task, ThreadPool};
-use crate::envs::registry;
+use crate::envs::registry::{self, WrapConfig};
 use crate::envs::spec::EnvSpec;
 use crate::{Error, Result};
 use std::sync::{Arc, Mutex};
@@ -43,6 +43,10 @@ pub struct PoolConfig {
     pub pin_cores: bool,
     /// Step execution backend (per-env tasks vs per-chunk SoA kernels).
     pub exec_mode: ExecMode,
+    /// Engine-side wrapper stack, applied identically in both exec
+    /// modes (batch-wise `VecWrapper`s on chunks, one-lane adapters on
+    /// scalar envs).
+    pub wrappers: WrapConfig,
 }
 
 impl PoolConfig {
@@ -55,6 +59,7 @@ impl PoolConfig {
             seed: 0,
             pin_cores: false,
             exec_mode: ExecMode::Scalar,
+            wrappers: WrapConfig::none(),
         }
     }
 
@@ -89,6 +94,12 @@ impl PoolConfig {
     /// Select the execution backend (see [`ExecMode`]).
     pub fn exec_mode(mut self, m: ExecMode) -> Self {
         self.exec_mode = m;
+        self
+    }
+
+    /// Apply an engine-side wrapper stack (see [`WrapConfig`]).
+    pub fn wrappers(mut self, w: WrapConfig) -> Self {
+        self.wrappers = w;
         self
     }
 
@@ -143,15 +154,17 @@ impl EnvPool {
     /// its own RNG stream), pre-allocate the state queue, spawn workers.
     pub fn make(cfg: PoolConfig) -> Result<EnvPool> {
         cfg.validate()?;
-        let spec = registry::spec_for(&cfg.task_id)?;
+        let spec = registry::spec_for_wrapped(&cfg.task_id, &cfg.wrappers)?;
         let act_dim = spec.action_space.dim();
         let states = Arc::new(StateBufferQueue::new(cfg.num_envs, cfg.batch_size, spec.obs_dim()));
         let engine = match cfg.exec_mode {
             ExecMode::Scalar => {
                 let mut slots = Vec::with_capacity(cfg.num_envs);
                 for i in 0..cfg.num_envs {
+                    let w = &cfg.wrappers;
+                    let env = registry::make_env_wrapped(&cfg.task_id, cfg.seed, i as u64, w)?;
                     slots.push(EnvSlot {
-                        env: Mutex::new(registry::make_env(&cfg.task_id, cfg.seed, i as u64)?),
+                        env: Mutex::new(env),
                         action: Mutex::new(vec![0.0; act_dim]),
                         needs_reset: Mutex::new(false),
                     });
@@ -195,8 +208,13 @@ impl EnvPool {
                 let mut first = 0usize;
                 while first < cfg.num_envs {
                     let len = chunk_size.min(cfg.num_envs - first);
-                    let backend =
-                        registry::make_vec_env(&cfg.task_id, cfg.seed, first as u64, len)?;
+                    let backend = registry::make_vec_env_wrapped(
+                        &cfg.task_id,
+                        cfg.seed,
+                        first as u64,
+                        len,
+                        &cfg.wrappers,
+                    )?;
                     chunks.push(Chunk::new(backend, first as u32, act_dim));
                     first += len;
                 }
@@ -554,8 +572,8 @@ mod tests {
     }
 
     #[test]
-    fn vectorized_mode_runs_fallback_tasks_too() {
-        // Non-classic tasks route through the ScalarVec fallback chunk.
+    fn vectorized_mode_runs_atari_kernels_too() {
+        // Non-classic tasks route through real batch kernels (AtariVec).
         let cfg = PoolConfig::new("Pong-v5")
             .num_envs(2)
             .batch_size(2)
@@ -570,6 +588,51 @@ mod tests {
             pool.step_into(&actions, &out.env_ids.clone(), &mut out).unwrap();
             assert!(out.obs.iter().all(|x| x.is_finite()));
         }
+    }
+
+    #[test]
+    fn wrapper_stack_applies_in_both_exec_modes() {
+        // A time limit the bare task doesn't have (Pendulum truncates at
+        // 200 natively) must show up through the pool identically in
+        // Scalar and Vectorized modes.
+        let run = |mode: ExecMode| -> (Vec<f32>, Vec<u8>) {
+            let cfg = PoolConfig::new("Pendulum-v1")
+                .num_envs(4)
+                .batch_size(4)
+                .num_threads(2)
+                .seed(3)
+                .exec_mode(mode)
+                .wrappers(crate::envs::WrapConfig {
+                    time_limit: Some(6),
+                    reward_clip: true,
+                    normalize_obs: true,
+                });
+            let mut pool = EnvPool::make(cfg).unwrap();
+            assert_eq!(pool.spec().max_episode_steps, 6);
+            let mut out = pool.make_output();
+            pool.reset_into(&mut out).unwrap();
+            let mut rew = Vec::new();
+            let mut trunc = Vec::new();
+            for _ in 0..20 {
+                let ids = out.env_ids.clone();
+                let actions = vec![0.5f32; ids.len()];
+                pool.step_into(&actions, &ids, &mut out).unwrap();
+                let mut order: Vec<usize> = (0..out.len()).collect();
+                order.sort_by_key(|&k| out.env_ids[k]);
+                for &k in &order {
+                    rew.push(out.rew[k]);
+                    trunc.push(out.trunc[k]);
+                    assert!(out.obs_row(k).iter().all(|x| x.abs() <= 10.0), "normalized");
+                }
+            }
+            (rew, trunc)
+        };
+        let (sr, st) = run(ExecMode::Scalar);
+        let (vr, vt) = run(ExecMode::Vectorized);
+        assert!(sr.iter().all(|&r| r == 0.0 || r == -1.0), "clipped rewards");
+        assert!(st.iter().any(|&t| t != 0), "time limit must truncate");
+        assert_eq!(sr, vr, "wrapped rewards diverge between exec modes");
+        assert_eq!(st, vt, "wrapped truncations diverge between exec modes");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use super::batch::BatchedTransition;
 use super::envpool::{EnvPool, PoolConfig};
+use crate::envs::spec::EnvSpec;
 use crate::Result;
 
 /// A set of independent EnvPool shards addressed through one facade.
@@ -19,13 +20,21 @@ pub struct NumaPool {
 
 impl NumaPool {
     /// Split `cfg` across `nodes` shards. `num_envs`, `batch_size` and
-    /// `num_threads` must divide evenly (matching the paper's setup of
-    /// one identical pool per node).
+    /// `num_threads` must all divide evenly (matching the paper's setup
+    /// of one identical pool per node) — an indivisible thread count
+    /// would silently over-subscribe cores, so it is rejected like the
+    /// other two. Every other knob — `exec_mode` (each shard can run
+    /// its own `ChunkedThreadPool`), `wrappers`, `pin_cores` — is
+    /// plumbed through to the shards unchanged.
     pub fn make(cfg: PoolConfig, nodes: usize) -> Result<NumaPool> {
-        if nodes == 0 || cfg.num_envs % nodes != 0 || cfg.batch_size % nodes != 0 {
+        if nodes == 0
+            || cfg.num_envs % nodes != 0
+            || cfg.batch_size % nodes != 0
+            || cfg.num_threads % nodes != 0
+        {
             return Err(crate::Error::Config(format!(
-                "num_envs {} and batch_size {} must divide across {nodes} nodes",
-                cfg.num_envs, cfg.batch_size
+                "num_envs {}, batch_size {} and num_threads {} must divide across {nodes} nodes",
+                cfg.num_envs, cfg.batch_size, cfg.num_threads
             )));
         }
         let per = cfg.num_envs / nodes;
@@ -34,7 +43,7 @@ impl NumaPool {
                 let mut c = cfg.clone();
                 c.num_envs = per;
                 c.batch_size = cfg.batch_size / nodes;
-                c.num_threads = (cfg.num_threads / nodes).max(1);
+                c.num_threads = cfg.num_threads / nodes;
                 c.seed = cfg.seed.wrapping_add(k as u64 * 0x9E37_79B9);
                 EnvPool::make(c)
             })
@@ -44,6 +53,11 @@ impl NumaPool {
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Env spec for this pool's task (all shards share it).
+    pub fn spec(&self) -> &EnvSpec {
+        self.shards[0].spec()
     }
 
     /// Kick off all shards.
@@ -121,5 +135,52 @@ mod tests {
     fn uneven_split_rejected() {
         let cfg = PoolConfig::new("CartPole-v1").num_envs(6).batch_size(3).num_threads(2);
         assert!(NumaPool::make(cfg, 4).is_err());
+    }
+
+    #[test]
+    fn indivisible_thread_count_rejected() {
+        // 3 threads over 2 nodes used to silently become 1 thread per
+        // shard (over/under-subscription); it must now be a Config error
+        // like the num_envs/batch_size checks.
+        let cfg = PoolConfig::new("CartPole-v1").num_envs(8).batch_size(4).num_threads(3);
+        match NumaPool::make(cfg, 2) {
+            Err(crate::Error::Config(msg)) => assert!(msg.contains("num_threads"), "{msg}"),
+            other => panic!("expected Config rejection, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn vectorized_shards_run_chunked_pools() {
+        // ExecMode is plumbed through NumaPool::make: each shard runs a
+        // ChunkedThreadPool. 8 envs / 2 nodes -> shards of 4 envs with 2
+        // threads each (2 chunks of 2); shard batch 2 <= num_chunks.
+        use crate::pool::envpool::ExecMode;
+        let cfg = PoolConfig::new("CartPole-v1")
+            .num_envs(8)
+            .batch_size(4)
+            .num_threads(4)
+            .seed(13)
+            .exec_mode(ExecMode::Vectorized);
+        let mut pool = NumaPool::make(cfg, 2).unwrap();
+        assert_eq!(pool.num_shards(), 2);
+        assert_eq!(pool.spec().id, "CartPole-v1");
+        pool.async_reset();
+        let mut outs = pool.make_outputs();
+        let mut seen = vec![0u32; 8];
+        for _ in 0..40 {
+            pool.recv_all(&mut outs);
+            let mut ids = vec![];
+            let mut actions = vec![];
+            for o in &outs {
+                for &id in &o.env_ids {
+                    seen[id as usize] += 1;
+                    ids.push(id);
+                    actions.push(1.0f32);
+                }
+            }
+            pool.send(&actions, &ids).unwrap();
+        }
+        assert!(seen.iter().all(|&c| c > 0), "{seen:?}");
+        assert!(pool.total_steps() > 0);
     }
 }

@@ -2,7 +2,7 @@
 //! behaviour, routing invariants under random batch sizes, stress across
 //! tasks, and NUMA sharding.
 
-use envpool::pool::{EnvPool, NumaPool, PoolConfig};
+use envpool::pool::{EnvPool, ExecMode, NumaPool, PoolConfig};
 use envpool::prop::forall;
 use envpool::prop_assert;
 use envpool::rng::Pcg32;
@@ -126,6 +126,60 @@ fn numa_pool_end_to_end() {
 }
 
 #[test]
+fn numa_pool_runs_vectorized_walker_shards() {
+    // ExecMode plumbed through NumaPool::make: two shards, each a
+    // ChunkedThreadPool stepping WalkerVec chunks. 8 envs / 2 nodes ->
+    // shards of 4 envs, 2 threads, batch 2 (2 chunks of 2; batch <=
+    // num_chunks satisfies the chunked liveness constraint).
+    let cfg = PoolConfig::new("Hopper-v4")
+        .num_envs(8)
+        .batch_size(4)
+        .num_threads(4)
+        .seed(7)
+        .exec_mode(ExecMode::Vectorized);
+    let mut pool = NumaPool::make(cfg, 2).unwrap();
+    let adim = pool.spec().action_space.dim();
+    pool.async_reset();
+    let mut outs = pool.make_outputs();
+    let mut seen = vec![0u32; 8];
+    for _ in 0..20 {
+        pool.recv_all(&mut outs);
+        let mut ids = vec![];
+        let mut actions = vec![];
+        for o in &outs {
+            for (k, &id) in o.env_ids.iter().enumerate() {
+                seen[id as usize] += 1;
+                ids.push(id);
+                for j in 0..adim {
+                    actions.push(((id as usize + k + j) % 3) as f32 - 1.0);
+                }
+            }
+            assert!(o.obs.iter().all(|x| x.is_finite()));
+        }
+        pool.send(&actions, &ids).unwrap();
+    }
+    assert!(seen.iter().all(|&c| c > 0), "{seen:?}");
+    assert!(pool.total_steps() > 0);
+}
+
+#[test]
+fn numa_async_vec_executor_configuration_runs() {
+    // The `envpool-numa-async-vec` executor kind end to end through the
+    // throughput driver (the Table 1 row's code path).
+    let fps = envpool::coordinator::throughput::run_throughput(
+        "Hopper-v4",
+        "envpool-numa-async-vec",
+        8,
+        4,
+        4,
+        400,
+        3,
+    )
+    .unwrap();
+    assert!(fps > 0.0, "numa-async-vec must make progress, got {fps}");
+}
+
+#[test]
 fn pool_shutdown_is_clean_with_work_in_flight() {
     let mut pool = EnvPool::make(
         PoolConfig::new("Ant-v4").num_envs(8).batch_size(4).num_threads(3).seed(9),
@@ -147,6 +201,35 @@ fn atari_pool_no_torn_frames_under_concurrency() {
     // and in [0,1] and per-env deterministic vs a fresh single env.
     let mut pool = EnvPool::make(
         PoolConfig::new("Pong-v5").num_envs(4).batch_size(2).num_threads(3).seed(21),
+    )
+    .unwrap();
+    pool.async_reset();
+    let mut out = pool.make_output();
+    for _ in 0..30 {
+        pool.recv_into(&mut out);
+        assert_eq!(out.obs.len(), 2 * 4 * 84 * 84);
+        for i in 0..out.len() {
+            let row = out.obs_row(i);
+            assert!(row.iter().all(|&x| (0.0..=1.0).contains(&x)), "corrupt frame");
+        }
+        let actions = vec![0.0f32; out.len()];
+        pool.send(&actions, &out.env_ids.clone()).unwrap();
+    }
+}
+
+#[test]
+fn atari_vectorized_pool_no_torn_frames_on_large_rows() {
+    // The two-phase slot_obs_mut/commit path with Atari-sized rows
+    // (4*84*84 floats per slot): chunked workers write whole frames into
+    // block memory before committing; the consumer must never observe a
+    // torn or out-of-range row.
+    let mut pool = EnvPool::make(
+        PoolConfig::new("Pong-v5")
+            .num_envs(4)
+            .batch_size(2)
+            .num_threads(2)
+            .seed(21)
+            .exec_mode(ExecMode::Vectorized),
     )
     .unwrap();
     pool.async_reset();

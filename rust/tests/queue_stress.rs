@@ -264,3 +264,44 @@ fn state_queue_two_phase_writes_with_concurrent_consumer() {
     }
     writer.join().unwrap();
 }
+
+#[test]
+fn two_phase_commit_handles_atari_sized_rows_concurrently() {
+    // The vectorized Atari/MuJoCo path pushes much larger observation
+    // rows (4*84*84 floats) through slot_obs_mut/commit than the classic
+    // kernels do. Concurrent writers filling whole frames into block
+    // memory must never produce a torn row at the consumer.
+    let obs_dim = 4 * 84 * 84;
+    let per_writer = 50u32;
+    let q = Arc::new(StateBufferQueue::new(8, 4, obs_dim));
+    let writers: Vec<_> = (0..4u32)
+        .map(|w| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_writer {
+                    let t = q.acquire();
+                    let tag = w * 1000 + i;
+                    // Safety: fresh ticket, committed exactly once below.
+                    unsafe { q.slot_obs_mut(t) }.fill(tag as f32);
+                    q.commit(t, tag, tag as f32, false, false);
+                }
+            })
+        })
+        .collect();
+    let mut out = q.make_output();
+    let mut rows = 0usize;
+    let batches = 4 * per_writer as usize / 4; // total rows / batch_size
+    for _ in 0..batches {
+        q.recv_into(&mut out);
+        for i in 0..out.len() {
+            let tag = out.env_ids[i] as f32;
+            assert_eq!(out.obs_row(i).len(), obs_dim);
+            assert!(out.obs_row(i).iter().all(|&x| x == tag), "torn large row {tag}");
+            rows += 1;
+        }
+    }
+    assert_eq!(rows, 200);
+    for w in writers {
+        w.join().unwrap();
+    }
+}

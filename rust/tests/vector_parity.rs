@@ -13,6 +13,91 @@ use envpool::rng::Pcg32;
 
 const CLASSIC: &[&str] = &["CartPole-v1", "MountainCar-v0", "Pendulum-v1", "Acrobot-v1"];
 
+/// Run scalar and vectorized for-loop executors lock-step on the same
+/// random action stream and demand bitwise-equal streams (rewards,
+/// flags, observations) — the parity contract every batch kernel ships
+/// under (documented tolerance: exact equality).
+fn check_forloop_parity(task: &str, n: usize, seed: u64, steps: usize) {
+    let mut a = ForLoopExecutor::new(task, n, seed).unwrap();
+    let mut b = VecForLoopExecutor::new(task, n, seed).unwrap();
+    let space = a.spec().action_space.clone();
+    let mut oa = a.make_output();
+    let mut ob = b.make_output();
+    a.reset(&mut oa).unwrap();
+    b.reset(&mut ob).unwrap();
+    assert_eq!(oa.obs, ob.obs, "{task}: reset obs diverge");
+    let mut arng = Pcg32::new(seed ^ 0xF00D, 2);
+    let mut actions = Vec::new();
+    for s in 0..steps {
+        random_actions(&space, n, &mut arng, &mut actions);
+        a.step(&actions, &mut oa).unwrap();
+        b.step(&actions, &mut ob).unwrap();
+        assert_eq!(oa.rew, ob.rew, "{task}: rewards diverge at step {s}");
+        assert_eq!(oa.done, ob.done, "{task}: dones diverge at step {s}");
+        assert_eq!(oa.trunc, ob.trunc, "{task}: truncs diverge at step {s}");
+        assert_eq!(oa.obs, ob.obs, "{task}: obs diverge at step {s}");
+    }
+}
+
+#[test]
+fn walker_family_vec_kernels_bitwise_identical_to_scalar() {
+    // MuJoCo walkers + the dm_control task over them: the SoA qpos/qvel
+    // kernel must reproduce the scalar envs exactly, including episode
+    // terminations and auto-resets along the way.
+    for task in ["Hopper-v4", "HalfCheetah-v4", "Ant-v4", "cheetah_run"] {
+        check_forloop_parity(task, 2, 5, 100);
+    }
+}
+
+#[test]
+fn atari_vec_kernels_bitwise_identical_to_scalar() {
+    // Batched emulator lanes + shared preprocessing: bitwise parity on
+    // the full (4, 84, 84) observation tensors.
+    for task in ["Pong-v5", "Breakout-v5"] {
+        check_forloop_parity(task, 2, 9, 30);
+    }
+}
+
+#[test]
+fn pool_exec_modes_bitwise_identical_for_walker_and_atari() {
+    // The same contract through the full pool engines (threads, chunked
+    // dispatch, state-queue commits) for the non-classic families.
+    for task in ["Hopper-v4", "Pong-v5"] {
+        let run = |mode: ExecMode| -> (Vec<f32>, Vec<f32>, Vec<u8>) {
+            let pool = EnvPool::make(
+                PoolConfig::new(task)
+                    .num_envs(4)
+                    .batch_size(4)
+                    .num_threads(2)
+                    .seed(23)
+                    .exec_mode(mode),
+            )
+            .unwrap();
+            let mut ex = envpool::executors::PoolVectorEnv::new(pool).unwrap();
+            let mut out = ex.make_output();
+            ex.reset(&mut out).unwrap();
+            let space = ex.spec().action_space.clone();
+            let mut arng = Pcg32::new(23, 4);
+            let mut actions = Vec::new();
+            let (mut obs, mut rew, mut done) = (Vec::new(), Vec::new(), Vec::new());
+            obs.extend_from_slice(&out.obs);
+            for _ in 0..20 {
+                random_actions(&space, 4, &mut arng, &mut actions);
+                ex.step(&actions, &mut out).unwrap();
+                obs.extend_from_slice(&out.obs);
+                rew.extend_from_slice(&out.rew);
+                done.extend_from_slice(&out.done);
+            }
+            (obs, rew, done)
+        };
+        let scalar = run(ExecMode::Scalar);
+        let vector = run(ExecMode::Vectorized);
+        assert_eq!(scalar.1, vector.1, "{task}: pool rewards diverge");
+        assert_eq!(scalar.2, vector.2, "{task}: pool dones diverge");
+        assert_eq!(scalar.0, vector.0, "{task}: pool obs diverge");
+    }
+}
+
 #[test]
 fn prop_vector_and_scalar_backends_bitwise_identical() {
     forall("vector-scalar-parity", |g| {
