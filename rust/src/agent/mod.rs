@@ -7,5 +7,5 @@ pub mod rollout;
 pub mod sampler;
 pub mod gae;
 
-pub use params::ParamStore;
+pub use params::{actor_critic_meta, ParamStore};
 pub use rollout::RolloutBuffer;

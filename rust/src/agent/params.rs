@@ -3,9 +3,37 @@
 //! truth; literals are materialized per call (cheap at policy-MLP sizes
 //! — see EXPERIMENTS.md §Perf for the measurement).
 
+use crate::rng::Pcg32;
 use crate::runtime::artifact::{ArtifactConfig, Manifest, ParamMeta};
 use crate::runtime::literal::tensor_f32;
 use crate::Result;
+
+/// Shape metadata of the standard MLP actor-critic, in the order both
+/// compute backends use: `w1 [obs,h], b1 [h], w2 [h,h], b2 [h],
+/// wp [h,act], bp [act], [log_std [act],] wv [h,1], bv [1]` — the same
+/// naming convention `python/compile/aot.py` exports, so native-backend
+/// checkpoints and artifact params are directly comparable.
+pub fn actor_critic_meta(
+    obs_dim: usize,
+    act_dim: usize,
+    hidden: usize,
+    continuous: bool,
+) -> Vec<ParamMeta> {
+    let mut meta = vec![
+        ParamMeta { name: "w1".into(), shape: vec![obs_dim, hidden] },
+        ParamMeta { name: "b1".into(), shape: vec![hidden] },
+        ParamMeta { name: "w2".into(), shape: vec![hidden, hidden] },
+        ParamMeta { name: "b2".into(), shape: vec![hidden] },
+        ParamMeta { name: "wp".into(), shape: vec![hidden, act_dim] },
+        ParamMeta { name: "bp".into(), shape: vec![act_dim] },
+    ];
+    if continuous {
+        meta.push(ParamMeta { name: "log_std".into(), shape: vec![act_dim] });
+    }
+    meta.push(ParamMeta { name: "wv".into(), shape: vec![hidden, 1] });
+    meta.push(ParamMeta { name: "bv".into(), shape: vec![1] });
+    meta
+}
 
 /// Ordered parameter tensors (+ shapes).
 #[derive(Debug, Clone)]
@@ -18,6 +46,37 @@ impl ParamStore {
     /// Load the initial parameters exported by aot.py.
     pub fn load(manifest: &Manifest, cfg: &ArtifactConfig) -> Result<ParamStore> {
         Ok(ParamStore { meta: cfg.params.clone(), values: manifest.load_params(cfg)? })
+    }
+
+    /// Deterministic `Pcg32`-seeded initialization of the standard MLP
+    /// actor-critic (the native backend's init source). Weights are
+    /// scaled Gaussians, `std = gain / sqrt(fan_in)`, with CleanRL's
+    /// orthogonal-init gains — `sqrt(2)` for the Tanh trunk, `0.01` for
+    /// the policy head (near-uniform initial policy), `1.0` for the
+    /// value head; biases and `log_std` start at zero.
+    pub fn init_actor_critic(
+        obs_dim: usize,
+        act_dim: usize,
+        hidden: usize,
+        continuous: bool,
+        seed: u64,
+    ) -> ParamStore {
+        let meta = actor_critic_meta(obs_dim, act_dim, hidden, continuous);
+        let mut rng = Pcg32::new(seed, 0x6e61_7469_7665); // "native" stream
+        let values = meta
+            .iter()
+            .map(|m| {
+                let gain: f32 = match m.name.as_str() {
+                    "w1" | "w2" => std::f32::consts::SQRT_2,
+                    "wp" => 0.01,
+                    "wv" => 1.0,
+                    _ => return vec![0.0; m.numel()], // biases, log_std
+                };
+                let std = gain / (m.shape[0] as f32).sqrt();
+                (0..m.numel()).map(|_| rng.normal() * std).collect()
+            })
+            .collect();
+        ParamStore { meta, values }
     }
 
     /// Zero tensors with the same shapes (Adam m/v init).
@@ -75,6 +134,30 @@ impl ParamStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn actor_critic_init_is_deterministic_and_shaped() {
+        let p = ParamStore::init_actor_critic(4, 2, 64, false, 7);
+        let q = ParamStore::init_actor_critic(4, 2, 64, false, 7);
+        assert_eq!(p.values, q.values, "same seed must reproduce the init");
+        assert_ne!(
+            p.values,
+            ParamStore::init_actor_critic(4, 2, 64, false, 8).values,
+            "different seeds must differ"
+        );
+        assert_eq!(p.meta.len(), 8);
+        assert_eq!(p.numel(), 4 * 64 + 64 + 64 * 64 + 64 + 64 * 2 + 2 + 64 + 1);
+        // biases zero, weights nonzero, policy head much smaller than trunk
+        assert!(p.values[1].iter().all(|&x| x == 0.0), "b1 zero");
+        assert!(p.values[0].iter().any(|&x| x != 0.0), "w1 nonzero");
+        let rms = |v: &[f32]| (v.iter().map(|x| x * x).sum::<f32>() / v.len() as f32).sqrt();
+        assert!(rms(&p.values[4]) < 0.1 * rms(&p.values[2]), "wp gain 0.01 << trunk");
+
+        let c = ParamStore::init_actor_critic(3, 2, 16, true, 1);
+        assert_eq!(c.meta.len(), 9);
+        assert_eq!(c.meta[6].name, "log_std");
+        assert!(c.values[6].iter().all(|&x| x == 0.0), "log_std starts at 0");
+    }
 
     #[test]
     fn load_zeros_and_norm() {

@@ -35,6 +35,21 @@ pub fn log_prob_categorical(logits_row: &[f32], action: usize) -> f32 {
     logits_row[action] - lse
 }
 
+/// Entropy of `softmax(logits_row)` — the reference the native
+/// backend's in-loss entropy is cross-checked against.
+pub fn categorical_entropy(logits_row: &[f32]) -> f32 {
+    let max = logits_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = max + logits_row.iter().map(|l| (l - max).exp()).sum::<f32>().ln();
+    -logits_row.iter().map(|l| (l - lse).exp() * (l - lse)).sum::<f32>()
+}
+
+/// Entropy of a diagonal Gaussian with per-dimension `log_std`:
+/// `sum_k (log_std_k + 0.5 (1 + ln 2π))`.
+pub fn gaussian_entropy(log_std_row: &[f32]) -> f32 {
+    let c = 0.5 * (1.0 + (2.0 * std::f32::consts::PI).ln());
+    log_std_row.iter().map(|ls| ls + c).sum()
+}
+
 /// Greedy (argmax) actions for evaluation.
 pub fn greedy(logits: &[f32], batch: usize, n_act: usize) -> Vec<f32> {
     (0..batch)
@@ -99,6 +114,18 @@ mod tests {
             let want = if *a == 1.0 { 0.75f32.ln() } else { 0.25f32.ln() };
             assert!((lp - want).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn entropy_references() {
+        // uniform over 4: H = ln 4
+        assert!((categorical_entropy(&[0.5; 4]) - 4.0f32.ln()).abs() < 1e-5);
+        // near-deterministic: H ≈ 0
+        assert!(categorical_entropy(&[100.0, 0.0]) < 1e-3);
+        // unit Gaussian: 0.5 (1 + ln 2π) ≈ 1.4189
+        assert!((gaussian_entropy(&[0.0]) - 1.4189385).abs() < 1e-4);
+        // entropy rises with log_std
+        assert!(gaussian_entropy(&[1.0, 1.0]) > gaussian_entropy(&[0.0, 0.0]));
     }
 
     #[test]

@@ -61,13 +61,19 @@ impl Args {
     where
         T::Err: std::fmt::Display,
     {
-        match self.options.get(name) {
-            None => default,
-            Some(v) => match v.parse() {
-                Ok(x) => x,
-                Err(e) => panic!("--{name}={v}: {e}"),
-            },
-        }
+        self.parse_opt(name).unwrap_or(default)
+    }
+
+    /// Typed optional option (`None` when absent); panics with a clear
+    /// message on a bad parse, matching [`Self::parse_or`].
+    pub fn parse_opt<T: std::str::FromStr>(&self, name: &str) -> Option<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.options.get(name).map(|v| match v.parse() {
+            Ok(x) => x,
+            Err(e) => panic!("--{name}={v}: {e}"),
+        })
     }
 
     /// Comma-separated list of a parseable type.
@@ -117,6 +123,13 @@ mod tests {
         assert_eq!(a.get("missing", "d"), "d");
         assert_eq!(a.parse_or::<f32>("missing", 1.5), 1.5);
         assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn parse_opt_is_none_when_absent() {
+        let a = parse("--target-return 475.0");
+        assert_eq!(a.parse_opt::<f32>("target-return"), Some(475.0));
+        assert_eq!(a.parse_opt::<f32>("missing"), None);
     }
 
     #[test]

@@ -85,6 +85,47 @@ impl std::fmt::Display for ExecutorKind {
     }
 }
 
+/// Which compute backend executes the policy forward, PPO update, and
+/// GAE (see [`crate::runtime::backend`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Try PJRT artifacts; fall back to [`BackendKind::Native`] when the
+    /// compute tier is unavailable (vendored `xla` stub or no
+    /// `make artifacts`). The default, so `envpool train` always runs.
+    #[default]
+    Auto,
+    /// AOT HLO artifacts executed through PJRT; errors when unavailable.
+    Pjrt,
+    /// Pure-Rust MLP/Adam/PPO backend — crate-only, deterministic.
+    Native,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => BackendKind::Auto,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            "native" | "rust" => BackendKind::Native,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown backend {other:?} (expected auto|pjrt|native)"
+                )))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        })
+    }
+}
+
 /// PPO hyperparameters + system knobs. Defaults follow the original PPO
 /// paper / CleanRL (paper Appendix F Table 3).
 #[derive(Debug, Clone)]
@@ -130,7 +171,24 @@ pub struct TrainConfig {
     /// identical in both exec modes); the bare baseline executors do
     /// not wrap.
     pub normalize_obs: bool,
-    /// Directory containing AOT artifacts.
+    /// Pool one normalization statistic across all lanes of each
+    /// vectorized **chunk** (gym `VecNormalize`-style) instead of
+    /// per-lane stats. Requires the `envpool-sync-vec` executor —
+    /// scalar execution has no batch to share a statistic over.
+    ///
+    /// Caveat: the statistic's scope is the chunk, and chunking follows
+    /// `K = ceil(num_envs / num_threads)`, so unlike every other knob
+    /// the *numerics* of a shared-stats run depend on `num_threads`
+    /// (`num_threads = 1` pools over all envs). Runs are deterministic
+    /// for a fixed thread count; use per-lane `normalize_obs` when
+    /// thread-count invariance matters.
+    pub normalize_obs_shared: bool,
+    /// Compute backend for policy/update/GAE (`--backend`).
+    pub backend: BackendKind,
+    /// Stop training once the trailing mean return reaches this value
+    /// (`--target-return`); `None` runs the full step budget.
+    pub target_return: Option<f32>,
+    /// Directory containing AOT artifacts (PJRT backend only).
     pub artifacts_dir: String,
 }
 
@@ -156,6 +214,9 @@ impl Default for TrainConfig {
             max_grad_norm: 0.5,
             seed: 1,
             normalize_obs: false,
+            normalize_obs_shared: false,
+            backend: BackendKind::Auto,
+            target_return: None,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -185,6 +246,17 @@ impl TrainConfig {
         self.max_grad_norm = f.parse_or("max_grad_norm", self.max_grad_norm)?;
         self.seed = f.parse_or("seed", self.seed)?;
         self.normalize_obs = f.parse_or("normalize_obs", self.normalize_obs)?;
+        self.normalize_obs_shared =
+            f.parse_or("normalize_obs_shared", self.normalize_obs_shared)?;
+        if let Some(b) = f.values.get("backend") {
+            self.backend = b.parse()?;
+        }
+        if let Some(t) = f.values.get("target_return") {
+            self.target_return = Some(
+                t.parse()
+                    .map_err(|_| Error::Config(format!("bad value for target_return: {t:?}")))?,
+            );
+        }
         self.artifacts_dir = f.get("artifacts_dir", &self.artifacts_dir);
         Ok(())
     }
@@ -198,24 +270,63 @@ impl TrainConfig {
             self.executor = e.parse()?;
         }
         self.num_envs = a.parse_or("num-envs", self.num_envs);
-        self.batch_size = a.parse_or("batch-size", self.num_envs);
+        // `--num-envs` without `--batch-size` implies sync (M = N); when
+        // neither flag is given, a file-configured batch_size survives.
+        if a.opt("num-envs").is_some() || a.opt("batch-size").is_some() {
+            self.batch_size = a.parse_or("batch-size", self.num_envs);
+        }
         self.num_threads = a.parse_or("num-threads", self.num_threads);
         self.total_steps = a.parse_or("total-steps", self.total_steps);
         self.num_steps = a.parse_or("num-steps", self.num_steps);
         self.learning_rate = a.parse_or("lr", self.learning_rate);
+        self.clip_coef = a.parse_or("clip-coef", self.clip_coef);
         self.update_epochs = a.parse_or("update-epochs", self.update_epochs);
         self.num_minibatches = a.parse_or("minibatches", self.num_minibatches);
         self.seed = a.parse_or("seed", self.seed);
+        if let Some(b) = a.opt("backend") {
+            self.backend = b.parse()?;
+        }
+        if a.flag("normalize-obs") {
+            self.normalize_obs = true;
+        }
+        if a.flag("normalize-obs-shared") {
+            self.normalize_obs_shared = true;
+        }
+        if let Some(t) = a.parse_opt::<f32>("target-return") {
+            self.target_return = Some(t);
+        }
         if let Some(d) = a.opt("artifacts") {
             self.artifacts_dir = d.to_string();
         }
         self.validate()
     }
 
+    /// The engine-side wrapper stack this config asks the pool for.
+    pub fn wrap_config(&self) -> crate::envs::registry::WrapConfig {
+        crate::envs::registry::WrapConfig {
+            normalize_obs: self.normalize_obs,
+            normalize_obs_shared: self.normalize_obs_shared,
+            ..crate::envs::registry::WrapConfig::none()
+        }
+    }
+
     /// Check invariants the pool/trainer rely on.
     pub fn validate(&self) -> Result<()> {
         if self.num_envs == 0 {
             return Err(Error::Config("num_envs must be > 0".into()));
+        }
+        if self.normalize_obs && self.normalize_obs_shared {
+            return Err(Error::Config(
+                "normalize_obs and normalize_obs_shared are mutually exclusive \
+                 (per-lane vs pooled statistics)"
+                    .into(),
+            ));
+        }
+        if self.num_steps == 0 {
+            return Err(Error::Config("num_steps must be > 0".into()));
+        }
+        if self.num_minibatches == 0 {
+            return Err(Error::Config("num_minibatches must be > 0".into()));
         }
         if self.batch_size == 0 || self.batch_size > self.num_envs {
             return Err(Error::Config(format!(
@@ -264,6 +375,29 @@ mod tests {
     }
 
     #[test]
+    fn cli_without_batch_flags_preserves_file_configured_batch_size() {
+        // Regression: apply_args used to reset batch_size to num_envs
+        // whenever --batch-size was absent, silently discarding a
+        // file-configured async batch.
+        let mut c = TrainConfig::default();
+        let f = KvFile::parse("num_envs = 16\nbatch_size = 8").unwrap();
+        c.apply_file(&f).unwrap();
+        c.apply_args(&Args::parse(["--seed".into(), "2".into()])).unwrap();
+        assert_eq!((c.num_envs, c.batch_size), (16, 8), "file batch_size must survive");
+        // --num-envs alone still implies sync
+        c.apply_args(&Args::parse(["--num-envs".into(), "32".into()])).unwrap();
+        assert_eq!((c.num_envs, c.batch_size), (32, 32));
+    }
+
+    #[test]
+    fn zero_steps_and_minibatches_are_config_errors_not_panics() {
+        let c = TrainConfig { num_steps: 0, ..TrainConfig::default() };
+        assert!(matches!(c.validate(), Err(Error::Config(_))));
+        let c = TrainConfig { num_minibatches: 0, ..TrainConfig::default() };
+        assert!(matches!(c.validate(), Err(Error::Config(_))));
+    }
+
+    #[test]
     fn executor_parse_roundtrip() {
         for s in [
             "forloop",
@@ -282,6 +416,45 @@ mod tests {
             assert_eq!(k.to_string(), s);
         }
         assert!("bogus".parse::<ExecutorKind>().is_err());
+    }
+
+    #[test]
+    fn backend_parse_roundtrip_and_flags() {
+        for s in ["auto", "pjrt", "native"] {
+            let b: BackendKind = s.parse().unwrap();
+            assert_eq!(b.to_string(), s);
+        }
+        assert!("tpu".parse::<BackendKind>().is_err());
+        assert_eq!(TrainConfig::default().backend, BackendKind::Auto);
+
+        let mut c = TrainConfig { seed: 9, ..TrainConfig::default() };
+        let a = Args::parse(
+            ["--backend", "native", "--target-return", "475"].map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.backend, BackendKind::Native);
+        assert_eq!(c.target_return, Some(475.0));
+
+        let f = KvFile::parse("backend = pjrt\ntarget_return = 200").unwrap();
+        let mut c2 = TrainConfig { seed: 9, ..TrainConfig::default() };
+        c2.apply_file(&f).unwrap();
+        assert_eq!(c2.backend, BackendKind::Pjrt);
+        assert_eq!(c2.target_return, Some(200.0));
+    }
+
+    #[test]
+    fn shared_and_per_lane_normalization_conflict() {
+        let mut c = TrainConfig {
+            normalize_obs: true,
+            normalize_obs_shared: true,
+            ..TrainConfig::default()
+        };
+        assert!(c.validate().is_err());
+        c.normalize_obs = false;
+        c.validate().unwrap();
+        let w = c.wrap_config();
+        assert!(w.normalize_obs_shared && !w.normalize_obs);
+        assert!(!w.is_empty());
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Training/benchmark coordination: the PPO loop over the AOT policy
-//! ([`ppo`]), the Figure-4 profiler categories, greedy evaluation, and
+//! Training/benchmark coordination: the PPO loop over a pluggable
+//! compute backend ([`ppo`]; AOT/PJRT artifacts or the pure-Rust native
+//! fallback), the Figure-4 profiler categories, greedy evaluation, and
 //! the pure-simulation throughput driver behind Table 1 / Figure 3.
 
 pub mod throughput;

@@ -1,6 +1,7 @@
 //! The PPO training coordinator: EnvPool (or a baseline executor) on the
-//! environment side, AOT-compiled JAX/Pallas executables on the compute
-//! side, everything orchestrated from Rust.
+//! environment side, a [`ComputeBackend`] on the compute side (AOT
+//! JAX/Pallas executables via PJRT, or the pure-Rust native fallback),
+//! everything orchestrated from Rust.
 //!
 //! Semantics follow CleanRL's PPO (the paper's reference integration):
 //! vectorized sync rollouts of `num_steps`, GAE with done|truncated
@@ -9,7 +10,6 @@
 //! action after a terminal transition produces the reset observation as
 //! a zero-reward step — exactly what real EnvPool integrations see.
 
-use crate::agent::params::ParamStore;
 use crate::agent::rollout::RolloutBuffer;
 use crate::agent::sampler;
 use crate::config::{ExecutorKind, TrainConfig};
@@ -19,8 +19,8 @@ use crate::executors::{
 use crate::metrics::timer::{Category, TimeBreakdown};
 use crate::pool::{EnvPool, PoolConfig};
 use crate::rng::Pcg32;
+use crate::runtime::backend::{make_backend, ComputeBackend};
 use crate::runtime::trainer_exec::Minibatch;
-use crate::runtime::{GaeExec, Manifest, Policy, Runtime, TrainExec};
 use crate::{Error, Result};
 use std::time::Instant;
 
@@ -40,6 +40,8 @@ pub struct CurvePoint {
 pub struct TrainSummary {
     pub env_id: String,
     pub executor: ExecutorKind,
+    /// Compute backend that ran the updates (`"pjrt"` or `"native"`).
+    pub backend: String,
     pub num_envs: usize,
     pub env_steps: u64,
     pub iterations: usize,
@@ -56,6 +58,7 @@ impl TrainSummary {
     pub fn render(&self) -> String {
         format!(
             "== train {} / {} ==\n\
+             backend           {}\n\
              envs              {}\n\
              env steps         {}\n\
              iterations        {}\n\
@@ -65,6 +68,7 @@ impl TrainSummary {
              policy params     {}",
             self.env_id,
             self.executor,
+            self.backend,
             self.num_envs,
             self.env_steps,
             self.iterations,
@@ -78,12 +82,27 @@ impl TrainSummary {
     }
 
     /// Write the learning curve as CSV (`env_steps,wall_secs,mean_return`).
+    /// Missing parent directories are created; I/O errors carry the
+    /// offending path.
     pub fn write_curve_csv(&self, path: &str) -> Result<()> {
         let mut s = String::from("env_steps,wall_secs,mean_return\n");
         for p in &self.curve {
             s.push_str(&format!("{},{:.3},{:.3}\n", p.env_steps, p.wall_secs, p.mean_return));
         }
-        std::fs::write(path, s)?;
+        let target = std::path::Path::new(path);
+        if let Some(parent) = target.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| {
+                    Error::Io(std::io::Error::new(
+                        e.kind(),
+                        format!("creating curve dir {}: {e}", parent.display()),
+                    ))
+                })?;
+            }
+        }
+        std::fs::write(target, s).map_err(|e| {
+            Error::Io(std::io::Error::new(e.kind(), format!("writing curve {path}: {e}")))
+        })?;
         Ok(())
     }
 }
@@ -128,6 +147,16 @@ fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
             cfg.executor
         )));
     }
+    // Pooled stats exist only in the batch-wise VecWrapper layer, so the
+    // executor must select the vectorized pool engine.
+    if cfg.normalize_obs_shared && cfg.executor != ExecutorKind::EnvPoolSyncVec {
+        return Err(Error::Config(format!(
+            "normalize_obs_shared (pooled VecNormalize-style stats) requires the \
+             envpool-sync-vec executor (ExecMode::Vectorized); executor {} only has \
+             per-lane stats",
+            cfg.executor
+        )));
+    }
     Ok(match cfg.executor {
         ExecutorKind::ForLoop => {
             Box::new(ForLoopExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
@@ -139,10 +168,7 @@ fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
             Box::new(SubprocessExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
         }
         ExecutorKind::EnvPoolSync | ExecutorKind::EnvPoolSyncVec => {
-            let wrappers = crate::envs::WrapConfig {
-                normalize_obs: cfg.normalize_obs,
-                ..crate::envs::WrapConfig::none()
-            };
+            let wrappers = cfg.wrap_config();
             let pool = EnvPool::make(
                 PoolConfig::new(&cfg.env_id)
                     .num_envs(cfg.num_envs)
@@ -178,18 +204,15 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
     if benchmark_only(cfg.executor) {
         return Err(reject_benchmark_only(cfg));
     }
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let art = manifest.for_task(&cfg.env_id, cfg.num_envs)?;
-    let t_len = art.num_steps;
-    let n = art.num_envs;
-    let rt = Runtime::cpu()?;
-    let policy = Policy::load(&rt, art)?;
-    let trainer = TrainExec::load(&rt, art)?;
-    let gae = GaeExec::load(&rt, art)?;
-    let mut params = ParamStore::load(&manifest, art)?;
-    let mut adam_m = params.zeros_like();
-    let mut adam_v = params.zeros_like();
-    let mut adam_t = 0.0f32;
+    // Library callers can hand-build a TrainConfig, so the shape
+    // invariants (non-zero num_steps/num_minibatches, batch bounds, ...)
+    // must be enforced here too, not only on the CLI path.
+    cfg.validate()?;
+    let env_spec = crate::envs::registry::spec_for_wrapped(&cfg.env_id, &cfg.wrap_config())?;
+    let mut backend: Box<dyn ComputeBackend> = make_backend(cfg, &env_spec)?;
+    let bs = backend.spec().clone();
+    let t_len = bs.num_steps;
+    let n = bs.num_envs;
 
     let mut ex = build_executor(cfg)?;
     let mut prof = TimeBreakdown::new();
@@ -197,12 +220,12 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
 
     let steps_per_iter = (t_len * n) as u64;
     let iterations = (cfg.total_steps / steps_per_iter).max(1) as usize;
-    let minibatch = art.minibatch_size;
-    let n_minibatches = art.num_minibatches;
+    let minibatch = bs.minibatch_size;
+    let n_minibatches = bs.num_minibatches;
     let epochs = cfg.update_epochs;
 
-    let act_cols = if art.continuous { art.act_dim } else { 1 };
-    let mut buf = RolloutBuffer::new(t_len, n, art.obs_dim, act_cols);
+    let act_cols = if bs.continuous { bs.act_dim } else { 1 };
+    let mut buf = RolloutBuffer::new(t_len, n, bs.obs_dim, act_cols);
     let mut out = ex.make_output();
     ex.reset(&mut out)?;
     let mut obs = out.obs.clone();
@@ -223,11 +246,11 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
     for iter in 0..iterations {
         // ---- rollout ----
         for t in 0..t_len {
-            let pol = prof.time(Category::Inference, || policy.forward(&rt, &params, &obs))?;
-            let (actions, logp) = if art.continuous {
-                sampler::gaussian(&pol.dist, &pol.log_std, n, art.act_dim, &mut rng)
+            let pol = prof.time(Category::Inference, || backend.forward(&obs))?;
+            let (actions, logp) = if bs.continuous {
+                sampler::gaussian(&pol.dist, &pol.log_std, n, bs.act_dim, &mut rng)
             } else {
-                sampler::categorical(&pol.dist, n, art.act_dim, &mut rng)
+                sampler::categorical(&pol.dist, n, bs.act_dim, &mut rng)
             };
             prof.time(Category::EnvStep, || ex.step(&actions, &mut out))?;
             prof.time(Category::Other, || {
@@ -243,8 +266,8 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
             });
         }
 
-        // ---- advantages (AOT GAE kernel) ----
-        let last_pol = prof.time(Category::Inference, || policy.forward(&rt, &params, &obs))?;
+        // ---- advantages (backend GAE: AOT kernel or native scan) ----
+        let last_pol = prof.time(Category::Inference, || backend.forward(&obs))?;
         // CleanRL merges truncation into done for GAE purposes.
         let merged: Vec<f32> = buf
             .dones
@@ -254,7 +277,7 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
             .collect();
         let zeros = vec![0.0f32; t_len * n];
         let (adv, ret) = prof.time(Category::Training, || {
-            gae.compute(&rt, &buf.rewards, &buf.values, &last_pol.value, &merged, &zeros)
+            backend.gae(&buf.rewards, &buf.values, &last_pol.value, &merged, &zeros)
         })?;
 
         // ---- updates ----
@@ -278,9 +301,8 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
                     adv: &mb_adv,
                     ret: &mb_ret,
                 };
-                let stats = prof.time(Category::Training, || {
-                    trainer.step(&rt, &mut params, &mut adam_m, &mut adam_v, &mut adam_t, &mb, lr)
-                })?;
+                let stats =
+                    prof.time(Category::Training, || backend.train_minibatch(&mb, lr))?;
                 if !stats.loss.is_finite() {
                     return Err(Error::Config(format!(
                         "loss diverged at iteration {iter} (loss={})",
@@ -306,21 +328,30 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
             wall_secs: start.elapsed().as_secs_f64(),
             mean_return: mean_ret,
         });
+        // Optional early stop once the trailing window hits the target
+        // (lr annealing still follows the planned schedule).
+        if let Some(target) = cfg.target_return {
+            if mean_ret.is_finite() && mean_ret >= target {
+                break;
+            }
+        }
     }
 
     let wall = start.elapsed().as_secs_f64();
     let final_ret = curve.last().map(|p| p.mean_return).unwrap_or(f32::NAN);
+    let ran = curve.len();
     let summary = TrainSummary {
         env_id: cfg.env_id.clone(),
         executor: cfg.executor,
+        backend: backend.kind().to_string(),
         num_envs: n,
-        env_steps: steps_per_iter * iterations as u64,
-        iterations,
+        env_steps: steps_per_iter * ran as u64,
+        iterations: ran,
         wall_secs: wall,
         episodes: completed.len(),
         final_return: final_ret,
         best_return: best,
-        param_count: params.numel(),
+        param_count: backend.param_count(),
         curve,
     };
     Ok((summary, prof))
@@ -329,27 +360,31 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::BackendKind;
 
+    /// Native-backend smoke config: runs in every checkout (no PJRT, no
+    /// artifacts), with a short rollout so tests stay fast.
     fn smoke_cfg(env: &str, n: usize, steps: u64) -> TrainConfig {
         TrainConfig {
             env_id: env.into(),
             executor: ExecutorKind::EnvPoolSync,
+            backend: BackendKind::Native,
             num_envs: n,
             batch_size: n,
             num_threads: 2,
+            num_steps: 64,
             total_steps: steps,
             ..TrainConfig::default()
         }
     }
 
-    use crate::compute_or_skip;
-
     #[test]
     fn smoke_train_cartpole_two_iterations() {
-        let cfg = smoke_cfg("CartPole-v1", 8, 2 * 8 * 128);
-        let (s, prof) = compute_or_skip!(train_profiled(&cfg));
+        let cfg = smoke_cfg("CartPole-v1", 8, 2 * 8 * 64);
+        let (s, prof) = train_profiled(&cfg).unwrap();
+        assert_eq!(s.backend, "native");
         assert_eq!(s.iterations, 2);
-        assert_eq!(s.env_steps, 2048);
+        assert_eq!(s.env_steps, 1024);
         assert!(s.episodes > 0, "random-ish cartpole episodes must finish");
         assert!(s.final_return.is_finite());
         assert!(prof.total(Category::EnvStep).as_nanos() > 0);
@@ -360,7 +395,7 @@ mod tests {
     #[test]
     fn smoke_train_continuous_pendulum() {
         let cfg = smoke_cfg("Pendulum-v1", 4, 4 * 64);
-        let (s, _) = compute_or_skip!(train_profiled(&cfg));
+        let (s, _) = train_profiled(&cfg).unwrap();
         assert_eq!(s.iterations, 1);
         assert!(s.env_steps == 256);
     }
@@ -368,7 +403,7 @@ mod tests {
     #[test]
     fn async_executor_rejected_for_training() {
         // Benchmark-only executors must be rejected with a configuration
-        // error *before* any artifact / runtime loading.
+        // error *before* any backend/artifact loading.
         for kind in [
             ExecutorKind::EnvPoolAsync,
             ExecutorKind::EnvPoolAsyncVec,
@@ -392,9 +427,74 @@ mod tests {
         a.executor = ExecutorKind::ForLoop;
         let mut b = smoke_cfg("CartPole-v1", 8, 1024);
         b.executor = ExecutorKind::EnvPoolSync;
-        let (sa, _) = compute_or_skip!(train_profiled(&a));
-        let (sb, _) = compute_or_skip!(train_profiled(&b));
+        let (sa, _) = train_profiled(&a).unwrap();
+        let (sb, _) = train_profiled(&b).unwrap();
         assert_eq!(sa.episodes, sb.episodes);
         assert_eq!(sa.final_return, sb.final_return);
+    }
+
+    #[test]
+    fn shared_normalization_requires_vectorized_pool() {
+        let mut cfg = smoke_cfg("CartPole-v1", 8, 1024);
+        cfg.normalize_obs_shared = true;
+        // scalar pool engine: rejected with an actionable message
+        match train(&cfg) {
+            Err(Error::Config(msg)) => assert!(msg.contains("envpool-sync-vec"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // vectorized pool engine: trains
+        cfg.executor = ExecutorKind::EnvPoolSyncVec;
+        let s = train(&cfg).unwrap();
+        assert!(s.env_steps > 0);
+        // bare baseline executors: rejected too
+        cfg.executor = ExecutorKind::ForLoopVec;
+        assert!(matches!(train(&cfg), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn invalid_shapes_error_on_the_library_path_too() {
+        // validate() runs inside train_profiled, not just apply_args:
+        // a hand-built config must get a Config error, not a panic.
+        let mut cfg = smoke_cfg("CartPole-v1", 8, 1024);
+        cfg.num_steps = 0;
+        assert!(matches!(train(&cfg), Err(Error::Config(_))));
+        let mut cfg = smoke_cfg("CartPole-v1", 8, 1024);
+        cfg.num_minibatches = 0;
+        assert!(matches!(train(&cfg), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn target_return_stops_early() {
+        // A target below the random-policy return stops after the first
+        // iteration that completes an episode window.
+        let mut cfg = smoke_cfg("CartPole-v1", 8, 50 * 8 * 64);
+        cfg.target_return = Some(1.0); // any completed episode beats this
+        let s = train(&cfg).unwrap();
+        assert!(s.iterations < 50, "target_return must stop early, ran {}", s.iterations);
+        assert_eq!(s.env_steps, (s.iterations * 8 * 64) as u64);
+        assert_eq!(s.curve.len(), s.iterations);
+    }
+
+    #[test]
+    fn curve_csv_creates_parents_and_reports_path_on_error() {
+        let cfg = smoke_cfg("CartPole-v1", 4, 4 * 64);
+        let s = train(&cfg).unwrap();
+        let dir = std::env::temp_dir().join(format!("envpool-curve-{}", std::process::id()));
+        let nested = dir.join("a/b/curve.csv");
+        s.write_curve_csv(nested.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&nested).unwrap();
+        assert!(text.starts_with("env_steps,wall_secs,mean_return"));
+        assert_eq!(text.lines().count(), 1 + s.curve.len());
+        // error path: the parent "directory" is a file → the error must
+        // name the offending path instead of a bare io message
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, "x").unwrap();
+        let bad = blocker.join("curve.csv");
+        let err = s.write_curve_csv(bad.to_str().unwrap()).unwrap_err();
+        assert!(
+            err.to_string().contains("blocker"),
+            "error must carry the path: {err}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

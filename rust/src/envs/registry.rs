@@ -52,6 +52,16 @@ pub struct WrapConfig {
     pub reward_clip: bool,
     /// Welford running observation normalization (per env/lane).
     pub normalize_obs: bool,
+    /// Pool one normalization statistic across all lanes of a vectorized
+    /// chunk (gym `VecNormalize`-style;
+    /// [`NormalizeObsVec::new_shared`]). Mutually exclusive with
+    /// `normalize_obs`, and only meaningful for the vectorized surface —
+    /// [`make_env_wrapped`] rejects it because a scalar env has no batch
+    /// to share a statistic over. The statistic's scope is the *chunk*
+    /// the kernel is built for, so through the pool its numerics depend
+    /// on the chunking (i.e. `num_threads`) — per-lane `normalize_obs`
+    /// is the thread-count-invariant option.
+    pub normalize_obs_shared: bool,
 }
 
 impl WrapConfig {
@@ -62,7 +72,22 @@ impl WrapConfig {
 
     /// Does this config add any wrapper at all?
     pub fn is_empty(&self) -> bool {
-        self.time_limit.is_none() && !self.reward_clip && !self.normalize_obs
+        self.time_limit.is_none()
+            && !self.reward_clip
+            && !self.normalize_obs
+            && !self.normalize_obs_shared
+    }
+
+    /// Reject combinations no surface can build.
+    fn check(&self) -> Result<()> {
+        if self.normalize_obs && self.normalize_obs_shared {
+            return Err(Error::Config(
+                "normalize_obs and normalize_obs_shared are mutually exclusive \
+                 (per-lane vs pooled statistics)"
+                    .into(),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -119,6 +144,11 @@ pub fn make_vec_env(
     first_env_id: u64,
     count: usize,
 ) -> Result<Box<dyn VecEnv>> {
+    if count == 0 {
+        return Err(Error::Config(format!(
+            "make_vec_env({task_id:?}): lane count must be > 0"
+        )));
+    }
     Ok(match task_id {
         "CartPole-v1" => Box::new(CartPoleVec::new(seed, first_env_id, count)),
         "MountainCar-v0" => Box::new(MountainCarVec::new(seed, first_env_id, count)),
@@ -142,6 +172,15 @@ pub fn make_env_wrapped(
     env_id: u64,
     wrap: &WrapConfig,
 ) -> Result<Box<dyn Env>> {
+    wrap.check()?;
+    if wrap.normalize_obs_shared {
+        return Err(Error::Config(
+            "normalize_obs_shared pools statistics across the lanes of a vectorized \
+             chunk; scalar execution has only per-lane stats — use \
+             ExecMode::Vectorized (or per-lane normalize_obs)"
+                .into(),
+        ));
+    }
     let mut env: Box<dyn Env> = make_env(task_id, seed, env_id)?;
     if let Some(limit) = wrap.time_limit {
         env = Box::new(TimeLimit::new(env, limit));
@@ -165,6 +204,7 @@ pub fn make_vec_env_wrapped(
     count: usize,
     wrap: &WrapConfig,
 ) -> Result<Box<dyn VecEnv>> {
+    wrap.check()?;
     let mut env = make_vec_env(task_id, seed, first_env_id, count)?;
     if let Some(limit) = wrap.time_limit {
         env = Box::new(TimeLimitVec::new(env, limit));
@@ -172,7 +212,9 @@ pub fn make_vec_env_wrapped(
     if wrap.reward_clip {
         env = Box::new(RewardClipVec::new(env));
     }
-    if wrap.normalize_obs {
+    if wrap.normalize_obs_shared {
+        env = Box::new(NormalizeObsVec::new_shared(env));
+    } else if wrap.normalize_obs {
         env = Box::new(NormalizeObsVec::new(env));
     }
     Ok(env)
@@ -230,8 +272,52 @@ mod tests {
     }
 
     #[test]
+    fn zero_lane_vec_env_is_a_config_error() {
+        assert!(matches!(
+            make_vec_env("CartPole-v1", 0, 0, 0),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            make_vec_env_wrapped("CartPole-v1", 0, 0, 0, &WrapConfig::none()),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn shared_normalization_is_vectorized_only() {
+        let shared = WrapConfig { normalize_obs_shared: true, ..WrapConfig::none() };
+        assert!(!shared.is_empty());
+        // vectorized surface accepts it
+        let mut v = make_vec_env_wrapped("Pendulum-v1", 1, 0, 3, &shared).unwrap();
+        assert_eq!(v.num_envs(), 3);
+        let mut obs = vec![0.0f32; 3 * 3];
+        for lane in 0..3 {
+            v.reset_lane(lane, &mut obs[lane * 3..(lane + 1) * 3]);
+        }
+        assert!(obs.iter().all(|x| x.is_finite()));
+        // scalar surface rejects it
+        match make_env_wrapped("Pendulum-v1", 1, 0, &shared) {
+            Err(Error::Config(msg)) => assert!(msg.contains("per-lane"), "{msg}"),
+            other => panic!("expected Config rejection, got {:?}", other.map(|_| ())),
+        }
+        // both-at-once is contradictory on every surface
+        let both = WrapConfig {
+            normalize_obs: true,
+            normalize_obs_shared: true,
+            ..WrapConfig::none()
+        };
+        assert!(make_vec_env_wrapped("Pendulum-v1", 1, 0, 2, &both).is_err());
+        assert!(make_env_wrapped("Pendulum-v1", 1, 0, &both).is_err());
+    }
+
+    #[test]
     fn wrapped_constructors_apply_the_stack_in_both_modes() {
-        let wrap = WrapConfig { time_limit: Some(9), reward_clip: true, normalize_obs: true };
+        let wrap = WrapConfig {
+            time_limit: Some(9),
+            reward_clip: true,
+            normalize_obs: true,
+            ..WrapConfig::none()
+        };
         assert!(!wrap.is_empty());
         assert!(WrapConfig::none().is_empty());
         let spec = spec_for_wrapped("Pendulum-v1", &wrap).unwrap();

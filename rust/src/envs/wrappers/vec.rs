@@ -18,7 +18,10 @@
 //!   makes the stack bitwise-identical to per-env scalar wrappers; the
 //!   [`NormalizeObsVec::new_shared`] variant pools one statistic across
 //!   all lanes of the batch (gym `VecNormalize`-style), updated in lane
-//!   order so runs stay deterministic for a fixed chunking.
+//!   order so runs stay deterministic for a fixed chunking. Selected via
+//!   `WrapConfig::normalize_obs_shared` (and
+//!   `TrainConfig::normalize_obs_shared` from the trainer) — vectorized
+//!   exec mode only, since a scalar env has no batch to share.
 //!
 //! The math lives in [`super::core`], shared with the scalar wrappers —
 //! the scalar surface is the one-lane adapter over the same cores, so

@@ -19,7 +19,9 @@
 //!   the L2 graph, verified against pure-jnp oracles.
 //!
 //! The AOT artifacts are executed from Rust through PJRT ([`runtime`]);
-//! Python never runs on the request path.
+//! Python never runs on the request path. When PJRT/artifacts are absent
+//! the pure-Rust `native` compute backend ([`runtime::native`]) replaces
+//! L1/L2 entirely, so `envpool train` works in every checkout.
 //!
 //! ## Quickstart
 //!
@@ -64,6 +66,27 @@
 //! `envpool-numa-async[-vec]` shards either engine across logical NUMA
 //! nodes ([`pool::NumaPool`]). Out-of-registry envs can still opt into
 //! chunked dispatch via [`envs::vector::ScalarVec`] explicitly.
+//!
+//! Wrapper knobs per `ExecMode`: per-lane `NormalizeObs` is available in
+//! both modes (bitwise identical); pooled `normalize_obs_shared` (gym
+//! `VecNormalize`-style, one statistic across a chunk's lanes) exists
+//! only on the vectorized surface and is rejected by the scalar one.
+//!
+//! ## Compute-tier backend matrix
+//!
+//! `envpool train` / `envpool profile` drive a
+//! [`runtime::ComputeBackend`] (`--backend {auto,pjrt,native}`;
+//! `auto`, the default, picks PJRT when present and falls back to
+//! native, so the trainer never degrades to "skip"):
+//!
+//! | capability | `pjrt` (AOT artifacts) | `native` (pure Rust) |
+//! |---|---|---|
+//! | policy forward (logits / mu+log_std, value) | compiled HLO via PJRT | f64 MLP, 2×Tanh trunk ([`runtime::NativeNet`]) |
+//! | PPO update (clip + value + entropy) | compiled train step | analytic backprop + grad-norm clip + Adam |
+//! | GAE | compiled scan kernel (Pallas-lowerable) | [`agent::gae::gae_ref`] |
+//! | requirements | real `xla` bindings + `make artifacts` | none — the crate alone |
+//! | shapes/schedule source | artifact manifest | [`config::TrainConfig`] |
+//! | determinism | per artifact | exact (`Pcg32`-seeded init, f64 math) |
 
 pub mod error;
 pub mod rng;

@@ -3,7 +3,13 @@
 //! Subcommands:
 //! - `envpool info`                      — list tasks and specs
 //! - `envpool bench ...`                 — pure env-simulation throughput
-//! - `envpool train ...`                 — PPO training over the AOT policy
+//! - `envpool train ...`                 — PPO training; `--backend
+//!                                         {auto,pjrt,native}` selects the
+//!                                         compute tier (native is pure
+//!                                         Rust, needs no artifacts),
+//!                                         `--curve out.csv` dumps the
+//!                                         learning curve,
+//!                                         `--target-return R` stops early
 //! - `envpool profile ...`               — Figure-4 time breakdown
 //! - `envpool worker --task T --seed S --env-id I`
 //!                                       — subprocess-executor worker
@@ -114,6 +120,13 @@ fn cmd_train(args: &Args) -> i32 {
     match envpool::coordinator::ppo::train(&cfg) {
         Ok(summary) => {
             println!("{}", summary.render());
+            if let Some(path) = args.opt("curve") {
+                if let Err(e) = summary.write_curve_csv(path) {
+                    eprintln!("cannot write learning curve: {e}");
+                    return 1;
+                }
+                println!("learning curve -> {path}");
+            }
             0
         }
         Err(e) => {

@@ -115,8 +115,16 @@ pub struct ChunkedThreadPool {
 }
 
 impl ChunkedThreadPool {
-    /// Spawn `num_threads` workers over `chunks`. `chunk_size` is the
-    /// uniform size of every chunk but the last (used for id routing).
+    /// Spawn workers over `chunks`. `chunk_size` is the uniform size of
+    /// every chunk but the last (used for id routing).
+    ///
+    /// The worker count is clamped to the chunk count: a chunk is the
+    /// unit of dispatch, so with `num_envs < num_threads` the chunk math
+    /// `K = ceil(N / threads)` yields fewer chunks than requested
+    /// workers, and any surplus worker would sit pinned to a core doing
+    /// nothing forever. (Zero environments never reach this layer —
+    /// `PoolConfig::validate` and `registry::make_vec_env` reject them
+    /// with a config error.)
     pub fn spawn(
         num_threads: usize,
         chunks: Vec<Chunk>,
@@ -125,6 +133,7 @@ impl ChunkedThreadPool {
         act_dim: usize,
         pin_cores: bool,
     ) -> ChunkedThreadPool {
+        let num_threads = num_threads.clamp(1, chunks.len().max(1));
         let queue = Arc::new(ActionBufferQueue::new(2 * chunks.len() + num_threads));
         let chunks = Arc::new(chunks);
         let steps = Arc::new(AtomicU64::new(0));
@@ -310,6 +319,37 @@ mod tests {
             assert!(out.obs.iter().all(|x| x.is_finite()));
         }
         assert_eq!(pool.steps.load(Ordering::Relaxed), 50 * n as u64);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_count_is_clamped_to_chunk_count() {
+        // 2 chunks but 8 requested workers: only 2 may spawn (no idle
+        // pinned threads), and the pool must still round-trip.
+        let n = 4;
+        let chunk_size = 2;
+        let states = Arc::new(StateBufferQueue::new(n, n, 4));
+        let chunks: Vec<Chunk> = (0..2)
+            .map(|c| {
+                let envs =
+                    registry::make_vec_env("CartPole-v1", 3, (c * chunk_size) as u64, chunk_size)
+                        .unwrap();
+                Chunk::new(envs, (c * chunk_size) as u32, 1)
+            })
+            .collect();
+        let mut pool = ChunkedThreadPool::spawn(8, chunks, states.clone(), chunk_size, 1, false);
+        assert_eq!(pool.num_threads(), 2, "workers clamped to chunk count");
+        assert_eq!(pool.num_chunks(), 2);
+        pool.schedule_reset_all();
+        let mut out = crate::pool::batch::BatchedTransition::with_capacity(n, 4);
+        states.recv_into(&mut out);
+        assert_eq!(out.len(), n);
+        for _ in 0..10 {
+            let ids = out.env_ids.clone();
+            pool.send_actions(&vec![1.0f32; n], &ids);
+            states.recv_into(&mut out);
+            assert!(out.obs.iter().all(|x| x.is_finite()));
+        }
         pool.shutdown();
     }
 }

@@ -184,6 +184,9 @@ impl EnvPool {
             ExecMode::Vectorized => {
                 // Chunking math: K = ceil(N / threads); the last chunk
                 // takes the remainder (see `envs::vector` module docs).
+                // With N < threads this yields fewer chunks than
+                // requested workers; `ChunkedThreadPool::spawn` clamps
+                // the worker count to the chunk count.
                 let chunk_size = cfg.num_envs.div_ceil(cfg.num_threads);
                 let num_chunks = cfg.num_envs.div_ceil(chunk_size);
                 // Liveness constraint for async mode: a chunk only steps
@@ -606,6 +609,7 @@ mod tests {
                     time_limit: Some(6),
                     reward_clip: true,
                     normalize_obs: true,
+                    ..crate::envs::WrapConfig::none()
                 });
             let mut pool = EnvPool::make(cfg).unwrap();
             assert_eq!(pool.spec().max_episode_steps, 6);

@@ -126,6 +126,10 @@ impl Manifest {
                     .filter(|c| c.task == task)
                     .map(|c| format!("{} (N={})", c.key, c.num_envs))
                     .collect();
+                // NOTE: `runtime::backend::missing_task_config` matches
+                // the "no artifacts for task" prefix to let `--backend
+                // auto` fall back to native; keep them in sync (the
+                // fallback test pins the behavior).
                 Error::Artifact(format!(
                     "no artifacts for task {task:?} with num_envs {num_envs}; \
                      available: {have:?} — add a config to python/compile/aot.py \

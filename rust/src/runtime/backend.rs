@@ -1,0 +1,505 @@
+//! The compute-tier abstraction: one trait, two interchangeable
+//! implementations.
+//!
+//! - [`PjrtBackend`] — the original path: AOT HLO-text artifacts
+//!   (policy forward, PPO train step, GAE scan) compiled and executed
+//!   through PJRT. Requires real `xla` bindings and `make artifacts`.
+//! - [`NativeBackend`] — a pure-Rust MLP actor-critic with analytic
+//!   PPO backprop, Adam, and the reference GAE
+//!   ([`crate::agent::gae::gae_ref`]). Needs nothing beyond the crate,
+//!   so `envpool train --backend native` works in every checkout —
+//!   including ones where the vendored `xla` stub makes PJRT report
+//!   unavailable.
+//!
+//! [`make_backend`] resolves [`BackendKind`]: `pjrt` and `native` are
+//! explicit; `auto` (the default) tries PJRT and falls back to native
+//! when [`crate::runtime::unavailable`] says the compute tier is absent,
+//! or when the artifacts on disk were lowered for a different
+//! `(task, num_envs)` than this run asks for — genuine PJRT errors
+//! (corrupt manifest, compile/shape failures) still surface.
+
+use super::native::{Adam, MinibatchF64, NativeNet, PpoHyper};
+use super::policy::PolicyOutput;
+use super::trainer_exec::{GaeExec, Minibatch, TrainExec, TrainStats};
+use super::{Manifest, Policy, Runtime};
+use crate::agent::params::ParamStore;
+use crate::config::{BackendKind, TrainConfig};
+use crate::envs::spec::EnvSpec;
+use crate::{Error, Result};
+
+/// Hidden width of the native MLP (CleanRL's default).
+pub const NATIVE_HIDDEN: usize = 64;
+
+/// The shapes and schedule a backend trains with. For PJRT these come
+/// from the artifact manifest (baked into the compiled graphs); for the
+/// native backend they come straight from [`TrainConfig`].
+#[derive(Debug, Clone)]
+pub struct BackendSpec {
+    pub num_envs: usize,
+    pub num_steps: usize,
+    pub obs_dim: usize,
+    /// Discrete action count or continuous action dimension.
+    pub act_dim: usize,
+    pub continuous: bool,
+    pub minibatch_size: usize,
+    pub num_minibatches: usize,
+    pub gamma: f32,
+    pub lam: f32,
+}
+
+/// A compute backend: policy forward, PPO minibatch update, GAE.
+pub trait ComputeBackend {
+    /// `"pjrt"` or `"native"` (reported in the train summary).
+    fn kind(&self) -> &'static str;
+
+    /// Shapes/schedule this backend was built for.
+    fn spec(&self) -> &BackendSpec;
+
+    /// Total policy parameter count.
+    fn param_count(&self) -> usize;
+
+    /// Batched actor-critic forward over `[num_envs, obs_dim]` (or any
+    /// whole multiple of `obs_dim`) observations.
+    fn forward(&mut self, obs: &[f32]) -> Result<PolicyOutput>;
+
+    /// One PPO minibatch update (mutates the optimizer + parameters).
+    fn train_minibatch(&mut self, mb: &Minibatch<'_>, lr: f32) -> Result<TrainStats>;
+
+    /// GAE over time-major `[T, N]` arrays; returns (advantages, returns).
+    fn gae(
+        &mut self,
+        rewards: &[f32],
+        values: &[f32],
+        last_value: &[f32],
+        dones: &[f32],
+        truncs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+}
+
+/// Present artifacts dir, but nothing lowered for this `(task,
+/// num_envs)` — for *this run* the compute tier is just as absent as a
+/// missing dir, so `auto` may fall back (matches the message
+/// `Manifest::for_task` emits).
+fn missing_task_config(e: &Error) -> bool {
+    matches!(e, Error::Artifact(m) if m.contains("no artifacts for task"))
+}
+
+/// Build the backend selected by `cfg.backend` (env metadata from
+/// `env_spec`; see module docs for the `auto` fallback rule).
+pub fn make_backend(cfg: &TrainConfig, env_spec: &EnvSpec) -> Result<Box<dyn ComputeBackend>> {
+    match cfg.backend {
+        BackendKind::Pjrt => PjrtBackend::make(cfg),
+        BackendKind::Native => Ok(Box::new(NativeBackend::make(cfg, env_spec)?)),
+        BackendKind::Auto => match PjrtBackend::make(cfg) {
+            Ok(b) => Ok(b),
+            Err(e) if super::unavailable(&e) || missing_task_config(&e) => {
+                Ok(Box::new(NativeBackend::make(cfg, env_spec)?))
+            }
+            Err(e) => Err(e),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT
+// ---------------------------------------------------------------------
+
+/// The artifact/PJRT compute backend (see module docs).
+pub struct PjrtBackend {
+    rt: Runtime,
+    policy: Policy,
+    trainer: TrainExec,
+    gae_exec: GaeExec,
+    params: ParamStore,
+    adam_m: ParamStore,
+    adam_v: ParamStore,
+    adam_t: f32,
+    spec: BackendSpec,
+}
+
+impl PjrtBackend {
+    /// Load manifest + runtime + the three executables for
+    /// `(cfg.env_id, cfg.num_envs)`.
+    pub fn make(cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let art = manifest.for_task(&cfg.env_id, cfg.num_envs)?;
+        let rt = Runtime::cpu()?;
+        let policy = Policy::load(&rt, art)?;
+        let trainer = TrainExec::load(&rt, art)?;
+        let gae_exec = GaeExec::load(&rt, art)?;
+        let params = ParamStore::load(&manifest, art)?;
+        let adam_m = params.zeros_like();
+        let adam_v = params.zeros_like();
+        let spec = BackendSpec {
+            num_envs: art.num_envs,
+            num_steps: art.num_steps,
+            obs_dim: art.obs_dim,
+            act_dim: art.act_dim,
+            continuous: art.continuous,
+            minibatch_size: art.minibatch_size,
+            num_minibatches: art.num_minibatches,
+            gamma: art.gamma,
+            lam: art.lam,
+        };
+        Ok(Box::new(PjrtBackend {
+            rt,
+            policy,
+            trainer,
+            gae_exec,
+            params,
+            adam_m,
+            adam_v,
+            adam_t: 0.0,
+            spec,
+        }))
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn param_count(&self) -> usize {
+        self.params.numel()
+    }
+
+    fn forward(&mut self, obs: &[f32]) -> Result<PolicyOutput> {
+        self.policy.forward(&self.rt, &self.params, obs)
+    }
+
+    fn train_minibatch(&mut self, mb: &Minibatch<'_>, lr: f32) -> Result<TrainStats> {
+        self.trainer.step(
+            &self.rt,
+            &mut self.params,
+            &mut self.adam_m,
+            &mut self.adam_v,
+            &mut self.adam_t,
+            mb,
+            lr,
+        )
+    }
+
+    fn gae(
+        &mut self,
+        rewards: &[f32],
+        values: &[f32],
+        last_value: &[f32],
+        dones: &[f32],
+        truncs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.gae_exec.compute(&self.rt, rewards, values, last_value, dones, truncs)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Native
+// ---------------------------------------------------------------------
+
+/// The pure-Rust compute backend (see module docs and
+/// [`crate::runtime::native`]).
+pub struct NativeBackend {
+    net: NativeNet,
+    opt: Adam,
+    hp: PpoHyper,
+    max_grad_norm: f64,
+    spec: BackendSpec,
+    /// Scratch for f32⇄f64 forward conversion (reused across calls).
+    obs64: Vec<f64>,
+    /// Scratch for f32⇄f64 minibatch conversion (reused across calls).
+    mb64: MinibatchF64,
+}
+
+impl NativeBackend {
+    /// Build from the train config + env spec alone — no artifacts, no
+    /// PJRT, deterministic under `cfg.seed`.
+    pub fn make(cfg: &TrainConfig, env_spec: &EnvSpec) -> Result<NativeBackend> {
+        let obs_dim = env_spec.obs_dim();
+        let act_dim = env_spec.action_space.n();
+        let continuous = !env_spec.action_space.is_discrete();
+        let rollout = cfg.num_envs * cfg.num_steps;
+        if cfg.num_minibatches == 0 || rollout % cfg.num_minibatches != 0 {
+            return Err(Error::Config(format!(
+                "native backend: rollout size {rollout} not divisible by num_minibatches {}",
+                cfg.num_minibatches
+            )));
+        }
+        let net = NativeNet::new(obs_dim, act_dim, NATIVE_HIDDEN, continuous, cfg.seed)?;
+        let opt = Adam::new(&net);
+        let hp = PpoHyper {
+            clip_coef: cfg.clip_coef as f64,
+            vf_coef: cfg.vf_coef as f64,
+            ent_coef: cfg.ent_coef as f64,
+            norm_adv: true,
+        };
+        let spec = BackendSpec {
+            num_envs: cfg.num_envs,
+            num_steps: cfg.num_steps,
+            obs_dim,
+            act_dim,
+            continuous,
+            minibatch_size: rollout / cfg.num_minibatches,
+            num_minibatches: cfg.num_minibatches,
+            gamma: cfg.gamma,
+            lam: cfg.gae_lambda,
+        };
+        Ok(NativeBackend {
+            net,
+            opt,
+            hp,
+            max_grad_norm: cfg.max_grad_norm as f64,
+            spec,
+            obs64: Vec::new(),
+            mb64: MinibatchF64 {
+                obs: Vec::new(),
+                actions: Vec::new(),
+                logp: Vec::new(),
+                adv: Vec::new(),
+                ret: Vec::new(),
+            },
+        })
+    }
+
+    /// The current parameters as an f32 [`ParamStore`] (reporting /
+    /// checkpointing; same naming as the artifact path).
+    pub fn params(&self) -> ParamStore {
+        self.net.to_store()
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn param_count(&self) -> usize {
+        self.net.numel()
+    }
+
+    fn forward(&mut self, obs: &[f32]) -> Result<PolicyOutput> {
+        let d = self.spec.obs_dim;
+        if obs.is_empty() || obs.len() % d != 0 {
+            return Err(Error::Config(format!(
+                "native forward: obs length {} is not a multiple of obs_dim {d}",
+                obs.len()
+            )));
+        }
+        let bsz = obs.len() / d;
+        self.obs64.clear();
+        self.obs64.extend(obs.iter().map(|&x| x as f64));
+        let fwd = self.net.forward(&self.obs64, bsz);
+        let log_std = if self.spec.continuous {
+            // state-independent parameter, broadcast to [B, A]
+            let ls = self.net.log_std();
+            let mut out = Vec::with_capacity(bsz * ls.len());
+            for _ in 0..bsz {
+                out.extend(ls.iter().map(|&x| x as f32));
+            }
+            out
+        } else {
+            Vec::new()
+        };
+        Ok(PolicyOutput {
+            dist: fwd.dist.iter().map(|&x| x as f32).collect(),
+            log_std,
+            value: fwd.value.iter().map(|&x| x as f32).collect(),
+        })
+    }
+
+    fn train_minibatch(&mut self, mb: &Minibatch<'_>, lr: f32) -> Result<TrainStats> {
+        let b = mb.logp.len();
+        debug_assert_eq!(mb.obs.len(), b * self.spec.obs_dim);
+        fn refill(dst: &mut Vec<f64>, src: &[f32]) {
+            dst.clear();
+            dst.extend(src.iter().map(|&x| x as f64));
+        }
+        refill(&mut self.mb64.obs, mb.obs);
+        refill(&mut self.mb64.actions, mb.actions);
+        refill(&mut self.mb64.logp, mb.logp);
+        refill(&mut self.mb64.adv, mb.adv);
+        refill(&mut self.mb64.ret, mb.ret);
+        let (stats, grads) = self.net.loss_and_grad(&self.mb64, &self.hp, true);
+        let mut grads = grads.expect("want_grad = true always yields gradients");
+        self.opt.step(&mut self.net, &mut grads, lr as f64, self.max_grad_norm);
+        Ok(TrainStats {
+            loss: stats.loss as f32,
+            pg_loss: stats.pg_loss as f32,
+            v_loss: stats.v_loss as f32,
+            entropy: stats.entropy as f32,
+            approx_kl: stats.approx_kl as f32,
+        })
+    }
+
+    fn gae(
+        &mut self,
+        rewards: &[f32],
+        values: &[f32],
+        last_value: &[f32],
+        dones: &[f32],
+        truncs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (t, n) = (self.spec.num_steps, self.spec.num_envs);
+        Ok(crate::agent::gae::gae_ref(
+            rewards,
+            values,
+            last_value,
+            dones,
+            truncs,
+            t,
+            n,
+            self.spec.gamma,
+            self.spec.lam,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry;
+
+    fn native_cfg(env: &str) -> TrainConfig {
+        TrainConfig {
+            env_id: env.into(),
+            backend: BackendKind::Native,
+            num_envs: 4,
+            batch_size: 4,
+            num_steps: 16,
+            num_minibatches: 4,
+            ..TrainConfig::default()
+        }
+    }
+
+    fn mk_native(env: &str) -> NativeBackend {
+        let cfg = native_cfg(env);
+        let spec = registry::spec_for(env).unwrap();
+        NativeBackend::make(&cfg, &spec).unwrap()
+    }
+
+    #[test]
+    fn native_backend_shapes_discrete_and_continuous() {
+        let mut b = mk_native("CartPole-v1");
+        assert_eq!(b.kind(), "native");
+        assert_eq!(b.spec().act_dim, 2);
+        assert!(!b.spec().continuous);
+        assert_eq!(b.spec().minibatch_size, 16);
+        let out = b.forward(&[0.05; 4 * 4]).unwrap();
+        assert_eq!(out.dist.len(), 4 * 2);
+        assert_eq!(out.value.len(), 4);
+        assert!(out.log_std.is_empty());
+        assert!(b.param_count() > 4 * 64);
+        assert_eq!(b.params().numel(), b.param_count());
+
+        let mut c = mk_native("Pendulum-v1");
+        assert!(c.spec().continuous);
+        let out = c.forward(&[0.1; 4 * 3]).unwrap();
+        assert_eq!(out.dist.len(), 4);
+        assert_eq!(out.log_std.len(), 4);
+        assert!(out.log_std.iter().all(|&x| x == 0.0), "log_std init 0");
+    }
+
+    #[test]
+    fn native_train_minibatch_updates_parameters() {
+        let mut b = mk_native("CartPole-v1");
+        let before = b.params().values.clone();
+        let bsz = b.spec().minibatch_size;
+        let mut rng = crate::rng::Pcg32::new(1, 2);
+        let obs: Vec<f32> = (0..bsz * 4).map(|_| rng.range(-0.1, 0.1)).collect();
+        let actions: Vec<f32> = (0..bsz).map(|_| rng.below(2) as f32).collect();
+        let logp = vec![-0.6931f32; bsz];
+        let adv: Vec<f32> = (0..bsz).map(|_| rng.range(-1.0, 1.0)).collect();
+        let ret: Vec<f32> = (0..bsz).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mb = Minibatch { obs: &obs, actions: &actions, logp: &logp, adv: &adv, ret: &ret };
+        let stats = b.train_minibatch(&mb, 1e-3).unwrap();
+        assert!(stats.loss.is_finite());
+        assert!(stats.entropy > 0.0, "fresh policy must have entropy");
+        assert!(b.params().values != before, "parameters must move");
+    }
+
+    #[test]
+    fn native_gae_matches_reference() {
+        let mut b = mk_native("CartPole-v1");
+        let (t, n) = (b.spec().num_steps, b.spec().num_envs);
+        let mut rng = crate::rng::Pcg32::new(5, 5);
+        let rewards: Vec<f32> = (0..t * n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let values: Vec<f32> = (0..t * n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let last: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let dones: Vec<f32> = (0..t * n).map(|_| (rng.uniform() < 0.05) as u8 as f32).collect();
+        let truncs = vec![0.0; t * n];
+        let (adv, ret) = b.gae(&rewards, &values, &last, &dones, &truncs).unwrap();
+        let (adv2, ret2) = crate::agent::gae::gae_ref(
+            &rewards, &values, &last, &dones, &truncs, t, n, 0.99, 0.95,
+        );
+        assert_eq!(adv, adv2);
+        assert_eq!(ret, ret2);
+    }
+
+    #[test]
+    fn auto_falls_back_to_native_when_pjrt_unavailable() {
+        // With the vendored stub / no artifacts, `auto` must resolve to
+        // the native backend instead of erroring.
+        let mut cfg = native_cfg("CartPole-v1");
+        cfg.backend = BackendKind::Auto;
+        cfg.artifacts_dir = "definitely-not-an-artifacts-dir".into();
+        let spec = registry::spec_for("CartPole-v1").unwrap();
+        match make_backend(&cfg, &spec) {
+            Ok(b) => assert_eq!(b.kind(), "native"),
+            Err(e) => {
+                // Real bindings + real artifacts present: pjrt is fine too,
+                // but this artifacts_dir cannot exist.
+                panic!("auto must fall back to native, got error: {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_falls_back_when_artifacts_lack_this_task_config() {
+        // A real artifacts dir that was lowered for num_envs = 8 only:
+        // `auto` at num_envs = 16 must fall back to native (deterministic
+        // in both stub and real-bindings checkouts — `for_task` fails
+        // before any PJRT call), while `pjrt` must surface the error.
+        let dir = crate::runtime::artifact::testsupport::synth_artifacts_dir();
+        let mut cfg = native_cfg("CartPole-v1");
+        cfg.backend = BackendKind::Auto;
+        cfg.num_envs = 16;
+        cfg.batch_size = 16;
+        cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+        let spec = registry::spec_for("CartPole-v1").unwrap();
+        let b = make_backend(&cfg, &spec).unwrap();
+        assert_eq!(b.kind(), "native");
+        assert_eq!(b.spec().num_envs, 16);
+        cfg.backend = BackendKind::Pjrt;
+        assert!(matches!(make_backend(&cfg, &spec), Err(Error::Artifact(_))));
+    }
+
+    #[test]
+    fn explicit_pjrt_does_not_fall_back() {
+        let mut cfg = native_cfg("CartPole-v1");
+        cfg.backend = BackendKind::Pjrt;
+        cfg.artifacts_dir = "definitely-not-an-artifacts-dir".into();
+        let spec = registry::spec_for("CartPole-v1").unwrap();
+        assert!(
+            make_backend(&cfg, &spec).is_err(),
+            "--backend pjrt must surface the missing compute tier, not fall back"
+        );
+    }
+
+    #[test]
+    fn bad_minibatch_split_rejected() {
+        let mut cfg = native_cfg("CartPole-v1");
+        cfg.num_minibatches = 7; // 4*16 = 64 rows, not divisible
+        let spec = registry::spec_for("CartPole-v1").unwrap();
+        assert!(matches!(
+            NativeBackend::make(&cfg, &spec),
+            Err(Error::Config(_))
+        ));
+    }
+}

@@ -1,17 +1,28 @@
-//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! The compute tier: two interchangeable [`ComputeBackend`]s behind one
+//! trait ([`backend`]).
+//!
+//! **PJRT path** — load the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py` and execute them from the Rust hot path.
 //! Python never runs at request time — the flow is
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `PjRtClient::compile` → `execute`.
+//!
+//! **Native path** ([`native`]) — a pure-Rust MLP actor-critic, PPO
+//! losses with analytic backprop, and Adam, so `envpool train --backend
+//! native` runs with no XLA bindings and no artifacts at all.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod literal;
+pub mod native;
 pub mod policy;
 pub mod trainer_exec;
 
 pub use artifact::{ArtifactConfig, Manifest};
+pub use backend::{make_backend, BackendSpec, ComputeBackend, NativeBackend, PjrtBackend};
 pub use client::Runtime;
+pub use native::NativeNet;
 pub use policy::{Policy, PolicyOutput};
 pub use trainer_exec::{GaeExec, TrainExec, TrainStats};
 

@@ -1,0 +1,696 @@
+//! Pure-Rust compute core for the `native` backend: an MLP actor-critic
+//! (two Tanh hidden layers, discrete-logits or continuous mu/log_std
+//! heads plus a value head), PPO clipped-surrogate + value + entropy
+//! losses with **analytic backprop**, global-norm gradient clipping, and
+//! an Adam optimizer — no XLA, no artifacts, no allocation surprises.
+//!
+//! All internal math is `f64`: the backend is a fallback for laptops and
+//! CI, not a throughput record, and double precision makes the
+//! finite-difference gradient check in this module airtight (central
+//! differences at `eps = 1e-6` resolve ~1e-10, far below the test
+//! tolerance). The API boundary stays `f32` to match the PJRT backend.
+//!
+//! Parameter order mirrors the AOT artifact convention
+//! ([`crate::agent::params::actor_critic_meta`]): `w1, b1, w2, b2, wp,
+//! bp, [log_std,] wv, bv`, with `log_std` present only for continuous
+//! action spaces (state-independent, CleanRL-style).
+
+use crate::agent::params::{actor_critic_meta, ParamStore};
+use crate::runtime::artifact::ParamMeta;
+use crate::{Error, Result};
+
+/// Tensor indices into [`NativeNet::params`] (fixed by construction).
+const W1: usize = 0;
+const B1: usize = 1;
+const W2: usize = 2;
+const B2: usize = 3;
+const WP: usize = 4;
+const BP: usize = 5;
+/// `log_std` sits at 6 for continuous nets; `wv`/`bv` shift accordingly.
+const LOG_STD: usize = 6;
+
+const LN_2PI: f64 = 1.837_877_066_409_345_3;
+
+/// PPO loss hyperparameters consumed by [`NativeNet::loss_and_grad`].
+#[derive(Debug, Clone, Copy)]
+pub struct PpoHyper {
+    /// Clip coefficient epsilon.
+    pub clip_coef: f64,
+    /// Value loss coefficient c1.
+    pub vf_coef: f64,
+    /// Entropy bonus coefficient c2.
+    pub ent_coef: f64,
+    /// Normalize advantages per minibatch (CleanRL default).
+    pub norm_adv: bool,
+}
+
+/// Scalars of one loss evaluation (f64; the backend converts to
+/// [`crate::runtime::TrainStats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeStats {
+    pub loss: f64,
+    pub pg_loss: f64,
+    pub v_loss: f64,
+    pub entropy: f64,
+    pub approx_kl: f64,
+}
+
+/// One minibatch in f64 (the backend converts from the shared f32
+/// [`crate::runtime::trainer_exec::Minibatch`] views).
+pub struct MinibatchF64 {
+    /// `[B, obs_dim]`
+    pub obs: Vec<f64>,
+    /// Discrete: `[B]` action ids; continuous: `[B, act_dim]`.
+    pub actions: Vec<f64>,
+    /// `[B]` behaviour-policy log-probs.
+    pub logp: Vec<f64>,
+    /// `[B]` advantages (pre-normalization).
+    pub adv: Vec<f64>,
+    /// `[B]` returns.
+    pub ret: Vec<f64>,
+}
+
+/// Forward-pass activations cached for backprop.
+pub struct Forward {
+    /// `[B, hidden]` after the first Tanh.
+    pub h1: Vec<f64>,
+    /// `[B, hidden]` after the second Tanh.
+    pub h2: Vec<f64>,
+    /// `[B, act_dim]` logits (discrete) or mu (continuous).
+    pub dist: Vec<f64>,
+    /// `[B]` state values.
+    pub value: Vec<f64>,
+}
+
+/// The native MLP actor-critic.
+#[derive(Debug, Clone)]
+pub struct NativeNet {
+    pub obs_dim: usize,
+    /// Discrete action count or continuous action dimension.
+    pub act_dim: usize,
+    pub hidden: usize,
+    pub continuous: bool,
+    /// Parameter tensors in [`actor_critic_meta`] order, flat row-major.
+    pub params: Vec<Vec<f64>>,
+    /// Matching shape metadata (shared naming with the artifact path).
+    pub meta: Vec<ParamMeta>,
+}
+
+impl NativeNet {
+    /// Deterministic construction from `(seed)`: scaled-Gaussian init via
+    /// [`ParamStore::init_actor_critic`] (`Pcg32`-seeded), promoted to
+    /// f64.
+    pub fn new(
+        obs_dim: usize,
+        act_dim: usize,
+        hidden: usize,
+        continuous: bool,
+        seed: u64,
+    ) -> Result<NativeNet> {
+        if obs_dim == 0 || act_dim == 0 || hidden == 0 {
+            return Err(Error::Config(format!(
+                "native net dims must be > 0 (obs_dim {obs_dim}, act_dim {act_dim}, \
+                 hidden {hidden})"
+            )));
+        }
+        let store = ParamStore::init_actor_critic(obs_dim, act_dim, hidden, continuous, seed);
+        Ok(NativeNet::from_store(obs_dim, act_dim, hidden, continuous, &store))
+    }
+
+    /// Promote an f32 [`ParamStore`] (in [`actor_critic_meta`] order) to
+    /// the f64 working representation.
+    pub fn from_store(
+        obs_dim: usize,
+        act_dim: usize,
+        hidden: usize,
+        continuous: bool,
+        store: &ParamStore,
+    ) -> NativeNet {
+        debug_assert_eq!(store.meta, actor_critic_meta(obs_dim, act_dim, hidden, continuous));
+        let params = store
+            .values
+            .iter()
+            .map(|v| v.iter().map(|&x| x as f64).collect())
+            .collect();
+        NativeNet { obs_dim, act_dim, hidden, continuous, params, meta: store.meta.clone() }
+    }
+
+    /// Demote back to an f32 [`ParamStore`] (reporting/checkpointing).
+    pub fn to_store(&self) -> ParamStore {
+        ParamStore {
+            meta: self.meta.clone(),
+            values: self.params.iter().map(|v| v.iter().map(|&x| x as f32).collect()).collect(),
+        }
+    }
+
+    fn idx_wv(&self) -> usize {
+        if self.continuous {
+            LOG_STD + 1
+        } else {
+            LOG_STD
+        }
+    }
+
+    fn idx_bv(&self) -> usize {
+        self.idx_wv() + 1
+    }
+
+    /// Total parameter count.
+    pub fn numel(&self) -> usize {
+        self.meta.iter().map(|m| m.numel()).sum()
+    }
+
+    /// Zero tensors with the parameter shapes (grads / Adam moments).
+    pub fn zeros_like(&self) -> Vec<Vec<f64>> {
+        self.params.iter().map(|v| vec![0.0; v.len()]).collect()
+    }
+
+    /// Batched forward pass: `x` is `[bsz, obs_dim]` row-major.
+    pub fn forward(&self, x: &[f64], bsz: usize) -> Forward {
+        debug_assert_eq!(x.len(), bsz * self.obs_dim);
+        let h = self.hidden;
+        let a = self.act_dim;
+        let mut h1 = vec![0.0; bsz * h];
+        let mut h2 = vec![0.0; bsz * h];
+        let mut dist = vec![0.0; bsz * a];
+        let mut value = vec![0.0; bsz];
+        affine(x, &self.params[W1], &self.params[B1], &mut h1, bsz, self.obs_dim, h);
+        for v in h1.iter_mut() {
+            *v = v.tanh();
+        }
+        affine(&h1, &self.params[W2], &self.params[B2], &mut h2, bsz, h, h);
+        for v in h2.iter_mut() {
+            *v = v.tanh();
+        }
+        affine(&h2, &self.params[WP], &self.params[BP], &mut dist, bsz, h, a);
+        // value head: wv is [hidden, 1], so this is affine with d_out = 1
+        let (wv, bv) = (&self.params[self.idx_wv()], &self.params[self.idx_bv()]);
+        affine(&h2, wv, bv, &mut value, bsz, h, 1);
+        Forward { h1, h2, dist, value }
+    }
+
+    /// The per-sample log-std vector (continuous nets only; empty
+    /// otherwise) — state-independent, broadcast by the backend.
+    pub fn log_std(&self) -> &[f64] {
+        if self.continuous {
+            &self.params[LOG_STD]
+        } else {
+            &[]
+        }
+    }
+
+    /// Evaluate the PPO loss on one minibatch; when `want_grad`, also
+    /// return analytic gradients (same shapes as `params`, **unclipped**
+    /// — clipping happens in [`Adam::step`] so finite differences
+    /// compare against the raw derivative).
+    ///
+    /// Loss (CleanRL semantics): `L = pg - c2·H + c1·v`, with
+    /// `pg = mean(max(-Â·r, -Â·clip(r, 1±eps)))`,
+    /// `v = mean(0.5 (V - ret)²)`, `H` the mean policy entropy, and `Â`
+    /// the (optionally minibatch-normalized) advantages.
+    pub fn loss_and_grad(
+        &self,
+        mb: &MinibatchF64,
+        hp: &PpoHyper,
+        want_grad: bool,
+    ) -> (NativeStats, Option<Vec<Vec<f64>>>) {
+        let a = self.act_dim;
+        let h = self.hidden;
+        let bsz = mb.logp.len();
+        debug_assert_eq!(mb.obs.len(), bsz * self.obs_dim);
+        debug_assert_eq!(mb.actions.len(), if self.continuous { bsz * a } else { bsz });
+        let bf = bsz as f64;
+        let fwd = self.forward(&mb.obs, bsz);
+
+        // Advantage normalization is constant w.r.t. parameters.
+        let advn: Vec<f64> = if hp.norm_adv {
+            let mean = mb.adv.iter().sum::<f64>() / bf;
+            let var = mb.adv.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / bf;
+            let std = var.sqrt().max(1e-8);
+            mb.adv.iter().map(|x| (x - mean) / std).collect()
+        } else {
+            mb.adv.clone()
+        };
+
+        // dL/d dist-params and dL/d value, accumulated per sample.
+        let mut d_dist = vec![0.0; bsz * a];
+        let mut d_value = vec![0.0; bsz];
+        let mut d_log_std = vec![0.0; if self.continuous { a } else { 0 }];
+
+        let (mut pg_sum, mut ent_sum, mut v_sum, mut kl_sum) = (0.0, 0.0, 0.0, 0.0);
+        let mut p = vec![0.0; a]; // softmax scratch (discrete)
+        let mut zs = vec![0.0; a]; // z-score scratch (continuous)
+        for i in 0..bsz {
+            // ---- value head: c1 * 0.5 (V - ret)^2, meaned over batch ----
+            let dv = fwd.value[i] - mb.ret[i];
+            v_sum += 0.5 * dv * dv;
+            d_value[i] = hp.vf_coef * dv / bf;
+
+            // ---- new log-prob of the stored action ----
+            let (logp_new, entropy_i);
+            let mut lse = 0.0; // discrete log-sum-exp, reused by the grad pass
+            if self.continuous {
+                let mu = &fwd.dist[i * a..(i + 1) * a];
+                let acts = &mb.actions[i * a..(i + 1) * a];
+                let mut lp = 0.0;
+                let mut ent = 0.0;
+                for k in 0..a {
+                    let ls = self.params[LOG_STD][k];
+                    let z = (acts[k] - mu[k]) * (-ls).exp();
+                    zs[k] = z;
+                    lp += -0.5 * z * z - ls - 0.5 * LN_2PI;
+                    ent += ls + 0.5 * (1.0 + LN_2PI);
+                }
+                logp_new = lp;
+                entropy_i = ent;
+            } else {
+                let logits = &fwd.dist[i * a..(i + 1) * a];
+                let maxl = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mut z = 0.0;
+                for k in 0..a {
+                    p[k] = (logits[k] - maxl).exp();
+                    z += p[k];
+                }
+                lse = maxl + z.ln();
+                for v in p.iter_mut() {
+                    *v /= z;
+                }
+                let act = mb.actions[i] as usize;
+                debug_assert!(act < a, "action id {act} out of range");
+                logp_new = logits[act] - lse;
+                entropy_i = -(0..a).map(|k| p[k] * (logits[k] - lse)).sum::<f64>();
+            }
+            ent_sum += entropy_i;
+
+            // ---- clipped surrogate ----
+            let logratio = logp_new - mb.logp[i];
+            let ratio = logratio.exp();
+            kl_sum += (ratio - 1.0) - logratio;
+            let adv = advn[i];
+            let pg1 = -adv * ratio;
+            let pg2 = -adv * ratio.clamp(1.0 - hp.clip_coef, 1.0 + hp.clip_coef);
+            pg_sum += pg1.max(pg2);
+            // Gradient flows through `ratio` only on the unclipped branch
+            // (when the clipped branch wins strictly, the ratio sits
+            // outside the band and d clip/d ratio = 0).
+            let dpg_dratio = if pg1 >= pg2 { -adv } else { 0.0 };
+            // d ratio / d logp_new = ratio.
+            let dl_dlogp = dpg_dratio * ratio / bf;
+
+            // ---- distribute into head gradients ----
+            if self.continuous {
+                for k in 0..a {
+                    let ls = self.params[LOG_STD][k];
+                    // d logp / d mu_k = z / std
+                    d_dist[i * a + k] = dl_dlogp * zs[k] * (-ls).exp();
+                    // d logp / d log_std_k = z^2 - 1
+                    d_log_std[k] += dl_dlogp * (zs[k] * zs[k] - 1.0);
+                }
+            } else {
+                let logits = &fwd.dist[i * a..(i + 1) * a];
+                let act = mb.actions[i] as usize;
+                for k in 0..a {
+                    let logp_k = logits[k] - lse;
+                    let ind = if k == act { 1.0 } else { 0.0 };
+                    // policy-gradient term through logp(action)
+                    let mut g = dl_dlogp * (ind - p[k]);
+                    // entropy bonus: L += -c2 * mean(H);
+                    // dH/dlogit_k = -p_k (logp_k + H)
+                    g += hp.ent_coef / bf * p[k] * (logp_k + entropy_i);
+                    d_dist[i * a + k] = g;
+                }
+            }
+        }
+        // Continuous entropy is distribution-wide: H = sum_k log_std_k + c,
+        // so d(-c2·mean H)/d log_std_k = -c2.
+        if self.continuous {
+            for g in d_log_std.iter_mut() {
+                *g += -hp.ent_coef;
+            }
+        }
+
+        let stats = NativeStats {
+            pg_loss: pg_sum / bf,
+            v_loss: v_sum / bf,
+            entropy: ent_sum / bf,
+            approx_kl: kl_sum / bf,
+            loss: pg_sum / bf - hp.ent_coef * (ent_sum / bf) + hp.vf_coef * (v_sum / bf),
+        };
+        if !want_grad {
+            return (stats, None);
+        }
+
+        // ---- backprop through the trunk ----
+        let mut g = self.zeros_like();
+        // policy head: gwp[k,j] = sum_i h2[i,k] d_dist[i,j]
+        for i in 0..bsz {
+            let h2row = &fwd.h2[i * h..(i + 1) * h];
+            let drow = &d_dist[i * a..(i + 1) * a];
+            for k in 0..h {
+                let gk = &mut g[WP][k * a..(k + 1) * a];
+                for j in 0..a {
+                    gk[j] += h2row[k] * drow[j];
+                }
+            }
+            for j in 0..a {
+                g[BP][j] += drow[j];
+            }
+        }
+        // value head
+        let (iwv, ibv) = (self.idx_wv(), self.idx_bv());
+        for i in 0..bsz {
+            let h2row = &fwd.h2[i * h..(i + 1) * h];
+            for k in 0..h {
+                g[iwv][k] += h2row[k] * d_value[i];
+            }
+            g[ibv][0] += d_value[i];
+        }
+        if self.continuous {
+            g[LOG_STD].copy_from_slice(&d_log_std);
+        }
+        // dh2 = d_dist @ wp^T + d_value ⊗ wv, then through Tanh.
+        let mut dpre2 = vec![0.0; bsz * h];
+        let (wp, wv) = (&self.params[WP], &self.params[iwv]);
+        for i in 0..bsz {
+            let drow = &d_dist[i * a..(i + 1) * a];
+            let h2row = &fwd.h2[i * h..(i + 1) * h];
+            let out = &mut dpre2[i * h..(i + 1) * h];
+            for k in 0..h {
+                let mut acc = d_value[i] * wv[k];
+                let wrow = &wp[k * a..(k + 1) * a];
+                for j in 0..a {
+                    acc += drow[j] * wrow[j];
+                }
+                out[k] = acc * (1.0 - h2row[k] * h2row[k]);
+            }
+        }
+        // gw2[k,j] = sum_i h1[i,k] dpre2[i,j]; dh1 = dpre2 @ w2^T
+        let mut dpre1 = vec![0.0; bsz * h];
+        let w2 = &self.params[W2];
+        for i in 0..bsz {
+            let h1row = &fwd.h1[i * h..(i + 1) * h];
+            let drow = &dpre2[i * h..(i + 1) * h];
+            for k in 0..h {
+                let gk = &mut g[W2][k * h..(k + 1) * h];
+                for j in 0..h {
+                    gk[j] += h1row[k] * drow[j];
+                }
+            }
+            for j in 0..h {
+                g[B2][j] += drow[j];
+            }
+            let out = &mut dpre1[i * h..(i + 1) * h];
+            for k in 0..h {
+                let mut acc = 0.0;
+                let wrow = &w2[k * h..(k + 1) * h];
+                for j in 0..h {
+                    acc += drow[j] * wrow[j];
+                }
+                out[k] = acc * (1.0 - h1row[k] * h1row[k]);
+            }
+        }
+        // gw1[d,j] = sum_i x[i,d] dpre1[i,j]
+        let d_in = self.obs_dim;
+        for i in 0..bsz {
+            let xrow = &mb.obs[i * d_in..(i + 1) * d_in];
+            let drow = &dpre1[i * h..(i + 1) * h];
+            for k in 0..d_in {
+                let gk = &mut g[W1][k * h..(k + 1) * h];
+                for j in 0..h {
+                    gk[j] += xrow[k] * drow[j];
+                }
+            }
+            for j in 0..h {
+                g[B1][j] += drow[j];
+            }
+        }
+        (stats, Some(g))
+    }
+}
+
+/// `out[i,j] = b[j] + sum_k x[i,k] w[k,j]` (row-major everywhere).
+#[allow(clippy::too_many_arguments)]
+fn affine(
+    x: &[f64],
+    w: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+    bsz: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    debug_assert_eq!(w.len(), d_in * d_out);
+    for i in 0..bsz {
+        let orow = &mut out[i * d_out..(i + 1) * d_out];
+        orow.copy_from_slice(b);
+        let xrow = &x[i * d_in..(i + 1) * d_in];
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * d_out..(k + 1) * d_out];
+            for j in 0..d_out {
+                orow[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+/// Global-norm gradient clipping (in place); returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Vec<f64>], max_norm: f64) -> f64 {
+    let sq: f64 = grads.iter().flat_map(|g| g.iter()).map(|x| x * x).sum();
+    let norm = sq.sqrt();
+    if max_norm > 0.0 && norm > max_norm {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+    norm
+}
+
+/// Adam optimizer state (bias-corrected; CleanRL's `eps = 1e-5`).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub m: Vec<Vec<f64>>,
+    pub v: Vec<Vec<f64>>,
+    pub t: u64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+impl Adam {
+    pub fn new(net: &NativeNet) -> Adam {
+        Adam { m: net.zeros_like(), v: net.zeros_like(), t: 0, beta1: 0.9, beta2: 0.999, eps: 1e-5 }
+    }
+
+    /// One update: clip `grads` to `max_grad_norm`, then apply Adam with
+    /// learning rate `lr` to `net.params` in place.
+    pub fn step(
+        &mut self,
+        net: &mut NativeNet,
+        grads: &mut [Vec<f64>],
+        lr: f64,
+        max_grad_norm: f64,
+    ) {
+        clip_global_norm(grads, max_grad_norm);
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for ti in 0..net.params.len() {
+            let (m, v) = (&mut self.m[ti], &mut self.v[ti]);
+            let p = &mut net.params[ti];
+            let g = &grads[ti];
+            for k in 0..p.len() {
+                m[k] = self.beta1 * m[k] + (1.0 - self.beta1) * g[k];
+                v[k] = self.beta2 * v[k] + (1.0 - self.beta2) * g[k] * g[k];
+                let mhat = m[k] / bc1;
+                let vhat = v[k] / bc2;
+                p[k] -= lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::sampler;
+    use crate::rng::Pcg32;
+
+    fn hyper() -> PpoHyper {
+        PpoHyper { clip_coef: 0.2, vf_coef: 0.5, ent_coef: 0.01, norm_adv: true }
+    }
+
+    /// A synthetic minibatch whose `logp_old` is the net's own log-prob
+    /// plus noise, so ratios land on both sides of the clip band without
+    /// sitting exactly on a kink.
+    fn synth_minibatch(net: &NativeNet, bsz: usize, seed: u64) -> MinibatchF64 {
+        let mut rng = Pcg32::new(seed, 77);
+        let a = net.act_dim;
+        let obs: Vec<f64> =
+            (0..bsz * net.obs_dim).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        let fwd = net.forward(&obs, bsz);
+        let mut actions = Vec::new();
+        let mut logp = Vec::new();
+        for i in 0..bsz {
+            if net.continuous {
+                let mut lp = 0.0;
+                for k in 0..a {
+                    let ls = net.params[LOG_STD][k];
+                    let act = fwd.dist[i * a + k] + rng.range(-1.0, 1.0) as f64;
+                    let z = (act - fwd.dist[i * a + k]) * (-ls).exp();
+                    lp += -0.5 * z * z - ls - 0.5 * LN_2PI;
+                    actions.push(act);
+                }
+                logp.push(lp + rng.range(-0.3, 0.3) as f64);
+            } else {
+                let logits = &fwd.dist[i * a..(i + 1) * a];
+                let act = rng.below(a as u32) as usize;
+                let maxl = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let lse = maxl + logits.iter().map(|l| (l - maxl).exp()).sum::<f64>().ln();
+                actions.push(act as f64);
+                logp.push(logits[act] - lse + rng.range(-0.3, 0.3) as f64);
+            }
+        }
+        let adv: Vec<f64> = (0..bsz).map(|_| rng.range(-2.0, 2.0) as f64).collect();
+        let ret: Vec<f64> = (0..bsz).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        MinibatchF64 { obs, actions, logp, adv, ret }
+    }
+
+    /// Central finite differences against the analytic gradient, for a
+    /// spread of indices in **every** tensor (trunk, policy head, value
+    /// head, and log_std when present).
+    fn finite_difference_check(net: &NativeNet, mb: &MinibatchF64) {
+        let hp = hyper();
+        let (_, grads) = net.loss_and_grad(mb, &hp, true);
+        let grads = grads.unwrap();
+        let eps = 1e-6;
+        for ti in 0..net.params.len() {
+            let len = net.params[ti].len();
+            let stride = (len / 5).max(1);
+            for k in (0..len).step_by(stride) {
+                let mut plus = net.clone();
+                plus.params[ti][k] += eps;
+                let mut minus = net.clone();
+                minus.params[ti][k] -= eps;
+                let lp = plus.loss_and_grad(mb, &hp, false).0.loss;
+                let lm = minus.loss_and_grad(mb, &hp, false).0.loss;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[ti][k];
+                let tol = 1e-6 + 1e-5 * fd.abs().max(an.abs());
+                assert!(
+                    (fd - an).abs() <= tol,
+                    "tensor {} ({}) index {k}: finite-diff {fd:.9} vs analytic {an:.9}",
+                    ti,
+                    net.meta[ti].name,
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn finite_difference_gradients_discrete() {
+        let net = NativeNet::new(5, 3, 8, false, 11).unwrap();
+        let mb = synth_minibatch(&net, 12, 21);
+        finite_difference_check(&net, &mb);
+    }
+
+    #[test]
+    fn finite_difference_gradients_continuous() {
+        let net = NativeNet::new(4, 2, 8, true, 13).unwrap();
+        let mb = synth_minibatch(&net, 12, 23);
+        finite_difference_check(&net, &mb);
+    }
+
+    #[test]
+    fn entropy_matches_f32_reference_samplers() {
+        // Cross-check the in-loss entropy against the f32 reference
+        // helpers the rollout path uses.
+        let net = NativeNet::new(4, 3, 8, false, 5).unwrap();
+        let mb = synth_minibatch(&net, 6, 9);
+        let (stats, _) = net.loss_and_grad(&mb, &hyper(), false);
+        let fwd = net.forward(&mb.obs, 6);
+        let mut ref_ent = 0.0f32;
+        for i in 0..6 {
+            let row: Vec<f32> = fwd.dist[i * 3..(i + 1) * 3].iter().map(|&x| x as f32).collect();
+            ref_ent += sampler::categorical_entropy(&row);
+        }
+        assert!((stats.entropy - (ref_ent / 6.0) as f64).abs() < 1e-4);
+
+        let netc = NativeNet::new(3, 2, 8, true, 6).unwrap();
+        let mbc = synth_minibatch(&netc, 6, 10);
+        let (statsc, _) = netc.loss_and_grad(&mbc, &hyper(), false);
+        let ls: Vec<f32> = netc.log_std().iter().map(|&x| x as f32).collect();
+        let want = sampler::gaussian_entropy(&ls);
+        assert!((statsc.entropy - want as f64).abs() < 1e-4);
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_rowwise() {
+        let net = NativeNet::new(4, 2, 16, false, 42).unwrap();
+        let net2 = NativeNet::new(4, 2, 16, false, 42).unwrap();
+        let obs: Vec<f64> = (0..8 * 4).map(|i| ((i % 4) as f64) * 0.1).collect();
+        let (fa, fb) = (net.forward(&obs, 8), net2.forward(&obs, 8));
+        assert_eq!(fa.dist, fb.dist, "same seed => same init => same forward");
+        // identical rows => identical outputs
+        for i in 1..8 {
+            assert_eq!(fa.dist[0], fa.dist[i * 2]);
+            assert_eq!(fa.value[0], fa.value[i]);
+        }
+        // different seed => different params
+        let net3 = NativeNet::new(4, 2, 16, false, 43).unwrap();
+        assert_ne!(net3.forward(&obs, 8).dist, fa.dist);
+    }
+
+    #[test]
+    fn adam_step_moves_params_toward_lower_loss() {
+        let mut net = NativeNet::new(4, 2, 8, false, 3).unwrap();
+        let mb = synth_minibatch(&net, 16, 4);
+        let hp = hyper();
+        let mut opt = Adam::new(&net);
+        let before = net.loss_and_grad(&mb, &hp, false).0.loss;
+        for _ in 0..25 {
+            let (_, g) = net.loss_and_grad(&mb, &hp, true);
+            opt.step(&mut net, &mut g.unwrap(), 1e-2, 0.5);
+        }
+        let after = net.loss_and_grad(&mb, &hp, false).0.loss;
+        assert!(after < before, "25 Adam steps must reduce the loss: {before} -> {after}");
+        assert_eq!(opt.t, 25);
+        assert!(opt.m.iter().flat_map(|m| m.iter()).any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn clip_global_norm_bounds_and_preserves_direction() {
+        let mut g = vec![vec![3.0, 4.0], vec![0.0]];
+        let norm = clip_global_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-12);
+        assert!((g[0][0] - 0.6).abs() < 1e-12);
+        assert!((g[0][1] - 0.8).abs() < 1e-12);
+        // under the bound: untouched
+        let mut g2 = vec![vec![0.3]];
+        let n2 = clip_global_norm(&mut g2, 1.0);
+        assert!((n2 - 0.3).abs() < 1e-12);
+        assert_eq!(g2[0][0], 0.3);
+    }
+
+    #[test]
+    fn zero_dims_rejected() {
+        assert!(NativeNet::new(0, 2, 8, false, 0).is_err());
+        assert!(NativeNet::new(4, 0, 8, false, 0).is_err());
+        assert!(NativeNet::new(4, 2, 0, false, 0).is_err());
+    }
+
+    #[test]
+    fn store_roundtrip_preserves_shapes() {
+        let net = NativeNet::new(6, 3, 8, true, 9).unwrap();
+        let store = net.to_store();
+        assert_eq!(store.numel(), net.numel());
+        let back = NativeNet::from_store(6, 3, 8, true, &store);
+        assert_eq!(back.params.len(), net.params.len());
+        assert!(store.meta.iter().any(|m| m.name == "log_std"));
+    }
+}

@@ -4,8 +4,12 @@
 //! and `Drop`-counting payloads proving that dropping a partially full
 //! queue neither leaks nor double-drops items.
 
+use envpool::envs::registry;
 use envpool::pool::action_queue::ActionBufferQueue;
+use envpool::pool::chunked::{Chunk, ChunkedThreadPool};
 use envpool::pool::state_queue::StateBufferQueue;
+use envpool::pool::{EnvPool, ExecMode, PoolConfig};
+use envpool::Error;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
@@ -218,6 +222,79 @@ fn state_queue_mpmc_blocks_are_never_torn_across_many_rounds() {
         h.join().unwrap();
     }
     assert_eq!(seen.len(), (writers as u32 * per_writer) as usize);
+}
+
+#[test]
+fn chunked_pool_clamps_surplus_workers_to_chunk_count() {
+    // Regression: K = ceil(N/threads) can yield fewer chunks than
+    // requested workers; surplus workers must not be spawned (they would
+    // sit pinned and idle forever).
+    let n = 3;
+    let chunk_size = 1; // 3 chunks
+    let states = Arc::new(StateBufferQueue::new(n, n, 4));
+    let chunks: Vec<Chunk> = (0..n)
+        .map(|c| {
+            let envs = registry::make_vec_env("CartPole-v1", 9, c as u64, chunk_size).unwrap();
+            Chunk::new(envs, c as u32, 1)
+        })
+        .collect();
+    let mut pool = ChunkedThreadPool::spawn(16, chunks, states.clone(), chunk_size, 1, false);
+    assert_eq!(pool.num_threads(), 3, "16 requested workers over 3 chunks");
+    assert_eq!(pool.num_chunks(), 3);
+    pool.schedule_reset_all();
+    let mut out = states.make_output();
+    states.recv_into(&mut out);
+    assert_eq!(out.len(), n);
+    for _ in 0..20 {
+        let ids = out.env_ids.clone();
+        pool.send_actions(&vec![1.0f32; n], &ids);
+        states.recv_into(&mut out);
+        assert!(out.obs.iter().all(|x| x.is_finite()));
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn vectorized_pool_with_fewer_envs_than_threads_round_trips() {
+    // End-to-end flavor of the clamp: num_envs < num_threads must build
+    // a working pool (one chunk per env, no empty chunks) and serve
+    // every env.
+    let cfg = PoolConfig::new("CartPole-v1")
+        .num_envs(3)
+        .batch_size(3)
+        .num_threads(8)
+        .seed(5)
+        .exec_mode(ExecMode::Vectorized);
+    let mut pool = EnvPool::make(cfg).unwrap();
+    let mut out = pool.make_output();
+    pool.reset_into(&mut out).unwrap();
+    assert_eq!(out.len(), 3);
+    let mut ids: Vec<u32> = out.env_ids.clone();
+    ids.sort();
+    assert_eq!(ids, vec![0, 1, 2]);
+    for step in 0..40 {
+        let ids = out.env_ids.clone();
+        let actions: Vec<f32> = ids.iter().map(|&i| ((step + i as usize) % 2) as f32).collect();
+        pool.step_into(&actions, &ids, &mut out).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.obs.iter().all(|x| x.is_finite()));
+    }
+    assert_eq!(pool.total_steps(), 40 * 3);
+}
+
+#[test]
+fn zero_envs_is_a_config_error_not_a_panic() {
+    for mode in [ExecMode::Scalar, ExecMode::Vectorized] {
+        match EnvPool::make(PoolConfig::new("CartPole-v1").num_envs(0).exec_mode(mode)) {
+            Err(Error::Config(msg)) => assert!(msg.contains("num_envs"), "{msg}"),
+            other => panic!("{mode:?}: expected Config error, got {:?}", other.map(|_| ())),
+        }
+    }
+    // The vectorized kernel layer rejects zero-lane batches directly too.
+    assert!(matches!(
+        registry::make_vec_env("CartPole-v1", 0, 0, 0),
+        Err(Error::Config(_))
+    ));
 }
 
 #[test]

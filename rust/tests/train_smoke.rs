@@ -1,14 +1,13 @@
-//! Integration: the full three-layer stack trains end to end — including
-//! through the subprocess executor (real worker processes) and through
-//! the Pallas-lowered artifact variant.
+//! Integration: the full stack trains end to end.
 //!
-//! The compute tier (PJRT runtime + AOT artifacts) is optional in this
-//! checkout: the `xla` dependency may be the vendored stub and
-//! `make artifacts` may not have run. Every test here skips cleanly in
-//! that case — the pure-Rust tiers have their own suites.
+//! Since the native compute backend (`--backend native`) exists, the
+//! trainer path runs **for real** in every checkout — no PJRT, no
+//! artifacts needed — so these tests execute instead of skipping. Only
+//! the PJRT-specific artifact-parity test still skips when the compute
+//! tier is the vendored stub (`compute_or_skip!`).
 
 use envpool::compute_or_skip;
-use envpool::config::{ExecutorKind, TrainConfig};
+use envpool::config::{BackendKind, ExecutorKind, TrainConfig};
 use envpool::coordinator::ppo;
 use envpool::runtime::{Manifest, Policy, Runtime};
 
@@ -17,18 +16,26 @@ fn set_worker_bin() {
     std::env::set_var("ENVPOOL_WORKER_BIN", env!("CARGO_BIN_EXE_envpool"));
 }
 
+fn native_cfg(env: &str, executor: ExecutorKind, steps: u64) -> TrainConfig {
+    TrainConfig {
+        env_id: env.into(),
+        executor,
+        backend: BackendKind::Native,
+        num_envs: 8,
+        batch_size: 8,
+        num_threads: 2,
+        num_steps: 64,
+        total_steps: steps,
+        ..TrainConfig::default()
+    }
+}
+
 #[test]
 fn subprocess_executor_trains() {
     set_worker_bin();
-    let cfg = TrainConfig {
-        env_id: "CartPole-v1".into(),
-        executor: ExecutorKind::Subprocess,
-        num_envs: 8,
-        batch_size: 8,
-        total_steps: 1024,
-        ..TrainConfig::default()
-    };
-    let s = compute_or_skip!(ppo::train(&cfg));
+    let cfg = native_cfg("CartPole-v1", ExecutorKind::Subprocess, 1024);
+    let s = ppo::train(&cfg).unwrap();
+    assert_eq!(s.backend, "native");
     assert_eq!(s.env_steps, 1024);
     assert!(s.episodes > 0);
 }
@@ -37,19 +44,65 @@ fn subprocess_executor_trains() {
 fn vectorized_pool_executor_trains_identically_to_scalar() {
     // ExecMode is an execution detail: training through the chunked SoA
     // backend must reproduce the scalar pool's run exactly.
-    let mk = |executor: ExecutorKind| TrainConfig {
-        env_id: "CartPole-v1".into(),
-        executor,
-        num_envs: 8,
-        batch_size: 8,
-        num_threads: 2,
-        total_steps: 1024,
-        ..TrainConfig::default()
-    };
-    let a = compute_or_skip!(ppo::train(&mk(ExecutorKind::EnvPoolSync)));
-    let b = compute_or_skip!(ppo::train(&mk(ExecutorKind::EnvPoolSyncVec)));
+    let a = ppo::train(&native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 1024)).unwrap();
+    let b = ppo::train(&native_cfg("CartPole-v1", ExecutorKind::EnvPoolSyncVec, 1024)).unwrap();
     assert_eq!(a.episodes, b.episodes);
     assert_eq!(a.final_return, b.final_return);
+}
+
+#[test]
+fn native_training_is_deterministic() {
+    // Pcg32-seeded init + sampling + f64 math: the same config must
+    // reproduce the same run bit for bit.
+    let mk = || native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 4 * 8 * 64);
+    let a = ppo::train(&mk()).unwrap();
+    let b = ppo::train(&mk()).unwrap();
+    assert_eq!(a.episodes, b.episodes);
+    assert_eq!(a.final_return, b.final_return);
+    assert_eq!(a.best_return, b.best_return);
+}
+
+#[test]
+fn continuous_pendulum_trains_natively() {
+    let mut cfg = native_cfg("Pendulum-v1", ExecutorKind::EnvPoolSync, 2 * 8 * 64);
+    cfg.seed = 2;
+    let s = ppo::train(&cfg).unwrap();
+    assert_eq!(s.iterations, 2);
+    assert!(s.final_return.is_finite());
+}
+
+#[test]
+fn default_auto_backend_trains_with_whatever_tier_is_present() {
+    // Keeps the PJRT train path covered where it exists: with the default
+    // artifacts dir, `auto` resolves to pjrt in artifact-equipped
+    // checkouts (exercising PjrtBackend through the full trainer loop)
+    // and to native under the vendored stub — either way the run must
+    // complete and say which tier it used.
+    // (num_steps only binds the native schedule — PjrtBackend takes its
+    // rollout shape from the artifact manifest.)
+    let mut cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 1024);
+    cfg.backend = BackendKind::Auto;
+    let s = ppo::train(&cfg).unwrap();
+    assert!(s.backend == "pjrt" || s.backend == "native", "unknown backend {}", s.backend);
+    assert!(s.env_steps > 0);
+    assert!(s.final_return.is_finite());
+}
+
+#[test]
+fn auto_backend_falls_back_to_native_without_artifacts() {
+    let mut cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 1024);
+    cfg.backend = BackendKind::Auto;
+    cfg.artifacts_dir = "definitely-not-an-artifacts-dir".into();
+    let s = ppo::train(&cfg).unwrap();
+    assert_eq!(s.backend, "native", "auto must fall back when PJRT is unavailable");
+}
+
+#[test]
+fn explicit_pjrt_backend_surfaces_missing_compute_tier() {
+    let mut cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 1024);
+    cfg.backend = BackendKind::Pjrt;
+    cfg.artifacts_dir = "definitely-not-an-artifacts-dir".into();
+    assert!(ppo::train(&cfg).is_err(), "--backend pjrt must not silently fall back");
 }
 
 #[test]
@@ -78,22 +131,38 @@ fn pallas_artifact_policy_matches_jnp_artifact() {
 fn learning_signal_appears_quickly_on_cartpole() {
     // 40 iterations of PPO must lift the trailing mean return well above
     // the random-policy baseline (~20-25 for CartPole under PPO's inits).
-    let cfg = TrainConfig {
-        env_id: "CartPole-v1".into(),
-        executor: ExecutorKind::EnvPoolSync,
-        num_envs: 8,
-        batch_size: 8,
-        num_threads: 2,
-        total_steps: 40 * 8 * 128,
-        learning_rate: 2.5e-3,
-        seed: 3,
-        ..TrainConfig::default()
-    };
-    let s = compute_or_skip!(ppo::train(&cfg));
+    let mut cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 40 * 8 * 64);
+    cfg.learning_rate = 2.5e-3;
+    cfg.clip_coef = 0.2;
+    cfg.seed = 3;
+    let s = ppo::train(&cfg).unwrap();
     let early = s.curve[1].mean_return;
     assert!(
         s.best_return > early * 1.5 && s.best_return > 45.0,
         "no learning signal: early {early}, best {}",
         s.best_return
+    );
+}
+
+#[test]
+fn native_backend_solves_cartpole() {
+    // The acceptance smoke: a seeded native-backend run must reach a
+    // trailing mean return of >= 475 (the gym "solved" bar) within a
+    // bounded step budget. target_return stops the run as soon as the
+    // bar is cleared, so the happy path costs a fraction of the budget.
+    let mut cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 0);
+    cfg.num_steps = 128;
+    cfg.total_steps = 400 * 8 * 128; // 409.6k-step budget at T=128
+    cfg.learning_rate = 2.5e-3;
+    cfg.clip_coef = 0.2;
+    cfg.seed = 1;
+    cfg.target_return = Some(475.0);
+    let s = ppo::train(&cfg).unwrap();
+    assert!(
+        s.best_return >= 475.0,
+        "native PPO must solve CartPole within {} steps; best window {} after {} iterations",
+        cfg.total_steps,
+        s.best_return,
+        s.iterations
     );
 }

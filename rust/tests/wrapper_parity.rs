@@ -129,7 +129,12 @@ fn full_wrapper_stack_agrees_across_modes_on_every_family() {
     // The whole stack at once, on one task per env family (classic,
     // walker, dm_control) — Atari is covered (unwrapped) by
     // vector_parity; wrapped Atari is exercised in the pool unit tests.
-    let wrap = WrapConfig { time_limit: Some(9), reward_clip: true, normalize_obs: true };
+    let wrap = WrapConfig {
+        time_limit: Some(9),
+        reward_clip: true,
+        normalize_obs: true,
+        ..WrapConfig::none()
+    };
     for task in ["CartPole-v1", "Hopper-v4", "cheetah_run"] {
         let a = run(task, wrap.clone(), ExecMode::Scalar, 25, 19);
         let b = run(task, wrap.clone(), ExecMode::Vectorized, 25, 19);
