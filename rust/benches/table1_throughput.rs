@@ -13,6 +13,10 @@ fn main() {
     let n = 3 * threads;
 
     println!("== Table 1: simulation throughput (frames/s incl. frameskip) ==");
+    println!(
+        "(vectorized rows use the SIMD lane pass; auto lane width = {} on this machine)",
+        envpool::simd::LanePass::Auto.width()
+    );
     // CartPole rides along to cover the cheap-env regime where the
     // chunked SoA backend (the `*-vec` rows) is the differentiator.
     for task in ["Pong-v5", "Ant-v4", "CartPole-v1"] {

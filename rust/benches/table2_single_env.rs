@@ -5,8 +5,9 @@
 //! while the subprocess transport (the Python stand-in) pays heavily.
 
 use envpool::bench_util::Bencher;
-use envpool::coordinator::throughput::{frame_multiplier, run_throughput};
+use envpool::coordinator::throughput::{frame_multiplier, run_throughput, run_throughput_lanes};
 use envpool::metrics::table::{fmt_fps, Table};
+use envpool::simd::LanePass;
 
 fn main() {
     let b = Bencher::from_env();
@@ -80,6 +81,61 @@ fn main() {
             "acceptance gate failed: envpool-sync vectorized/scalar = {gate_ratio:.2}x < 1.5x"
         );
         println!("acceptance gate OK: envpool-sync vectorized/scalar = {gate_ratio:.2}x");
+    }
+
+    // Table 2d — the SIMD lane pass: scalar-SoA (lane width 1, the
+    // pre-SIMD kernel) vs forced widths 4 and 8 on CartPole, through
+    // the bare vectorized executor (isolates the kernel from pool
+    // dispatch; N large enough that kernel time dominates) and through
+    // the vectorized pool (the deployed configuration). All widths are
+    // bitwise identical (tests/simd_parity.rs), so this is a pure
+    // throughput comparison. Acceptance gate: best SIMD width >= 1.5x
+    // scalar-SoA on the bare executor.
+    let simd_steps: u64 = if quick { 16_000 } else { 2_000_000 };
+    let sn = 256usize;
+    println!("== Table 2d: CartPole SoA kernel (N={sn}) SIMD lane pass env-steps/s ==");
+    let mut t4 = Table::new(["Executor", "W=1 (scalar-SoA)", "W=4", "W=8", "best/W1"]);
+    let mut simd_gate = f64::NAN;
+    let auto_w = LanePass::Auto.width();
+    println!("(auto lane width resolves to {auto_w} on this machine)");
+    for (label, kind, n, threads) in [
+        ("forloop-vec", "forloop-vec", sn, 1usize),
+        ("envpool-sync-vec", "envpool-sync-vec", sn, 2),
+    ] {
+        let mut fps = [0.0f64; 3];
+        for (i, lp) in [LanePass::Scalar, LanePass::Width4, LanePass::Width8]
+            .into_iter()
+            .enumerate()
+        {
+            b.run(&format!("table2d/cartpole/{label}/w{}", lp.width()), simd_steps as f64, || {
+                let f = run_throughput_lanes(
+                    "CartPole-v1", kind, n, n, threads, simd_steps, 0, lp,
+                )
+                .unwrap();
+                fps[i] = fps[i].max(f);
+            });
+        }
+        let best = fps[1].max(fps[2]);
+        if label == "forloop-vec" {
+            simd_gate = best / fps[0];
+        }
+        t4.row([
+            label.to_string(),
+            fmt_fps(fps[0]),
+            fmt_fps(fps[1]),
+            fmt_fps(fps[2]),
+            format!("{:.2}x", best / fps[0]),
+        ]);
+    }
+    println!("{}", t4.render());
+    if quick {
+        println!("(quick mode: skipping the SIMD 1.5x acceptance assertion)");
+    } else {
+        assert!(
+            simd_gate >= 1.5,
+            "acceptance gate failed: CartPole SIMD/scalar-SoA = {simd_gate:.2}x < 1.5x"
+        );
+        println!("acceptance gate OK: CartPole SIMD/scalar-SoA = {simd_gate:.2}x");
     }
 
     // Walker regime: the SoA kernel reuses the scalar solver per lane

@@ -4,7 +4,7 @@
 //! is explicit and validated.
 
 mod train;
-pub use train::{BackendKind, ExecutorKind, TrainConfig};
+pub use train::{BackendKind, ExecutorKind, Precision, TrainConfig};
 
 use crate::{Error, Result};
 use std::collections::BTreeMap;

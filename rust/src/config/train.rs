@@ -126,6 +126,46 @@ impl std::fmt::Display for BackendKind {
     }
 }
 
+/// Arithmetic precision of the **native** compute backend
+/// (`--precision {f64,f32}`). `f64` is the scalar reference path
+/// (finite-difference-provable, the default); `f32` is the SIMD GEMV
+/// fast path — f32 compute weights mirrored from f64 master weights,
+/// guarded by the f32-vs-f64 agreement and FD tests in
+/// `runtime::native`. The PJRT backend is f32 by construction and
+/// ignores this knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// f64 scalar reference loops (default).
+    #[default]
+    F64,
+    /// f32 compute + SIMD lane passes, f64 master weights.
+    F32,
+}
+
+impl std::str::FromStr for Precision {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f64" | "double" => Precision::F64,
+            "f32" | "single" => Precision::F32,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown precision {other:?} (expected f64|f32)"
+                )))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        })
+    }
+}
+
 /// PPO hyperparameters + system knobs. Defaults follow the original PPO
 /// paper / CleanRL (paper Appendix F Table 3).
 #[derive(Debug, Clone)]
@@ -185,6 +225,20 @@ pub struct TrainConfig {
     pub normalize_obs_shared: bool,
     /// Compute backend for policy/update/GAE (`--backend`).
     pub backend: BackendKind,
+    /// Native-backend arithmetic (`--precision {f64,f32}`; see
+    /// [`Precision`]).
+    pub precision: Precision,
+    /// SIMD lane width for the SoA env kernels (`--lane-width
+    /// {1,4,8,auto}`; every width is bitwise identical — see
+    /// [`crate::simd::LanePass`]). Applied by the vectorized pool
+    /// engine and the vectorized baseline executors.
+    pub lane_pass: crate::simd::LanePass,
+    /// Greedy-evaluation episodes to run after training
+    /// (`--eval-episodes`; 0 = skip). Runs on whichever compute
+    /// backend trained, PJRT or native, against **bare** envs —
+    /// rejected in combination with observation normalization (the
+    /// policy would see out-of-distribution inputs).
+    pub eval_episodes: usize,
     /// Stop training once the trailing mean return reaches this value
     /// (`--target-return`); `None` runs the full step budget.
     pub target_return: Option<f32>,
@@ -216,6 +270,9 @@ impl Default for TrainConfig {
             normalize_obs: false,
             normalize_obs_shared: false,
             backend: BackendKind::Auto,
+            precision: Precision::default(),
+            lane_pass: crate::simd::LanePass::Auto,
+            eval_episodes: 0,
             target_return: None,
             artifacts_dir: "artifacts".into(),
         }
@@ -251,6 +308,13 @@ impl TrainConfig {
         if let Some(b) = f.values.get("backend") {
             self.backend = b.parse()?;
         }
+        if let Some(pr) = f.values.get("precision") {
+            self.precision = pr.parse()?;
+        }
+        if let Some(lw) = f.values.get("lane_width") {
+            self.lane_pass = lw.parse()?;
+        }
+        self.eval_episodes = f.parse_or("eval_episodes", self.eval_episodes)?;
         if let Some(t) = f.values.get("target_return") {
             self.target_return = Some(
                 t.parse()
@@ -286,6 +350,13 @@ impl TrainConfig {
         if let Some(b) = a.opt("backend") {
             self.backend = b.parse()?;
         }
+        if let Some(pr) = a.opt("precision") {
+            self.precision = pr.parse()?;
+        }
+        if let Some(lw) = a.opt("lane-width") {
+            self.lane_pass = lw.parse()?;
+        }
+        self.eval_episodes = a.parse_or("eval-episodes", self.eval_episodes);
         if a.flag("normalize-obs") {
             self.normalize_obs = true;
         }
@@ -319,6 +390,14 @@ impl TrainConfig {
             return Err(Error::Config(
                 "normalize_obs and normalize_obs_shared are mutually exclusive \
                  (per-lane vs pooled statistics)"
+                    .into(),
+            ));
+        }
+        if self.eval_episodes > 0 && (self.normalize_obs || self.normalize_obs_shared) {
+            return Err(Error::Config(
+                "eval_episodes runs greedy evaluation on bare (unwrapped) environments, \
+                 so a policy trained on normalized observations would be evaluated \
+                 out-of-distribution; drop --eval-episodes or the normalization flag"
                     .into(),
             ));
         }
@@ -440,6 +519,57 @@ mod tests {
         c2.apply_file(&f).unwrap();
         assert_eq!(c2.backend, BackendKind::Pjrt);
         assert_eq!(c2.target_return, Some(200.0));
+    }
+
+    #[test]
+    fn precision_and_lane_width_parse_and_plumb() {
+        use crate::simd::LanePass;
+        for s in ["f64", "f32"] {
+            let pr: Precision = s.parse().unwrap();
+            assert_eq!(pr.to_string(), s);
+        }
+        assert!("f16".parse::<Precision>().is_err());
+        assert_eq!(TrainConfig::default().precision, Precision::F64);
+        assert_eq!(TrainConfig::default().lane_pass, LanePass::Auto);
+        assert_eq!(TrainConfig::default().eval_episodes, 0);
+
+        let mut c = TrainConfig::default();
+        let f = KvFile::parse("precision = f32\nlane_width = 4\neval_episodes = 3").unwrap();
+        c.apply_file(&f).unwrap();
+        assert_eq!(c.precision, Precision::F32);
+        assert_eq!(c.lane_pass, LanePass::Width4);
+        assert_eq!(c.eval_episodes, 3);
+
+        let a = Args::parse(
+            ["--precision", "f64", "--lane-width", "8", "--eval-episodes", "5"]
+                .map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.precision, Precision::F64);
+        assert_eq!(c.lane_pass, LanePass::Width8);
+        assert_eq!(c.eval_episodes, 5);
+        assert!(Args::parse(["--lane-width".into(), "2".into()])
+            .opt("lane-width")
+            .unwrap()
+            .parse::<LanePass>()
+            .is_err());
+    }
+
+    #[test]
+    fn eval_episodes_rejected_with_normalized_observations() {
+        // Greedy eval runs on bare envs; evaluating a normalized-obs
+        // policy there would be silently out-of-distribution.
+        let mut c = TrainConfig {
+            eval_episodes: 4,
+            normalize_obs: true,
+            ..TrainConfig::default()
+        };
+        assert!(matches!(c.validate(), Err(Error::Config(_))));
+        c.normalize_obs = false;
+        c.normalize_obs_shared = true;
+        assert!(matches!(c.validate(), Err(Error::Config(_))));
+        c.normalize_obs_shared = false;
+        c.validate().unwrap();
     }
 
     #[test]

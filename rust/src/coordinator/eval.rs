@@ -1,47 +1,64 @@
 //! Greedy policy evaluation: run complete episodes with argmax (discrete)
 //! / mean (continuous) actions and report the mean return.
+//!
+//! Generalized over [`ComputeBackend`], so evaluation runs on whichever
+//! compute tier is present — the PJRT artifact path *or* the pure-Rust
+//! native backend (including its `--precision f32` fast path). The
+//! trainer calls this after training when `--eval-episodes N` is set,
+//! and `TrainSummary::eval_return` carries the result.
 
-use crate::agent::params::ParamStore;
 use crate::agent::sampler;
 use crate::executors::{ForLoopExecutor, VectorEnv};
-use crate::runtime::{Policy, Runtime};
+use crate::runtime::ComputeBackend;
 use crate::Result;
 
-/// Run `episodes` greedy episodes (across a vector of `policy.batch`
-/// envs) and return the mean episodic return.
+/// Run at least `episodes` greedy episodes (across a vector of
+/// `backend.spec().num_envs` bare envs — evaluation is unwrapped) and
+/// return the mean episodic return.
+///
+/// Every env contributes a **fixed quota** of `ceil(episodes / n)`
+/// episodes — its first completions — rather than stopping at the
+/// first `episodes` completions pool-wide: the latter would
+/// systematically select the *shortest* (for CartPole: worst) episodes
+/// and bias the reported mean downward whenever envs finish at
+/// different times.
 pub fn evaluate(
-    rt: &Runtime,
-    policy: &Policy,
-    params: &ParamStore,
+    backend: &mut dyn ComputeBackend,
     task: &str,
     episodes: usize,
     seed: u64,
 ) -> Result<f32> {
-    let n = policy.batch;
+    let spec = backend.spec().clone();
+    let n = spec.num_envs;
+    let per_env = episodes.div_ceil(n).max(1);
     let mut ex = ForLoopExecutor::new(task, n, seed)?;
     let mut out = ex.make_output();
     ex.reset(&mut out)?;
     let mut obs = out.obs.clone();
     let mut ep_ret = vec![0.0f32; n];
+    let mut counts = vec![0usize; n];
     let mut returns = Vec::new();
-    let max_steps = ex.spec().max_episode_steps * (episodes.div_ceil(n) + 1);
+    let max_steps = ex.spec().max_episode_steps * (per_env + 1);
     for _ in 0..max_steps {
-        let pol = policy.forward(rt, params, &obs)?;
-        let actions = if policy.continuous {
+        let pol = backend.forward(&obs)?;
+        let actions = if spec.continuous {
             pol.dist.clone() // mean action
         } else {
-            sampler::greedy(&pol.dist, n, policy.act_dim)
+            sampler::greedy(&pol.dist, n, spec.act_dim)
         };
         ex.step(&actions, &mut out)?;
         for i in 0..n {
             ep_ret[i] += out.rew[i];
             if out.finished(i) {
-                returns.push(ep_ret[i]);
+                if counts[i] < per_env {
+                    returns.push(ep_ret[i]);
+                    counts[i] += 1;
+                }
                 ep_ret[i] = 0.0;
             }
         }
         obs.copy_from_slice(&out.obs);
-        if returns.len() >= episodes {
+        if counts.iter().all(|&c| c >= per_env) {
             break;
         }
     }
@@ -54,19 +71,57 @@ pub fn evaluate(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Manifest;
+    use crate::config::{BackendKind, Precision, TrainConfig};
+    use crate::envs::registry;
+    use crate::runtime::{NativeBackend, PjrtBackend};
+
+    fn native_cfg(env: &str) -> TrainConfig {
+        TrainConfig {
+            env_id: env.into(),
+            backend: BackendKind::Native,
+            num_envs: 4,
+            batch_size: 4,
+            num_steps: 16,
+            num_minibatches: 4,
+            ..TrainConfig::default()
+        }
+    }
 
     #[test]
-    fn greedy_eval_runs_cartpole() {
+    fn greedy_eval_runs_on_the_native_backend() {
+        // No PJRT, no artifacts: evaluation must work in every checkout.
+        let cfg = native_cfg("CartPole-v1");
+        let spec = registry::spec_for("CartPole-v1").unwrap();
+        let mut b = NativeBackend::make(&cfg, &spec).unwrap();
+        let r = evaluate(&mut b, "CartPole-v1", 4, 7).unwrap();
+        // untrained greedy policy: short episodes, return in [1, 500]
+        assert!((1.0..=500.0).contains(&r), "mean return {r}");
+    }
+
+    #[test]
+    fn greedy_eval_runs_on_the_f32_fast_path_and_continuous_heads() {
+        let mut cfg = native_cfg("CartPole-v1");
+        cfg.precision = Precision::F32;
+        let spec = registry::spec_for("CartPole-v1").unwrap();
+        let mut b = NativeBackend::make(&cfg, &spec).unwrap();
+        let r = evaluate(&mut b, "CartPole-v1", 4, 7).unwrap();
+        assert!((1.0..=500.0).contains(&r), "mean return {r}");
+
+        // continuous: mean action, negative pendulum returns
+        let cfg = native_cfg("Pendulum-v1");
+        let spec = registry::spec_for("Pendulum-v1").unwrap();
+        let mut b = NativeBackend::make(&cfg, &spec).unwrap();
+        let r = evaluate(&mut b, "Pendulum-v1", 2, 3).unwrap();
+        assert!(r.is_finite() && r <= 0.0, "pendulum return {r}");
+    }
+
+    #[test]
+    fn greedy_eval_runs_cartpole_via_pjrt() {
         // The compute tier is optional (vendored stub / missing
         // artifacts): skip when absent.
-        let rt = crate::compute_or_skip!(Runtime::cpu());
-        let m = crate::compute_or_skip!(Manifest::load("artifacts"));
-        let cfg = m.for_task("CartPole-v1", 8).unwrap();
-        let params = ParamStore::load(&m, cfg).unwrap();
-        let policy = Policy::load(&rt, cfg).unwrap();
-        let r = evaluate(&rt, &policy, &params, "CartPole-v1", 4, 7).unwrap();
-        // untrained greedy policy: short episodes, return in [1, 500]
-        assert!(r >= 1.0 && r <= 500.0, "mean return {r}");
+        let cfg = TrainConfig { num_envs: 8, batch_size: 8, ..native_cfg("CartPole-v1") };
+        let mut b = crate::compute_or_skip!(PjrtBackend::make(&cfg));
+        let r = evaluate(&mut *b, "CartPole-v1", 4, 7).unwrap();
+        assert!((1.0..=500.0).contains(&r), "mean return {r}");
     }
 }

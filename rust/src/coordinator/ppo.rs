@@ -42,6 +42,12 @@ pub struct TrainSummary {
     pub executor: ExecutorKind,
     /// Compute backend that ran the updates (`"pjrt"` or `"native"`).
     pub backend: String,
+    /// Arithmetic the backend computed in (`"f64"` native reference,
+    /// `"f32"` native fast path / PJRT artifacts).
+    pub precision: String,
+    /// Mean greedy-evaluation return (`--eval-episodes N`, run after
+    /// training on the same backend); `None` when evaluation was off.
+    pub eval_return: Option<f32>,
     pub num_envs: usize,
     pub env_steps: u64,
     pub iterations: usize,
@@ -56,19 +62,24 @@ pub struct TrainSummary {
 impl TrainSummary {
     /// Human-readable block for the CLI / EXPERIMENTS.md.
     pub fn render(&self) -> String {
+        let eval_line = match self.eval_return {
+            Some(r) => format!("\neval return       {r:.1} (greedy)"),
+            None => String::new(),
+        };
         format!(
             "== train {} / {} ==\n\
-             backend           {}\n\
+             backend           {} ({})\n\
              envs              {}\n\
              env steps         {}\n\
              iterations        {}\n\
              wall time         {:.1}s  ({:.0} env-steps/s)\n\
              episodes          {}\n\
              final return      {:.1} (best window {:.1})\n\
-             policy params     {}",
+             policy params     {}{}",
             self.env_id,
             self.executor,
             self.backend,
+            self.precision,
             self.num_envs,
             self.env_steps,
             self.iterations,
@@ -78,6 +89,7 @@ impl TrainSummary {
             self.final_return,
             self.best_return,
             self.param_count,
+            eval_line,
         )
     }
 
@@ -161,9 +173,12 @@ fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
         ExecutorKind::ForLoop => {
             Box::new(ForLoopExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
         }
-        ExecutorKind::ForLoopVec => {
-            Box::new(VecForLoopExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
-        }
+        ExecutorKind::ForLoopVec => Box::new(VecForLoopExecutor::new_with_lanes(
+            &cfg.env_id,
+            cfg.num_envs,
+            cfg.seed,
+            cfg.lane_pass,
+        )?),
         ExecutorKind::Subprocess => {
             Box::new(SubprocessExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
         }
@@ -176,7 +191,8 @@ fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
                     .num_threads(cfg.num_threads)
                     .seed(cfg.seed)
                     .exec_mode(cfg.executor.pool_exec_mode())
-                    .wrappers(wrappers),
+                    .wrappers(wrappers)
+                    .lane_pass(cfg.lane_pass),
             )?;
             Box::new(PoolVectorEnv::new(pool)?)
         }
@@ -340,10 +356,24 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
     let wall = start.elapsed().as_secs_f64();
     let final_ret = curve.last().map(|p| p.mean_return).unwrap_or(f32::NAN);
     let ran = curve.len();
+    // Optional greedy evaluation on the trained backend (works on both
+    // compute tiers — `coordinator::eval` is backend-generic).
+    let eval_return = if cfg.eval_episodes > 0 {
+        Some(super::eval::evaluate(
+            &mut *backend,
+            &cfg.env_id,
+            cfg.eval_episodes,
+            cfg.seed ^ 0x5eed,
+        )?)
+    } else {
+        None
+    };
     let summary = TrainSummary {
         env_id: cfg.env_id.clone(),
         executor: cfg.executor,
         backend: backend.kind().to_string(),
+        precision: backend.precision().to_string(),
+        eval_return,
         num_envs: n,
         env_steps: steps_per_iter * ran as u64,
         iterations: ran,

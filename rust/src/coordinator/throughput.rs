@@ -50,7 +50,8 @@ pub fn frame_multiplier(task: &str) -> u64 {
 }
 
 /// Run `steps` env steps under the named executor, returning frames/s
-/// (env steps × frameskip per second, the paper's metric).
+/// (env steps × frameskip per second, the paper's metric). SIMD lane
+/// width resolves to `auto` — see [`run_throughput_lanes`] to pin it.
 pub fn run_throughput(
     task: &str,
     executor: &str,
@@ -59,6 +60,32 @@ pub fn run_throughput(
     threads: usize,
     steps: u64,
     seed: u64,
+) -> Result<f64> {
+    run_throughput_lanes(
+        task,
+        executor,
+        num_envs,
+        batch_size,
+        threads,
+        steps,
+        seed,
+        crate::simd::LanePass::Auto,
+    )
+}
+
+/// [`run_throughput`] with an explicit SIMD lane width for the
+/// vectorized kernels (`--lane-width` on the CLI; the Table 2d bench
+/// pins widths 1/4/8 through this). Scalar executors ignore it.
+#[allow(clippy::too_many_arguments)]
+pub fn run_throughput_lanes(
+    task: &str,
+    executor: &str,
+    num_envs: usize,
+    batch_size: usize,
+    threads: usize,
+    steps: u64,
+    seed: u64,
+    lane_pass: crate::simd::LanePass,
 ) -> Result<f64> {
     let kind: ExecutorKind = executor.parse()?;
     let spec = registry::spec_for(task)?;
@@ -72,7 +99,7 @@ pub fn run_throughput(
             time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
         }
         ExecutorKind::ForLoopVec => {
-            let mut ex = VecForLoopExecutor::new(task, num_envs, seed)?;
+            let mut ex = VecForLoopExecutor::new_with_lanes(task, num_envs, seed, lane_pass)?;
             time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
         }
         ExecutorKind::Subprocess => {
@@ -86,7 +113,8 @@ pub fn run_throughput(
                     .sync()
                     .num_threads(threads)
                     .seed(seed)
-                    .exec_mode(kind.pool_exec_mode()),
+                    .exec_mode(kind.pool_exec_mode())
+                    .lane_pass(lane_pass),
             )?;
             let mut ex = crate::executors::PoolVectorEnv::new(pool)?;
             time_sync_executor(&mut ex, steps, &mut rng, &mut actions)?
@@ -98,7 +126,8 @@ pub fn run_throughput(
                     .batch_size(batch_size)
                     .num_threads(threads)
                     .seed(seed)
-                    .exec_mode(kind.pool_exec_mode()),
+                    .exec_mode(kind.pool_exec_mode())
+                    .lane_pass(lane_pass),
             )?;
             pool.async_reset();
             let mut out = pool.make_output();
@@ -119,7 +148,8 @@ pub fn run_throughput(
                     .batch_size(batch_size)
                     .num_threads(threads)
                     .seed(seed)
-                    .exec_mode(kind.pool_exec_mode()),
+                    .exec_mode(kind.pool_exec_mode())
+                    .lane_pass(lane_pass),
                 NUMA_NODES,
             )?;
             pool.async_reset();
@@ -142,7 +172,9 @@ pub fn run_throughput(
         ExecutorKind::SampleFactory | ExecutorKind::SampleFactoryVec => {
             let workers = threads.max(1);
             let mut ex = if kind == ExecutorKind::SampleFactoryVec {
-                SampleFactoryExecutor::new_vectorized(task, num_envs, workers, seed)?
+                SampleFactoryExecutor::new_vectorized_with_lanes(
+                    task, num_envs, workers, seed, lane_pass,
+                )?
             } else {
                 SampleFactoryExecutor::new(task, num_envs, workers, seed)?
             };
@@ -203,6 +235,23 @@ mod tests {
         assert_eq!(frame_multiplier("Ant-v4"), 5);
         assert_eq!(frame_multiplier("cheetah_run"), 5);
         assert_eq!(frame_multiplier("CartPole-v1"), 1);
+    }
+
+    #[test]
+    fn forced_lane_widths_run_and_stay_positive() {
+        use crate::simd::LanePass;
+        for lp in [LanePass::Scalar, LanePass::Width4, LanePass::Width8] {
+            let fps = run_throughput_lanes(
+                "CartPole-v1", "forloop-vec", 6, 6, 1, 300, 0, lp,
+            )
+            .unwrap();
+            assert!(fps > 0.0, "{lp}: {fps}");
+            let fps = run_throughput_lanes(
+                "CartPole-v1", "envpool-sync-vec", 6, 6, 2, 300, 0, lp,
+            )
+            .unwrap();
+            assert!(fps > 0.0, "{lp} pool: {fps}");
+        }
     }
 
     #[test]

@@ -4,6 +4,8 @@
 use crate::envs::env::{discrete_action, Env, Step};
 use crate::envs::spec::{ActionSpace, EnvSpec};
 use crate::rng::Pcg32;
+use crate::simd::math::{cos_f32, sin_cos_f32};
+use crate::simd::{F32s, Mask};
 
 const DT: f32 = 0.2;
 const L1: f32 = 1.0;
@@ -27,29 +29,57 @@ pub struct Acrobot {
     steps: usize,
 }
 
+#[inline]
 fn wrap(x: f32, lo: f32, hi: f32) -> f32 {
     lo + (x - lo).rem_euclid(hi - lo)
 }
 
-/// Equations of motion from Sutton & Barto / Gym `_dsdt`.
+/// Equations of motion from Sutton & Barto / Gym `_dsdt` (trig via the
+/// deterministic shared kernel the SIMD lane pass also uses).
 fn dsdt(s: &[f32; 5]) -> [f32; 5] {
     let [theta1, theta2, dtheta1, dtheta2, a] = *s;
+    let (sin_t2, cos_t2) = sin_cos_f32(theta2);
     let d1 = M1 * LC1 * LC1
-        + M2 * (L1 * L1 + LC2 * LC2 + 2.0 * L1 * LC2 * theta2.cos())
+        + M2 * (L1 * L1 + LC2 * LC2 + 2.0 * L1 * LC2 * cos_t2)
         + I1
         + I2;
-    let d2 = M2 * (LC2 * LC2 + L1 * LC2 * theta2.cos()) + I2;
-    let phi2 = M2 * LC2 * G * (theta1 + theta2 - std::f32::consts::FRAC_PI_2).cos();
-    let phi1 = -M2 * L1 * LC2 * dtheta2 * dtheta2 * theta2.sin()
-        - 2.0 * M2 * L1 * LC2 * dtheta2 * dtheta1 * theta2.sin()
-        + (M1 * LC1 + M2 * L1) * G * (theta1 - std::f32::consts::FRAC_PI_2).cos()
+    let d2 = M2 * (LC2 * LC2 + L1 * LC2 * cos_t2) + I2;
+    let phi2 = M2 * LC2 * G * cos_f32(theta1 + theta2 - std::f32::consts::FRAC_PI_2);
+    let phi1 = -M2 * L1 * LC2 * dtheta2 * dtheta2 * sin_t2
+        - 2.0 * M2 * L1 * LC2 * dtheta2 * dtheta1 * sin_t2
+        + (M1 * LC1 + M2 * L1) * G * cos_f32(theta1 - std::f32::consts::FRAC_PI_2)
         + phi2;
     let ddtheta2 = (a + d2 / d1 * phi1
-        - M2 * L1 * LC2 * dtheta1 * dtheta1 * theta2.sin()
+        - M2 * L1 * LC2 * dtheta1 * dtheta1 * sin_t2
         - phi2)
         / (M2 * LC2 * LC2 + I2 - d2 * d2 / d1);
     let ddtheta1 = -(d2 * ddtheta2 + phi1) / d1;
     [dtheta1, dtheta2, ddtheta1, ddtheta2, 0.0]
+}
+
+/// [`dsdt`] over a lane group: the same operations in the same order,
+/// `W` environments per instruction.
+fn dsdt_lanes<const W: usize>(y: &[F32s<W>; 5]) -> [F32s<W>; 5] {
+    let s = F32s::<W>::splat;
+    let [theta1, theta2, dtheta1, dtheta2, a] = *y;
+    let (sin_t2, cos_t2) = theta2.sin_cos();
+    let pi2 = s(std::f32::consts::FRAC_PI_2);
+    let d1 = s(M1 * LC1 * LC1)
+        + s(M2) * (s(L1 * L1 + LC2 * LC2) + s(2.0 * L1 * LC2) * cos_t2)
+        + s(I1)
+        + s(I2);
+    let d2 = s(M2) * (s(LC2 * LC2) + s(L1 * LC2) * cos_t2) + s(I2);
+    let phi2 = s(M2 * LC2 * G) * (theta1 + theta2 - pi2).cos();
+    let phi1 = s(-M2 * L1 * LC2) * dtheta2 * dtheta2 * sin_t2
+        - s(2.0 * M2 * L1 * LC2) * dtheta2 * dtheta1 * sin_t2
+        + s((M1 * LC1 + M2 * L1) * G) * (theta1 - pi2).cos()
+        + phi2;
+    let ddtheta2 = (a + d2 / d1 * phi1
+        - s(M2 * L1 * LC2) * dtheta1 * dtheta1 * sin_t2
+        - phi2)
+        / (s(M2 * LC2 * LC2 + I2) - d2 * d2 / d1);
+    let ddtheta1 = -(d2 * ddtheta2 + phi1) / d1;
+    [dtheta1, dtheta2, ddtheta1, ddtheta2, s(0.0)]
 }
 
 /// One RK4 step of the augmented state (state + constant torque lane).
@@ -68,6 +98,27 @@ fn rk4(y0: [f32; 5], dt: f32) -> [f32; 5] {
     let mut out = y0;
     for i in 0..5 {
         out[i] = y0[i] + dt / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+    }
+    out
+}
+
+/// [`rk4`] over a lane group (same Butcher weights, same op order).
+fn rk4_lanes<const W: usize>(y0: [F32s<W>; 5], dt: f32) -> [F32s<W>; 5] {
+    let s = F32s::<W>::splat;
+    let add = |y: &[F32s<W>; 5], k: &[F32s<W>; 5], h: f32| {
+        let mut o = [s(0.0); 5];
+        for i in 0..5 {
+            o[i] = y[i] + k[i] * s(h);
+        }
+        o
+    };
+    let k1 = dsdt_lanes(&y0);
+    let k2 = dsdt_lanes(&add(&y0, &k1, dt / 2.0));
+    let k3 = dsdt_lanes(&add(&y0, &k2, dt / 2.0));
+    let k4 = dsdt_lanes(&add(&y0, &k3, dt));
+    let mut out = y0;
+    for i in 0..5 {
+        out[i] = y0[i] + s(dt / 6.0) * (k1[i] + s(2.0) * k2[i] + s(2.0) * k3[i] + k4[i]);
     }
     out
 }
@@ -116,10 +167,53 @@ pub(crate) fn dynamics(s: [f32; 4], action: usize) -> [f32; 4] {
     ]
 }
 
+/// [`dynamics`] over a lane group (`torque` is the per-lane
+/// `action − 1`); bitwise identical to [`dynamics`] per lane. The
+/// angle wrap is applied per-lane (`rem_euclid` is libm-backed), the
+/// RK4 body is fully lane-parallel.
+#[inline]
+pub(crate) fn dynamics_lanes<const W: usize>(
+    state: [F32s<W>; 4],
+    torque: F32s<W>,
+) -> [F32s<W>; 4] {
+    let pi = std::f32::consts::PI;
+    let y = rk4_lanes([state[0], state[1], state[2], state[3], torque], DT);
+    [
+        F32s::from_fn(|i| wrap(y[0].0[i], -pi, pi)),
+        F32s::from_fn(|i| wrap(y[1].0[i], -pi, pi)),
+        y[2].clamp(-MAX_VEL1, MAX_VEL1),
+        y[3].clamp(-MAX_VEL2, MAX_VEL2),
+    ]
+}
+
 /// Termination test: tip above the bar.
 #[inline]
 pub(crate) fn is_terminal(s: &[f32; 4]) -> bool {
-    -s[0].cos() - (s[1] + s[0]).cos() > 1.0
+    -cos_f32(s[0]) - cos_f32(s[1] + s[0]) > 1.0
+}
+
+/// [`is_terminal`] over a lane group.
+#[inline]
+pub(crate) fn is_terminal_lanes<const W: usize>(
+    theta1: F32s<W>,
+    theta2: F32s<W>,
+) -> Mask<W> {
+    let one = F32s::<W>::splat(1.0);
+    (-theta1.cos() - (theta2 + theta1).cos()).gt(one)
+}
+
+/// The 6-dim observation for one lane (shared by the scalar env and
+/// every lane width of the SoA kernel).
+#[inline]
+pub(crate) fn write_obs(s: &[f32; 4], obs: &mut [f32]) {
+    let (sin_1, cos_1) = sin_cos_f32(s[0]);
+    let (sin_2, cos_2) = sin_cos_f32(s[1]);
+    obs[0] = cos_1;
+    obs[1] = sin_1;
+    obs[2] = cos_2;
+    obs[3] = sin_2;
+    obs[4] = s[2];
+    obs[5] = s[3];
 }
 
 impl Acrobot {
@@ -128,12 +222,7 @@ impl Acrobot {
     }
 
     fn write_obs(&self, obs: &mut [f32]) {
-        obs[0] = self.s[0].cos();
-        obs[1] = self.s[0].sin();
-        obs[2] = self.s[1].cos();
-        obs[3] = self.s[1].sin();
-        obs[4] = self.s[2];
-        obs[5] = self.s[3];
+        write_obs(&self.s, obs);
     }
 
     fn terminal(&self) -> bool {
@@ -187,6 +276,36 @@ mod tests {
             assert!(obs[5].abs() <= MAX_VEL2 + 1e-4);
             if s.finished() {
                 env.reset(&mut obs);
+            }
+        }
+    }
+
+    #[test]
+    fn lane_dynamics_bitwise_matches_scalar() {
+        let mut rng = Pcg32::new(13, 2);
+        for _ in 0..100 {
+            let states: Vec<[f32; 4]> = (0..8)
+                .map(|_| {
+                    [
+                        rng.range(-std::f32::consts::PI, std::f32::consts::PI),
+                        rng.range(-std::f32::consts::PI, std::f32::consts::PI),
+                        rng.range(-MAX_VEL1, MAX_VEL1),
+                        rng.range(-MAX_VEL2, MAX_VEL2),
+                    ]
+                })
+                .collect();
+            for action in 0..3usize {
+                let torque = F32s::<8>::splat(action as f32 - 1.0);
+                let lanes = std::array::from_fn(|f| F32s::<8>::from_fn(|i| states[i][f]));
+                let out = dynamics_lanes(lanes, torque);
+                let term = is_terminal_lanes(out[0], out[1]);
+                for (i, &st) in states.iter().enumerate() {
+                    let want = dynamics(st, action);
+                    for f in 0..4 {
+                        assert_eq!(out[f].0[i].to_bits(), want[f].to_bits(), "lane {i} field {f}");
+                    }
+                    assert_eq!(term.0[i], is_terminal(&want), "lane {i}");
+                }
             }
         }
     }

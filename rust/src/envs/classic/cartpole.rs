@@ -4,6 +4,7 @@
 use crate::envs::env::{discrete_action, Env, Step};
 use crate::envs::spec::{ActionSpace, EnvSpec};
 use crate::rng::Pcg32;
+use crate::simd::{math::sin_cos_f32, F32s, Mask};
 
 const GRAVITY: f32 = 9.8;
 const MASS_CART: f32 = 1.0;
@@ -19,15 +20,29 @@ const X_LIMIT: f32 = 2.4;
 /// Maximum episode length (shared with the SoA kernel).
 pub(crate) const MAX_STEPS: usize = 500;
 
+/// The push force for an action id (shared with the SoA kernel's lane
+/// pass, which precomputes it per lane before [`dynamics_lanes`]).
+#[inline]
+pub(crate) fn force_for(action: usize) -> f32 {
+    if action == 1 {
+        FORCE_MAG
+    } else {
+        -FORCE_MAG
+    }
+}
+
 /// One semi-explicit Euler step of the cart-pole dynamics, matching
 /// Gym's "euler" kinematics integrator. Shared by the scalar env and the
 /// struct-of-arrays kernel in [`crate::envs::vector`] so the two paths
-/// are bitwise identical.
+/// are bitwise identical. Trig goes through the deterministic shared
+/// kernel ([`sin_cos_f32`]) — the same function the SIMD lane pass
+/// applies per lane, which is what keeps every lane width bitwise equal
+/// to this reference.
 #[inline]
 pub(crate) fn dynamics(state: [f32; 4], action: usize) -> [f32; 4] {
-    let force = if action == 1 { FORCE_MAG } else { -FORCE_MAG };
+    let force = force_for(action);
     let [x, x_dot, theta, theta_dot] = state;
-    let (sin_t, cos_t) = theta.sin_cos();
+    let (sin_t, cos_t) = sin_cos_f32(theta);
     let temp = (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin_t) / TOTAL_MASS;
     let theta_acc = (GRAVITY * sin_t - cos_t * temp)
         / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
@@ -38,6 +53,38 @@ pub(crate) fn dynamics(state: [f32; 4], action: usize) -> [f32; 4] {
         theta + TAU * theta_dot,
         theta_dot + TAU * theta_acc,
     ]
+}
+
+/// [`dynamics`] over a lane group: the same operations in the same
+/// order applied to `W` environments per instruction (`force` is the
+/// per-lane ±`FORCE_MAG` the caller derived from the action ids).
+/// Bitwise identical to [`dynamics`] per lane — pinned by a unit test
+/// here and by `tests/simd_parity.rs` end to end.
+#[inline]
+pub(crate) fn dynamics_lanes<const W: usize>(
+    state: [F32s<W>; 4],
+    force: F32s<W>,
+) -> [F32s<W>; 4] {
+    let s = F32s::<W>::splat;
+    let [x, x_dot, theta, theta_dot] = state;
+    let (sin_t, cos_t) = theta.sin_cos();
+    let temp = (force + s(POLE_MASS_LENGTH) * theta_dot * theta_dot * sin_t) / s(TOTAL_MASS);
+    let theta_acc = (s(GRAVITY) * sin_t - cos_t * temp)
+        / (s(LENGTH) * (s(4.0 / 3.0) - s(MASS_POLE) * cos_t * cos_t / s(TOTAL_MASS)));
+    let x_acc = temp - s(POLE_MASS_LENGTH) * theta_acc * cos_t / s(TOTAL_MASS);
+    [
+        x + s(TAU) * x_dot,
+        x_dot + s(TAU) * x_acc,
+        theta + s(TAU) * theta_dot,
+        theta_dot + s(TAU) * theta_acc,
+    ]
+}
+
+/// [`fell`] over a lane group (same comparisons, lane-wise).
+#[inline]
+pub(crate) fn fell_lanes<const W: usize>(x: F32s<W>, theta: F32s<W>) -> Mask<W> {
+    let s = F32s::<W>::splat;
+    x.abs().gt(s(X_LIMIT)) | theta.abs().gt(s(THETA_LIMIT))
 }
 
 /// Termination test (cart off the track or pole past the angle limit).
@@ -173,6 +220,42 @@ mod tests {
             }
         }
         panic!("episode must finish within 500 steps");
+    }
+
+    #[test]
+    fn lane_dynamics_bitwise_matches_scalar() {
+        let mut rng = Pcg32::new(77, 0);
+        for _ in 0..200 {
+            let states: Vec<[f32; 4]> = (0..8)
+                .map(|_| {
+                    [
+                        rng.range(-2.4, 2.4),
+                        rng.range(-3.0, 3.0),
+                        rng.range(-0.25, 0.25),
+                        rng.range(-3.0, 3.0),
+                    ]
+                })
+                .collect();
+            for action in 0..2usize {
+                let force =
+                    F32s::<8>::splat(if action == 1 { FORCE_MAG } else { -FORCE_MAG });
+                let lanes = [
+                    F32s::<8>::from_fn(|i| states[i][0]),
+                    F32s::<8>::from_fn(|i| states[i][1]),
+                    F32s::<8>::from_fn(|i| states[i][2]),
+                    F32s::<8>::from_fn(|i| states[i][3]),
+                ];
+                let out = dynamics_lanes(lanes, force);
+                let fell_m = fell_lanes(out[0], out[2]);
+                for (i, &st) in states.iter().enumerate() {
+                    let want = dynamics(st, action);
+                    for f in 0..4 {
+                        assert_eq!(out[f].0[i].to_bits(), want[f].to_bits(), "lane {i} field {f}");
+                    }
+                    assert_eq!(fell_m.0[i], fell(&want), "lane {i}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use crate::envs::env::{discrete_action, Env, Step};
 use crate::envs::spec::{ActionSpace, EnvSpec};
 use crate::rng::Pcg32;
+use crate::simd::{math::cos_f32, F32s, Mask};
 
 const MIN_POS: f32 = -1.2;
 const MAX_POS: f32 = 0.6;
@@ -38,11 +39,12 @@ pub(crate) fn reset_pos(rng: &mut Pcg32) -> f32 {
 }
 
 /// One step of the mountain-car dynamics (Gym equations), shared by the
-/// scalar env and the SoA kernel so both paths are bitwise identical.
+/// scalar env and the SoA kernel so both paths are bitwise identical
+/// (cosine via the deterministic shared kernel the lane pass also uses).
 #[inline]
 pub(crate) fn dynamics(pos: f32, vel: f32, action: usize) -> (f32, f32) {
     let a = action as f32 - 1.0; // -1, 0, +1
-    let mut vel = vel + a * FORCE - GRAVITY * (3.0 * pos).cos();
+    let mut vel = vel + a * FORCE - GRAVITY * cos_f32(3.0 * pos);
     vel = vel.clamp(-MAX_SPEED, MAX_SPEED);
     let pos = (pos + vel).clamp(MIN_POS, MAX_POS);
     if pos <= MIN_POS && vel < 0.0 {
@@ -51,10 +53,33 @@ pub(crate) fn dynamics(pos: f32, vel: f32, action: usize) -> (f32, f32) {
     (pos, vel)
 }
 
+/// [`dynamics`] over a lane group (`accel` is the per-lane `action − 1`
+/// the caller derived from the action ids); bitwise identical per lane.
+#[inline]
+pub(crate) fn dynamics_lanes<const W: usize>(
+    pos: F32s<W>,
+    vel: F32s<W>,
+    accel: F32s<W>,
+) -> (F32s<W>, F32s<W>) {
+    let s = F32s::<W>::splat;
+    let vel = (vel + accel * s(FORCE) - s(GRAVITY) * (s(3.0) * pos).cos())
+        .clamp(-MAX_SPEED, MAX_SPEED);
+    let pos = (pos + vel).clamp(MIN_POS, MAX_POS);
+    // inelastic left wall: vel = 0 where pos <= MIN_POS && vel < 0
+    let wall = pos.le(s(MIN_POS)) & vel.lt(s(0.0));
+    (pos, wall.select_f32(s(0.0), vel))
+}
+
 /// Goal test.
 #[inline]
 pub(crate) fn at_goal(pos: f32) -> bool {
     pos >= GOAL_POS
+}
+
+/// [`at_goal`] over a lane group.
+#[inline]
+pub(crate) fn at_goal_lanes<const W: usize>(pos: F32s<W>) -> Mask<W> {
+    pos.ge(F32s::splat(GOAL_POS))
 }
 
 /// MountainCar environment. Observation `[position, velocity]`, actions
@@ -138,6 +163,31 @@ mod tests {
             env.reset(&mut obs);
         }
         panic!("energy pumping should reach the flag within a few episodes");
+    }
+
+    #[test]
+    fn lane_dynamics_bitwise_matches_scalar() {
+        let mut rng = Pcg32::new(5, 9);
+        for _ in 0..300 {
+            let st: Vec<(f32, f32)> = (0..4)
+                .map(|_| (rng.range(MIN_POS, MAX_POS), rng.range(-MAX_SPEED, MAX_SPEED)))
+                .collect();
+            for action in 0..3usize {
+                let accel = F32s::<4>::splat(action as f32 - 1.0);
+                let (p, v) = dynamics_lanes(
+                    F32s::<4>::from_fn(|i| st[i].0),
+                    F32s::<4>::from_fn(|i| st[i].1),
+                    accel,
+                );
+                let goal = at_goal_lanes(p);
+                for (i, &(pos, vel)) in st.iter().enumerate() {
+                    let (wp, wv) = dynamics(pos, vel, action);
+                    assert_eq!(p.0[i].to_bits(), wp.to_bits(), "lane {i}");
+                    assert_eq!(v.0[i].to_bits(), wv.to_bits(), "lane {i}");
+                    assert_eq!(goal.0[i], at_goal(wp), "lane {i}");
+                }
+            }
+        }
     }
 
     #[test]

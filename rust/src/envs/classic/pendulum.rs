@@ -4,6 +4,7 @@
 use crate::envs::env::{Env, Step};
 use crate::envs::spec::{ActionSpace, EnvSpec};
 use crate::rng::Pcg32;
+use crate::simd::{math::sin_cos_f32, math::sin_f32, F32s};
 
 const MAX_SPEED: f32 = 8.0;
 const MAX_TORQUE: f32 = 2.0;
@@ -22,6 +23,7 @@ pub struct Pendulum {
     steps: usize,
 }
 
+#[inline]
 fn angle_normalize(x: f32) -> f32 {
     let two_pi = 2.0 * std::f32::consts::PI;
     ((x + std::f32::consts::PI).rem_euclid(two_pi)) - std::f32::consts::PI
@@ -56,16 +58,49 @@ pub(crate) fn reset_state(rng: &mut Pcg32) -> (f32, f32) {
 
 /// One step of the pendulum dynamics (Gym equations): returns the new
 /// `(theta, theta_dot)` and the step cost. Shared by the scalar env and
-/// the SoA kernel so both paths are bitwise identical.
+/// the SoA kernel so both paths are bitwise identical (sine via the
+/// deterministic shared kernel the lane pass also uses).
 #[inline]
 pub(crate) fn dynamics(theta: f32, theta_dot: f32, action: f32) -> (f32, f32, f32) {
     let u = action.clamp(-MAX_TORQUE, MAX_TORQUE);
     let th = angle_normalize(theta);
     let cost = th * th + 0.1 * theta_dot * theta_dot + 0.001 * u * u;
-    let mut theta_dot = theta_dot + (3.0 * G / (2.0 * L) * theta.sin() + 3.0 / (M * L * L) * u) * DT;
+    let mut theta_dot =
+        theta_dot + (3.0 * G / (2.0 * L) * sin_f32(theta) + 3.0 / (M * L * L) * u) * DT;
     theta_dot = theta_dot.clamp(-MAX_SPEED, MAX_SPEED);
     let theta = theta + theta_dot * DT;
     (theta, theta_dot, cost)
+}
+
+/// [`dynamics`] over a lane group — the same operations in the same
+/// order per lane (`angle_normalize`'s `rem_euclid` is applied
+/// per-lane: it is the one libm-backed op in this kernel). Bitwise
+/// identical to [`dynamics`] per lane.
+#[inline]
+pub(crate) fn dynamics_lanes<const W: usize>(
+    theta: F32s<W>,
+    theta_dot: F32s<W>,
+    action: F32s<W>,
+) -> (F32s<W>, F32s<W>, F32s<W>) {
+    let s = F32s::<W>::splat;
+    let u = action.clamp(-MAX_TORQUE, MAX_TORQUE);
+    let th = F32s::from_fn(|i| angle_normalize(theta.0[i]));
+    let cost = th * th + s(0.1) * theta_dot * theta_dot + s(0.001) * u * u;
+    let theta_dot = (theta_dot
+        + (s(3.0 * G / (2.0 * L)) * theta.sin() + s(3.0 / (M * L * L)) * u) * s(DT))
+        .clamp(-MAX_SPEED, MAX_SPEED);
+    let theta = theta + theta_dot * s(DT);
+    (theta, theta_dot, cost)
+}
+
+/// The `[cos θ, sin θ, θ̇]` observation for one lane (shared by the
+/// scalar env and every lane width of the SoA kernel).
+#[inline]
+pub(crate) fn write_obs(theta: f32, theta_dot: f32, obs: &mut [f32]) {
+    let (sin_t, cos_t) = sin_cos_f32(theta);
+    obs[0] = cos_t;
+    obs[1] = sin_t;
+    obs[2] = theta_dot;
 }
 
 impl Pendulum {
@@ -74,9 +109,7 @@ impl Pendulum {
     }
 
     fn write_obs(&self, obs: &mut [f32]) {
-        obs[0] = self.theta.cos();
-        obs[1] = self.theta.sin();
-        obs[2] = self.theta_dot;
+        write_obs(self.theta, self.theta_dot, obs);
     }
 }
 

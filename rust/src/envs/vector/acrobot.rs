@@ -1,11 +1,15 @@
 //! Struct-of-arrays Acrobot batch kernel (RK4 math and RNG streams
-//! shared with [`crate::envs::classic::acrobot`]).
+//! shared with [`crate::envs::classic::acrobot`]; the SIMD lane pass
+//! runs the whole RK4 integration over lane groups via
+//! `dynamics_lanes`, bitwise identical to the scalar reference at every
+//! lane width).
 
 use super::{ObsArena, VecEnv};
 use crate::envs::classic::acrobot;
 use crate::envs::env::{discrete_action, Step};
 use crate::envs::spec::EnvSpec;
 use crate::rng::Pcg32;
+use crate::simd::{F32s, LanePass};
 
 /// SoA batch of Acrobot environments. State lanes are
 /// `[theta1, theta2, dtheta1, dtheta2]`.
@@ -17,6 +21,8 @@ pub struct AcrobotVec {
     dtheta1: Vec<f32>,
     dtheta2: Vec<f32>,
     steps: Vec<u32>,
+    /// Resolved SIMD lane width (1 = scalar reference loop).
+    width: usize,
 }
 
 impl AcrobotVec {
@@ -30,6 +36,11 @@ impl AcrobotVec {
             dtheta1: vec![0.0; count],
             dtheta2: vec![0.0; count],
             steps: vec![0; count],
+            // Scalar reference until configured: the wired paths (pool,
+            // executors) always call `set_lane_pass`, which is also the
+            // single place the `Auto` width (env override + feature
+            // detection) resolves — keeping construction infallible.
+            width: LanePass::Scalar.width(),
         }
     }
 
@@ -41,14 +52,87 @@ impl AcrobotVec {
         self.dtheta2[lane] = s[3];
     }
 
+    /// Finish one stepped lane: bookkeeping, flags, observation row.
     #[inline]
-    fn write_obs(s: &[f32; 4], obs: &mut [f32]) {
-        obs[0] = s[0].cos();
-        obs[1] = s[0].sin();
-        obs[2] = s[1].cos();
-        obs[3] = s[1].sin();
-        obs[4] = s[2];
-        obs[5] = s[3];
+    fn finish_lane(&mut self, lane: usize, done: bool, arena: &mut dyn ObsArena, out: &mut [Step]) {
+        self.steps[lane] += 1;
+        let truncated = !done && self.steps[lane] as usize >= acrobot::MAX_STEPS;
+        let s =
+            [self.theta1[lane], self.theta2[lane], self.dtheta1[lane], self.dtheta2[lane]];
+        acrobot::write_obs(&s, arena.row(lane));
+        out[lane] = Step { reward: if done { 0.0 } else { -1.0 }, done, truncated };
+    }
+
+    /// The scalar reference loop (lane width 1).
+    fn step_scalar(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        for lane in 0..self.num_envs() {
+            if reset_mask[lane] != 0 {
+                self.reset_lane(lane, arena.row(lane));
+                out[lane] = Step::default();
+                continue;
+            }
+            let a = discrete_action(&actions[lane..lane + 1], 3);
+            let s = acrobot::dynamics(
+                [self.theta1[lane], self.theta2[lane], self.dtheta1[lane], self.dtheta2[lane]],
+                a,
+            );
+            self.scatter(lane, s);
+            let done = acrobot::is_terminal(&s);
+            self.finish_lane(lane, done, arena, out);
+        }
+    }
+
+    /// The SIMD lane pass (masked tail + masked resets, same structure
+    /// as the CartPole kernel — see the module docs in [`super`]).
+    fn step_lanes<const W: usize>(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        let mut g = 0;
+        while g < k {
+            let n = W.min(k - g);
+            for lane in g..g + n {
+                if reset_mask[lane] != 0 {
+                    self.reset_lane(lane, arena.row(lane));
+                    out[lane] = Step::default();
+                }
+            }
+            let state = [
+                F32s::<W>::load_or(&self.theta1[g..g + n], 0.0),
+                F32s::<W>::load_or(&self.theta2[g..g + n], 0.0),
+                F32s::<W>::load_or(&self.dtheta1[g..g + n], 0.0),
+                F32s::<W>::load_or(&self.dtheta2[g..g + n], 0.0),
+            ];
+            let torque = F32s::<W>::from_fn(|i| {
+                let lane = g + i;
+                if i < n && reset_mask[lane] == 0 {
+                    discrete_action(&actions[lane..lane + 1], 3) as f32 - 1.0
+                } else {
+                    0.0
+                }
+            });
+            let s = acrobot::dynamics_lanes(state, torque);
+            let term = acrobot::is_terminal_lanes(s[0], s[1]);
+            for i in 0..n {
+                let lane = g + i;
+                if reset_mask[lane] != 0 {
+                    continue;
+                }
+                self.scatter(lane, [s[0].0[i], s[1].0[i], s[2].0[i], s[3].0[i]]);
+                self.finish_lane(lane, term.0[i], arena, out);
+            }
+            g += W;
+        }
     }
 }
 
@@ -61,11 +145,15 @@ impl VecEnv for AcrobotVec {
         self.rng.len()
     }
 
+    fn set_lane_pass(&mut self, lane_pass: LanePass) {
+        self.width = lane_pass.width();
+    }
+
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
         let s = acrobot::reset_state(&mut self.rng[lane]);
         self.scatter(lane, s);
         self.steps[lane] = 0;
-        Self::write_obs(&s, obs);
+        acrobot::write_obs(&s, obs);
     }
 
     fn step_batch(
@@ -79,24 +167,10 @@ impl VecEnv for AcrobotVec {
         debug_assert_eq!(actions.len(), k);
         debug_assert_eq!(reset_mask.len(), k);
         debug_assert_eq!(out.len(), k);
-        for lane in 0..k {
-            if reset_mask[lane] != 0 {
-                self.reset_lane(lane, arena.row(lane));
-                out[lane] = Step::default();
-                continue;
-            }
-            let a = discrete_action(&actions[lane..lane + 1], 3);
-            let s = acrobot::dynamics(
-                [self.theta1[lane], self.theta2[lane], self.dtheta1[lane], self.dtheta2[lane]],
-                a,
-            );
-            self.scatter(lane, s);
-            self.steps[lane] += 1;
-
-            let done = acrobot::is_terminal(&s);
-            let truncated = !done && self.steps[lane] as usize >= acrobot::MAX_STEPS;
-            Self::write_obs(&s, arena.row(lane));
-            out[lane] = Step { reward: if done { 0.0 } else { -1.0 }, done, truncated };
+        match self.width {
+            8 => self.step_lanes::<8>(actions, reset_mask, arena, out),
+            4 => self.step_lanes::<4>(actions, reset_mask, arena, out),
+            _ => self.step_scalar(actions, reset_mask, arena, out),
         }
     }
 }

@@ -24,6 +24,21 @@
 //! paths bitwise identical — the property test in `tests/vector_parity.rs`
 //! pins this.
 //!
+//! # SIMD lane pass
+//!
+//! On top of the SoA layout, the classic-control kernels (and the
+//! walker's batch task pass) step whole **lane groups** of environments
+//! per instruction through [`crate::simd`]: width 4 or 8 groups with a
+//! masked tail (env counts that are not a multiple of the width) and a
+//! masked-reset path (lanes auto-resetting mid-batch are excluded from
+//! the vector store, never from the group). The lane-group dynamics
+//! live next to the scalar dynamics in [`crate::envs::classic`] and
+//! apply the identical operations in the identical order — every lane
+//! width is **bitwise identical** to the width-1 scalar reference loop,
+//! pinned per step by `tests/simd_parity.rs`. Width selection is a
+//! kernel config ([`VecEnv::set_lane_pass`], wired from
+//! `PoolConfig::lane_pass` / `--lane-width`).
+//!
 //! # Every family is batch-first
 //!
 //! Vectorized execution is the engine's primary abstraction, not a
@@ -125,6 +140,16 @@ pub trait VecEnv: Send {
 
     /// Number of lanes (environments) in this batch.
     fn num_envs(&self) -> usize;
+
+    /// Select the SIMD lane pass for kernels that have one (classic
+    /// control, the walker task pass). Width 1 is the scalar reference
+    /// loop; every width is **bitwise identical** (see
+    /// [`crate::simd`]), so this is purely a throughput knob. Kernels
+    /// without a lane pass ignore it (default no-op); wrappers forward
+    /// it to their inner kernel.
+    fn set_lane_pass(&mut self, lane_pass: crate::simd::LanePass) {
+        let _ = lane_pass;
+    }
 
     /// Reset lane `lane`, writing its initial observation into `obs`
     /// (length `spec().obs_dim()`).

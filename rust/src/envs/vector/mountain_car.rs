@@ -1,11 +1,14 @@
 //! Struct-of-arrays MountainCar batch kernel (math and RNG streams
-//! shared with [`crate::envs::classic::mountain_car`]).
+//! shared with [`crate::envs::classic::mountain_car`]; the SIMD lane
+//! pass applies `dynamics_lanes`, bitwise identical to the scalar
+//! reference at every lane width).
 
 use super::{ObsArena, VecEnv};
 use crate::envs::classic::mountain_car;
 use crate::envs::env::{discrete_action, Step};
 use crate::envs::spec::EnvSpec;
 use crate::rng::Pcg32;
+use crate::simd::{F32s, LanePass};
 
 /// SoA batch of MountainCar environments.
 pub struct MountainCarVec {
@@ -14,6 +17,8 @@ pub struct MountainCarVec {
     pos: Vec<f32>,
     vel: Vec<f32>,
     steps: Vec<u32>,
+    /// Resolved SIMD lane width (1 = scalar reference loop).
+    width: usize,
 }
 
 impl MountainCarVec {
@@ -25,6 +30,89 @@ impl MountainCarVec {
             pos: vec![0.0; count],
             vel: vec![0.0; count],
             steps: vec![0; count],
+            // Scalar reference until configured: the wired paths (pool,
+            // executors) always call `set_lane_pass`, which is also the
+            // single place the `Auto` width (env override + feature
+            // detection) resolves — keeping construction infallible.
+            width: LanePass::Scalar.width(),
+        }
+    }
+
+    /// Finish one stepped lane: bookkeeping, flags, observation row.
+    #[inline]
+    fn finish_lane(&mut self, lane: usize, done: bool, arena: &mut dyn ObsArena, out: &mut [Step]) {
+        self.steps[lane] += 1;
+        let truncated = !done && self.steps[lane] as usize >= mountain_car::MAX_STEPS;
+        let obs = arena.row(lane);
+        obs[0] = self.pos[lane];
+        obs[1] = self.vel[lane];
+        out[lane] = Step { reward: -1.0, done, truncated };
+    }
+
+    /// The scalar reference loop (lane width 1).
+    fn step_scalar(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        for lane in 0..self.num_envs() {
+            if reset_mask[lane] != 0 {
+                self.reset_lane(lane, arena.row(lane));
+                out[lane] = Step::default();
+                continue;
+            }
+            let a = discrete_action(&actions[lane..lane + 1], 3);
+            let (pos, vel) = mountain_car::dynamics(self.pos[lane], self.vel[lane], a);
+            self.pos[lane] = pos;
+            self.vel[lane] = vel;
+            let done = mountain_car::at_goal(pos);
+            self.finish_lane(lane, done, arena, out);
+        }
+    }
+
+    /// The SIMD lane pass (masked tail + masked resets, same structure
+    /// as the CartPole kernel — see the module docs in [`super`]).
+    fn step_lanes<const W: usize>(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        let mut g = 0;
+        while g < k {
+            let n = W.min(k - g);
+            for lane in g..g + n {
+                if reset_mask[lane] != 0 {
+                    self.reset_lane(lane, arena.row(lane));
+                    out[lane] = Step::default();
+                }
+            }
+            let pos = F32s::<W>::load_or(&self.pos[g..g + n], 0.0);
+            let vel = F32s::<W>::load_or(&self.vel[g..g + n], 0.0);
+            let accel = F32s::<W>::from_fn(|i| {
+                let lane = g + i;
+                if i < n && reset_mask[lane] == 0 {
+                    discrete_action(&actions[lane..lane + 1], 3) as f32 - 1.0
+                } else {
+                    0.0
+                }
+            });
+            let (np, nv) = mountain_car::dynamics_lanes(pos, vel, accel);
+            let goal = mountain_car::at_goal_lanes(np);
+            for i in 0..n {
+                let lane = g + i;
+                if reset_mask[lane] != 0 {
+                    continue;
+                }
+                self.pos[lane] = np.0[i];
+                self.vel[lane] = nv.0[i];
+                self.finish_lane(lane, goal.0[i], arena, out);
+            }
+            g += W;
         }
     }
 }
@@ -36,6 +124,10 @@ impl VecEnv for MountainCarVec {
 
     fn num_envs(&self) -> usize {
         self.rng.len()
+    }
+
+    fn set_lane_pass(&mut self, lane_pass: LanePass) {
+        self.width = lane_pass.width();
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
@@ -57,24 +149,10 @@ impl VecEnv for MountainCarVec {
         debug_assert_eq!(actions.len(), k);
         debug_assert_eq!(reset_mask.len(), k);
         debug_assert_eq!(out.len(), k);
-        for lane in 0..k {
-            if reset_mask[lane] != 0 {
-                self.reset_lane(lane, arena.row(lane));
-                out[lane] = Step::default();
-                continue;
-            }
-            let a = discrete_action(&actions[lane..lane + 1], 3);
-            let (pos, vel) = mountain_car::dynamics(self.pos[lane], self.vel[lane], a);
-            self.pos[lane] = pos;
-            self.vel[lane] = vel;
-            self.steps[lane] += 1;
-
-            let done = mountain_car::at_goal(pos);
-            let truncated = !done && self.steps[lane] as usize >= mountain_car::MAX_STEPS;
-            let obs = arena.row(lane);
-            obs[0] = pos;
-            obs[1] = vel;
-            out[lane] = Step { reward: -1.0, done, truncated };
+        match self.width {
+            8 => self.step_lanes::<8>(actions, reset_mask, arena, out),
+            4 => self.step_lanes::<4>(actions, reset_mask, arena, out),
+            _ => self.step_scalar(actions, reset_mask, arena, out),
         }
     }
 }

@@ -1,11 +1,14 @@
 //! Struct-of-arrays Pendulum batch kernel (math and RNG streams shared
-//! with [`crate::envs::classic::pendulum`]).
+//! with [`crate::envs::classic::pendulum`]; the SIMD lane pass applies
+//! `dynamics_lanes`, bitwise identical to the scalar reference at every
+//! lane width).
 
 use super::{ObsArena, VecEnv};
 use crate::envs::classic::pendulum;
 use crate::envs::env::Step;
 use crate::envs::spec::EnvSpec;
 use crate::rng::Pcg32;
+use crate::simd::{F32s, LanePass};
 
 /// SoA batch of Pendulum environments.
 pub struct PendulumVec {
@@ -14,6 +17,8 @@ pub struct PendulumVec {
     theta: Vec<f32>,
     theta_dot: Vec<f32>,
     steps: Vec<u32>,
+    /// Resolved SIMD lane width (1 = scalar reference loop).
+    width: usize,
 }
 
 impl PendulumVec {
@@ -25,14 +30,82 @@ impl PendulumVec {
             theta: vec![0.0; count],
             theta_dot: vec![0.0; count],
             steps: vec![0; count],
+            // Scalar reference until configured: the wired paths (pool,
+            // executors) always call `set_lane_pass`, which is also the
+            // single place the `Auto` width (env override + feature
+            // detection) resolves — keeping construction infallible.
+            width: LanePass::Scalar.width(),
         }
     }
 
+    /// Finish one stepped lane: bookkeeping, flags, observation row.
     #[inline]
-    fn write_obs(&self, lane: usize, obs: &mut [f32]) {
-        obs[0] = self.theta[lane].cos();
-        obs[1] = self.theta[lane].sin();
-        obs[2] = self.theta_dot[lane];
+    fn finish_lane(&mut self, lane: usize, cost: f32, arena: &mut dyn ObsArena, out: &mut [Step]) {
+        self.steps[lane] += 1;
+        pendulum::write_obs(self.theta[lane], self.theta_dot[lane], arena.row(lane));
+        out[lane] = Step {
+            reward: -cost,
+            done: false,
+            truncated: self.steps[lane] as usize >= pendulum::MAX_STEPS,
+        };
+    }
+
+    /// The scalar reference loop (lane width 1).
+    fn step_scalar(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        for lane in 0..self.num_envs() {
+            if reset_mask[lane] != 0 {
+                self.reset_lane(lane, arena.row(lane));
+                out[lane] = Step::default();
+                continue;
+            }
+            let (theta, theta_dot, cost) =
+                pendulum::dynamics(self.theta[lane], self.theta_dot[lane], actions[lane]);
+            self.theta[lane] = theta;
+            self.theta_dot[lane] = theta_dot;
+            self.finish_lane(lane, cost, arena, out);
+        }
+    }
+
+    /// The SIMD lane pass (masked tail + masked resets, same structure
+    /// as the CartPole kernel — see the module docs in [`super`]).
+    fn step_lanes<const W: usize>(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        let mut g = 0;
+        while g < k {
+            let n = W.min(k - g);
+            for lane in g..g + n {
+                if reset_mask[lane] != 0 {
+                    self.reset_lane(lane, arena.row(lane));
+                    out[lane] = Step::default();
+                }
+            }
+            let theta = F32s::<W>::load_or(&self.theta[g..g + n], 0.0);
+            let theta_dot = F32s::<W>::load_or(&self.theta_dot[g..g + n], 0.0);
+            let action = F32s::<W>::load_or(&actions[g..g + n], 0.0);
+            let (nt, ntd, cost) = pendulum::dynamics_lanes(theta, theta_dot, action);
+            for i in 0..n {
+                let lane = g + i;
+                if reset_mask[lane] != 0 {
+                    continue;
+                }
+                self.theta[lane] = nt.0[i];
+                self.theta_dot[lane] = ntd.0[i];
+                self.finish_lane(lane, cost.0[i], arena, out);
+            }
+            g += W;
+        }
     }
 }
 
@@ -45,12 +118,16 @@ impl VecEnv for PendulumVec {
         self.rng.len()
     }
 
+    fn set_lane_pass(&mut self, lane_pass: LanePass) {
+        self.width = lane_pass.width();
+    }
+
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
         let (theta, theta_dot) = pendulum::reset_state(&mut self.rng[lane]);
         self.theta[lane] = theta;
         self.theta_dot[lane] = theta_dot;
         self.steps[lane] = 0;
-        self.write_obs(lane, obs);
+        pendulum::write_obs(theta, theta_dot, obs);
     }
 
     fn step_batch(
@@ -64,23 +141,10 @@ impl VecEnv for PendulumVec {
         debug_assert_eq!(actions.len(), k);
         debug_assert_eq!(reset_mask.len(), k);
         debug_assert_eq!(out.len(), k);
-        for lane in 0..k {
-            if reset_mask[lane] != 0 {
-                self.reset_lane(lane, arena.row(lane));
-                out[lane] = Step::default();
-                continue;
-            }
-            let (theta, theta_dot, cost) =
-                pendulum::dynamics(self.theta[lane], self.theta_dot[lane], actions[lane]);
-            self.theta[lane] = theta;
-            self.theta_dot[lane] = theta_dot;
-            self.steps[lane] += 1;
-            self.write_obs(lane, arena.row(lane));
-            out[lane] = Step {
-                reward: -cost,
-                done: false,
-                truncated: self.steps[lane] as usize >= pendulum::MAX_STEPS,
-            };
+        match self.width {
+            8 => self.step_lanes::<8>(actions, reset_mask, arena, out),
+            4 => self.step_lanes::<4>(actions, reset_mask, arena, out),
+            _ => self.step_scalar(actions, reset_mask, arena, out),
         }
     }
 }

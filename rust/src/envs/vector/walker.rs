@@ -33,6 +33,7 @@
 
 use super::{ObsArena, VecEnv};
 use crate::envs::dmc::cheetah_run::{cheetah_spec, shape_step};
+use crate::simd::{F32s, LanePass, Mask};
 use crate::envs::env::Step;
 use crate::envs::mujoco::models::Model;
 use crate::envs::mujoco::walker::{self, Task};
@@ -66,6 +67,9 @@ pub struct WalkerVec {
     omega: Vec<f32>,
     /// Torso x before the current batch step (forward-reward scratch).
     x_before: Vec<f32>,
+    /// Resolved SIMD lane width for the batch task pass (1 = the scalar
+    /// reference loop; the constraint solver is per-lane either way).
+    width: usize,
 }
 
 impl WalkerVec {
@@ -97,6 +101,10 @@ impl WalkerVec {
             vel_y: vec![0.0; count * nb],
             omega: vec![0.0; count * nb],
             x_before: vec![0.0; count],
+            // Scalar reference until configured (see the classic-control
+            // kernels): `set_lane_pass` is the single Auto-resolution
+            // point, so construction never reads env vars or cpuid.
+            width: LanePass::Scalar.width(),
             proto,
         }
     }
@@ -168,6 +176,89 @@ impl WalkerVec {
     }
 }
 
+impl WalkerVec {
+    /// Phase 2 as a SIMD lane pass: forward reward, control cost,
+    /// healthy test and reward composed over groups of `W` lanes per
+    /// instruction. Identical operations in identical order to the
+    /// scalar phase-2 loop (the per-lane control-cost accumulation
+    /// walks joints in the same sequence), so this is bitwise equal to
+    /// the width-1 reference — and to the scalar [`WalkerEnv`]
+    /// (`crate::envs::mujoco::WalkerEnv`), keeping the kernel's bitwise
+    /// parity contract intact.
+    fn task_pass_lanes<const W: usize>(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        let adim = self.actuated.len();
+        let nb = self.nb;
+        let torso = self.proto.torso;
+        let s = F32s::<W>::splat;
+        let mut g = 0;
+        while g < k {
+            let n = W.min(k - g);
+            // Gathers (stride nb) — reset/tail lanes ride along, their
+            // results are discarded by the masked store below.
+            let x_after =
+                F32s::<W>::from_fn(|i| if i < n { self.pos_x[(g + i) * nb + torso] } else { 0.0 });
+            let x_before = F32s::<W>::load_or(&self.x_before[g..g + n], 0.0);
+            let forward = (x_after - x_before) / s(DT * FRAME_SKIP as f32);
+            let mut ctrl = s(0.0);
+            for j in 0..adim {
+                let aj = F32s::<W>::from_fn(|i| {
+                    if i < n {
+                        actions[(g + i) * adim + j]
+                    } else {
+                        0.0
+                    }
+                });
+                ctrl = ctrl + aj * aj;
+            }
+            // Healthy test — the same comparisons (and NaN behavior) as
+            // `lane_healthy`, lane-wise.
+            let mut healthy = Mask([true; W]);
+            if let Some((lo, hi)) = self.proto.healthy_z {
+                let y = F32s::<W>::from_fn(|i| {
+                    if i < n {
+                        self.pos_y[(g + i) * nb + torso]
+                    } else {
+                        0.0
+                    }
+                });
+                healthy = healthy & !(y.lt(s(lo)) | y.gt(s(hi)));
+            }
+            if let Some(dev) = self.proto.healthy_angle_dev {
+                let a = F32s::<W>::from_fn(|i| {
+                    if i < n {
+                        self.angle[(g + i) * nb + torso]
+                    } else {
+                        0.0
+                    }
+                });
+                healthy = healthy & !(a - s(self.proto.init_angle)).abs().gt(s(dev));
+            }
+            let bad = Mask(std::array::from_fn(|i| i < n && self.lane_is_bad(g + i)));
+            healthy = healthy & !bad;
+            let reward = s(self.proto.forward_weight) * forward
+                + healthy.select_f32(s(self.proto.healthy_reward), s(0.0))
+                - s(self.proto.ctrl_cost) * ctrl;
+            for i in 0..n {
+                let lane = g + i;
+                if reset_mask[lane] != 0 {
+                    continue;
+                }
+                let done = !healthy.0[i];
+                let truncated =
+                    !done && self.steps[lane] as usize >= self.spec.max_episode_steps;
+                out[lane] = Step { reward: reward.0[i], done, truncated };
+            }
+            g += W;
+        }
+    }
+}
+
 impl VecEnv for WalkerVec {
     fn spec(&self) -> &EnvSpec {
         &self.spec
@@ -175,6 +266,10 @@ impl VecEnv for WalkerVec {
 
     fn num_envs(&self) -> usize {
         self.rng.len()
+    }
+
+    fn set_lane_pass(&mut self, lane_pass: LanePass) {
+        self.width = lane_pass.width();
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
@@ -216,22 +311,31 @@ impl VecEnv for WalkerVec {
             self.steps[lane] += 1;
         }
         // Phase 2 — batch task pass over the SoA lanes: forward reward,
-        // control cost, healthy termination, truncation.
-        for lane in 0..k {
-            if reset_mask[lane] != 0 {
-                continue;
+        // control cost, healthy termination, truncation. SIMD lane pass
+        // when a width is selected (bitwise identical to the scalar
+        // loop below, which remains the width-1 reference).
+        match self.width {
+            8 => self.task_pass_lanes::<8>(actions, reset_mask, out),
+            4 => self.task_pass_lanes::<4>(actions, reset_mask, out),
+            _ => {
+                for lane in 0..k {
+                    if reset_mask[lane] != 0 {
+                        continue;
+                    }
+                    let x_after = self.pos_x[lane * self.nb + self.proto.torso];
+                    let forward = (x_after - self.x_before[lane]) / (DT * FRAME_SKIP as f32);
+                    let act = &actions[lane * adim..(lane + 1) * adim];
+                    let ctrl: f32 = act.iter().map(|a| a * a).sum();
+                    let healthy = self.lane_healthy(lane);
+                    let reward = self.proto.forward_weight * forward
+                        + if healthy { self.proto.healthy_reward } else { 0.0 }
+                        - self.proto.ctrl_cost * ctrl;
+                    let done = !healthy;
+                    let truncated =
+                        !done && self.steps[lane] as usize >= self.spec.max_episode_steps;
+                    out[lane] = Step { reward, done, truncated };
+                }
             }
-            let x_after = self.pos_x[lane * self.nb + self.proto.torso];
-            let forward = (x_after - self.x_before[lane]) / (DT * FRAME_SKIP as f32);
-            let act = &actions[lane * adim..(lane + 1) * adim];
-            let ctrl: f32 = act.iter().map(|a| a * a).sum();
-            let healthy = self.lane_healthy(lane);
-            let reward = self.proto.forward_weight * forward
-                + if healthy { self.proto.healthy_reward } else { 0.0 }
-                - self.proto.ctrl_cost * ctrl;
-            let done = !healthy;
-            let truncated = !done && self.steps[lane] as usize >= self.spec.max_episode_steps;
-            out[lane] = Step { reward, done, truncated };
         }
         // Phase 3 — observation rows straight from the SoA lanes.
         for lane in 0..k {
@@ -269,6 +373,10 @@ impl VecEnv for CheetahRunVec {
 
     fn num_envs(&self) -> usize {
         self.inner.num_envs()
+    }
+
+    fn set_lane_pass(&mut self, lane_pass: LanePass) {
+        self.inner.set_lane_pass(lane_pass);
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {

@@ -67,6 +67,10 @@ impl VecEnv for TimeLimitVec {
         self.inner.num_envs()
     }
 
+    fn set_lane_pass(&mut self, lane_pass: crate::simd::LanePass) {
+        self.inner.set_lane_pass(lane_pass);
+    }
+
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
         self.t[lane] = 0;
         self.inner.reset_lane(lane, obs);
@@ -109,6 +113,10 @@ impl VecEnv for RewardClipVec {
 
     fn num_envs(&self) -> usize {
         self.inner.num_envs()
+    }
+
+    fn set_lane_pass(&mut self, lane_pass: crate::simd::LanePass) {
+        self.inner.set_lane_pass(lane_pass);
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
@@ -189,6 +197,10 @@ impl VecEnv for NormalizeObsVec {
 
     fn num_envs(&self) -> usize {
         self.inner.num_envs()
+    }
+
+    fn set_lane_pass(&mut self, lane_pass: crate::simd::LanePass) {
+        self.inner.set_lane_pass(lane_pass);
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {

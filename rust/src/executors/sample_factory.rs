@@ -43,7 +43,7 @@ impl SampleFactoryExecutor {
     /// `num_envs` split evenly over `num_workers` threads, stepped
     /// per-env (each worker wraps its set in a [`ScalarVec`]).
     pub fn new(task_id: &str, num_envs: usize, num_workers: usize, seed: u64) -> Result<Self> {
-        Self::with_backend(task_id, num_envs, num_workers, seed, false)
+        Self::with_backend(task_id, num_envs, num_workers, seed, None)
     }
 
     /// Like [`Self::new`] but each worker steps its env set through the
@@ -55,7 +55,20 @@ impl SampleFactoryExecutor {
         num_workers: usize,
         seed: u64,
     ) -> Result<Self> {
-        Self::with_backend(task_id, num_envs, num_workers, seed, true)
+        Self::with_backend(task_id, num_envs, num_workers, seed, Some(crate::simd::LanePass::Auto))
+    }
+
+    /// [`Self::new_vectorized`] with an explicit SIMD lane width for the
+    /// workers' kernels (bitwise identical at every width; the
+    /// throughput driver pins widths through this).
+    pub fn new_vectorized_with_lanes(
+        task_id: &str,
+        num_envs: usize,
+        num_workers: usize,
+        seed: u64,
+        lane_pass: crate::simd::LanePass,
+    ) -> Result<Self> {
+        Self::with_backend(task_id, num_envs, num_workers, seed, Some(lane_pass))
     }
 
     fn with_backend(
@@ -63,7 +76,7 @@ impl SampleFactoryExecutor {
         num_envs: usize,
         num_workers: usize,
         seed: u64,
-        vectorized: bool,
+        vectorized: Option<crate::simd::LanePass>,
     ) -> Result<Self> {
         if num_workers == 0 || num_envs % num_workers != 0 {
             return Err(crate::Error::Config(format!(
@@ -91,8 +104,10 @@ impl SampleFactoryExecutor {
                 // way (the SoA kernels are bitwise-equal to the scalar
                 // envs); `vectorized` only changes the stepping engine.
                 let first = (w * per) as u64;
-                let mut envs: Box<dyn VecEnv> = if vectorized {
-                    registry::make_vec_env(&task, seed, first, per).unwrap()
+                let mut envs: Box<dyn VecEnv> = if let Some(lp) = vectorized {
+                    let mut k = registry::make_vec_env(&task, seed, first, per).unwrap();
+                    k.set_lane_pass(lp);
+                    k
                 } else {
                     Box::new(ScalarVec::new(&task, seed, first, per).unwrap())
                 };

@@ -22,7 +22,20 @@ pub struct VecForLoopExecutor {
 
 impl VecForLoopExecutor {
     pub fn new(task_id: &str, num_envs: usize, seed: u64) -> Result<Self> {
-        let envs = registry::make_vec_env(task_id, seed, 0, num_envs)?;
+        Self::new_with_lanes(task_id, num_envs, seed, crate::simd::LanePass::Auto)
+    }
+
+    /// [`Self::new`] with an explicit SIMD lane width for the kernel —
+    /// the Table 2d bench pins scalar-SoA (width 1) against the lane
+    /// pass this way. Every width is bitwise identical.
+    pub fn new_with_lanes(
+        task_id: &str,
+        num_envs: usize,
+        seed: u64,
+        lane_pass: crate::simd::LanePass,
+    ) -> Result<Self> {
+        let mut envs = registry::make_vec_env(task_id, seed, 0, num_envs)?;
+        envs.set_lane_pass(lane_pass);
         Ok(VecForLoopExecutor {
             spec: envs.spec().clone(),
             envs,

@@ -45,20 +45,28 @@
 //! switches the workers to chunked struct-of-arrays execution
 //! ([`envs::vector`]), amortizing per-step dispatch overhead.
 //!
-//! ## ExecMode support matrix
+//! ## ExecMode / kernel support matrix
 //!
 //! Vectorized execution is the engine's primary abstraction: every
 //! registered env family has a real batch kernel, the wrapper stack
 //! ([`envs::wrappers`]) composes identically in both modes, and every
-//! pool flavor (including NUMA shards) accepts either `ExecMode`.
+//! pool flavor (including NUMA shards) accepts either `ExecMode`. On
+//! top of the SoA layout, kernels with a **SIMD lane pass** step whole
+//! lane groups of envs per instruction ([`simd`]; width selected by
+//! `PoolConfig::lane_pass` / `--lane-width {1,4,8,auto}`, width 1 = the
+//! scalar reference loop). Every lane width is **bitwise identical** —
+//! the shared trig twins ([`simd::math`]) and lane-group dynamics apply
+//! the same operations in the same order as the scalar code
+//! (`tests/simd_parity.rs` asserts 0 ULP per step, including masked
+//! tails and mid-batch resets).
 //!
-//! | env family | `ExecMode::Scalar` | `ExecMode::Vectorized` kernel | parity |
-//! |---|---|---|---|
-//! | classic control (4 tasks) | per-env tasks | SoA state kernels (`CartPoleVec`, ...) | bitwise |
-//! | MuJoCo walkers (`Hopper/HalfCheetah/Ant-v4`) | per-env tasks | `WalkerVec` (SoA qpos/qvel lanes, scalar solver per lane) | bitwise |
-//! | Atari (`Pong/Breakout-v5`) | per-env tasks | `AtariVec` (batched emulator lanes, shared preproc) | bitwise |
-//! | dm_control (`cheetah_run`) | per-env tasks | `CheetahRunVec` (shaping over `WalkerVec`) | bitwise |
-//! | wrappers (`TimeLimit`/`RewardClip`/`NormalizeObs`) | one-lane adapters | batch-wise `VecWrapper` layer | bitwise (shared cores) |
+//! | env family | `ExecMode::Scalar` | SoA kernel | SIMD lane pass | parity |
+//! |---|---|---|---|---|
+//! | classic control (4 tasks) | per-env tasks | `CartPoleVec`, ... | full dynamics (incl. RK4 / trig) | bitwise at every width |
+//! | MuJoCo walkers (`Hopper/HalfCheetah/Ant-v4`) | per-env tasks | `WalkerVec` (SoA qpos/qvel lanes) | batch task pass (reward/healthy); solver scalar per lane | bitwise at every width |
+//! | Atari (`Pong/Breakout-v5`) | per-env tasks | `AtariVec` (batched emulator lanes, shared preproc) | — (emulator-bound) | bitwise |
+//! | dm_control (`cheetah_run`) | per-env tasks | `CheetahRunVec` (shaping over `WalkerVec`) | inherits `WalkerVec` | bitwise at every width |
+//! | wrappers (`TimeLimit`/`RewardClip`/`NormalizeObs`) | one-lane adapters | batch-wise `VecWrapper` layer (forwards `set_lane_pass`) | — | bitwise (shared cores) |
 //!
 //! Executors: `forloop`/`subprocess` are scalar by construction;
 //! `forloop-vec` and `sample-factory-vec` drive the same kernels
@@ -77,19 +85,29 @@
 //! `envpool train` / `envpool profile` drive a
 //! [`runtime::ComputeBackend`] (`--backend {auto,pjrt,native}`;
 //! `auto`, the default, picks PJRT when present and falls back to
-//! native, so the trainer never degrades to "skip"):
+//! native, so the trainer never degrades to "skip"). The native
+//! backend has two precisions (`--precision {f64,f32}`): `f64` is the
+//! scalar reference (finite-difference-provable), `f32` the SIMD GEMV
+//! fast path — f32 compute weights mirrored from **f64 master
+//! weights**, re-demoted after every Adam step, with the PPO head math
+//! still in f64 so both precisions share every branch decision.
+//! Documented f32-vs-f64 budget (asserted by `runtime::native` tests):
+//! loss/entropy within 1e-4 relative, per-element gradients within
+//! `1e-4 + 1e-2·|g|` on identical minibatches; FD gradient checks
+//! re-run under f32; reruns are bit-exact.
 //!
-//! | capability | `pjrt` (AOT artifacts) | `native` (pure Rust) |
-//! |---|---|---|
-//! | policy forward (logits / mu+log_std, value) | compiled HLO via PJRT | f64 MLP, 2×Tanh trunk ([`runtime::NativeNet`]) |
-//! | PPO update (clip + value + entropy) | compiled train step | analytic backprop + grad-norm clip + Adam |
-//! | GAE | compiled scan kernel (Pallas-lowerable) | [`agent::gae::gae_ref`] |
-//! | requirements | real `xla` bindings + `make artifacts` | none — the crate alone |
-//! | shapes/schedule source | artifact manifest | [`config::TrainConfig`] |
-//! | determinism | per artifact | exact (`Pcg32`-seeded init, f64 math) |
+//! | capability | `pjrt` (AOT artifacts) | `native` `--precision f64` | `native` `--precision f32` |
+//! |---|---|---|---|
+//! | policy forward (logits / mu+log_std, value) | compiled HLO via PJRT | f64 MLP, 2×Tanh trunk ([`runtime::NativeNet`]) | f32 SIMD GEMV mirror |
+//! | PPO update (clip + value + entropy) | compiled train step | analytic backprop + grad-norm clip + Adam | f32 SIMD fwd/bwd GEMMs, f64 head + Adam on master weights |
+//! | GAE | compiled scan kernel (Pallas-lowerable) | [`agent::gae::gae_ref`] | [`agent::gae::gae_ref`] |
+//! | requirements | real `xla` bindings + `make artifacts` | none — the crate alone | none — the crate alone |
+//! | shapes/schedule source | artifact manifest | [`config::TrainConfig`] | [`config::TrainConfig`] |
+//! | determinism | per artifact | exact (`Pcg32`-seeded init, f64 math) | exact rerun (fixed lane dispatch) |
 
 pub mod error;
 pub mod rng;
+pub mod simd;
 pub mod cli;
 pub mod prop;
 pub mod config;

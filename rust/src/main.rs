@@ -7,6 +7,13 @@
 //!                                         {auto,pjrt,native}` selects the
 //!                                         compute tier (native is pure
 //!                                         Rust, needs no artifacts),
+//!                                         `--precision {f64,f32}` picks the
+//!                                         native arithmetic (f32 = SIMD
+//!                                         fast path, f64 master weights),
+//!                                         `--lane-width {1,4,8,auto}` the
+//!                                         env-kernel SIMD width,
+//!                                         `--eval-episodes N` runs greedy
+//!                                         evaluation after training,
 //!                                         `--curve out.csv` dumps the
 //!                                         learning curve,
 //!                                         `--target-return R` stops early
@@ -80,13 +87,21 @@ fn cmd_bench(args: &Args) -> i32 {
     let threads: usize = args.parse_or("num-threads", 4);
     let steps: u64 = args.parse_or("steps", 10_000);
     let seed: u64 = args.parse_or("seed", 0);
-    match envpool::coordinator::throughput::run_throughput(
-        &task, &executor, num_envs, batch_size, threads, steps, seed,
+    let lane_pass: envpool::simd::LanePass = match args.get("lane-width", "auto").parse() {
+        Ok(lp) => lp,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    match envpool::coordinator::throughput::run_throughput_lanes(
+        &task, &executor, num_envs, batch_size, threads, steps, seed, lane_pass,
     ) {
         Ok(fps) => {
             println!(
                 "env={task} executor={executor} num_envs={num_envs} batch_size={batch_size} \
-                 threads={threads} steps={steps} fps={fps:.0}"
+                 threads={threads} lane_width={} steps={steps} fps={fps:.0}",
+                lane_pass.width()
             );
             0
         }

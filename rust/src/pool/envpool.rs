@@ -47,6 +47,10 @@ pub struct PoolConfig {
     /// modes (batch-wise `VecWrapper`s on chunks, one-lane adapters on
     /// scalar envs).
     pub wrappers: WrapConfig,
+    /// SIMD lane width for the vectorized kernels (ignored by
+    /// `ExecMode::Scalar`). Every width is bitwise identical — a pure
+    /// throughput knob; see [`crate::simd::LanePass`].
+    pub lane_pass: crate::simd::LanePass,
 }
 
 impl PoolConfig {
@@ -60,6 +64,7 @@ impl PoolConfig {
             pin_cores: false,
             exec_mode: ExecMode::Scalar,
             wrappers: WrapConfig::none(),
+            lane_pass: crate::simd::LanePass::Auto,
         }
     }
 
@@ -100,6 +105,13 @@ impl PoolConfig {
     /// Apply an engine-side wrapper stack (see [`WrapConfig`]).
     pub fn wrappers(mut self, w: WrapConfig) -> Self {
         self.wrappers = w;
+        self
+    }
+
+    /// Select the SIMD lane width for vectorized kernels (see
+    /// [`crate::simd::LanePass`]; bitwise-identical at every width).
+    pub fn lane_pass(mut self, lp: crate::simd::LanePass) -> Self {
+        self.lane_pass = lp;
         self
     }
 
@@ -211,13 +223,14 @@ impl EnvPool {
                 let mut first = 0usize;
                 while first < cfg.num_envs {
                     let len = chunk_size.min(cfg.num_envs - first);
-                    let backend = registry::make_vec_env_wrapped(
+                    let mut backend = registry::make_vec_env_wrapped(
                         &cfg.task_id,
                         cfg.seed,
                         first as u64,
                         len,
                         &cfg.wrappers,
                     )?;
+                    backend.set_lane_pass(cfg.lane_pass);
                     chunks.push(Chunk::new(backend, first as u32, act_dim));
                     first += len;
                 }

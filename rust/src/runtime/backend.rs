@@ -18,12 +18,12 @@
 //! `(task, num_envs)` than this run asks for — genuine PJRT errors
 //! (corrupt manifest, compile/shape failures) still surface.
 
-use super::native::{Adam, MinibatchF64, NativeNet, PpoHyper};
+use super::native::{Adam, MinibatchF64, NativeNet, ParamsF32, PpoHyper};
 use super::policy::PolicyOutput;
 use super::trainer_exec::{GaeExec, Minibatch, TrainExec, TrainStats};
 use super::{Manifest, Policy, Runtime};
 use crate::agent::params::ParamStore;
-use crate::config::{BackendKind, TrainConfig};
+use crate::config::{BackendKind, Precision, TrainConfig};
 use crate::envs::spec::EnvSpec;
 use crate::{Error, Result};
 
@@ -51,6 +51,14 @@ pub struct BackendSpec {
 pub trait ComputeBackend {
     /// `"pjrt"` or `"native"` (reported in the train summary).
     fn kind(&self) -> &'static str;
+
+    /// Arithmetic the backend computes in, reported in the train
+    /// summary: `"f32"` for the PJRT artifacts (XLA f32 graphs, the
+    /// default impl) and for the native fast path; `"f64"` for the
+    /// native reference path.
+    fn precision(&self) -> &'static str {
+        "f32"
+    }
 
     /// Shapes/schedule this backend was built for.
     fn spec(&self) -> &BackendSpec;
@@ -208,6 +216,17 @@ pub struct NativeBackend {
     hp: PpoHyper,
     max_grad_norm: f64,
     spec: BackendSpec,
+    /// Compute precision (`TrainConfig::precision`): `F64` runs the
+    /// scalar reference loops, `F32` the SIMD GEMV fast path with f64
+    /// master weights (see [`crate::runtime::native`]).
+    precision: Precision,
+    /// f32 mirror of the master weights — the fast path's compute
+    /// weights, re-demoted after every optimizer step. Only read (and
+    /// only refreshed) under `Precision::F32`; precision is fixed at
+    /// construction.
+    params32: ParamsF32,
+    /// f64 scratch for promoting f32-path gradients into Adam.
+    g64: Vec<Vec<f64>>,
     /// Scratch for f32⇄f64 forward conversion (reused across calls).
     obs64: Vec<f64>,
     /// Scratch for f32⇄f64 minibatch conversion (reused across calls).
@@ -247,12 +266,17 @@ impl NativeBackend {
             gamma: cfg.gamma,
             lam: cfg.gae_lambda,
         };
+        let params32 = net.params_f32();
+        let g64 = net.zeros_like();
         Ok(NativeBackend {
             net,
             opt,
             hp,
             max_grad_norm: cfg.max_grad_norm as f64,
             spec,
+            precision: cfg.precision,
+            params32,
+            g64,
             obs64: Vec::new(),
             mb64: MinibatchF64 {
                 obs: Vec::new(),
@@ -276,6 +300,13 @@ impl ComputeBackend for NativeBackend {
         "native"
     }
 
+    fn precision(&self) -> &'static str {
+        match self.precision {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
     fn spec(&self) -> &BackendSpec {
         &self.spec
     }
@@ -293,6 +324,22 @@ impl ComputeBackend for NativeBackend {
             )));
         }
         let bsz = obs.len() / d;
+        if self.precision == Precision::F32 {
+            // Fast path: f32 SIMD forward on the mirror weights — no
+            // f32⇄f64 conversion anywhere on the inference hot path.
+            let fwd = self.net.forward_f32(&self.params32, obs, bsz);
+            let log_std = if self.spec.continuous {
+                let ls = self.net.log_std_of(&self.params32);
+                let mut out = Vec::with_capacity(bsz * ls.len());
+                for _ in 0..bsz {
+                    out.extend_from_slice(ls);
+                }
+                out
+            } else {
+                Vec::new()
+            };
+            return Ok(PolicyOutput { dist: fwd.dist, log_std, value: fwd.value });
+        }
         self.obs64.clear();
         self.obs64.extend(obs.iter().map(|&x| x as f64));
         let fwd = self.net.forward(&self.obs64, bsz);
@@ -321,14 +368,35 @@ impl ComputeBackend for NativeBackend {
             dst.clear();
             dst.extend(src.iter().map(|&x| x as f64));
         }
-        refill(&mut self.mb64.obs, mb.obs);
         refill(&mut self.mb64.actions, mb.actions);
         refill(&mut self.mb64.logp, mb.logp);
         refill(&mut self.mb64.adv, mb.adv);
         refill(&mut self.mb64.ret, mb.ret);
-        let (stats, grads) = self.net.loss_and_grad(&self.mb64, &self.hp, true);
-        let mut grads = grads.expect("want_grad = true always yields gradients");
-        self.opt.step(&mut self.net, &mut grads, lr as f64, self.max_grad_norm);
+        let stats = if self.precision == Precision::F32 {
+            // Fast path: f32 SIMD forward+backward on the mirror
+            // weights (obs stays f32 — the head pass only needs the
+            // f64 action/logp/adv/ret views refilled above), then
+            // promote the gradients and run Adam on the f64 master
+            // weights, then re-demote the mirror.
+            let (stats, g32) =
+                self.net.loss_and_grad_f32(&self.params32, mb.obs, &self.mb64, &self.hp);
+            for (dst, src) in self.g64.iter_mut().zip(&g32) {
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = v as f64;
+                }
+            }
+            self.opt.step(&mut self.net, &mut self.g64, lr as f64, self.max_grad_norm);
+            self.net.refresh_params_f32(&mut self.params32);
+            stats
+        } else {
+            refill(&mut self.mb64.obs, mb.obs);
+            let (stats, grads) = self.net.loss_and_grad(&self.mb64, &self.hp, true);
+            let mut grads = grads.expect("want_grad = true always yields gradients");
+            self.opt.step(&mut self.net, &mut grads, lr as f64, self.max_grad_norm);
+            // No mirror refresh here: under F64 the mirror is never
+            // read, and precision cannot change after construction.
+            stats
+        };
         Ok(TrainStats {
             loss: stats.loss as f32,
             pg_loss: stats.pg_loss as f32,
@@ -440,6 +508,72 @@ mod tests {
         );
         assert_eq!(adv, adv2);
         assert_eq!(ret, ret2);
+    }
+
+    #[test]
+    fn f32_precision_trains_deterministically_and_tracks_f64() {
+        use crate::rng::Pcg32;
+        let spec = registry::spec_for("CartPole-v1").unwrap();
+        let mk = |precision: Precision| {
+            let mut cfg = native_cfg("CartPole-v1");
+            cfg.precision = precision;
+            NativeBackend::make(&cfg, &spec).unwrap()
+        };
+        let mut a = mk(Precision::F32);
+        let mut b = mk(Precision::F32);
+        let mut c = mk(Precision::F64);
+        assert_eq!(ComputeBackend::precision(&a), "f32");
+        assert_eq!(ComputeBackend::precision(&c), "f64");
+
+        let mut rng = Pcg32::new(5, 2);
+        let bsz = 16;
+        let obs: Vec<f32> = (0..bsz * 4).map(|_| rng.range(-0.1, 0.1)).collect();
+        let actions: Vec<f32> = (0..bsz).map(|_| rng.below(2) as f32).collect();
+        let logp = vec![-0.6931f32; bsz];
+        let adv: Vec<f32> = (0..bsz).map(|_| rng.range(-1.0, 1.0)).collect();
+        let ret: Vec<f32> = (0..bsz).map(|_| rng.range(-1.0, 1.0)).collect();
+
+        // Same init: the f32 fast-path forward tracks the f64 forward
+        // within forward-rounding tolerance.
+        let fa = a.forward(&obs).unwrap();
+        let fc = c.forward(&obs).unwrap();
+        for (x, y) in fa.dist.iter().zip(&fc.dist) {
+            assert!((x - y).abs() <= 1e-4, "dist {x} vs {y}");
+        }
+        for (x, y) in fa.value.iter().zip(&fc.value) {
+            assert!((x - y).abs() <= 1e-4, "value {x} vs {y}");
+        }
+
+        let mb = Minibatch { obs: &obs, actions: &actions, logp: &logp, adv: &adv, ret: &ret };
+        let sa = a.train_minibatch(&mb, 1e-3).unwrap();
+        let sb = b.train_minibatch(&mb, 1e-3).unwrap();
+        let sc = c.train_minibatch(&mb, 1e-3).unwrap();
+
+        // Exact rerun determinism of the fast path: identical stats and
+        // bitwise-identical master weights across the two f32 runs.
+        assert_eq!(sa.loss.to_bits(), sb.loss.to_bits());
+        for (va, vb) in
+            a.params().values.iter().flatten().zip(b.params().values.iter().flatten())
+        {
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
+        // Documented budget on the identical minibatch: stats within
+        // 1e-4 relative of the f64 reference, master weights within
+        // 2·lr after one Adam step (Adam's sign-normalized update
+        // bounds per-element drift to ~lr; 2× covers a sign flip of a
+        // near-zero gradient).
+        assert!(
+            (sa.loss - sc.loss).abs() <= 1e-4 * (1.0 + sc.loss.abs()),
+            "loss {} vs {}",
+            sa.loss,
+            sc.loss
+        );
+        assert!((sa.entropy - sc.entropy).abs() <= 1e-3);
+        for (va, vc) in
+            a.params().values.iter().flatten().zip(c.params().values.iter().flatten())
+        {
+            assert!((va - vc).abs() <= 2e-3, "param {va} vs {vc}");
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use crate::agent::params::{actor_critic_meta, ParamStore};
 use crate::runtime::artifact::ParamMeta;
+use crate::simd::axpy_f32;
 use crate::{Error, Result};
 
 /// Tensor indices into [`NativeNet::params`] (fixed by construction).
@@ -68,6 +69,18 @@ pub struct MinibatchF64 {
     pub adv: Vec<f64>,
     /// `[B]` returns.
     pub ret: Vec<f64>,
+}
+
+/// Output of the shared per-sample PPO head pass: loss scalars plus
+/// gradients w.r.t. the head outputs (`dist`, `value`, `log_std`).
+struct HeadPass {
+    stats: NativeStats,
+    /// `[B, act_dim]` dL/d(logits or mu).
+    d_dist: Vec<f64>,
+    /// `[B]` dL/d(value).
+    d_value: Vec<f64>,
+    /// `[act_dim]` dL/d(log_std) (continuous only; empty otherwise).
+    d_log_std: Vec<f64>,
 }
 
 /// Forward-pass activations cached for backprop.
@@ -199,28 +212,29 @@ impl NativeNet {
         }
     }
 
-    /// Evaluate the PPO loss on one minibatch; when `want_grad`, also
-    /// return analytic gradients (same shapes as `params`, **unclipped**
-    /// — clipping happens in [`Adam::step`] so finite differences
-    /// compare against the raw derivative).
-    ///
-    /// Loss (CleanRL semantics): `L = pg - c2·H + c1·v`, with
-    /// `pg = mean(max(-Â·r, -Â·clip(r, 1±eps)))`,
-    /// `v = mean(0.5 (V - ret)²)`, `H` the mean policy entropy, and `Â`
-    /// the (optionally minibatch-normalized) advantages.
-    pub fn loss_and_grad(
+    /// The per-sample PPO head pass shared by the f64 path and the f32
+    /// fast path: from the head outputs (`dist`, `value`, `log_std`) and
+    /// the minibatch, compute the loss scalars and the gradients w.r.t.
+    /// the head outputs. Branchy decisions (clip branch, softmax max)
+    /// always run in f64 — under `--precision f32` the inputs are
+    /// promoted activations, so the two precisions share every branch
+    /// and differ only by f32 rounding of the linear algebra.
+    /// `log_std` is a parameter (not read from `self.params`) so the
+    /// f32 path differentiates w.r.t. its own demoted copy.
+    fn head_pass(
         &self,
+        dist: &[f64],
+        value: &[f64],
+        log_std: &[f64],
         mb: &MinibatchF64,
         hp: &PpoHyper,
-        want_grad: bool,
-    ) -> (NativeStats, Option<Vec<Vec<f64>>>) {
+    ) -> HeadPass {
         let a = self.act_dim;
-        let h = self.hidden;
         let bsz = mb.logp.len();
-        debug_assert_eq!(mb.obs.len(), bsz * self.obs_dim);
+        debug_assert_eq!(dist.len(), bsz * a);
+        debug_assert_eq!(value.len(), bsz);
         debug_assert_eq!(mb.actions.len(), if self.continuous { bsz * a } else { bsz });
         let bf = bsz as f64;
-        let fwd = self.forward(&mb.obs, bsz);
 
         // Advantage normalization is constant w.r.t. parameters.
         let advn: Vec<f64> = if hp.norm_adv {
@@ -242,7 +256,7 @@ impl NativeNet {
         let mut zs = vec![0.0; a]; // z-score scratch (continuous)
         for i in 0..bsz {
             // ---- value head: c1 * 0.5 (V - ret)^2, meaned over batch ----
-            let dv = fwd.value[i] - mb.ret[i];
+            let dv = value[i] - mb.ret[i];
             v_sum += 0.5 * dv * dv;
             d_value[i] = hp.vf_coef * dv / bf;
 
@@ -250,12 +264,12 @@ impl NativeNet {
             let (logp_new, entropy_i);
             let mut lse = 0.0; // discrete log-sum-exp, reused by the grad pass
             if self.continuous {
-                let mu = &fwd.dist[i * a..(i + 1) * a];
+                let mu = &dist[i * a..(i + 1) * a];
                 let acts = &mb.actions[i * a..(i + 1) * a];
                 let mut lp = 0.0;
                 let mut ent = 0.0;
                 for k in 0..a {
-                    let ls = self.params[LOG_STD][k];
+                    let ls = log_std[k];
                     let z = (acts[k] - mu[k]) * (-ls).exp();
                     zs[k] = z;
                     lp += -0.5 * z * z - ls - 0.5 * LN_2PI;
@@ -264,7 +278,7 @@ impl NativeNet {
                 logp_new = lp;
                 entropy_i = ent;
             } else {
-                let logits = &fwd.dist[i * a..(i + 1) * a];
+                let logits = &dist[i * a..(i + 1) * a];
                 let maxl = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
                 let mut z = 0.0;
                 for k in 0..a {
@@ -300,14 +314,14 @@ impl NativeNet {
             // ---- distribute into head gradients ----
             if self.continuous {
                 for k in 0..a {
-                    let ls = self.params[LOG_STD][k];
+                    let ls = log_std[k];
                     // d logp / d mu_k = z / std
                     d_dist[i * a + k] = dl_dlogp * zs[k] * (-ls).exp();
                     // d logp / d log_std_k = z^2 - 1
                     d_log_std[k] += dl_dlogp * (zs[k] * zs[k] - 1.0);
                 }
             } else {
-                let logits = &fwd.dist[i * a..(i + 1) * a];
+                let logits = &dist[i * a..(i + 1) * a];
                 let act = mb.actions[i] as usize;
                 for k in 0..a {
                     let logp_k = logits[k] - lse;
@@ -336,6 +350,31 @@ impl NativeNet {
             approx_kl: kl_sum / bf,
             loss: pg_sum / bf - hp.ent_coef * (ent_sum / bf) + hp.vf_coef * (v_sum / bf),
         };
+        HeadPass { stats, d_dist, d_value, d_log_std }
+    }
+
+    /// Evaluate the PPO loss on one minibatch; when `want_grad`, also
+    /// return analytic gradients (same shapes as `params`, **unclipped**
+    /// — clipping happens in [`Adam::step`] so finite differences
+    /// compare against the raw derivative).
+    ///
+    /// Loss (CleanRL semantics): `L = pg - c2·H + c1·v`, with
+    /// `pg = mean(max(-Â·r, -Â·clip(r, 1±eps)))`,
+    /// `v = mean(0.5 (V - ret)²)`, `H` the mean policy entropy, and `Â`
+    /// the (optionally minibatch-normalized) advantages.
+    pub fn loss_and_grad(
+        &self,
+        mb: &MinibatchF64,
+        hp: &PpoHyper,
+        want_grad: bool,
+    ) -> (NativeStats, Option<Vec<Vec<f64>>>) {
+        let a = self.act_dim;
+        let h = self.hidden;
+        let bsz = mb.logp.len();
+        debug_assert_eq!(mb.obs.len(), bsz * self.obs_dim);
+        let fwd = self.forward(&mb.obs, bsz);
+        let head = self.head_pass(&fwd.dist, &fwd.value, self.log_std(), mb, hp);
+        let HeadPass { stats, d_dist, d_value, d_log_std } = head;
         if !want_grad {
             return (stats, None);
         }
@@ -452,6 +491,232 @@ fn affine(
             for j in 0..d_out {
                 orow[j] += xv * wrow[j];
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 fast path (`TrainConfig::precision = f32`)
+// ---------------------------------------------------------------------
+
+/// f32 mirror of the parameter tensors — the **compute weights** of the
+/// f32 fast path. The f64 tensors in [`NativeNet::params`] remain the
+/// master weights: Adam updates them in f64, then
+/// [`NativeNet::refresh_params_f32`] re-demotes into this mirror (the
+/// classic mixed-precision scheme, so optimizer drift never accumulates
+/// in half the mantissa).
+#[derive(Debug, Clone)]
+pub struct ParamsF32 {
+    /// Tensors in [`actor_critic_meta`] order, flat row-major.
+    pub t: Vec<Vec<f32>>,
+}
+
+/// f32 forward-pass activations cached for backprop.
+pub struct ForwardF32 {
+    /// `[B, hidden]` after the first Tanh.
+    pub h1: Vec<f32>,
+    /// `[B, hidden]` after the second Tanh.
+    pub h2: Vec<f32>,
+    /// `[B, act_dim]` logits (discrete) or mu (continuous).
+    pub dist: Vec<f32>,
+    /// `[B]` state values.
+    pub value: Vec<f32>,
+}
+
+impl NativeNet {
+    /// Demote the f64 master weights into a fresh f32 mirror.
+    pub fn params_f32(&self) -> ParamsF32 {
+        ParamsF32 {
+            t: self.params.iter().map(|v| v.iter().map(|&x| x as f32).collect()).collect(),
+        }
+    }
+
+    /// Re-demote the master weights into an existing mirror (after each
+    /// optimizer step; no allocation).
+    pub fn refresh_params_f32(&self, dst: &mut ParamsF32) {
+        for (d, sv) in dst.t.iter_mut().zip(&self.params) {
+            for (x, &y) in d.iter_mut().zip(sv) {
+                *x = y as f32;
+            }
+        }
+    }
+
+    /// The f32 mirror's state-independent log-std row (continuous nets
+    /// only; empty otherwise).
+    pub fn log_std_of<'a>(&self, p: &'a ParamsF32) -> &'a [f32] {
+        if self.continuous {
+            &p.t[LOG_STD]
+        } else {
+            &[]
+        }
+    }
+
+    /// Batched f32 forward pass over the mirror weights: the same
+    /// network as [`NativeNet::forward`], with every affine running the
+    /// SIMD lane pass ([`affine_f32`]). This is the rollout-inference
+    /// hot path under `--precision f32` — no f64 promotion anywhere.
+    pub fn forward_f32(&self, p: &ParamsF32, x: &[f32], bsz: usize) -> ForwardF32 {
+        debug_assert_eq!(x.len(), bsz * self.obs_dim);
+        let h = self.hidden;
+        let a = self.act_dim;
+        let mut h1 = vec![0.0f32; bsz * h];
+        let mut h2 = vec![0.0f32; bsz * h];
+        let mut dist = vec![0.0f32; bsz * a];
+        let mut value = vec![0.0f32; bsz];
+        affine_f32(x, &p.t[W1], &p.t[B1], &mut h1, bsz, self.obs_dim, h);
+        for v in h1.iter_mut() {
+            *v = v.tanh();
+        }
+        affine_f32(&h1, &p.t[W2], &p.t[B2], &mut h2, bsz, h, h);
+        for v in h2.iter_mut() {
+            *v = v.tanh();
+        }
+        affine_f32(&h2, &p.t[WP], &p.t[BP], &mut dist, bsz, h, a);
+        let (wv, bv) = (&p.t[self.idx_wv()], &p.t[self.idx_bv()]);
+        affine_f32(&h2, wv, bv, &mut value, bsz, h, 1);
+        ForwardF32 { h1, h2, dist, value }
+    }
+
+    /// The f32 fast-path loss + gradient: f32 SIMD forward, the shared
+    /// f64 head pass on promoted head outputs (every branch decision is
+    /// taken by the same f64 code as the f64 path — the precisions can
+    /// only differ by rounding, never by branching), then f32 SIMD
+    /// backward GEMMs. Returns gradients w.r.t. the **mirror** weights
+    /// `p` (what the finite-difference guard in the tests perturbs);
+    /// the backend promotes them to f64 for Adam on the master weights.
+    ///
+    /// `mb` supplies actions/logp/adv/ret (f64, shared head pass);
+    /// `obs32` is the raw f32 observation matrix — the fast path never
+    /// promotes the `[B, obs_dim]` block.
+    pub fn loss_and_grad_f32(
+        &self,
+        p: &ParamsF32,
+        obs32: &[f32],
+        mb: &MinibatchF64,
+        hp: &PpoHyper,
+    ) -> (NativeStats, Vec<Vec<f32>>) {
+        let a = self.act_dim;
+        let h = self.hidden;
+        let bsz = mb.logp.len();
+        debug_assert_eq!(obs32.len(), bsz * self.obs_dim);
+        let fwd = self.forward_f32(p, obs32, bsz);
+
+        // Promote head outputs (O(B·A), tiny next to the GEMMs).
+        let dist64: Vec<f64> = fwd.dist.iter().map(|&v| v as f64).collect();
+        let value64: Vec<f64> = fwd.value.iter().map(|&v| v as f64).collect();
+        let ls64: Vec<f64> = self.log_std_of(p).iter().map(|&v| v as f64).collect();
+        let head = self.head_pass(&dist64, &value64, &ls64, mb, hp);
+
+        // Demote head gradients; everything below is f32 + SIMD.
+        let d_dist: Vec<f32> = head.d_dist.iter().map(|&v| v as f32).collect();
+        let d_value: Vec<f32> = head.d_value.iter().map(|&v| v as f32).collect();
+        let mut g: Vec<Vec<f32>> = self.params.iter().map(|v| vec![0.0f32; v.len()]).collect();
+
+        // policy head: gwp[k, :] += h2[i, k] · d_dist[i, :]
+        for i in 0..bsz {
+            let h2row = &fwd.h2[i * h..(i + 1) * h];
+            let drow = &d_dist[i * a..(i + 1) * a];
+            for k in 0..h {
+                axpy_f32(h2row[k], drow, &mut g[WP][k * a..(k + 1) * a]);
+            }
+            for (bj, &dj) in g[BP].iter_mut().zip(drow) {
+                *bj += dj;
+            }
+        }
+        // value head (axpy over the hidden dim — the vectorized axis)
+        let (iwv, ibv) = (self.idx_wv(), self.idx_bv());
+        for i in 0..bsz {
+            let h2row = &fwd.h2[i * h..(i + 1) * h];
+            axpy_f32(d_value[i], h2row, &mut g[iwv]);
+            g[ibv][0] += d_value[i];
+        }
+        if self.continuous {
+            for (dst, &v) in g[LOG_STD].iter_mut().zip(&head.d_log_std) {
+                *dst = v as f32;
+            }
+        }
+        // dpre2 = (d_dist @ wp^T + d_value ⊗ wv) ⊙ (1 − h2²)
+        let mut dpre2 = vec![0.0f32; bsz * h];
+        {
+            let wp = &p.t[WP];
+            let wv = &p.t[iwv];
+            for i in 0..bsz {
+                let drow = &d_dist[i * a..(i + 1) * a];
+                let h2row = &fwd.h2[i * h..(i + 1) * h];
+                let outr = &mut dpre2[i * h..(i + 1) * h];
+                for k in 0..h {
+                    let mut acc = d_value[i] * wv[k];
+                    let wrow = &wp[k * a..(k + 1) * a];
+                    for j in 0..a {
+                        acc += drow[j] * wrow[j];
+                    }
+                    outr[k] = acc * (1.0 - h2row[k] * h2row[k]);
+                }
+            }
+        }
+        // gw2[k, :] += h1[i, k] · dpre2[i, :]; dpre1 = dpre2 @ w2^T — the
+        // w2ᵀ contraction runs the SIMD reduction (`dot_f32`, the one
+        // reassociating op: ULP-budgeted, see `tests/simd_parity.rs`).
+        let mut dpre1 = vec![0.0f32; bsz * h];
+        {
+            let w2 = &p.t[W2];
+            for i in 0..bsz {
+                let h1row = &fwd.h1[i * h..(i + 1) * h];
+                let drow = &dpre2[i * h..(i + 1) * h];
+                for k in 0..h {
+                    axpy_f32(h1row[k], drow, &mut g[W2][k * h..(k + 1) * h]);
+                }
+                for (bj, &dj) in g[B2].iter_mut().zip(drow) {
+                    *bj += dj;
+                }
+                let outr = &mut dpre1[i * h..(i + 1) * h];
+                for k in 0..h {
+                    let acc = crate::simd::dot_f32(drow, &w2[k * h..(k + 1) * h]);
+                    outr[k] = acc * (1.0 - h1row[k] * h1row[k]);
+                }
+            }
+        }
+        // gw1[d, :] += x[i, d] · dpre1[i, :]
+        let d_in = self.obs_dim;
+        for i in 0..bsz {
+            let xrow = &obs32[i * d_in..(i + 1) * d_in];
+            let drow = &dpre1[i * h..(i + 1) * h];
+            for k in 0..d_in {
+                axpy_f32(xrow[k], drow, &mut g[W1][k * h..(k + 1) * h]);
+            }
+            for (bj, &dj) in g[B1].iter_mut().zip(drow) {
+                *bj += dj;
+            }
+        }
+        (head.stats, g)
+    }
+}
+
+/// `out[i,j] = b[j] + sum_k x[i,k] w[k,j]` in f32 with the SIMD lane
+/// pass over `j` ([`axpy_f32`]): per output the accumulation order is
+/// identical to the scalar loop (k ascending), so this is **bitwise**
+/// equal to a naive f32 affine — only the f32-vs-f64 precision differs
+/// from [`affine`], and that is governed by the tolerance tests.
+#[allow(clippy::too_many_arguments)]
+fn affine_f32(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    bsz: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    debug_assert_eq!(w.len(), d_in * d_out);
+    for i in 0..bsz {
+        let orow = &mut out[i * d_out..(i + 1) * d_out];
+        orow.copy_from_slice(b);
+        let xrow = &x[i * d_in..(i + 1) * d_in];
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            axpy_f32(xv, &w[k * d_out..(k + 1) * d_out], orow);
         }
     }
 }
@@ -588,6 +853,174 @@ mod tests {
                     ti,
                     net.meta[ti].name,
                 );
+            }
+        }
+    }
+
+    /// Like [`synth_minibatch`], but the behaviour-policy log-prob
+    /// offsets are pushed well away from the PPO clip kinks
+    /// (|logratio| near 0 or 0.5; the boundary sits at ln(1.2) = 0.18),
+    /// so f32-sized finite-difference steps and f32-vs-f64 comparisons
+    /// never straddle a `max()` branch - the budgets those tests assert
+    /// measure rounding, not branch flips.
+    fn synth_minibatch_margin(net: &NativeNet, bsz: usize, seed: u64) -> MinibatchF64 {
+        let mut rng = Pcg32::new(seed, 177);
+        let a = net.act_dim;
+        let obs: Vec<f64> =
+            (0..bsz * net.obs_dim).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        let fwd = net.forward(&obs, bsz);
+        let mut actions = Vec::new();
+        let mut logp = Vec::new();
+        for i in 0..bsz {
+            let noise = match i % 3 {
+                0 => rng.range(-0.02, 0.02) as f64,
+                1 => 0.5 + rng.range(-0.02, 0.02) as f64,
+                _ => -0.5 + rng.range(-0.02, 0.02) as f64,
+            };
+            if net.continuous {
+                let mut lp = 0.0;
+                for k in 0..a {
+                    let ls = net.params[LOG_STD][k];
+                    let act = fwd.dist[i * a + k] + rng.range(-1.0, 1.0) as f64;
+                    let z = (act - fwd.dist[i * a + k]) * (-ls).exp();
+                    lp += -0.5 * z * z - ls - 0.5 * LN_2PI;
+                    actions.push(act);
+                }
+                logp.push(lp + noise);
+            } else {
+                let logits = &fwd.dist[i * a..(i + 1) * a];
+                let act = rng.below(a as u32) as usize;
+                let maxl = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let lse = maxl + logits.iter().map(|l| (l - maxl).exp()).sum::<f64>().ln();
+                actions.push(act as f64);
+                logp.push(logits[act] - lse + noise);
+            }
+        }
+        let adv: Vec<f64> = (0..bsz).map(|_| rng.range(-2.0, 2.0) as f64).collect();
+        let ret: Vec<f64> = (0..bsz).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        MinibatchF64 { obs, actions, logp, adv, ret }
+    }
+
+    #[test]
+    fn f32_path_agrees_with_f64_within_documented_budget() {
+        // The documented f32-vs-f64 budget (also in lib.rs): loss and
+        // entropy within 1e-4 relative, per-element gradients within
+        // 1e-4 + 1e-2*|g|. Away from clip kinks (margin minibatch) the
+        // two paths share every branch, so the residual is pure f32
+        // rounding of the GEMMs - typically orders of magnitude below
+        // this budget.
+        for (continuous, seed) in [(false, 31u64), (true, 37)] {
+            let net = NativeNet::new(5, 2, 16, continuous, seed).unwrap();
+            let mb = synth_minibatch_margin(&net, 16, seed + 1);
+            let hp = hyper();
+            let (s64, g64) = net.loss_and_grad(&mb, &hp, true);
+            let g64 = g64.unwrap();
+            let p32 = net.params_f32();
+            let obs32: Vec<f32> = mb.obs.iter().map(|&x| x as f32).collect();
+            let (s32, g32) = net.loss_and_grad_f32(&p32, &obs32, &mb, &hp);
+            assert!(
+                (s32.loss - s64.loss).abs() <= 1e-4 * (1.0 + s64.loss.abs()),
+                "continuous={continuous}: loss {} vs {}",
+                s32.loss,
+                s64.loss
+            );
+            assert!((s32.entropy - s64.entropy).abs() <= 1e-4 * (1.0 + s64.entropy.abs()));
+            assert!((s32.v_loss - s64.v_loss).abs() <= 1e-4 * (1.0 + s64.v_loss.abs()));
+            for ti in 0..g64.len() {
+                for k in 0..g64[ti].len() {
+                    let (a, b) = (g32[ti][k] as f64, g64[ti][k]);
+                    assert!(
+                        (a - b).abs() <= 1e-4 + 1e-2 * b.abs(),
+                        "continuous={continuous} tensor {} [{k}]: {a} vs {b}",
+                        net.meta[ti].name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn finite_difference_gradients_f32_path() {
+        // The FD guard re-run under the f32 fast path: central
+        // differences on the f32 compute weights vs the analytic f32
+        // gradients. eps is a power of two (exact in f32); the loss is
+        // accumulated in f64 from promoted activations, so FD noise is
+        // f32 forward rounding (~1e-6 abs) - far below tol at this eps.
+        // The margin minibatch keeps the step from crossing clip kinks.
+        for (continuous, seed) in [(false, 41u64), (true, 43)] {
+            let net = NativeNet::new(4, 2, 8, continuous, seed).unwrap();
+            let mb = synth_minibatch_margin(&net, 10, seed + 2);
+            let obs32: Vec<f32> = mb.obs.iter().map(|&x| x as f32).collect();
+            let p32 = net.params_f32();
+            let hp = hyper();
+            let (_, grads) = net.loss_and_grad_f32(&p32, &obs32, &mb, &hp);
+            let eps = 0.00390625f32; // 2^-8
+            for ti in 0..p32.t.len() {
+                let len = p32.t[ti].len();
+                let stride = (len / 4).max(1);
+                for k in (0..len).step_by(stride) {
+                    let mut plus = p32.clone();
+                    plus.t[ti][k] += eps;
+                    let mut minus = p32.clone();
+                    minus.t[ti][k] -= eps;
+                    let lp = net.loss_and_grad_f32(&plus, &obs32, &mb, &hp).0.loss;
+                    let lm = net.loss_and_grad_f32(&minus, &obs32, &mb, &hp).0.loss;
+                    let fd = (lp - lm) / (2.0 * eps as f64);
+                    let an = grads[ti][k] as f64;
+                    let tol = 5e-4 + 3e-2 * fd.abs().max(an.abs());
+                    assert!(
+                        (fd - an).abs() <= tol,
+                        "continuous={continuous} tensor {} ({}) index {k}: \
+                         finite-diff {fd:.7} vs analytic {an:.7}",
+                        ti,
+                        net.meta[ti].name,
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_mirror_roundtrip_and_affine_bitwise() {
+        let net = NativeNet::new(3, 2, 8, true, 7).unwrap();
+        let mut p32 = net.params_f32();
+        assert_eq!(p32.t.len(), net.params.len());
+        assert_eq!(net.log_std_of(&p32).len(), 2);
+        // refresh reproduces a fresh demotion bitwise
+        let fresh = net.params_f32();
+        for v in p32.t.iter_mut().flatten() {
+            *v = 99.0;
+        }
+        net.refresh_params_f32(&mut p32);
+        for (a, b) in p32.t.iter().flatten().zip(fresh.t.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // affine_f32's lane pass preserves per-output accumulation
+        // order: bitwise equal to the naive scalar f32 loop.
+        let mut rng = Pcg32::new(9, 9);
+        for (bsz, d_in, d_out) in [(3usize, 4usize, 64usize), (2, 7, 5), (1, 11, 1)] {
+            let x: Vec<f32> = (0..bsz * d_in).map(|_| rng.range(-1.0, 1.0)).collect();
+            let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.range(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..d_out).map(|_| rng.range(-1.0, 1.0)).collect();
+            let mut got = vec![0.0f32; bsz * d_out];
+            affine_f32(&x, &w, &b, &mut got, bsz, d_in, d_out);
+            let mut want = vec![0.0f32; bsz * d_out];
+            for i in 0..bsz {
+                let orow = &mut want[i * d_out..(i + 1) * d_out];
+                orow.copy_from_slice(&b);
+                for k in 0..d_in {
+                    let xv = x[i * d_in + k];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for j in 0..d_out {
+                        orow[j] += xv * w[k * d_out + j];
+                    }
+                }
+            }
+            for (a, bb) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), bb.to_bits(), "{bsz}x{d_in}x{d_out}");
             }
         }
     }

@@ -1,0 +1,170 @@
+//! Deterministic, branchless f32 trigonometry — the **shared twin** of
+//! the lane-pass trig.
+//!
+//! # Why not libm
+//!
+//! `f32::sin` dispatches to the platform libm: a scalar call per lane
+//! that the auto-vectorizer cannot touch, and whose exact results vary
+//! across libm versions. The classic-control dynamics are trig-bound
+//! (CartPole's `sin_cos`, Pendulum's `sin`, Acrobot's RK4 full of
+//! `cos`), so a SIMD lane pass that still made one libm call per lane
+//! would win almost nothing. These kernels replace libm in the shared
+//! dynamics functions of [`crate::envs::classic`], which keeps the
+//! scalar envs and every SIMD lane width **bitwise identical**: the
+//! vector paths ([`super::F32s::sin_cos`]) loop lanes over the *same*
+//! inline function, whose body is branchless straight-line arithmetic
+//! the vectorizer handles.
+//!
+//! # Accuracy
+//!
+//! Argument reduction and the polynomial kernel are evaluated in f64
+//! (promote → reduce → fdlibm minimax polynomials over |r| ≤ π/4 →
+//! demote), so the f64 result carries ~1e-16 relative error and the
+//! demotion to f32 is the correctly-rounded value except in
+//! double-rounding near-ties. Net: **≤ 1 ULP** from the
+//! correctly-rounded f32 result for |x| up to ~1e6 (the parity suite
+//! asserts this budget against the f64 libm reference); the envs see
+//! |x| ≲ 100.
+//!
+//! Determinism: no FMA, no libm, no lookup tables — pure f64 `+ - *`
+//! with fixed constants, identical on every platform and lane width.
+
+/// 2/π in f64.
+const FRAC_2_PI: f64 = std::f64::consts::FRAC_2_PI;
+/// π/2 split for Cody–Waite reduction (fdlibm's `pio2_1`/`pio2_1t`):
+/// `PIO2_HI` carries 33 significant bits, so `n · PIO2_HI` is **exact**
+/// for |n| < 2^20 and `x − n·PIO2_HI − n·PIO2_LO` loses no accuracy to
+/// cancellation — the reduced argument is good to ~1e-20, far below
+/// one f32 ULP even when `sin` lands near zero.
+const PIO2_HI: f64 = 1.570_796_326_734_125_6;
+const PIO2_LO: f64 = 6.077_100_506_506_192e-11;
+/// Round-to-nearest magic: adding/subtracting 1.5·2^52 rounds an f64
+/// with |x| < 2^51 to an integer (ties to even) without a branch or an
+/// intrinsic — trivially vectorizable.
+const ROUND_MAGIC: f64 = 6_755_399_441_055_744.0;
+
+// fdlibm __kernel_sin coefficients (sin(r) ≈ r + r³·poly(r²), |r| ≤ π/4;
+// shortest-roundtrip decimal forms of the exact f64 bit patterns).
+const S1: f64 = -0.166_666_666_666_666_32;
+const S2: f64 = 0.008_333_333_333_322_49;
+const S3: f64 = -0.000_198_412_698_298_579_5;
+const S4: f64 = 2.755_731_370_707_006_8e-6;
+const S5: f64 = -2.505_076_025_340_686_3e-8;
+const S6: f64 = 1.589_690_995_211_55e-10;
+
+// fdlibm __kernel_cos coefficients (cos(r) ≈ 1 − r²/2 + r⁴·poly(r²)).
+const C1: f64 = 0.041_666_666_666_666_6;
+const C2: f64 = -0.001_388_888_888_887_411;
+const C3: f64 = 2.480_158_728_947_673e-5;
+const C4: f64 = -2.755_731_435_139_066_3e-7;
+const C5: f64 = 2.087_572_321_298_175e-9;
+const C6: f64 = -1.135_964_755_778_819_5e-11;
+
+/// `sin(r)` for reduced `|r| ≤ π/4 + ε` (f64 in, f64 out).
+#[inline(always)]
+fn kernel_sin(r: f64) -> f64 {
+    let z = r * r;
+    let p = S1 + z * (S2 + z * (S3 + z * (S4 + z * (S5 + z * S6))));
+    r + r * z * p
+}
+
+/// `cos(r)` for reduced `|r| ≤ π/4 + ε`.
+#[inline(always)]
+fn kernel_cos(r: f64) -> f64 {
+    let z = r * r;
+    let p = C1 + z * (C2 + z * (C3 + z * (C4 + z * (C5 + z * C6))));
+    1.0 - 0.5 * z + z * z * p
+}
+
+/// Simultaneous `(sin x, cos x)` for f32 `x` — the scalar twin of the
+/// lane-pass trig (see module docs). Branchless: quadrant handling is
+/// a pair of selects, so a per-lane loop over this function vectorizes.
+///
+/// Domain: |x| < 2^31 (far beyond any env state; non-finite inputs
+/// yield NaN like libm).
+#[inline(always)]
+pub fn sin_cos_f32(x: f32) -> (f32, f32) {
+    let xd = x as f64;
+    // n = round(x · 2/π), branchless (ties-to-even is fine: any
+    // consistent integer works, the kernels are valid slightly past π/4).
+    let n = (xd * FRAC_2_PI + ROUND_MAGIC) - ROUND_MAGIC;
+    let r = (xd - n * PIO2_HI) - n * PIO2_LO;
+    // quadrant = n mod 4 (two's-complement & handles negatives).
+    let q = (n as i64) & 3;
+    let s = kernel_sin(r);
+    let c = kernel_cos(r);
+    // q=0: (s, c)   q=1: (c, −s)   q=2: (−s, −c)   q=3: (−c, s)
+    let swap = (q & 1) != 0;
+    let (us, uc) = if swap { (c, s) } else { (s, c) };
+    let sin_neg = (q & 2) != 0;
+    let cos_neg = ((q + 1) & 2) != 0;
+    let sv = if sin_neg { -us } else { us };
+    let cv = if cos_neg { -uc } else { uc };
+    (sv as f32, cv as f32)
+}
+
+/// `sin(x)` via the shared kernel (see [`sin_cos_f32`]).
+#[inline(always)]
+pub fn sin_f32(x: f32) -> f32 {
+    sin_cos_f32(x).0
+}
+
+/// `cos(x)` via the shared kernel (see [`sin_cos_f32`]).
+#[inline(always)]
+pub fn cos_f32(x: f32) -> f32 {
+    sin_cos_f32(x).1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    use crate::simd::ulp_dist_f32 as ulp_dist;
+
+    #[test]
+    fn matches_f64_libm_within_one_ulp() {
+        let mut rng = Pcg32::new(42, 1);
+        for _ in 0..20_000 {
+            let x = rng.range(-100.0, 100.0);
+            let (s, c) = sin_cos_f32(x);
+            let rs = (x as f64).sin() as f32;
+            let rc = (x as f64).cos() as f32;
+            assert!(ulp_dist(s, rs) <= 1, "sin({x}): {s} vs {rs}");
+            assert!(ulp_dist(c, rc) <= 1, "cos({x}): {c} vs {rc}");
+        }
+        // wider range (pendulum theta never exceeds ~100, but be safe)
+        for _ in 0..2_000 {
+            let x = rng.range(-10_000.0, 10_000.0);
+            assert!(ulp_dist(sin_f32(x), (x as f64).sin() as f32) <= 1, "sin({x})");
+            assert!(ulp_dist(cos_f32(x), (x as f64).cos() as f32) <= 1, "cos({x})");
+        }
+    }
+
+    #[test]
+    fn exact_points_and_symmetry() {
+        assert_eq!(sin_cos_f32(0.0), (0.0, 1.0));
+        let (s, c) = sin_cos_f32(std::f32::consts::FRAC_PI_2);
+        assert!((s - 1.0).abs() < 1e-7 && c.abs() < 1e-7);
+        let mut rng = Pcg32::new(3, 3);
+        for _ in 0..1_000 {
+            let x = rng.range(-50.0, 50.0);
+            // sin is odd, cos is even — bitwise, since the kernel is
+            // sign-symmetric (n and q negate coherently).
+            assert_eq!(sin_f32(-x), -sin_f32(x), "x={x}");
+            assert_eq!(cos_f32(-x), cos_f32(x), "x={x}");
+            // sin/cos components agree with the combined call bitwise
+            let (s, c) = sin_cos_f32(x);
+            assert_eq!(s, sin_f32(x));
+            assert_eq!(c, cos_f32(x));
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_propagate() {
+        assert!(sin_f32(f32::NAN).is_nan());
+        assert!(cos_f32(f32::NAN).is_nan());
+        assert!(sin_f32(f32::INFINITY).is_nan());
+        assert!(cos_f32(f32::NEG_INFINITY).is_nan());
+    }
+}

@@ -1,0 +1,615 @@
+//! Dependency-free portable SIMD: fixed-width lane types over plain
+//! arrays, written so the auto-vectorizer turns every elementwise op
+//! into vector instructions, plus optional `core::arch` x86_64
+//! intrinsics behind **runtime** feature detection for the one hot
+//! reduction ([`dot_f32`]).
+//!
+//! # Why hand-rolled
+//!
+//! The vendored crate set has no `wide`/`packed_simd`, and
+//! `std::simd` is nightly-only. A `#[repr(transparent)]` wrapper over
+//! `[f32; N]` with `#[inline]` per-lane loops compiles to the same
+//! vector code on every stable toolchain: LLVM reliably vectorizes
+//! straight-line loops of known trip count over contiguous arrays.
+//!
+//! # The parity contract (what SIMD is allowed to change)
+//!
+//! Every elementwise op here (`+ - * /`, `min/max/clamp/abs`, compares,
+//! `select`, the [`math`] kernels) applies the **same scalar operation
+//! per lane in the same order** as the corresponding scalar code, so a
+//! lane pass built from them is **bitwise identical** to the scalar
+//! reference loop — `tests/simd_parity.rs` asserts 0 ULP for the env
+//! kernels at every lane width. The only ops that reassociate — and
+//! therefore carry an explicit ULP budget instead of bitwise equality —
+//! are the horizontal reductions ([`dot_f32`] accumulates in `LANES`
+//! partial sums). Nothing else is allowed to reassociate; in particular
+//! there is no FMA contraction anywhere (Rust never contracts without
+//! `mul_add`, and this module never calls it).
+//!
+//! # Lane-width selection
+//!
+//! [`LanePass`] is the kernel config every SIMD consumer takes:
+//! `scalar` (width 1 — the reference loop), forced widths 4/8 (the
+//! parity suite and the `simd-parity` CI job pin all three), or `auto`
+//! (runtime detection: 8 when AVX2 is present, 4 otherwise, overridable
+//! via `ENVPOOL_LANE_WIDTH`). Because every width is bitwise identical,
+//! the choice is purely a throughput knob — determinism tests stay
+//! valid across widths, machines, and `ExecMode`s.
+
+pub mod math;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use crate::{Error, Result};
+
+/// Portable f32 lane group (`N` lanes processed per "instruction").
+#[derive(Debug, Clone, Copy, PartialEq)]
+#[repr(transparent)]
+pub struct F32s<const N: usize>(pub [f32; N]);
+
+/// Portable f64 lane group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+#[repr(transparent)]
+pub struct F64s<const N: usize>(pub [f64; N]);
+
+/// 8 × f32 — one AVX register.
+pub type F32x8 = F32s<8>;
+/// 4 × f32 — one SSE/NEON register.
+pub type F32x4 = F32s<4>;
+/// 4 × f64 — one AVX register.
+pub type F64x4 = F64s<4>;
+
+/// Per-lane boolean mask produced by the compare ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mask<const N: usize>(pub [bool; N]);
+
+macro_rules! lane_type {
+    ($name:ident, $elem:ty) => {
+        impl<const N: usize> $name<N> {
+            /// All lanes set to `x`.
+            #[inline(always)]
+            pub fn splat(x: $elem) -> Self {
+                $name([x; N])
+            }
+
+            /// Load `N` lanes from the front of `src` (panics if short).
+            #[inline(always)]
+            pub fn load(src: &[$elem]) -> Self {
+                let mut out = [0.0; N];
+                out.copy_from_slice(&src[..N]);
+                $name(out)
+            }
+
+            /// Load `min(N, src.len())` lanes, padding the rest with
+            /// `fill` — the masked-tail load (padded lanes are computed
+            /// and then discarded by the caller's masked store).
+            #[inline(always)]
+            pub fn load_or(src: &[$elem], fill: $elem) -> Self {
+                let mut out = [fill; N];
+                let n = src.len().min(N);
+                out[..n].copy_from_slice(&src[..n]);
+                $name(out)
+            }
+
+            /// Build lanes from a function of the lane index.
+            #[inline(always)]
+            pub fn from_fn(f: impl FnMut(usize) -> $elem) -> Self {
+                $name(std::array::from_fn(f))
+            }
+
+            /// Store all `N` lanes to the front of `dst`.
+            #[inline(always)]
+            pub fn store(self, dst: &mut [$elem]) {
+                dst[..N].copy_from_slice(&self.0);
+            }
+
+            /// Per-lane minimum (`<$elem>::min` semantics, same as the
+            /// scalar code).
+            #[inline(always)]
+            pub fn min(self, o: Self) -> Self {
+                Self::from_fn(|i| self.0[i].min(o.0[i]))
+            }
+
+            /// Per-lane maximum.
+            #[inline(always)]
+            pub fn max(self, o: Self) -> Self {
+                Self::from_fn(|i| self.0[i].max(o.0[i]))
+            }
+
+            /// Per-lane `<$elem>::clamp` (identical NaN semantics to the
+            /// scalar `.clamp(lo, hi)` calls it replaces).
+            #[inline(always)]
+            pub fn clamp(self, lo: $elem, hi: $elem) -> Self {
+                Self::from_fn(|i| self.0[i].clamp(lo, hi))
+            }
+
+            /// Per-lane absolute value.
+            #[inline(always)]
+            pub fn abs(self) -> Self {
+                Self::from_fn(|i| self.0[i].abs())
+            }
+
+            /// Lane-wise `self > o`.
+            #[inline(always)]
+            pub fn gt(self, o: Self) -> Mask<N> {
+                Mask(std::array::from_fn(|i| self.0[i] > o.0[i]))
+            }
+
+            /// Lane-wise `self < o`.
+            #[inline(always)]
+            pub fn lt(self, o: Self) -> Mask<N> {
+                Mask(std::array::from_fn(|i| self.0[i] < o.0[i]))
+            }
+
+            /// Lane-wise `self >= o`.
+            #[inline(always)]
+            pub fn ge(self, o: Self) -> Mask<N> {
+                Mask(std::array::from_fn(|i| self.0[i] >= o.0[i]))
+            }
+
+            /// Lane-wise `self <= o`.
+            #[inline(always)]
+            pub fn le(self, o: Self) -> Mask<N> {
+                Mask(std::array::from_fn(|i| self.0[i] <= o.0[i]))
+            }
+        }
+
+        impl<const N: usize> std::ops::Add for $name<N> {
+            type Output = Self;
+            #[inline(always)]
+            fn add(self, o: Self) -> Self {
+                Self::from_fn(|i| self.0[i] + o.0[i])
+            }
+        }
+
+        impl<const N: usize> std::ops::Sub for $name<N> {
+            type Output = Self;
+            #[inline(always)]
+            fn sub(self, o: Self) -> Self {
+                Self::from_fn(|i| self.0[i] - o.0[i])
+            }
+        }
+
+        impl<const N: usize> std::ops::Mul for $name<N> {
+            type Output = Self;
+            #[inline(always)]
+            fn mul(self, o: Self) -> Self {
+                Self::from_fn(|i| self.0[i] * o.0[i])
+            }
+        }
+
+        impl<const N: usize> std::ops::Div for $name<N> {
+            type Output = Self;
+            #[inline(always)]
+            fn div(self, o: Self) -> Self {
+                Self::from_fn(|i| self.0[i] / o.0[i])
+            }
+        }
+
+        impl<const N: usize> std::ops::Neg for $name<N> {
+            type Output = Self;
+            #[inline(always)]
+            fn neg(self) -> Self {
+                Self::from_fn(|i| -self.0[i])
+            }
+        }
+
+    };
+}
+
+lane_type!(F32s, f32);
+lane_type!(F64s, f64);
+
+impl<const N: usize> Mask<N> {
+    /// Per-lane select into f32 lanes: `t` where the mask lane is set,
+    /// else `f`.
+    #[inline(always)]
+    pub fn select_f32(self, t: F32s<N>, f: F32s<N>) -> F32s<N> {
+        F32s::from_fn(|i| if self.0[i] { t.0[i] } else { f.0[i] })
+    }
+
+    /// Per-lane select into f64 lanes.
+    #[inline(always)]
+    pub fn select_f64(self, t: F64s<N>, f: F64s<N>) -> F64s<N> {
+        F64s::from_fn(|i| if self.0[i] { t.0[i] } else { f.0[i] })
+    }
+}
+
+impl<const N: usize> Mask<N> {
+    /// Any lane set?
+    #[inline(always)]
+    pub fn any(self) -> bool {
+        self.0.iter().any(|&b| b)
+    }
+
+    /// All lanes set?
+    #[inline(always)]
+    pub fn all(self) -> bool {
+        self.0.iter().all(|&b| b)
+    }
+
+}
+
+impl<const N: usize> std::ops::BitOr for Mask<N> {
+    type Output = Self;
+    /// Lane-wise OR.
+    #[inline(always)]
+    fn bitor(self, o: Self) -> Self {
+        Mask(std::array::from_fn(|i| self.0[i] | o.0[i]))
+    }
+}
+
+impl<const N: usize> std::ops::BitAnd for Mask<N> {
+    type Output = Self;
+    /// Lane-wise AND.
+    #[inline(always)]
+    fn bitand(self, o: Self) -> Self {
+        Mask(std::array::from_fn(|i| self.0[i] & o.0[i]))
+    }
+}
+
+impl<const N: usize> std::ops::Not for Mask<N> {
+    type Output = Self;
+    /// Lane-wise NOT.
+    #[inline(always)]
+    fn not(self) -> Self {
+        Mask(std::array::from_fn(|i| !self.0[i]))
+    }
+}
+
+impl<const N: usize> F32s<N> {
+    /// Per-lane `(sin, cos)` via the shared deterministic kernel
+    /// ([`math::sin_cos_f32`]): bitwise identical to the scalar twin,
+    /// branchless per lane so the loop vectorizes.
+    #[inline(always)]
+    pub fn sin_cos(self) -> (Self, Self) {
+        let mut s = [0.0f32; N];
+        let mut c = [0.0f32; N];
+        for i in 0..N {
+            let (si, ci) = math::sin_cos_f32(self.0[i]);
+            s[i] = si;
+            c[i] = ci;
+        }
+        (F32s(s), F32s(c))
+    }
+
+    /// Per-lane sine (shared kernel, see [`Self::sin_cos`]).
+    #[inline(always)]
+    pub fn sin(self) -> Self {
+        Self::from_fn(|i| math::sin_f32(self.0[i]))
+    }
+
+    /// Per-lane cosine (shared kernel, see [`Self::sin_cos`]).
+    #[inline(always)]
+    pub fn cos(self) -> Self {
+        Self::from_fn(|i| math::cos_f32(self.0[i]))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Runtime capability detection
+// ---------------------------------------------------------------------
+
+/// CPU SIMD capabilities detected at runtime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Caps {
+    /// AVX2 available (x86_64 only; always false elsewhere).
+    pub avx2: bool,
+}
+
+/// Detect CPU capabilities. Cached in a `OnceLock` because [`dot_f32`]
+/// consults this on the f32 backward hot path (once per hidden unit per
+/// sample) — after the first call this is a single atomic load.
+#[inline]
+pub fn caps() -> Caps {
+    static CAPS: std::sync::OnceLock<Caps> = std::sync::OnceLock::new();
+    *CAPS.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            Caps { avx2: std::arch::is_x86_feature_detected!("avx2") }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            Caps::default()
+        }
+    })
+}
+
+// ---------------------------------------------------------------------
+// Lane-width configuration
+// ---------------------------------------------------------------------
+
+/// Which lane pass a SIMD-capable kernel runs — the "kernel config"
+/// knob wired through `PoolConfig::lane_pass`, `TrainConfig::lane_pass`
+/// and `--lane-width {1,4,8,auto}`.
+///
+/// Width 1 **is** the scalar reference implementation (the pre-SIMD
+/// loop, kept verbatim); 4 and 8 are forced lane widths for the parity
+/// suite and the `simd-parity` CI job; `Auto` resolves by runtime
+/// feature detection, overridable with the `ENVPOOL_LANE_WIDTH`
+/// environment variable (values `1|4|8`). All widths are bitwise
+/// identical — see the module docs for why this is safe to default on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LanePass {
+    /// Width 1: the scalar reference loop.
+    Scalar,
+    /// Forced 4-wide lane groups.
+    Width4,
+    /// Forced 8-wide lane groups.
+    Width8,
+    /// Runtime detection (8 with AVX2, else 4), `ENVPOOL_LANE_WIDTH`
+    /// override.
+    #[default]
+    Auto,
+}
+
+impl LanePass {
+    /// Resolve to a concrete lane width (1, 4 or 8). `Auto` consults
+    /// `ENVPOOL_LANE_WIDTH` then [`caps`]; kernels resolve once, in
+    /// `VecEnv::set_lane_pass`, so the env lookup is never on the hot
+    /// path (and a malformed override panics there, loudly, rather
+    /// than silently running the wrong width).
+    pub fn width(self) -> usize {
+        match self {
+            LanePass::Scalar => 1,
+            LanePass::Width4 => 4,
+            LanePass::Width8 => 8,
+            LanePass::Auto => {
+                if let Ok(v) = std::env::var("ENVPOOL_LANE_WIDTH") {
+                    // An explicit operator override must not fail
+                    // silently: a typo here would make every leg of the
+                    // CI width matrix run the same width and pass the
+                    // per-width parity guarantee vacuously. Same loud
+                    // behavior as a bad `--lane-width` CLI value.
+                    match v.trim() {
+                        "1" | "scalar" => return 1,
+                        "4" => return 4,
+                        "8" => return 8,
+                        "" => {} // unset-equivalent: fall through
+                        other => panic!(
+                            "ENVPOOL_LANE_WIDTH={other:?}: expected 1|4|8 \
+                             (unset it to use runtime detection)"
+                        ),
+                    }
+                }
+                if caps().avx2 {
+                    8
+                } else {
+                    4
+                }
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for LanePass {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "1" | "scalar" => LanePass::Scalar,
+            "4" => LanePass::Width4,
+            "8" => LanePass::Width8,
+            "auto" => LanePass::Auto,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown lane width {other:?} (expected 1|4|8|auto)"
+                )))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for LanePass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            LanePass::Scalar => "1",
+            LanePass::Width4 => "4",
+            LanePass::Width8 => "8",
+            LanePass::Auto => "auto",
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reductions (the reassociating ops — ULP-budgeted, never bitwise)
+// ---------------------------------------------------------------------
+
+/// Scalar reference dot product: strictly sequential accumulation —
+/// the baseline the ULP budget in `tests/simd_parity.rs` is measured
+/// against.
+#[inline]
+pub fn dot_ref_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// SIMD dot product: 8 partial sums accumulated lane-wise, then a
+/// fixed-order horizontal sum, then the scalar tail. **Reassociates**
+/// relative to [`dot_ref_f32`]; both satisfy the standard forward error
+/// bound `|fl(x·y) − x·y| ≤ γ_n Σ|x_i y_i|`, which the parity suite
+/// asserts as an explicit ULP budget. The AVX2 path (runtime-detected)
+/// uses the identical accumulation structure, so portable and intrinsic
+/// results are bitwise equal — machine choice never changes numerics.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if a.len() >= 16 && caps().avx2 {
+        // SAFETY: AVX2 presence was just checked at runtime.
+        return unsafe { x86::dot_f32_avx2(a, b) };
+    }
+    dot_f32_portable(a, b)
+}
+
+/// Portable body of [`dot_f32`] (also the reference the AVX2 path must
+/// match bitwise).
+#[inline]
+pub fn dot_f32_portable(a: &[f32], b: &[f32]) -> f32 {
+    const L: usize = 8;
+    let n = a.len();
+    let chunks = n / L;
+    let mut acc = F32s::<L>::splat(0.0);
+    for c in 0..chunks {
+        let va = F32s::<L>::load(&a[c * L..]);
+        let vb = F32s::<L>::load(&b[c * L..]);
+        acc = acc + va * vb;
+    }
+    // Fixed-order horizontal sum (lane 0..7), then the sequential tail:
+    // the exact structure the AVX2 path reproduces.
+    let mut sum = 0.0f32;
+    for v in acc.0 {
+        sum += v;
+    }
+    for (&x, &y) in a[chunks * L..n].iter().zip(&b[chunks * L..n]) {
+        sum += x * y;
+    }
+    sum
+}
+
+/// ULP distance between two f32 values: 0 means bitwise equal (with
+/// `+0.0`/`-0.0` identified), 1 means adjacent representable floats.
+/// Maps bit patterns onto a monotone integer line so the distance is
+/// well defined across the sign boundary. This is the unit every parity
+/// budget in `tests/simd_parity.rs` is expressed in.
+pub fn ulp_dist_f32(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let b = x.to_bits();
+        if b & 0x8000_0000 != 0 {
+            -((b & 0x7FFF_FFFF) as i64)
+        } else {
+            b as i64
+        }
+    }
+    (key(a) - key(b)).unsigned_abs()
+}
+
+/// `y[i] += a * x[i]` over a lane pass: elementwise (every `y[i]` sees
+/// the same single operation the scalar loop applies), so this is
+/// **bitwise identical** to the scalar axpy — no reassociation.
+#[inline]
+pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    const L: usize = 8;
+    let n = x.len();
+    let chunks = n / L;
+    let va = F32s::<L>::splat(a);
+    for c in 0..chunks {
+        let base = c * L;
+        let vy = F32s::<L>::load(&y[base..]) + va * F32s::<L>::load(&x[base..]);
+        vy.store(&mut y[base..]);
+    }
+    for (yi, &xi) in y[chunks * L..n].iter_mut().zip(&x[chunks * L..n]) {
+        *yi += a * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_ops_match_scalar_ops_bitwise() {
+        let a = F32s::<8>::from_fn(|i| (i as f32 - 3.5) * 1.7);
+        let b = F32s::<8>::from_fn(|i| (i as f32 + 0.25) * -0.9);
+        for i in 0..8 {
+            assert_eq!((a + b).0[i], a.0[i] + b.0[i]);
+            assert_eq!((a - b).0[i], a.0[i] - b.0[i]);
+            assert_eq!((a * b).0[i], a.0[i] * b.0[i]);
+            assert_eq!((a / b).0[i], a.0[i] / b.0[i]);
+            assert_eq!((-a).0[i], -a.0[i]);
+            assert_eq!(a.min(b).0[i], a.0[i].min(b.0[i]));
+            assert_eq!(a.max(b).0[i], a.0[i].max(b.0[i]));
+            assert_eq!(a.clamp(-2.0, 2.0).0[i], a.0[i].clamp(-2.0, 2.0));
+            assert_eq!(a.abs().0[i], a.0[i].abs());
+        }
+    }
+
+    #[test]
+    fn loads_stores_and_tails() {
+        let src = [1.0f32, 2.0, 3.0];
+        let v = F32s::<8>::load_or(&src, 9.0);
+        assert_eq!(v.0, [1.0, 2.0, 3.0, 9.0, 9.0, 9.0, 9.0, 9.0]);
+        let mut dst = [0.0f32; 8];
+        v.store(&mut dst);
+        assert_eq!(dst, v.0);
+        let w = F64s::<4>::load(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(w.0, [1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn masks_and_select() {
+        let a = F32s::<4>([1.0, -2.0, 3.0, f32::NAN]);
+        let z = F32s::<4>::splat(0.0);
+        let m = a.gt(z);
+        assert_eq!(m.0, [true, false, true, false], "NaN compares false, like scalar");
+        assert!(m.any());
+        assert!(!m.all());
+        let sel = m.select_f32(F32s::splat(1.0), F32s::splat(-1.0));
+        assert_eq!(sel.0, [1.0, -1.0, 1.0, -1.0]);
+        assert!((!m | m).all());
+        assert!(!(m & !m).any());
+        // lt/ge/le agree with scalar comparisons
+        assert_eq!(a.lt(z).0, [false, true, false, false]);
+        assert_eq!(a.ge(z).0, [true, false, true, false]);
+        assert_eq!(a.le(z).0, [false, true, false, false]);
+    }
+
+    #[test]
+    fn lane_pass_widths_resolve() {
+        assert_eq!(LanePass::Scalar.width(), 1);
+        assert_eq!(LanePass::Width4.width(), 4);
+        assert_eq!(LanePass::Width8.width(), 8);
+        let w = LanePass::Auto.width();
+        assert!(w == 1 || w == 4 || w == 8, "auto resolved to {w}");
+        for s in ["1", "4", "8", "auto"] {
+            let lp: LanePass = s.parse().unwrap();
+            assert_eq!(lp.to_string(), s);
+        }
+        assert_eq!("scalar".parse::<LanePass>().unwrap(), LanePass::Scalar);
+        assert!("16".parse::<LanePass>().is_err());
+    }
+
+    #[test]
+    fn ulp_distance_is_a_metric_on_floats() {
+        assert_eq!(ulp_dist_f32(1.0, 1.0), 0);
+        assert_eq!(ulp_dist_f32(0.0, -0.0), 0);
+        assert_eq!(ulp_dist_f32(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_dist_f32(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)), 1);
+        // one ulp below +0 is the smallest negative subnormal
+        assert_eq!(ulp_dist_f32(f32::from_bits(0x8000_0001), 0.0), 1);
+        assert!(ulp_dist_f32(1.0, 2.0) > 1_000_000);
+    }
+
+    #[test]
+    fn dot_matches_reference_within_budget_and_axpy_bitwise() {
+        use crate::rng::Pcg32;
+        let mut rng = Pcg32::new(7, 7);
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 200] {
+            let a: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+            let exact: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let mag: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            let bound = 2.0 * (n.max(1) as f64) * f64::from(f32::EPSILON) * mag + 1e-12;
+            assert!((dot_f32(&a, &b) as f64 - exact).abs() <= bound, "n={n}");
+            assert!((dot_ref_f32(&a, &b) as f64 - exact).abs() <= bound, "n={n}");
+            // dispatcher must agree with the portable body bitwise
+            assert_eq!(dot_f32_portable(&a, &b), dot_f32(&a, &b), "n={n}");
+
+            // axpy is elementwise: bitwise equal to the scalar loop
+            let x: Vec<f32> = (0..n).map(|_| rng.range(-2.0, 2.0)).collect();
+            let mut y1: Vec<f32> = (0..n).map(|_| rng.range(-2.0, 2.0)).collect();
+            let mut y2 = y1.clone();
+            let s = rng.range(-1.5, 1.5);
+            axpy_f32(s, &x, &mut y1);
+            for i in 0..n {
+                y2[i] += s * x[i];
+            }
+            assert_eq!(y1, y2, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! x86_64 `core::arch` intrinsics behind **runtime** feature detection
+//! (dispatched from [`super::dot_f32`]; never called unless
+//! `is_x86_feature_detected!("avx2")` said yes).
+//!
+//! The contract with the portable path is bitwise equality: the AVX2
+//! kernel keeps the exact accumulation structure of
+//! [`super::dot_f32_portable`] — one 8-lane accumulator updated with
+//! separate mul/add (**no FMA**, which would contract and change
+//! results), a lane-0..7 horizontal sum, then the sequential scalar
+//! tail — so which path runs on a given machine never changes numerics,
+//! only speed.
+
+#![allow(unsafe_code)]
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// AVX2 dot product, bitwise identical to [`super::dot_f32_portable`].
+///
+/// # Safety
+/// The caller must have verified AVX2 support at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+    const L: usize = 8;
+    let n = a.len();
+    let chunks = n / L;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let va = _mm256_loadu_ps(a.as_ptr().add(c * L));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(c * L));
+        // mul then add (matching `acc + va * vb` lane-wise) — not fmadd.
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+    }
+    let mut lanes = [0.0f32; L];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    // Same fixed lane order as the portable horizontal sum.
+    let mut sum = 0.0f32;
+    for v in lanes {
+        sum += v;
+    }
+    for (&x, &y) in a[chunks * L..n].iter().zip(&b[chunks * L..n]) {
+        sum += x * y;
+    }
+    sum
+}
+
+#[cfg(all(test, target_arch = "x86_64"))]
+mod tests {
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn avx2_dot_is_bitwise_equal_to_portable() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("skipping: no AVX2 on this machine");
+            return;
+        }
+        let mut rng = Pcg32::new(11, 4);
+        for n in [0usize, 3, 8, 16, 17, 64, 129, 1000] {
+            let a: Vec<f32> = (0..n).map(|_| rng.range(-3.0, 3.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.range(-3.0, 3.0)).collect();
+            let portable = crate::simd::dot_f32_portable(&a, &b);
+            // SAFETY: feature checked above.
+            let avx = unsafe { super::dot_f32_avx2(&a, &b) };
+            assert_eq!(portable.to_bits(), avx.to_bits(), "n={n}");
+        }
+    }
+}

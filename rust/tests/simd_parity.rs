@@ -1,0 +1,297 @@
+//! The SIMD parity layer: every lane width of every SIMD lane pass is
+//! pinned against its scalar reference with an **explicit, asserted
+//! budget** — and for the env kernels that budget is **zero ULPs**.
+//!
+//! Contract (see `src/simd/mod.rs`):
+//! - The env-kernel lane passes are reassociation-free — the lane-group
+//!   dynamics apply the identical operations in the identical order as
+//!   the scalar dynamics (shared trig kernel included), so widths 1, 4
+//!   and 8 must agree **bitwise** across random env counts (masked
+//!   tails), random seeds, natural auto-resets and forced mid-batch
+//!   resets. Asserted as `ulp == 0` per element, per step.
+//! - The only reassociating op is the reduction `simd::dot_f32`
+//!   (8 partial sums + fixed-order horizontal sum). Its divergence from
+//!   the strictly-sequential `dot_ref_f32` is bounded by the standard
+//!   forward-error bound `|fl(x·y) − x·y| ≤ γ_n Σ|x_i y_i|`; for
+//!   positive inputs that is a **relative** bound, asserted here in
+//!   ULPs (≤ 2n + margin); for mixed signs it is asserted absolutely
+//!   against an f64 reference.
+//! - The shared trig twins (`simd::math`) sit within 1 ULP of the f64
+//!   libm reference, and their lane-group form is bitwise equal to the
+//!   scalar twin.
+//!
+//! The `simd-parity` CI job additionally re-runs this suite (and the
+//! scalar-vs-vector suite) with `ENVPOOL_LANE_WIDTH` forced to 1, 4 and
+//! 8 so the `Auto` resolution path is exercised at every width.
+
+use envpool::envs::env::Step;
+use envpool::envs::registry;
+use envpool::envs::vector::{SliceArena, VecEnv};
+use envpool::prop::forall;
+use envpool::prop_assert;
+use envpool::rng::Pcg32;
+use envpool::simd::{dot_f32, dot_ref_f32, math, ulp_dist_f32, LanePass};
+
+const CLASSIC: &[&str] = &["CartPole-v1", "MountainCar-v0", "Pendulum-v1", "Acrobot-v1"];
+
+/// Drive `widths.len()` copies of the same kernel (same task, seed and
+/// lane count, different lane widths) lock-step on one action/reset
+/// stream; assert 0-ULP equality of observations and rewards and exact
+/// equality of flags at every step. `n` deliberately includes counts
+/// that are not multiples of 4 or 8 (masked tails), and the driver
+/// forces extra mid-batch resets beyond the natural episode ends.
+fn check_kernel_widths(
+    task: &str,
+    n: usize,
+    seed: u64,
+    steps: usize,
+    arng: &mut Pcg32,
+) -> Result<(), String> {
+    let widths = [LanePass::Scalar, LanePass::Width4, LanePass::Width8];
+    let mut kernels: Vec<Box<dyn VecEnv>> = widths
+        .iter()
+        .map(|&lp| {
+            let mut k = registry::make_vec_env(task, seed, 0, n).unwrap();
+            k.set_lane_pass(lp);
+            k
+        })
+        .collect();
+    let spec = kernels[0].spec().clone();
+    let dim = spec.obs_dim();
+    let adim = spec.action_space.dim();
+
+    let mut obs: Vec<Vec<f32>> = vec![vec![0.0f32; n * dim]; kernels.len()];
+    for (k, kernel) in kernels.iter_mut().enumerate() {
+        for lane in 0..n {
+            kernel.reset_lane(lane, &mut obs[k][lane * dim..(lane + 1) * dim]);
+        }
+    }
+    for k in 1..obs.len() {
+        prop_assert!(obs[k] == obs[0], "{task}: reset obs diverge (width {:?})", widths[k]);
+    }
+
+    let mut mask = vec![0u8; n];
+    let mut outs: Vec<Vec<Step>> = vec![vec![Step::default(); n]; kernels.len()];
+    let mut actions = vec![0.0f32; n * adim];
+    for t in 0..steps {
+        envpool::coordinator::throughput::random_actions(
+            &spec.action_space,
+            n,
+            arng,
+            &mut actions,
+        );
+        // Force extra mid-batch resets (~10% of steps, one random lane)
+        // on top of the natural `finished()` resets — the same mask is
+        // applied to every width.
+        if arng.below(10) == 0 {
+            let lane = arng.below(n as u32) as usize;
+            mask[lane] = 1;
+        }
+        for (k, kernel) in kernels.iter_mut().enumerate() {
+            let mut arena = SliceArena::new(&mut obs[k], dim);
+            kernel.step_batch(&actions, &mask, &mut arena, &mut outs[k]);
+        }
+        for k in 1..kernels.len() {
+            for lane in 0..n {
+                let (a, b) = (outs[0][lane], outs[k][lane]);
+                prop_assert!(
+                    ulp_dist_f32(a.reward, b.reward) == 0
+                        && a.done == b.done
+                        && a.truncated == b.truncated,
+                    "{task}: step {t} lane {lane} width {:?}: {a:?} vs {b:?}",
+                    widths[k]
+                );
+                for d in 0..dim {
+                    let (x, y) = (obs[0][lane * dim + d], obs[k][lane * dim + d]);
+                    prop_assert!(
+                        ulp_dist_f32(x, y) == 0,
+                        "{task}: step {t} lane {lane} obs[{d}] width {:?}: \
+                         {x:?} vs {y:?} ({} ulp)",
+                        widths[k],
+                        ulp_dist_f32(x, y)
+                    );
+                }
+            }
+        }
+        for lane in 0..n {
+            mask[lane] = outs[0][lane].finished() as u8;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn classic_kernels_bitwise_across_lane_widths() {
+    forall("simd-classic-widths", |g| {
+        let task = *g.choose(CLASSIC);
+        // 1..=19 covers: below one group, exact multiples of 4 and 8,
+        // and masked tails for both widths.
+        let n = g.usize_in(1, 19);
+        let seed = g.rng.next_u64();
+        let mut arng = Pcg32::new(seed ^ 0xAC7, 1);
+        check_kernel_widths(task, n, seed, 120, &mut arng)
+    });
+}
+
+#[test]
+fn walker_task_pass_bitwise_across_lane_widths() {
+    // The walker kernel's SIMD tier is the batch task pass (reward /
+    // healthy / truncation across lanes); the solver stays scalar per
+    // lane. Same 0-ULP contract, lighter sweep (physics is expensive).
+    let mut arng = Pcg32::new(0xBEEF, 3);
+    for (n, seed) in [(5usize, 11u64), (9, 12), (8, 13)] {
+        check_kernel_widths("Hopper-v4", n, seed, 40, &mut arng).unwrap();
+    }
+    let mut arng = Pcg32::new(0xBEF0, 4);
+    check_kernel_widths("cheetah_run", 6, 21, 30, &mut arng).unwrap();
+}
+
+#[test]
+fn pool_lane_pass_is_invisible_to_trajectories() {
+    // Through the vectorized pool engine: forcing width 8 vs width 1
+    // must leave every batch bitwise unchanged (PoolConfig::lane_pass
+    // is a pure throughput knob).
+    use envpool::pool::{EnvPool, ExecMode, PoolConfig};
+    let run = |lp: LanePass| {
+        let mut pool = EnvPool::make(
+            PoolConfig::new("CartPole-v1")
+                .num_envs(11)
+                .sync()
+                .num_threads(2)
+                .seed(7)
+                .exec_mode(ExecMode::Vectorized)
+                .lane_pass(lp),
+        )
+        .unwrap();
+        let mut out = pool.make_output();
+        pool.reset_into(&mut out).unwrap();
+        let mut trace: Vec<f32> = Vec::new();
+        for step in 0..100 {
+            let ids = out.env_ids.clone();
+            // per-env deterministic actions (batch order may vary)
+            let actions: Vec<f32> =
+                ids.iter().map(|&i| ((step + i as usize) % 2) as f32).collect();
+            pool.step_into(&actions, &ids, &mut out).unwrap();
+            // canonical env-id order for comparison
+            let mut order: Vec<usize> = (0..out.len()).collect();
+            order.sort_by_key(|&k| out.env_ids[k]);
+            for &k in &order {
+                trace.extend_from_slice(out.obs_row(k));
+                trace.push(out.rew[k]);
+            }
+        }
+        trace
+    };
+    let scalar = run(LanePass::Scalar);
+    for lp in [LanePass::Width4, LanePass::Width8, LanePass::Auto] {
+        assert_eq!(run(lp), scalar, "{lp} trajectory diverged from width 1");
+    }
+}
+
+#[test]
+fn trig_twins_within_one_ulp_of_f64_libm_and_lane_exact() {
+    forall("simd-trig", |g| {
+        let x = g.f32_in(-100.0, 100.0);
+        let (s, c) = math::sin_cos_f32(x);
+        let (rs, rc) = ((x as f64).sin() as f32, (x as f64).cos() as f32);
+        prop_assert!(ulp_dist_f32(s, rs) <= 1, "sin({x}): {s} vs libm {rs}");
+        prop_assert!(ulp_dist_f32(c, rc) <= 1, "cos({x}): {c} vs libm {rc}");
+
+        // lane-group trig is the same inline function per lane: bitwise
+        let xs = envpool::simd::F32s::<8>::from_fn(|i| x + i as f32 * 0.37);
+        let (vs, vc) = xs.sin_cos();
+        for i in 0..8 {
+            let (ss, sc) = math::sin_cos_f32(xs.0[i]);
+            prop_assert!(
+                vs.0[i].to_bits() == ss.to_bits() && vc.0[i].to_bits() == sc.to_bits(),
+                "lane {i} of sin_cos({}) diverged from the scalar twin",
+                xs.0[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dot_reassociation_stays_within_explicit_ulp_budget() {
+    // Positive inputs: Σ|x_i y_i| = |dot|, so the forward-error bound
+    // |fl(dot) − dot| ≤ γ_n·|dot| (γ_n = n·u/(1−n·u), u = 2⁻²⁴) is a
+    // relative bound. Both accumulation orders satisfy it, so their
+    // distance is ≤ 2·γ_n·|dot| ≤ (2n + margin) ULPs of the result.
+    // THE BUDGET IS ASSERTED — not "approximately equal".
+    forall("simd-dot-ulp-budget", |g| {
+        let n = g.usize_in(1, 300);
+        let a = g.vec(n, |g| g.f32_in(0.01, 1.0));
+        let b = g.vec(n, |g| g.f32_in(0.01, 1.0));
+        let simd = dot_f32(&a, &b);
+        let scalar = dot_ref_f32(&a, &b);
+        let budget = 2 * n as u64 + 2;
+        let dist = ulp_dist_f32(simd, scalar);
+        prop_assert!(
+            dist <= budget,
+            "n={n}: dot {simd} vs {scalar} = {dist} ulp > budget {budget}"
+        );
+
+        // Mixed signs: cancellation voids a relative bound; assert the
+        // absolute γ-bound against an (effectively exact) f64 reference
+        // for BOTH orders.
+        let c = g.vec(n, |g| g.f32_in(-1.0, 1.0));
+        let d = g.vec(n, |g| g.f32_in(-1.0, 1.0));
+        let exact: f64 = c.iter().zip(&d).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let mag: f64 = c.iter().zip(&d).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+        let abs_budget = 2.0 * n as f64 * f64::from(f32::EPSILON) * mag + 1e-10;
+        for (label, got) in [("simd", dot_f32(&c, &d)), ("scalar", dot_ref_f32(&c, &d))] {
+            prop_assert!(
+                (got as f64 - exact).abs() <= abs_budget,
+                "n={n} {label}: |{got} - {exact}| > {abs_budget}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_width_one_is_the_scalar_reference() {
+    // LanePass::Scalar must select the *original* per-lane loop: pin it
+    // against the scalar Env directly (one lane, long horizon) so the
+    // width-1 path can never silently become "SIMD with W=1".
+    use envpool::envs::env::Env;
+    for task in CLASSIC {
+        let seed = 31;
+        let mut kernel = registry::make_vec_env(task, seed, 0, 1).unwrap();
+        kernel.set_lane_pass(LanePass::Scalar);
+        let mut env = registry::make_env(task, seed, 0).unwrap();
+        let dim = env.spec().obs_dim();
+        let adim = env.spec().action_space.dim();
+        let mut vobs = vec![0.0f32; dim];
+        let mut sobs = vec![0.0f32; dim];
+        kernel.reset_lane(0, &mut vobs);
+        env.reset(&mut sobs);
+        assert_eq!(vobs, sobs, "{task} reset");
+        let mut mask = [0u8];
+        let mut outs = [Step::default()];
+        let mut arng = Pcg32::new(77, 7);
+        let mut actions = vec![0.0f32; adim];
+        for t in 0..300 {
+            envpool::coordinator::throughput::random_actions(
+                &env.spec().action_space.clone(),
+                1,
+                &mut arng,
+                &mut actions,
+            );
+            {
+                let mut arena = SliceArena::new(&mut vobs, dim);
+                kernel.step_batch(&actions, &mask, &mut arena, &mut outs);
+            }
+            if mask[0] != 0 {
+                env.reset(&mut sobs);
+                assert_eq!(outs[0], Step::default(), "{task} step {t}");
+            } else {
+                let s = env.step(&actions, &mut sobs);
+                assert_eq!(outs[0], s, "{task} step {t}");
+            }
+            assert_eq!(vobs, sobs, "{task} step {t} obs");
+            mask[0] = outs[0].finished() as u8;
+        }
+    }
+}

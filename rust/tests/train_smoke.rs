@@ -7,7 +7,7 @@
 //! tier is the vendored stub (`compute_or_skip!`).
 
 use envpool::compute_or_skip;
-use envpool::config::{BackendKind, ExecutorKind, TrainConfig};
+use envpool::config::{BackendKind, ExecutorKind, Precision, TrainConfig};
 use envpool::coordinator::ppo;
 use envpool::runtime::{Manifest, Policy, Runtime};
 
@@ -60,6 +60,79 @@ fn native_training_is_deterministic() {
     assert_eq!(a.episodes, b.episodes);
     assert_eq!(a.final_return, b.final_return);
     assert_eq!(a.best_return, b.best_return);
+}
+
+#[test]
+fn f32_precision_trains_and_reruns_bit_exactly() {
+    // The f32 fast path end to end: `--precision f32` must train, be
+    // exactly rerun-deterministic (same config → identical summary),
+    // and report its precision in the summary.
+    let mk = || {
+        let mut cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSyncVec, 4 * 8 * 64);
+        cfg.precision = Precision::F32;
+        cfg
+    };
+    let a = ppo::train(&mk()).unwrap();
+    let b = ppo::train(&mk()).unwrap();
+    assert_eq!(a.backend, "native");
+    assert_eq!(a.precision, "f32");
+    assert!(a.final_return.is_finite());
+    assert!(a.episodes > 0);
+    assert_eq!(a.episodes, b.episodes);
+    assert_eq!(a.final_return, b.final_return);
+    assert_eq!(a.best_return, b.best_return);
+    // f64 runs report the reference precision
+    let c = ppo::train(&native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 1024)).unwrap();
+    assert_eq!(c.precision, "f64");
+}
+
+#[test]
+fn f32_and_f64_learning_signals_stay_comparable() {
+    // The fast path is an *approximation*: trajectories diverge from
+    // f64 over time (sampling reads f32 logits), so exact equality is
+    // wrong to demand — but after identical short training both must
+    // produce finite, sane returns from real episodes.
+    let mut cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSyncVec, 2 * 8 * 64);
+    cfg.precision = Precision::F32;
+    let s32 = ppo::train(&cfg).unwrap();
+    cfg.precision = Precision::F64;
+    let s64 = ppo::train(&cfg).unwrap();
+    for s in [&s32, &s64] {
+        assert_eq!(s.iterations, 2);
+        assert!(s.episodes > 0);
+        assert!(s.final_return.is_finite() && s.final_return > 0.0);
+    }
+}
+
+#[test]
+fn eval_episodes_runs_greedy_eval_on_the_trained_backend() {
+    let mut cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 1024);
+    cfg.eval_episodes = 4;
+    let s = ppo::train(&cfg).unwrap();
+    let r = s.eval_return.expect("eval_return must be set when eval_episodes > 0");
+    assert!((1.0..=500.0).contains(&r), "greedy CartPole return {r}");
+    assert!(s.render().contains("eval return"), "summary must surface it:\n{}", s.render());
+    // off by default
+    let s = ppo::train(&native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 1024)).unwrap();
+    assert!(s.eval_return.is_none());
+}
+
+#[test]
+fn forced_lane_widths_train_identically() {
+    // TrainConfig::lane_pass reaches the vectorized pool engine; every
+    // width must produce the identical run (bitwise kernels).
+    use envpool::simd::LanePass;
+    let run = |lp: LanePass| {
+        let mut cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSyncVec, 2 * 8 * 64);
+        cfg.lane_pass = lp;
+        ppo::train(&cfg).unwrap()
+    };
+    let base = run(LanePass::Scalar);
+    for lp in [LanePass::Width4, LanePass::Width8] {
+        let s = run(lp);
+        assert_eq!(s.episodes, base.episodes, "{lp}");
+        assert_eq!(s.final_return, base.final_return, "{lp}");
+    }
 }
 
 #[test]
