@@ -35,7 +35,11 @@ pub(crate) fn cheetah_spec(inner: &EnvSpec) -> EnvSpec {
     spec
 }
 
-/// The dm_control `cheetah run` task.
+/// The dm_control `cheetah run` task. Like [`WalkerEnv`], this scalar
+/// surface is a width-1 view over the batch-resident physics core
+/// (`envs::mujoco::WorldBatch`) — the shaping here and the spec above
+/// are the only cheetah-specific code, shared verbatim with the batched
+/// [`crate::envs::vector::CheetahRunVec`].
 pub struct CheetahRun {
     inner: WalkerEnv,
     spec: EnvSpec,

@@ -5,6 +5,16 @@
 //! 2. prepare constraints (anchors, Baumgarte biases, limit states);
 //! 3. iterate velocity constraints (joints + contacts);
 //! 4. integrate positions from the corrected velocities.
+//!
+//! Since the batch-resident refactor, [`World`] plays two roles: the
+//! model *description* [`super::models`] assembles (bodies + joints +
+//! task constants), and the AoS **reference stepper** — [`World::step`]
+//! is kept verbatim as the pre-batch solver so the SoA
+//! [`super::batch::WorldBatch`] width-1 path can be pinned against it
+//! **bitwise** (unit tests in `batch.rs`, seeded trajectory pins in
+//! `tests/mujoco_batch_parity.rs`). Production env stepping goes
+//! through `WorldBatch`; change solver behavior there and here in
+//! lock-step or the pins will fail.
 
 use super::body::Body;
 use super::contact::{self, Contact};

@@ -11,14 +11,27 @@
 //! Gym-MuJoCo observation/reward conventions (forward-velocity reward,
 //! control cost, healthy termination).
 
+//! # Batch-resident execution
+//!
+//! Production stepping happens in [`batch::WorldBatch`]: body state,
+//! joint warm-start impulses and contact caches for a whole batch of
+//! envs live in SoA lanes, and every solver phase runs as a masked
+//! lane-group pass ([`crate::simd`]). The AoS [`World`] remains the
+//! model *description* (what [`models`] builds) and the scalar
+//! **reference stepper** the batch's width-1 path is pinned against
+//! bitwise — the scalar [`WalkerEnv`] is a width-1 view over the same
+//! `WorldBatch` core, not a separate solver.
+
 pub mod math;
 pub mod body;
 pub mod joint;
 pub mod contact;
 pub mod dynamics;
+pub mod batch;
 pub mod models;
 pub mod walker;
 
+pub use batch::WorldBatch;
 pub use dynamics::World;
 pub use walker::WalkerEnv;
 

@@ -1,11 +1,18 @@
 //! Gym-MuJoCo-style locomotion environment over [`super::models`]:
 //! forward-velocity reward, quadratic control cost, healthy termination,
 //! 5 physics substeps per env step, reset noise.
+//!
+//! Since the batch-resident refactor, [`WalkerEnv`] is a **width-1
+//! view** over the SoA batch kernel
+//! ([`crate::envs::vector::WalkerVec`], which itself steps a
+//! [`super::batch::WorldBatch`]): one lane, lane width 1 — the bitwise
+//! scalar reference path. There is exactly one solver and one task
+//! layer in the tree; this file only keeps the scalar `Env` surface and
+//! the shared per-env RNG/noise conventions.
 
-use super::models::{self, Model};
-use super::{DT, FRAME_SKIP};
 use crate::envs::env::{Env, Step};
 use crate::envs::spec::{ActionSpace, EnvSpec};
+use crate::envs::vector::{SliceArena, VecEnv, WalkerVec};
 use crate::rng::Pcg32;
 
 /// Which locomotion task.
@@ -17,11 +24,11 @@ pub enum Task {
 }
 
 impl Task {
-    pub(crate) fn build(self) -> Model {
+    pub(crate) fn build(self) -> super::models::Model {
         match self {
-            Task::Hopper => models::hopper(),
-            Task::HalfCheetah => models::half_cheetah(),
-            Task::Ant => models::ant(),
+            Task::Hopper => super::models::hopper(),
+            Task::HalfCheetah => super::models::half_cheetah(),
+            Task::Ant => super::models::ant(),
         }
     }
 
@@ -34,18 +41,24 @@ impl Task {
     }
 }
 
-/// Per-env RNG stream, keyed identically in the scalar env and the SoA
-/// kernel ([`crate::envs::vector::WalkerVec`]) so trajectories match
-/// bitwise.
+/// Per-env RNG stream, keyed identically in the scalar view and the SoA
+/// kernel (lane `l` of a batch starting at `first_env_id` uses
+/// `make_rng(seed, first_env_id + l)`), so trajectories are a function
+/// of `(seed, global env id)` alone. Public so the parity pin tests can
+/// reproduce the stream against the AoS reference stepper.
 #[inline]
-pub(crate) fn make_rng(seed: u64, env_id: u64) -> Pcg32 {
+pub fn make_rng(seed: u64, env_id: u64) -> Pcg32 {
     Pcg32::new(seed ^ 0x6d6a63, env_id)
 }
 
-/// Gym-style reset noise on pose and velocity. Shared by the scalar env
-/// and the SoA kernel: the RNG draw *order* (per body: angle, vel.x,
-/// vel.y, omega) is part of the determinism contract.
-pub(crate) fn apply_reset_noise(world: &mut super::dynamics::World, rng: &mut Pcg32) {
+/// Gym-style reset noise on pose and velocity, on an AoS
+/// [`World`](super::dynamics::World). The RNG draw *order* (per body: angle,
+/// vel.x, vel.y, omega) is part of the determinism contract and is
+/// mirrored exactly by
+/// [`WorldBatch::apply_reset_noise`](super::batch::WorldBatch::apply_reset_noise)
+/// — the pair is pinned bitwise by `tests/mujoco_batch_parity.rs`,
+/// which uses this AoS side to rebuild the pre-refactor trajectories.
+pub fn apply_reset_noise(world: &mut super::dynamics::World, rng: &mut Pcg32) {
     for b in &mut world.bodies {
         if b.inv_mass > 0.0 {
             b.angle += rng.range(-0.005, 0.005);
@@ -71,100 +84,41 @@ pub(crate) fn spec_for_task(task: Task, n: usize) -> EnvSpec {
 /// tasks): `[torso_z, torso_angle, q_1..q_n, vx, vz, omega, qd_1..qd_n]`
 /// where `q_i` are joint angles — 11 dims for Hopper, 17 for HalfCheetah,
 /// 21 for the planar Ant.
+///
+/// A width-1 view over [`WalkerVec`]: `reset`/`step` drive lane 0 of a
+/// one-lane batch at lane width 1 (the bitwise reference path).
 pub struct WalkerEnv {
-    spec: EnvSpec,
+    inner: WalkerVec,
     task: Task,
-    proto: Model,
-    model: Model,
-    actuated: Vec<usize>,
-    rng: Pcg32,
-    steps: usize,
 }
 
 impl WalkerEnv {
     pub fn new(task: Task, seed: u64, env_id: u64) -> Self {
-        let proto = task.build();
-        let actuated = proto.world.actuated();
-        let n = actuated.len();
-        WalkerEnv {
-            spec: spec_for_task(task, n),
-            task,
-            model: proto.clone(),
-            proto,
-            actuated,
-            rng: make_rng(seed, env_id),
-            steps: 0,
-        }
+        WalkerEnv { inner: WalkerVec::new(task, seed, env_id, 1), task }
     }
 
     pub fn task(&self) -> Task {
         self.task
     }
-
-    fn write_obs(&self, obs: &mut [f32]) {
-        let w = &self.model.world;
-        let torso = &w.bodies[self.model.torso];
-        let n = self.actuated.len();
-        obs[0] = torso.pos.y;
-        obs[1] = torso.angle - self.model.init_angle;
-        for (k, &ji) in self.actuated.iter().enumerate() {
-            obs[2 + k] = w.joints[ji].angle(&w.bodies);
-        }
-        obs[2 + n] = torso.vel.x;
-        obs[3 + n] = torso.vel.y;
-        obs[4 + n] = torso.omega;
-        for (k, &ji) in self.actuated.iter().enumerate() {
-            obs[5 + n + k] = w.joints[ji].speed(&w.bodies);
-        }
-    }
-
-    fn healthy(&self) -> bool {
-        let torso = &self.model.world.bodies[self.model.torso];
-        if let Some((lo, hi)) = self.model.healthy_z {
-            if torso.pos.y < lo || torso.pos.y > hi {
-                return false;
-            }
-        }
-        if let Some(dev) = self.model.healthy_angle_dev {
-            if (torso.angle - self.model.init_angle).abs() > dev {
-                return false;
-            }
-        }
-        !self.model.world.is_bad()
-    }
 }
 
 impl Env for WalkerEnv {
     fn spec(&self) -> &EnvSpec {
-        &self.spec
+        self.inner.spec()
     }
 
     fn reset(&mut self, obs: &mut [f32]) {
-        self.model = self.proto.clone();
-        apply_reset_noise(&mut self.model.world, &mut self.rng);
-        self.steps = 0;
-        self.write_obs(obs);
+        self.inner.reset_lane(0, obs);
     }
 
     fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
-        let x_before = self.model.world.bodies[self.model.torso].pos.x;
-        for _ in 0..FRAME_SKIP {
-            self.model.world.step(DT, action);
+        let dim = self.inner.spec().obs_dim();
+        let mut out = [Step::default()];
+        {
+            let mut arena = SliceArena::new(&mut obs[..dim], dim);
+            self.inner.step_batch(action, &[0], &mut arena, &mut out);
         }
-        let x_after = self.model.world.bodies[self.model.torso].pos.x;
-        self.steps += 1;
-
-        let forward = (x_after - x_before) / (DT * FRAME_SKIP as f32);
-        let ctrl: f32 = action.iter().map(|a| a * a).sum();
-        let healthy = self.healthy();
-        let reward = self.model.forward_weight * forward
-            + if healthy { self.model.healthy_reward } else { 0.0 }
-            - self.model.ctrl_cost * ctrl;
-
-        let done = !healthy;
-        let truncated = !done && self.steps >= self.spec.max_episode_steps;
-        self.write_obs(obs);
-        Step { reward, done, truncated }
+        out[0]
     }
 }
 

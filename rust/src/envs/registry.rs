@@ -132,8 +132,9 @@ pub fn spec_for_wrapped(task_id: &str, wrap: &WrapConfig) -> Result<EnvSpec> {
 /// ids `first_env_id..first_env_id + count` — the vector analog of
 /// [`make_env`]. Every registered family maps to a real batch kernel:
 /// classic control to struct-of-arrays kernels (bitwise identical to the
-/// scalar envs), the walkers to [`WalkerVec`] (SoA qpos/qvel lanes,
-/// scalar solver per lane, bitwise), Atari to the batched
+/// scalar envs), the walkers to [`WalkerVec`] (batch-resident
+/// `WorldBatch` physics, lane-grouped solver; bitwise at width 1,
+/// documented tolerance budget at wider lanes), Atari to the batched
 /// [`AtariVec`](super::vector::AtariVec) adapter (bitwise), and
 /// `cheetah_run` to [`CheetahRunVec`]. There is **no scalar fallback**;
 /// [`super::vector::ScalarVec`] is an explicit opt-in for

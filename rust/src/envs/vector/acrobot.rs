@@ -1,176 +1,70 @@
-//! Struct-of-arrays Acrobot batch kernel (RK4 math and RNG streams
-//! shared with [`crate::envs::classic::acrobot`]; the SIMD lane pass
-//! runs the whole RK4 integration over lane groups via
-//! `dynamics_lanes`, bitwise identical to the scalar reference at every
-//! lane width).
+//! Acrobot batch kernel: a [`LaneDynamics`] descriptor over the shared
+//! SoA driver ([`super::SoaKernel`]). RK4 math and RNG streams are
+//! shared with [`crate::envs::classic::acrobot`]; the lane pass runs
+//! the whole RK4 integration over lane groups via `dynamics_lanes`,
+//! bitwise identical to the scalar env at every lane width.
 
-use super::{ObsArena, VecEnv};
+use super::{LaneDynamics, SoaKernel};
 use crate::envs::classic::acrobot;
-use crate::envs::env::{discrete_action, Step};
+use crate::envs::env::discrete_action;
 use crate::envs::spec::EnvSpec;
 use crate::rng::Pcg32;
-use crate::simd::{F32s, LanePass};
+use crate::simd::{F32s, Mask};
 
-/// SoA batch of Acrobot environments. State lanes are
-/// `[theta1, theta2, dtheta1, dtheta2]`.
-pub struct AcrobotVec {
-    spec: EnvSpec,
-    rng: Vec<Pcg32>,
-    theta1: Vec<f32>,
-    theta2: Vec<f32>,
-    dtheta1: Vec<f32>,
-    dtheta2: Vec<f32>,
-    steps: Vec<u32>,
-    /// Resolved SIMD lane width (1 = scalar reference loop).
-    width: usize,
+/// Acrobot's dynamics/terminal/reward rules for the shared driver.
+/// State lanes are `[theta1, theta2, dtheta1, dtheta2]`.
+pub struct AcrobotDyn;
+
+impl LaneDynamics<4> for AcrobotDyn {
+    fn spec(&self) -> EnvSpec {
+        acrobot::spec()
+    }
+
+    fn rng_for(&self, seed: u64, env_id: u64) -> Pcg32 {
+        acrobot::rng(seed, env_id)
+    }
+
+    fn max_steps(&self) -> usize {
+        acrobot::MAX_STEPS
+    }
+
+    fn reset_state(&self, rng: &mut Pcg32) -> [f32; 4] {
+        acrobot::reset_state(rng)
+    }
+
+    fn step1(&self, s: [f32; 4], actions: &[f32], lane: usize) -> ([f32; 4], bool, f32) {
+        let a = discrete_action(&actions[lane..lane + 1], 3);
+        let s2 = acrobot::dynamics(s, a);
+        let done = acrobot::is_terminal(&s2);
+        (s2, done, if done { 0.0 } else { -1.0 })
+    }
+
+    fn input(&self, actions: &[f32], lane: usize) -> f32 {
+        discrete_action(&actions[lane..lane + 1], 3) as f32 - 1.0
+    }
+
+    fn step_lanes<const W: usize>(
+        &self,
+        s: [F32s<W>; 4],
+        u: F32s<W>,
+    ) -> ([F32s<W>; 4], Mask<W>, F32s<W>) {
+        let s2 = acrobot::dynamics_lanes(s, u);
+        let term = acrobot::is_terminal_lanes(s2[0], s2[1]);
+        let reward = term.select_f32(F32s::splat(0.0), F32s::splat(-1.0));
+        (s2, term, reward)
+    }
+
+    fn write_obs(&self, s: &[f32; 4], obs: &mut [f32]) {
+        acrobot::write_obs(s, obs);
+    }
 }
 
-impl AcrobotVec {
+/// SoA batch of Acrobot environments.
+pub type AcrobotVec = SoaKernel<4, AcrobotDyn>;
+
+impl SoaKernel<4, AcrobotDyn> {
     /// Batch of `count` envs with global ids `first_env_id..+count`.
     pub fn new(seed: u64, first_env_id: u64, count: usize) -> Self {
-        AcrobotVec {
-            spec: acrobot::spec(),
-            rng: (0..count).map(|l| acrobot::rng(seed, first_env_id + l as u64)).collect(),
-            theta1: vec![0.0; count],
-            theta2: vec![0.0; count],
-            dtheta1: vec![0.0; count],
-            dtheta2: vec![0.0; count],
-            steps: vec![0; count],
-            // Scalar reference until configured: the wired paths (pool,
-            // executors) always call `set_lane_pass`, which is also the
-            // single place the `Auto` width (env override + feature
-            // detection) resolves — keeping construction infallible.
-            width: LanePass::Scalar.width(),
-        }
-    }
-
-    #[inline]
-    fn scatter(&mut self, lane: usize, s: [f32; 4]) {
-        self.theta1[lane] = s[0];
-        self.theta2[lane] = s[1];
-        self.dtheta1[lane] = s[2];
-        self.dtheta2[lane] = s[3];
-    }
-
-    /// Finish one stepped lane: bookkeeping, flags, observation row.
-    #[inline]
-    fn finish_lane(&mut self, lane: usize, done: bool, arena: &mut dyn ObsArena, out: &mut [Step]) {
-        self.steps[lane] += 1;
-        let truncated = !done && self.steps[lane] as usize >= acrobot::MAX_STEPS;
-        let s =
-            [self.theta1[lane], self.theta2[lane], self.dtheta1[lane], self.dtheta2[lane]];
-        acrobot::write_obs(&s, arena.row(lane));
-        out[lane] = Step { reward: if done { 0.0 } else { -1.0 }, done, truncated };
-    }
-
-    /// The scalar reference loop (lane width 1).
-    fn step_scalar(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        for lane in 0..self.num_envs() {
-            if reset_mask[lane] != 0 {
-                self.reset_lane(lane, arena.row(lane));
-                out[lane] = Step::default();
-                continue;
-            }
-            let a = discrete_action(&actions[lane..lane + 1], 3);
-            let s = acrobot::dynamics(
-                [self.theta1[lane], self.theta2[lane], self.dtheta1[lane], self.dtheta2[lane]],
-                a,
-            );
-            self.scatter(lane, s);
-            let done = acrobot::is_terminal(&s);
-            self.finish_lane(lane, done, arena, out);
-        }
-    }
-
-    /// The SIMD lane pass (masked tail + masked resets, same structure
-    /// as the CartPole kernel — see the module docs in [`super`]).
-    fn step_lanes<const W: usize>(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        let k = self.num_envs();
-        let mut g = 0;
-        while g < k {
-            let n = W.min(k - g);
-            for lane in g..g + n {
-                if reset_mask[lane] != 0 {
-                    self.reset_lane(lane, arena.row(lane));
-                    out[lane] = Step::default();
-                }
-            }
-            let state = [
-                F32s::<W>::load_or(&self.theta1[g..g + n], 0.0),
-                F32s::<W>::load_or(&self.theta2[g..g + n], 0.0),
-                F32s::<W>::load_or(&self.dtheta1[g..g + n], 0.0),
-                F32s::<W>::load_or(&self.dtheta2[g..g + n], 0.0),
-            ];
-            let torque = F32s::<W>::from_fn(|i| {
-                let lane = g + i;
-                if i < n && reset_mask[lane] == 0 {
-                    discrete_action(&actions[lane..lane + 1], 3) as f32 - 1.0
-                } else {
-                    0.0
-                }
-            });
-            let s = acrobot::dynamics_lanes(state, torque);
-            let term = acrobot::is_terminal_lanes(s[0], s[1]);
-            for i in 0..n {
-                let lane = g + i;
-                if reset_mask[lane] != 0 {
-                    continue;
-                }
-                self.scatter(lane, [s[0].0[i], s[1].0[i], s[2].0[i], s[3].0[i]]);
-                self.finish_lane(lane, term.0[i], arena, out);
-            }
-            g += W;
-        }
-    }
-}
-
-impl VecEnv for AcrobotVec {
-    fn spec(&self) -> &EnvSpec {
-        &self.spec
-    }
-
-    fn num_envs(&self) -> usize {
-        self.rng.len()
-    }
-
-    fn set_lane_pass(&mut self, lane_pass: LanePass) {
-        self.width = lane_pass.width();
-    }
-
-    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
-        let s = acrobot::reset_state(&mut self.rng[lane]);
-        self.scatter(lane, s);
-        self.steps[lane] = 0;
-        acrobot::write_obs(&s, obs);
-    }
-
-    fn step_batch(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        let k = self.num_envs();
-        debug_assert_eq!(actions.len(), k);
-        debug_assert_eq!(reset_mask.len(), k);
-        debug_assert_eq!(out.len(), k);
-        match self.width {
-            8 => self.step_lanes::<8>(actions, reset_mask, arena, out),
-            4 => self.step_lanes::<4>(actions, reset_mask, arena, out),
-            _ => self.step_scalar(actions, reset_mask, arena, out),
-        }
+        SoaKernel::with_dynamics(AcrobotDyn, seed, first_env_id, count)
     }
 }

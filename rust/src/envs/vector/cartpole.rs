@@ -1,187 +1,70 @@
-//! Struct-of-arrays CartPole batch kernel. Per-lane math and RNG streams
-//! are shared with [`crate::envs::classic::cartpole`], making this path
+//! CartPole batch kernel: a [`LaneDynamics`] descriptor over the shared
+//! SoA driver ([`super::SoaKernel`]). Per-lane math and RNG streams are
+//! shared with [`crate::envs::classic::cartpole`], making this path
 //! bitwise identical to stepping N scalar envs — at every SIMD lane
 //! width: the lane pass applies `cartpole::dynamics_lanes`, the same
-//! operations in the same order as the scalar `dynamics`, to groups of
-//! [`LanePass::width`] environments per instruction, with a masked tail
-//! and a masked-reset path (see `tests/simd_parity.rs`).
+//! operations in the same order as the scalar `dynamics` (see
+//! `tests/simd_parity.rs`).
 
-use super::{ObsArena, VecEnv};
+use super::{LaneDynamics, SoaKernel};
 use crate::envs::classic::cartpole;
-use crate::envs::env::{discrete_action, Step};
+use crate::envs::env::discrete_action;
 use crate::envs::spec::EnvSpec;
 use crate::rng::Pcg32;
-use crate::simd::{F32s, LanePass};
+use crate::simd::{F32s, Mask};
+
+/// CartPole's dynamics/terminal/reward rules for the shared driver.
+pub struct CartPoleDyn;
+
+impl LaneDynamics<4> for CartPoleDyn {
+    fn spec(&self) -> EnvSpec {
+        cartpole::spec()
+    }
+
+    fn rng_for(&self, seed: u64, env_id: u64) -> Pcg32 {
+        cartpole::rng(seed, env_id)
+    }
+
+    fn max_steps(&self) -> usize {
+        cartpole::MAX_STEPS
+    }
+
+    fn reset_state(&self, rng: &mut Pcg32) -> [f32; 4] {
+        cartpole::reset_state(rng)
+    }
+
+    fn step1(&self, s: [f32; 4], actions: &[f32], lane: usize) -> ([f32; 4], bool, f32) {
+        let a = discrete_action(&actions[lane..lane + 1], 2);
+        let s2 = cartpole::dynamics(s, a);
+        let fell = cartpole::fell(&s2);
+        (s2, fell, 1.0)
+    }
+
+    fn input(&self, actions: &[f32], lane: usize) -> f32 {
+        cartpole::force_for(discrete_action(&actions[lane..lane + 1], 2))
+    }
+
+    fn step_lanes<const W: usize>(
+        &self,
+        s: [F32s<W>; 4],
+        u: F32s<W>,
+    ) -> ([F32s<W>; 4], Mask<W>, F32s<W>) {
+        let s2 = cartpole::dynamics_lanes(s, u);
+        let fell = cartpole::fell_lanes(s2[0], s2[2]);
+        (s2, fell, F32s::splat(1.0))
+    }
+
+    fn write_obs(&self, s: &[f32; 4], obs: &mut [f32]) {
+        obs[..4].copy_from_slice(s);
+    }
+}
 
 /// SoA batch of CartPole environments.
-pub struct CartPoleVec {
-    spec: EnvSpec,
-    rng: Vec<Pcg32>,
-    x: Vec<f32>,
-    x_dot: Vec<f32>,
-    theta: Vec<f32>,
-    theta_dot: Vec<f32>,
-    steps: Vec<u32>,
-    /// Resolved SIMD lane width (1 = scalar reference loop).
-    width: usize,
-}
+pub type CartPoleVec = SoaKernel<4, CartPoleDyn>;
 
-impl CartPoleVec {
+impl SoaKernel<4, CartPoleDyn> {
     /// Batch of `count` envs with global ids `first_env_id..+count`.
     pub fn new(seed: u64, first_env_id: u64, count: usize) -> Self {
-        CartPoleVec {
-            spec: cartpole::spec(),
-            rng: (0..count).map(|l| cartpole::rng(seed, first_env_id + l as u64)).collect(),
-            x: vec![0.0; count],
-            x_dot: vec![0.0; count],
-            theta: vec![0.0; count],
-            theta_dot: vec![0.0; count],
-            steps: vec![0; count],
-            // Scalar reference until configured: the wired paths (pool,
-            // executors) always call `set_lane_pass`, which is also the
-            // single place the `Auto` width (env override + feature
-            // detection) resolves — keeping construction infallible.
-            width: LanePass::Scalar.width(),
-        }
-    }
-
-    /// Finish one stepped lane: bookkeeping, flags, observation row.
-    #[inline]
-    fn finish_lane(&mut self, lane: usize, fell: bool, arena: &mut dyn ObsArena, out: &mut [Step]) {
-        self.steps[lane] += 1;
-        let truncated = !fell && self.steps[lane] as usize >= cartpole::MAX_STEPS;
-        let obs = arena.row(lane);
-        obs[0] = self.x[lane];
-        obs[1] = self.x_dot[lane];
-        obs[2] = self.theta[lane];
-        obs[3] = self.theta_dot[lane];
-        out[lane] = Step { reward: 1.0, done: fell, truncated };
-    }
-
-    /// The scalar reference loop (lane width 1) — the pre-SIMD kernel,
-    /// kept verbatim as the parity baseline.
-    fn step_scalar(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        for lane in 0..self.num_envs() {
-            if reset_mask[lane] != 0 {
-                self.reset_lane(lane, arena.row(lane));
-                out[lane] = Step::default();
-                continue;
-            }
-            let a = discrete_action(&actions[lane..lane + 1], 2);
-            let s = cartpole::dynamics(
-                [self.x[lane], self.x_dot[lane], self.theta[lane], self.theta_dot[lane]],
-                a,
-            );
-            self.x[lane] = s[0];
-            self.x_dot[lane] = s[1];
-            self.theta[lane] = s[2];
-            self.theta_dot[lane] = s[3];
-            let fell = cartpole::fell(&s);
-            self.finish_lane(lane, fell, arena, out);
-        }
-    }
-
-    /// The SIMD lane pass: groups of `W` lanes per instruction. Lanes
-    /// being auto-reset (and tail padding) ride along in the vector
-    /// compute but are excluded from the store — the masked-reset /
-    /// masked-tail path.
-    fn step_lanes<const W: usize>(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        let k = self.num_envs();
-        let mut g = 0;
-        while g < k {
-            let n = W.min(k - g);
-            for lane in g..g + n {
-                if reset_mask[lane] != 0 {
-                    self.reset_lane(lane, arena.row(lane));
-                    out[lane] = Step::default();
-                }
-            }
-            // Load the group (freshly-reset lanes included — their
-            // results are discarded below; tail lanes padded with 0,
-            // a valid state).
-            let state = [
-                F32s::<W>::load_or(&self.x[g..g + n], 0.0),
-                F32s::<W>::load_or(&self.x_dot[g..g + n], 0.0),
-                F32s::<W>::load_or(&self.theta[g..g + n], 0.0),
-                F32s::<W>::load_or(&self.theta_dot[g..g + n], 0.0),
-            ];
-            let force = F32s::<W>::from_fn(|i| {
-                let lane = g + i;
-                if i < n && reset_mask[lane] == 0 {
-                    cartpole::force_for(discrete_action(&actions[lane..lane + 1], 2))
-                } else {
-                    0.0
-                }
-            });
-            let s = cartpole::dynamics_lanes(state, force);
-            let fell = cartpole::fell_lanes(s[0], s[2]);
-            // Masked store: only stepped lanes take the new state.
-            for i in 0..n {
-                let lane = g + i;
-                if reset_mask[lane] != 0 {
-                    continue;
-                }
-                self.x[lane] = s[0].0[i];
-                self.x_dot[lane] = s[1].0[i];
-                self.theta[lane] = s[2].0[i];
-                self.theta_dot[lane] = s[3].0[i];
-                self.finish_lane(lane, fell.0[i], arena, out);
-            }
-            g += W;
-        }
-    }
-}
-
-impl VecEnv for CartPoleVec {
-    fn spec(&self) -> &EnvSpec {
-        &self.spec
-    }
-
-    fn num_envs(&self) -> usize {
-        self.rng.len()
-    }
-
-    fn set_lane_pass(&mut self, lane_pass: LanePass) {
-        self.width = lane_pass.width();
-    }
-
-    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
-        let s = cartpole::reset_state(&mut self.rng[lane]);
-        self.x[lane] = s[0];
-        self.x_dot[lane] = s[1];
-        self.theta[lane] = s[2];
-        self.theta_dot[lane] = s[3];
-        self.steps[lane] = 0;
-        obs[..4].copy_from_slice(&s);
-    }
-
-    fn step_batch(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        let k = self.num_envs();
-        debug_assert_eq!(actions.len(), k);
-        debug_assert_eq!(reset_mask.len(), k);
-        debug_assert_eq!(out.len(), k);
-        match self.width {
-            8 => self.step_lanes::<8>(actions, reset_mask, arena, out),
-            4 => self.step_lanes::<4>(actions, reset_mask, arena, out),
-            _ => self.step_scalar(actions, reset_mask, arena, out),
-        }
+        SoaKernel::with_dynamics(CartPoleDyn, seed, first_env_id, count)
     }
 }

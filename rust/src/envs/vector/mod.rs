@@ -13,44 +13,58 @@
 //! a [`VecEnv`] steps a whole batch of `K` environments in one call, so
 //! all per-task costs are amortized `K`-fold.
 //!
-//! # SoA layout
+//! # SoA layout and the shared driver
 //!
-//! Each kernel stores env state as parallel arrays (struct-of-arrays),
-//! e.g. [`CartPoleVec`] holds `x[]`, `x_dot[]`, `theta[]`, `theta_dot[]`
-//! rather than an array of 4-float structs. The step loop walks lanes
-//! sequentially with all state for a field contiguous in cache, and the
-//! per-lane math is the *same inlined function* the scalar env uses
-//! ([`crate::envs::classic`] exports its dynamics), which makes the two
-//! paths bitwise identical — the property test in `tests/vector_parity.rs`
-//! pins this.
+//! Each kernel stores env state as parallel arrays (struct-of-arrays).
+//! The four classic-control kernels are instances of one generic driver,
+//! [`SoaKernel`], parameterized over the state-lane count and a
+//! per-kernel [`LaneDynamics`] descriptor (scalar dynamics, lane-group
+//! dynamics twin, action decode, terminal/reward rules, obs layout).
+//! The driver owns everything the kernels used to duplicate: the state
+//! arrays, the per-lane RNG streams, the step counters, the width
+//! dispatch, and — most importantly — the **masked-reset protocol**
+//! (auto-reset lanes ride along in the vector compute and are excluded
+//! from every store), so episode-boundary semantics live in exactly one
+//! place. Per-lane math is the *same inlined function* the scalar env
+//! uses ([`crate::envs::classic`] exports its dynamics), which makes
+//! the two paths bitwise identical — the property test in
+//! `tests/vector_parity.rs` pins this.
 //!
 //! # SIMD lane pass
 //!
-//! On top of the SoA layout, the classic-control kernels (and the
-//! walker's batch task pass) step whole **lane groups** of environments
-//! per instruction through [`crate::simd`]: width 4 or 8 groups with a
-//! masked tail (env counts that are not a multiple of the width) and a
-//! masked-reset path (lanes auto-resetting mid-batch are excluded from
-//! the vector store, never from the group). The lane-group dynamics
-//! live next to the scalar dynamics in [`crate::envs::classic`] and
-//! apply the identical operations in the identical order — every lane
-//! width is **bitwise identical** to the width-1 scalar reference loop,
-//! pinned per step by `tests/simd_parity.rs`. Width selection is a
-//! kernel config ([`VecEnv::set_lane_pass`], wired from
-//! `PoolConfig::lane_pass` / `--lane-width`).
+//! On top of the SoA layout, kernels step whole **lane groups** of
+//! environments per instruction through [`crate::simd`]: width 4 or 8
+//! groups with a masked tail and the masked-reset path. Width selection
+//! is a kernel config ([`VecEnv::set_lane_pass`], wired from
+//! `PoolConfig::lane_pass` / `--lane-width`). The parity contract is
+//! per family:
+//!
+//! - **classic control**: the lane-group dynamics live next to the
+//!   scalar dynamics in [`crate::envs::classic`] and apply identical
+//!   operations in identical order — every lane width is **bitwise
+//!   identical** to the width-1 scalar reference loop, pinned per step
+//!   by `tests/simd_parity.rs`.
+//! - **MuJoCo walkers / dm_control**: the *constraint solver itself*
+//!   runs lane-grouped inside the batch-resident
+//!   [`WorldBatch`](crate::envs::mujoco::WorldBatch). Width 1 is
+//!   bitwise with the scalar envs; widths 4/8 use the deterministic
+//!   trig twins and follow the **documented, asserted tolerance
+//!   budget** pinned by `tests/mujoco_batch_parity.rs` (see
+//!   [`walker`] for the contract).
 //!
 //! # Every family is batch-first
 //!
 //! Vectorized execution is the engine's primary abstraction, not a
 //! classic-control carve-out: every registered task has a real kernel.
-//! [`WalkerVec`] keeps MuJoCo qpos/qvel state in SoA lanes (physics
-//! reuses the scalar solver per lane — bitwise parity), [`AtariVec`]
-//! steps emulator lanes in one call with preprocessing shared verbatim
-//! with the scalar env, and [`CheetahRunVec`] layers the dm_control
-//! reward shaping batch-wise. [`ScalarVec`] — a chunk of boxed scalar
-//! envs behind this interface — remains as an *explicit opt-in* for
-//! out-of-registry envs; `registry::make_vec_env` never falls back to
-//! it. Wrappers compose batch-wise through
+//! [`WalkerVec`] keeps MuJoCo body/joint/contact state batch-resident
+//! in a shared [`WorldBatch`](crate::envs::mujoco::WorldBatch) core
+//! (the scalar walker env is a width-1 view over the same kernel),
+//! [`AtariVec`] steps emulator lanes in one call with preprocessing
+//! shared verbatim with the scalar env, and [`CheetahRunVec`] layers
+//! the dm_control reward shaping batch-wise. [`ScalarVec`] — a chunk of
+//! boxed scalar envs behind this interface — remains as an *explicit
+//! opt-in* for out-of-registry envs; `registry::make_vec_env` never
+//! falls back to it. Wrappers compose batch-wise through
 //! [`crate::envs::wrappers::vec`].
 //!
 //! # Observation arenas — no per-env allocation
@@ -98,6 +112,8 @@ pub use walker::{CheetahRunVec, WalkerVec};
 
 use super::env::Step;
 use super::spec::EnvSpec;
+use crate::rng::Pcg32;
+use crate::simd::{F32s, LanePass, Mask};
 
 /// Destination rows for a batch of observations. `row(lane)` returns the
 /// final storage for lane `lane`'s observation (length `obs_dim`) — a
@@ -141,12 +157,13 @@ pub trait VecEnv: Send {
     /// Number of lanes (environments) in this batch.
     fn num_envs(&self) -> usize;
 
-    /// Select the SIMD lane pass for kernels that have one (classic
-    /// control, the walker task pass). Width 1 is the scalar reference
-    /// loop; every width is **bitwise identical** (see
-    /// [`crate::simd`]), so this is purely a throughput knob. Kernels
-    /// without a lane pass ignore it (default no-op); wrappers forward
-    /// it to their inner kernel.
+    /// Select the SIMD lane pass for kernels that have one. Width 1 is
+    /// the scalar reference loop. For classic control every width is
+    /// **bitwise identical** (see [`crate::simd`]), so the knob is
+    /// purely throughput; for the walker family widths > 1 run the
+    /// lane-grouped solver under the documented tolerance contract
+    /// (see [`walker`]). Kernels without a lane pass ignore it
+    /// (default no-op); wrappers forward it to their inner kernel.
     fn set_lane_pass(&mut self, lane_pass: crate::simd::LanePass) {
         let _ = lane_pass;
     }
@@ -167,6 +184,212 @@ pub trait VecEnv: Send {
         arena: &mut dyn ObsArena,
         out: &mut [Step],
     );
+}
+
+/// Per-kernel dynamics descriptor for the shared SoA driver
+/// ([`SoaKernel`]). `S` is the number of state lanes. Implementations
+/// must keep `step1` (the width-1 reference) and `step_lanes` (the
+/// lane-group twin) applying **identical operations in identical
+/// order** — that is the bitwise-at-every-width contract the classic
+/// kernels ship under (`tests/simd_parity.rs`).
+pub trait LaneDynamics<const S: usize>: Send {
+    /// Env spec for this kernel.
+    fn spec(&self) -> EnvSpec;
+
+    /// Per-env RNG stream (keyed by global env id, shared with the
+    /// scalar env).
+    fn rng_for(&self, seed: u64, env_id: u64) -> Pcg32;
+
+    /// Truncation limit (the task's `max_episode_steps`).
+    fn max_steps(&self) -> usize;
+
+    /// Fresh episode state.
+    fn reset_state(&self, rng: &mut Pcg32) -> [f32; S];
+
+    /// Width-1 reference step: decode lane `lane`'s action row from
+    /// `actions` and apply the scalar dynamics. Returns
+    /// `(next state, done, reward)`.
+    fn step1(&self, s: [f32; S], actions: &[f32], lane: usize) -> ([f32; S], bool, f32);
+
+    /// Scalar control input for the SIMD pass (the driver feeds `0.0`
+    /// to masked/tail lanes; their results are discarded).
+    fn input(&self, actions: &[f32], lane: usize) -> f32;
+
+    /// Lane-group twin of [`Self::step1`]. Returns
+    /// `(next state, done mask, reward lanes)`.
+    fn step_lanes<const W: usize>(
+        &self,
+        s: [F32s<W>; S],
+        u: F32s<W>,
+    ) -> ([F32s<W>; S], Mask<W>, F32s<W>);
+
+    /// Write the observation for state `s`.
+    fn write_obs(&self, s: &[f32; S], obs: &mut [f32]);
+}
+
+/// The generic SoA batch driver: state lanes, per-lane RNG streams,
+/// step counters, lane-width dispatch and the **masked-reset protocol**
+/// for every [`LaneDynamics`] kernel — one implementation instead of
+/// four copies (the classic kernels are type aliases over this).
+pub struct SoaKernel<const S: usize, K: LaneDynamics<S>> {
+    k: K,
+    spec: EnvSpec,
+    rng: Vec<Pcg32>,
+    /// SoA state lanes, one `Vec` per state dimension.
+    state: [Vec<f32>; S],
+    steps: Vec<u32>,
+    /// Resolved SIMD lane width (1 = scalar reference loop).
+    width: usize,
+}
+
+impl<const S: usize, K: LaneDynamics<S>> SoaKernel<S, K> {
+    /// Batch of `count` envs with global ids `first_env_id..+count`.
+    pub fn with_dynamics(k: K, seed: u64, first_env_id: u64, count: usize) -> Self {
+        // The LaneDynamics surface passes exactly one f32 control per
+        // lane (`input`, and the descriptors index `actions[lane]`); a
+        // kernel with a wider action row would misindex every lane but
+        // 0, so reject it loudly at construction.
+        assert_eq!(
+            k.spec().action_space.dim(),
+            1,
+            "SoaKernel supports act_dim == 1 kernels only"
+        );
+        SoaKernel {
+            spec: k.spec(),
+            rng: (0..count).map(|l| k.rng_for(seed, first_env_id + l as u64)).collect(),
+            state: std::array::from_fn(|_| vec![0.0; count]),
+            steps: vec![0; count],
+            // Scalar reference until configured: the wired paths (pool,
+            // executors) always call `set_lane_pass`, which is also the
+            // single place the `Auto` width (env override + feature
+            // detection) resolves — keeping construction infallible.
+            width: LanePass::Scalar.width(),
+            k,
+        }
+    }
+
+    /// The scalar reference loop (lane width 1) — the pre-SIMD step
+    /// sequence, kept verbatim as the parity baseline.
+    fn step_scalar(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        for lane in 0..self.num_envs() {
+            if reset_mask[lane] != 0 {
+                self.reset_lane(lane, arena.row(lane));
+                out[lane] = Step::default();
+                continue;
+            }
+            let s: [f32; S] = std::array::from_fn(|j| self.state[j][lane]);
+            let (s2, done, reward) = self.k.step1(s, actions, lane);
+            for (j, arr) in self.state.iter_mut().enumerate() {
+                arr[lane] = s2[j];
+            }
+            self.steps[lane] += 1;
+            let truncated = !done && self.steps[lane] as usize >= self.k.max_steps();
+            self.k.write_obs(&s2, arena.row(lane));
+            out[lane] = Step { reward, done, truncated };
+        }
+    }
+
+    /// The SIMD lane pass: groups of `W` lanes per instruction. Lanes
+    /// being auto-reset (and tail padding) ride along in the vector
+    /// compute but are excluded from the store — the masked-reset /
+    /// masked-tail path, in one place for every kernel.
+    fn step_lanes<const W: usize>(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let n_envs = self.num_envs();
+        let mut g = 0;
+        while g < n_envs {
+            let n = W.min(n_envs - g);
+            for lane in g..g + n {
+                if reset_mask[lane] != 0 {
+                    self.reset_lane(lane, arena.row(lane));
+                    out[lane] = Step::default();
+                }
+            }
+            // Load the group (freshly-reset lanes included — their
+            // results are discarded below; tail lanes padded with 0,
+            // a valid state).
+            let state: [F32s<W>; S] =
+                std::array::from_fn(|j| F32s::load_or(&self.state[j][g..g + n], 0.0));
+            let u = F32s::<W>::from_fn(|i| {
+                let lane = g + i;
+                if i < n && reset_mask[lane] == 0 {
+                    self.k.input(actions, lane)
+                } else {
+                    0.0
+                }
+            });
+            let (s2, term, reward) = self.k.step_lanes(state, u);
+            // Masked store: only stepped lanes take the new state.
+            for i in 0..n {
+                let lane = g + i;
+                if reset_mask[lane] != 0 {
+                    continue;
+                }
+                for (j, arr) in self.state.iter_mut().enumerate() {
+                    arr[lane] = s2[j].0[i];
+                }
+                self.steps[lane] += 1;
+                let done = term.0[i];
+                let truncated = !done && self.steps[lane] as usize >= self.k.max_steps();
+                let srow: [f32; S] = std::array::from_fn(|j| s2[j].0[i]);
+                self.k.write_obs(&srow, arena.row(lane));
+                out[lane] = Step { reward: reward.0[i], done, truncated };
+            }
+            g += W;
+        }
+    }
+}
+
+impl<const S: usize, K: LaneDynamics<S>> VecEnv for SoaKernel<S, K> {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn set_lane_pass(&mut self, lane_pass: LanePass) {
+        self.width = lane_pass.width();
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        let s = self.k.reset_state(&mut self.rng[lane]);
+        for (j, arr) in self.state.iter_mut().enumerate() {
+            arr[lane] = s[j];
+        }
+        self.steps[lane] = 0;
+        self.k.write_obs(&s, obs);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let k = self.num_envs();
+        debug_assert_eq!(actions.len(), k * self.spec.action_space.dim());
+        debug_assert_eq!(reset_mask.len(), k);
+        debug_assert_eq!(out.len(), k);
+        match self.width {
+            8 => self.step_lanes::<8>(actions, reset_mask, arena, out),
+            4 => self.step_lanes::<4>(actions, reset_mask, arena, out),
+            _ => self.step_scalar(actions, reset_mask, arena, out),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -218,6 +441,31 @@ mod tests {
                 }
                 assert_eq!(&vobs[l * 4..(l + 1) * 4], &sobs, "obs {t} lane {l}");
                 mask[l] = steps[l].finished() as u8;
+            }
+        }
+    }
+
+    #[test]
+    fn soa_driver_width_dispatch_covers_all_kernels() {
+        // Smoke every classic kernel at every width through the shared
+        // driver (the bitwise cross-width property lives in
+        // tests/simd_parity.rs).
+        use crate::envs::registry;
+        for task in ["CartPole-v1", "MountainCar-v0", "Pendulum-v1", "Acrobot-v1"] {
+            for lp in [LanePass::Scalar, LanePass::Width4, LanePass::Width8] {
+                let mut k = registry::make_vec_env(task, 3, 0, 5).unwrap();
+                k.set_lane_pass(lp);
+                let dim = k.spec().obs_dim();
+                let mut obs = vec![0.0f32; 5 * dim];
+                for lane in 0..5 {
+                    k.reset_lane(lane, &mut obs[lane * dim..(lane + 1) * dim]);
+                }
+                let mut outs = vec![Step::default(); 5];
+                let mask = vec![0u8; 5];
+                let actions = vec![0.0f32; 5];
+                let mut arena = SliceArena::new(&mut obs, dim);
+                k.step_batch(&actions, &mask, &mut arena, &mut outs);
+                assert!(outs.iter().all(|s| s.reward.is_finite()), "{task} {lp}");
             }
         }
     }

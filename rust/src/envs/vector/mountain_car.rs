@@ -1,158 +1,72 @@
-//! Struct-of-arrays MountainCar batch kernel (math and RNG streams
-//! shared with [`crate::envs::classic::mountain_car`]; the SIMD lane
-//! pass applies `dynamics_lanes`, bitwise identical to the scalar
-//! reference at every lane width).
+//! MountainCar batch kernel: a [`LaneDynamics`] descriptor over the
+//! shared SoA driver ([`super::SoaKernel`]). Math and RNG streams are
+//! shared with [`crate::envs::classic::mountain_car`]; bitwise identical
+//! to the scalar env at every lane width.
 
-use super::{ObsArena, VecEnv};
+use super::{LaneDynamics, SoaKernel};
 use crate::envs::classic::mountain_car;
-use crate::envs::env::{discrete_action, Step};
+use crate::envs::env::discrete_action;
 use crate::envs::spec::EnvSpec;
 use crate::rng::Pcg32;
-use crate::simd::{F32s, LanePass};
+use crate::simd::{F32s, Mask};
+
+/// MountainCar's dynamics/terminal/reward rules for the shared driver.
+/// State lanes are `[pos, vel]`.
+pub struct MountainCarDyn;
+
+impl LaneDynamics<2> for MountainCarDyn {
+    fn spec(&self) -> EnvSpec {
+        mountain_car::spec()
+    }
+
+    fn rng_for(&self, seed: u64, env_id: u64) -> Pcg32 {
+        mountain_car::rng(seed, env_id)
+    }
+
+    fn max_steps(&self) -> usize {
+        mountain_car::MAX_STEPS
+    }
+
+    fn reset_state(&self, rng: &mut Pcg32) -> [f32; 2] {
+        [mountain_car::reset_pos(rng), 0.0]
+    }
+
+    fn step1(&self, s: [f32; 2], actions: &[f32], lane: usize) -> ([f32; 2], bool, f32) {
+        let a = discrete_action(&actions[lane..lane + 1], 3);
+        let (pos, vel) = mountain_car::dynamics(s[0], s[1], a);
+        (
+            [pos, vel],
+            mountain_car::at_goal(pos),
+            -1.0,
+        )
+    }
+
+    fn input(&self, actions: &[f32], lane: usize) -> f32 {
+        discrete_action(&actions[lane..lane + 1], 3) as f32 - 1.0
+    }
+
+    fn step_lanes<const W: usize>(
+        &self,
+        s: [F32s<W>; 2],
+        u: F32s<W>,
+    ) -> ([F32s<W>; 2], Mask<W>, F32s<W>) {
+        let (pos, vel) = mountain_car::dynamics_lanes(s[0], s[1], u);
+        let goal = mountain_car::at_goal_lanes(pos);
+        ([pos, vel], goal, F32s::splat(-1.0))
+    }
+
+    fn write_obs(&self, s: &[f32; 2], obs: &mut [f32]) {
+        obs[0] = s[0];
+        obs[1] = s[1];
+    }
+}
 
 /// SoA batch of MountainCar environments.
-pub struct MountainCarVec {
-    spec: EnvSpec,
-    rng: Vec<Pcg32>,
-    pos: Vec<f32>,
-    vel: Vec<f32>,
-    steps: Vec<u32>,
-    /// Resolved SIMD lane width (1 = scalar reference loop).
-    width: usize,
-}
+pub type MountainCarVec = SoaKernel<2, MountainCarDyn>;
 
-impl MountainCarVec {
+impl SoaKernel<2, MountainCarDyn> {
     /// Batch of `count` envs with global ids `first_env_id..+count`.
     pub fn new(seed: u64, first_env_id: u64, count: usize) -> Self {
-        MountainCarVec {
-            spec: mountain_car::spec(),
-            rng: (0..count).map(|l| mountain_car::rng(seed, first_env_id + l as u64)).collect(),
-            pos: vec![0.0; count],
-            vel: vec![0.0; count],
-            steps: vec![0; count],
-            // Scalar reference until configured: the wired paths (pool,
-            // executors) always call `set_lane_pass`, which is also the
-            // single place the `Auto` width (env override + feature
-            // detection) resolves — keeping construction infallible.
-            width: LanePass::Scalar.width(),
-        }
-    }
-
-    /// Finish one stepped lane: bookkeeping, flags, observation row.
-    #[inline]
-    fn finish_lane(&mut self, lane: usize, done: bool, arena: &mut dyn ObsArena, out: &mut [Step]) {
-        self.steps[lane] += 1;
-        let truncated = !done && self.steps[lane] as usize >= mountain_car::MAX_STEPS;
-        let obs = arena.row(lane);
-        obs[0] = self.pos[lane];
-        obs[1] = self.vel[lane];
-        out[lane] = Step { reward: -1.0, done, truncated };
-    }
-
-    /// The scalar reference loop (lane width 1).
-    fn step_scalar(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        for lane in 0..self.num_envs() {
-            if reset_mask[lane] != 0 {
-                self.reset_lane(lane, arena.row(lane));
-                out[lane] = Step::default();
-                continue;
-            }
-            let a = discrete_action(&actions[lane..lane + 1], 3);
-            let (pos, vel) = mountain_car::dynamics(self.pos[lane], self.vel[lane], a);
-            self.pos[lane] = pos;
-            self.vel[lane] = vel;
-            let done = mountain_car::at_goal(pos);
-            self.finish_lane(lane, done, arena, out);
-        }
-    }
-
-    /// The SIMD lane pass (masked tail + masked resets, same structure
-    /// as the CartPole kernel — see the module docs in [`super`]).
-    fn step_lanes<const W: usize>(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        let k = self.num_envs();
-        let mut g = 0;
-        while g < k {
-            let n = W.min(k - g);
-            for lane in g..g + n {
-                if reset_mask[lane] != 0 {
-                    self.reset_lane(lane, arena.row(lane));
-                    out[lane] = Step::default();
-                }
-            }
-            let pos = F32s::<W>::load_or(&self.pos[g..g + n], 0.0);
-            let vel = F32s::<W>::load_or(&self.vel[g..g + n], 0.0);
-            let accel = F32s::<W>::from_fn(|i| {
-                let lane = g + i;
-                if i < n && reset_mask[lane] == 0 {
-                    discrete_action(&actions[lane..lane + 1], 3) as f32 - 1.0
-                } else {
-                    0.0
-                }
-            });
-            let (np, nv) = mountain_car::dynamics_lanes(pos, vel, accel);
-            let goal = mountain_car::at_goal_lanes(np);
-            for i in 0..n {
-                let lane = g + i;
-                if reset_mask[lane] != 0 {
-                    continue;
-                }
-                self.pos[lane] = np.0[i];
-                self.vel[lane] = nv.0[i];
-                self.finish_lane(lane, goal.0[i], arena, out);
-            }
-            g += W;
-        }
-    }
-}
-
-impl VecEnv for MountainCarVec {
-    fn spec(&self) -> &EnvSpec {
-        &self.spec
-    }
-
-    fn num_envs(&self) -> usize {
-        self.rng.len()
-    }
-
-    fn set_lane_pass(&mut self, lane_pass: LanePass) {
-        self.width = lane_pass.width();
-    }
-
-    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
-        self.pos[lane] = mountain_car::reset_pos(&mut self.rng[lane]);
-        self.vel[lane] = 0.0;
-        self.steps[lane] = 0;
-        obs[0] = self.pos[lane];
-        obs[1] = self.vel[lane];
-    }
-
-    fn step_batch(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        let k = self.num_envs();
-        debug_assert_eq!(actions.len(), k);
-        debug_assert_eq!(reset_mask.len(), k);
-        debug_assert_eq!(out.len(), k);
-        match self.width {
-            8 => self.step_lanes::<8>(actions, reset_mask, arena, out),
-            4 => self.step_lanes::<4>(actions, reset_mask, arena, out),
-            _ => self.step_scalar(actions, reset_mask, arena, out),
-        }
+        SoaKernel::with_dynamics(MountainCarDyn, seed, first_env_id, count)
     }
 }

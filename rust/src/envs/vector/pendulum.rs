@@ -1,150 +1,66 @@
-//! Struct-of-arrays Pendulum batch kernel (math and RNG streams shared
-//! with [`crate::envs::classic::pendulum`]; the SIMD lane pass applies
-//! `dynamics_lanes`, bitwise identical to the scalar reference at every
-//! lane width).
+//! Pendulum batch kernel: a [`LaneDynamics`] descriptor over the shared
+//! SoA driver ([`super::SoaKernel`]). Math and RNG streams are shared
+//! with [`crate::envs::classic::pendulum`]; bitwise identical to the
+//! scalar env at every lane width.
 
-use super::{ObsArena, VecEnv};
+use super::{LaneDynamics, SoaKernel};
 use crate::envs::classic::pendulum;
-use crate::envs::env::Step;
 use crate::envs::spec::EnvSpec;
 use crate::rng::Pcg32;
-use crate::simd::{F32s, LanePass};
+use crate::simd::{F32s, Mask};
+
+/// Pendulum's dynamics/reward rules for the shared driver. State lanes
+/// are `[theta, theta_dot]`; the env never terminates (done is always
+/// false, episodes truncate at `MAX_STEPS`).
+pub struct PendulumDyn;
+
+impl LaneDynamics<2> for PendulumDyn {
+    fn spec(&self) -> EnvSpec {
+        pendulum::spec()
+    }
+
+    fn rng_for(&self, seed: u64, env_id: u64) -> Pcg32 {
+        pendulum::rng(seed, env_id)
+    }
+
+    fn max_steps(&self) -> usize {
+        pendulum::MAX_STEPS
+    }
+
+    fn reset_state(&self, rng: &mut Pcg32) -> [f32; 2] {
+        let (theta, theta_dot) = pendulum::reset_state(rng);
+        [theta, theta_dot]
+    }
+
+    fn step1(&self, s: [f32; 2], actions: &[f32], lane: usize) -> ([f32; 2], bool, f32) {
+        let (theta, theta_dot, cost) = pendulum::dynamics(s[0], s[1], actions[lane]);
+        ([theta, theta_dot], false, -cost)
+    }
+
+    fn input(&self, actions: &[f32], lane: usize) -> f32 {
+        actions[lane]
+    }
+
+    fn step_lanes<const W: usize>(
+        &self,
+        s: [F32s<W>; 2],
+        u: F32s<W>,
+    ) -> ([F32s<W>; 2], Mask<W>, F32s<W>) {
+        let (theta, theta_dot, cost) = pendulum::dynamics_lanes(s[0], s[1], u);
+        ([theta, theta_dot], Mask([false; W]), -cost)
+    }
+
+    fn write_obs(&self, s: &[f32; 2], obs: &mut [f32]) {
+        pendulum::write_obs(s[0], s[1], obs);
+    }
+}
 
 /// SoA batch of Pendulum environments.
-pub struct PendulumVec {
-    spec: EnvSpec,
-    rng: Vec<Pcg32>,
-    theta: Vec<f32>,
-    theta_dot: Vec<f32>,
-    steps: Vec<u32>,
-    /// Resolved SIMD lane width (1 = scalar reference loop).
-    width: usize,
-}
+pub type PendulumVec = SoaKernel<2, PendulumDyn>;
 
-impl PendulumVec {
+impl SoaKernel<2, PendulumDyn> {
     /// Batch of `count` envs with global ids `first_env_id..+count`.
     pub fn new(seed: u64, first_env_id: u64, count: usize) -> Self {
-        PendulumVec {
-            spec: pendulum::spec(),
-            rng: (0..count).map(|l| pendulum::rng(seed, first_env_id + l as u64)).collect(),
-            theta: vec![0.0; count],
-            theta_dot: vec![0.0; count],
-            steps: vec![0; count],
-            // Scalar reference until configured: the wired paths (pool,
-            // executors) always call `set_lane_pass`, which is also the
-            // single place the `Auto` width (env override + feature
-            // detection) resolves — keeping construction infallible.
-            width: LanePass::Scalar.width(),
-        }
-    }
-
-    /// Finish one stepped lane: bookkeeping, flags, observation row.
-    #[inline]
-    fn finish_lane(&mut self, lane: usize, cost: f32, arena: &mut dyn ObsArena, out: &mut [Step]) {
-        self.steps[lane] += 1;
-        pendulum::write_obs(self.theta[lane], self.theta_dot[lane], arena.row(lane));
-        out[lane] = Step {
-            reward: -cost,
-            done: false,
-            truncated: self.steps[lane] as usize >= pendulum::MAX_STEPS,
-        };
-    }
-
-    /// The scalar reference loop (lane width 1).
-    fn step_scalar(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        for lane in 0..self.num_envs() {
-            if reset_mask[lane] != 0 {
-                self.reset_lane(lane, arena.row(lane));
-                out[lane] = Step::default();
-                continue;
-            }
-            let (theta, theta_dot, cost) =
-                pendulum::dynamics(self.theta[lane], self.theta_dot[lane], actions[lane]);
-            self.theta[lane] = theta;
-            self.theta_dot[lane] = theta_dot;
-            self.finish_lane(lane, cost, arena, out);
-        }
-    }
-
-    /// The SIMD lane pass (masked tail + masked resets, same structure
-    /// as the CartPole kernel — see the module docs in [`super`]).
-    fn step_lanes<const W: usize>(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        let k = self.num_envs();
-        let mut g = 0;
-        while g < k {
-            let n = W.min(k - g);
-            for lane in g..g + n {
-                if reset_mask[lane] != 0 {
-                    self.reset_lane(lane, arena.row(lane));
-                    out[lane] = Step::default();
-                }
-            }
-            let theta = F32s::<W>::load_or(&self.theta[g..g + n], 0.0);
-            let theta_dot = F32s::<W>::load_or(&self.theta_dot[g..g + n], 0.0);
-            let action = F32s::<W>::load_or(&actions[g..g + n], 0.0);
-            let (nt, ntd, cost) = pendulum::dynamics_lanes(theta, theta_dot, action);
-            for i in 0..n {
-                let lane = g + i;
-                if reset_mask[lane] != 0 {
-                    continue;
-                }
-                self.theta[lane] = nt.0[i];
-                self.theta_dot[lane] = ntd.0[i];
-                self.finish_lane(lane, cost.0[i], arena, out);
-            }
-            g += W;
-        }
-    }
-}
-
-impl VecEnv for PendulumVec {
-    fn spec(&self) -> &EnvSpec {
-        &self.spec
-    }
-
-    fn num_envs(&self) -> usize {
-        self.rng.len()
-    }
-
-    fn set_lane_pass(&mut self, lane_pass: LanePass) {
-        self.width = lane_pass.width();
-    }
-
-    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
-        let (theta, theta_dot) = pendulum::reset_state(&mut self.rng[lane]);
-        self.theta[lane] = theta;
-        self.theta_dot[lane] = theta_dot;
-        self.steps[lane] = 0;
-        pendulum::write_obs(theta, theta_dot, obs);
-    }
-
-    fn step_batch(
-        &mut self,
-        actions: &[f32],
-        reset_mask: &[u8],
-        arena: &mut dyn ObsArena,
-        out: &mut [Step],
-    ) {
-        let k = self.num_envs();
-        debug_assert_eq!(actions.len(), k);
-        debug_assert_eq!(reset_mask.len(), k);
-        debug_assert_eq!(out.len(), k);
-        match self.width {
-            8 => self.step_lanes::<8>(actions, reset_mask, arena, out),
-            4 => self.step_lanes::<4>(actions, reset_mask, arena, out),
-            _ => self.step_scalar(actions, reset_mask, arena, out),
-        }
+        SoaKernel::with_dynamics(PendulumDyn, seed, first_env_id, count)
     }
 }

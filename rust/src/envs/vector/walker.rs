@@ -3,48 +3,59 @@
 //!
 //! # Layout
 //!
-//! Task-level state lives in SoA *qpos/qvel lanes*: for each body field
-//! (`pos_x`, `pos_y`, `angle`, `vel_x`, `vel_y`, `omega`) one flat array
-//! indexed `[lane * num_bodies + body]`. Everything the task layer does
-//! — reward, healthy checks, truncation, observation extraction — runs
-//! as batch passes over these contiguous lanes, using static per-joint
-//! metadata captured once from the prototype model (all lanes share one
-//! articulation topology).
+//! *All* mutable physics state — body qpos/qvel lanes, joint warm-start
+//! impulses, contact caches — lives in the batch-resident
+//! [`WorldBatch`](crate::envs::mujoco::WorldBatch) core, indexed
+//! `[lane * num_bodies + body]`. This kernel owns the task layer on
+//! top: reward, healthy checks, truncation and observation extraction
+//! run as batch passes over the batch's contiguous lanes, using static
+//! per-joint metadata captured once from the prototype model (all lanes
+//! share one articulation topology). There are **no per-lane `World`
+//! clones** anymore; the scalar
+//! [`WalkerEnv`](crate::envs::mujoco::WalkerEnv) is a width-1 view over
+//! this very kernel, so there is exactly one solver in the tree.
 //!
 //! # Physics and parity
 //!
-//! The constraint solver itself steps one lane at a time through the
-//! *scalar* [`World::step`](crate::envs::mujoco::World::step) — each
-//! lane keeps its own `World` because joint warm-start impulses and
-//! contact caches are per-trajectory state (sharing them across lanes
-//! would couple trajectories and break chunking invariance). After each
-//! lane's `frame_skip` substeps the body state is scattered back into
-//! the SoA lanes. Reusing the scalar solver makes the kernel
-//! **bitwise identical** to [`WalkerEnv`](crate::envs::mujoco::WalkerEnv)
-//! — the documented parity tolerance is exact equality (0 ulp), pinned
-//! by `tests/vector_parity.rs`; a future SIMD solver pass may relax the
-//! contract to a documented ≤1e-5 relative tolerance, at which point
-//! that test's assertion is the place to loosen.
+//! The sequential-impulse solver phases run **lane-grouped** inside
+//! `WorldBatch::step`, at the width selected by
+//! [`VecEnv::set_lane_pass`] (wired from `PoolConfig::lane_pass` /
+//! `--lane-width`, overridable via `ENVPOOL_LANE_WIDTH` — exactly the
+//! classic-control plumbing):
 //!
-//! The throughput win for walkers is therefore the chunked-dispatch
-//! amortization plus the batch task passes — the solver cost dominates
-//! and is unchanged, which is why `benches/table2_single_env` gates
-//! vectorized ≥ scalar (not a multiple) on this family.
+//! - **Width 1** is the bitwise reference: the batch applies the same
+//!   scalar operations in the same order as the AoS
+//!   [`World::step`](crate::envs::mujoco::World::step) (libm trig
+//!   included), so width-1 trajectories reproduce the pre-refactor
+//!   scalar envs exactly — pinned by the in-file tests here and the
+//!   seeded pins in `tests/mujoco_batch_parity.rs`.
+//! - **Widths 4/8** rotate anchors/endpoints through the deterministic
+//!   [`crate::simd::math`] trig twins so the whole solver vectorizes;
+//!   trajectories drift from width 1 within the **documented, asserted
+//!   tolerance budget**
+//!   ([`LANE_TOL_ABS`](crate::envs::mujoco::batch::LANE_TOL_ABS)`/
+//!   `[`LANE_TOL_REL`](crate::envs::mujoco::batch::LANE_TOL_REL)) plus
+//!   cross-width invariants (flags, penetration bound, energy bound) —
+//!   the relaxed contract that replaced the old bitwise-only one. Tests
+//!   that need bitwise walker equality across execution modes pin
+//!   `LanePass::Scalar`.
 
 use super::{ObsArena, VecEnv};
 use crate::envs::dmc::cheetah_run::{cheetah_spec, shape_step};
-use crate::simd::{F32s, LanePass, Mask};
 use crate::envs::env::Step;
 use crate::envs::mujoco::models::Model;
 use crate::envs::mujoco::walker::{self, Task};
-use crate::envs::mujoco::{DT, FRAME_SKIP};
+use crate::envs::mujoco::{WorldBatch, DT, FRAME_SKIP};
 use crate::envs::spec::EnvSpec;
 use crate::rng::Pcg32;
+use crate::simd::{F32s, LanePass, Mask};
 
-/// SoA batch of walker environments (Hopper / HalfCheetah / Ant).
+/// SoA batch of walker environments (Hopper / HalfCheetah / Ant) over a
+/// batch-resident [`WorldBatch`] core.
 pub struct WalkerVec {
     spec: EnvSpec,
-    /// Prototype model: reset template + task constants + topology.
+    /// Prototype model: task constants + topology (the batch holds the
+    /// reset template itself).
     proto: Model,
     /// Actuated joint indices (action layout), shared by all lanes.
     actuated: Vec<usize>,
@@ -55,20 +66,13 @@ pub struct WalkerVec {
     nb: usize,
     rng: Vec<Pcg32>,
     steps: Vec<u32>,
-    /// Per-lane solver state (bodies + joint/contact warm starts).
-    models: Vec<Model>,
-    // SoA qpos lanes, indexed [lane * nb + body].
-    pos_x: Vec<f32>,
-    pos_y: Vec<f32>,
-    angle: Vec<f32>,
-    // SoA qvel lanes.
-    vel_x: Vec<f32>,
-    vel_y: Vec<f32>,
-    omega: Vec<f32>,
+    /// Batch-resident solver state: body lanes + joint/contact warm
+    /// starts, stepped lane-grouped.
+    batch: WorldBatch,
     /// Torso x before the current batch step (forward-reward scratch).
     x_before: Vec<f32>,
-    /// Resolved SIMD lane width for the batch task pass (1 = the scalar
-    /// reference loop; the constraint solver is per-lane either way).
+    /// Resolved SIMD lane width for the solver and the batch task pass
+    /// (1 = the bitwise scalar reference).
     width: usize,
 }
 
@@ -93,13 +97,7 @@ impl WalkerVec {
             nb,
             rng: (0..count).map(|l| walker::make_rng(seed, first_env_id + l as u64)).collect(),
             steps: vec![0; count],
-            models: (0..count).map(|_| proto.clone()).collect(),
-            pos_x: vec![0.0; count * nb],
-            pos_y: vec![0.0; count * nb],
-            angle: vec![0.0; count * nb],
-            vel_x: vec![0.0; count * nb],
-            vel_y: vec![0.0; count * nb],
-            omega: vec![0.0; count * nb],
+            batch: WorldBatch::from_world(&proto.world, count),
             x_before: vec![0.0; count],
             // Scalar reference until configured (see the classic-control
             // kernels): `set_lane_pass` is the single Auto-resolution
@@ -109,51 +107,28 @@ impl WalkerVec {
         }
     }
 
-    /// Copy lane `lane`'s body state from its world into the SoA lanes.
-    fn scatter(&mut self, lane: usize) {
-        let base = lane * self.nb;
-        let bodies = &self.models[lane].world.bodies;
-        for (b, body) in bodies.iter().enumerate() {
-            self.pos_x[base + b] = body.pos.x;
-            self.pos_y[base + b] = body.pos.y;
-            self.angle[base + b] = body.angle;
-            self.vel_x[base + b] = body.vel.x;
-            self.vel_y[base + b] = body.vel.y;
-            self.omega[base + b] = body.omega;
-        }
+    /// The batch-resident physics core (read-only) — invariant probes
+    /// (penetration, kinetic energy, finiteness) for the tolerance
+    /// test layer.
+    pub fn batch(&self) -> &WorldBatch {
+        &self.batch
     }
 
     /// Healthy test on the SoA lanes — same predicate (and evaluation
-    /// order) as the scalar env's `healthy()`.
+    /// order) as the pre-refactor scalar env's `healthy()`.
     fn lane_healthy(&self, lane: usize) -> bool {
         let t = lane * self.nb + self.proto.torso;
         if let Some((lo, hi)) = self.proto.healthy_z {
-            if self.pos_y[t] < lo || self.pos_y[t] > hi {
+            if self.batch.pos_y[t] < lo || self.batch.pos_y[t] > hi {
                 return false;
             }
         }
         if let Some(dev) = self.proto.healthy_angle_dev {
-            if (self.angle[t] - self.proto.init_angle).abs() > dev {
+            if (self.batch.angle[t] - self.proto.init_angle).abs() > dev {
                 return false;
             }
         }
-        !self.lane_is_bad(lane)
-    }
-
-    /// Any non-finite state in lane `lane`?
-    fn lane_is_bad(&self, lane: usize) -> bool {
-        for i in lane * self.nb..(lane + 1) * self.nb {
-            if !self.pos_x[i].is_finite()
-                || !self.pos_y[i].is_finite()
-                || !self.angle[i].is_finite()
-                || !self.vel_x[i].is_finite()
-                || !self.vel_y[i].is_finite()
-                || !self.omega[i].is_finite()
-            {
-                return true;
-            }
-        }
-        false
+        !self.batch.lane_is_bad(lane)
     }
 
     /// Write lane `lane`'s observation from the SoA lanes (the scalar
@@ -162,29 +137,29 @@ impl WalkerVec {
         let base = lane * self.nb;
         let t = base + self.proto.torso;
         let n = self.actuated.len();
-        obs[0] = self.pos_y[t];
-        obs[1] = self.angle[t] - self.proto.init_angle;
+        obs[0] = self.batch.pos_y[t];
+        obs[1] = self.batch.angle[t] - self.proto.init_angle;
         for (k, &(a, b, ref_angle)) in self.jmeta.iter().enumerate() {
-            obs[2 + k] = self.angle[base + b] - self.angle[base + a] - ref_angle;
+            obs[2 + k] = self.batch.angle[base + b] - self.batch.angle[base + a] - ref_angle;
         }
-        obs[2 + n] = self.vel_x[t];
-        obs[3 + n] = self.vel_y[t];
-        obs[4 + n] = self.omega[t];
+        obs[2 + n] = self.batch.vel_x[t];
+        obs[3 + n] = self.batch.vel_y[t];
+        obs[4 + n] = self.batch.omega[t];
         for (k, &(a, b, _)) in self.jmeta.iter().enumerate() {
-            obs[5 + n + k] = self.omega[base + b] - self.omega[base + a];
+            obs[5 + n + k] = self.batch.omega[base + b] - self.batch.omega[base + a];
         }
     }
 }
 
 impl WalkerVec {
-    /// Phase 2 as a SIMD lane pass: forward reward, control cost,
-    /// healthy test and reward composed over groups of `W` lanes per
-    /// instruction. Identical operations in identical order to the
-    /// scalar phase-2 loop (the per-lane control-cost accumulation
-    /// walks joints in the same sequence), so this is bitwise equal to
-    /// the width-1 reference — and to the scalar [`WalkerEnv`]
-    /// (`crate::envs::mujoco::WalkerEnv`), keeping the kernel's bitwise
-    /// parity contract intact.
+    /// The task layer as a SIMD lane pass: forward reward, control
+    /// cost, healthy test and reward composed over groups of `W` lanes
+    /// per instruction. Identical operations in identical order to the
+    /// scalar task loop (the per-lane control-cost accumulation walks
+    /// joints in the same sequence), so for a given solver state this
+    /// pass is bitwise equal to the width-1 task loop — the width-1 /
+    /// width-N trajectory difference comes entirely from the solver's
+    /// trig twins (see the module docs).
     fn task_pass_lanes<const W: usize>(
         &mut self,
         actions: &[f32],
@@ -201,8 +176,13 @@ impl WalkerVec {
             let n = W.min(k - g);
             // Gathers (stride nb) — reset/tail lanes ride along, their
             // results are discarded by the masked store below.
-            let x_after =
-                F32s::<W>::from_fn(|i| if i < n { self.pos_x[(g + i) * nb + torso] } else { 0.0 });
+            let x_after = F32s::<W>::from_fn(|i| {
+                if i < n {
+                    self.batch.pos_x[(g + i) * nb + torso]
+                } else {
+                    0.0
+                }
+            });
             let x_before = F32s::<W>::load_or(&self.x_before[g..g + n], 0.0);
             let forward = (x_after - x_before) / s(DT * FRAME_SKIP as f32);
             let mut ctrl = s(0.0);
@@ -222,7 +202,7 @@ impl WalkerVec {
             if let Some((lo, hi)) = self.proto.healthy_z {
                 let y = F32s::<W>::from_fn(|i| {
                     if i < n {
-                        self.pos_y[(g + i) * nb + torso]
+                        self.batch.pos_y[(g + i) * nb + torso]
                     } else {
                         0.0
                     }
@@ -232,14 +212,15 @@ impl WalkerVec {
             if let Some(dev) = self.proto.healthy_angle_dev {
                 let a = F32s::<W>::from_fn(|i| {
                     if i < n {
-                        self.angle[(g + i) * nb + torso]
+                        self.batch.angle[(g + i) * nb + torso]
                     } else {
                         0.0
                     }
                 });
                 healthy = healthy & !(a - s(self.proto.init_angle)).abs().gt(s(dev));
             }
-            let bad = Mask(std::array::from_fn(|i| i < n && self.lane_is_bad(g + i)));
+            let bad =
+                Mask(std::array::from_fn(|i| i < n && self.batch.lane_is_bad(g + i)));
             healthy = healthy & !bad;
             let reward = s(self.proto.forward_weight) * forward
                 + healthy.select_f32(s(self.proto.healthy_reward), s(0.0))
@@ -273,10 +254,9 @@ impl VecEnv for WalkerVec {
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
-        self.models[lane] = self.proto.clone();
-        walker::apply_reset_noise(&mut self.models[lane].world, &mut self.rng[lane]);
+        self.batch.reset_lane(lane);
+        self.batch.apply_reset_noise(lane, &mut self.rng[lane]);
         self.steps[lane] = 0;
-        self.scatter(lane);
         self.write_obs_lane(lane, obs);
     }
 
@@ -292,28 +272,23 @@ impl VecEnv for WalkerVec {
         debug_assert_eq!(actions.len(), k * adim);
         debug_assert_eq!(reset_mask.len(), k);
         debug_assert_eq!(out.len(), k);
-        // Phase 1 — auto-resets, then physics: each stepped lane runs
-        // `FRAME_SKIP` substeps of the scalar solver (bitwise parity)
-        // and scatters its body state back into the qpos/qvel lanes.
+        // Phase 1 — auto-resets + forward-reward scratch.
         for lane in 0..k {
             if reset_mask[lane] != 0 {
                 self.reset_lane(lane, arena.row(lane));
                 out[lane] = Step::default();
-                continue;
+            } else {
+                self.x_before[lane] = self.batch.pos_x[lane * self.nb + self.proto.torso];
+                self.steps[lane] += 1;
             }
-            self.x_before[lane] = self.pos_x[lane * self.nb + self.proto.torso];
-            let act = &actions[lane * adim..(lane + 1) * adim];
-            let w = &mut self.models[lane].world;
-            for _ in 0..FRAME_SKIP {
-                w.step(DT, act);
-            }
-            self.scatter(lane);
-            self.steps[lane] += 1;
+        }
+        // Physics — `FRAME_SKIP` lane-grouped substeps of the batch
+        // solver; resetting lanes ride along fully masked.
+        for _ in 0..FRAME_SKIP {
+            self.batch.step(DT, actions, adim, reset_mask, self.width);
         }
         // Phase 2 — batch task pass over the SoA lanes: forward reward,
-        // control cost, healthy termination, truncation. SIMD lane pass
-        // when a width is selected (bitwise identical to the scalar
-        // loop below, which remains the width-1 reference).
+        // control cost, healthy termination, truncation.
         match self.width {
             8 => self.task_pass_lanes::<8>(actions, reset_mask, out),
             4 => self.task_pass_lanes::<4>(actions, reset_mask, out),
@@ -322,7 +297,7 @@ impl VecEnv for WalkerVec {
                     if reset_mask[lane] != 0 {
                         continue;
                     }
-                    let x_after = self.pos_x[lane * self.nb + self.proto.torso];
+                    let x_after = self.batch.pos_x[lane * self.nb + self.proto.torso];
                     let forward = (x_after - self.x_before[lane]) / (DT * FRAME_SKIP as f32);
                     let act = &actions[lane * adim..(lane + 1) * adim];
                     let ctrl: f32 = act.iter().map(|a| a * a).sum();
@@ -350,8 +325,9 @@ impl VecEnv for WalkerVec {
 /// dm_control `cheetah run` over the SoA walker kernel: the HalfCheetah
 /// lanes with the Control Suite's shaped reward
 /// `clip(vx / TARGET_SPEED, 0, 1)` and no failure termination — the
-/// batched analog of [`CheetahRun`](crate::envs::dmc::CheetahRun),
-/// bitwise identical to it.
+/// batched analog of [`CheetahRun`](crate::envs::dmc::CheetahRun)
+/// (bitwise identical to it at width 1; the walker tolerance contract
+/// applies at wider lanes).
 pub struct CheetahRunVec {
     inner: WalkerVec,
     spec: EnvSpec,
@@ -363,6 +339,11 @@ impl CheetahRunVec {
         let inner = WalkerVec::new(Task::HalfCheetah, seed, first_env_id, count);
         let spec = cheetah_spec(inner.spec());
         CheetahRunVec { inner, spec }
+    }
+
+    /// Invariant probe passthrough (see [`WalkerVec::batch`]).
+    pub fn batch(&self) -> &WorldBatch {
+        self.inner.batch()
     }
 }
 
@@ -413,9 +394,12 @@ mod tests {
     use crate::envs::mujoco::WalkerEnv;
     use crate::envs::vector::SliceArena;
 
-    /// Drive a scalar env and the matching kernel lane-for-lane with the
-    /// same action stream (including auto-resets) and demand bitwise
-    /// equality — the documented parity tolerance for this kernel.
+    /// Drive a scalar env (itself a width-1 view over a one-lane batch)
+    /// and the matching N-lane kernel lane-for-lane with the same action
+    /// stream (including auto-resets) and demand bitwise equality — the
+    /// width-1 parity contract. This pins the view plumbing (RNG
+    /// streams, reset masking, obs extraction) on top of the solver pin
+    /// in `envs/mujoco/batch.rs`.
     fn check_parity(task: Task, steps: usize) {
         let seed = 31;
         let n = 2;

@@ -54,18 +54,26 @@
 //! top of the SoA layout, kernels with a **SIMD lane pass** step whole
 //! lane groups of envs per instruction ([`simd`]; width selected by
 //! `PoolConfig::lane_pass` / `--lane-width {1,4,8,auto}`, width 1 = the
-//! scalar reference loop). Every lane width is **bitwise identical** —
-//! the shared trig twins ([`simd::math`]) and lane-group dynamics apply
-//! the same operations in the same order as the scalar code
-//! (`tests/simd_parity.rs` asserts 0 ULP per step, including masked
-//! tails and mid-batch resets).
+//! scalar reference loop). The classic-control kernels — instances of
+//! one generic SoA driver ([`envs::vector::SoaKernel`]) — are
+//! **bitwise identical at every width**: the shared trig twins
+//! ([`simd::math`]) and lane-group dynamics apply the same operations
+//! in the same order as the scalar code (`tests/simd_parity.rs`
+//! asserts 0 ULP per step, including masked tails and mid-batch
+//! resets). The MuJoCo walkers are **batch-resident**: body state,
+//! joint warm starts and contact caches live in SoA lanes inside
+//! [`envs::mujoco::WorldBatch`] and the sequential-impulse solver
+//! itself runs lane-grouped; width 1 is bitwise with the pre-batch
+//! scalar path (the scalar env *is* a width-1 view), widths 4/8 follow
+//! a **documented, asserted tolerance budget**
+//! (`tests/mujoco_batch_parity.rs`).
 //!
 //! | env family | `ExecMode::Scalar` | SoA kernel | SIMD lane pass | parity |
 //! |---|---|---|---|---|
-//! | classic control (4 tasks) | per-env tasks | `CartPoleVec`, ... | full dynamics (incl. RK4 / trig) | bitwise at every width |
-//! | MuJoCo walkers (`Hopper/HalfCheetah/Ant-v4`) | per-env tasks | `WalkerVec` (SoA qpos/qvel lanes) | batch task pass (reward/healthy); solver scalar per lane | bitwise at every width |
+//! | classic control (4 tasks) | per-env tasks | `CartPoleVec`, ... (shared `SoaKernel` driver) | full dynamics (incl. RK4 / trig) | bitwise at every width |
+//! | MuJoCo walkers (`Hopper/HalfCheetah/Ant-v4`) | per-env tasks (each a width-1 `WorldBatch` view) | `WalkerVec` over batch-resident `WorldBatch` (body/joint/contact lanes) | full constraint solver (masked lane groups) + batch task pass | bitwise at width 1; asserted tolerance budget at 4/8 |
 //! | Atari (`Pong/Breakout-v5`) | per-env tasks | `AtariVec` (batched emulator lanes, shared preproc) | — (emulator-bound) | bitwise |
-//! | dm_control (`cheetah_run`) | per-env tasks | `CheetahRunVec` (shaping over `WalkerVec`) | inherits `WalkerVec` | bitwise at every width |
+//! | dm_control (`cheetah_run`) | per-env tasks (width-1 view) | `CheetahRunVec` (shaping over `WalkerVec`) | inherits `WalkerVec` | bitwise at width 1; tolerance budget at 4/8 |
 //! | wrappers (`TimeLimit`/`RewardClip`/`NormalizeObs`) | one-lane adapters | batch-wise `VecWrapper` layer (forwards `set_lane_pass`) | — | bitwise (shared cores) |
 //!
 //! Executors: `forloop`/`subprocess` are scalar by construction;

@@ -18,8 +18,12 @@
 //! `select`, the [`math`] kernels) applies the **same scalar operation
 //! per lane in the same order** as the corresponding scalar code, so a
 //! lane pass built from them is **bitwise identical** to the scalar
-//! reference loop — `tests/simd_parity.rs` asserts 0 ULP for the env
-//! kernels at every lane width. The only ops that reassociate — and
+//! reference loop — `tests/simd_parity.rs` asserts 0 ULP for the
+//! classic-control kernels at every lane width. (The walker family's
+//! lane-grouped *solver* additionally swaps libm trig for the [`math`]
+//! twins at widths > 1, and therefore ships under a documented
+//! tolerance budget instead — see `envs::mujoco::batch` and
+//! `tests/mujoco_batch_parity.rs`.) The only ops that reassociate — and
 //! therefore carry an explicit ULP budget instead of bitwise equality —
 //! are the horizontal reductions ([`dot_f32`] accumulates in `LANES`
 //! partial sums). Nothing else is allowed to reassociate; in particular
@@ -32,9 +36,10 @@
 //! `scalar` (width 1 — the reference loop), forced widths 4/8 (the
 //! parity suite and the `simd-parity` CI job pin all three), or `auto`
 //! (runtime detection: 8 when AVX2 is present, 4 otherwise, overridable
-//! via `ENVPOOL_LANE_WIDTH`). Because every width is bitwise identical,
-//! the choice is purely a throughput knob — determinism tests stay
-//! valid across widths, machines, and `ExecMode`s.
+//! via `ENVPOOL_LANE_WIDTH`). For the bitwise kernels the choice is
+//! purely a throughput knob — determinism tests stay valid across
+//! widths, machines, and `ExecMode`s; for the walker solver widths > 1
+//! trade bitwise equality for the documented tolerance budget.
 
 pub mod math;
 #[cfg(target_arch = "x86_64")]
@@ -127,6 +132,13 @@ macro_rules! lane_type {
             #[inline(always)]
             pub fn abs(self) -> Self {
                 Self::from_fn(|i| self.0[i].abs())
+            }
+
+            /// Per-lane square root (IEEE-exact, so bitwise identical to
+            /// the scalar `.sqrt()` calls it replaces).
+            #[inline(always)]
+            pub fn sqrt(self) -> Self {
+                Self::from_fn(|i| self.0[i].sqrt())
             }
 
             /// Lane-wise `self > o`.
@@ -327,8 +339,10 @@ pub fn caps() -> Caps {
 /// loop, kept verbatim); 4 and 8 are forced lane widths for the parity
 /// suite and the `simd-parity` CI job; `Auto` resolves by runtime
 /// feature detection, overridable with the `ENVPOOL_LANE_WIDTH`
-/// environment variable (values `1|4|8`). All widths are bitwise
-/// identical — see the module docs for why this is safe to default on.
+/// environment variable (values `1|4|8`). For the classic-control
+/// kernels all widths are bitwise identical; the walker family's
+/// lane-grouped solver is bitwise at width 1 and tolerance-budgeted at
+/// 4/8 — see the module docs and `envs::mujoco::batch`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum LanePass {
     /// Width 1: the scalar reference loop.

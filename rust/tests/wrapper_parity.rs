@@ -20,6 +20,12 @@ struct Stream {
 
 /// Drive a wrapped sync-mode pool for `steps` steps with a deterministic
 /// per-env action policy and record the full stream.
+///
+/// The lane pass is pinned to width 1: cross-mode *bitwise* equality is
+/// a width-1 contract for the walker family (the lane-grouped solver at
+/// widths > 1 follows the documented tolerance budget —
+/// `tests/mujoco_batch_parity.rs`); for classic control every width is
+/// bitwise anyway (`tests/simd_parity.rs`), so nothing is lost here.
 fn run(task: &str, wrap: WrapConfig, mode: ExecMode, steps: usize, seed: u64) -> Stream {
     let pool = EnvPool::make(
         PoolConfig::new(task)
@@ -28,7 +34,8 @@ fn run(task: &str, wrap: WrapConfig, mode: ExecMode, steps: usize, seed: u64) ->
             .num_threads(2)
             .seed(seed)
             .exec_mode(mode)
-            .wrappers(wrap),
+            .wrappers(wrap)
+            .lane_pass(envpool::simd::LanePass::Scalar),
     )
     .unwrap();
     let mut ex = PoolVectorEnv::new(pool).unwrap();
