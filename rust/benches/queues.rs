@@ -44,7 +44,7 @@ fn main() {
                 let t = sq.acquire();
                 sq.write(t, k, r as f32, false, false, |obs| obs.fill(k as f32));
             }
-            sq.recv_into(&mut out);
+            sq.recv_into(&mut out).unwrap();
         }
     });
 
@@ -59,7 +59,7 @@ fn main() {
     b.run("queues/pool/send_recv_cartpole", steps as f64, || {
         let mut done = 0usize;
         while done < steps {
-            pool.recv_into(&mut pout);
+            pool.recv_into(&mut pout).unwrap();
             let actions = vec![0.0f32; pout.len()];
             pool.send(&actions, &pout.env_ids.clone()).unwrap();
             done += pout.len();

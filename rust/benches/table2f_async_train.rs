@@ -1,0 +1,96 @@
+//! Bench: Table 2f — end-to-end training throughput, synchronous PPO
+//! loop vs the decoupled async actor–learner loop (`--async-train`) on
+//! CartPole at N=256.
+//!
+//! The sync loop's wall clock is `T×(inference + env_step + store) +
+//! GAE + updates` — every phase waits on every other. The async loop
+//! hides the env-step term: pool workers step continuously while the
+//! coordinator runs inference and the learner, and its `recv_wait`
+//! profile bar is the only residual. The table reports env-steps/s for
+//! both loops plus the async run's measured policy lag, and (full mode
+//! only) asserts the acceptance gate: async >= 1.5x sync.
+//!
+//! `ENVPOOL_BENCH_QUICK=1` shrinks rounds/samples for CI smoke and
+//! skips the gate (timing assertions are meaningless on loaded shared
+//! runners).
+
+use envpool::bench_util::Bencher;
+use envpool::config::{BackendKind, ExecutorKind, TrainConfig};
+use envpool::coordinator::ppo;
+use envpool::metrics::table::{fmt_fps, Table};
+use envpool::metrics::timer::Category;
+
+fn main() {
+    let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+    // Full train runs per sample are expensive; keep sampling light.
+    let b = Bencher { samples: if quick { 1 } else { 3 }, warmup: if quick { 0 } else { 1 } };
+
+    let n = 256usize;
+    let t_len = 32usize;
+    let rounds: u64 = if quick { 2 } else { 12 };
+    let total_steps = rounds * (n * t_len) as u64;
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2).clamp(2, 8);
+
+    let base = TrainConfig {
+        env_id: "CartPole-v1".into(),
+        backend: BackendKind::Native,
+        num_envs: n,
+        batch_size: n,
+        num_threads: threads,
+        num_steps: t_len,
+        total_steps,
+        seed: 7,
+        ..TrainConfig::default()
+    };
+
+    let sync_cfg = TrainConfig { executor: ExecutorKind::EnvPoolSync, ..base.clone() };
+    // Async mode: recv waits for the fastest N/4 envs (paper §3.2);
+    // scalar exec so the comparison isolates the training loop, not the
+    // chunked kernels.
+    let async_cfg = TrainConfig {
+        executor: ExecutorKind::EnvPoolAsync,
+        batch_size: n / 4,
+        async_train: true,
+        ..base.clone()
+    };
+
+    println!("== Table 2f: CartPole (N={n}, T={t_len}, {threads} threads) train env-steps/s ==");
+    let mut sync_fps = 0.0f64;
+    b.run("table2f/cartpole/sync-train", total_steps as f64, || {
+        let (s, _) = ppo::train_profiled(&sync_cfg).unwrap();
+        sync_fps = sync_fps.max(s.env_steps as f64 / s.wall_secs);
+    });
+    let mut async_fps = 0.0f64;
+    let mut lag_line = String::from("n/a");
+    let mut recv_frac = 0.0f64;
+    b.run("table2f/cartpole/async-train", total_steps as f64, || {
+        let (s, prof) = ppo::train_profiled(&async_cfg).unwrap();
+        async_fps = async_fps.max(s.env_steps as f64 / s.wall_secs);
+        if let (Some(mean), Some(max)) = (s.policy_lag_mean, s.policy_lag_max) {
+            lag_line = format!("mean {mean:.2} / max {max}");
+        }
+        recv_frac = prof.fraction(Category::RecvWait);
+    });
+
+    let ratio = async_fps / sync_fps;
+    let mut t = Table::new(["Loop", "env-steps/s", "vs sync", "policy lag (updates)"]);
+    t.row(["sync (envpool-sync)".into(), fmt_fps(sync_fps), "1.00x".into(), "on-policy".into()]);
+    t.row([
+        format!("async (envpool-async, M=N/4)"),
+        fmt_fps(async_fps),
+        format!("{ratio:.2}x"),
+        lag_line,
+    ]);
+    println!("{}", t.render());
+    println!("async coordinator recv_wait fraction: {:.1}%", 100.0 * recv_frac);
+
+    if quick {
+        println!("(quick mode: skipping the async-train 1.5x acceptance assertion)");
+    } else {
+        assert!(
+            ratio >= 1.5,
+            "acceptance gate failed: async-train/sync-train = {ratio:.2}x < 1.5x"
+        );
+        println!("acceptance gate OK: async-train/sync-train = {ratio:.2}x");
+    }
+}

@@ -6,6 +6,8 @@ pub mod params;
 pub mod rollout;
 pub mod sampler;
 pub mod gae;
+pub mod traj;
 
 pub use params::{actor_critic_meta, ParamStore};
 pub use rollout::RolloutBuffer;
+pub use traj::TrajStore;

@@ -1,0 +1,226 @@
+//! Rollout-resident trajectory store for the decoupled actor–learner
+//! loop: the async pool's recv/send driver writes transitions in place,
+//! per env, the way `StateBufferQueue` blocks are written in place by
+//! workers — and the learner consumes the finished `[T, N, ...]` arrays
+//! zero-copy through [`TrajStore::buf`].
+//!
+//! Unlike [`RolloutBuffer::store`], which takes one synchronized time
+//! slice for all N envs, a `TrajStore` accepts transitions **per env in
+//! any arrival order**: under the async protocol a `recv` batch holds an
+//! arbitrary subset of envs, so env 3 may be writing row `t = 7` while
+//! env 0 is still on `t = 2`. Each env advances its own write cursor.
+//!
+//! A transition is split across the two halves of the async protocol:
+//! [`begin`](TrajStore::begin) records everything known at action time
+//! (obs, action, log-prob, value, and the *policy version* the action
+//! was sampled under), and [`complete`](TrajStore::complete) fills in
+//! the outcome (reward/done/trunc) when the env's next state comes back.
+//! The per-transition version is what makes policy lag a measured
+//! quantity instead of a hope: [`lag_stats`](TrajStore::lag_stats)
+//! reports how stale the behaviour policy was relative to the learner.
+
+use super::rollout::RolloutBuffer;
+
+/// Policy-lag summary over one finished rollout: `mean`/`max` of
+/// `current_version - version(t, e)` across all T·N transitions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LagStats {
+    pub mean: f32,
+    pub max: u32,
+}
+
+/// Per-env-cursor trajectory store over a `[T, N, ...]` rollout buffer.
+#[derive(Debug, Clone)]
+pub struct TrajStore {
+    /// The underlying time-major storage, handed to GAE/minibatching
+    /// unchanged once the store is full.
+    pub buf: RolloutBuffer,
+    /// `[T, N]` — minibatch-update counter at the moment each action was
+    /// sampled (see `global_updates` in the async loop).
+    pub versions: Vec<u32>,
+    /// Next row each env writes (`cursor[e]` = number of *begun*
+    /// transitions for env `e`).
+    cursor: Vec<usize>,
+    /// `pending[e]`: env `e` has a begun-but-incomplete transition (its
+    /// action is in flight in the pool).
+    pending: Vec<bool>,
+    /// V(s_T) per env: the bootstrap values for GAE, written when the
+    /// observation *after* each env's last stored transition arrives.
+    pub last_values: Vec<f32>,
+    /// Completed transitions so far (full at T·N).
+    complete: usize,
+}
+
+impl TrajStore {
+    pub fn new(t_len: usize, n: usize, obs_dim: usize, act_dim: usize) -> Self {
+        TrajStore {
+            buf: RolloutBuffer::new(t_len, n, obs_dim, act_dim),
+            versions: vec![0; t_len * n],
+            cursor: vec![0; n],
+            pending: vec![false; n],
+            last_values: vec![0.0; n],
+            complete: 0,
+        }
+    }
+
+    /// Recycle the store for the next rollout round. Storage is reused;
+    /// only the cursors reset (stale rows are fully overwritten before
+    /// the store reports full again).
+    pub fn reset(&mut self) {
+        self.cursor.fill(0);
+        self.pending.fill(false);
+        self.complete = 0;
+    }
+
+    /// Number of begun transitions for env `e` (its write cursor).
+    pub fn cursor(&self, e: usize) -> usize {
+        self.cursor[e]
+    }
+
+    /// Whether env `e` has an in-flight (begun, not completed)
+    /// transition.
+    pub fn pending(&self, e: usize) -> bool {
+        self.pending[e]
+    }
+
+    /// Env `e` has begun all `T` of its transitions for this round.
+    pub fn env_done(&self, e: usize) -> bool {
+        self.cursor[e] >= self.buf.t_len
+    }
+
+    /// All T·N transitions completed: the buffer is a finished rollout.
+    pub fn is_full(&self) -> bool {
+        self.complete == self.buf.rows()
+    }
+
+    /// Record the action-time half of env `e`'s next transition at row
+    /// `(cursor[e], e)` and advance the cursor. Panics (debug) if the
+    /// env is already pending or past `T` — both are driver bugs.
+    pub fn begin(
+        &mut self,
+        e: usize,
+        obs_row: &[f32],
+        act_row: &[f32],
+        logp: f32,
+        value: f32,
+        version: u32,
+    ) {
+        debug_assert!(!self.pending[e], "env {e} already has an action in flight");
+        let t = self.cursor[e];
+        debug_assert!(t < self.buf.t_len, "env {e} past rollout horizon");
+        let n = self.buf.n;
+        let row = t * n + e;
+        let od = self.buf.obs_dim;
+        let ad = self.buf.act_dim;
+        self.buf.obs[row * od..(row + 1) * od].copy_from_slice(obs_row);
+        self.buf.actions[row * ad..(row + 1) * ad].copy_from_slice(act_row);
+        self.buf.logp[row] = logp;
+        self.buf.values[row] = value;
+        self.versions[row] = version;
+        self.cursor[e] = t + 1;
+        self.pending[e] = true;
+    }
+
+    /// Record the outcome half of env `e`'s in-flight transition.
+    pub fn complete(&mut self, e: usize, rew: f32, done: bool, trunc: bool) {
+        debug_assert!(self.pending[e], "env {e} has no action in flight");
+        let t = self.cursor[e] - 1;
+        let row = t * self.buf.n + e;
+        self.buf.rewards[row] = rew;
+        self.buf.dones[row] = done as u32 as f32;
+        self.buf.truncs[row] = trunc as u32 as f32;
+        self.pending[e] = false;
+        self.complete += 1;
+    }
+
+    /// Store env `e`'s bootstrap value V(s_T) (from the observation
+    /// following its last stored transition).
+    pub fn set_last_value(&mut self, e: usize, v: f32) {
+        self.last_values[e] = v;
+    }
+
+    /// Policy-lag statistics for a finished rollout, in minibatch-update
+    /// units, relative to the learner's `current_version`.
+    pub fn lag_stats(&self, current_version: u32) -> LagStats {
+        let mut sum = 0u64;
+        let mut max = 0u32;
+        for &v in &self.versions {
+            let lag = current_version.saturating_sub(v);
+            sum += lag as u64;
+            max = max.max(lag);
+        }
+        LagStats { mean: sum as f32 / self.versions.len().max(1) as f32, max }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_order_envs_land_in_time_major_rows() {
+        // env 1 runs two transitions before env 0 begins its first: rows
+        // must still come out time-major per env, exactly where
+        // RolloutBuffer::store would have put a synchronized slice.
+        let mut s = TrajStore::new(2, 2, 2, 1);
+        s.begin(1, &[10.0, 11.0], &[1.0], -0.5, 0.9, 0);
+        s.complete(1, 1.0, false, false);
+        s.begin(1, &[12.0, 13.0], &[0.0], -0.6, 0.8, 1);
+        s.complete(1, 0.5, true, false);
+        assert!(s.env_done(1) && !s.env_done(0));
+        assert!(!s.is_full());
+        s.begin(0, &[1.0, 2.0], &[1.0], -0.1, 0.5, 2);
+        s.complete(0, 2.0, false, true);
+        s.begin(0, &[3.0, 4.0], &[0.0], -0.2, 0.4, 2);
+        s.complete(0, 3.0, false, false);
+        assert!(s.is_full());
+        // row (t, e) = t*n + e; obs layout [T, N, obs_dim]
+        assert_eq!(&s.buf.obs[0..4], &[1.0, 2.0, 10.0, 11.0]);
+        assert_eq!(&s.buf.obs[4..8], &[3.0, 4.0, 12.0, 13.0]);
+        assert_eq!(s.buf.rewards, vec![2.0, 1.0, 3.0, 0.5]);
+        assert_eq!(s.buf.dones, vec![0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(s.buf.truncs, vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(s.versions, vec![2, 0, 2, 1]);
+    }
+
+    #[test]
+    fn lag_stats_measure_staleness_against_learner_version() {
+        let mut s = TrajStore::new(2, 1, 1, 1);
+        s.begin(0, &[0.0], &[0.0], 0.0, 0.0, 3);
+        s.complete(0, 0.0, false, false);
+        s.begin(0, &[0.0], &[0.0], 0.0, 0.0, 5);
+        s.complete(0, 0.0, false, false);
+        let lag = s.lag_stats(5);
+        assert_eq!(lag.max, 2);
+        assert!((lag.mean - 1.0).abs() < 1e-6);
+        // versions newer than current saturate to zero lag
+        assert_eq!(s.lag_stats(0).max, 0);
+    }
+
+    #[test]
+    fn reset_recycles_cursors_and_fill_state() {
+        let mut s = TrajStore::new(1, 2, 1, 1);
+        s.begin(0, &[1.0], &[0.0], 0.0, 0.0, 0);
+        s.complete(0, 1.0, false, false);
+        s.begin(1, &[2.0], &[0.0], 0.0, 0.0, 0);
+        s.complete(1, 1.0, false, false);
+        assert!(s.is_full());
+        s.set_last_value(0, 7.0);
+        s.reset();
+        assert!(!s.is_full());
+        assert_eq!(s.cursor(0), 0);
+        assert!(!s.pending(1));
+        // last_values persist until overwritten; GAE reads them only
+        // after a full round writes all N.
+        assert_eq!(s.last_values[0], 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn double_begin_is_a_driver_bug() {
+        let mut s = TrajStore::new(2, 1, 1, 1);
+        s.begin(0, &[0.0], &[0.0], 0.0, 0.0, 0);
+        s.begin(0, &[0.0], &[0.0], 0.0, 0.0, 0);
+    }
+}

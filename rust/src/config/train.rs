@@ -242,6 +242,20 @@ pub struct TrainConfig {
     /// Stop training once the trailing mean return reaches this value
     /// (`--target-return`); `None` runs the full step budget.
     pub target_return: Option<f32>,
+    /// Run the decoupled actor–learner loop (`--async-train`): the async
+    /// pool keeps stepping envs into a double-buffered trajectory store
+    /// while the learner updates on the previous rollout. Requires the
+    /// `envpool-async[-vec]` executors (the loop *is* the async
+    /// protocol); the synchronous trainer ignores it.
+    pub async_train: bool,
+    /// Bound on how many minibatch updates behind the learner the
+    /// behaviour policy may be for transitions collected *during* the
+    /// update phase (`--max-policy-lag`; async-train only). `Some(0)`
+    /// collects only between rounds; `None` (default) drains whenever
+    /// batches are ready. Transitions collected between rounds can
+    /// still lag up to one round's worth of updates — that bound is
+    /// structural to double-buffering and reported in the summary.
+    pub max_policy_lag: Option<u32>,
     /// Directory containing AOT artifacts (PJRT backend only).
     pub artifacts_dir: String,
 }
@@ -274,6 +288,8 @@ impl Default for TrainConfig {
             lane_pass: crate::simd::LanePass::Auto,
             eval_episodes: 0,
             target_return: None,
+            async_train: false,
+            max_policy_lag: None,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -321,6 +337,13 @@ impl TrainConfig {
                     .map_err(|_| Error::Config(format!("bad value for target_return: {t:?}")))?,
             );
         }
+        self.async_train = f.parse_or("async_train", self.async_train)?;
+        if let Some(l) = f.values.get("max_policy_lag") {
+            self.max_policy_lag = Some(
+                l.parse()
+                    .map_err(|_| Error::Config(format!("bad value for max_policy_lag: {l:?}")))?,
+            );
+        }
         self.artifacts_dir = f.get("artifacts_dir", &self.artifacts_dir);
         Ok(())
     }
@@ -365,6 +388,12 @@ impl TrainConfig {
         }
         if let Some(t) = a.parse_opt::<f32>("target-return") {
             self.target_return = Some(t);
+        }
+        if a.flag("async-train") {
+            self.async_train = true;
+        }
+        if let Some(l) = a.parse_opt::<u32>("max-policy-lag") {
+            self.max_policy_lag = Some(l);
         }
         if let Some(d) = a.opt("artifacts") {
             self.artifacts_dir = d.to_string();
@@ -419,6 +448,26 @@ impl TrainConfig {
                 "rollout size {rollout} not divisible by num_minibatches {}",
                 self.num_minibatches
             )));
+        }
+        if self.async_train
+            && !matches!(
+                self.executor,
+                ExecutorKind::EnvPoolAsync | ExecutorKind::EnvPoolAsyncVec
+            )
+        {
+            return Err(Error::Config(format!(
+                "--async-train runs the decoupled actor–learner loop over the async pool \
+                 protocol; executor {} cannot drive it — use envpool-async or \
+                 envpool-async-vec",
+                self.executor
+            )));
+        }
+        if self.max_policy_lag.is_some() && !self.async_train {
+            return Err(Error::Config(
+                "--max-policy-lag bounds the decoupled loop's sampling staleness; it \
+                 requires --async-train"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -585,6 +634,41 @@ mod tests {
         let w = c.wrap_config();
         assert!(w.normalize_obs_shared && !w.normalize_obs);
         assert!(!w.is_empty());
+    }
+
+    #[test]
+    fn async_train_flags_parse_and_validate() {
+        // parses from file and CLI, and the CLI wins
+        let mut c = TrainConfig { executor: ExecutorKind::EnvPoolAsync, ..TrainConfig::default() };
+        c.batch_size = 4;
+        let f = KvFile::parse("async_train = true\nmax_policy_lag = 8").unwrap();
+        c.apply_file(&f).unwrap();
+        assert!(c.async_train);
+        assert_eq!(c.max_policy_lag, Some(8));
+        c.apply_args(&Args::parse(["--max-policy-lag".into(), "2".into()])).unwrap();
+        assert_eq!(c.max_policy_lag, Some(2));
+
+        // async_train demands an async executor
+        let c = TrainConfig { async_train: true, ..TrainConfig::default() };
+        match c.validate() {
+            Err(Error::Config(msg)) => assert!(msg.contains("envpool-async"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // max_policy_lag without async_train is a config error
+        let c = TrainConfig { max_policy_lag: Some(1), ..TrainConfig::default() };
+        match c.validate() {
+            Err(Error::Config(msg)) => assert!(msg.contains("--async-train"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // the valid combination passes
+        let c = TrainConfig {
+            executor: ExecutorKind::EnvPoolAsync,
+            batch_size: 4,
+            async_train: true,
+            max_policy_lag: Some(0),
+            ..TrainConfig::default()
+        };
+        c.validate().unwrap();
     }
 
     #[test]

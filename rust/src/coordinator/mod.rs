@@ -1,8 +1,10 @@
 //! Training/benchmark coordination: the PPO loop over a pluggable
 //! compute backend ([`ppo`]; AOT/PJRT artifacts or the pure-Rust native
-//! fallback), the Figure-4 profiler categories, greedy evaluation, and
-//! the pure-simulation throughput driver behind Table 1 / Figure 3.
+//! fallback), the decoupled async actor–learner loop ([`async_ppo`]),
+//! the Figure-4 profiler categories, greedy evaluation, and the
+//! pure-simulation throughput driver behind Table 1 / Figure 3.
 
 pub mod throughput;
 pub mod ppo;
+pub mod async_ppo;
 pub mod eval;

@@ -56,7 +56,24 @@ pub struct TrainSummary {
     pub final_return: f32,
     pub best_return: f32,
     pub param_count: usize,
+    /// Mean staleness (in minibatch-update units) of the behaviour
+    /// policy behind the learner over all trained-on transitions;
+    /// `None` for the synchronous loop, which is on-policy within every
+    /// iteration by construction.
+    pub policy_lag_mean: Option<f32>,
+    /// Worst per-transition staleness seen (async loop only).
+    pub policy_lag_max: Option<u32>,
     pub curve: Vec<CurvePoint>,
+}
+
+/// `{x:.1}`, or `n/a` for the not-yet-measurable sentinel values a run
+/// with no completed episodes produces (NaN mean, -inf best window).
+fn fmt_return(x: f32) -> String {
+    if x.is_finite() {
+        format!("{x:.1}")
+    } else {
+        "n/a".into()
+    }
 }
 
 impl TrainSummary {
@@ -66,6 +83,12 @@ impl TrainSummary {
             Some(r) => format!("\neval return       {r:.1} (greedy)"),
             None => String::new(),
         };
+        let lag_line = match (self.policy_lag_mean, self.policy_lag_max) {
+            (Some(mean), Some(max)) => {
+                format!("\npolicy lag        mean {mean:.2} / max {max} updates")
+            }
+            _ => String::new(),
+        };
         format!(
             "== train {} / {} ==\n\
              backend           {} ({})\n\
@@ -74,8 +97,8 @@ impl TrainSummary {
              iterations        {}\n\
              wall time         {:.1}s  ({:.0} env-steps/s)\n\
              episodes          {}\n\
-             final return      {:.1} (best window {:.1})\n\
-             policy params     {}{}",
+             final return      {} (best window {})\n\
+             policy params     {}{}{}",
             self.env_id,
             self.executor,
             self.backend,
@@ -86,20 +109,29 @@ impl TrainSummary {
             self.wall_secs,
             self.env_steps as f64 / self.wall_secs.max(1e-9),
             self.episodes,
-            self.final_return,
-            self.best_return,
+            fmt_return(self.final_return),
+            fmt_return(self.best_return),
             self.param_count,
+            lag_line,
             eval_line,
         )
     }
 
     /// Write the learning curve as CSV (`env_steps,wall_secs,mean_return`).
     /// Missing parent directories are created; I/O errors carry the
-    /// offending path.
+    /// offending path. Iterations whose trailing window held no
+    /// completed episode yet have no mean to report: their
+    /// `mean_return` field is left blank (the row itself stays, so line
+    /// count still tracks iterations) instead of emitting a literal
+    /// `NaN` that chokes most CSV readers.
     pub fn write_curve_csv(&self, path: &str) -> Result<()> {
         let mut s = String::from("env_steps,wall_secs,mean_return\n");
         for p in &self.curve {
-            s.push_str(&format!("{},{:.3},{:.3}\n", p.env_steps, p.wall_secs, p.mean_return));
+            if p.mean_return.is_finite() {
+                s.push_str(&format!("{},{:.3},{:.3}\n", p.env_steps, p.wall_secs, p.mean_return));
+            } else {
+                s.push_str(&format!("{},{:.3},\n", p.env_steps, p.wall_secs));
+            }
         }
         let target = std::path::Path::new(path);
         if let Some(parent) = target.parent() {
@@ -136,7 +168,8 @@ fn benchmark_only(k: ExecutorKind) -> bool {
 fn reject_benchmark_only(cfg: &TrainConfig) -> Error {
     Error::Config(format!(
         "the PPO trainer drives the synchronous vectorized contract; \
-         executor {} is benchmark-only (see `envpool bench`)",
+         executor {} is benchmark-only here (see `envpool bench`) — pass \
+         --async-train to run the decoupled actor–learner loop on the async pool",
         cfg.executor
     ))
 }
@@ -211,8 +244,98 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     Ok(s)
 }
 
+/// Reusable minibatch gather buffers for [`train_one_minibatch`].
+pub(super) struct MbScratch {
+    obs: Vec<f32>,
+    act: Vec<f32>,
+    logp: Vec<f32>,
+    adv: Vec<f32>,
+    ret: Vec<f32>,
+}
+
+impl MbScratch {
+    pub(super) fn new() -> Self {
+        MbScratch {
+            obs: Vec::new(),
+            act: Vec::new(),
+            logp: Vec::new(),
+            adv: Vec::new(),
+            ret: Vec::new(),
+        }
+    }
+}
+
+/// GAE over a finished rollout with CleanRL's done|truncated merge —
+/// the advantage path shared by the synchronous loop below and the
+/// decoupled async loop (`super::async_ppo`).
+pub(super) fn compute_gae(
+    backend: &mut dyn ComputeBackend,
+    buf: &RolloutBuffer,
+    last_values: &[f32],
+    prof: &mut TimeBreakdown,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let merged: Vec<f32> = buf
+        .dones
+        .iter()
+        .zip(&buf.truncs)
+        .map(|(&d, &tr)| if d != 0.0 || tr != 0.0 { 1.0 } else { 0.0 })
+        .collect();
+    let zeros = vec![0.0f32; buf.rows()];
+    prof.time(Category::Training, || {
+        backend.gae(&buf.rewards, &buf.values, last_values, &merged, &zeros)
+    })
+}
+
+/// One PPO minibatch update — gather rows `sl`, step the backend, check
+/// divergence. The single update step both training loops drive; `iter`
+/// only labels the divergence error.
+pub(super) fn train_one_minibatch(
+    backend: &mut dyn ComputeBackend,
+    buf: &RolloutBuffer,
+    adv: &[f32],
+    ret: &[f32],
+    sl: &[usize],
+    lr: f32,
+    prof: &mut TimeBreakdown,
+    scratch: &mut MbScratch,
+    iter: usize,
+) -> Result<()> {
+    prof.time(Category::Other, || {
+        buf.gather(
+            sl,
+            adv,
+            ret,
+            &mut scratch.obs,
+            &mut scratch.act,
+            &mut scratch.logp,
+            &mut scratch.adv,
+            &mut scratch.ret,
+        );
+    });
+    let mb = Minibatch {
+        obs: &scratch.obs,
+        actions: &scratch.act,
+        logp: &scratch.logp,
+        adv: &scratch.adv,
+        ret: &scratch.ret,
+    };
+    let stats = prof.time(Category::Training, || backend.train_minibatch(&mb, lr))?;
+    if !stats.loss.is_finite() {
+        return Err(Error::Config(format!(
+            "loss diverged at iteration {iter} (loss={})",
+            stats.loss
+        )));
+    }
+    Ok(())
+}
+
 /// Train per `cfg`, also returning the Figure-4 time breakdown.
 pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)> {
+    // The decoupled actor–learner loop has its own driver: it *requires*
+    // an async executor, so dispatch before the benchmark-only check.
+    if cfg.async_train {
+        return super::async_ppo::train_async_profiled(cfg);
+    }
     // Reject benchmark-only executors up front (before any artifact /
     // runtime loading) so configuration errors surface first; if this
     // guard ever misses a kind, `build_executor` still returns the same
@@ -235,7 +358,10 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
     let mut rng = Pcg32::new(cfg.seed ^ 0x70706f, 999);
 
     let steps_per_iter = (t_len * n) as u64;
-    let iterations = (cfg.total_steps / steps_per_iter).max(1) as usize;
+    // Round the step budget *up* to whole rollouts: `--total-steps 1000`
+    // with 8 envs × 64 steps used to silently truncate to 512 trained
+    // steps. The summary's `env_steps` reports what actually trained.
+    let iterations = cfg.total_steps.div_ceil(steps_per_iter).max(1) as usize;
     let minibatch = bs.minibatch_size;
     let n_minibatches = bs.num_minibatches;
     let epochs = cfg.update_epochs;
@@ -252,8 +378,7 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
     let window = 20usize;
 
     // minibatch gather scratch
-    let (mut mb_obs, mut mb_act, mut mb_logp, mut mb_adv, mut mb_ret) =
-        (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let mut scratch = MbScratch::new();
 
     let start = Instant::now();
     let mut curve = Vec::new();
@@ -284,17 +409,7 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
 
         // ---- advantages (backend GAE: AOT kernel or native scan) ----
         let last_pol = prof.time(Category::Inference, || backend.forward(&obs))?;
-        // CleanRL merges truncation into done for GAE purposes.
-        let merged: Vec<f32> = buf
-            .dones
-            .iter()
-            .zip(&buf.truncs)
-            .map(|(&d, &tr)| if d != 0.0 || tr != 0.0 { 1.0 } else { 0.0 })
-            .collect();
-        let zeros = vec![0.0f32; t_len * n];
-        let (adv, ret) = prof.time(Category::Training, || {
-            backend.gae(&buf.rewards, &buf.values, &last_pol.value, &merged, &zeros)
-        })?;
+        let (adv, ret) = compute_gae(&mut *backend, &buf, &last_pol.value, &mut prof)?;
 
         // ---- updates ----
         let lr = if cfg.anneal_lr {
@@ -306,25 +421,17 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
             let idx = buf.shuffled_indices(&mut rng);
             for k in 0..n_minibatches {
                 let sl = &idx[k * minibatch..(k + 1) * minibatch];
-                prof.time(Category::Other, || {
-                    buf.gather(sl, &adv, &ret, &mut mb_obs, &mut mb_act, &mut mb_logp,
-                               &mut mb_adv, &mut mb_ret);
-                });
-                let mb = Minibatch {
-                    obs: &mb_obs,
-                    actions: &mb_act,
-                    logp: &mb_logp,
-                    adv: &mb_adv,
-                    ret: &mb_ret,
-                };
-                let stats =
-                    prof.time(Category::Training, || backend.train_minibatch(&mb, lr))?;
-                if !stats.loss.is_finite() {
-                    return Err(Error::Config(format!(
-                        "loss diverged at iteration {iter} (loss={})",
-                        stats.loss
-                    )));
-                }
+                train_one_minibatch(
+                    &mut *backend,
+                    &buf,
+                    &adv,
+                    &ret,
+                    sl,
+                    lr,
+                    &mut prof,
+                    &mut scratch,
+                    iter,
+                )?;
             }
         }
         prof.bump_iteration();
@@ -382,6 +489,8 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
         final_return: final_ret,
         best_return: best,
         param_count: backend.param_count(),
+        policy_lag_mean: None,
+        policy_lag_max: None,
         curve,
     };
     Ok((summary, prof))
@@ -503,6 +612,56 @@ mod tests {
         assert!(s.iterations < 50, "target_return must stop early, ran {}", s.iterations);
         assert_eq!(s.env_steps, (s.iterations * 8 * 64) as u64);
         assert_eq!(s.curve.len(), s.iterations);
+    }
+
+    #[test]
+    fn total_steps_round_up_instead_of_silently_truncating() {
+        // Regression: 1000 steps over 512-step iterations (8 envs × 64)
+        // used to truncate to ONE iteration = 512 trained steps. The
+        // budget now rounds up to whole rollouts and the summary reports
+        // the steps actually trained.
+        let cfg = smoke_cfg("CartPole-v1", 8, 1000);
+        let (s, _) = train_profiled(&cfg).unwrap();
+        assert_eq!(s.iterations, 2, "1000 steps must round up to 2×512");
+        assert_eq!(s.env_steps, 1024);
+    }
+
+    #[test]
+    fn unfilled_return_window_blanks_csv_and_renders_na() {
+        // Regression: iterations before any completed episode used to
+        // emit literal `NaN` rows into the curve CSV and `best window
+        // -inf` into the rendered block.
+        let cfg = smoke_cfg("CartPole-v1", 4, 4 * 64);
+        let (mut s, _) = train_profiled(&cfg).unwrap();
+        s.curve.insert(
+            0,
+            CurvePoint { env_steps: 1, wall_secs: 0.1, mean_return: f32::NAN },
+        );
+        s.final_return = f32::NAN;
+        s.best_return = f32::NEG_INFINITY;
+        let r = s.render();
+        assert!(r.contains("n/a (best window n/a)"), "{r}");
+        assert!(!r.contains("NaN") && !r.contains("inf"), "{r}");
+        let path = std::env::temp_dir()
+            .join(format!("envpool-nan-curve-{}.csv", std::process::id()));
+        s.write_curve_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        // row count invariant holds, but the NaN row's field is blank
+        assert_eq!(text.lines().count(), 1 + s.curve.len());
+        let nan_row = text.lines().nth(1).unwrap();
+        assert!(nan_row.ends_with(','), "blank field expected: {nan_row}");
+        assert!(!text.contains("NaN"), "{text}");
+    }
+
+    #[test]
+    fn sync_summary_reports_no_policy_lag() {
+        // The synchronous loop is on-policy within each iteration: lag
+        // fields stay None and the render omits the line entirely.
+        let cfg = smoke_cfg("CartPole-v1", 4, 4 * 64);
+        let (s, _) = train_profiled(&cfg).unwrap();
+        assert_eq!((s.policy_lag_mean, s.policy_lag_max), (None, None));
+        assert!(!s.render().contains("policy lag"));
     }
 
     #[test]

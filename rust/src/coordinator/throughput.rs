@@ -134,7 +134,7 @@ pub fn run_throughput_lanes(
             let mut done_steps = 0u64;
             let t0 = Instant::now();
             while done_steps < steps {
-                pool.recv_into(&mut out);
+                pool.recv_into(&mut out)?;
                 random_actions(&spec.action_space, out.len(), &mut rng, &mut actions);
                 pool.send(&actions, &out.env_ids.clone())?;
                 done_steps += out.len() as u64;
@@ -158,7 +158,7 @@ pub fn run_throughput_lanes(
             let mut done_steps = 0u64;
             let t0 = Instant::now();
             while done_steps < steps {
-                pool.recv_all(&mut outs);
+                pool.recv_all(&mut outs)?;
                 ids.clear();
                 for o in &outs {
                     ids.extend_from_slice(&o.env_ids);

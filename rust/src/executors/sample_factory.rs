@@ -114,6 +114,12 @@ impl SampleFactoryExecutor {
                 let mut needs_reset = vec![0u8; per];
                 let mut results = vec![Step::default(); per];
                 let mut local = BatchedTransition::with_capacity(per, dim);
+                // Reused across steps: cloning the action vector out of
+                // the mutex every step put an allocation on the hot path
+                // of every worker (N/num_workers × act_dim floats per
+                // step); copy into this fixed buffer under the lock
+                // instead.
+                let mut action_buf = vec![0.0f32; per * adim];
                 // initial reset fills the first buffer
                 for i in 0..per {
                     envs.reset_lane(i, &mut local.obs[i * dim..(i + 1) * dim]);
@@ -130,10 +136,10 @@ impl SampleFactoryExecutor {
                     if sh.stop.load(Ordering::Relaxed) {
                         return;
                     }
-                    let actions = sh.actions.lock().unwrap().clone();
+                    action_buf.copy_from_slice(&sh.actions.lock().unwrap());
                     {
                         let mut arena = SliceArena::new(&mut local.obs, dim);
-                        envs.step_batch(&actions, &needs_reset, &mut arena, &mut results);
+                        envs.step_batch(&action_buf, &needs_reset, &mut arena, &mut results);
                     }
                     for (i, s) in results.iter().enumerate() {
                         local.rew[i] = s.reward;
@@ -248,6 +254,57 @@ mod tests {
             (rew, done)
         };
         assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn reused_action_buffer_applies_freshest_actions() {
+        // Regression guard for the send→step handoff: the worker reuses
+        // one preallocated action buffer across steps (it used to clone
+        // the vector out of the mutex every step), so a stale or
+        // misrouted copy would replay old actions. Drive each worker
+        // with a step-varying action pattern and check the transition
+        // stream against a directly-stepped ScalarVec reference.
+        let per = 2usize;
+        let mut ex = SampleFactoryExecutor::new("CartPole-v1", 4, 2, 21).unwrap();
+        let mut refs: Vec<ScalarVec> =
+            (0..2).map(|w| ScalarVec::new("CartPole-v1", 21, (w * per) as u64, per).unwrap()).collect();
+        let dim = ex.spec().obs_dim();
+        let mut ref_obs = vec![vec![0.0f32; per * dim]; 2];
+        let mut ref_reset = vec![vec![0u8; per]; 2];
+        for w in 0..2 {
+            // mirror the worker's initial per-lane reset
+            for i in 0..per {
+                refs[w].reset_lane(i, &mut ref_obs[w][i * dim..(i + 1) * dim]);
+            }
+        }
+        let mut ref_results = vec![Step::default(); per];
+        let mut steps_seen = vec![0usize; 2];
+        let mut out = ex.make_output();
+        for _ in 0..60 {
+            let w = ex.recv_into(&mut out);
+            let k = steps_seen[w];
+            if k > 0 {
+                // compare against the reference worker's k-th step
+                let actions: Vec<f32> = (0..per)
+                    .map(|i| (((k - 1) + w * per + i) % 2) as f32)
+                    .collect();
+                {
+                    let mut arena = SliceArena::new(&mut ref_obs[w], dim);
+                    refs[w].step_batch(&actions, &ref_reset[w], &mut arena, &mut ref_results);
+                }
+                for i in 0..per {
+                    ref_reset[w][i] = ref_results[i].finished() as u8;
+                    assert_eq!(out.rew[i], ref_results[i].reward, "worker {w} step {k}");
+                    assert_eq!(out.done[i], ref_results[i].done as u8);
+                }
+                assert_eq!(out.obs, ref_obs[w], "worker {w} step {k} obs diverged");
+            }
+            let actions: Vec<f32> =
+                out.env_ids.iter().map(|&id| ((k + id as usize) % 2) as f32).collect();
+            ex.send(w, &actions);
+            steps_seen[w] += 1;
+        }
+        assert!(steps_seen.iter().all(|&s| s > 10));
     }
 
     #[test]

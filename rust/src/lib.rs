@@ -83,6 +83,18 @@
 //! nodes ([`pool::NumaPool`]). Out-of-registry envs can still opt into
 //! chunked dispatch via [`envs::vector::ScalarVec`] explicitly.
 //!
+//! Training support per executor: the synchronous PPO trainer drives
+//! `forloop[-vec]`, `subprocess`, and `envpool-sync[-vec]`;
+//! `envpool-async[-vec]` additionally drives the **decoupled
+//! actor–learner loop** (`--async-train`, [`coordinator::async_ppo`]):
+//! pool workers step envs continuously into a double-buffered
+//! rollout-resident [`agent::TrajStore`] while the learner updates on
+//! the previous round, with per-transition policy-version tracking
+//! (staleness reported in the train summary, bounded by
+//! `--max-policy-lag`). The remaining kinds
+//! (`envpool-numa-async[-vec]`, `sample-factory[-vec]`) are
+//! benchmark-only.
+//!
 //! Wrapper knobs per `ExecMode`: per-lane `NormalizeObs` is available in
 //! both modes (bitwise identical); pooled `normalize_obs_shared` (gym
 //! `VecNormalize`-style, one statistic across a chunk's lanes) exists

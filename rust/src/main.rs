@@ -16,7 +16,13 @@
 //!                                         evaluation after training,
 //!                                         `--curve out.csv` dumps the
 //!                                         learning curve,
-//!                                         `--target-return R` stops early
+//!                                         `--target-return R` stops early,
+//!                                         `--async-train` runs the
+//!                                         decoupled actor–learner loop on
+//!                                         an async executor
+//!                                         (envpool-async[-vec]) and
+//!                                         `--max-policy-lag L` bounds its
+//!                                         mid-update sampling staleness
 //! - `envpool profile ...`               — Figure-4 time breakdown
 //! - `envpool worker --task T --seed S --env-id I`
 //!                                       — subprocess-executor worker

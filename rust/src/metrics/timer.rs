@@ -36,19 +36,28 @@ pub enum Category {
     Inference,
     /// PPO minibatch updates (fwd+bwd+opt).
     Training,
+    /// Blocked in `recv` waiting on the async pool — the decoupled
+    /// loop's idle time; small when learner work overlaps env stepping.
+    RecvWait,
     /// Everything else (storage, batching, metrics...).
     Other,
 }
 
 impl Category {
-    pub const ALL: [Category; 4] =
-        [Category::EnvStep, Category::Inference, Category::Training, Category::Other];
+    pub const ALL: [Category; 5] = [
+        Category::EnvStep,
+        Category::Inference,
+        Category::Training,
+        Category::RecvWait,
+        Category::Other,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
             Category::EnvStep => "env_step",
             Category::Inference => "inference",
             Category::Training => "training",
+            Category::RecvWait => "recv_wait",
             Category::Other => "other",
         }
     }
@@ -57,7 +66,7 @@ impl Category {
 /// Accumulated wall time per category (the Figure-4 bars).
 #[derive(Debug, Clone, Default)]
 pub struct TimeBreakdown {
-    totals: [Duration; 4],
+    totals: [Duration; 5],
     iterations: u64,
 }
 
@@ -71,7 +80,8 @@ impl TimeBreakdown {
             Category::EnvStep => 0,
             Category::Inference => 1,
             Category::Training => 2,
-            Category::Other => 3,
+            Category::RecvWait => 3,
+            Category::Other => 4,
         }
     }
 

@@ -240,6 +240,10 @@ fn worker_loop(
     states: &StateBufferQueue,
     steps: &AtomicU64,
 ) {
+    // A panic below (kernel step/reset) would leave this chunk's slots
+    // forever uncommitted; poison the queue so the consumer and the
+    // other workers error out instead of spinning.
+    let _poison = states.poison_guard();
     loop {
         match queue.dequeue() {
             ChunkTask::Shutdown => return,
@@ -248,7 +252,8 @@ fn worker_loop(
                 let mut st = c.state.lock().unwrap();
                 let st = &mut *st;
                 for lane in 0..c.len {
-                    let t = states.acquire();
+                    // None = queue closed mid-teardown: stop producing.
+                    let Some(t) = states.acquire() else { return };
                     // Safety: fresh ticket, committed immediately below.
                     let obs = unsafe { states.slot_obs_mut(t) };
                     st.envs.reset_lane(lane, obs);
@@ -262,7 +267,8 @@ fn worker_loop(
                 let st = &mut *st;
                 st.tickets.clear();
                 for _ in 0..c.len {
-                    st.tickets.push(states.acquire());
+                    let Some(t) = states.acquire() else { return };
+                    st.tickets.push(t);
                 }
                 {
                     let actions = c.actions.lock().unwrap();
@@ -309,13 +315,13 @@ mod tests {
         let mut pool = ChunkedThreadPool::spawn(2, chunks, states.clone(), chunk_size, 1, false);
         pool.schedule_reset_all();
         let mut out = crate::pool::batch::BatchedTransition::with_capacity(n, 4);
-        states.recv_into(&mut out);
+        states.recv_into(&mut out).unwrap();
         assert_eq!(out.len(), n);
         for _ in 0..50 {
             let actions = vec![1.0f32; n];
             let ids = out.env_ids.clone();
             pool.send_actions(&actions, &ids);
-            states.recv_into(&mut out);
+            states.recv_into(&mut out).unwrap();
             assert!(out.obs.iter().all(|x| x.is_finite()));
         }
         assert_eq!(pool.steps.load(Ordering::Relaxed), 50 * n as u64);
@@ -342,12 +348,12 @@ mod tests {
         assert_eq!(pool.num_chunks(), 2);
         pool.schedule_reset_all();
         let mut out = crate::pool::batch::BatchedTransition::with_capacity(n, 4);
-        states.recv_into(&mut out);
+        states.recv_into(&mut out).unwrap();
         assert_eq!(out.len(), n);
         for _ in 0..10 {
             let ids = out.env_ids.clone();
             pool.send_actions(&vec![1.0f32; n], &ids);
-            states.recv_into(&mut out);
+            states.recv_into(&mut out).unwrap();
             assert!(out.obs.iter().all(|x| x.is_finite()));
         }
         pool.shutdown();

@@ -70,9 +70,6 @@ impl PoolConfig {
 
     pub fn num_envs(mut self, n: usize) -> Self {
         self.num_envs = n;
-        if self.batch_size > n {
-            self.batch_size = n;
-        }
         self
     }
 
@@ -127,7 +124,9 @@ impl PoolConfig {
         }
         if self.batch_size == 0 || self.batch_size > self.num_envs {
             return Err(Error::Config(format!(
-                "batch_size {} must be in [1, num_envs {}]",
+                "batch_size {} must be in [1, num_envs {}]; the builder setters apply \
+                 literally in any order (num_envs never clamps batch_size), so set \
+                 batch_size after num_envs — or call .sync() for batch_size == num_envs",
                 self.batch_size, self.num_envs
             )));
         }
@@ -335,13 +334,15 @@ impl EnvPool {
     }
 
     /// Receive the next ready batch into a reusable buffer (hot path —
-    /// zero allocation, zero batching copies).
-    pub fn recv_into(&self, out: &mut BatchedTransition) {
-        self.states.recv_into(out);
+    /// zero allocation, zero batching copies). [`Error::Closed`] after
+    /// [`Self::close`] or a worker panic poisoned the state queue.
+    pub fn recv_into(&self, out: &mut BatchedTransition) -> Result<()> {
+        self.states.recv_into(out)
     }
 
-    /// Timed receive; false on timeout.
-    pub fn recv_into_timeout(&self, out: &mut BatchedTransition, d: Duration) -> bool {
+    /// Timed receive; `Ok(false)` on timeout, [`Error::Closed`] once the
+    /// pool is closed or poisoned.
+    pub fn recv_into_timeout(&self, out: &mut BatchedTransition, d: Duration) -> Result<bool> {
         self.states.recv_into_timeout(out, d)
     }
 
@@ -349,7 +350,7 @@ impl EnvPool {
     /// buffer (allocates; use [`Self::recv_into`] on hot paths).
     pub fn recv(&mut self) -> Result<BatchedTransition> {
         let mut out = std::mem::take(&mut self.scratch);
-        self.states.recv_into(&mut out);
+        self.states.recv_into(&mut out)?;
         self.scratch = out.clone();
         Ok(out)
     }
@@ -364,8 +365,7 @@ impl EnvPool {
         out: &mut BatchedTransition,
     ) -> Result<()> {
         self.send(actions, env_ids)?;
-        self.recv_into(out);
-        Ok(())
+        self.recv_into(out)
     }
 
     /// Reset all envs and collect the full first batch (sync mode only).
@@ -379,8 +379,7 @@ impl EnvPool {
             self.started = true;
         }
         self.schedule_all_resets();
-        self.recv_into(out);
-        Ok(())
+        self.recv_into(out)
     }
 
     /// A correctly-sized reusable output buffer.
@@ -389,7 +388,14 @@ impl EnvPool {
     }
 
     /// Shut down worker threads (also happens on drop).
+    ///
+    /// Closes the state queue *first*: workers spinning in `acquire`
+    /// (e.g. when the pool is dropped with results in flight that the
+    /// consumer stopped draining) bail out instead of spinning forever,
+    /// so the join below cannot hang. Subsequent `recv` calls return
+    /// [`Error::Closed`].
     pub fn close(&mut self) {
+        self.states.close();
         match &mut self.engine {
             Engine::Scalar { workers, .. } => {
                 if let Some(mut w) = workers.take() {
@@ -441,7 +447,7 @@ mod tests {
         let mut out = pool.make_output();
         let mut seen = vec![0u32; 8];
         for _ in 0..100 {
-            pool.recv_into(&mut out);
+            pool.recv_into(&mut out).unwrap();
             assert_eq!(out.len(), 3);
             for &id in &out.env_ids {
                 seen[id as usize] += 1;
@@ -484,6 +490,27 @@ mod tests {
         ));
         assert!(EnvPool::make(PoolConfig::new("CartPole-v1").num_envs(0)).is_err());
         assert!(EnvPool::make(PoolConfig::new("NoSuchEnv-v0")).is_err());
+    }
+
+    #[test]
+    fn builder_order_does_not_silently_clamp_batch_size() {
+        // Regression: `num_envs` used to clamp an already-set batch_size
+        // (so `.batch_size(8).num_envs(4)` silently became sync mode with
+        // batch 4, while the reverse order errored). The builder now
+        // stores what it is given in either order and `make` rejects the
+        // inconsistency with an actionable message.
+        let cfg = PoolConfig::new("CartPole-v1").batch_size(8).num_envs(4).num_threads(1);
+        assert_eq!(cfg.batch_size, 8, "builder must not rewrite batch_size");
+        match EnvPool::make(cfg) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("batch_size 8"), "{msg}");
+                assert!(msg.contains("num_envs 4"), "{msg}");
+            }
+            other => panic!("expected Config rejection, got {:?}", other.map(|_| ())),
+        }
+        // The same shape stated consistently still works in either order.
+        let cfg = PoolConfig::new("CartPole-v1").batch_size(2).num_envs(4).num_threads(1);
+        assert!(EnvPool::make(cfg).is_ok());
     }
 
     #[test]
@@ -553,7 +580,7 @@ mod tests {
         let mut out = pool.make_output();
         let mut seen = vec![0u32; 9];
         for _ in 0..60 {
-            pool.recv_into(&mut out);
+            pool.recv_into(&mut out).unwrap();
             assert_eq!(out.len(), 3);
             for &id in &out.env_ids {
                 seen[id as usize] += 1;

@@ -112,13 +112,14 @@ impl NumaPool {
     /// Receive one batch from every shard, concatenated, with env ids
     /// translated back to global numbering. `outs` must hold one buffer
     /// per shard (`make_outputs`).
-    pub fn recv_all(&self, outs: &mut [BatchedTransition]) {
+    pub fn recv_all(&self, outs: &mut [BatchedTransition]) -> Result<()> {
         for (k, s) in self.shards.iter().enumerate() {
-            s.recv_into(&mut outs[k]);
+            s.recv_into(&mut outs[k])?;
             for id in &mut outs[k].env_ids {
                 *id += (k * self.envs_per_shard) as u32;
             }
         }
+        Ok(())
     }
 
     /// Per-shard reusable output buffers.
@@ -145,7 +146,7 @@ mod tests {
         let mut outs = pool.make_outputs();
         let mut seen = vec![0u32; 8];
         for _ in 0..50 {
-            pool.recv_all(&mut outs);
+            pool.recv_all(&mut outs).unwrap();
             let mut ids = vec![];
             let mut actions = vec![];
             for o in &outs {
@@ -167,7 +168,7 @@ mod tests {
         let mut pool = NumaPool::make(cfg, 2).unwrap();
         pool.async_reset();
         let mut outs = pool.make_outputs();
-        pool.recv_all(&mut outs);
+        pool.recv_all(&mut outs).unwrap();
         // global id beyond num_envs must be a BadEnvId error, not a
         // shard-index panic
         match pool.send(&[0.0], &[9]) {
@@ -206,7 +207,7 @@ mod tests {
         let mut outs = pool.make_outputs();
         let mut seen = vec![0u32; 8];
         for _ in 0..40 {
-            pool.recv_all(&mut outs);
+            pool.recv_all(&mut outs).unwrap();
             let mut ids = vec![];
             for o in &outs {
                 ids.extend_from_slice(&o.env_ids);
@@ -259,7 +260,7 @@ mod tests {
         let mut outs = pool.make_outputs();
         let mut seen = vec![0u32; 8];
         for _ in 0..40 {
-            pool.recv_all(&mut outs);
+            pool.recv_all(&mut outs).unwrap();
             let mut ids = vec![];
             let mut actions = vec![];
             for o in &outs {

@@ -11,11 +11,20 @@
 //!
 //! Blocks complete in allocation order (slots are acquired *after* the
 //! env step finishes and written immediately), so consumption is FIFO.
+//!
+//! Both hot paths spin: `acquire` until its block is recycled, the
+//! consumer until its block fills. A writer that panics mid-round (its
+//! slot never commits) or a pool torn down with slots in flight would
+//! leave either spin with nothing to wait for, so the queue carries a
+//! `shutdown` flag: [`StateBufferQueue::close`] (or a writer-side
+//! [`StateBufferQueue::poison_guard`] unwinding) makes `acquire` return
+//! `None` and `recv_into` return [`Error::Closed`] instead of hanging.
 
 use super::batch::BatchedTransition;
 use super::sem::Semaphore;
+use crate::{Error, Result};
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::time::Duration;
 
 struct Block {
@@ -38,6 +47,9 @@ pub struct StateBufferQueue {
     /// Next block round to consume (single consumer).
     consume_pos: AtomicUsize,
     ready: Semaphore,
+    /// Closed or poisoned: both spin loops bail out instead of waiting
+    /// for progress that can no longer happen.
+    shutdown: AtomicBool,
 }
 
 /// An acquired slot: write target for exactly one transition.
@@ -45,6 +57,22 @@ pub struct StateBufferQueue {
 pub struct SlotTicket {
     block: usize,
     slot: usize,
+}
+
+/// RAII guard for writer threads: if the holder unwinds (env step or
+/// kernel panic), `Drop` poisons the queue so the consumer and the other
+/// writers error out instead of spinning on a round that will never
+/// complete.
+pub struct PoisonGuard<'a> {
+    q: &'a StateBufferQueue,
+}
+
+impl Drop for PoisonGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.q.close();
+        }
+    }
 }
 
 impl StateBufferQueue {
@@ -68,6 +96,7 @@ impl StateBufferQueue {
             alloc_pos: AtomicUsize::new(0),
             consume_pos: AtomicUsize::new(0),
             ready: Semaphore::new(0),
+            shutdown: AtomicBool::new(false),
         }
     }
 
@@ -79,9 +108,33 @@ impl StateBufferQueue {
         self.blocks.len()
     }
 
+    /// Mark the queue closed (teardown) or poisoned (writer panic) and
+    /// wake every blocked consumer. Idempotent. After this, `acquire`
+    /// returns `None` and the recv family returns [`Error::Closed`].
+    pub fn close(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        // Flood the semaphore so every present and future waiter wakes.
+        self.ready.post_n(1 << 20);
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Writer-side panic hook: hold this for the scope that steps envs
+    /// and writes slots; an unwind poisons the queue (see [`PoisonGuard`]).
+    pub fn poison_guard(&self) -> PoisonGuard<'_> {
+        PoisonGuard { q: self }
+    }
+
     /// Acquire the next free slot (first come, first served). Spins (with
     /// yield) in the rare case every block is still owned by the consumer.
-    pub fn acquire(&self) -> SlotTicket {
+    /// Returns `None` once the queue is closed or poisoned — callers must
+    /// stop producing.
+    pub fn acquire(&self) -> Option<SlotTicket> {
+        if self.is_closed() {
+            return None;
+        }
         let g = self.alloc_pos.fetch_add(1, Ordering::Relaxed);
         let round = g / self.batch_size;
         let block = round % self.blocks.len();
@@ -89,6 +142,9 @@ impl StateBufferQueue {
         // Wait until the block has been recycled up to our round.
         let mut spins = 0u32;
         while self.blocks[block].gen.load(Ordering::Acquire) != round {
+            if self.is_closed() {
+                return None;
+            }
             spins += 1;
             if spins > 64 {
                 std::thread::yield_now();
@@ -96,7 +152,7 @@ impl StateBufferQueue {
                 std::hint::spin_loop();
             }
         }
-        SlotTicket { block, slot }
+        Some(SlotTicket { block, slot })
     }
 
     /// Write a transition into an acquired slot. `fill` writes the
@@ -189,21 +245,28 @@ impl StateBufferQueue {
     /// into `out` (which must have been created by
     /// [`BatchedTransition::with_capacity`] with matching sizes, or have
     /// come from a previous `recv_into`). Zero copies, zero allocation.
-    pub fn recv_into(&self, out: &mut BatchedTransition) {
+    /// Errors with [`Error::Closed`] once the queue is closed/poisoned.
+    pub fn recv_into(&self, out: &mut BatchedTransition) -> Result<()> {
         self.ready.wait();
-        self.take_ready(out);
+        self.take_ready(out)
     }
 
-    /// Timed variant; returns false if nothing became ready.
-    pub fn recv_into_timeout(&self, out: &mut BatchedTransition, d: Duration) -> bool {
+    /// Timed variant; `Ok(false)` if nothing became ready in `d`.
+    pub fn recv_into_timeout(&self, out: &mut BatchedTransition, d: Duration) -> Result<bool> {
         if !self.ready.wait_timeout(d) {
-            return false;
+            if self.is_closed() {
+                return Err(Error::Closed);
+            }
+            return Ok(false);
         }
-        self.take_ready(out);
-        true
+        self.take_ready(out)?;
+        Ok(true)
     }
 
-    fn take_ready(&self, out: &mut BatchedTransition) {
+    fn take_ready(&self, out: &mut BatchedTransition) -> Result<()> {
+        if self.is_closed() {
+            return Err(Error::Closed);
+        }
         let round = self.consume_pos.fetch_add(1, Ordering::Relaxed);
         let bi = round % self.blocks.len();
         let b = &self.blocks[bi];
@@ -211,6 +274,11 @@ impl StateBufferQueue {
         // later block in rare interleavings, so wait for ours.
         let mut spins = 0u32;
         while b.written.load(Ordering::Acquire) < self.batch_size {
+            if self.is_closed() {
+                // A writer panicked mid-round or the pool is tearing
+                // down: this block will never fill.
+                return Err(Error::Closed);
+            }
             spins += 1;
             if spins > 64 {
                 std::thread::yield_now();
@@ -229,6 +297,7 @@ impl StateBufferQueue {
         }
         b.written.store(0, Ordering::Relaxed);
         b.gen.store(round + self.blocks.len(), Ordering::Release);
+        Ok(())
     }
 
     /// A correctly-sized reusable output buffer.
@@ -246,16 +315,16 @@ mod tests {
     fn single_thread_round_trip() {
         let q = StateBufferQueue::new(4, 2, 3);
         for i in 0..4u32 {
-            let t = q.acquire();
+            let t = q.acquire().unwrap();
             q.write(t, i, i as f32, false, false, |obs| {
                 obs.fill(i as f32);
             });
         }
         let mut out = q.make_output();
-        q.recv_into(&mut out);
+        q.recv_into(&mut out).unwrap();
         assert_eq!(out.env_ids, vec![0, 1]);
         assert_eq!(out.obs_row(1), &[1.0, 1.0, 1.0]);
-        q.recv_into(&mut out);
+        q.recv_into(&mut out).unwrap();
         assert_eq!(out.env_ids, vec![2, 3]);
         assert_eq!(out.rew, vec![2.0, 3.0]);
     }
@@ -266,10 +335,10 @@ mod tests {
         let mut out = q.make_output();
         for round in 0..50u32 {
             for k in 0..2u32 {
-                let t = q.acquire();
+                let t = q.acquire().unwrap();
                 q.write(t, k, (round * 2 + k) as f32, false, false, |o| o[0] = round as f32);
             }
-            q.recv_into(&mut out);
+            q.recv_into(&mut out).unwrap();
             assert_eq!(out.rew, vec![(round * 2) as f32, (round * 2 + 1) as f32]);
             assert_eq!(out.obs, vec![round as f32, round as f32]);
         }
@@ -283,7 +352,7 @@ mod tests {
                 let q = q.clone();
                 std::thread::spawn(move || {
                     for i in 0..100u32 {
-                        let t = q.acquire();
+                        let t = q.acquire().unwrap();
                         q.write(t, w * 1000 + i, 1.0, false, false, |obs| {
                             obs.fill((w * 1000 + i) as f32);
                         });
@@ -294,7 +363,7 @@ mod tests {
         let mut out = q.make_output();
         let mut seen = std::collections::HashSet::new();
         for _ in 0..100 {
-            q.recv_into(&mut out);
+            q.recv_into(&mut out).unwrap();
             for i in 0..out.len() {
                 let id = out.env_ids[i];
                 assert!(seen.insert(id), "duplicate env_id {id}");
@@ -313,14 +382,14 @@ mod tests {
         // observations land in block memory first, commits can arrive in
         // any order within the block.
         let q = StateBufferQueue::new(2, 2, 3);
-        let t0 = q.acquire();
-        let t1 = q.acquire();
+        let t0 = q.acquire().unwrap();
+        let t1 = q.acquire().unwrap();
         unsafe { q.slot_obs_mut(t0) }.fill(7.0);
         unsafe { q.slot_obs_mut(t1) }.fill(9.0);
         q.commit(t1, 1, -1.0, false, true);
         q.commit(t0, 0, 1.0, true, false);
         let mut out = q.make_output();
-        q.recv_into(&mut out);
+        q.recv_into(&mut out).unwrap();
         assert_eq!(out.obs_row(0), &[7.0, 7.0, 7.0]);
         assert_eq!(out.obs_row(1), &[9.0, 9.0, 9.0]);
         assert_eq!(out.rew, vec![1.0, -1.0]);
@@ -332,24 +401,91 @@ mod tests {
     #[test]
     fn timeout_when_incomplete() {
         let q = StateBufferQueue::new(4, 2, 1);
-        let t = q.acquire();
+        let t = q.acquire().unwrap();
         q.write(t, 0, 0.0, false, false, |o| o[0] = 0.0);
         // only 1 of 2 slots written
         let mut out = q.make_output();
-        assert!(!q.recv_into_timeout(&mut out, Duration::from_millis(10)));
+        assert!(!q.recv_into_timeout(&mut out, Duration::from_millis(10)).unwrap());
     }
 
     #[test]
     fn done_and_trunc_flags_roundtrip() {
         let q = StateBufferQueue::new(2, 2, 1);
-        let t = q.acquire();
+        let t = q.acquire().unwrap();
         q.write(t, 0, 1.0, true, false, |o| o[0] = 0.0);
-        let t = q.acquire();
+        let t = q.acquire().unwrap();
         q.write(t, 1, -1.0, false, true, |o| o[0] = 0.0);
         let mut out = q.make_output();
-        q.recv_into(&mut out);
+        q.recv_into(&mut out).unwrap();
         assert_eq!(out.done, vec![1, 0]);
         assert_eq!(out.trunc, vec![0, 1]);
         assert!(out.finished(0) && out.finished(1));
+    }
+
+    #[test]
+    fn close_errors_blocked_and_future_receivers() {
+        let q = Arc::new(StateBufferQueue::new(4, 2, 1));
+        // Half-written round: without close(), recv would wait forever.
+        let t = q.acquire().unwrap();
+        q.write(t, 0, 0.0, false, false, |o| o[0] = 0.0);
+        let waiter = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut out = q.make_output();
+                q.recv_into(&mut out)
+            })
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        let r = waiter.join().unwrap();
+        assert!(matches!(r, Err(Error::Closed)), "blocked recv must error on close");
+        // And every later call errors immediately instead of spinning.
+        let mut out = q.make_output();
+        assert!(matches!(q.recv_into(&mut out), Err(Error::Closed)));
+        assert!(matches!(
+            q.recv_into_timeout(&mut out, Duration::from_millis(1)),
+            Err(Error::Closed)
+        ));
+        assert!(q.acquire().is_none(), "acquire after close must refuse slots");
+    }
+
+    #[test]
+    fn acquire_spin_bails_out_on_close() {
+        // Exhaust every block so the next acquire spins waiting for the
+        // consumer, then close from another thread: the spinner must
+        // return None, not hang.
+        let q = Arc::new(StateBufferQueue::new(2, 1, 1));
+        let capacity = q.num_blocks(); // slots == blocks at batch_size 1
+        for i in 0..capacity as u32 {
+            let t = q.acquire().unwrap();
+            q.write(t, i, 0.0, false, false, |o| o[0] = 0.0);
+        }
+        let spinner = {
+            let q = q.clone();
+            std::thread::spawn(move || q.acquire().is_none())
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(spinner.join().unwrap(), "spinning acquire must bail out on close");
+    }
+
+    #[test]
+    fn panicking_writer_poisons_the_queue() {
+        let q = Arc::new(StateBufferQueue::new(4, 2, 1));
+        let writer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let _guard = q.poison_guard();
+                let t = q.acquire().unwrap();
+                q.write(t, 0, 0.0, false, false, |o| o[0] = 0.0);
+                panic!("env step exploded");
+            })
+        };
+        assert!(writer.join().is_err());
+        // The round is half-written and will never complete; the poison
+        // flag turns the would-be hang into an error.
+        let mut out = q.make_output();
+        assert!(matches!(q.recv_into(&mut out), Err(Error::Closed)));
+        assert!(q.acquire().is_none());
     }
 }

@@ -102,6 +102,10 @@ fn worker_loop(
     states: &StateBufferQueue,
     steps: &AtomicU64,
 ) {
+    // A panic below (env step/reset) would leave this worker's round
+    // forever incomplete; poison the queue so the consumer and the other
+    // workers error out instead of spinning.
+    let _poison = states.poison_guard();
     loop {
         match queue.dequeue() {
             Task::Shutdown => return,
@@ -109,7 +113,8 @@ fn worker_loop(
                 let slot = &envs[env_id as usize];
                 let mut env = slot.env.lock().unwrap();
                 *slot.needs_reset.lock().unwrap() = false;
-                let t = states.acquire();
+                // None = queue closed mid-teardown: stop producing.
+                let Some(t) = states.acquire() else { return };
                 states.write(t, env_id, 0.0, false, false, |obs| env.reset(obs));
             }
             Task::Step { env_id } => {
@@ -117,7 +122,7 @@ fn worker_loop(
                 let mut env = slot.env.lock().unwrap();
                 let action = slot.action.lock().unwrap();
                 let mut needs_reset = slot.needs_reset.lock().unwrap();
-                let t = states.acquire();
+                let Some(t) = states.acquire() else { return };
                 if *needs_reset {
                     // EnvPool auto-reset: the action after a terminal
                     // transition triggers reset; its "step" result is the

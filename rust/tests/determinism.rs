@@ -50,7 +50,7 @@ fn first_episode_returns(
         if returns.iter().all(|r| r.len() >= episodes) {
             break;
         }
-        pool.recv_into(&mut out);
+        pool.recv_into(&mut out).unwrap();
         let ids = out.env_ids.clone();
         actions.clear();
         for (row, &id) in ids.iter().enumerate() {

@@ -30,7 +30,7 @@ fn prop_async_pool_serves_every_env_and_routes_correctly() {
             *o = 1;
         }
         for _ in 0..30 {
-            pool.recv_into(&mut out);
+            pool.recv_into(&mut out).map_err(|e| e.to_string())?;
             prop_assert!(out.len() == m, "batch size {} != {m}", out.len());
             for &id in &out.env_ids {
                 prop_assert!((id as usize) < n, "env id {id} out of range");
@@ -64,14 +64,14 @@ fn async_mode_hides_stragglers() {
     let mut out = pool.make_output();
     // drain initial resets
     for _ in 0..n / m {
-        pool.recv_into(&mut out);
+        pool.recv_into(&mut out).unwrap();
         let actions = vec![0.0f32; m];
         pool.send(&actions, &out.env_ids.clone()).unwrap();
     }
     // now keep only re-sending to whatever returns: the pool must keep
     // producing full batches indefinitely
     for _ in 0..50 {
-        pool.recv_into(&mut out);
+        pool.recv_into(&mut out).unwrap();
         assert_eq!(out.len(), m);
         let actions = vec![0.1f32; m];
         pool.send(&actions, &out.env_ids.clone()).unwrap();
@@ -111,7 +111,7 @@ fn numa_pool_end_to_end() {
     pool.async_reset();
     let mut outs = pool.make_outputs();
     for _ in 0..10 {
-        pool.recv_all(&mut outs);
+        pool.recv_all(&mut outs).unwrap();
         let mut ids = vec![];
         let mut actions = vec![];
         for o in &outs {
@@ -143,7 +143,7 @@ fn numa_pool_runs_vectorized_walker_shards() {
     let mut outs = pool.make_outputs();
     let mut seen = vec![0u32; 8];
     for _ in 0..20 {
-        pool.recv_all(&mut outs);
+        pool.recv_all(&mut outs).unwrap();
         let mut ids = vec![];
         let mut actions = vec![];
         for o in &outs {
@@ -187,7 +187,7 @@ fn pool_shutdown_is_clean_with_work_in_flight() {
     .unwrap();
     pool.async_reset();
     let mut out = pool.make_output();
-    pool.recv_into(&mut out);
+    pool.recv_into(&mut out).unwrap();
     let actions = vec![0.0f32; out.len() * pool.spec().action_space.dim()];
     pool.send(&actions, &out.env_ids.clone()).unwrap();
     // drop with in-flight work: must not hang or crash
@@ -206,7 +206,7 @@ fn atari_pool_no_torn_frames_under_concurrency() {
     pool.async_reset();
     let mut out = pool.make_output();
     for _ in 0..30 {
-        pool.recv_into(&mut out);
+        pool.recv_into(&mut out).unwrap();
         assert_eq!(out.obs.len(), 2 * 4 * 84 * 84);
         for i in 0..out.len() {
             let row = out.obs_row(i);
@@ -235,7 +235,7 @@ fn atari_vectorized_pool_no_torn_frames_on_large_rows() {
     pool.async_reset();
     let mut out = pool.make_output();
     for _ in 0..30 {
-        pool.recv_into(&mut out);
+        pool.recv_into(&mut out).unwrap();
         assert_eq!(out.obs.len(), 2 * 4 * 84 * 84);
         for i in 0..out.len() {
             let row = out.obs_row(i);
@@ -285,8 +285,12 @@ fn double_close_and_use_after_close_are_safe() {
     pool.reset_into(&mut out).unwrap();
     pool.close();
     pool.close(); // idempotent
-    // sends after close enqueue but nobody serves them; recv must time out
-    // rather than hang or crash
+    // sends after close enqueue but nobody serves them; recv must report
+    // the closed pool rather than hang or crash
     let _ = pool.send(&[0.0, 0.0], &[0, 1]);
-    assert!(!pool.recv_into_timeout(&mut out, std::time::Duration::from_millis(50)));
+    assert!(matches!(
+        pool.recv_into_timeout(&mut out, std::time::Duration::from_millis(50)),
+        Err(envpool::Error::Closed)
+    ));
+    assert!(matches!(pool.recv_into(&mut out), Err(envpool::Error::Closed)));
 }

@@ -198,7 +198,7 @@ fn state_queue_mpmc_blocks_are_never_torn_across_many_rounds() {
             std::thread::spawn(move || {
                 for i in 0..per_writer {
                     let tag = w * per_writer + i;
-                    let t = q.acquire();
+                    let t = q.acquire().unwrap();
                     q.write(t, tag, tag as f32, i % 7 == 0, i % 11 == 0, |obs| {
                         obs.fill(tag as f32);
                     });
@@ -210,7 +210,7 @@ fn state_queue_mpmc_blocks_are_never_torn_across_many_rounds() {
     let mut seen = std::collections::HashSet::new();
     let rounds = writers as u32 * per_writer / 4;
     for _ in 0..rounds {
-        q.recv_into(&mut out);
+        q.recv_into(&mut out).unwrap();
         for i in 0..out.len() {
             let tag = out.env_ids[i];
             assert!(seen.insert(tag), "row {tag} delivered twice");
@@ -243,12 +243,12 @@ fn chunked_pool_clamps_surplus_workers_to_chunk_count() {
     assert_eq!(pool.num_chunks(), 3);
     pool.schedule_reset_all();
     let mut out = states.make_output();
-    states.recv_into(&mut out);
+    states.recv_into(&mut out).unwrap();
     assert_eq!(out.len(), n);
     for _ in 0..20 {
         let ids = out.env_ids.clone();
         pool.send_actions(&vec![1.0f32; n], &ids);
-        states.recv_into(&mut out);
+        states.recv_into(&mut out).unwrap();
         assert!(out.obs.iter().all(|x| x.is_finite()));
     }
     pool.shutdown();
@@ -312,7 +312,7 @@ fn state_queue_two_phase_writes_with_concurrent_consumer() {
         let q = q.clone();
         std::thread::spawn(move || {
             for b in 0..bursts {
-                let tickets: Vec<_> = (0..k).map(|_| q.acquire()).collect();
+                let tickets: Vec<_> = (0..k).map(|_| q.acquire().unwrap()).collect();
                 for (j, &t) in tickets.iter().enumerate() {
                     let tag = b * k as u32 + j as u32;
                     // Safety: fresh tickets, one writer per slot.
@@ -330,7 +330,7 @@ fn state_queue_two_phase_writes_with_concurrent_consumer() {
     let mut out = q.make_output();
     let mut expect = 0u32;
     for _ in 0..bursts {
-        q.recv_into(&mut out);
+        q.recv_into(&mut out).unwrap();
         for i in 0..out.len() {
             let tag = out.env_ids[i];
             assert_eq!(tag, expect, "rows out of order");
@@ -356,7 +356,7 @@ fn two_phase_commit_handles_atari_sized_rows_concurrently() {
             let q = q.clone();
             std::thread::spawn(move || {
                 for i in 0..per_writer {
-                    let t = q.acquire();
+                    let t = q.acquire().unwrap();
                     let tag = w * 1000 + i;
                     // Safety: fresh ticket, committed exactly once below.
                     unsafe { q.slot_obs_mut(t) }.fill(tag as f32);
@@ -369,7 +369,7 @@ fn two_phase_commit_handles_atari_sized_rows_concurrently() {
     let mut rows = 0usize;
     let batches = 4 * per_writer as usize / 4; // total rows / batch_size
     for _ in 0..batches {
-        q.recv_into(&mut out);
+        q.recv_into(&mut out).unwrap();
         for i in 0..out.len() {
             let tag = out.env_ids[i] as f32;
             assert_eq!(out.obs_row(i).len(), obs_dim);
@@ -381,4 +381,77 @@ fn two_phase_commit_handles_atari_sized_rows_concurrently() {
     for w in writers {
         w.join().unwrap();
     }
+}
+
+/// Poll a join handle instead of joining outright so a regression (the
+/// pre-fix behaviour was an infinite spin) fails the test instead of
+/// hanging the whole suite.
+fn join_within(h: std::thread::JoinHandle<()>, secs: u64, what: &str) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(secs);
+    while !h.is_finished() {
+        assert!(std::time::Instant::now() < deadline, "{what} did not finish within {secs}s");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    h.join().unwrap();
+}
+
+#[test]
+fn dropping_pool_with_inflight_slots_does_not_hang() {
+    // Regression (shutdown satellite): closing/dropping an async pool
+    // while workers hold in-flight slots used to leave them spinning in
+    // `StateBufferQueue::acquire` forever, so `close()`'s join never
+    // returned. The queue's shutdown flag must let every worker bail.
+    for mode in [ExecMode::Scalar, ExecMode::Vectorized] {
+        let h = std::thread::spawn(move || {
+            let mut pool = EnvPool::make(
+                PoolConfig::new("CartPole-v1")
+                    .num_envs(6)
+                    .batch_size(2)
+                    .num_threads(2)
+                    .seed(17)
+                    .exec_mode(mode),
+            )
+            .unwrap();
+            pool.async_reset();
+            let mut out = pool.make_output();
+            // Take one batch and answer it so work is genuinely in flight,
+            // then drop the pool without draining the rest.
+            pool.recv_into(&mut out).unwrap();
+            pool.send(&vec![0.0f32; out.len()], &out.env_ids.clone()).unwrap();
+            drop(pool);
+        });
+        join_within(h, 30, "pool drop with in-flight slots");
+    }
+}
+
+#[test]
+fn recv_errors_instead_of_hanging_when_writer_panics() {
+    // Regression (shutdown satellite): a writer that panics mid-round
+    // leaves the round's block permanently incomplete; `recv` used to
+    // spin on the `written` counter forever. The poison guard must close
+    // the queue so the blocked consumer gets `Error::Closed`.
+    let q = Arc::new(StateBufferQueue::new(4, 2, 8));
+    let consumer = {
+        let q = q.clone();
+        std::thread::spawn(move || {
+            let mut out = q.make_output();
+            assert!(
+                matches!(q.recv_into(&mut out), Err(Error::Closed)),
+                "recv after writer panic must error, not hang"
+            );
+        })
+    };
+    let writer = {
+        let q = q.clone();
+        std::thread::spawn(move || {
+            let _poison = q.poison_guard();
+            let t = q.acquire().unwrap();
+            q.write(t, 0, 0.0, false, false, |obs| obs.fill(1.0));
+            // second slot of the batch never arrives
+            panic!("simulated env crash");
+        })
+    };
+    assert!(writer.join().is_err(), "writer thread must have panicked");
+    join_within(consumer, 30, "consumer blocked on poisoned queue");
+    assert!(q.acquire().is_none(), "poisoned queue must refuse new slots");
 }

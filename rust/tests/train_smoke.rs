@@ -201,6 +201,43 @@ fn pallas_artifact_policy_matches_jnp_artifact() {
 }
 
 #[test]
+fn async_train_learns_comparably_to_sync() {
+    // The decoupled loop is off-policy by a bounded amount, not a
+    // different algorithm: over the same budget it must show a learning
+    // signal comparable to the synchronous loop's (floors, not equality
+    // — batch arrival order is timing-dependent), and the summary must
+    // account for the staleness it actually incurred.
+    let mut sync_cfg = native_cfg("CartPole-v1", ExecutorKind::EnvPoolSync, 30 * 8 * 64);
+    sync_cfg.learning_rate = 2.5e-3;
+    sync_cfg.clip_coef = 0.2;
+    sync_cfg.seed = 3;
+    let mut async_cfg = sync_cfg.clone();
+    async_cfg.executor = ExecutorKind::EnvPoolAsync;
+    async_cfg.batch_size = 4;
+    async_cfg.async_train = true;
+    async_cfg.max_policy_lag = Some(4);
+
+    let sync = ppo::train(&sync_cfg).unwrap();
+    let s = ppo::train(&async_cfg).unwrap();
+    assert_eq!(s.env_steps, sync.env_steps, "same step budget");
+    assert!(s.episodes > 0);
+    // learning floor: well above CartPole's ~20-25 random-policy return
+    assert!(
+        s.best_return > 45.0,
+        "async loop shows no learning signal: best window {}",
+        s.best_return
+    );
+    // lag is reported and respects the structural bound of one round of
+    // updates (update_epochs × num_minibatches)
+    let max = s.policy_lag_max.expect("async summary must report lag");
+    let mean = s.policy_lag_mean.expect("async summary must report lag");
+    let structural = (async_cfg.update_epochs * async_cfg.num_minibatches) as u32;
+    assert!(max <= structural, "lag max {max} exceeds structural bound {structural}");
+    assert!(mean >= 0.0 && mean <= structural as f32);
+    assert!(s.render().contains("policy lag"), "{}", s.render());
+}
+
+#[test]
 fn learning_signal_appears_quickly_on_cartpole() {
     // 40 iterations of PPO must lift the trailing mean return well above
     // the random-policy baseline (~20-25 for CartPole under PPO's inits).

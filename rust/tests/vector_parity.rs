@@ -224,7 +224,7 @@ fn prop_async_vectorized_pool_routes_correctly() {
         let mut arng = Pcg32::new(77, 1);
         let mut actions = Vec::new();
         for _ in 0..30 {
-            pool.recv_into(&mut out);
+            pool.recv_into(&mut out).unwrap();
             prop_assert!(out.len() == m, "batch size {} != {m}", out.len());
             for &id in &out.env_ids {
                 prop_assert!((id as usize) < n, "env id {id} out of range");
