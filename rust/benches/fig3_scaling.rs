@@ -37,4 +37,6 @@ fn main() {
         }
         println!("{}", t.render());
     }
+
+    b.write_snapshot("fig3").unwrap();
 }

@@ -65,4 +65,6 @@ fn main() {
             done += pout.len();
         }
     });
+
+    b.write_snapshot("queues").unwrap();
 }

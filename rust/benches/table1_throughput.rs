@@ -44,4 +44,6 @@ fn main() {
             println!("  -> {task}/{label}: {fps:.0} frames/s ({:.0} env-steps/s)", fps / mult as f64);
         }
     }
+
+    b.write_snapshot("table1").unwrap();
 }

@@ -235,4 +235,6 @@ fn main() {
         );
         println!("acceptance gate OK: Hopper lane-grouped/per-lane = {solver_gate:.2}x");
     }
+
+    b.write_snapshot("table2").unwrap();
 }

@@ -23,7 +23,7 @@ use envpool::metrics::timer::Category;
 fn main() {
     let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
     // Full train runs per sample are expensive; keep sampling light.
-    let b = Bencher { samples: if quick { 1 } else { 3 }, warmup: if quick { 0 } else { 1 } };
+    let b = Bencher::new(if quick { 1 } else { 3 }, if quick { 0 } else { 1 });
 
     let n = 256usize;
     let t_len = 32usize;
@@ -93,4 +93,6 @@ fn main() {
         );
         println!("acceptance gate OK: async-train/sync-train = {ratio:.2}x");
     }
+
+    b.write_snapshot("table2f").unwrap();
 }

@@ -1,0 +1,212 @@
+//! Bench: Table 2g — the contiguous-hot-path gates. Three layout
+//! levers, one per row block, each with its own acceptance gate
+//! (asserted in full mode; `ENVPOOL_BENCH_QUICK=1` runs the shapes but
+//! skips the timing assertions):
+//!
+//! 1. **Body-major vs lane-major lane groups** (gate: contiguous >=
+//!    1.15x strided). The lane-major `WorldBatch` layout no longer
+//!    exists in the library — the body-major rewrite replaced it — so
+//!    the strided baseline is a reference microkernel in this file:
+//!    the same solver-shaped lane-group sweep (load pos/vel groups per
+//!    body, integrate, store) over a `[body * lanes + lane]` slab
+//!    (contiguous `F32s` loads, what `WorldBatch` does today) and over
+//!    a `[lane * bodies + body]` slab (per-lane stride gathers, what
+//!    the pre-rewrite layout forced). The end-to-end body-major solver
+//!    (Hopper forloop-vec N=256, Table 2e's subject) is also recorded
+//!    for the snapshot, without a gate — its old-layout baseline is
+//!    gone by construction.
+//! 2. **Blocked transposed-weights GEMM vs sequential axpy GEMV**
+//!    (gate: >= 1.5x at the f32 forward shape, batch 256): the exact
+//!    two routines the f32 policy forward switched between —
+//!    [`gemm_bt_f32`] vs [`affine_f32`].
+//! 3. **SoA Atari preprocessing vs per-lane** (gate: forloop-vec >=
+//!    1.3x forloop on Pong N=64): the slab-resident `AtariVec` pixel
+//!    pass vs `K` scalar envs, through the bare vectorized executor so
+//!    preprocessing (which dominates the Atari-like step: ~28k native
+//!    pixels of max-pool + downsample per frame vs hundreds of
+//!    emulator ops) is the differentiator.
+
+use envpool::bench_util::Bencher;
+use envpool::coordinator::throughput::{run_throughput, run_throughput_lanes};
+use envpool::metrics::table::{fmt_fps, Table};
+use envpool::runtime::native::affine_f32;
+use envpool::simd::{gemm_bt_f32, F32s, LanePass};
+
+/// Hopper-ish rigid-body count for the layout microkernel.
+const BODIES: usize = 13;
+/// Lane width of the microkernel groups (one AVX register).
+const W: usize = 8;
+
+/// Solver-shaped sweep over a **body-major** slab: every lane group is
+/// one contiguous `F32s` load/store, exactly like `WorldBatch`'s
+/// `ldc`/`stc` helpers.
+fn sweep_body_major(pos: &mut [f32], vel: &[f32], lanes: usize) {
+    for b in 0..BODIES {
+        let base = b * lanes;
+        let mut g = 0;
+        while g < lanes {
+            let n = (lanes - g).min(W);
+            let p = F32s::<W>::load_or(&pos[base + g..base + g + n], 0.0);
+            let v = F32s::<W>::load_or(&vel[base + g..base + g + n], 0.0);
+            let r = p + v * F32s::splat(2e-3) + p * F32s::splat(-1e-4);
+            pos[base + g..base + g + n].copy_from_slice(&r.0[..n]);
+            g += W;
+        }
+    }
+}
+
+/// The same sweep over a **lane-major** slab (`[lane * BODIES + body]`,
+/// the pre-rewrite layout): each lane group is a stride-`BODIES` gather
+/// and scatter.
+fn sweep_lane_major(pos: &mut [f32], vel: &[f32], lanes: usize) {
+    for b in 0..BODIES {
+        let mut g = 0;
+        while g < lanes {
+            let n = (lanes - g).min(W);
+            let p = F32s::<W>::from_fn(|i| if i < n { pos[(g + i) * BODIES + b] } else { 0.0 });
+            let v = F32s::<W>::from_fn(|i| if i < n { vel[(g + i) * BODIES + b] } else { 0.0 });
+            let r = p + v * F32s::splat(2e-3) + p * F32s::splat(-1e-4);
+            for i in 0..n {
+                pos[(g + i) * BODIES + b] = r.0[i];
+            }
+            g += W;
+        }
+    }
+}
+
+/// Deterministic non-zero fill (zeros would let `affine_f32`'s
+/// skip-zero fast path distort the GEMV baseline).
+fn fill(buf: &mut [f32], salt: u32) {
+    for (i, v) in buf.iter_mut().enumerate() {
+        let h = (i as u32).wrapping_add(salt).wrapping_mul(2_654_435_761);
+        *v = ((h >> 8) % 2000) as f32 / 1000.0 - 0.9995;
+    }
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+
+    // --- 2g.1: body-major vs lane-major lane-group sweep ---
+    let lanes = 4096usize; // big enough that layout, not loop overhead, shows
+    let sweeps: usize = if quick { 200 } else { 20_000 };
+    let mut pos_bm = vec![0.0f32; BODIES * lanes];
+    let mut vel_bm = vec![0.0f32; BODIES * lanes];
+    let mut pos_lm = vec![0.0f32; BODIES * lanes];
+    let mut vel_lm = vec![0.0f32; BODIES * lanes];
+    fill(&mut pos_bm, 1);
+    fill(&mut vel_bm, 2);
+    fill(&mut pos_lm, 1);
+    fill(&mut vel_lm, 2);
+    let units = (sweeps * BODIES * lanes) as f64;
+    println!("== Table 2g.1: lane-group sweep ({BODIES} bodies x {lanes} lanes, W={W}) ==");
+    let rb = b.run("table2g/layout/body_major", units, || {
+        for _ in 0..sweeps {
+            sweep_body_major(&mut pos_bm, &vel_bm, lanes);
+        }
+        std::hint::black_box(&pos_bm);
+    });
+    let rl = b.run("table2g/layout/lane_major", units, || {
+        for _ in 0..sweeps {
+            sweep_lane_major(&mut pos_lm, &vel_lm, lanes);
+        }
+        std::hint::black_box(&pos_lm);
+    });
+    let layout_gate = rb.throughput() / rl.throughput();
+    println!("body-major/lane-major = {layout_gate:.2}x");
+
+    // End-to-end body-major solver for the snapshot record (no gate —
+    // the lane-major solver it replaced is gone; Table 2e gates this
+    // path against its own width-1 reference).
+    let mj_steps: u64 = if quick { 2_560 } else { 128_000 };
+    let mn = 256usize;
+    let mut t1 = Table::new(["Path", "env-steps/s"]);
+    for lp in [LanePass::Width4, LanePass::Width8] {
+        let mut fps = 0.0f64;
+        b.run(&format!("table2g/hopper_e2e/forloop-vec/w{}", lp.width()), mj_steps as f64, || {
+            let f =
+                run_throughput_lanes("Hopper-v4", "forloop-vec", mn, mn, 1, mj_steps, 0, lp)
+                    .unwrap();
+            fps = fps.max(f);
+        });
+        t1.row([format!("body-major solver W={}", lp.width()), fmt_fps(fps)]);
+    }
+    println!("{}", t1.render());
+
+    // --- 2g.2: blocked transposed GEMM vs sequential axpy GEMV ---
+    // The f32 forward's hidden-layer shape: batch 256, 64 -> 64.
+    let (bsz, d_in, d_out) = (256usize, 64usize, 64usize);
+    let reps: usize = if quick { 50 } else { 5_000 };
+    let mut x = vec![0.0f32; bsz * d_in];
+    let mut w = vec![0.0f32; d_in * d_out]; // [d_in, d_out] — GEMV layout
+    let mut wt = vec![0.0f32; d_out * d_in]; // [d_out, d_in] — GEMM layout
+    let mut bias = vec![0.0f32; d_out];
+    fill(&mut x, 3);
+    fill(&mut w, 4);
+    fill(&mut bias, 5);
+    for k in 0..d_in {
+        for o in 0..d_out {
+            wt[o * d_in + k] = w[k * d_out + o];
+        }
+    }
+    let mut out = vec![0.0f32; bsz * d_out];
+    let gunits = (reps * bsz * d_in * d_out) as f64; // MACs
+    println!("== Table 2g.2: f32 forward matmul ({bsz}x{d_in} @ {d_in}x{d_out}) MACs/s ==");
+    let rg = b.run("table2g/matmul/gemm_bt", gunits, || {
+        for _ in 0..reps {
+            gemm_bt_f32(&x, &wt, &bias, &mut out, bsz, d_in, d_out);
+        }
+        std::hint::black_box(&out);
+    });
+    let rv = b.run("table2g/matmul/axpy_gemv", gunits, || {
+        for _ in 0..reps {
+            affine_f32(&x, &w, &bias, &mut out, bsz, d_in, d_out);
+        }
+        std::hint::black_box(&out);
+    });
+    let gemm_gate = rg.throughput() / rv.throughput();
+    println!("gemm_bt/axpy_gemv = {gemm_gate:.2}x");
+
+    // --- 2g.3: SoA Atari preprocessing vs per-lane ---
+    let an = 64usize;
+    let asteps: u64 = if quick { 1_024 } else { 32_000 };
+    println!("== Table 2g.3: Pong (N={an}) slab SoA preproc vs per-lane env-steps/s ==");
+    let mut fl = 0.0f64;
+    let mut ve = 0.0f64;
+    b.run("table2g/pong/forloop", asteps as f64, || {
+        let f = run_throughput("Pong-v5", "forloop", an, an, 1, asteps, 0).unwrap();
+        fl = fl.max(f);
+    });
+    b.run("table2g/pong/forloop-vec", asteps as f64, || {
+        let f = run_throughput("Pong-v5", "forloop-vec", an, an, 1, asteps, 0).unwrap();
+        ve = ve.max(f);
+    });
+    let atari_gate = ve / fl;
+    let mut t3 = Table::new(["Path", "frames/s", "vs per-lane"]);
+    t3.row(["per-lane (forloop)".into(), fmt_fps(fl), "1.00x".into()]);
+    t3.row(["slab SoA (forloop-vec)".into(), fmt_fps(ve), format!("{atari_gate:.2}x")]);
+    println!("{}", t3.render());
+
+    b.write_snapshot("table2g").unwrap();
+
+    if quick {
+        println!("(quick mode: skipping the three Table 2g acceptance assertions)");
+    } else {
+        assert!(
+            layout_gate >= 1.15,
+            "acceptance gate failed: body-major/lane-major sweep = {layout_gate:.2}x < 1.15x"
+        );
+        assert!(
+            gemm_gate >= 1.5,
+            "acceptance gate failed: gemm_bt/axpy_gemv = {gemm_gate:.2}x < 1.5x"
+        );
+        assert!(
+            atari_gate >= 1.3,
+            "acceptance gate failed: Pong slab-SoA/per-lane = {atari_gate:.2}x < 1.3x"
+        );
+        println!(
+            "acceptance gates OK: layout {layout_gate:.2}x, gemm {gemm_gate:.2}x, \
+             atari {atari_gate:.2}x"
+        );
+    }
+}

@@ -3,8 +3,19 @@
 //! `cargo bench` targets use [`Bencher`] to run warmup + timed iterations
 //! and print mean / std / throughput lines in a stable, grep-able format
 //! that the EXPERIMENTS.md tables are built from.
+//!
+//! Every result is also recorded on the bencher, and each bench target
+//! ends with [`Bencher::write_snapshot`], which serializes the run to
+//! `BENCH_<table>.json` (hand-rolled writer — no serde in the vendored
+//! crate set). The snapshot carries the git sha, the lane-width setting
+//! and the quick/full mode flag alongside env-steps/s per row, so the
+//! bench-smoke CI job can archive a per-commit throughput record and
+//! EXPERIMENTS.md tables can cite an exact commit.
 
 use crate::metrics::stats::Streaming;
+use std::cell::RefCell;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// One benchmark runner with warmup and repeated timed samples.
@@ -13,11 +24,15 @@ pub struct Bencher {
     pub samples: usize,
     /// Warmup iterations before sampling.
     pub warmup: usize,
+    /// Every result produced by [`Bencher::run`], in run order —
+    /// drained into `BENCH_<table>.json` by [`Bencher::write_snapshot`].
+    /// Interior-mutable so `run` can keep taking `&self`.
+    results: RefCell<Vec<BenchResult>>,
 }
 
 impl Default for Bencher {
     fn default() -> Self {
-        Bencher { samples: 10, warmup: 2 }
+        Bencher::new(10, 2)
     }
 }
 
@@ -48,10 +63,14 @@ impl BenchResult {
 }
 
 impl Bencher {
+    pub fn new(samples: usize, warmup: usize) -> Bencher {
+        Bencher { samples, warmup, results: RefCell::new(Vec::new()) }
+    }
+
     /// Quick-mode bencher for CI (`ENVPOOL_BENCH_QUICK=1` shrinks samples).
     pub fn from_env() -> Bencher {
         if std::env::var("ENVPOOL_BENCH_QUICK").is_ok() {
-            Bencher { samples: 3, warmup: 1 }
+            Bencher::new(3, 1)
         } else {
             Bencher::default()
         }
@@ -75,8 +94,103 @@ impl Bencher {
             units,
         };
         println!("{}", r.report());
+        self.results.borrow_mut().push(r.clone());
         r
     }
+
+    /// Write every recorded result to `BENCH_<table>.json` in
+    /// `$ENVPOOL_BENCH_DIR` (default: the working directory). Called
+    /// once at the end of each bench target's `main`.
+    pub fn write_snapshot(&self, table: &str) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("ENVPOOL_BENCH_DIR").unwrap_or_else(|_| ".".into());
+        self.write_snapshot_to(table, Path::new(&dir))
+    }
+
+    /// [`Bencher::write_snapshot`] with an explicit directory (tests).
+    ///
+    /// Layout (all hand-rolled — the vendored crate set has no serde):
+    ///
+    /// ```json
+    /// {"table": "...", "git_sha": "...", "lane_width": "...",
+    ///  "quick": false,
+    ///  "rows": [{"name": "...", "units": N, "mean_secs": N,
+    ///            "std_secs": N, "throughput_per_s": N}, ...]}
+    /// ```
+    pub fn write_snapshot_to(&self, table: &str, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{table}.json"));
+        let lane = std::env::var("ENVPOOL_LANE_WIDTH")
+            .unwrap_or_else(|_| format!("auto({})", crate::simd::LanePass::Auto.width()));
+        let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{{\n  \"table\": \"{}\",\n  \"git_sha\": \"{}\",\n  \
+             \"lane_width\": \"{}\",\n  \"quick\": {},\n  \"rows\": [",
+            json_escape(table),
+            json_escape(&git_sha()),
+            json_escape(&lane),
+            quick
+        ));
+        let rows = self.results.borrow();
+        for (i, r) in rows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"units\": {}, \"mean_secs\": {}, \
+                 \"std_secs\": {}, \"throughput_per_s\": {}}}",
+                json_escape(&r.name),
+                json_num(r.units),
+                json_num(r.mean_secs),
+                json_num(r.std_secs),
+                json_num(r.throughput())
+            ));
+        }
+        s.push_str("\n  ]\n}\n");
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(s.as_bytes())?;
+        println!("bench snapshot written: {}", path.display());
+        Ok(path)
+    }
+}
+
+/// Escape a string for a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON has no NaN/Infinity — map non-finite values to `null`.
+fn json_num(x: f64) -> String {
+    if x.is_finite() { format!("{x}") } else { "null".to_string() }
+}
+
+/// Commit the snapshot is measured at: `$GITHUB_SHA` in CI, else
+/// `git rev-parse HEAD`, else `"unknown"` (benches must not fail over
+/// provenance metadata).
+fn git_sha() -> String {
+    if let Ok(s) = std::env::var("GITHUB_SHA") {
+        if !s.is_empty() {
+            return s;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 #[cfg(test)]
@@ -85,7 +199,7 @@ mod tests {
 
     #[test]
     fn bench_runs_and_reports() {
-        let b = Bencher { samples: 3, warmup: 1 };
+        let b = Bencher::new(3, 1);
         let mut count = 0u64;
         let r = b.run("noop", 100.0, || {
             count += 1;
@@ -94,5 +208,37 @@ mod tests {
         assert_eq!(count, 4); // warmup + samples
         assert!(r.throughput() > 0.0);
         assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn snapshot_writes_wellformed_json() {
+        let b = Bencher::new(1, 0);
+        b.run("row \"one\"", 10.0, || std::hint::black_box(()));
+        b.run("row/two", 0.0, || std::hint::black_box(()));
+        let dir = std::env::temp_dir().join(format!("envpool_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = b.write_snapshot_to("testtable", &dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_testtable.json");
+        let body = std::fs::read_to_string(&path).unwrap();
+        // Minimal structural checks (no JSON parser in the crate set):
+        // balanced braces/brackets, escaped quote survives, all keys on.
+        assert_eq!(body.matches('{').count(), body.matches('}').count());
+        assert_eq!(body.matches('[').count(), body.matches(']').count());
+        for key in ["\"table\": \"testtable\"", "\"git_sha\"", "\"lane_width\"", "\"quick\"", "\"rows\""] {
+            assert!(body.contains(key), "missing {key} in {body}");
+        }
+        assert!(body.contains("row \\\"one\\\""), "quote not escaped: {body}");
+        assert!(body.contains("\"throughput_per_s\""));
+        // units=0 row: throughput is defined as 0, still a finite number.
+        assert!(body.contains("\"units\": 0"));
+        std::fs::remove_file(&path).unwrap();
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn nonfinite_numbers_serialize_as_null() {
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_num(1.5), "1.5");
     }
 }

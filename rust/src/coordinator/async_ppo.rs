@@ -28,7 +28,9 @@
 //! (`update_epochs × num_minibatches`), reached only by transitions
 //! begun a full round early.
 
-use super::ppo::{compute_gae, train_one_minibatch, CurvePoint, MbScratch, TrainSummary};
+use super::ppo::{
+    compute_gae, trailing_mean, train_one_minibatch, CurvePoint, MbScratch, TrainSummary,
+};
 use crate::agent::sampler;
 use crate::agent::traj::TrajStore;
 use crate::config::{ExecutorKind, TrainConfig};
@@ -338,12 +340,7 @@ pub fn train_async_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBrea
         }
 
         // ---- bookkeeping (same trailing window as the sync loop) ----
-        let tail: Vec<f32> = st.completed.iter().rev().take(window).cloned().collect();
-        let mean_ret = if tail.is_empty() {
-            f32::NAN
-        } else {
-            tail.iter().sum::<f32>() / tail.len() as f32
-        };
+        let mean_ret = trailing_mean(&st.completed, window);
         if mean_ret.is_finite() {
             best = best.max(mean_ret);
         }

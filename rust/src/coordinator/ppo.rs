@@ -265,6 +265,20 @@ impl MbScratch {
     }
 }
 
+/// Mean of the trailing `window` episode returns (NaN when none have
+/// completed), summing newest-first — the iteration order the old
+/// per-iteration `collect` used, kept so rerun curves stay
+/// bit-identical. Allocation-free: both training loops call this once
+/// per learner iteration and used to clone the tail into a fresh `Vec`
+/// each time.
+pub(super) fn trailing_mean(completed: &[f32], window: usize) -> f32 {
+    let n = completed.len().min(window);
+    if n == 0 {
+        return f32::NAN;
+    }
+    completed[completed.len() - n..].iter().rev().sum::<f32>() / n as f32
+}
+
 /// GAE over a finished rollout with CleanRL's done|truncated merge —
 /// the advantage path shared by the synchronous loop below and the
 /// decoupled async loop (`super::async_ppo`).
@@ -437,12 +451,7 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
         prof.bump_iteration();
 
         // ---- bookkeeping ----
-        let tail: Vec<f32> = completed.iter().rev().take(window).cloned().collect();
-        let mean_ret = if tail.is_empty() {
-            f32::NAN
-        } else {
-            tail.iter().sum::<f32>() / tail.len() as f32
-        };
+        let mean_ret = trailing_mean(&completed, window);
         if mean_ret.is_finite() {
             best = best.max(mean_ret);
         }

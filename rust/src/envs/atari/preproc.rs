@@ -2,10 +2,30 @@
 //! max-pool over the last two native frames, 2× downsample to 84×84,
 //! 4-frame stacking — producing the canonical `(4, 84, 84)` observation.
 //!
-//! The stack itself lives in [`PreprocState`], a per-lane state machine
-//! shared verbatim by the scalar [`AtariEnv`] and the batched
-//! [`AtariVec`](crate::envs::vector::AtariVec) kernel — one
-//! implementation, so the two execution paths are bitwise identical.
+//! # Split for the SoA batch path
+//!
+//! The preprocessing semantics live in **one** state machine,
+//! [`PreprocCore`], factored so the per-step work separates into an
+//! emulator phase and a pure pixel phase:
+//!
+//! - [`PreprocCore::step_emulate`] / [`PreprocCore::reset_emulate`] —
+//!   emulator ticks and native renders (inherently scalar per lane,
+//!   data-dependent control flow), producing an [`EmulatePhase`]
+//!   record;
+//! - [`PreprocCore::step_finish`] / [`PreprocCore::reset_finish`] —
+//!   the pure lane math (2-frame max-pool, 2×2 max downsample, stack
+//!   push, episodic-life/truncation bookkeeping) over caller-owned
+//!   pixel buffers, plus [`PreprocCore::write_obs`] for the stacked
+//!   readout.
+//!
+//! The scalar [`AtariEnv`] wraps the core with per-env owned buffers
+//! ([`PreprocState`], API unchanged). The batched
+//! [`AtariVec`](crate::envs::vector::AtariVec) kernel owns one
+//! **contiguous slab** of all lanes' frames and stack rings and runs
+//! the finish phase as a lane-streaming SoA pass after every lane's
+//! emulator phase — same core methods, so the two execution paths stay
+//! bitwise identical (pinned by `tests/vector_parity.rs` and the
+//! in-file parity tests in `envs/vector/atari.rs`).
 
 use super::game::Game;
 use super::{FRAMESKIP, NATIVE, SCREEN, STACK};
@@ -27,17 +47,33 @@ pub(crate) fn spec_for<G: Game>(game: &G) -> EnvSpec {
     }
 }
 
-/// One environment's preprocessing state: RNG stream, flicker buffers,
-/// frame stack, step/life counters. All the semantics of an Atari env
-/// step (frameskip, max-pool, episodic life, truncation) live in the
-/// methods here; [`AtariEnv`] and the batched kernel are adapters.
-pub(crate) struct PreprocState {
+/// Result of the emulator phase of one step: everything the pixel
+/// phase needs, so the finish pass never touches the game.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct EmulatePhase {
+    /// Frameskip-summed reward.
+    pub reward: f32,
+    /// Game reported termination during the skip.
+    pub done: bool,
+    /// The skip reached its last frame, so `frame_a` must be max-pooled
+    /// with `frame_b` (early death skips the pool, exactly as the
+    /// original single-phase loop did).
+    pub pool: bool,
+    /// Life counter snapshot after the skip (pure getter — reading it
+    /// here instead of after the pixel work cannot change it).
+    pub lives: u32,
+}
+
+/// One environment's preprocessing **control** state: RNG stream,
+/// stack-ring head, step/life counters. All the semantics of an Atari
+/// env step (frameskip, max-pool, episodic life, truncation) live in
+/// the methods here; the pixel buffers (two native frames + the stack
+/// ring) are borrowed per call, so the scalar env can own them per
+/// lane while the batched kernel packs every lane into one contiguous
+/// slab (see module docs).
+pub(crate) struct PreprocCore {
     rng: Pcg32,
-    /// Two native frame buffers for the flicker max-pool.
-    frame_a: Vec<u8>,
-    frame_b: Vec<u8>,
-    /// Ring of stacked 84×84 planes; `head` is the *newest* plane.
-    stack: Vec<f32>,
+    /// Index of the *newest* plane in the stack ring.
     head: usize,
     steps: usize,
     episodic_life: bool,
@@ -45,13 +81,10 @@ pub(crate) struct PreprocState {
     n_actions: usize,
 }
 
-impl PreprocState {
+impl PreprocCore {
     pub(crate) fn new(n_actions: usize, seed: u64, env_id: u64) -> Self {
-        PreprocState {
+        PreprocCore {
             rng: Pcg32::new(seed ^ 0x41544152, env_id),
-            frame_a: vec![0; NATIVE * NATIVE],
-            frame_b: vec![0; NATIVE * NATIVE],
-            stack: vec![0.0; STACK * SCREEN * SCREEN],
             head: 0,
             steps: 0,
             episodic_life: false,
@@ -64,79 +97,162 @@ impl PreprocState {
         self.episodic_life = on;
     }
 
-    /// Push the current pooled screen into the stack ring.
-    fn push_screen(&mut self) {
+    /// Push the pooled screen in `frame_a` into the stack ring.
+    fn push_screen(&mut self, frame_a: &[u8], stack: &mut [f32]) {
         self.head = (self.head + 1) % STACK;
         let plane = SCREEN * SCREEN;
-        let dst = &mut self.stack[self.head * plane..(self.head + 1) * plane];
-        super::render::downsample_into(&self.frame_a, dst);
+        let dst = &mut stack[self.head * plane..(self.head + 1) * plane];
+        super::render::downsample_into(frame_a, dst);
     }
 
     /// Write the stacked observation, newest plane last (channel order
-    /// oldest→newest, matching gym's FrameStack).
-    pub(crate) fn write_obs(&self, obs: &mut [f32]) {
+    /// oldest→newest, matching gym's FrameStack). Pure lane math — the
+    /// batched kernel calls this in its SoA readout pass.
+    pub(crate) fn write_obs(&self, stack: &[f32], obs: &mut [f32]) {
         let plane = SCREEN * SCREEN;
         for k in 0..STACK {
             let src_idx = (self.head + 1 + k) % STACK; // oldest first
-            let src = &self.stack[src_idx * plane..(src_idx + 1) * plane];
+            let src = &stack[src_idx * plane..(src_idx + 1) * plane];
             obs[k * plane..(k + 1) * plane].copy_from_slice(src);
         }
     }
 
-    /// Reset the episode. Full game reset only when the game is actually
-    /// over (episodic-life continuation otherwise), as the standard
-    /// wrapper does.
-    pub(crate) fn reset<G: Game>(&mut self, game: &mut G) {
+    /// Emulator half of a reset: full game reset only when the game is
+    /// actually over (episodic-life continuation otherwise, as the
+    /// standard wrapper does), then the first native render.
+    pub(crate) fn reset_emulate<G: Game>(&mut self, game: &mut G, frame_a: &mut [u8]) {
         if !self.episodic_life || game.lives() == 0 || self.steps == 0 {
             game.reset(&mut self.rng);
         }
         self.lives = game.lives();
         self.steps = 0;
-        self.stack.fill(0.0);
-        game.render(&mut self.frame_a);
-        self.push_screen();
+        game.render(frame_a);
+    }
+
+    /// Pixel half of a reset: clear the stack ring and push the first
+    /// screen.
+    pub(crate) fn reset_finish(&mut self, frame_a: &[u8], stack: &mut [f32]) {
+        stack.fill(0.0);
+        self.push_screen(frame_a, stack);
+    }
+
+    /// Full reset (scalar path); the batched kernel runs the two halves
+    /// in its phased loops instead.
+    pub(crate) fn reset<G: Game>(&mut self, game: &mut G, frame_a: &mut [u8], stack: &mut [f32]) {
+        self.reset_emulate(game, frame_a);
+        self.reset_finish(frame_a, stack);
+    }
+
+    /// Emulator half of a step: frameskip ticks + native renders. No
+    /// pixel math happens here — the caller completes the step with
+    /// [`Self::step_finish`].
+    pub(crate) fn step_emulate<G: Game>(
+        &mut self,
+        game: &mut G,
+        action: &[f32],
+        frame_a: &mut [u8],
+        frame_b: &mut [u8],
+    ) -> EmulatePhase {
+        let a = discrete_action(action, self.n_actions);
+        let mut reward = 0.0;
+        let mut done = false;
+        let mut pool = false;
+        // frameskip with max-pool of the last two frames (the pool
+        // itself is deferred to the pixel phase)
+        for k in 0..FRAMESKIP {
+            let (r, d) = game.tick(a, &mut self.rng);
+            reward += r;
+            if k == FRAMESKIP - 2 {
+                game.render(frame_b);
+            } else if k == FRAMESKIP - 1 {
+                game.render(frame_a);
+                pool = true;
+            }
+            if d {
+                done = true;
+                // render whatever we have if we died early in the skip
+                if k < FRAMESKIP - 1 {
+                    game.render(frame_a);
+                }
+                break;
+            }
+        }
+        EmulatePhase { reward, done, pool, lives: game.lives() }
+    }
+
+    /// Pixel half of a step: 2-frame max-pool (when the skip
+    /// completed), downsample + stack push, then episodic-life and
+    /// truncation bookkeeping. Pure lane math over the borrowed
+    /// buffers — the batched kernel streams this over its lane slab.
+    pub(crate) fn step_finish(
+        &mut self,
+        frame_a: &mut [u8],
+        frame_b: &[u8],
+        stack: &mut [f32],
+        ph: EmulatePhase,
+    ) -> Step {
+        if ph.pool {
+            super::render::max_frames(frame_a, frame_b);
+        }
+        self.push_screen(frame_a, stack);
+        self.steps += 1;
+
+        // Episodic life: losing a life terminates the training episode.
+        let mut done = ph.done;
+        if self.episodic_life && !done {
+            if ph.lives < self.lives {
+                done = true;
+            }
+            self.lives = ph.lives;
+        }
+
+        let truncated = !done && self.steps >= MAX_STEPS;
+        Step { reward: ph.reward, done, truncated }
+    }
+}
+
+/// [`PreprocCore`] plus owned pixel buffers — the per-env shape the
+/// scalar [`AtariEnv`] uses. Same core methods as the batched slab
+/// path, so the two stay bitwise identical.
+pub(crate) struct PreprocState {
+    core: PreprocCore,
+    /// Two native frame buffers for the flicker max-pool.
+    frame_a: Vec<u8>,
+    frame_b: Vec<u8>,
+    /// Ring of stacked 84×84 planes.
+    stack: Vec<f32>,
+}
+
+impl PreprocState {
+    pub(crate) fn new(n_actions: usize, seed: u64, env_id: u64) -> Self {
+        PreprocState {
+            core: PreprocCore::new(n_actions, seed, env_id),
+            frame_a: vec![0; NATIVE * NATIVE],
+            frame_b: vec![0; NATIVE * NATIVE],
+            stack: vec![0.0; STACK * SCREEN * SCREEN],
+        }
+    }
+
+    pub(crate) fn set_episodic_life(&mut self, on: bool) {
+        self.core.set_episodic_life(on);
+    }
+
+    /// Write the stacked observation (see [`PreprocCore::write_obs`]).
+    pub(crate) fn write_obs(&self, obs: &mut [f32]) {
+        self.core.write_obs(&self.stack, obs);
+    }
+
+    /// Reset the episode (see [`PreprocCore::reset`]).
+    pub(crate) fn reset<G: Game>(&mut self, game: &mut G) {
+        self.core.reset(game, &mut self.frame_a, &mut self.stack);
     }
 
     /// One env step: frameskip with max-pool, episodic-life handling,
     /// truncation. The caller writes the observation afterwards via
     /// [`Self::write_obs`].
     pub(crate) fn step<G: Game>(&mut self, game: &mut G, action: &[f32]) -> Step {
-        let a = discrete_action(action, self.n_actions);
-        let mut reward = 0.0;
-        let mut done = false;
-        // frameskip with max-pool of the last two frames
-        for k in 0..FRAMESKIP {
-            let (r, d) = game.tick(a, &mut self.rng);
-            reward += r;
-            if k == FRAMESKIP - 2 {
-                game.render(&mut self.frame_b);
-            } else if k == FRAMESKIP - 1 {
-                game.render(&mut self.frame_a);
-                super::render::max_frames(&mut self.frame_a, &self.frame_b);
-            }
-            if d {
-                done = true;
-                // render whatever we have if we died early in the skip
-                if k < FRAMESKIP - 1 {
-                    game.render(&mut self.frame_a);
-                }
-                break;
-            }
-        }
-        self.push_screen();
-        self.steps += 1;
-
-        // Episodic life: losing a life terminates the training episode.
-        if self.episodic_life && !done {
-            let now = game.lives();
-            if now < self.lives {
-                done = true;
-            }
-            self.lives = now;
-        }
-
-        let truncated = !done && self.steps >= MAX_STEPS;
-        Step { reward, done, truncated }
+        let ph = self.core.step_emulate(game, action, &mut self.frame_a, &mut self.frame_b);
+        self.core.step_finish(&mut self.frame_a, &self.frame_b, &mut self.stack, ph)
     }
 }
 

@@ -1,6 +1,14 @@
 //! Grayscale software rasterizer for the arcade games: rectangle fills
 //! into a NATIVE×NATIVE `u8` frame. This is where the Atari-like per-step
 //! cost lives (as pixel work does in real ALE).
+//!
+//! The pooling/downsampling primitives at the bottom of this file are
+//! the inner loops of the preprocessing **pixel phase**
+//! ([`super::preproc::PreprocCore`]): on the batched path
+//! (`envs::vector::AtariVec`) they stream over contiguous per-lane
+//! slab slices with no emulator work interleaved, so keep them free of
+//! per-call state — pure `&[u8]`-in/`&mut`-out — for that pass to stay
+//! cache-friendly.
 
 use super::NATIVE;
 

@@ -3,23 +3,32 @@
 //! struct-of-arrays lanes and runs every sequential-impulse solver phase
 //! as a masked lane-group pass over [`crate::simd::F32s`].
 //!
-//! # Layout
+//! # Layout (body-major)
 //!
 //! All lanes share one articulation **topology** (bodies, joints,
 //! limits, gears — captured once from a prototype [`World`]); only the
-//! *state* is per lane:
+//! *state* is per lane, stored **body-major** so the lane index is the
+//! fastest-moving one:
 //!
 //! - body state (`pos_x/pos_y/angle/vel_x/vel_y/omega`) is indexed
-//!   `[lane * num_bodies + body]`;
+//!   `[body * lanes + lane]`;
 //! - joint solver state (prepared anchors, accumulated point/limit
-//!   impulses, limit activity) is indexed `[lane * num_joints + joint]`;
+//!   impulses, limit activity) is indexed `[joint * lanes + lane]`;
 //! - contact caches use **padded per-lane contact slots**: every
 //!   `(body, endpoint)` pair owns a fixed slot
-//!   (`[(lane * num_bodies + body) * 2 + endpoint]`) with an activity
+//!   (`[(body * 2 + endpoint) * lanes + lane]`) with an activity
 //!   flag. Divergent contact sets across lanes become activity masks,
 //!   and warm-start matching is the slot identity itself — exactly the
 //!   `(body, point)` key the AoS [`contact`](super::contact) path
 //!   searches `prev` for.
+//!
+//! The solver walks bodies/joints in the outer loop and lane groups in
+//! the inner one, so under this layout **every** lane-group load and
+//! store in the hot path is one contiguous `[base .. base + n]` slice —
+//! no stride-`nb` gathers (the pre-body-major layout's cost; Table 2g
+//! in `benches/table2g_contig.rs` gates the win). The layout is a pure
+//! storage permutation: per-lane operation order is unchanged, so the
+//! parity contract below is untouched.
 //!
 //! # Solver phases (identical order to [`World::step`])
 //!
@@ -68,20 +77,23 @@ pub const LANE_TOL_ABS: f32 = 2e-2;
 /// Relative term of the widths > 1 tolerance budget.
 pub const LANE_TOL_REL: f32 = 2e-2;
 
-/// Gather `n` lanes of `src` at `idx(i)`, padding the tail with `0.0`
-/// (padded lanes are masked out of every store).
+/// Contiguous lane-group load: `n` lanes starting at `base`, tail
+/// padded with `0.0` (padded lanes are masked out of every store).
+/// Body-major layout makes every solver access this shape.
 #[inline(always)]
-fn ld<const W: usize, F: Fn(usize) -> usize>(src: &[f32], idx: F, n: usize) -> F32s<W> {
-    F32s::from_fn(|i| if i < n { src[idx(i)] } else { 0.0 })
+fn ldc<const W: usize>(src: &[f32], base: usize, n: usize) -> F32s<W> {
+    F32s::load_or(&src[base..base + n], 0.0)
 }
 
-/// Masked scatter: lanes where `m` is clear keep their old value — a
-/// select, not an add-zero, so `-0.0` survives in masked lanes.
+/// Contiguous masked store: lanes where `m` is clear keep their old
+/// value — a select, not an add-zero, so `-0.0` survives in masked
+/// lanes. Tail lanes are never set in `m`, so `base + i` stays in
+/// bounds.
 #[inline(always)]
-fn st<const W: usize, F: Fn(usize) -> usize>(dst: &mut [f32], idx: F, m: &Mask<W>, v: F32s<W>) {
+fn stc<const W: usize>(dst: &mut [f32], base: usize, m: &Mask<W>, v: F32s<W>) {
     for i in 0..W {
         if m.0[i] {
-            dst[idx(i)] = v.0[i];
+            dst[base + i] = v.0[i];
         }
     }
 }
@@ -129,8 +141,8 @@ fn solve22_w<const W: usize>(
 }
 
 /// A batch of articulated rigid-body worlds sharing one topology, with
-/// all mutable solver state resident in SoA lanes. See the module docs
-/// for the layout and the parity contract.
+/// all mutable solver state resident in body-major SoA lanes. See the
+/// module docs for the layout and the parity contract.
 #[derive(Debug, Clone)]
 pub struct WorldBatch {
     lanes: usize,
@@ -152,21 +164,22 @@ pub struct WorldBatch {
     limit_hi: Vec<f32>,
     ref_angle: Vec<f32>,
     gear: Vec<f32>,
-    // --- reset template (the proto's body state, one lane's worth) ---
+    // --- reset template (the proto's body state, one lane's worth,
+    //     body-indexed) ---
     init_pos_x: Vec<f32>,
     init_pos_y: Vec<f32>,
     init_angle: Vec<f32>,
     init_vel_x: Vec<f32>,
     init_vel_y: Vec<f32>,
     init_omega: Vec<f32>,
-    // --- per-lane body state, indexed [lane * nb + body] ---
+    // --- per-lane body state, indexed [body * lanes + lane] ---
     pub pos_x: Vec<f32>,
     pub pos_y: Vec<f32>,
     pub angle: Vec<f32>,
     pub vel_x: Vec<f32>,
     pub vel_y: Vec<f32>,
     pub omega: Vec<f32>,
-    // --- per-lane joint solver state, indexed [lane * nj + joint] ---
+    // --- per-lane joint solver state, indexed [joint * lanes + lane] ---
     jr_ax: Vec<f32>,
     jr_ay: Vec<f32>,
     jr_bx: Vec<f32>,
@@ -176,7 +189,7 @@ pub struct WorldBatch {
     jlimit_imp: Vec<f32>,
     /// 0 = inactive, 1 = at lower, 2 = at upper (the AoS `LimitState`).
     jlimit_state: Vec<u8>,
-    // --- padded per-lane contact slots, [(lane * nb + body) * 2 + endpoint] ---
+    // --- padded per-lane contact slots, [(body * 2 + endpoint) * lanes + lane] ---
     c_active: Vec<bool>,
     c_rx: Vec<f32>,
     c_ry: Vec<f32>,
@@ -200,10 +213,12 @@ impl WorldBatch {
         let init_vel_x = grab(|x| x.vel.x);
         let init_vel_y = grab(|x| x.vel.y);
         let init_omega = grab(|x| x.omega);
+        // Body-major replication: each body's template value occupies a
+        // contiguous run of `lanes` slots.
         let rep = |src: &[f32]| -> Vec<f32> {
-            let mut out = Vec::with_capacity(lanes * nb);
-            for _ in 0..lanes {
-                out.extend_from_slice(src);
+            let mut out = Vec::with_capacity(lanes * src.len());
+            for &v in src {
+                out.extend(std::iter::repeat(v).take(lanes));
             }
             out
         };
@@ -264,32 +279,51 @@ impl WorldBatch {
         self.nb
     }
 
+    /// Index of `(lane, body)` in the body-state lanes
+    /// (`pos_x`/`pos_y`/`angle`/`vel_x`/`vel_y`/`omega`): body-major,
+    /// `body * lanes + lane`. The task layer and tests go through this
+    /// instead of hardcoding the layout.
+    #[inline(always)]
+    pub fn body_index(&self, lane: usize, body: usize) -> usize {
+        body * self.lanes + lane
+    }
+
     /// Restore lane `lane` to the prototype pose and clear all of its
     /// solver warm-start state (joint impulses, limit states, contact
-    /// slots) — the batch equivalent of `model = proto.clone()`.
+    /// slots) — the batch equivalent of `model = proto.clone()`. Under
+    /// the body-major layout this is a strided walk (one slot per
+    /// body/joint/contact row); resets are episode-boundary-rate, not
+    /// hot-path.
     pub fn reset_lane(&mut self, lane: usize) {
-        let (base, nb) = (lane * self.nb, self.nb);
-        self.pos_x[base..base + nb].copy_from_slice(&self.init_pos_x);
-        self.pos_y[base..base + nb].copy_from_slice(&self.init_pos_y);
-        self.angle[base..base + nb].copy_from_slice(&self.init_angle);
-        self.vel_x[base..base + nb].copy_from_slice(&self.init_vel_x);
-        self.vel_y[base..base + nb].copy_from_slice(&self.init_vel_y);
-        self.omega[base..base + nb].copy_from_slice(&self.init_omega);
-        let (jb, nj) = (lane * self.nj, self.nj);
-        self.jr_ax[jb..jb + nj].fill(0.0);
-        self.jr_ay[jb..jb + nj].fill(0.0);
-        self.jr_bx[jb..jb + nj].fill(0.0);
-        self.jr_by[jb..jb + nj].fill(0.0);
-        self.jimp_x[jb..jb + nj].fill(0.0);
-        self.jimp_y[jb..jb + nj].fill(0.0);
-        self.jlimit_imp[jb..jb + nj].fill(0.0);
-        self.jlimit_state[jb..jb + nj].fill(0);
-        let (cb, nc) = (lane * nb * 2, nb * 2);
-        self.c_active[cb..cb + nc].fill(false);
-        self.c_rx[cb..cb + nc].fill(0.0);
-        self.c_ry[cb..cb + nc].fill(0.0);
-        self.c_jn[cb..cb + nc].fill(0.0);
-        self.c_jt[cb..cb + nc].fill(0.0);
+        let lanes = self.lanes;
+        for b in 0..self.nb {
+            let i = b * lanes + lane;
+            self.pos_x[i] = self.init_pos_x[b];
+            self.pos_y[i] = self.init_pos_y[b];
+            self.angle[i] = self.init_angle[b];
+            self.vel_x[i] = self.init_vel_x[b];
+            self.vel_y[i] = self.init_vel_y[b];
+            self.omega[i] = self.init_omega[b];
+        }
+        for j in 0..self.nj {
+            let i = j * lanes + lane;
+            self.jr_ax[i] = 0.0;
+            self.jr_ay[i] = 0.0;
+            self.jr_bx[i] = 0.0;
+            self.jr_by[i] = 0.0;
+            self.jimp_x[i] = 0.0;
+            self.jimp_y[i] = 0.0;
+            self.jlimit_imp[i] = 0.0;
+            self.jlimit_state[i] = 0;
+        }
+        for slot in 0..self.nb * 2 {
+            let i = slot * lanes + lane;
+            self.c_active[i] = false;
+            self.c_rx[i] = 0.0;
+            self.c_ry[i] = 0.0;
+            self.c_jn[i] = 0.0;
+            self.c_jt[i] = 0.0;
+        }
     }
 
     /// Gym-style reset noise on lane `lane` — the same per-body draw
@@ -297,13 +331,14 @@ impl WorldBatch {
     /// [`super::walker::apply_reset_noise`], which is the determinism
     /// contract the scalar/vector parity tests rely on.
     pub fn apply_reset_noise(&mut self, lane: usize, rng: &mut Pcg32) {
-        let base = lane * self.nb;
+        let lanes = self.lanes;
         for b in 0..self.nb {
             if self.inv_mass[b] > 0.0 {
-                self.angle[base + b] += rng.range(-0.005, 0.005);
-                self.vel_x[base + b] += rng.range(-0.01, 0.01);
-                self.vel_y[base + b] += rng.range(-0.01, 0.01);
-                self.omega[base + b] += rng.range(-0.01, 0.01);
+                let i = b * lanes + lane;
+                self.angle[i] += rng.range(-0.005, 0.005);
+                self.vel_x[i] += rng.range(-0.01, 0.01);
+                self.vel_y[i] += rng.range(-0.01, 0.01);
+                self.omega[i] += rng.range(-0.01, 0.01);
             }
         }
     }
@@ -311,7 +346,8 @@ impl WorldBatch {
     /// Any non-finite state in lane `lane`? (Batch twin of
     /// [`World::is_bad`].)
     pub fn lane_is_bad(&self, lane: usize) -> bool {
-        for i in lane * self.nb..(lane + 1) * self.nb {
+        for b in 0..self.nb {
+            let i = b * self.lanes + lane;
             if !self.pos_x[i].is_finite()
                 || !self.pos_y[i].is_finite()
                 || !self.angle[i].is_finite()
@@ -327,12 +363,12 @@ impl WorldBatch {
 
     /// Total kinetic energy of lane `lane` (invariant probes in tests).
     pub fn kinetic_energy(&self, lane: usize) -> f32 {
-        let base = lane * self.nb;
         let mut ke = 0.0;
         for b in 0..self.nb {
             let m = if self.inv_mass[b] > 0.0 { 1.0 / self.inv_mass[b] } else { 0.0 };
             let i = if self.inv_inertia[b] > 0.0 { 1.0 / self.inv_inertia[b] } else { 0.0 };
-            let (vx, vy, w) = (self.vel_x[base + b], self.vel_y[base + b], self.omega[base + b]);
+            let bi = b * self.lanes + lane;
+            let (vx, vy, w) = (self.vel_x[bi], self.vel_y[bi], self.omega[bi]);
             ke += 0.5 * m * (vx * vx + vy * vy) + 0.5 * i * w * w;
         }
         ke
@@ -343,15 +379,15 @@ impl WorldBatch {
     /// penetration invariant in `tests/mujoco_batch_parity.rs` bounds
     /// this at every lane width.
     pub fn max_penetration(&self, lane: usize) -> f32 {
-        let base = lane * self.nb;
         let mut worst = 0.0f32;
         for b in 0..self.nb {
             if self.inv_mass[b] <= 0.0 {
                 continue;
             }
-            let (s, _c) = self.angle[base + b].sin_cos();
+            let bi = b * self.lanes + lane;
+            let (s, _c) = self.angle[bi].sin_cos();
             for e in [-1.0f32, 1.0] {
-                let ey = self.pos_y[base + b] + s * (e * self.half_len[b]);
+                let ey = self.pos_y[bi] + s * (e * self.half_len[b]);
                 worst = worst.max(self.radius[b] - ey);
             }
         }
@@ -391,6 +427,9 @@ impl WorldBatch {
     /// resetting lanes and the tail). Phase structure and per-lane op
     /// order are the AoS [`World::step`]'s, transcribed literally —
     /// see the module docs for what is allowed to differ per width.
+    /// Every `bi`/`ai`/`ji`/`si` below is a contiguous base offset
+    /// (body-major layout), so each `ldc`/`stc` touches one cache-line
+    /// run of `n` lanes.
     fn step_group<const W: usize>(
         &mut self,
         g: usize,
@@ -400,6 +439,7 @@ impl WorldBatch {
         adim: usize,
         act: &Mask<W>,
     ) {
+        let lanes = self.lanes;
         let nb = self.nb;
         let nj = self.nj;
         let s = F32s::<W>::splat;
@@ -411,13 +451,13 @@ impl WorldBatch {
             if self.inv_mass[b] <= 0.0 {
                 continue; // static bodies take no external forces (uniform)
             }
-            let bi = |i: usize| (g + i) * nb + b;
-            let vx = ld::<W, _>(&self.vel_x, bi, n);
-            let vy = ld::<W, _>(&self.vel_y, bi, n) - s(GRAVITY * dt);
-            let om = ld::<W, _>(&self.omega, bi, n);
-            st(&mut self.vel_x, bi, act, vx * s(damp));
-            st(&mut self.vel_y, bi, act, vy * s(damp));
-            st(&mut self.omega, bi, act, om * s(damp));
+            let bi = b * lanes + g;
+            let vx = ldc::<W>(&self.vel_x, bi, n);
+            let vy = ldc::<W>(&self.vel_y, bi, n) - s(GRAVITY * dt);
+            let om = ldc::<W>(&self.omega, bi, n);
+            stc(&mut self.vel_x, bi, act, vx * s(damp));
+            stc(&mut self.vel_y, bi, act, vy * s(damp));
+            stc(&mut self.omega, bi, act, om * s(damp));
         }
         let mut ci = 0usize;
         for j in 0..nj {
@@ -434,22 +474,22 @@ impl WorldBatch {
                 }
             });
             ci += 1;
-            let ai = |i: usize| (g + i) * nb + a;
-            let bi = |i: usize| (g + i) * nb + b;
-            let oa = ld::<W, _>(&self.omega, ai, n) - s(self.inv_inertia[a]) * tau * s(dt);
-            let ob = ld::<W, _>(&self.omega, bi, n) + s(self.inv_inertia[b]) * tau * s(dt);
-            st(&mut self.omega, ai, act, oa);
-            st(&mut self.omega, bi, act, ob);
+            let ai = a * lanes + g;
+            let bi = b * lanes + g;
+            let oa = ldc::<W>(&self.omega, ai, n) - s(self.inv_inertia[a]) * tau * s(dt);
+            let ob = ldc::<W>(&self.omega, bi, n) + s(self.inv_inertia[b]) * tau * s(dt);
+            stc(&mut self.omega, ai, act, oa);
+            stc(&mut self.omega, bi, act, ob);
         }
 
         // 2a. prepare joints (anchors, limit states) + warm start.
         for j in 0..nj {
             let (a, b) = (self.j_a[j], self.j_b[j]);
-            let ai = |i: usize| (g + i) * nb + a;
-            let bi = |i: usize| (g + i) * nb + b;
-            let ji = |i: usize| (g + i) * nj + j;
-            let ang_a = ld::<W, _>(&self.angle, ai, n);
-            let ang_b = ld::<W, _>(&self.angle, bi, n);
+            let ai = a * lanes + g;
+            let bi = b * lanes + g;
+            let ji = j * lanes + g;
+            let ang_a = ldc::<W>(&self.angle, ai, n);
+            let ang_b = ldc::<W>(&self.angle, bi, n);
             let (sa, ca) = sin_cos_w(ang_a);
             let (sb, cb) = sin_cos_w(ang_b);
             // r = local_anchor.rotate(angle): (c·x − s·y, s·x + c·y)
@@ -459,19 +499,19 @@ impl WorldBatch {
             let ray = sa * lax + ca * lay;
             let rbx = cb * lbx - sb * lby;
             let rby = sb * lbx + cb * lby;
-            st(&mut self.jr_ax, ji, act, rax);
-            st(&mut self.jr_ay, ji, act, ray);
-            st(&mut self.jr_bx, ji, act, rbx);
-            st(&mut self.jr_by, ji, act, rby);
+            stc(&mut self.jr_ax, ji, act, rax);
+            stc(&mut self.jr_ay, ji, act, ray);
+            stc(&mut self.jr_bx, ji, act, rbx);
+            stc(&mut self.jr_by, ji, act, rby);
             // limit state: AtLower if ang <= lo, else AtUpper if ang >= hi.
-            let mut li = ld::<W, _>(&self.jlimit_imp, ji, n);
+            let mut li = ldc::<W>(&self.jlimit_imp, ji, n);
             if self.has_limit[j] {
                 let ang = ang_b - ang_a - s(self.ref_angle[j]);
                 let at_lower = ang.le(s(self.limit_lo[j]));
                 let at_upper = ang.ge(s(self.limit_hi[j])) & !at_lower;
                 for i in 0..W {
                     if act.0[i] {
-                        self.jlimit_state[ji(i)] = if at_lower.0[i] {
+                        self.jlimit_state[ji + i] = if at_lower.0[i] {
                             1
                         } else if at_upper.0[i] {
                             2
@@ -482,26 +522,26 @@ impl WorldBatch {
                 }
                 // inactive limits drop their accumulated impulse
                 li = (at_lower | at_upper).select_f32(li, zero);
-                st(&mut self.jlimit_imp, ji, act, li);
+                stc(&mut self.jlimit_imp, ji, act, li);
             }
             // warm start: re-apply last substep's accumulated impulses.
-            let px = ld::<W, _>(&self.jimp_x, ji, n);
-            let py = ld::<W, _>(&self.jimp_y, ji, n);
+            let px = ldc::<W>(&self.jimp_x, ji, n);
+            let py = ldc::<W>(&self.jimp_y, ji, n);
             let (npx, npy) = (-px, -py);
             let (ima, iia) = (s(self.inv_mass[a]), s(self.inv_inertia[a]));
             let (imb, iib) = (s(self.inv_mass[b]), s(self.inv_inertia[b]));
-            let vax = ld::<W, _>(&self.vel_x, ai, n) + npx * ima;
-            let vay = ld::<W, _>(&self.vel_y, ai, n) + npy * ima;
-            let oa = ld::<W, _>(&self.omega, ai, n) + iia * (rax * npy - ray * npx) - iia * li;
-            let vbx = ld::<W, _>(&self.vel_x, bi, n) + px * imb;
-            let vby = ld::<W, _>(&self.vel_y, bi, n) + py * imb;
-            let ob = ld::<W, _>(&self.omega, bi, n) + iib * (rbx * py - rby * px) + iib * li;
-            st(&mut self.vel_x, ai, act, vax);
-            st(&mut self.vel_y, ai, act, vay);
-            st(&mut self.omega, ai, act, oa);
-            st(&mut self.vel_x, bi, act, vbx);
-            st(&mut self.vel_y, bi, act, vby);
-            st(&mut self.omega, bi, act, ob);
+            let vax = ldc::<W>(&self.vel_x, ai, n) + npx * ima;
+            let vay = ldc::<W>(&self.vel_y, ai, n) + npy * ima;
+            let oa = ldc::<W>(&self.omega, ai, n) + iia * (rax * npy - ray * npx) - iia * li;
+            let vbx = ldc::<W>(&self.vel_x, bi, n) + px * imb;
+            let vby = ldc::<W>(&self.vel_y, bi, n) + py * imb;
+            let ob = ldc::<W>(&self.omega, bi, n) + iib * (rbx * py - rby * px) + iib * li;
+            stc(&mut self.vel_x, ai, act, vax);
+            stc(&mut self.vel_y, ai, act, vay);
+            stc(&mut self.omega, ai, act, oa);
+            stc(&mut self.vel_x, bi, act, vbx);
+            stc(&mut self.vel_y, bi, act, vby);
+            stc(&mut self.omega, bi, act, ob);
         }
 
         // 2b. collect ground contacts into the fixed (body, endpoint)
@@ -510,11 +550,11 @@ impl WorldBatch {
             if self.inv_mass[b] <= 0.0 {
                 continue;
             }
-            let bi = |i: usize| (g + i) * nb + b;
-            let ang = ld::<W, _>(&self.angle, bi, n);
+            let bi = b * lanes + g;
+            let ang = ldc::<W>(&self.angle, bi, n);
             let (sn, cs) = sin_cos_w(ang);
-            let px_ = ld::<W, _>(&self.pos_x, bi, n);
-            let py_ = ld::<W, _>(&self.pos_y, bi, n);
+            let px_ = ldc::<W>(&self.pos_x, bi, n);
+            let py_ = ldc::<W>(&self.pos_y, bi, n);
             let rad = s(self.radius[b]);
             let (im, ii) = (s(self.inv_mass[b]), s(self.inv_inertia[b]));
             for e in 0..2 {
@@ -524,30 +564,30 @@ impl WorldBatch {
                 let ex = px_ + (cs * lx - sn * zero);
                 let ey = py_ + (sn * lx + cs * zero);
                 let lowest = ey - rad;
-                let si = |i: usize| ((g + i) * nb + b) * 2 + e;
+                let si = (b * 2 + e) * lanes + g;
                 let now = lowest.lt(zero) & *act;
-                let was = Mask::<W>(std::array::from_fn(|i| i < n && self.c_active[si(i)]));
+                let was = Mask::<W>(std::array::from_fn(|i| i < n && self.c_active[si + i]));
                 let keep = now & was;
                 let rx = ex - px_;
                 let ry = zero - py_;
-                let jn = keep.select_f32(ld::<W, _>(&self.c_jn, si, n), zero);
-                let jt = keep.select_f32(ld::<W, _>(&self.c_jt, si, n), zero);
-                st(&mut self.c_rx, si, &now, rx);
-                st(&mut self.c_ry, si, &now, ry);
-                st(&mut self.c_jn, si, &now, jn);
-                st(&mut self.c_jt, si, &now, jt);
+                let jn = keep.select_f32(ldc::<W>(&self.c_jn, si, n), zero);
+                let jt = keep.select_f32(ldc::<W>(&self.c_jt, si, n), zero);
+                stc(&mut self.c_rx, si, &now, rx);
+                stc(&mut self.c_ry, si, &now, ry);
+                stc(&mut self.c_jn, si, &now, jn);
+                stc(&mut self.c_jt, si, &now, jt);
                 for i in 0..W {
                     if act.0[i] {
-                        self.c_active[si(i)] = now.0[i];
+                        self.c_active[si + i] = now.0[i];
                     }
                 }
                 // warm start persisting contacts: apply_impulse((jt, jn), r)
-                let vx1 = ld::<W, _>(&self.vel_x, bi, n) + jt * im;
-                let vy1 = ld::<W, _>(&self.vel_y, bi, n) + jn * im;
-                let om1 = ld::<W, _>(&self.omega, bi, n) + ii * (rx * jn - ry * jt);
-                st(&mut self.vel_x, bi, &keep, vx1);
-                st(&mut self.vel_y, bi, &keep, vy1);
-                st(&mut self.omega, bi, &keep, om1);
+                let vx1 = ldc::<W>(&self.vel_x, bi, n) + jt * im;
+                let vy1 = ldc::<W>(&self.vel_y, bi, n) + jn * im;
+                let om1 = ldc::<W>(&self.omega, bi, n) + ii * (rx * jn - ry * jt);
+                stc(&mut self.vel_x, bi, &keep, vx1);
+                stc(&mut self.vel_y, bi, &keep, vy1);
+                stc(&mut self.omega, bi, &keep, om1);
             }
         }
 
@@ -562,24 +602,24 @@ impl WorldBatch {
         // 4. speed clamps + semi-implicit integration (all bodies, as
         // the AoS loop does — static bodies are no-ops by value).
         for b in 0..nb {
-            let bi = |i: usize| (g + i) * nb + b;
-            let vx = ld::<W, _>(&self.vel_x, bi, n);
-            let vy = ld::<W, _>(&self.vel_y, bi, n);
+            let bi = b * lanes + g;
+            let vx = ldc::<W>(&self.vel_x, bi, n);
+            let vy = ldc::<W>(&self.vel_y, bi, n);
             let sp = (vx * vx + vy * vy).sqrt();
             let over = sp.gt(s(MAX_SPEED));
             let scale = s(MAX_SPEED) / sp;
             let vx1 = over.select_f32(vx * scale, vx);
             let vy1 = over.select_f32(vy * scale, vy);
-            let om1 = ld::<W, _>(&self.omega, bi, n).clamp(-MAX_OMEGA, MAX_OMEGA);
-            let px1 = ld::<W, _>(&self.pos_x, bi, n) + vx1 * s(dt);
-            let py1 = ld::<W, _>(&self.pos_y, bi, n) + vy1 * s(dt);
-            let an1 = ld::<W, _>(&self.angle, bi, n) + om1 * s(dt);
-            st(&mut self.vel_x, bi, act, vx1);
-            st(&mut self.vel_y, bi, act, vy1);
-            st(&mut self.omega, bi, act, om1);
-            st(&mut self.pos_x, bi, act, px1);
-            st(&mut self.pos_y, bi, act, py1);
-            st(&mut self.angle, bi, act, an1);
+            let om1 = ldc::<W>(&self.omega, bi, n).clamp(-MAX_OMEGA, MAX_OMEGA);
+            let px1 = ldc::<W>(&self.pos_x, bi, n) + vx1 * s(dt);
+            let py1 = ldc::<W>(&self.pos_y, bi, n) + vy1 * s(dt);
+            let an1 = ldc::<W>(&self.angle, bi, n) + om1 * s(dt);
+            stc(&mut self.vel_x, bi, act, vx1);
+            stc(&mut self.vel_y, bi, act, vy1);
+            stc(&mut self.omega, bi, act, om1);
+            stc(&mut self.pos_x, bi, act, px1);
+            stc(&mut self.pos_y, bi, act, py1);
+            stc(&mut self.angle, bi, act, an1);
         }
 
         // 5. split position correction with the per-lane early exit:
@@ -602,13 +642,12 @@ impl WorldBatch {
     /// One velocity iteration of joint `j` over the group — the lane
     /// transcription of `RevoluteJoint::solve_velocity`.
     fn joint_velocity_pass<const W: usize>(&mut self, g: usize, n: usize, j: usize, act: &Mask<W>) {
-        let nb = self.nb;
-        let nj = self.nj;
+        let lanes = self.lanes;
         let s = F32s::<W>::splat;
         let (a, b) = (self.j_a[j], self.j_b[j]);
-        let ai = |i: usize| (g + i) * nb + a;
-        let bi = |i: usize| (g + i) * nb + b;
-        let ji = |i: usize| (g + i) * nj + j;
+        let ai = a * lanes + g;
+        let bi = b * lanes + g;
+        let ji = j * lanes + g;
         let (ma, ia_inv) = (self.inv_mass[a], self.inv_inertia[a]);
         let (mb, ib_inv) = (self.inv_mass[b], self.inv_inertia[b]);
 
@@ -617,43 +656,43 @@ impl WorldBatch {
             let inv_k = ia_inv + ib_inv; // lane-invariant
             if inv_k > 0.0 {
                 let lower = Mask::<W>(std::array::from_fn(|i| {
-                    i < n && self.jlimit_state[ji(i)] == 1
+                    i < n && self.jlimit_state[ji + i] == 1
                 }));
                 let upper = Mask::<W>(std::array::from_fn(|i| {
-                    i < n && self.jlimit_state[ji(i)] == 2
+                    i < n && self.jlimit_state[ji + i] == 2
                 }));
                 let limited = (lower | upper) & *act;
                 if limited.any() {
-                    let oa = ld::<W, _>(&self.omega, ai, n);
-                    let ob = ld::<W, _>(&self.omega, bi, n);
+                    let oa = ldc::<W>(&self.omega, ai, n);
+                    let ob = ldc::<W>(&self.omega, bi, n);
                     let rel = ob - oa - s(0.0); // limit_bias is always 0
                     let imp = -rel / s(inv_k);
-                    let old = ld::<W, _>(&self.jlimit_imp, ji, n);
+                    let old = ldc::<W>(&self.jlimit_imp, ji, n);
                     let sum = old + imp;
                     let clamped =
                         lower.select_f32(sum.max(s(0.0)), sum.min(s(0.0)));
                     let dimp = clamped - old;
-                    st(&mut self.jlimit_imp, ji, &limited, clamped);
-                    st(&mut self.omega, ai, &limited, oa - s(ia_inv) * dimp);
-                    st(&mut self.omega, bi, &limited, ob + s(ib_inv) * dimp);
+                    stc(&mut self.jlimit_imp, ji, &limited, clamped);
+                    stc(&mut self.omega, ai, &limited, oa - s(ia_inv) * dimp);
+                    stc(&mut self.omega, bi, &limited, ob + s(ib_inv) * dimp);
                 }
             }
         }
 
         // point-to-point constraint
-        let rax = ld::<W, _>(&self.jr_ax, ji, n);
-        let ray = ld::<W, _>(&self.jr_ay, ji, n);
-        let rbx = ld::<W, _>(&self.jr_bx, ji, n);
-        let rby = ld::<W, _>(&self.jr_by, ji, n);
+        let rax = ldc::<W>(&self.jr_ax, ji, n);
+        let ray = ldc::<W>(&self.jr_ay, ji, n);
+        let rbx = ldc::<W>(&self.jr_bx, ji, n);
+        let rby = ldc::<W>(&self.jr_by, ji, n);
         let k11 = s(ma + mb) + s(ia_inv) * ray * ray + s(ib_inv) * rby * rby;
         let k12 = -(s(ia_inv) * rax) * ray - s(ib_inv) * rbx * rby;
         let k22 = s(ma + mb) + s(ia_inv) * rax * rax + s(ib_inv) * rbx * rbx;
-        let vxa = ld::<W, _>(&self.vel_x, ai, n);
-        let vya = ld::<W, _>(&self.vel_y, ai, n);
-        let oa = ld::<W, _>(&self.omega, ai, n);
-        let vxb = ld::<W, _>(&self.vel_x, bi, n);
-        let vyb = ld::<W, _>(&self.vel_y, bi, n);
-        let ob = ld::<W, _>(&self.omega, bi, n);
+        let vxa = ldc::<W>(&self.vel_x, ai, n);
+        let vya = ldc::<W>(&self.vel_y, ai, n);
+        let oa = ldc::<W>(&self.omega, ai, n);
+        let vxb = ldc::<W>(&self.vel_x, bi, n);
+        let vyb = ldc::<W>(&self.vel_y, bi, n);
+        let ob = ldc::<W>(&self.omega, bi, n);
         // velocity_at(r) = vel + (−ω·r.y, ω·r.x)
         let vax = vxa + (-oa) * ray;
         let vay = vya + oa * rax;
@@ -662,23 +701,24 @@ impl WorldBatch {
         let cdx = vbx - vax + s(0.0); // + bias (always zero, kept literal)
         let cdy = vby - vay + s(0.0);
         let (px, py) = solve22_w(k11, k12, k22, -cdx, -cdy);
-        let acc_x = ld::<W, _>(&self.jimp_x, ji, n) + px;
-        let acc_y = ld::<W, _>(&self.jimp_y, ji, n) + py;
-        st(&mut self.jimp_x, ji, act, acc_x);
-        st(&mut self.jimp_y, ji, act, acc_y);
+        let acc_x = ldc::<W>(&self.jimp_x, ji, n) + px;
+        let acc_y = ldc::<W>(&self.jimp_y, ji, n) + py;
+        stc(&mut self.jimp_x, ji, act, acc_x);
+        stc(&mut self.jimp_y, ji, act, acc_y);
         let (npx, npy) = (-px, -py);
-        st(&mut self.vel_x, ai, act, vxa + npx * s(ma));
-        st(&mut self.vel_y, ai, act, vya + npy * s(ma));
-        st(&mut self.omega, ai, act, oa + s(ia_inv) * (rax * npy - ray * npx));
-        st(&mut self.vel_x, bi, act, vxb + px * s(mb));
-        st(&mut self.vel_y, bi, act, vyb + py * s(mb));
-        st(&mut self.omega, bi, act, ob + s(ib_inv) * (rbx * py - rby * px));
+        stc(&mut self.vel_x, ai, act, vxa + npx * s(ma));
+        stc(&mut self.vel_y, ai, act, vya + npy * s(ma));
+        stc(&mut self.omega, ai, act, oa + s(ia_inv) * (rax * npy - ray * npx));
+        stc(&mut self.vel_x, bi, act, vxb + px * s(mb));
+        stc(&mut self.vel_y, bi, act, vyb + py * s(mb));
+        stc(&mut self.omega, bi, act, ob + s(ib_inv) * (rbx * py - rby * px));
     }
 
     /// One velocity iteration over every active contact slot of the
     /// group — the lane transcription of `contact::solve` (slot order
     /// is the AoS collect order: body-major, endpoint within body).
     fn contact_velocity_pass<const W: usize>(&mut self, g: usize, n: usize, act: &Mask<W>) {
+        let lanes = self.lanes;
         let nb = self.nb;
         let s = F32s::<W>::splat;
         let zero = s(0.0);
@@ -686,50 +726,50 @@ impl WorldBatch {
             if self.inv_mass[b] <= 0.0 {
                 continue;
             }
-            let bi = |i: usize| (g + i) * nb + b;
+            let bi = b * lanes + g;
             let (im, ii) = (s(self.inv_mass[b]), s(self.inv_inertia[b]));
             for e in 0..2 {
-                let si = |i: usize| ((g + i) * nb + b) * 2 + e;
-                let on = Mask::<W>(std::array::from_fn(|i| i < n && self.c_active[si(i)]))
+                let si = (b * 2 + e) * lanes + g;
+                let on = Mask::<W>(std::array::from_fn(|i| i < n && self.c_active[si + i]))
                     & *act;
                 if !on.any() {
                     continue;
                 }
-                let rx = ld::<W, _>(&self.c_rx, si, n);
-                let ry = ld::<W, _>(&self.c_ry, si, n);
+                let rx = ldc::<W>(&self.c_rx, si, n);
+                let ry = ldc::<W>(&self.c_ry, si, n);
                 // normal (y) impulse with accumulated clamp at 0
-                let vx0 = ld::<W, _>(&self.vel_x, bi, n);
-                let vy0 = ld::<W, _>(&self.vel_y, bi, n);
-                let om0 = ld::<W, _>(&self.omega, bi, n);
+                let vx0 = ldc::<W>(&self.vel_x, bi, n);
+                let vy0 = ldc::<W>(&self.vel_y, bi, n);
+                let om0 = ldc::<W>(&self.omega, bi, n);
                 let vn = vy0 + om0 * rx;
                 let k_n = im + ii * rx * rx;
                 let m1 = on & k_n.gt(zero);
                 let d_jn = -(vn - zero) / k_n; // − bias (always zero)
-                let old_n = ld::<W, _>(&self.c_jn, si, n);
+                let old_n = ldc::<W>(&self.c_jn, si, n);
                 let jn1 = (old_n + d_jn).max(zero);
                 let applied = jn1 - old_n;
-                st(&mut self.c_jn, si, &m1, jn1);
+                stc(&mut self.c_jn, si, &m1, jn1);
                 // apply_impulse((0, applied), r) — literal zero terms kept
-                st(&mut self.vel_x, bi, &m1, vx0 + zero * im);
-                st(&mut self.vel_y, bi, &m1, vy0 + applied * im);
-                st(&mut self.omega, bi, &m1, om0 + ii * (rx * applied - ry * zero));
+                stc(&mut self.vel_x, bi, &m1, vx0 + zero * im);
+                stc(&mut self.vel_y, bi, &m1, vy0 + applied * im);
+                stc(&mut self.omega, bi, &m1, om0 + ii * (rx * applied - ry * zero));
                 // tangent (x) friction clamped by μ·jn (reload: the
                 // normal impulse just changed the body velocity)
-                let vx2 = ld::<W, _>(&self.vel_x, bi, n);
-                let vy2 = ld::<W, _>(&self.vel_y, bi, n);
-                let om2 = ld::<W, _>(&self.omega, bi, n);
+                let vx2 = ldc::<W>(&self.vel_x, bi, n);
+                let vy2 = ldc::<W>(&self.vel_y, bi, n);
+                let om2 = ldc::<W>(&self.omega, bi, n);
                 let vt = vx2 + (-om2) * ry;
                 let k_t = im + ii * ry * ry;
                 let m2 = on & k_t.gt(zero);
                 let d_jt = -vt / k_t;
-                let max_f = s(FRICTION) * ld::<W, _>(&self.c_jn, si, n);
-                let old_t = ld::<W, _>(&self.c_jt, si, n);
+                let max_f = s(FRICTION) * ldc::<W>(&self.c_jn, si, n);
+                let old_t = ldc::<W>(&self.c_jt, si, n);
                 let jt1 = clamp_each(old_t + d_jt, -max_f, max_f);
                 let applied_t = jt1 - old_t;
-                st(&mut self.c_jt, si, &m2, jt1);
-                st(&mut self.vel_x, bi, &m2, vx2 + applied_t * im);
-                st(&mut self.vel_y, bi, &m2, vy2 + zero * im);
-                st(&mut self.omega, bi, &m2, om2 + ii * (rx * zero - ry * applied_t));
+                stc(&mut self.c_jt, si, &m2, jt1);
+                stc(&mut self.vel_x, bi, &m2, vx2 + applied_t * im);
+                stc(&mut self.vel_y, bi, &m2, vy2 + zero * im);
+                stc(&mut self.omega, bi, &m2, om2 + ii * (rx * zero - ry * applied_t));
             }
         }
     }
@@ -744,12 +784,12 @@ impl WorldBatch {
         j: usize,
         pc: &Mask<W>,
     ) -> F32s<W> {
-        let nb = self.nb;
+        let lanes = self.lanes;
         let s = F32s::<W>::splat;
         let zero = s(0.0);
         let (a, b) = (self.j_a[j], self.j_b[j]);
-        let ai = |i: usize| (g + i) * nb + a;
-        let bi = |i: usize| (g + i) * nb + b;
+        let ai = a * lanes + g;
+        let bi = b * lanes + g;
         let (ma, ia_inv) = (self.inv_mass[a], self.inv_inertia[a]);
         let (mb, ib_inv) = (self.inv_mass[b], self.inv_inertia[b]);
 
@@ -757,8 +797,8 @@ impl WorldBatch {
         if self.has_limit[j] {
             let inv_k = ia_inv + ib_inv;
             if inv_k > 0.0 {
-                let ang_a = ld::<W, _>(&self.angle, ai, n);
-                let ang_b = ld::<W, _>(&self.angle, bi, n);
+                let ang_a = ldc::<W>(&self.angle, ai, n);
+                let ang_b = ldc::<W>(&self.angle, bi, n);
                 let ang = ang_b - ang_a - s(self.ref_angle[j]);
                 let below = ang.lt(s(self.limit_lo[j]));
                 let above = ang.gt(s(self.limit_hi[j])) & !below;
@@ -769,16 +809,16 @@ impl WorldBatch {
                 let m = nonzero & *pc;
                 if m.any() {
                     let corr = (s(-JOINT_BETA) * viol).clamp(-0.2, 0.2) / s(inv_k);
-                    st(&mut self.angle, ai, &m, ang_a - s(ia_inv) * corr);
-                    st(&mut self.angle, bi, &m, ang_b + s(ib_inv) * corr);
+                    stc(&mut self.angle, ai, &m, ang_a - s(ia_inv) * corr);
+                    stc(&mut self.angle, bi, &m, ang_b + s(ib_inv) * corr);
                 }
             }
         }
 
         // point-to-point positional correction (fresh anchors from the
         // possibly-just-corrected angles)
-        let ang_a = ld::<W, _>(&self.angle, ai, n);
-        let ang_b = ld::<W, _>(&self.angle, bi, n);
+        let ang_a = ldc::<W>(&self.angle, ai, n);
+        let ang_b = ldc::<W>(&self.angle, bi, n);
         let (sa, ca) = sin_cos_w(ang_a);
         let (sb, cb) = sin_cos_w(ang_b);
         let (lax, lay) = (s(self.anchor_ax[j]), s(self.anchor_ay[j]));
@@ -787,10 +827,10 @@ impl WorldBatch {
         let ray = sa * lax + ca * lay;
         let rbx = cb * lbx - sb * lby;
         let rby = sb * lbx + cb * lby;
-        let pax = ld::<W, _>(&self.pos_x, ai, n);
-        let pay = ld::<W, _>(&self.pos_y, ai, n);
-        let pbx = ld::<W, _>(&self.pos_x, bi, n);
-        let pby = ld::<W, _>(&self.pos_y, bi, n);
+        let pax = ldc::<W>(&self.pos_x, ai, n);
+        let pay = ldc::<W>(&self.pos_y, ai, n);
+        let pbx = ldc::<W>(&self.pos_x, bi, n);
+        let pby = ldc::<W>(&self.pos_y, bi, n);
         let err_x = (pbx + rbx) - (pax + rax);
         let err_y = (pby + rby) - (pay + ray);
         let elen = (err_x * err_x + err_y * err_y).sqrt();
@@ -807,12 +847,12 @@ impl WorldBatch {
             cx = over.select_f32(cx * cscale, cx);
             cy = over.select_f32(cy * cscale, cy);
             let (px, py) = solve22_w(k11, k12, k22, -cx, -cy);
-            st(&mut self.pos_x, ai, &m, pax + px * s(-ma));
-            st(&mut self.pos_y, ai, &m, pay + py * s(-ma));
-            st(&mut self.angle, ai, &m, ang_a - s(ia_inv) * (rax * py - ray * px));
-            st(&mut self.pos_x, bi, &m, pbx + px * s(mb));
-            st(&mut self.pos_y, bi, &m, pby + py * s(mb));
-            st(&mut self.angle, bi, &m, ang_b + s(ib_inv) * (rbx * py - rby * px));
+            stc(&mut self.pos_x, ai, &m, pax + px * s(-ma));
+            stc(&mut self.pos_y, ai, &m, pay + py * s(-ma));
+            stc(&mut self.angle, ai, &m, ang_a - s(ia_inv) * (rax * py - ray * px));
+            stc(&mut self.pos_x, bi, &m, pbx + px * s(mb));
+            stc(&mut self.pos_y, bi, &m, pby + py * s(mb));
+            stc(&mut self.angle, bi, &m, ang_b + s(ib_inv) * (rbx * py - rby * px));
         }
         pc.select_f32(elen, zero)
     }
@@ -822,6 +862,7 @@ impl WorldBatch {
     /// endpoints measured from the pre-iteration body snapshot, updates
     /// applied incrementally, as the AoS code does).
     fn contact_position_pass<const W: usize>(&mut self, g: usize, n: usize, pc: &Mask<W>) {
+        let lanes = self.lanes;
         let nb = self.nb;
         let s = F32s::<W>::splat;
         let zero = s(0.0);
@@ -829,14 +870,14 @@ impl WorldBatch {
             if self.inv_mass[b] <= 0.0 {
                 continue;
             }
-            let bi = |i: usize| (g + i) * nb + b;
+            let bi = b * lanes + g;
             let (im, ii) = (s(self.inv_mass[b]), s(self.inv_inertia[b]));
             // snapshot for both endpoints (the AoS loop captures
             // endpoints/pos once per body, before its two corrections)
-            let ang0 = ld::<W, _>(&self.angle, bi, n);
+            let ang0 = ldc::<W>(&self.angle, bi, n);
             let (sn, cs) = sin_cos_w(ang0);
-            let px0 = ld::<W, _>(&self.pos_x, bi, n);
-            let py0 = ld::<W, _>(&self.pos_y, bi, n);
+            let px0 = ldc::<W>(&self.pos_x, bi, n);
+            let py0 = ldc::<W>(&self.pos_y, bi, n);
             for e in 0..2 {
                 let lx = s(if e == 0 { -self.half_len[b] } else { self.half_len[b] });
                 let ex = px0 + (cs * lx - sn * zero);
@@ -851,10 +892,10 @@ impl WorldBatch {
                 let k_n = im + ii * rx * rx;
                 let m = m0 & k_n.gt(zero);
                 let mag = (s(BETA) * (depth - s(SLOP))).min(s(0.2)) / k_n;
-                let py_cur = ld::<W, _>(&self.pos_y, bi, n);
-                let an_cur = ld::<W, _>(&self.angle, bi, n);
-                st(&mut self.pos_y, bi, &m, py_cur + mag * im);
-                st(&mut self.angle, bi, &m, an_cur + ii * (rx * mag - ry * zero));
+                let py_cur = ldc::<W>(&self.pos_y, bi, n);
+                let an_cur = ldc::<W>(&self.angle, bi, n);
+                stc(&mut self.pos_y, bi, &m, py_cur + mag * im);
+                stc(&mut self.angle, bi, &m, an_cur + ii * (rx * mag - ry * zero));
             }
         }
     }
@@ -869,7 +910,9 @@ mod tests {
     /// Step an AoS `World` and a width-1 `WorldBatch` lane in lock-step
     /// and demand **bitwise** body-state equality every substep — the
     /// in-crate half of the refactor's parity pin (the integration half
-    /// lives in `tests/mujoco_batch_parity.rs`).
+    /// lives in `tests/mujoco_batch_parity.rs`). With one lane the
+    /// body-major index degenerates to `body`, so plain `[b]` reads are
+    /// still valid here.
     fn check_width1_vs_world(model: crate::envs::mujoco::models::Model, steps: usize, seed: u64) {
         let mut world = model.world.clone();
         let mut batch = WorldBatch::from_world(&model.world, 1);
@@ -913,14 +956,21 @@ mod tests {
         let adim = m.world.actuated().len();
         // capture lane 1's state, step with lane 1 masked
         let nb = batch.num_bodies();
-        let before: Vec<f32> = (0..nb).map(|b| batch.pos_y[nb + b]).collect();
+        let before: Vec<f32> = (0..nb).map(|b| batch.pos_y[batch.body_index(1, b)]).collect();
         let ctrl = vec![0.3f32; 3 * adim];
         batch.step(DT, &ctrl, adim, &[0, 1, 0], 4);
         for b in 0..nb {
-            assert_eq!(before[b].to_bits(), batch.pos_y[nb + b].to_bits(), "masked lane moved");
+            assert_eq!(
+                before[b].to_bits(),
+                batch.pos_y[batch.body_index(1, b)].to_bits(),
+                "masked lane moved"
+            );
         }
         // unmasked lanes did move (gravity acted)
-        assert!(batch.vel_y[0] < 0.0 || batch.pos_y[m.torso] != batch.init_pos_y[m.torso]);
+        assert!(
+            batch.vel_y[batch.body_index(0, 0)] < 0.0
+                || batch.pos_y[batch.body_index(0, m.torso)] != batch.init_pos_y[m.torso]
+        );
     }
 
     #[test]
@@ -981,19 +1031,86 @@ mod tests {
         for _ in 0..40 {
             batch.step(DT, &ctrl, adim, &skip, 1);
         }
-        assert!(batch.pos_x[m.torso] != batch.init_pos_x[m.torso]);
+        assert!(batch.pos_x[batch.body_index(0, m.torso)] != batch.init_pos_x[m.torso]);
         batch.reset_lane(0);
         let nb = batch.num_bodies();
         for b in 0..nb {
-            assert_eq!(batch.pos_x[b], batch.init_pos_x[b]);
-            assert_eq!(batch.vel_x[b], batch.init_vel_x[b]);
+            assert_eq!(batch.pos_x[batch.body_index(0, b)], batch.init_pos_x[b]);
+            assert_eq!(batch.vel_x[batch.body_index(0, b)], batch.init_vel_x[b]);
         }
         // lane 1 untouched by lane 0's reset
-        assert!(batch.pos_x[nb + m.torso] != batch.init_pos_x[m.torso]);
-        // solver caches cleared
-        assert!(batch.c_active[..nb * 2].iter().all(|&a| !a));
-        assert!(batch.jimp_x[..batch.nj].iter().all(|&x| x == 0.0));
+        assert!(batch.pos_x[batch.body_index(1, m.torso)] != batch.init_pos_x[m.torso]);
+        // solver caches cleared — lane 0's slots stride by `lanes` under
+        // the body-major layout
+        assert!((0..nb * 2).all(|slot| !batch.c_active[slot * 2]));
+        assert!((0..batch.nj).all(|j| batch.jimp_x[j * 2] == 0.0));
         assert!(batch.kinetic_energy(0).is_finite());
         assert!(batch.max_penetration(0) <= SLOP + 1e-6);
+    }
+
+    #[test]
+    fn body_major_template_replication_roundtrip() {
+        // from_world must interleave the template body-major: every
+        // body's value occupies a contiguous run of `lanes` slots, and
+        // body_index(lane, body) addresses it.
+        let m = models::hopper();
+        let lanes = 5;
+        let batch = WorldBatch::from_world(&m.world, lanes);
+        let nb = batch.num_bodies();
+        assert_eq!(batch.pos_x.len(), nb * lanes);
+        for b in 0..nb {
+            for l in 0..lanes {
+                let i = batch.body_index(l, b);
+                assert_eq!(i, b * lanes + l, "body-major index shape");
+                assert_eq!(batch.pos_x[i].to_bits(), batch.init_pos_x[b].to_bits());
+                assert_eq!(batch.pos_y[i].to_bits(), batch.init_pos_y[b].to_bits());
+                assert_eq!(batch.angle[i].to_bits(), batch.init_angle[b].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn reset_and_noise_touch_only_their_lane() {
+        // Strided reset/noise under the body-major layout must leave
+        // every other lane bitwise untouched — including solver caches.
+        let m = models::half_cheetah();
+        let lanes = 3;
+        let mut batch = WorldBatch::from_world(&m.world, lanes);
+        let adim = m.world.actuated().len();
+        let skip = vec![0u8; lanes];
+        let ctrl = vec![0.7f32; lanes * adim];
+        for _ in 0..25 {
+            batch.step(DT, &ctrl, adim, &skip, 4);
+        }
+        let snap = batch.clone();
+        let mut rng = Pcg32::new(5, 2);
+        batch.reset_lane(1);
+        batch.apply_reset_noise(1, &mut rng);
+        let nb = batch.num_bodies();
+        for l in [0usize, 2] {
+            for b in 0..nb {
+                let i = batch.body_index(l, b);
+                assert_eq!(snap.pos_x[i].to_bits(), batch.pos_x[i].to_bits(), "l={l} b={b}");
+                assert_eq!(snap.vel_y[i].to_bits(), batch.vel_y[i].to_bits(), "l={l} b={b}");
+                assert_eq!(snap.omega[i].to_bits(), batch.omega[i].to_bits(), "l={l} b={b}");
+            }
+            for j in 0..batch.nj {
+                let i = j * lanes + l;
+                assert_eq!(snap.jimp_x[i].to_bits(), batch.jimp_x[i].to_bits(), "l={l} j={j}");
+                assert_eq!(snap.jlimit_state[i], batch.jlimit_state[i], "l={l} j={j}");
+            }
+            for slot in 0..nb * 2 {
+                let i = slot * lanes + l;
+                assert_eq!(snap.c_active[i], batch.c_active[i], "l={l} slot={slot}");
+                assert_eq!(snap.c_jn[i].to_bits(), batch.c_jn[i].to_bits(), "l={l} slot={slot}");
+            }
+        }
+        // lane 1 really was reset (solver caches cleared)
+        for j in 0..batch.nj {
+            assert_eq!(batch.jimp_x[j * lanes + 1], 0.0);
+        }
+        for slot in 0..nb * 2 {
+            assert!(!batch.c_active[slot * lanes + 1]);
+        }
     }
 }

@@ -1,39 +1,61 @@
 //! Batched Atari kernel: steps a chunk of emulator lanes in one call
-//! and runs the DQN preprocessing per lane straight into [`ObsArena`]
-//! rows.
+//! and runs the DQN preprocessing as a lane-streaming **SoA pass**
+//! straight into [`ObsArena`] rows.
 //!
 //! CuLE's observation is that the win for Atari comes from batching the
 //! *simulator loop itself* — emulator ticks plus preprocessing — not
-//! just the transport. [`AtariVec`] owns a lane of `(game, preproc)`
-//! pairs and serves a whole chunk per dispatch: one task dequeue, one
-//! wakeup, and one virtual call cover `K` envs' frameskip loops, and
-//! each lane's stacked `(4, 84, 84)` observation is written directly
-//! into its final destination row (a state-queue slot on the pool path
-//! — no intermediate frame buffer is ever materialized per step).
+//! just the transport. [`AtariVec`] owns the lanes' games plus one
+//! **contiguous pixel slab** (all native frames and stack rings packed
+//! lane-major) and serves a whole chunk per dispatch in three phases:
+//!
+//! 1. **Emulate** (scalar per lane — data-dependent control flow):
+//!    frameskip ticks + native renders via
+//!    [`PreprocCore::step_emulate`], recording an [`EmulatePhase`] per
+//!    lane in a preallocated scratch row (no per-step allocation).
+//! 2. **Pixel pass** (pure lane math, contiguous): 2-frame max-pool,
+//!    2×2 max downsample and stack push for every lane back-to-back
+//!    via [`PreprocCore::step_finish`] — the slab keeps the pass
+//!    streaming through memory with no emulator work interleaved.
+//! 3. **Readout**: [`PreprocCore::write_obs`] per lane into its final
+//!    destination row (a state-queue slot on the pool path — no
+//!    intermediate buffer is ever materialized per step).
 //!
 //! Preprocessing semantics live in one place —
-//! [`PreprocState`](crate::envs::atari::preproc) — shared verbatim with
+//! [`PreprocCore`](crate::envs::atari::preproc) — shared verbatim with
 //! the scalar [`AtariEnv`](crate::envs::atari::AtariEnv), so this path
 //! is **bitwise identical** to stepping `K` scalar envs (pinned by
-//! `tests/vector_parity.rs`).
+//! `tests/vector_parity.rs` and the in-file tests). Deferring a lane's
+//! pixel phase behind other lanes' emulator phases is safe because the
+//! phases share no state: the emulate phase never reads the stack and
+//! the pixel phase never touches the game.
 
 use super::{ObsArena, VecEnv};
 use crate::envs::atari::game::Game;
-use crate::envs::atari::preproc::{spec_for, PreprocState};
-use crate::envs::atari::{breakout::Breakout, pong::Pong};
+use crate::envs::atari::preproc::{spec_for, EmulatePhase, PreprocCore};
+use crate::envs::atari::{breakout::Breakout, pong::Pong, NATIVE, SCREEN, STACK};
 use crate::envs::env::Step;
 use crate::envs::spec::EnvSpec;
 
-/// One emulator lane: game state + its preprocessing state machine.
-struct Lane<G: Game> {
-    game: G,
-    st: PreprocState,
-}
+/// Bytes of one native frame plane.
+const FRAME: usize = NATIVE * NATIVE;
+/// Floats of one lane's stack ring.
+const RING: usize = STACK * SCREEN * SCREEN;
 
-/// SoA-of-lanes Atari batch: `K` games stepped per dispatch.
+/// SoA-of-lanes Atari batch: `K` games stepped per dispatch, pixel
+/// state packed into contiguous lane-major slabs.
 pub struct AtariVec<G: Game> {
     spec: EnvSpec,
-    lanes: Vec<Lane<G>>,
+    games: Vec<G>,
+    ctl: Vec<PreprocCore>,
+    /// `[K, NATIVE²]` newest native frames (pooled in place).
+    frames_a: Vec<u8>,
+    /// `[K, NATIVE²]` previous native frames (flicker pool partner).
+    frames_b: Vec<u8>,
+    /// `[K, STACK·SCREEN²]` stack rings.
+    stacks: Vec<f32>,
+    /// Per-dispatch emulate-phase results (`None` marks a reset lane);
+    /// preallocated so `step_batch` never allocates.
+    phases: Vec<Option<EmulatePhase>>,
 }
 
 impl<G: Game> AtariVec<G> {
@@ -47,21 +69,31 @@ impl<G: Game> AtariVec<G> {
         count: usize,
         episodic_life: bool,
     ) -> Self {
-        let lanes: Vec<Lane<G>> = (0..count)
-            .map(|l| {
-                let game = make();
-                let mut st = PreprocState::new(game.n_actions(), seed, first_env_id + l as u64);
-                st.set_episodic_life(episodic_life);
-                Lane { game, st }
+        let games: Vec<G> = (0..count).map(|_| make()).collect();
+        let ctl: Vec<PreprocCore> = games
+            .iter()
+            .enumerate()
+            .map(|(l, game)| {
+                let mut c = PreprocCore::new(game.n_actions(), seed, first_env_id + l as u64);
+                c.set_episodic_life(episodic_life);
+                c
             })
             .collect();
         // Derive the spec from lane 0 (a probe instance only for the
         // degenerate empty batch).
-        let spec = match lanes.first() {
-            Some(l) => spec_for(&l.game),
+        let spec = match games.first() {
+            Some(g) => spec_for(g),
             None => spec_for(&make()),
         };
-        AtariVec { spec, lanes }
+        AtariVec {
+            spec,
+            games,
+            ctl,
+            frames_a: vec![0; count * FRAME],
+            frames_b: vec![0; count * FRAME],
+            stacks: vec![0.0; count * RING],
+            phases: vec![None; count],
+        }
     }
 }
 
@@ -81,13 +113,14 @@ impl<G: Game> VecEnv for AtariVec<G> {
     }
 
     fn num_envs(&self) -> usize {
-        self.lanes.len()
+        self.games.len()
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
-        let l = &mut self.lanes[lane];
-        l.st.reset(&mut l.game);
-        l.st.write_obs(obs);
+        let fa = &mut self.frames_a[lane * FRAME..(lane + 1) * FRAME];
+        let stack = &mut self.stacks[lane * RING..(lane + 1) * RING];
+        self.ctl[lane].reset(&mut self.games[lane], fa, stack);
+        self.ctl[lane].write_obs(stack, obs);
     }
 
     fn step_batch(
@@ -97,19 +130,47 @@ impl<G: Game> VecEnv for AtariVec<G> {
         arena: &mut dyn ObsArena,
         out: &mut [Step],
     ) {
-        let k = self.lanes.len();
+        let k = self.games.len();
         debug_assert_eq!(actions.len(), k);
         debug_assert_eq!(reset_mask.len(), k);
         debug_assert_eq!(out.len(), k);
-        for (lane, l) in self.lanes.iter_mut().enumerate() {
-            if reset_mask[lane] != 0 {
-                l.st.reset(&mut l.game);
-                l.st.write_obs(arena.row(lane));
-                out[lane] = Step::default();
+
+        // Phase 1 — emulator lanes (scalar): ticks + native renders.
+        for lane in 0..k {
+            let fa = &mut self.frames_a[lane * FRAME..(lane + 1) * FRAME];
+            self.phases[lane] = if reset_mask[lane] != 0 {
+                self.ctl[lane].reset_emulate(&mut self.games[lane], fa);
+                None
             } else {
-                out[lane] = l.st.step(&mut l.game, &actions[lane..lane + 1]);
-                l.st.write_obs(arena.row(lane));
-            }
+                let fb = &mut self.frames_b[lane * FRAME..(lane + 1) * FRAME];
+                Some(self.ctl[lane].step_emulate(
+                    &mut self.games[lane],
+                    &actions[lane..lane + 1],
+                    fa,
+                    fb,
+                ))
+            };
+        }
+
+        // Phase 2 — SoA pixel pass: max-pool + downsample + stack push,
+        // streaming through the contiguous slabs.
+        for lane in 0..k {
+            let fa = &mut self.frames_a[lane * FRAME..(lane + 1) * FRAME];
+            let fb = &self.frames_b[lane * FRAME..(lane + 1) * FRAME];
+            let stack = &mut self.stacks[lane * RING..(lane + 1) * RING];
+            out[lane] = match self.phases[lane] {
+                None => {
+                    self.ctl[lane].reset_finish(fa, stack);
+                    Step::default()
+                }
+                Some(ph) => self.ctl[lane].step_finish(fa, fb, stack, ph),
+            };
+        }
+
+        // Phase 3 — stacked readout into the destination rows.
+        for lane in 0..k {
+            let stack = &self.stacks[lane * RING..(lane + 1) * RING];
+            self.ctl[lane].write_obs(stack, arena.row(lane));
         }
     }
 }
@@ -152,6 +213,47 @@ mod tests {
     }
 
     #[test]
+    fn masked_reset_lanes_match_scalar_resets_bitwise() {
+        // The phased slab path must keep reset lanes (emulate-half +
+        // pixel-half split across the batch phases) bitwise identical
+        // to scalar resets, while the other lanes keep stepping.
+        let seed = 14;
+        let n = 3;
+        let mut vec_env = pong_vec(seed, 0, n);
+        let dim = vec_env.spec().obs_dim();
+        let mut scalars: Vec<_> = (0..n).map(|i| preproc::pong(seed, i as u64)).collect();
+        let mut vobs = vec![0.0f32; n * dim];
+        let mut sobs = vec![0.0f32; dim];
+        for (l, env) in scalars.iter_mut().enumerate() {
+            vec_env.reset_lane(l, &mut vobs[l * dim..(l + 1) * dim]);
+            env.reset(&mut sobs);
+        }
+        let mut results = vec![Step::default(); n];
+        for t in 0..20 {
+            // Rotate a reset through the lanes every third step.
+            let mut mask = vec![0u8; n];
+            if t % 3 == 2 {
+                mask[t % n] = 1;
+            }
+            let actions: Vec<f32> = (0..n).map(|l| ((t + 2 * l) % 6) as f32).collect();
+            {
+                let mut arena = SliceArena::new(&mut vobs, dim);
+                vec_env.step_batch(&actions, &mask, &mut arena, &mut results);
+            }
+            for (l, env) in scalars.iter_mut().enumerate() {
+                if mask[l] != 0 {
+                    env.reset(&mut sobs);
+                    assert_eq!(results[l], Step::default(), "step {t} lane {l}");
+                } else {
+                    let s = env.step(&actions[l..l + 1], &mut sobs);
+                    assert_eq!(results[l], s, "step {t} lane {l}");
+                }
+                assert_eq!(&vobs[l * dim..(l + 1) * dim], &sobs[..], "obs {t} lane {l}");
+            }
+        }
+    }
+
+    #[test]
     fn breakout_vec_carries_episodic_life() {
         // Spam FIRE on one lane until a life is lost: the vec path must
         // report done with the game not over, exactly like the scalar
@@ -168,7 +270,7 @@ mod tests {
                 v.step_batch(&[1.0], &mask, &mut arena, &mut results);
             }
             if results[0].done {
-                assert!(v.lanes[0].game.lives() > 0, "episodic life ends before game over");
+                assert!(v.games[0].lives() > 0, "episodic life ends before game over");
                 return;
             }
             mask[0] = results[0].finished() as u8;

@@ -58,10 +58,14 @@
 //! classic-control carve-out: every registered task has a real kernel.
 //! [`WalkerVec`] keeps MuJoCo body/joint/contact state batch-resident
 //! in a shared [`WorldBatch`](crate::envs::mujoco::WorldBatch) core
-//! (the scalar walker env is a width-1 view over the same kernel),
-//! [`AtariVec`] steps emulator lanes in one call with preprocessing
-//! shared verbatim with the scalar env, and [`CheetahRunVec`] layers
-//! the dm_control reward shaping batch-wise. [`ScalarVec`] — a chunk of
+//! (the scalar walker env is a width-1 view over the same kernel;
+//! since the body-major rewrite every solver lane group is one
+//! contiguous slice of the batch state), [`AtariVec`] steps emulator
+//! lanes in one call with all pixel state packed into contiguous
+//! lane-major slabs — the pure preprocessing math runs as a separate
+//! SoA pass over the slabs, sharing `PreprocCore` verbatim with the
+//! scalar env — and [`CheetahRunVec`] layers the dm_control reward
+//! shaping batch-wise. [`ScalarVec`] — a chunk of
 //! boxed scalar envs behind this interface — remains as an *explicit
 //! opt-in* for out-of-registry envs; `registry::make_vec_env` never
 //! falls back to it. Wrappers compose batch-wise through

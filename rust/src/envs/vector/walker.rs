@@ -6,7 +6,9 @@
 //! *All* mutable physics state — body qpos/qvel lanes, joint warm-start
 //! impulses, contact caches — lives in the batch-resident
 //! [`WorldBatch`](crate::envs::mujoco::WorldBatch) core, indexed
-//! `[lane * num_bodies + body]`. This kernel owns the task layer on
+//! **body-major** (`[body * lanes + lane]`, via
+//! `WorldBatch::body_index`), so a lane group of any body attribute is
+//! one contiguous slice. This kernel owns the task layer on
 //! top: reward, healthy checks, truncation and observation extraction
 //! run as batch passes over the batch's contiguous lanes, using static
 //! per-joint metadata captured once from the prototype model (all lanes
@@ -62,8 +64,6 @@ pub struct WalkerVec {
     /// Per actuated joint: `(body_a, body_b, ref_angle)` — the static
     /// metadata that lets observation extraction run on SoA lanes only.
     jmeta: Vec<(usize, usize, f32)>,
-    /// Bodies per lane.
-    nb: usize,
     rng: Vec<Pcg32>,
     steps: Vec<u32>,
     /// Batch-resident solver state: body lanes + joint/contact warm
@@ -82,7 +82,6 @@ impl WalkerVec {
         let proto = task.build();
         let actuated = proto.world.actuated();
         let n = actuated.len();
-        let nb = proto.world.bodies.len();
         let jmeta = actuated
             .iter()
             .map(|&ji| {
@@ -94,7 +93,6 @@ impl WalkerVec {
             spec: walker::spec_for_task(task, n),
             actuated,
             jmeta,
-            nb,
             rng: (0..count).map(|l| walker::make_rng(seed, first_env_id + l as u64)).collect(),
             steps: vec![0; count],
             batch: WorldBatch::from_world(&proto.world, count),
@@ -117,7 +115,7 @@ impl WalkerVec {
     /// Healthy test on the SoA lanes — same predicate (and evaluation
     /// order) as the pre-refactor scalar env's `healthy()`.
     fn lane_healthy(&self, lane: usize) -> bool {
-        let t = lane * self.nb + self.proto.torso;
+        let t = self.batch.body_index(lane, self.proto.torso);
         if let Some((lo, hi)) = self.proto.healthy_z {
             if self.batch.pos_y[t] < lo || self.batch.pos_y[t] > hi {
                 return false;
@@ -134,19 +132,19 @@ impl WalkerVec {
     /// Write lane `lane`'s observation from the SoA lanes (the scalar
     /// env's layout: `[z, angle, q.., vx, vz, omega, qd..]`).
     fn write_obs_lane(&self, lane: usize, obs: &mut [f32]) {
-        let base = lane * self.nb;
-        let t = base + self.proto.torso;
+        let bi = |b: usize| self.batch.body_index(lane, b);
+        let t = bi(self.proto.torso);
         let n = self.actuated.len();
         obs[0] = self.batch.pos_y[t];
         obs[1] = self.batch.angle[t] - self.proto.init_angle;
         for (k, &(a, b, ref_angle)) in self.jmeta.iter().enumerate() {
-            obs[2 + k] = self.batch.angle[base + b] - self.batch.angle[base + a] - ref_angle;
+            obs[2 + k] = self.batch.angle[bi(b)] - self.batch.angle[bi(a)] - ref_angle;
         }
         obs[2 + n] = self.batch.vel_x[t];
         obs[3 + n] = self.batch.vel_y[t];
         obs[4 + n] = self.batch.omega[t];
         for (k, &(a, b, _)) in self.jmeta.iter().enumerate() {
-            obs[5 + n + k] = self.batch.omega[base + b] - self.batch.omega[base + a];
+            obs[5 + n + k] = self.batch.omega[bi(b)] - self.batch.omega[bi(a)];
         }
     }
 }
@@ -168,21 +166,16 @@ impl WalkerVec {
     ) {
         let k = self.num_envs();
         let adim = self.actuated.len();
-        let nb = self.nb;
         let torso = self.proto.torso;
+        let tb = self.batch.body_index(0, torso);
         let s = F32s::<W>::splat;
         let mut g = 0;
         while g < k {
             let n = W.min(k - g);
-            // Gathers (stride nb) — reset/tail lanes ride along, their
+            // Body-major layout: each torso attribute for the group is
+            // one contiguous slice — reset/tail lanes ride along, their
             // results are discarded by the masked store below.
-            let x_after = F32s::<W>::from_fn(|i| {
-                if i < n {
-                    self.batch.pos_x[(g + i) * nb + torso]
-                } else {
-                    0.0
-                }
-            });
+            let x_after = F32s::<W>::load_or(&self.batch.pos_x[tb + g..tb + g + n], 0.0);
             let x_before = F32s::<W>::load_or(&self.x_before[g..g + n], 0.0);
             let forward = (x_after - x_before) / s(DT * FRAME_SKIP as f32);
             let mut ctrl = s(0.0);
@@ -200,23 +193,11 @@ impl WalkerVec {
             // `lane_healthy`, lane-wise.
             let mut healthy = Mask([true; W]);
             if let Some((lo, hi)) = self.proto.healthy_z {
-                let y = F32s::<W>::from_fn(|i| {
-                    if i < n {
-                        self.batch.pos_y[(g + i) * nb + torso]
-                    } else {
-                        0.0
-                    }
-                });
+                let y = F32s::<W>::load_or(&self.batch.pos_y[tb + g..tb + g + n], 0.0);
                 healthy = healthy & !(y.lt(s(lo)) | y.gt(s(hi)));
             }
             if let Some(dev) = self.proto.healthy_angle_dev {
-                let a = F32s::<W>::from_fn(|i| {
-                    if i < n {
-                        self.batch.angle[(g + i) * nb + torso]
-                    } else {
-                        0.0
-                    }
-                });
+                let a = F32s::<W>::load_or(&self.batch.angle[tb + g..tb + g + n], 0.0);
                 healthy = healthy & !(a - s(self.proto.init_angle)).abs().gt(s(dev));
             }
             let bad =
@@ -278,7 +259,7 @@ impl VecEnv for WalkerVec {
                 self.reset_lane(lane, arena.row(lane));
                 out[lane] = Step::default();
             } else {
-                self.x_before[lane] = self.batch.pos_x[lane * self.nb + self.proto.torso];
+                self.x_before[lane] = self.batch.pos_x[self.batch.body_index(lane, self.proto.torso)];
                 self.steps[lane] += 1;
             }
         }
@@ -297,7 +278,7 @@ impl VecEnv for WalkerVec {
                     if reset_mask[lane] != 0 {
                         continue;
                     }
-                    let x_after = self.batch.pos_x[lane * self.nb + self.proto.torso];
+                    let x_after = self.batch.pos_x[self.batch.body_index(lane, self.proto.torso)];
                     let forward = (x_after - self.x_before[lane]) / (DT * FRAME_SKIP as f32);
                     let act = &actions[lane * adim..(lane + 1) * adim];
                     let ctrl: f32 = act.iter().map(|a| a * a).sum();

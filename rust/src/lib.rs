@@ -61,18 +61,25 @@
 //! in the same order as the scalar code (`tests/simd_parity.rs`
 //! asserts 0 ULP per step, including masked tails and mid-batch
 //! resets). The MuJoCo walkers are **batch-resident**: body state,
-//! joint warm starts and contact caches live in SoA lanes inside
-//! [`envs::mujoco::WorldBatch`] and the sequential-impulse solver
-//! itself runs lane-grouped; width 1 is bitwise with the pre-batch
+//! joint warm starts and contact caches live in **body-major**
+//! (`[body * lanes + lane]`) SoA lanes inside
+//! [`envs::mujoco::WorldBatch`], so every lane-group load/store in the
+//! lane-grouped sequential-impulse solver is one contiguous slice read
+//! instead of a strided gather; width 1 is bitwise with the pre-batch
 //! scalar path (the scalar env *is* a width-1 view), widths 4/8 follow
 //! a **documented, asserted tolerance budget**
-//! (`tests/mujoco_batch_parity.rs`).
+//! (`tests/mujoco_batch_parity.rs`). Atari preprocessing is
+//! **slab-resident**: [`envs::vector::AtariVec`] packs all lanes'
+//! native frames and stack rings contiguously and runs the pure pixel
+//! math (2-frame max-pool, 2×2 downsample, stack push, readout) as a
+//! lane-streaming SoA pass after the scalar emulator phase — bitwise
+//! identical to the per-env path (shared `PreprocCore`).
 //!
 //! | env family | `ExecMode::Scalar` | SoA kernel | SIMD lane pass | parity |
 //! |---|---|---|---|---|
 //! | classic control (4 tasks) | per-env tasks | `CartPoleVec`, ... (shared `SoaKernel` driver) | full dynamics (incl. RK4 / trig) | bitwise at every width |
-//! | MuJoCo walkers (`Hopper/HalfCheetah/Ant-v4`) | per-env tasks (each a width-1 `WorldBatch` view) | `WalkerVec` over batch-resident `WorldBatch` (body/joint/contact lanes) | full constraint solver (masked lane groups) + batch task pass | bitwise at width 1; asserted tolerance budget at 4/8 |
-//! | Atari (`Pong/Breakout-v5`) | per-env tasks | `AtariVec` (batched emulator lanes, shared preproc) | — (emulator-bound) | bitwise |
+//! | MuJoCo walkers (`Hopper/HalfCheetah/Ant-v4`) | per-env tasks (each a width-1 `WorldBatch` view) | `WalkerVec` over batch-resident, body-major `WorldBatch` (contiguous body/joint/contact lane groups) | full constraint solver (masked lane groups) + batch task pass | bitwise at width 1; asserted tolerance budget at 4/8 |
+//! | Atari (`Pong/Breakout-v5`) | per-env tasks | `AtariVec` (scalar emulator lanes + contiguous pixel slab, SoA preproc pass, shared `PreprocCore`) | — (emulator-bound) | bitwise |
 //! | dm_control (`cheetah_run`) | per-env tasks (width-1 view) | `CheetahRunVec` (shaping over `WalkerVec`) | inherits `WalkerVec` | bitwise at width 1; tolerance budget at 4/8 |
 //! | wrappers (`TimeLimit`/`RewardClip`/`NormalizeObs`) | one-lane adapters | batch-wise `VecWrapper` layer (forwards `set_lane_pass`) | — | bitwise (shared cores) |
 //!
@@ -107,19 +114,23 @@
 //! `auto`, the default, picks PJRT when present and falls back to
 //! native, so the trainer never degrades to "skip"). The native
 //! backend has two precisions (`--precision {f64,f32}`): `f64` is the
-//! scalar reference (finite-difference-provable), `f32` the SIMD GEMV
-//! fast path — f32 compute weights mirrored from **f64 master
-//! weights**, re-demoted after every Adam step, with the PPO head math
-//! still in f64 so both precisions share every branch decision.
-//! Documented f32-vs-f64 budget (asserted by `runtime::native` tests):
-//! loss/entropy within 1e-4 relative, per-element gradients within
-//! `1e-4 + 1e-2·|g|` on identical minibatches; FD gradient checks
-//! re-run under f32; reruns are bit-exact.
+//! scalar reference (finite-difference-provable), `f32` the SIMD fast
+//! path — f32 compute weights mirrored from **f64 master weights**
+//! (plus transposed GEMM layouts), re-demoted after every Adam step,
+//! with the PPO head math still in f64 so both precisions share every
+//! branch decision. The f32 forward runs the cache-blocked
+//! transposed-weights GEMM ([`simd::gemm_bt_f32`], per-element
+//! reassociation budget vs the sequential GEMV) and the deterministic
+//! `tanh` twin ([`simd::math::tanh_f32`], ≤ 2 ULP vs demoted f64
+//! libm). Documented f32-vs-f64 budget (asserted by `runtime::native`
+//! tests): loss/entropy within 1e-4 relative, per-element gradients
+//! within `1e-4 + 1e-2·|g|` on identical minibatches; FD gradient
+//! checks re-run under f32; reruns are bit-exact.
 //!
 //! | capability | `pjrt` (AOT artifacts) | `native` `--precision f64` | `native` `--precision f32` |
 //! |---|---|---|---|
-//! | policy forward (logits / mu+log_std, value) | compiled HLO via PJRT | f64 MLP, 2×Tanh trunk ([`runtime::NativeNet`]) | f32 SIMD GEMV mirror |
-//! | PPO update (clip + value + entropy) | compiled train step | analytic backprop + grad-norm clip + Adam | f32 SIMD fwd/bwd GEMMs, f64 head + Adam on master weights |
+//! | policy forward (logits / mu+log_std, value) | compiled HLO via PJRT | f64 MLP, 2×Tanh trunk ([`runtime::NativeNet`]) | f32 blocked transposed-weights GEMM + `tanh` lane twin |
+//! | PPO update (clip + value + entropy) | compiled train step | analytic backprop + grad-norm clip + Adam | f32 blocked-GEMM fwd / SIMD bwd, f64 head + Adam on master weights |
 //! | GAE | compiled scan kernel (Pallas-lowerable) | [`agent::gae::gae_ref`] | [`agent::gae::gae_ref`] |
 //! | requirements | real `xla` bindings + `make artifacts` | none — the crate alone | none — the crate alone |
 //! | shapes/schedule source | artifact manifest | [`config::TrainConfig`] | [`config::TrainConfig`] |

@@ -155,8 +155,10 @@ pub struct EnvPool {
     cfg: PoolConfig,
     states: Arc<StateBufferQueue>,
     engine: Engine,
-    /// Reusable output block for the owned-recv convenience API.
-    scratch: BatchedTransition,
+    /// Reusable output block for the borrowed-recv convenience API
+    /// (behind a mutex so [`EnvPool::recv`] can take `&self` and return
+    /// a guard without freezing the pool for `send`).
+    scratch: Mutex<BatchedTransition>,
     started: bool,
 }
 
@@ -244,7 +246,7 @@ impl EnvPool {
                 Engine::Chunked { pool: Some(pool) }
             }
         };
-        let scratch = states.make_output();
+        let scratch = Mutex::new(states.make_output());
         Ok(EnvPool { spec, cfg, states, engine, scratch, started: false })
     }
 
@@ -346,13 +348,19 @@ impl EnvPool {
         self.states.recv_into_timeout(out, d)
     }
 
-    /// Convenience receive returning a clone of the internal scratch
-    /// buffer (allocates; use [`Self::recv_into`] on hot paths).
-    pub fn recv(&mut self) -> Result<BatchedTransition> {
-        let mut out = std::mem::take(&mut self.scratch);
-        self.states.recv_into(&mut out)?;
-        self.scratch = out.clone();
-        Ok(out)
+    /// Convenience receive returning a **view** of the pool's internal
+    /// scratch buffer. Steady state allocates and copies nothing: the
+    /// scratch rotates with the state queue's preallocated block
+    /// payloads via [`Self::recv_into`]'s buffer swap (it used to clone
+    /// the whole batch back into the scratch on every call). The guard
+    /// borrows `self` immutably, so `send` with the batch's `env_ids`
+    /// works while it is alive; clone the view if you need to keep a
+    /// batch across steps, or use [`Self::recv_into`] with your own
+    /// buffer to also skip the (uncontended) lock.
+    pub fn recv(&self) -> Result<std::sync::MutexGuard<'_, BatchedTransition>> {
+        let mut g = self.scratch.lock().unwrap();
+        self.states.recv_into(&mut g)?;
+        Ok(g)
     }
 
     /// Synchronous vectorized step: send then recv. Only meaningful in
@@ -474,6 +482,38 @@ mod tests {
             dones += out.done.iter().filter(|&&d| d != 0).count();
         }
         assert!(dones > 5, "random cartpole must terminate episodes, saw {dones}");
+    }
+
+    #[test]
+    fn recv_view_reuses_queue_buffers_without_cloning() {
+        let cfg = PoolConfig::new("CartPole-v1").num_envs(4).batch_size(4).num_threads(2).seed(3);
+        let mut pool = EnvPool::make(cfg).unwrap();
+        pool.async_reset();
+        let mut ptrs = std::collections::HashSet::new();
+        let mut caps = std::collections::HashSet::new();
+        for _ in 0..40 {
+            let (ids, ptr, cap) = {
+                let b = pool.recv().unwrap();
+                assert_eq!(b.len(), 4);
+                (b.env_ids.clone(), b.obs.as_ptr() as usize, b.obs.capacity())
+            };
+            // The view must BE the scratch buffer, not a clone of it.
+            assert_eq!(pool.scratch.lock().unwrap().obs.as_ptr() as usize, ptr);
+            ptrs.insert(ptr);
+            caps.insert(cap);
+            let actions: Vec<f32> = ids.iter().map(|_| 1.0).collect();
+            pool.send(&actions, &ids).unwrap();
+        }
+        // `recv_into` swaps the scratch with the queue's preallocated
+        // block payloads, so the convenience path must rotate among a
+        // fixed buffer set — never grow it. (The pre-fix take+clone
+        // implementation minted a fresh scratch every call.)
+        assert!(
+            ptrs.len() <= pool.states.num_blocks() + 1,
+            "recv() must not allocate per call: saw {} distinct obs buffers over 40 recvs",
+            ptrs.len()
+        );
+        assert_eq!(caps.len(), 1, "obs capacity must stay fixed, saw {caps:?}");
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use crate::agent::params::{actor_critic_meta, ParamStore};
 use crate::runtime::artifact::ParamMeta;
-use crate::simd::axpy_f32;
+use crate::simd::{axpy_f32, gemm_bt_f32};
 use crate::{Error, Result};
 
 /// Tensor indices into [`NativeNet::params`] (fixed by construction).
@@ -509,6 +509,33 @@ fn affine(
 pub struct ParamsF32 {
     /// Tensors in [`actor_critic_meta`] order, flat row-major.
     pub t: Vec<Vec<f32>>,
+    /// `[hidden, obs_dim]` transpose of `W1` — the blocked-GEMM compute
+    /// layout ([`crate::simd::gemm_bt_f32`] wants `[d_out, d_in]` rows
+    /// so each output element is one contiguous dot). Rebuilt by
+    /// [`NativeNet::refresh_params_f32`] /
+    /// [`NativeNet::rebuild_transposes_f32`]; `t` stays the source of
+    /// truth (it is what the finite-difference guard perturbs and what
+    /// gradients are expressed against).
+    pub w1t: Vec<f32>,
+    /// `[hidden, hidden]` transpose of `W2`.
+    pub w2t: Vec<f32>,
+    /// `[act_dim, hidden]` transpose of `WP`. (The value head's `WV` is
+    /// `[hidden, 1]`, whose transpose is the same flat buffer — no
+    /// mirror needed.)
+    pub wpt: Vec<f32>,
+}
+
+/// `wt[j·d_in + k] = w[k·d_out + j]` — demoted-weight transpose into
+/// the `[d_out, d_in]` GEMM layout.
+fn transpose_into(w: &[f32], d_in: usize, d_out: usize, wt: &mut [f32]) {
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(wt.len(), d_in * d_out);
+    for k in 0..d_in {
+        let wrow = &w[k * d_out..(k + 1) * d_out];
+        for (j, &v) in wrow.iter().enumerate() {
+            wt[j * d_in + k] = v;
+        }
+    }
 }
 
 /// f32 forward-pass activations cached for backprop.
@@ -524,21 +551,41 @@ pub struct ForwardF32 {
 }
 
 impl NativeNet {
-    /// Demote the f64 master weights into a fresh f32 mirror.
+    /// Demote the f64 master weights into a fresh f32 mirror (including
+    /// the transposed GEMM layouts).
     pub fn params_f32(&self) -> ParamsF32 {
-        ParamsF32 {
-            t: self.params.iter().map(|v| v.iter().map(|&x| x as f32).collect()).collect(),
-        }
+        let t: Vec<Vec<f32>> =
+            self.params.iter().map(|v| v.iter().map(|&x| x as f32).collect()).collect();
+        let mut p = ParamsF32 {
+            w1t: vec![0.0; t[W1].len()],
+            w2t: vec![0.0; t[W2].len()],
+            wpt: vec![0.0; t[WP].len()],
+            t,
+        };
+        self.rebuild_transposes_f32(&mut p);
+        p
     }
 
     /// Re-demote the master weights into an existing mirror (after each
-    /// optimizer step; no allocation).
+    /// optimizer step; no allocation) and refresh the transposed GEMM
+    /// layouts.
     pub fn refresh_params_f32(&self, dst: &mut ParamsF32) {
         for (d, sv) in dst.t.iter_mut().zip(&self.params) {
             for (x, &y) in d.iter_mut().zip(sv) {
                 *x = y as f32;
             }
         }
+        self.rebuild_transposes_f32(dst);
+    }
+
+    /// Rebuild the `[d_out, d_in]` transposes from `dst.t` — the sync
+    /// point for any code (tests, FD guards) that edits the row-major
+    /// tensors directly. Pure permutation: bitwise copies, no rounding.
+    pub fn rebuild_transposes_f32(&self, dst: &mut ParamsF32) {
+        let h = self.hidden;
+        transpose_into(&dst.t[W1], self.obs_dim, h, &mut dst.w1t);
+        transpose_into(&dst.t[W2], h, h, &mut dst.w2t);
+        transpose_into(&dst.t[WP], h, self.act_dim, &mut dst.wpt);
     }
 
     /// The f32 mirror's state-independent log-std row (continuous nets
@@ -553,8 +600,15 @@ impl NativeNet {
 
     /// Batched f32 forward pass over the mirror weights: the same
     /// network as [`NativeNet::forward`], with every affine running the
-    /// SIMD lane pass ([`affine_f32`]). This is the rollout-inference
-    /// hot path under `--precision f32` — no f64 promotion anywhere.
+    /// cache-blocked transposed-weights GEMM
+    /// ([`crate::simd::gemm_bt_f32`]) and the activation running the
+    /// deterministic `tanh` twin ([`crate::simd::math::tanh_f32`],
+    /// ≤ 2 ULP vs demoted f64 libm) instead of one scalar libm call per
+    /// hidden unit. This is the rollout-inference hot path under
+    /// `--precision f32` — no f64 promotion anywhere, and the result is
+    /// independent of `bsz` and machine (see the GEMM's docs). The
+    /// retained axpy GEMV ([`affine_f32`]) is the Table 2g baseline and
+    /// the reassociation-budget reference in `tests/simd_parity.rs`.
     pub fn forward_f32(&self, p: &ParamsF32, x: &[f32], bsz: usize) -> ForwardF32 {
         debug_assert_eq!(x.len(), bsz * self.obs_dim);
         let h = self.hidden;
@@ -563,17 +617,19 @@ impl NativeNet {
         let mut h2 = vec![0.0f32; bsz * h];
         let mut dist = vec![0.0f32; bsz * a];
         let mut value = vec![0.0f32; bsz];
-        affine_f32(x, &p.t[W1], &p.t[B1], &mut h1, bsz, self.obs_dim, h);
+        gemm_bt_f32(x, &p.w1t, &p.t[B1], &mut h1, bsz, self.obs_dim, h);
         for v in h1.iter_mut() {
-            *v = v.tanh();
+            *v = crate::simd::math::tanh_f32(*v);
         }
-        affine_f32(&h1, &p.t[W2], &p.t[B2], &mut h2, bsz, h, h);
+        gemm_bt_f32(&h1, &p.w2t, &p.t[B2], &mut h2, bsz, h, h);
         for v in h2.iter_mut() {
-            *v = v.tanh();
+            *v = crate::simd::math::tanh_f32(*v);
         }
-        affine_f32(&h2, &p.t[WP], &p.t[BP], &mut dist, bsz, h, a);
+        gemm_bt_f32(&h2, &p.wpt, &p.t[BP], &mut dist, bsz, h, a);
+        // WV is [hidden, 1]: its transpose is the same flat buffer, so
+        // the GEMM reads it directly as the single [1, hidden] row.
         let (wv, bv) = (&p.t[self.idx_wv()], &p.t[self.idx_bv()]);
-        affine_f32(&h2, wv, bv, &mut value, bsz, h, 1);
+        gemm_bt_f32(&h2, wv, bv, &mut value, bsz, h, 1);
         ForwardF32 { h1, h2, dist, value }
     }
 
@@ -697,8 +753,15 @@ impl NativeNet {
 /// identical to the scalar loop (k ascending), so this is **bitwise**
 /// equal to a naive f32 affine — only the f32-vs-f64 precision differs
 /// from [`affine`], and that is governed by the tolerance tests.
+///
+/// No longer on the forward hot path (the blocked transposed GEMM
+/// [`crate::simd::gemm_bt_f32`] replaced it in
+/// [`NativeNet::forward_f32`]); kept `pub` as the sequential-
+/// accumulation reference the GEMM's reassociation budget is measured
+/// against (`tests/simd_parity.rs`) and as the Table 2g GEMV baseline
+/// (`benches/table2g_contig.rs`).
 #[allow(clippy::too_many_arguments)]
-fn affine_f32(
+pub fn affine_f32(
     x: &[f32],
     w: &[f32],
     b: &[f32],
@@ -961,8 +1024,10 @@ mod tests {
                 for k in (0..len).step_by(stride) {
                     let mut plus = p32.clone();
                     plus.t[ti][k] += eps;
+                    net.rebuild_transposes_f32(&mut plus);
                     let mut minus = p32.clone();
                     minus.t[ti][k] -= eps;
+                    net.rebuild_transposes_f32(&mut minus);
                     let lp = net.loss_and_grad_f32(&plus, &obs32, &mb, &hp).0.loss;
                     let lm = net.loss_and_grad_f32(&minus, &obs32, &mb, &hp).0.loss;
                     let fd = (lp - lm) / (2.0 * eps as f64);
@@ -986,13 +1051,35 @@ mod tests {
         let mut p32 = net.params_f32();
         assert_eq!(p32.t.len(), net.params.len());
         assert_eq!(net.log_std_of(&p32).len(), 2);
-        // refresh reproduces a fresh demotion bitwise
+        // transposes are exact permutations of the demoted tensors
+        for k in 0..3 {
+            for j in 0..8 {
+                assert_eq!(p32.w1t[j * 3 + k].to_bits(), p32.t[W1][k * 8 + j].to_bits());
+            }
+        }
+        for k in 0..8 {
+            for j in 0..8 {
+                assert_eq!(p32.w2t[j * 8 + k].to_bits(), p32.t[W2][k * 8 + j].to_bits());
+            }
+            for j in 0..2 {
+                assert_eq!(p32.wpt[j * 8 + k].to_bits(), p32.t[WP][k * 2 + j].to_bits());
+            }
+        }
+        // refresh reproduces a fresh demotion bitwise (transposes too)
         let fresh = net.params_f32();
         for v in p32.t.iter_mut().flatten() {
             *v = 99.0;
         }
+        for v in p32.w1t.iter_mut().chain(&mut p32.w2t).chain(&mut p32.wpt) {
+            *v = 99.0;
+        }
         net.refresh_params_f32(&mut p32);
         for (a, b) in p32.t.iter().flatten().zip(fresh.t.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in p32.w1t.iter().chain(&p32.w2t).chain(&p32.wpt).zip(
+            fresh.w1t.iter().chain(&fresh.w2t).chain(&fresh.wpt),
+        ) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
 

@@ -1,5 +1,5 @@
-//! Deterministic, branchless f32 trigonometry — the **shared twin** of
-//! the lane-pass trig.
+//! Deterministic, branchless f32 elementary functions — the **shared
+//! twins** of the lane-pass trig and the f32 inference `tanh`.
 //!
 //! # Why not libm
 //!
@@ -28,6 +28,20 @@
 //!
 //! Determinism: no FMA, no libm, no lookup tables — pure f64 `+ - *`
 //! with fixed constants, identical on every platform and lane width.
+//!
+//! # The `tanh` twin
+//!
+//! [`tanh_f32`] serves the native backend's f32 inference fast path
+//! (`runtime::native::forward_f32`), where `v.tanh()` was one scalar
+//! libm call per hidden unit — the last non-vectorizable op in the
+//! batched forward pass. Same construction discipline as the trig:
+//! promote to f64, branchless Cody–Waite reduction (base 2 this time),
+//! polynomial kernel, demote. Documented budget: **≤ 2 ULP** vs the
+//! demoted f64 libm `tanh` over all finite f32 inputs (asserted by the
+//! in-file test and `tests/simd_parity.rs`); in practice the analysis
+//! below gives ≤ 1 ULP away from double-rounding near-ties. The f64
+//! training path keeps calling libm `tanh`, so PPO head branches that
+//! compare f64 activations can never flip because of this twin.
 
 /// 2/π in f64.
 const FRAC_2_PI: f64 = std::f64::consts::FRAC_2_PI;
@@ -115,6 +129,74 @@ pub fn cos_f32(x: f32) -> f32 {
     sin_cos_f32(x).1
 }
 
+/// log2(e) in f64.
+const LOG2_E: f64 = std::f64::consts::LOG2_E;
+/// ln 2 split for Cody–Waite reduction (fdlibm's `ln2_hi`/`ln2_lo`):
+/// `LN2_HI`'s low 20 mantissa bits are zero, so `n · LN2_HI` is exact
+/// for the |n| ≤ 58 this file ever produces and the reduced argument
+/// `x − n·LN2_HI − n·LN2_LO` carries no cancellation error.
+const LN2_HI: f64 = 0.693_147_180_369_123_8;
+const LN2_LO: f64 = 1.908_214_929_270_587_7e-10;
+
+/// Threshold below which `tanh(x)` is taken as `x` (2⁻¹⁷). At the
+/// crossover both paths agree to ~2e-11 relative — three orders of
+/// magnitude under half an f32 ULP — so the select cannot introduce a
+/// visible seam; below it, the identity avoids the `1 − (1 − t)`
+/// cancellation that would otherwise blow up as x → 0.
+const TANH_SMALL: f64 = 7.62939453125e-6;
+
+/// `e^x` for `x ∈ [0, 45]` (f64 in, f64 out), branchless.
+///
+/// `n = round(x · log2 e)` via the magic-constant trick, Cody–Waite
+/// reduction to `|r| ≤ ln2/2`, degree-9 Taylor kernel (max relative
+/// error ~7e-12, far under the demoted-f32 half-ULP of 6e-8), then an
+/// exact scale by `2^n` built from bits. NaN propagates: `NaN as i64`
+/// is 0 in Rust, so the scale is 1.0 and `NaN · 1.0 = NaN`.
+#[inline(always)]
+fn exp_pos(x: f64) -> f64 {
+    let n = (x * LOG2_E + ROUND_MAGIC) - ROUND_MAGIC;
+    let r = (x - n * LN2_HI) - n * LN2_LO;
+    let p = 1.0
+        + r * (1.0
+            + r * (0.5
+                + r * (1.0 / 6.0
+                    + r * (1.0 / 24.0
+                        + r * (1.0 / 120.0
+                            + r * (1.0 / 720.0
+                                + r * (1.0 / 5040.0
+                                    + r * (1.0 / 40320.0 + r * (1.0 / 362880.0)))))))));
+    // 2^n assembled directly in the exponent field — exact, no powi.
+    let scale = f64::from_bits((((n as i64) + 1023) << 52) as u64);
+    p * scale
+}
+
+/// `tanh(x)` for f32 `x` — the scalar twin of the lane-pass activation
+/// (see module docs; the vector path is [`super::F32s::tanh`]).
+/// Branchless: the range splits compile to selects, so a per-lane loop
+/// over this function vectorizes.
+///
+/// Evaluation: `tanh(x) = sign(x) · (1 − 2 / (e^{2|x|} + 1))` in f64,
+/// with `2|x|` saturated at 40 (where `1 − 2e⁻⁴⁰` already rounds to
+/// 1.0 in f64, let alone f32 — and the comparison keeps NaN off the
+/// clamp) and `tanh(x) = x` below [`TANH_SMALL`]. Signed zero and the
+/// odd symmetry come from `copysign`, so `tanh(-x) == -tanh(x)`
+/// bitwise and `tanh(-0.0) == -0.0`.
+///
+/// Budget: **≤ 2 ULP** vs `((x as f64).tanh()) as f32` over all finite
+/// inputs (documented headroom; the error analysis in the module docs
+/// bounds every term well under 1 f32 ULP away from near-ties).
+#[inline(always)]
+pub fn tanh_f32(x: f32) -> f32 {
+    let xd = x as f64;
+    let a = xd.abs();
+    let d = a + a;
+    let d = if d > 40.0 { 40.0 } else { d };
+    let e = exp_pos(d);
+    let big = 1.0 - 2.0 / (e + 1.0);
+    let t = if a < TANH_SMALL { a } else { big };
+    f64::copysign(t, xd) as f32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +248,57 @@ mod tests {
         assert!(cos_f32(f32::NAN).is_nan());
         assert!(sin_f32(f32::INFINITY).is_nan());
         assert!(cos_f32(f32::NEG_INFINITY).is_nan());
+    }
+
+    #[test]
+    fn tanh_matches_f64_libm_within_budget() {
+        let mut rng = Pcg32::new(11, 4);
+        // The activation range the MLP actually sees (pre-activations
+        // are a few units wide), plus wide and tiny magnitudes to cover
+        // the saturation clamp and the small-x identity path.
+        for (lo, hi) in [(-4.0f32, 4.0), (-30.0, 30.0), (-1e-3, 1e-3)] {
+            for _ in 0..20_000 {
+                let x = rng.range(lo, hi);
+                let got = tanh_f32(x);
+                let want = ((x as f64).tanh()) as f32;
+                assert!(
+                    ulp_dist(got, want) <= 2,
+                    "tanh({x}): {got} vs {want}"
+                );
+            }
+        }
+        // Denormal-adjacent and huge inputs.
+        for x in [1e-30f32, -1e-38, 1e-44, 50.0, -50.0, 1e30, f32::MAX] {
+            let got = tanh_f32(x);
+            let want = ((x as f64).tanh()) as f32;
+            assert!(ulp_dist(got, want) <= 2, "tanh({x}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn tanh_edges_sign_and_saturation() {
+        // Exact endpoints and signed zero.
+        assert_eq!(tanh_f32(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(tanh_f32(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(tanh_f32(f32::INFINITY), 1.0);
+        assert_eq!(tanh_f32(f32::NEG_INFINITY), -1.0);
+        assert_eq!(tanh_f32(20.0), 1.0);
+        assert_eq!(tanh_f32(-20.0), -1.0);
+        assert!(tanh_f32(f32::NAN).is_nan());
+        // Odd symmetry is bitwise (copysign construction).
+        let mut rng = Pcg32::new(5, 9);
+        for _ in 0..1_000 {
+            let x = rng.range(-20.0, 20.0);
+            assert_eq!(tanh_f32(-x).to_bits(), (-tanh_f32(x)).to_bits(), "x={x}");
+        }
+        // Monotone, bounded on a coarse sweep.
+        let mut prev = -1.0f32;
+        for i in 0..=400 {
+            let x = -10.0 + i as f32 * 0.05;
+            let t = tanh_f32(x);
+            assert!((-1.0..=1.0).contains(&t));
+            assert!(t >= prev, "tanh not monotone at {x}");
+            prev = t;
+        }
     }
 }

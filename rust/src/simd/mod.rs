@@ -25,10 +25,13 @@
 //! tolerance budget instead — see `envs::mujoco::batch` and
 //! `tests/mujoco_batch_parity.rs`.) The only ops that reassociate — and
 //! therefore carry an explicit ULP budget instead of bitwise equality —
-//! are the horizontal reductions ([`dot_f32`] accumulates in `LANES`
-//! partial sums). Nothing else is allowed to reassociate; in particular
-//! there is no FMA contraction anywhere (Rust never contracts without
-//! `mul_add`, and this module never calls it).
+//! are the horizontal reductions: [`dot_f32`] accumulates in `LANES`
+//! partial sums, and [`gemm_bt_f32`] computes every output element as
+//! one such dot, so the whole GEMM inherits the same per-element
+//! `γ_n`-style bound (asserted vs the sequential axpy GEMV in
+//! `tests/simd_parity.rs`). Nothing else is allowed to reassociate; in
+//! particular there is no FMA contraction anywhere (Rust never
+//! contracts without `mul_add`, and this module never calls it).
 //!
 //! # Lane-width selection
 //!
@@ -296,6 +299,16 @@ impl<const N: usize> F32s<N> {
     pub fn cos(self) -> Self {
         Self::from_fn(|i| math::cos_f32(self.0[i]))
     }
+
+    /// Per-lane `tanh` via the shared deterministic kernel
+    /// ([`math::tanh_f32`]): bitwise identical to the scalar twin,
+    /// branchless per lane so the loop vectorizes. Carries the twin's
+    /// documented ≤ 2 ULP budget vs demoted f64 libm — the f32
+    /// inference path's activation (the f64 training path keeps libm).
+    #[inline(always)]
+    pub fn tanh(self) -> Self {
+        Self::from_fn(|i| math::tanh_f32(self.0[i]))
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -521,6 +534,56 @@ pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Output-dimension tile for [`gemm_bt_f32`]: `64 · d_in` weight floats
+/// stay L1-resident (16 KiB at the largest hidden width this crate
+/// uses) while every batch row streams against them.
+const GEMM_TILE_OUT: usize = 64;
+
+/// Blocked GEMM with **transposed weights**:
+/// `out[i·d_out + o] = bias[o] + Σ_k x[i·d_in + k] · wt[o·d_in + k]`
+/// for `i < bsz`, `o < d_out`.
+///
+/// `wt` is `[d_out, d_in]` row-major — the transpose of the `[d_in,
+/// d_out]` layout the axpy GEMV walks — so the inner contraction is one
+/// contiguous [`dot_f32`] per output element instead of `d_in` strided
+/// axpy passes over the whole output row. Blocking runs all batch rows
+/// against a 64-row weight tile before moving on, so each weight float
+/// is loaded from memory once per `bsz` uses.
+///
+/// Numerics: each element is `bias[o] + dot_f32(...)` — the dot
+/// **reassociates** relative to the sequential GEMV accumulation, with
+/// the standard forward bound `≤ γ_{d_in} Σ_k |x_k · w_ko|` per element
+/// (`γ_n ≈ n·ε`). `tests/simd_parity.rs` pins this budget against the
+/// axpy reference. The result is independent of `bsz`, tile size, and
+/// machine (the AVX2 dot is bitwise-equal to the portable one), so
+/// determinism across thread counts and batch shapes is preserved.
+pub fn gemm_bt_f32(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    bsz: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    debug_assert!(x.len() >= bsz * d_in);
+    debug_assert!(wt.len() >= d_out * d_in);
+    debug_assert!(bias.len() >= d_out);
+    debug_assert!(out.len() >= bsz * d_out);
+    let mut o0 = 0;
+    while o0 < d_out {
+        let o1 = (o0 + GEMM_TILE_OUT).min(d_out);
+        for i in 0..bsz {
+            let xrow = &x[i * d_in..(i + 1) * d_in];
+            let orow = &mut out[i * d_out..(i + 1) * d_out];
+            for o in o0..o1 {
+                orow[o] = bias[o] + dot_f32(xrow, &wt[o * d_in..(o + 1) * d_in]);
+            }
+        }
+        o0 = o1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -624,6 +687,54 @@ mod tests {
                 y2[i] += s * x[i];
             }
             assert_eq!(y1, y2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_bt_matches_f64_reference_within_budget() {
+        use crate::rng::Pcg32;
+        let mut rng = Pcg32::new(13, 2);
+        // Shapes straddling the output tile (63/64/65) and degenerate
+        // dims; bsz covers single-row (GEMV shape) and batched.
+        for &(bsz, d_in, d_out) in
+            &[(1usize, 8usize, 1usize), (3, 5, 63), (2, 64, 64), (4, 17, 65), (1, 1, 130)]
+        {
+            let x: Vec<f32> = (0..bsz * d_in).map(|_| rng.range(-1.0, 1.0)).collect();
+            let wt: Vec<f32> = (0..d_out * d_in).map(|_| rng.range(-1.0, 1.0)).collect();
+            let bias: Vec<f32> = (0..d_out).map(|_| rng.range(-0.5, 0.5)).collect();
+            let mut out = vec![0.0f32; bsz * d_out];
+            gemm_bt_f32(&x, &wt, &bias, &mut out, bsz, d_in, d_out);
+            for i in 0..bsz {
+                for o in 0..d_out {
+                    let exact: f64 = bias[o] as f64
+                        + (0..d_in)
+                            .map(|k| x[i * d_in + k] as f64 * wt[o * d_in + k] as f64)
+                            .sum::<f64>();
+                    let mag: f64 = bias[o].abs() as f64
+                        + (0..d_in)
+                            .map(|k| (x[i * d_in + k] as f64 * wt[o * d_in + k] as f64).abs())
+                            .sum::<f64>();
+                    let bound = 2.0
+                        * ((d_in + 1).max(1) as f64)
+                        * f64::from(f32::EPSILON)
+                        * mag
+                        + 1e-12;
+                    let got = out[i * d_out + o] as f64;
+                    assert!(
+                        (got - exact).abs() <= bound,
+                        "bsz={bsz} d_in={d_in} d_out={d_out} i={i} o={o}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_tanh_is_bitwise_the_scalar_twin() {
+        let v = F32s::<8>::from_fn(|i| (i as f32 - 3.5) * 2.3);
+        let t = v.tanh();
+        for i in 0..8 {
+            assert_eq!(t.0[i].to_bits(), math::tanh_f32(v.0[i]).to_bits());
         }
     }
 }

@@ -18,7 +18,15 @@
 //!   against an f64 reference.
 //! - The shared trig twins (`simd::math`) sit within 1 ULP of the f64
 //!   libm reference, and their lane-group form is bitwise equal to the
-//!   scalar twin.
+//!   scalar twin. The `tanh` twin (the f32 inference activation) sits
+//!   within 2 ULPs of demoted f64 libm under the same lane-exactness
+//!   rule.
+//! - The blocked transposed-weights GEMM (`simd::gemm_bt_f32`, the f32
+//!   forward's matmul) computes each output element as one `dot_f32`,
+//!   so per element it inherits the γ_n dot budget; asserted here
+//!   against the sequential axpy GEMV (`runtime::native::affine_f32`)
+//!   it replaced, with the explicit bound, across shapes and lane
+//!   widths.
 //!
 //! The `simd-parity` CI job additionally re-runs this suite (and the
 //! scalar-vs-vector suite) with `ENVPOOL_LANE_WIDTH` forced to 1, 4 and
@@ -207,6 +215,104 @@ fn trig_twins_within_one_ulp_of_f64_libm_and_lane_exact() {
                 "lane {i} of sin_cos({}) diverged from the scalar twin",
                 xs.0[i]
             );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tanh_twin_within_two_ulp_of_f64_libm_and_lane_exact() {
+    // The f32 inference path's activation (`NativeNet::forward_f32`).
+    // Budget 2 ULPs vs the demoted f64 libm reference (documented in
+    // `simd::math`): one ULP from the twin's own exp/division error,
+    // one from the double rounding f64→f32 at the boundary. The f64
+    // training path keeps libm `tanh`, so this budget never moves a
+    // branch decision shared between the precisions.
+    forall("simd-tanh", |g| {
+        // Spans the saturated region (|2x| > 40), the rational-formula
+        // core, and the tiny-|x| linear path (|x| < 2⁻¹⁷).
+        let x = match g.usize_in(0, 2) {
+            0 => g.f32_in(-30.0, 30.0),
+            1 => g.f32_in(-2.0, 2.0),
+            _ => g.f32_in(-1e-4, 1e-4),
+        };
+        let got = math::tanh_f32(x);
+        let want = ((x as f64).tanh()) as f32;
+        prop_assert!(
+            ulp_dist_f32(got, want) <= 2,
+            "tanh({x}): {got} vs libm {want} = {} ulp",
+            ulp_dist_f32(got, want)
+        );
+        // Odd symmetry is bitwise (copysign construction).
+        prop_assert!(
+            math::tanh_f32(-x).to_bits() == (-got).to_bits(),
+            "tanh(-{x}) is not the bitwise negation"
+        );
+
+        // Lane-group tanh is the same inline function per lane: bitwise
+        // at both hardware widths.
+        let x4 = envpool::simd::F32s::<4>::from_fn(|i| x + i as f32 * 0.73);
+        let x8 = envpool::simd::F32s::<8>::from_fn(|i| x - i as f32 * 0.41);
+        for (i, (lane, s)) in x4.tanh().0.iter().zip(x4.0).enumerate() {
+            prop_assert!(
+                lane.to_bits() == math::tanh_f32(s).to_bits(),
+                "W=4 lane {i} of tanh({s}) diverged from the scalar twin"
+            );
+        }
+        for (i, (lane, s)) in x8.tanh().0.iter().zip(x8.0).enumerate() {
+            prop_assert!(
+                lane.to_bits() == math::tanh_f32(s).to_bits(),
+                "W=8 lane {i} of tanh({s}) diverged from the scalar twin"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blocked_gemm_matches_sequential_gemv_within_budget() {
+    // `gemm_bt_f32` (blocked, transposed weights, dot-product inner
+    // loop) vs `affine_f32` (sequential axpy accumulation) compute the
+    // same affine map in two accumulation orders. Each is within the
+    // forward-error bound |fl(y) − y| ≤ γ_{n+1}·(|b| + Σ|x_k·w_ko|)
+    // of the exact element (n = d_in, +1 for the bias add), so their
+    // distance is ≤ 2·γ_{n+1}·mag. THE BUDGET IS ASSERTED per element,
+    // with `mag` computed in f64.
+    use envpool::runtime::native::affine_f32;
+    use envpool::simd::gemm_bt_f32;
+    forall("simd-gemm-vs-gemv", |g| {
+        let bsz = g.usize_in(1, 5);
+        // d_out spans both sides of the 64-wide GEMM output tile.
+        let d_in = g.usize_in(1, 80);
+        let d_out = g.usize_in(1, 70);
+        let x = g.vec(bsz * d_in, |g| g.f32_in(-1.0, 1.0));
+        let w = g.vec(d_in * d_out, |g| g.f32_in(-1.0, 1.0)); // [d_in, d_out]
+        let bias = g.vec(d_out, |g| g.f32_in(-1.0, 1.0));
+        let mut wt = vec![0.0f32; d_out * d_in]; // [d_out, d_in]
+        for k in 0..d_in {
+            for o in 0..d_out {
+                wt[o * d_in + k] = w[k * d_out + o];
+            }
+        }
+        let mut out_gemm = vec![0.0f32; bsz * d_out];
+        let mut out_gemv = vec![0.0f32; bsz * d_out];
+        gemm_bt_f32(&x, &wt, &bias, &mut out_gemm, bsz, d_in, d_out);
+        affine_f32(&x, &w, &bias, &mut out_gemv, bsz, d_in, d_out);
+        let gamma = 2.0 * (d_in + 1) as f64 * f64::from(f32::EPSILON);
+        for i in 0..bsz {
+            for o in 0..d_out {
+                let mag: f64 = (bias[o] as f64).abs()
+                    + (0..d_in)
+                        .map(|k| (x[i * d_in + k] as f64 * w[k * d_out + o] as f64).abs())
+                        .sum::<f64>();
+                let (a, b) = (out_gemm[i * d_out + o], out_gemv[i * d_out + o]);
+                prop_assert!(
+                    (a as f64 - b as f64).abs() <= gamma * mag + 1e-10,
+                    "({bsz},{d_in},{d_out}) out[{i},{o}]: gemm {a} vs gemv {b} \
+                     exceeds budget {}",
+                    gamma * mag + 1e-10
+                );
+            }
         }
         Ok(())
     });
