@@ -1,0 +1,128 @@
+//! Bench: Table 2h — heterogeneous scenario-pool overhead.
+//!
+//! A 3-group mixed scenario (CartPole + Pendulum + MountainCar) runs
+//! behind one `GroupedVecEnv` pool and is compared against the same
+//! three groups executed as separate homogeneous pools, back to back,
+//! with the same thread budget. The acceptance gate (full mode only):
+//! the mixed pool must reach >= 0.9x the aggregate homogeneous
+//! throughput — routing through the env_id -> (group, lane) map, the
+//! ragged obs arenas and the per-group action re-striding must cost
+//! less than 10%.
+//!
+//! All three tasks are classic-control (frame multiplier 1), so the
+//! weighted frames/s the scenario runner reports equals env-steps/s
+//! and is directly comparable with `run_throughput_lanes`.
+//!
+//! `cargo bench --bench table2h_hetero` (ENVPOOL_BENCH_QUICK=1 for a
+//! fast CI pass that skips the gate).
+
+use envpool::bench_util::Bencher;
+use envpool::config::ScenarioConfig;
+use envpool::coordinator::throughput::{run_throughput_lanes, run_throughput_scenario};
+use envpool::metrics::table::{fmt_fps, Table};
+use envpool::simd::LanePass;
+
+/// The mixed pool under test: three full-width classic groups, with a
+/// jitter entry so the per-lane parameter path is on the measured path.
+fn scenario(counts: [usize; 3]) -> ScenarioConfig {
+    let text = format!(
+        "[group]\n\
+         task = CartPole-v1\n\
+         count = {}\n\
+         jitter.length = 0.4 0.6\n\
+         \n\
+         [group]\n\
+         task = Pendulum-v1\n\
+         count = {}\n\
+         param.gravity = 9.81\n\
+         \n\
+         [group]\n\
+         task = MountainCar-v0\n\
+         count = {}\n",
+        counts[0], counts[1], counts[2]
+    );
+    ScenarioConfig::parse(&text).expect("bench scenario parses")
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+    // Group widths stay multiples of 8 so every SIMD lane width packs
+    // the groups without remainder lanes.
+    let counts: [usize; 3] = if quick { [8, 8, 8] } else { [96, 96, 64] };
+    let rounds: u64 = if quick { 64 } else { 2_000 };
+    let total: usize = counts.iter().sum();
+    // One worker per group chunk; the homogeneous baselines get the
+    // same budget so the comparison is thread-for-thread fair.
+    let threads = 3usize;
+    let seed = 7u64;
+    let sc = scenario(counts);
+    let tasks = ["CartPole-v1", "Pendulum-v1", "MountainCar-v0"];
+
+    println!("== Table 2h: mixed scenario pool vs homogeneous pools ==");
+    println!(
+        "(3 groups, {total} envs total, {threads} threads, sync-vec, auto lane width = {})",
+        LanePass::Auto.width()
+    );
+
+    // Mixed: one pool, one chunk per group, measured as one unit.
+    let mixed_steps = rounds * total as u64;
+    let mut mixed_fps = 0.0;
+    b.run("table2h/mixed/3-group", mixed_steps as f64, || {
+        mixed_fps =
+            run_throughput_scenario(&sc, "envpool-sync-vec", threads, mixed_steps, seed, LanePass::Auto)
+                .unwrap();
+    });
+
+    // Baseline: the same groups as separate homogeneous pools, run
+    // back to back. Aggregate fps = total steps / total wall time.
+    let mut homo_fps = vec![0.0f64; tasks.len()];
+    for (i, (&task, &count)) in tasks.iter().zip(counts.iter()).enumerate() {
+        let steps = rounds * count as u64;
+        let mut fps = 0.0;
+        b.run(&format!("table2h/homogeneous/{task}"), steps as f64, || {
+            fps = run_throughput_lanes(
+                task,
+                "envpool-sync-vec",
+                count,
+                count,
+                threads,
+                steps,
+                seed,
+                LanePass::Auto,
+            )
+            .unwrap();
+        });
+        homo_fps[i] = fps;
+    }
+    let homo_secs: f64 = homo_fps
+        .iter()
+        .zip(counts.iter())
+        .map(|(&fps, &count)| (rounds * count as u64) as f64 / fps)
+        .sum();
+    let agg_fps = mixed_steps as f64 / homo_secs;
+    let ratio = mixed_fps / agg_fps;
+
+    let mut t = Table::new(["Pool", "Envs", "env-steps/s"]);
+    t.row([
+        "mixed (1 pool, 3 groups)".to_string(),
+        total.to_string(),
+        fmt_fps(mixed_fps),
+    ]);
+    for (i, (&task, &count)) in tasks.iter().zip(counts.iter()).enumerate() {
+        t.row([format!("homogeneous {task}"), count.to_string(), fmt_fps(homo_fps[i])]);
+    }
+    t.row(["homogeneous aggregate".to_string(), total.to_string(), fmt_fps(agg_fps)]);
+    println!("{}", t.render());
+    println!("  -> mixed / aggregate = {ratio:.3} (gate: >= 0.9, full mode only)");
+
+    if !quick {
+        assert!(
+            ratio >= 0.9,
+            "acceptance gate failed: mixed scenario pool at {mixed_fps:.0} env-steps/s is \
+             {ratio:.3}x the homogeneous aggregate {agg_fps:.0} (need >= 0.9x)"
+        );
+    }
+
+    b.write_snapshot("table2h").unwrap();
+}

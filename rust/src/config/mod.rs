@@ -3,7 +3,9 @@
 //! precedence order (CLI wins). No serde in the vendored set, so parsing
 //! is explicit and validated.
 
+pub mod scenario;
 mod train;
+pub use scenario::{ScenarioConfig, ScenarioGroup};
 pub use train::{BackendKind, ExecutorKind, Precision, TrainConfig};
 
 use crate::{Error, Result};

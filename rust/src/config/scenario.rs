@@ -1,0 +1,442 @@
+//! Scenario configs: heterogeneous (mixed-task) pools with seeded
+//! per-lane domain randomization, parsed from a dependency-free text
+//! format.
+//!
+//! # Format
+//!
+//! Line-based, like [`super::KvFile`] but sectioned. `#` starts a
+//! comment line; blank lines are ignored; there are no inline comments.
+//! Each `[group]` header opens a lane group, followed by `key = value`
+//! pairs:
+//!
+//! ```text
+//! # 3-group mixed pool
+//! [group]
+//! task = CartPole-v1
+//! count = 4
+//! # optional; default derives from the pool seed
+//! seed = 11
+//! # optional WrapConfig fields
+//! time_limit = 200
+//! reward_clip = true
+//! # fixed physics override, all lanes
+//! param.gravity = 9.8
+//! # per-lane uniform draw in [lo, hi)
+//! jitter.length = 0.4 0.6
+//!
+//! [group]
+//! task = Hopper-v4
+//! count = 2
+//! ```
+//!
+//! Recognized keys: `task` (required), `count` (required), `seed`,
+//! `time_limit`, `reward_clip`, `normalize_obs`, `normalize_obs_shared`,
+//! `param.<name>`, `jitter.<name>`. Parameter names are validated
+//! against `registry::supported_params` for the group's task at parse
+//! time, so a typo fails before any pool is built.
+//!
+//! # Replayability contract
+//!
+//! A scenario file plus a pool seed fully determines every lane's
+//! physics: fixed `param.*` values apply verbatim, and each `jitter.*`
+//! range is drawn from a dedicated [`Pcg32`](crate::rng::Pcg32) stream
+//! keyed by `(group seed ^ JITTER_SALT, parameter index)`, in lane
+//! order, **at construction** — independent of `ExecMode`, thread
+//! count, chunking and batch size. The same file + seed therefore
+//! reproduces the same jittered parameters and the same per-env
+//! episodes everywhere (pinned by `tests/scenario.rs`).
+//!
+//! # Round-trip
+//!
+//! [`ScenarioConfig::to_text`] emits a canonical form that
+//! [`ScenarioConfig::parse`] maps back to an identical value (f32s are
+//! printed with Rust's shortest round-trip notation), so configs can be
+//! re-emitted, diffed and archived losslessly.
+
+use crate::envs::registry::{self, WrapConfig};
+use crate::rng::splitmix64;
+use crate::{Error, Result};
+
+/// Salt folded into a group's seed for the jitter streams, so parameter
+/// draws never alias the env RNG streams built from the same seed.
+pub const JITTER_SALT: u64 = 0x6a69_7474; // "jitt"
+
+/// One lane group of a scenario: a task, a lane count, optional wrapper
+/// settings and the group's physics overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioGroup {
+    /// Registered task id (validated at parse time).
+    pub task_id: String,
+    /// Number of lanes (environments) in the group.
+    pub count: usize,
+    /// Explicit group seed; `None` derives one from the pool seed and
+    /// the group index (see [`ScenarioConfig::group_seed`]).
+    pub seed: Option<u64>,
+    /// Per-group wrapper stack (same semantics as a homogeneous pool's
+    /// `WrapConfig`).
+    pub wrap: WrapConfig,
+    /// Fixed physics overrides `(name, value)`, applied to every lane.
+    pub params: Vec<(String, f32)>,
+    /// Jittered physics `(name, lo, hi)`: each lane draws uniformly
+    /// from `[lo, hi)` on the group's seeded jitter stream.
+    pub jitter: Vec<(String, f32, f32)>,
+}
+
+/// A parsed, validated scenario: an ordered list of lane groups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    pub groups: Vec<ScenarioGroup>,
+}
+
+fn bad(line_no: usize, msg: &str) -> Error {
+    Error::Config(format!("scenario line {line_no}: {msg}"))
+}
+
+impl ScenarioConfig {
+    /// Parse and validate scenario text (see the module docs for the
+    /// format).
+    pub fn parse(text: &str) -> Result<ScenarioConfig> {
+        let mut groups: Vec<ScenarioGroup> = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "[group]" {
+                groups.push(ScenarioGroup {
+                    task_id: String::new(),
+                    count: 0,
+                    seed: None,
+                    wrap: WrapConfig::none(),
+                    params: Vec::new(),
+                    jitter: Vec::new(),
+                });
+                continue;
+            }
+            if line.starts_with('[') {
+                return Err(bad(line_no, &format!("unknown section {line:?} (expected [group])")));
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(bad(line_no, &format!("expected `key = value`, got {line:?}")));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let Some(group) = groups.last_mut() else {
+                return Err(bad(line_no, "key outside any [group] section"));
+            };
+            match key {
+                "task" => group.task_id = value.to_string(),
+                "count" => {
+                    group.count = value
+                        .parse()
+                        .map_err(|_| bad(line_no, &format!("bad count {value:?}")))?;
+                }
+                "seed" => {
+                    group.seed = Some(
+                        value
+                            .parse()
+                            .map_err(|_| bad(line_no, &format!("bad seed {value:?}")))?,
+                    );
+                }
+                "time_limit" => {
+                    group.wrap.time_limit = Some(
+                        value
+                            .parse()
+                            .map_err(|_| bad(line_no, &format!("bad time_limit {value:?}")))?,
+                    );
+                }
+                "reward_clip" | "normalize_obs" | "normalize_obs_shared" => {
+                    let b = match value {
+                        "true" => true,
+                        "false" => false,
+                        _ => return Err(bad(line_no, &format!("bad bool {value:?}"))),
+                    };
+                    match key {
+                        "reward_clip" => group.wrap.reward_clip = b,
+                        "normalize_obs" => group.wrap.normalize_obs = b,
+                        _ => group.wrap.normalize_obs_shared = b,
+                    }
+                }
+                _ if key.starts_with("param.") => {
+                    let name = key["param.".len()..].trim();
+                    let v: f32 = value
+                        .parse()
+                        .map_err(|_| bad(line_no, &format!("bad param value {value:?}")))?;
+                    group.params.push((name.to_string(), v));
+                }
+                _ if key.starts_with("jitter.") => {
+                    let name = key["jitter.".len()..].trim();
+                    let mut it = value.split_whitespace();
+                    let (lo, hi) = match (it.next(), it.next(), it.next()) {
+                        (Some(lo), Some(hi), None) => (
+                            lo.parse::<f32>()
+                                .map_err(|_| bad(line_no, &format!("bad jitter lo {lo:?}")))?,
+                            hi.parse::<f32>()
+                                .map_err(|_| bad(line_no, &format!("bad jitter hi {hi:?}")))?,
+                        ),
+                        _ => return Err(bad(line_no, "jitter needs exactly `lo hi`")),
+                    };
+                    group.jitter.push((name.to_string(), lo, hi));
+                }
+                other => {
+                    return Err(bad(line_no, &format!("unknown key {other:?}")));
+                }
+            }
+        }
+        let cfg = ScenarioConfig { groups };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// [`Self::parse`] a scenario file from disk.
+    pub fn load(path: &str) -> Result<ScenarioConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("scenario file {path:?}: {e}")))?;
+        Self::parse(&text)
+    }
+
+    /// Canonical text form; `parse(to_text(c)) == c` exactly.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (gi, g) in self.groups.iter().enumerate() {
+            if gi > 0 {
+                out.push('\n');
+            }
+            out.push_str("[group]\n");
+            out.push_str(&format!("task = {}\n", g.task_id));
+            out.push_str(&format!("count = {}\n", g.count));
+            if let Some(seed) = g.seed {
+                out.push_str(&format!("seed = {seed}\n"));
+            }
+            if let Some(limit) = g.wrap.time_limit {
+                out.push_str(&format!("time_limit = {limit}\n"));
+            }
+            if g.wrap.reward_clip {
+                out.push_str("reward_clip = true\n");
+            }
+            if g.wrap.normalize_obs {
+                out.push_str("normalize_obs = true\n");
+            }
+            if g.wrap.normalize_obs_shared {
+                out.push_str("normalize_obs_shared = true\n");
+            }
+            for (name, v) in &g.params {
+                out.push_str(&format!("param.{name} = {v:?}\n"));
+            }
+            for (name, lo, hi) in &g.jitter {
+                out.push_str(&format!("jitter.{name} = {lo:?} {hi:?}\n"));
+            }
+        }
+        out
+    }
+
+    /// Structural + name validation (also called by [`Self::parse`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.groups.is_empty() {
+            return Err(Error::Config("scenario has no [group] sections".into()));
+        }
+        for (gi, g) in self.groups.iter().enumerate() {
+            let ctx = |msg: String| Error::Config(format!("scenario group {gi}: {msg}"));
+            if g.task_id.is_empty() {
+                return Err(ctx("missing `task`".into()));
+            }
+            if !registry::ALL_TASKS.contains(&g.task_id.as_str()) {
+                return Err(registry::unknown_env(&g.task_id));
+            }
+            if g.count == 0 {
+                return Err(ctx("`count` must be > 0".into()));
+            }
+            let supported = registry::supported_params(&g.task_id);
+            let mut seen: Vec<&str> = Vec::new();
+            for (name, _) in &g.params {
+                check_param(&ctx, &g.task_id, supported, &mut seen, name)?;
+            }
+            for (name, lo, hi) in &g.jitter {
+                check_param(&ctx, &g.task_id, supported, &mut seen, name)?;
+                if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                    return Err(ctx(format!(
+                        "jitter.{name} range [{lo:?}, {hi:?}] must be finite with lo <= hi"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total number of environments across all groups.
+    pub fn num_envs(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// First global env id of group `gi` (groups occupy contiguous,
+    /// file-ordered id ranges).
+    pub fn first_env(&self, gi: usize) -> usize {
+        self.groups[..gi].iter().map(|g| g.count).sum()
+    }
+
+    /// Map a global env id to `(group index, group-local lane)`.
+    /// Panics on out-of-range ids (callers validate `num_envs` first).
+    pub fn locate(&self, env_id: usize) -> (usize, usize) {
+        let mut first = 0;
+        for (gi, g) in self.groups.iter().enumerate() {
+            if env_id < first + g.count {
+                return (gi, env_id - first);
+            }
+            first += g.count;
+        }
+        panic!("env id {env_id} out of range for scenario of {} envs", self.num_envs());
+    }
+
+    /// The seed group `gi` runs under: its explicit `seed` if set, else
+    /// a SplitMix64 chain over the pool seed (so distinct groups get
+    /// decorrelated defaults that are still a pure function of
+    /// `(pool_seed, group index)` — replayable, and identical to a
+    /// homogeneous pool built with the same explicit seed).
+    pub fn group_seed(&self, gi: usize, pool_seed: u64) -> u64 {
+        if let Some(seed) = self.groups[gi].seed {
+            return seed;
+        }
+        let mut st = pool_seed ^ 0x7363_656e; // "scen"
+        let mut out = 0;
+        for _ in 0..=gi {
+            out = splitmix64(&mut st);
+        }
+        out
+    }
+}
+
+fn check_param(
+    ctx: &dyn Fn(String) -> Error,
+    task: &str,
+    supported: &[&str],
+    seen: &mut Vec<&str>,
+    name: &str,
+) -> Result<()> {
+    let Some(&canon) = supported.iter().find(|&&s| s == name) else {
+        return Err(ctx(format!(
+            "task {task} has no overridable parameter {name:?} (supported: {supported:?})"
+        )));
+    };
+    if seen.contains(&canon) {
+        return Err(ctx(format!("parameter {name:?} set more than once")));
+    }
+    seen.push(canon);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MIXED: &str = "\
+# comment line
+[group]
+task = CartPole-v1
+count = 4
+seed = 11
+time_limit = 200
+reward_clip = true
+param.gravity = 9.8
+jitter.length = 0.4 0.6
+
+[group]
+task = Hopper-v4
+count = 2
+jitter.gravity = 8.0 11.0
+
+[group]
+task = Pong-v5
+count = 2
+";
+
+    #[test]
+    fn parses_the_mixed_example() {
+        let c = ScenarioConfig::parse(MIXED).unwrap();
+        assert_eq!(c.groups.len(), 3);
+        assert_eq!(c.num_envs(), 8);
+        assert_eq!(c.first_env(0), 0);
+        assert_eq!(c.first_env(1), 4);
+        assert_eq!(c.first_env(2), 6);
+        let g = &c.groups[0];
+        assert_eq!(g.task_id, "CartPole-v1");
+        assert_eq!(g.count, 4);
+        assert_eq!(g.seed, Some(11));
+        assert_eq!(g.wrap.time_limit, Some(200));
+        assert!(g.wrap.reward_clip);
+        assert_eq!(g.params, vec![("gravity".to_string(), 9.8)]);
+        assert_eq!(g.jitter, vec![("length".to_string(), 0.4, 0.6)]);
+        assert_eq!(c.groups[2].params, vec![]);
+    }
+
+    #[test]
+    fn round_trips_exactly() {
+        let c = ScenarioConfig::parse(MIXED).unwrap();
+        let text = c.to_text();
+        let c2 = ScenarioConfig::parse(&text).unwrap();
+        assert_eq!(c, c2);
+        // Canonical text is a fixed point.
+        assert_eq!(c2.to_text(), text);
+    }
+
+    #[test]
+    fn group_seed_is_replayable_and_decorrelated() {
+        let c = ScenarioConfig::parse(MIXED).unwrap();
+        // Explicit seed wins regardless of the pool seed.
+        assert_eq!(c.group_seed(0, 1), 11);
+        assert_eq!(c.group_seed(0, 999), 11);
+        // Derived seeds are a pure function of (pool seed, index)…
+        assert_eq!(c.group_seed(1, 5), c.group_seed(1, 5));
+        // …and differ across indices and pool seeds.
+        assert_ne!(c.group_seed(1, 5), c.group_seed(2, 5));
+        assert_ne!(c.group_seed(1, 5), c.group_seed(1, 6));
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        let cases = [
+            ("task = X\n", "outside any"),                       // key before [group]
+            ("[group]\ncount = 1\n", "missing `task`"),          // no task
+            ("[group]\ntask = CartPole-v1\n", "must be > 0"),    // no count
+            ("[group]\ntask = Doom-v0\ncount = 1\n", "unknown environment"),
+            ("[group]\ntask = CartPole-v1\ncount = 1\nbogus = 1\n", "unknown key"),
+            ("[section]\n", "unknown section"),
+            ("[group]\ntask = CartPole-v1\ncount = x\n", "bad count"),
+            ("[group]\ntask = CartPole-v1\ncount = 1\njitter.length = 1\n", "lo hi"),
+            (
+                "[group]\ntask = CartPole-v1\ncount = 1\njitter.length = 2.0 1.0\n",
+                "lo <= hi",
+            ),
+            (
+                "[group]\ntask = CartPole-v1\ncount = 1\nparam.warp = 1.0\n",
+                "no overridable parameter",
+            ),
+            (
+                "[group]\ntask = Acrobot-v1\ncount = 1\nparam.gravity = 9.8\n",
+                "no overridable parameter",
+            ),
+            (
+                "[group]\ntask = CartPole-v1\ncount = 1\nparam.gravity = 9.8\n\
+                 jitter.gravity = 9.0 10.0\n",
+                "more than once",
+            ),
+        ];
+        for (text, needle) in cases {
+            let err = ScenarioConfig::parse(text).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text:?} -> {err}");
+        }
+        assert!(ScenarioConfig::parse("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn float_round_trip_is_bitwise() {
+        let text = "[group]\ntask = CartPole-v1\ncount = 1\nparam.gravity = 9.81\n\
+                    jitter.length = 0.3333333 0.6666667\n";
+        let c = ScenarioConfig::parse(text).unwrap();
+        let c2 = ScenarioConfig::parse(&c.to_text()).unwrap();
+        let (p, p2) = (&c.groups[0].params[0], &c2.groups[0].params[0]);
+        assert_eq!(p.1.to_bits(), p2.1.to_bits());
+        let (j, j2) = (&c.groups[0].jitter[0], &c2.groups[0].jitter[0]);
+        assert_eq!(j.1.to_bits(), j2.1.to_bits());
+        assert_eq!(j.2.to_bits(), j2.2.to_bits());
+    }
+}

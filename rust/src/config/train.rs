@@ -258,6 +258,14 @@ pub struct TrainConfig {
     pub max_policy_lag: Option<u32>,
     /// Directory containing AOT artifacts (PJRT backend only).
     pub artifacts_dir: String,
+    /// Path to a heterogeneous scenario file (`--scenario <file>`;
+    /// see [`crate::config::ScenarioConfig`]). When set, the pool runs
+    /// the scenario's mixed-task lane groups instead of `env_id`;
+    /// requires an `envpool-sync[-vec]` executor, a uniform group spec
+    /// (the trainer rejects ragged mixes), `num_envs` equal to the
+    /// scenario's total lane count, and no pool-level normalization
+    /// flags (wrappers live on the groups).
+    pub scenario: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -291,6 +299,7 @@ impl Default for TrainConfig {
             async_train: false,
             max_policy_lag: None,
             artifacts_dir: "artifacts".into(),
+            scenario: None,
         }
     }
 }
@@ -345,6 +354,9 @@ impl TrainConfig {
             );
         }
         self.artifacts_dir = f.get("artifacts_dir", &self.artifacts_dir);
+        if let Some(s) = f.values.get("scenario") {
+            self.scenario = Some(s.clone());
+        }
         Ok(())
     }
 
@@ -397,6 +409,9 @@ impl TrainConfig {
         }
         if let Some(d) = a.opt("artifacts") {
             self.artifacts_dir = d.to_string();
+        }
+        if let Some(s) = a.opt("scenario") {
+            self.scenario = Some(s.to_string());
         }
         self.validate()
     }
@@ -468,6 +483,35 @@ impl TrainConfig {
                  requires --async-train"
                     .into(),
             ));
+        }
+        if self.scenario.is_some() {
+            if !matches!(
+                self.executor,
+                ExecutorKind::EnvPoolSync | ExecutorKind::EnvPoolSyncVec
+            ) {
+                return Err(Error::Config(format!(
+                    "--scenario runs a heterogeneous pool behind the synchronous EnvPool \
+                     facade; executor {} cannot drive it — use envpool-sync or \
+                     envpool-sync-vec",
+                    self.executor
+                )));
+            }
+            if self.normalize_obs || self.normalize_obs_shared {
+                return Err(Error::Config(
+                    "--scenario pools carry wrappers per group (normalize_obs in the \
+                     scenario file); the pool-level normalization flags cannot combine \
+                     with a scenario"
+                        .into(),
+                ));
+            }
+            if self.eval_episodes > 0 {
+                return Err(Error::Config(
+                    "--eval-episodes evaluates against bare `env_id` environments, \
+                     which a scenario ignores (and whose jittered physics it could \
+                     not reproduce); drop one of the flags"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -668,6 +712,37 @@ mod tests {
             max_policy_lag: Some(0),
             ..TrainConfig::default()
         };
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn scenario_flag_parses_and_validates() {
+        let mut c = TrainConfig::default();
+        let f = KvFile::parse("scenario = examples/scenarios/mixed.scn").unwrap();
+        c.apply_file(&f).unwrap();
+        assert_eq!(c.scenario.as_deref(), Some("examples/scenarios/mixed.scn"));
+        c.apply_args(&Args::parse(["--scenario".into(), "other.scn".into()])).unwrap();
+        assert_eq!(c.scenario.as_deref(), Some("other.scn"));
+
+        // Only the synchronous pool executors may drive a scenario.
+        let c = TrainConfig {
+            scenario: Some("x.scn".into()),
+            executor: ExecutorKind::EnvPoolAsync,
+            batch_size: 4,
+            ..TrainConfig::default()
+        };
+        match c.validate() {
+            Err(Error::Config(msg)) => assert!(msg.contains("envpool-sync"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // Pool-level normalization flags conflict with per-group wrappers.
+        let c = TrainConfig {
+            scenario: Some("x.scn".into()),
+            normalize_obs: true,
+            ..TrainConfig::default()
+        };
+        assert!(c.validate().is_err());
+        let c = TrainConfig { scenario: Some("x.scn".into()), ..TrainConfig::default() };
         c.validate().unwrap();
     }
 

@@ -174,6 +174,39 @@ fn reject_benchmark_only(cfg: &TrainConfig) -> Error {
     ))
 }
 
+/// Load and cross-check the scenario named by `cfg.scenario` (`None`
+/// when the config has none): total lane count must match `num_envs`,
+/// and the groups must share one spec — the trainer's rollout buffers
+/// and policy have a single `[obs_dim]`/action shape, so ragged mixes
+/// are a config error here (the pool itself runs them fine; they are
+/// for throughput work, not this trainer).
+fn load_trainer_scenario(cfg: &TrainConfig) -> Result<Option<crate::config::ScenarioConfig>> {
+    let Some(path) = &cfg.scenario else { return Ok(None) };
+    let sc = crate::config::ScenarioConfig::load(path)?;
+    if sc.num_envs() != cfg.num_envs {
+        return Err(Error::Config(format!(
+            "scenario {path} declares {} envs but num_envs is {}; set --num-envs {}",
+            sc.num_envs(),
+            cfg.num_envs,
+            sc.num_envs()
+        )));
+    }
+    let union = crate::envs::registry::scenario_spec(&sc)?;
+    if union.uniform_group_spec().is_none() {
+        let shapes: Vec<String> = union
+            .groups
+            .iter()
+            .map(|g| format!("{}: obs {:?}", g.task_id, g.spec.obs_shape))
+            .collect();
+        return Err(Error::Config(format!(
+            "the trainer needs every scenario group to share one spec (single policy \
+             head); {path} mixes {}",
+            shapes.join(", ")
+        )));
+    }
+    Ok(Some(sc))
+}
+
 fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
     // Benchmark-only executors first: that rejection is the actionable
     // message (an async pool *does* wrap — it just cannot train).
@@ -216,17 +249,29 @@ fn build_executor(cfg: &TrainConfig) -> Result<Box<dyn VectorEnv>> {
             Box::new(SubprocessExecutor::new(&cfg.env_id, cfg.num_envs, cfg.seed)?)
         }
         ExecutorKind::EnvPoolSync | ExecutorKind::EnvPoolSyncVec => {
-            let wrappers = cfg.wrap_config();
-            let pool = EnvPool::make(
-                PoolConfig::new(&cfg.env_id)
-                    .num_envs(cfg.num_envs)
-                    .sync()
-                    .num_threads(cfg.num_threads)
-                    .seed(cfg.seed)
-                    .exec_mode(cfg.executor.pool_exec_mode())
-                    .wrappers(wrappers)
-                    .lane_pass(cfg.lane_pass),
-            )?;
+            let pool = match load_trainer_scenario(cfg)? {
+                // TrainConfig::validate rejects the normalization flags
+                // with a scenario, so no pool-level wrapper stack here.
+                Some(sc) => EnvPool::make(
+                    PoolConfig::new(&cfg.env_id)
+                        .scenario(sc)
+                        .sync()
+                        .num_threads(cfg.num_threads)
+                        .seed(cfg.seed)
+                        .exec_mode(cfg.executor.pool_exec_mode())
+                        .lane_pass(cfg.lane_pass),
+                )?,
+                None => EnvPool::make(
+                    PoolConfig::new(&cfg.env_id)
+                        .num_envs(cfg.num_envs)
+                        .sync()
+                        .num_threads(cfg.num_threads)
+                        .seed(cfg.seed)
+                        .exec_mode(cfg.executor.pool_exec_mode())
+                        .wrappers(cfg.wrap_config())
+                        .lane_pass(cfg.lane_pass),
+                )?,
+            };
             Box::new(PoolVectorEnv::new(pool)?)
         }
         ExecutorKind::EnvPoolAsync
@@ -361,7 +406,17 @@ pub fn train_profiled(cfg: &TrainConfig) -> Result<(TrainSummary, TimeBreakdown)
     // invariants (non-zero num_steps/num_minibatches, batch bounds, ...)
     // must be enforced here too, not only on the CLI path.
     cfg.validate()?;
-    let env_spec = crate::envs::registry::spec_for_wrapped(&cfg.env_id, &cfg.wrap_config())?;
+    // A scenario's groups must share one spec to train (checked with an
+    // actionable error in `load_trainer_scenario`); the backend then
+    // sees that uniform per-group spec — identical shapes to the
+    // pool's union, since a uniform mix pads nothing.
+    let env_spec = match load_trainer_scenario(cfg)? {
+        Some(sc) => {
+            let union = crate::envs::registry::scenario_spec(&sc)?;
+            union.uniform_group_spec().expect("load_trainer_scenario checked").clone()
+        }
+        None => crate::envs::registry::spec_for_wrapped(&cfg.env_id, &cfg.wrap_config())?,
+    };
     let mut backend: Box<dyn ComputeBackend> = make_backend(cfg, &env_spec)?;
     let bs = backend.spec().clone();
     let t_len = bs.num_steps;

@@ -193,6 +193,62 @@ pub fn run_throughput_lanes(
     Ok(fps * mult)
 }
 
+/// Run `steps` env steps over a heterogeneous scenario pool
+/// (`--scenario` on the bench CLI; the Table 2h mixed-pool number).
+/// The executor must be one of the synchronous pool kinds; frames are
+/// weighted per env by its group's frameskip (a Pong lane contributes
+/// 4 frames per step, a CartPole lane 1 — same accounting the
+/// homogeneous table rows use).
+pub fn run_throughput_scenario(
+    sc: &crate::config::ScenarioConfig,
+    executor: &str,
+    threads: usize,
+    steps: u64,
+    seed: u64,
+    lane_pass: crate::simd::LanePass,
+) -> Result<f64> {
+    let kind: ExecutorKind = executor.parse()?;
+    if !matches!(kind, ExecutorKind::EnvPoolSync | ExecutorKind::EnvPoolSyncVec) {
+        return Err(crate::Error::Config(format!(
+            "scenario throughput runs behind the synchronous pool facade; executor \
+             {kind} cannot drive it — use envpool-sync or envpool-sync-vec"
+        )));
+    }
+    let pool = EnvPool::make(
+        PoolConfig::new("scenario")
+            .scenario(sc.clone())
+            .sync()
+            .num_threads(threads)
+            .seed(seed)
+            .exec_mode(kind.pool_exec_mode())
+            .lane_pass(lane_pass),
+    )?;
+    // Per-env frame weight and action space, from the group views.
+    let spec = pool.spec().clone();
+    let mut mult = Vec::with_capacity(sc.num_envs());
+    for g in &spec.groups {
+        mult.extend(std::iter::repeat(frame_multiplier(&g.task_id)).take(g.count));
+    }
+    let mut ex = crate::executors::PoolVectorEnv::new(pool)?;
+    let mut rng = Pcg32::new(seed ^ 0xBE7C4, 0);
+    let mut out = ex.make_output();
+    ex.reset(&mut out)?;
+    let n = ex.num_envs();
+    let space = spec.action_space.clone();
+    let mut actions = Vec::new();
+    let mut done_steps = 0u64;
+    let mut frames = 0u64;
+    let frames_per_round: u64 = mult.iter().sum();
+    let t0 = Instant::now();
+    while done_steps < steps {
+        random_actions(&space, n, &mut rng, &mut actions);
+        ex.step(&actions, &mut out)?;
+        done_steps += n as u64;
+        frames += frames_per_round;
+    }
+    Ok(frames as f64 / t0.elapsed().as_secs_f64())
+}
+
 fn time_sync_executor(
     ex: &mut dyn VectorEnv,
     steps: u64,
@@ -252,6 +308,24 @@ mod tests {
             .unwrap();
             assert!(fps > 0.0, "{lp} pool: {fps}");
         }
+    }
+
+    #[test]
+    fn scenario_throughput_runs_and_rejects_async_executors() {
+        let sc = crate::config::ScenarioConfig::parse(
+            "[group]\ntask = CartPole-v1\ncount = 3\n\
+             [group]\ntask = Pendulum-v1\ncount = 2\n",
+        )
+        .unwrap();
+        for ex in ["envpool-sync", "envpool-sync-vec"] {
+            let fps =
+                run_throughput_scenario(&sc, ex, 2, 200, 0, crate::simd::LanePass::Auto).unwrap();
+            assert!(fps > 0.0, "{ex}: {fps}");
+        }
+        assert!(
+            run_throughput_scenario(&sc, "envpool-async", 2, 100, 0, crate::simd::LanePass::Auto)
+                .is_err()
+        );
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub(crate) fn spec_for<G: Game>(game: &G) -> EnvSpec {
         obs_shape: vec![STACK, SCREEN, SCREEN],
         action_space: ActionSpace::Discrete(game.n_actions()),
         max_episode_steps: MAX_STEPS,
+        groups: vec![],
     }
 }
 

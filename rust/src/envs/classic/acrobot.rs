@@ -133,13 +133,20 @@ pub(crate) fn spec() -> EnvSpec {
         obs_shape: vec![6],
         action_space: ActionSpace::Discrete(3),
         max_episode_steps: MAX_STEPS,
+        groups: vec![],
     }
 }
 
-/// Per-env RNG stream, keyed identically in the scalar and SoA paths.
+/// Per-env RNG stream, keyed identically in the scalar and SoA paths
+/// (family salt "acr"). Acrobot intentionally exposes **no** scenario
+/// parameter overrides: its `dsdt` core leans on many const-folded
+/// composites (`M1 * LC1 * LC1`, moment-of-inertia sums, ...) whose
+/// runtime recomputation could not be pinned bitwise without a
+/// toolchain run, so overrides are rejected at scenario validation
+/// (see `registry::supported_params`).
 #[inline]
 pub(crate) fn rng(seed: u64, env_id: u64) -> Pcg32 {
-    Pcg32::new(seed ^ 0x616372, env_id)
+    crate::rng::env_rng(seed, 0x616372, env_id)
 }
 
 /// Fresh-episode state draw (RNG call order shared with the SoA kernel).

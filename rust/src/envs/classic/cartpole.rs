@@ -6,13 +6,12 @@ use crate::envs::spec::{ActionSpace, EnvSpec};
 use crate::rng::Pcg32;
 use crate::simd::{math::sin_cos_f32, F32s, Mask};
 
-const GRAVITY: f32 = 9.8;
+pub(crate) const GRAVITY: f32 = 9.8;
 const MASS_CART: f32 = 1.0;
 const MASS_POLE: f32 = 0.1;
 const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
-const LENGTH: f32 = 0.5; // half pole length
-const POLE_MASS_LENGTH: f32 = MASS_POLE * LENGTH;
-const FORCE_MAG: f32 = 10.0;
+pub(crate) const LENGTH: f32 = 0.5; // half pole length
+pub(crate) const FORCE_MAG: f32 = 10.0;
 const TAU: f32 = 0.02;
 const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
 const X_LIMIT: f32 = 2.4;
@@ -31,6 +30,17 @@ pub(crate) fn force_for(action: usize) -> f32 {
     }
 }
 
+/// [`force_for`] with an overridable push magnitude (scenario pools).
+/// `force_for(a) == force_for_p(a, FORCE_MAG)` bitwise.
+#[inline]
+pub(crate) fn force_for_p(action: usize, force_mag: f32) -> f32 {
+    if action == 1 {
+        force_mag
+    } else {
+        -force_mag
+    }
+}
+
 /// One semi-explicit Euler step of the cart-pole dynamics, matching
 /// Gym's "euler" kinematics integrator. Shared by the scalar env and the
 /// struct-of-arrays kernel in [`crate::envs::vector`] so the two paths
@@ -40,13 +50,25 @@ pub(crate) fn force_for(action: usize) -> f32 {
 /// to this reference.
 #[inline]
 pub(crate) fn dynamics(state: [f32; 4], action: usize) -> [f32; 4] {
-    let force = force_for(action);
+    dynamics_p(state, force_for(action), GRAVITY, LENGTH)
+}
+
+/// [`dynamics`] with overridable physics (scenario pools / domain
+/// randomization): per-lane gravity and half pole length, plus the
+/// caller-derived push `force` (±`force_mag`). The composite
+/// `MASS_POLE * length` is recomputed here with the same single IEEE
+/// multiply that const-folds `POLE_MASS_LENGTH`, so at the default
+/// parameters this is bitwise identical to the constant path (pinned
+/// by `param_defaults_are_bitwise` below).
+#[inline]
+pub(crate) fn dynamics_p(state: [f32; 4], force: f32, gravity: f32, length: f32) -> [f32; 4] {
+    let pole_mass_length = MASS_POLE * length;
     let [x, x_dot, theta, theta_dot] = state;
     let (sin_t, cos_t) = sin_cos_f32(theta);
-    let temp = (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin_t) / TOTAL_MASS;
-    let theta_acc = (GRAVITY * sin_t - cos_t * temp)
-        / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
-    let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
+    let temp = (force + pole_mass_length * theta_dot * theta_dot * sin_t) / TOTAL_MASS;
+    let theta_acc = (gravity * sin_t - cos_t * temp)
+        / (length * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
+    let x_acc = temp - pole_mass_length * theta_acc * cos_t / TOTAL_MASS;
     [
         x + TAU * x_dot,
         x_dot + TAU * x_acc,
@@ -66,12 +88,27 @@ pub(crate) fn dynamics_lanes<const W: usize>(
     force: F32s<W>,
 ) -> [F32s<W>; 4] {
     let s = F32s::<W>::splat;
+    dynamics_lanes_p(state, force, s(GRAVITY), s(LENGTH))
+}
+
+/// [`dynamics_p`] over a lane group: gravity and half length arrive as
+/// per-lane vectors (broadcast constants when no override is set, so
+/// the default is bitwise [`dynamics_lanes`]).
+#[inline]
+pub(crate) fn dynamics_lanes_p<const W: usize>(
+    state: [F32s<W>; 4],
+    force: F32s<W>,
+    gravity: F32s<W>,
+    length: F32s<W>,
+) -> [F32s<W>; 4] {
+    let s = F32s::<W>::splat;
+    let pole_mass_length = s(MASS_POLE) * length;
     let [x, x_dot, theta, theta_dot] = state;
     let (sin_t, cos_t) = theta.sin_cos();
-    let temp = (force + s(POLE_MASS_LENGTH) * theta_dot * theta_dot * sin_t) / s(TOTAL_MASS);
-    let theta_acc = (s(GRAVITY) * sin_t - cos_t * temp)
-        / (s(LENGTH) * (s(4.0 / 3.0) - s(MASS_POLE) * cos_t * cos_t / s(TOTAL_MASS)));
-    let x_acc = temp - s(POLE_MASS_LENGTH) * theta_acc * cos_t / s(TOTAL_MASS);
+    let temp = (force + pole_mass_length * theta_dot * theta_dot * sin_t) / s(TOTAL_MASS);
+    let theta_acc = (gravity * sin_t - cos_t * temp)
+        / (length * (s(4.0 / 3.0) - s(MASS_POLE) * cos_t * cos_t / s(TOTAL_MASS)));
+    let x_acc = temp - pole_mass_length * theta_acc * cos_t / s(TOTAL_MASS);
     [
         x + s(TAU) * x_dot,
         x_dot + s(TAU) * x_acc,
@@ -120,13 +157,16 @@ pub(crate) fn spec() -> EnvSpec {
         obs_shape: vec![4],
         action_space: ActionSpace::Discrete(2),
         max_episode_steps: MAX_STEPS,
+        groups: vec![],
     }
 }
 
 /// Per-env RNG stream, keyed identically in the scalar and SoA paths.
+/// CartPole predates family salting, so its salt is 0 (`seed ^ 0 ==
+/// seed` keeps the historical streams bitwise).
 #[inline]
 pub(crate) fn rng(seed: u64, env_id: u64) -> Pcg32 {
-    Pcg32::new(seed, env_id)
+    crate::rng::env_rng(seed, 0, env_id)
 }
 
 impl CartPole {
@@ -253,6 +293,47 @@ mod tests {
                         assert_eq!(out[f].0[i].to_bits(), want[f].to_bits(), "lane {i} field {f}");
                     }
                     assert_eq!(fell_m.0[i], fell(&want), "lane {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn param_defaults_are_bitwise() {
+        // The parameterized twins at the default constants must equal
+        // the constant path bit for bit — this is what lets the SoA
+        // kernels route unconditionally through the `_p` functions
+        // without breaking the no-scenario parity contract. The
+        // `MASS_POLE * length` composite used to be const-folded; pin
+        // that const evaluation and the runtime multiply agree exactly.
+        const POLE_MASS_LENGTH: f32 = MASS_POLE * LENGTH;
+        let length = std::hint::black_box(LENGTH);
+        assert_eq!((MASS_POLE * length).to_bits(), POLE_MASS_LENGTH.to_bits());
+        let mut rng = Pcg32::new(31, 0);
+        for _ in 0..500 {
+            let st = [
+                rng.range(-2.4, 2.4),
+                rng.range(-3.0, 3.0),
+                rng.range(-0.25, 0.25),
+                rng.range(-3.0, 3.0),
+            ];
+            for a in 0..2usize {
+                let want = dynamics(st, a);
+                let got = dynamics_p(st, force_for_p(a, FORCE_MAG), GRAVITY, LENGTH);
+                for f in 0..4 {
+                    assert_eq!(got[f].to_bits(), want[f].to_bits(), "field {f}");
+                }
+                let s = F32s::<4>::splat;
+                let lanes = [s(st[0]), s(st[1]), s(st[2]), s(st[3])];
+                let lw = dynamics_lanes(lanes, s(force_for(a)));
+                let lg = dynamics_lanes_p(
+                    lanes,
+                    s(force_for_p(a, FORCE_MAG)),
+                    s(GRAVITY),
+                    s(LENGTH),
+                );
+                for f in 0..4 {
+                    assert_eq!(lg[f].0[0].to_bits(), lw[f].0[0].to_bits(), "lane field {f}");
                 }
             }
         }

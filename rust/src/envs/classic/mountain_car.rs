@@ -10,8 +10,8 @@ const MIN_POS: f32 = -1.2;
 const MAX_POS: f32 = 0.6;
 const MAX_SPEED: f32 = 0.07;
 const GOAL_POS: f32 = 0.5;
-const FORCE: f32 = 0.001;
-const GRAVITY: f32 = 0.0025;
+pub(crate) const FORCE: f32 = 0.001;
+pub(crate) const GRAVITY: f32 = 0.0025;
 
 /// Maximum episode length (shared with the SoA kernel).
 pub(crate) const MAX_STEPS: usize = 200;
@@ -23,13 +23,15 @@ pub(crate) fn spec() -> EnvSpec {
         obs_shape: vec![2],
         action_space: ActionSpace::Discrete(3),
         max_episode_steps: MAX_STEPS,
+        groups: vec![],
     }
 }
 
-/// Per-env RNG stream, keyed identically in the scalar and SoA paths.
+/// Per-env RNG stream, keyed identically in the scalar and SoA paths
+/// (family salt "mc").
 #[inline]
 pub(crate) fn rng(seed: u64, env_id: u64) -> Pcg32 {
-    Pcg32::new(seed ^ 0x6d63, env_id)
+    crate::rng::env_rng(seed, 0x6d63, env_id)
 }
 
 /// Fresh-episode position draw (velocity starts at 0).
@@ -43,8 +45,16 @@ pub(crate) fn reset_pos(rng: &mut Pcg32) -> f32 {
 /// (cosine via the deterministic shared kernel the lane pass also uses).
 #[inline]
 pub(crate) fn dynamics(pos: f32, vel: f32, action: usize) -> (f32, f32) {
+    dynamics_p(pos, vel, action, FORCE, GRAVITY)
+}
+
+/// [`dynamics`] with overridable push force and gravity (scenario
+/// pools). Both enter the velocity update as direct multiplies, so the
+/// defaults are trivially bitwise identical to the constant path.
+#[inline]
+pub(crate) fn dynamics_p(pos: f32, vel: f32, action: usize, force: f32, gravity: f32) -> (f32, f32) {
     let a = action as f32 - 1.0; // -1, 0, +1
-    let mut vel = vel + a * FORCE - GRAVITY * cos_f32(3.0 * pos);
+    let mut vel = vel + a * force - gravity * cos_f32(3.0 * pos);
     vel = vel.clamp(-MAX_SPEED, MAX_SPEED);
     let pos = (pos + vel).clamp(MIN_POS, MAX_POS);
     if pos <= MIN_POS && vel < 0.0 {
@@ -62,7 +72,21 @@ pub(crate) fn dynamics_lanes<const W: usize>(
     accel: F32s<W>,
 ) -> (F32s<W>, F32s<W>) {
     let s = F32s::<W>::splat;
-    let vel = (vel + accel * s(FORCE) - s(GRAVITY) * (s(3.0) * pos).cos())
+    dynamics_lanes_p(pos, vel, accel, s(FORCE), s(GRAVITY))
+}
+
+/// [`dynamics_p`] over a lane group: per-lane force/gravity vectors
+/// (broadcast constants when no override is set).
+#[inline]
+pub(crate) fn dynamics_lanes_p<const W: usize>(
+    pos: F32s<W>,
+    vel: F32s<W>,
+    accel: F32s<W>,
+    force: F32s<W>,
+    gravity: F32s<W>,
+) -> (F32s<W>, F32s<W>) {
+    let s = F32s::<W>::splat;
+    let vel = (vel + accel * force - gravity * (s(3.0) * pos).cos())
         .clamp(-MAX_SPEED, MAX_SPEED);
     let pos = (pos + vel).clamp(MIN_POS, MAX_POS);
     // inelastic left wall: vel = 0 where pos <= MIN_POS && vel < 0

@@ -9,9 +9,9 @@ use crate::simd::{math::sin_cos_f32, math::sin_f32, F32s};
 const MAX_SPEED: f32 = 8.0;
 const MAX_TORQUE: f32 = 2.0;
 const DT: f32 = 0.05;
-const G: f32 = 10.0;
-const M: f32 = 1.0;
-const L: f32 = 1.0;
+pub(crate) const G: f32 = 10.0;
+pub(crate) const M: f32 = 1.0;
+pub(crate) const L: f32 = 1.0;
 
 /// Pendulum environment. Observation `[cos θ, sin θ, θ̇]`, one torque
 /// action in `[-2, 2]`, reward `-(θ² + 0.1 θ̇² + 0.001 u²)`.
@@ -39,13 +39,15 @@ pub(crate) fn spec() -> EnvSpec {
         obs_shape: vec![3],
         action_space: ActionSpace::Continuous { dim: 1, low: -MAX_TORQUE, high: MAX_TORQUE },
         max_episode_steps: MAX_STEPS,
+        groups: vec![],
     }
 }
 
-/// Per-env RNG stream, keyed identically in the scalar and SoA paths.
+/// Per-env RNG stream, keyed identically in the scalar and SoA paths
+/// (family salt "pen").
 #[inline]
 pub(crate) fn rng(seed: u64, env_id: u64) -> Pcg32 {
-    Pcg32::new(seed ^ 0x70656e, env_id)
+    crate::rng::env_rng(seed, 0x70656e, env_id)
 }
 
 /// Fresh-episode state draw: `(theta, theta_dot)` in RNG call order.
@@ -62,11 +64,28 @@ pub(crate) fn reset_state(rng: &mut Pcg32) -> (f32, f32) {
 /// deterministic shared kernel the lane pass also uses).
 #[inline]
 pub(crate) fn dynamics(theta: f32, theta_dot: f32, action: f32) -> (f32, f32, f32) {
+    dynamics_p(theta, theta_dot, action, G, M, L)
+}
+
+/// [`dynamics`] with overridable physics (scenario pools): gravity,
+/// pendulum mass and length. The two composites are recomputed with the
+/// exact op order of the const expressions (`3.0 * g / (2.0 * l)` and
+/// `3.0 / (m * l * l)`), so the defaults are bitwise identical to the
+/// constant path (pinned by `param_defaults_are_bitwise` below).
+#[inline]
+pub(crate) fn dynamics_p(
+    theta: f32,
+    theta_dot: f32,
+    action: f32,
+    g: f32,
+    m: f32,
+    l: f32,
+) -> (f32, f32, f32) {
     let u = action.clamp(-MAX_TORQUE, MAX_TORQUE);
     let th = angle_normalize(theta);
     let cost = th * th + 0.1 * theta_dot * theta_dot + 0.001 * u * u;
     let mut theta_dot =
-        theta_dot + (3.0 * G / (2.0 * L) * sin_f32(theta) + 3.0 / (M * L * L) * u) * DT;
+        theta_dot + (3.0 * g / (2.0 * l) * sin_f32(theta) + 3.0 / (m * l * l) * u) * DT;
     theta_dot = theta_dot.clamp(-MAX_SPEED, MAX_SPEED);
     let theta = theta + theta_dot * DT;
     (theta, theta_dot, cost)
@@ -83,11 +102,29 @@ pub(crate) fn dynamics_lanes<const W: usize>(
     action: F32s<W>,
 ) -> (F32s<W>, F32s<W>, F32s<W>) {
     let s = F32s::<W>::splat;
+    dynamics_lanes_p(theta, theta_dot, action, s(G), s(M), s(L))
+}
+
+/// [`dynamics_p`] over a lane group: per-lane gravity/mass/length
+/// vectors (broadcast constants when no override is set — the two
+/// composite coefficients are rebuilt with the const expressions' op
+/// order so the default is bitwise [`dynamics_lanes`]).
+#[inline]
+pub(crate) fn dynamics_lanes_p<const W: usize>(
+    theta: F32s<W>,
+    theta_dot: F32s<W>,
+    action: F32s<W>,
+    g: F32s<W>,
+    m: F32s<W>,
+    l: F32s<W>,
+) -> (F32s<W>, F32s<W>, F32s<W>) {
+    let s = F32s::<W>::splat;
     let u = action.clamp(-MAX_TORQUE, MAX_TORQUE);
     let th = F32s::from_fn(|i| angle_normalize(theta.0[i]));
     let cost = th * th + s(0.1) * theta_dot * theta_dot + s(0.001) * u * u;
-    let theta_dot = (theta_dot
-        + (s(3.0 * G / (2.0 * L)) * theta.sin() + s(3.0 / (M * L * L)) * u) * s(DT))
+    let swing = s(3.0) * g / (s(2.0) * l);
+    let torque = s(3.0) / (m * l * l);
+    let theta_dot = (theta_dot + (swing * theta.sin() + torque * u) * s(DT))
         .clamp(-MAX_SPEED, MAX_SPEED);
     let theta = theta + theta_dot * s(DT);
     (theta, theta_dot, cost)
@@ -178,6 +215,38 @@ mod tests {
             let s = env.step(&[0.0], &mut obs);
             assert!(!s.done);
             assert_eq!(s.truncated, t == 199);
+        }
+    }
+
+    #[test]
+    fn param_defaults_are_bitwise() {
+        // Routing through the `_p` twins with broadcast defaults must
+        // not move a single bit — the contract that lets SoaKernel use
+        // them unconditionally. The composites used to be const-folded;
+        // pin that rustc's const evaluation and the runtime recompute
+        // agree exactly (black_box keeps the right side at runtime).
+        use std::hint::black_box;
+        const SWING: f32 = 3.0 * G / (2.0 * L);
+        const TORQUE: f32 = 3.0 / (M * L * L);
+        let (g, m, l) = (black_box(G), black_box(M), black_box(L));
+        assert_eq!((3.0 * g / (2.0 * l)).to_bits(), SWING.to_bits());
+        assert_eq!((3.0 / (m * l * l)).to_bits(), TORQUE.to_bits());
+        let mut r = Pcg32::new(19, 0);
+        for _ in 0..500 {
+            let th = r.range(-4.0, 4.0);
+            let td = r.range(-8.0, 8.0);
+            let a = r.range(-2.5, 2.5);
+            let want = dynamics(th, td, a);
+            let got = dynamics_p(th, td, a, G, M, L);
+            assert_eq!(got.0.to_bits(), want.0.to_bits());
+            assert_eq!(got.1.to_bits(), want.1.to_bits());
+            assert_eq!(got.2.to_bits(), want.2.to_bits());
+            let s = F32s::<4>::splat;
+            let lw = dynamics_lanes(s(th), s(td), s(a));
+            let lg = dynamics_lanes_p(s(th), s(td), s(a), s(G), s(M), s(L));
+            assert_eq!(lg.0 .0[0].to_bits(), lw.0 .0[0].to_bits());
+            assert_eq!(lg.1 .0[0].to_bits(), lw.1 .0[0].to_bits());
+            assert_eq!(lg.2 .0[0].to_bits(), lw.2 .0[0].to_bits());
         }
     }
 

@@ -172,6 +172,16 @@ pub struct WorldBatch {
     init_vel_x: Vec<f32>,
     init_vel_y: Vec<f32>,
     init_omega: Vec<f32>,
+    // --- per-lane physics parameters (scenario pools / domain
+    //     randomization), indexed [lane]. Defaults are the broadcast
+    //     constants (GRAVITY, 1.0), which keeps the no-override path
+    //     bitwise identical: `grav[l] * dt` with the default is the
+    //     same IEEE multiply that const-folded `GRAVITY * dt`, and
+    //     `tau * 1.0` is exact. Deliberately NOT cleared by
+    //     `reset_lane` — a lane keeps its drawn parameters across
+    //     episode resets (the scenario replayability contract). ---
+    grav: Vec<f32>,
+    gear_scale: Vec<f32>,
     // --- per-lane body state, indexed [body * lanes + lane] ---
     pub pos_x: Vec<f32>,
     pub pos_y: Vec<f32>,
@@ -241,6 +251,8 @@ impl WorldBatch {
             limit_hi: proto.joints.iter().map(|j| j.limit.map_or(0.0, |l| l.1)).collect(),
             ref_angle: proto.joints.iter().map(|j| j.ref_angle).collect(),
             gear: proto.joints.iter().map(|j| j.gear).collect(),
+            grav: vec![GRAVITY; lanes],
+            gear_scale: vec![1.0; lanes],
             pos_x: rep(&init_pos_x),
             pos_y: rep(&init_pos_y),
             angle: rep(&init_angle),
@@ -272,6 +284,21 @@ impl WorldBatch {
     /// Number of lanes in the batch.
     pub fn lanes(&self) -> usize {
         self.lanes
+    }
+
+    /// Override the per-lane gravity (scenario pools / domain
+    /// randomization). `values.len()` must equal the lane count.
+    pub fn set_gravity_lanes(&mut self, values: &[f32]) {
+        assert_eq!(values.len(), self.lanes, "gravity lane count");
+        self.grav.copy_from_slice(values);
+    }
+
+    /// Override the per-lane motor gear multiplier (applied on top of
+    /// the per-joint topology gear). `values.len()` must equal the lane
+    /// count; 1.0 is the identity.
+    pub fn set_gear_scale_lanes(&mut self, values: &[f32]) {
+        assert_eq!(values.len(), self.lanes, "gear_scale lane count");
+        self.gear_scale.copy_from_slice(values);
     }
 
     /// Bodies per lane.
@@ -453,7 +480,10 @@ impl WorldBatch {
             }
             let bi = b * lanes + g;
             let vx = ldc::<W>(&self.vel_x, bi, n);
-            let vy = ldc::<W>(&self.vel_y, bi, n) - s(GRAVITY * dt);
+            // Per-lane gravity: `grav[l] * dt` with the default lane
+            // value GRAVITY is the same IEEE multiply as the old
+            // broadcast `GRAVITY * dt` — bitwise identical.
+            let vy = ldc::<W>(&self.vel_y, bi, n) - ldc::<W>(&self.grav, g, n) * s(dt);
             let om = ldc::<W>(&self.omega, bi, n);
             stc(&mut self.vel_x, bi, act, vx * s(damp));
             stc(&mut self.vel_y, bi, act, vy * s(damp));
@@ -473,6 +503,9 @@ impl WorldBatch {
                     0.0
                 }
             });
+            // Per-lane motor scaling; masked lanes stay 0.0 and the
+            // default 1.0 multiply is exact, so no-override is bitwise.
+            let tau = tau * ldc::<W>(&self.gear_scale, g, n);
             ci += 1;
             let ai = a * lanes + g;
             let bi = b * lanes + g;

@@ -48,7 +48,7 @@ impl Task {
 /// reproduce the stream against the AoS reference stepper.
 #[inline]
 pub fn make_rng(seed: u64, env_id: u64) -> Pcg32 {
-    Pcg32::new(seed ^ 0x6d6a63, env_id)
+    crate::rng::env_rng(seed, 0x6d6a63, env_id)
 }
 
 /// Gym-style reset noise on pose and velocity, on an AoS
@@ -77,6 +77,7 @@ pub(crate) fn spec_for_task(task: Task, n: usize) -> EnvSpec {
         obs_shape: vec![2 + n + 3 + n],
         action_space: ActionSpace::Continuous { dim: n, low: -1.0, high: 1.0 },
         max_episode_steps: 1000,
+        groups: vec![],
     }
 }
 

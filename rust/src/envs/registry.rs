@@ -37,6 +37,33 @@ pub const ALL_TASKS: &[&str] = &[
     "cheetah_run",
 ];
 
+/// The error every unknown-task path returns: names the offending id
+/// *and* the full registered list, sorted, so a typo'd config points
+/// straight at the fix instead of requiring a source dive.
+pub fn unknown_env(task_id: &str) -> Error {
+    let mut known: Vec<&str> = ALL_TASKS.to_vec();
+    known.sort_unstable();
+    Error::UnknownEnv(format!("{task_id} (registered tasks: {})", known.join(", ")))
+}
+
+/// Physics parameters a task accepts through
+/// [`VecEnv::set_param_lanes`], in parameter-index order — the order
+/// scenario jitter streams are keyed by, so it is part of the
+/// replayability contract (mirrors each kernel's `param_names`; pinned
+/// by a test below). Tasks without an entry expose nothing: Atari has
+/// no physics, and Acrobot's RK4 composites are const-folded in a way
+/// that cannot be pinned bitwise against a runtime recompute, so it
+/// deliberately rejects overrides.
+pub fn supported_params(task_id: &str) -> &'static [&'static str] {
+    match task_id {
+        "CartPole-v1" => &["gravity", "length", "force_mag"],
+        "Pendulum-v1" => &["gravity", "mass", "length"],
+        "MountainCar-v0" => &["force", "gravity"],
+        "Hopper-v4" | "HalfCheetah-v4" | "Ant-v4" | "cheetah_run" => &["gravity", "gear_scale"],
+        _ => &[],
+    }
+}
+
 /// The standard wrapper stack, applied engine-side as in EnvPool.
 /// Composition order (innermost first): time limit → reward clip →
 /// observation normalization. The same config produces an identical
@@ -106,7 +133,7 @@ pub fn make_env(task_id: &str, seed: u64, env_id: u64) -> Result<Box<dyn Env>> {
         "HalfCheetah-v4" => Box::new(WalkerEnv::new(Task::HalfCheetah, seed, env_id)),
         "Ant-v4" => Box::new(WalkerEnv::new(Task::Ant, seed, env_id)),
         "cheetah_run" => Box::new(CheetahRun::new(seed, env_id)),
-        other => return Err(Error::UnknownEnv(other.to_string())),
+        other => return Err(unknown_env(other)),
     })
 }
 
@@ -161,7 +188,7 @@ pub fn make_vec_env(
         "HalfCheetah-v4" => Box::new(WalkerVec::new(Task::HalfCheetah, seed, first_env_id, count)),
         "Ant-v4" => Box::new(WalkerVec::new(Task::Ant, seed, first_env_id, count)),
         "cheetah_run" => Box::new(CheetahRunVec::new(seed, first_env_id, count)),
-        other => return Err(Error::UnknownEnv(other.to_string())),
+        other => return Err(unknown_env(other)),
     })
 }
 
@@ -221,6 +248,160 @@ pub fn make_vec_env_wrapped(
     Ok(env)
 }
 
+/// Resolve a scenario group's per-lane parameter values: fixed
+/// `param.*` overrides broadcast to every lane, then each `jitter.*`
+/// range drawn lane-by-lane from a dedicated PCG32 stream keyed
+/// `(group_seed ^ JITTER_SALT, parameter index)` — index taken from
+/// [`supported_params`] order, so the draw is independent of file
+/// ordering, exec mode, chunking and thread count. Returns
+/// `(name, one value per lane)` pairs.
+pub fn resolve_lane_params(
+    group: &crate::config::ScenarioGroup,
+    group_seed: u64,
+) -> Vec<(String, Vec<f32>)> {
+    use crate::config::scenario::JITTER_SALT;
+    let supported = supported_params(&group.task_id);
+    let mut out = Vec::new();
+    for (name, v) in &group.params {
+        out.push((name.clone(), vec![*v; group.count]));
+    }
+    for (name, lo, hi) in &group.jitter {
+        // Validated names only reach here (ScenarioConfig::parse).
+        let pi = supported.iter().position(|&s| s == name.as_str()).expect("validated") as u64;
+        let mut rng = crate::rng::Pcg32::new(group_seed ^ JITTER_SALT, pi);
+        let lanes = (0..group.count).map(|_| rng.range(*lo, *hi)).collect();
+        out.push((name.clone(), lanes));
+    }
+    out
+}
+
+/// Build group `gi` of a scenario as one full-width [`VecEnv`]: the
+/// task's real kernel at the group's whole lane count, parameters
+/// resolved and applied, then the group's wrapper stack. The kernel is
+/// seeded with the **group seed** and group-local env ids `0..count`,
+/// so its lanes draw exactly the streams of a homogeneous pool built
+/// with the same seed — the mixed-vs-homogeneous parity contract.
+pub fn make_scenario_group(
+    sc: &crate::config::ScenarioConfig,
+    gi: usize,
+    pool_seed: u64,
+) -> Result<Box<dyn VecEnv>> {
+    let g = &sc.groups[gi];
+    let seed = sc.group_seed(gi, pool_seed);
+    let mut env = make_vec_env_wrapped(&g.task_id, seed, 0, g.count, &g.wrap)?;
+    for (name, lanes) in resolve_lane_params(g, seed) {
+        if !env.set_param_lanes(&name, &lanes) {
+            return Err(Error::Config(format!(
+                "task {} rejected parameter {name:?} (supported: {:?})",
+                g.task_id,
+                supported_params(&g.task_id)
+            )));
+        }
+    }
+    Ok(env)
+}
+
+/// Build one env of a scenario group as a scalar [`Env`] — lane `lane`
+/// of group `gi`, as a one-lane kernel behind the
+/// [`VecLaneEnv`](crate::pool::hetero::VecLaneEnv) adapter. Because
+/// env RNG streams are keyed by `(group seed, group-local env id)` and
+/// jitter values are resolved for the whole group before slicing out
+/// this lane, the env is bitwise the same lane of
+/// [`make_scenario_group`] — scenario pools behave identically under
+/// `ExecMode::Scalar` and `ExecMode::Vectorized`.
+pub fn make_scenario_env(
+    sc: &crate::config::ScenarioConfig,
+    gi: usize,
+    lane: usize,
+    pool_seed: u64,
+) -> Result<Box<dyn Env>> {
+    let g = &sc.groups[gi];
+    let seed = sc.group_seed(gi, pool_seed);
+    let mut env = make_vec_env_wrapped(&g.task_id, seed, lane as u64, 1, &g.wrap)?;
+    for (name, lanes) in resolve_lane_params(g, seed) {
+        if !env.set_param_lanes(&name, &lanes[lane..lane + 1]) {
+            return Err(Error::Config(format!(
+                "task {} rejected parameter {name:?}",
+                g.task_id
+            )));
+        }
+    }
+    Ok(Box::new(crate::pool::hetero::VecLaneEnv::new(env)))
+}
+
+/// The union [`EnvSpec`] of a scenario: per-group views in env-id
+/// order, observation shape and action width padded to the widest
+/// group (rows are zero-filled past a group's own width), episode
+/// limit the max. If every group shares one action space the union
+/// keeps it verbatim; a genuine mix is carried as a continuous box
+/// wide enough for every group (the pool only uses its `dim()` for
+/// buffer strides — per-group semantics live in the views).
+pub fn scenario_spec(sc: &crate::config::ScenarioConfig) -> Result<EnvSpec> {
+    use super::spec::{ActionSpace, GroupView};
+    sc.validate()?;
+    let mut groups = Vec::new();
+    let mut first = 0;
+    for g in &sc.groups {
+        let spec = spec_for_wrapped(&g.task_id, &g.wrap)?;
+        groups.push(GroupView {
+            task_id: g.task_id.clone(),
+            first_env: first,
+            count: g.count,
+            spec,
+        });
+        first += g.count;
+    }
+    let obs_dim = groups.iter().map(|g| g.spec.obs_dim()).max().unwrap();
+    let max_steps = groups.iter().map(|g| g.spec.max_episode_steps).max().unwrap();
+    let first_space = &groups[0].spec.action_space;
+    let action_space = if groups.iter().all(|g| &g.spec.action_space == first_space) {
+        first_space.clone()
+    } else {
+        let dim = groups.iter().map(|g| g.spec.action_space.dim()).max().unwrap();
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for g in &groups {
+            match g.spec.action_space {
+                // Discrete ids ride the wire as f32 action ids.
+                ActionSpace::Discrete(n) => {
+                    lo = lo.min(0.0);
+                    hi = hi.max((n - 1) as f32);
+                }
+                ActionSpace::Continuous { low, high, .. } => {
+                    lo = lo.min(low);
+                    hi = hi.max(high);
+                }
+            }
+        }
+        ActionSpace::Continuous { dim, low: lo, high: hi }
+    };
+    let ids: Vec<&str> = groups.iter().map(|g| g.task_id.as_str()).collect();
+    Ok(EnvSpec {
+        id: format!("scenario[{}]", ids.join("+")),
+        obs_shape: vec![obs_dim],
+        action_space,
+        max_episode_steps: max_steps,
+        groups,
+    })
+}
+
+/// Build every group of a scenario and compose them behind the
+/// [`VecEnv`] trait as one
+/// [`GroupedVecEnv`](crate::pool::hetero::GroupedVecEnv) — the
+/// heterogeneous pool backend (issue-level entry point; the pool's
+/// vectorized engine instead builds one chunk per group so groups step
+/// on separate workers).
+pub fn make_scenario_pool(
+    sc: &crate::config::ScenarioConfig,
+    pool_seed: u64,
+) -> Result<crate::pool::hetero::GroupedVecEnv> {
+    let spec = scenario_spec(sc)?;
+    let backends = (0..sc.groups.len())
+        .map(|gi| make_scenario_group(sc, gi, pool_seed))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(crate::pool::hetero::GroupedVecEnv::new(backends, spec))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +427,92 @@ mod tests {
     fn unknown_task_errors() {
         assert!(matches!(make_env("Doom-v0", 0, 0), Err(Error::UnknownEnv(_))));
         assert!(matches!(make_vec_env("Doom-v0", 0, 0, 1), Err(Error::UnknownEnv(_))));
+    }
+
+    #[test]
+    fn unknown_task_error_lists_all_tasks_sorted() {
+        let msg = make_env("Doom-v0", 0, 0).unwrap_err().to_string();
+        assert!(msg.contains("Doom-v0"));
+        // Complete: every registered id appears…
+        let mut sorted: Vec<&str> = ALL_TASKS.to_vec();
+        sorted.sort_unstable();
+        for t in &sorted {
+            assert!(msg.contains(t), "error must list {t}: {msg}");
+        }
+        // …and sorted: first occurrences are in ascending position.
+        let tail = &msg[msg.find("registered tasks:").unwrap()..];
+        let positions: Vec<usize> = sorted.iter().map(|t| tail.find(*t).unwrap()).collect();
+        assert!(
+            positions.windows(2).all(|w| w[0] < w[1]),
+            "task list must be sorted: {msg}"
+        );
+        // Both constructors produce the identical message.
+        assert_eq!(msg, make_vec_env("Doom-v0", 0, 0, 1).unwrap_err().to_string());
+    }
+
+    #[test]
+    fn supported_params_mirror_kernel_param_names() {
+        // The registry table is the scenario layer's validation source;
+        // each kernel's `param_names` is what `set_param_lanes` accepts.
+        // They must agree exactly (order included — jitter streams are
+        // keyed by index).
+        for &task in ALL_TASKS {
+            let v = make_vec_env(task, 0, 0, 1).unwrap();
+            assert_eq!(v.param_names(), supported_params(task), "{task}");
+        }
+        assert_eq!(supported_params("not-a-task"), &[] as &[&str]);
+    }
+
+    #[test]
+    fn scenario_spec_builds_views_and_union() {
+        use crate::config::ScenarioConfig;
+        let sc = ScenarioConfig::parse(
+            "[group]\ntask = CartPole-v1\ncount = 4\n\
+             [group]\ntask = Hopper-v4\ncount = 2\n\
+             [group]\ntask = Pong-v5\ncount = 2\n",
+        )
+        .unwrap();
+        let spec = scenario_spec(&sc).unwrap();
+        assert!(spec.is_grouped());
+        assert_eq!(spec.groups.len(), 3);
+        assert_eq!(spec.groups[1].first_env, 4);
+        assert_eq!(spec.groups[2].first_env, 6);
+        // Union widths: Pong obs dominates (4*84*84), Hopper act (3).
+        assert_eq!(spec.obs_dim(), 4 * 84 * 84);
+        assert_eq!(spec.action_space.dim(), 3);
+        assert_eq!(spec.max_episode_steps, 108_000);
+        assert_eq!(spec.uniform_group_spec(), None);
+        // A single-task scenario collapses to the task spec's shape.
+        let uni = ScenarioConfig::parse("[group]\ntask = Pendulum-v1\ncount = 3\n").unwrap();
+        let uspec = scenario_spec(&uni).unwrap();
+        assert_eq!(
+            uspec.uniform_group_spec().unwrap(),
+            &spec_for("Pendulum-v1").unwrap()
+        );
+    }
+
+    #[test]
+    fn resolve_lane_params_is_replayable_and_in_range() {
+        use crate::config::ScenarioConfig;
+        let sc = ScenarioConfig::parse(
+            "[group]\ntask = CartPole-v1\ncount = 8\nparam.gravity = 9.0\n\
+             jitter.length = 0.4 0.6\njitter.force_mag = 8.0 12.0\n",
+        )
+        .unwrap();
+        let a = resolve_lane_params(&sc.groups[0], 99);
+        let b = resolve_lane_params(&sc.groups[0], 99);
+        assert_eq!(a, b, "same group seed must reproduce identical draws");
+        let c = resolve_lane_params(&sc.groups[0], 100);
+        assert_ne!(a, c, "different group seed must redraw jitters");
+        let by_name: std::collections::BTreeMap<&str, &Vec<f32>> =
+            a.iter().map(|(n, v)| (n.as_str(), v)).collect();
+        assert!(by_name["gravity"].iter().all(|&v| v == 9.0));
+        assert!(by_name["length"].iter().all(|&v| (0.4..0.6).contains(&v)));
+        assert!(by_name["force_mag"].iter().all(|&v| (8.0..12.0).contains(&v)));
+        // Jittered lanes genuinely vary.
+        assert!(by_name["length"].windows(2).any(|w| w[0] != w[1]));
+        // Fixed overrides stay fixed across pool seeds (param, not jitter).
+        assert_eq!(by_name["gravity"], c.iter().find(|(n, _)| n == "gravity").map(|(_, v)| v).unwrap());
     }
 
     #[test]

@@ -44,6 +44,21 @@ impl ActionSpace {
     }
 }
 
+/// One lane group of a heterogeneous (scenario) pool, as seen from the
+/// pool's union [`EnvSpec`]: which task occupies which contiguous run of
+/// global env ids, and that group's own (un-padded) spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupView {
+    /// Task id of this group.
+    pub task_id: String,
+    /// First global env id of the group (groups are contiguous).
+    pub first_env: usize,
+    /// Number of envs (lanes) in the group.
+    pub count: usize,
+    /// The group's own spec (`groups` empty — views don't nest).
+    pub spec: EnvSpec,
+}
+
 /// Static environment metadata; one per task id.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EnvSpec {
@@ -55,12 +70,41 @@ pub struct EnvSpec {
     pub action_space: ActionSpace,
     /// Episode step limit applied by the standard wrapper stack.
     pub max_episode_steps: usize,
+    /// Per-group views for heterogeneous (scenario) pools, in global
+    /// env-id order. Empty for ordinary single-task specs. When
+    /// non-empty, `obs_shape`/`action_space` describe the **padded
+    /// union** (max dims across groups; rows are zero-padded past each
+    /// group's own width) — consumers either assert a uniform spec via
+    /// [`EnvSpec::uniform_group_spec`] or handle the padding.
+    pub groups: Vec<GroupView>,
 }
 
 impl EnvSpec {
     /// Flattened observation length.
     pub fn obs_dim(&self) -> usize {
         self.obs_shape.iter().product()
+    }
+
+    /// Is this a heterogeneous (multi-group) union spec?
+    pub fn is_grouped(&self) -> bool {
+        !self.groups.is_empty()
+    }
+
+    /// If every group shares one task spec (or the spec has no groups
+    /// at all), the uniform per-env spec; `None` when groups genuinely
+    /// mix shapes/spaces. Trainers use this to reject ragged mixes.
+    pub fn uniform_group_spec(&self) -> Option<&EnvSpec> {
+        match self.groups.split_first() {
+            None => Some(self),
+            Some((first, rest)) => rest
+                .iter()
+                .all(|g| {
+                    g.spec.obs_shape == first.spec.obs_shape
+                        && g.spec.action_space == first.spec.action_space
+                        && g.spec.max_episode_steps == first.spec.max_episode_steps
+                })
+                .then_some(&first.spec),
+        }
     }
 }
 
@@ -75,10 +119,33 @@ mod tests {
             obs_shape: vec![4, 84, 84],
             action_space: ActionSpace::Discrete(6),
             max_episode_steps: 108_000,
+            groups: vec![],
         };
         assert_eq!(s.obs_dim(), 4 * 84 * 84);
         assert_eq!(s.action_space.dim(), 1);
         assert!(s.action_space.is_discrete());
+        assert!(!s.is_grouped());
+        assert_eq!(s.uniform_group_spec(), Some(&s));
+    }
+
+    #[test]
+    fn uniform_group_spec_detects_mixes() {
+        let base = |dim: usize| EnvSpec {
+            id: "t".into(),
+            obs_shape: vec![dim],
+            action_space: ActionSpace::Discrete(2),
+            max_episode_steps: 100,
+            groups: vec![],
+        };
+        let mut union = base(4);
+        union.groups = vec![
+            GroupView { task_id: "t".into(), first_env: 0, count: 2, spec: base(4) },
+            GroupView { task_id: "t".into(), first_env: 2, count: 2, spec: base(4) },
+        ];
+        assert!(union.is_grouped());
+        assert_eq!(union.uniform_group_spec(), Some(&base(4)));
+        union.groups[1].spec = base(3);
+        assert_eq!(union.uniform_group_spec(), None);
     }
 
     #[test]

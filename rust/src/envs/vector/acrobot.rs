@@ -4,7 +4,7 @@
 //! the whole RK4 integration over lane groups via `dynamics_lanes`,
 //! bitwise identical to the scalar env at every lane width.
 
-use super::{LaneDynamics, SoaKernel};
+use super::{LaneDynamics, SoaKernel, MAX_PARAMS};
 use crate::envs::classic::acrobot;
 use crate::envs::env::discrete_action;
 use crate::envs::spec::EnvSpec;
@@ -12,7 +12,11 @@ use crate::rng::Pcg32;
 use crate::simd::{F32s, Mask};
 
 /// Acrobot's dynamics/terminal/reward rules for the shared driver.
-/// State lanes are `[theta1, theta2, dtheta1, dtheta2]`.
+/// State lanes are `[theta1, theta2, dtheta1, dtheta2]`. Acrobot
+/// intentionally exposes **no** overridable physics (`param_names` is
+/// empty): its RK4 `dsdt` composites are const-folded and cannot be
+/// pinned bitwise against a runtime recompute without a toolchain, so
+/// scenario validation rejects parameter overrides for this task.
 pub struct AcrobotDyn;
 
 impl LaneDynamics<4> for AcrobotDyn {
@@ -32,7 +36,13 @@ impl LaneDynamics<4> for AcrobotDyn {
         acrobot::reset_state(rng)
     }
 
-    fn step1(&self, s: [f32; 4], actions: &[f32], lane: usize) -> ([f32; 4], bool, f32) {
+    fn step1(
+        &self,
+        s: [f32; 4],
+        actions: &[f32],
+        lane: usize,
+        _p: &[f32; MAX_PARAMS],
+    ) -> ([f32; 4], bool, f32) {
         let a = discrete_action(&actions[lane..lane + 1], 3);
         let s2 = acrobot::dynamics(s, a);
         let done = acrobot::is_terminal(&s2);
@@ -47,6 +57,7 @@ impl LaneDynamics<4> for AcrobotDyn {
         &self,
         s: [F32s<W>; 4],
         u: F32s<W>,
+        _p: &[F32s<W>; MAX_PARAMS],
     ) -> ([F32s<W>; 4], Mask<W>, F32s<W>) {
         let s2 = acrobot::dynamics_lanes(s, u);
         let term = acrobot::is_terminal_lanes(s2[0], s2[1]);

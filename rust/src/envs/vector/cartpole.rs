@@ -6,7 +6,7 @@
 //! operations in the same order as the scalar `dynamics` (see
 //! `tests/simd_parity.rs`).
 
-use super::{LaneDynamics, SoaKernel};
+use super::{LaneDynamics, SoaKernel, MAX_PARAMS};
 use crate::envs::classic::cartpole;
 use crate::envs::env::discrete_action;
 use crate::envs::spec::EnvSpec;
@@ -14,6 +14,8 @@ use crate::rng::Pcg32;
 use crate::simd::{F32s, Mask};
 
 /// CartPole's dynamics/terminal/reward rules for the shared driver.
+/// Overridable physics (scenario pools): `gravity`, `length` (half pole
+/// length), `force_mag` — slots 0..3 of the parameter lanes.
 pub struct CartPoleDyn;
 
 impl LaneDynamics<4> for CartPoleDyn {
@@ -33,23 +35,46 @@ impl LaneDynamics<4> for CartPoleDyn {
         cartpole::reset_state(rng)
     }
 
-    fn step1(&self, s: [f32; 4], actions: &[f32], lane: usize) -> ([f32; 4], bool, f32) {
+    fn param_names(&self) -> &'static [&'static str] {
+        &["gravity", "length", "force_mag"]
+    }
+
+    fn default_params(&self) -> [f32; MAX_PARAMS] {
+        [cartpole::GRAVITY, cartpole::LENGTH, cartpole::FORCE_MAG, 0.0]
+    }
+
+    fn step1(
+        &self,
+        s: [f32; 4],
+        actions: &[f32],
+        lane: usize,
+        p: &[f32; MAX_PARAMS],
+    ) -> ([f32; 4], bool, f32) {
         let a = discrete_action(&actions[lane..lane + 1], 2);
-        let s2 = cartpole::dynamics(s, a);
+        let s2 = cartpole::dynamics_p(s, cartpole::force_for_p(a, p[2]), p[0], p[1]);
         let fell = cartpole::fell(&s2);
         (s2, fell, 1.0)
     }
 
     fn input(&self, actions: &[f32], lane: usize) -> f32 {
-        cartpole::force_for(discrete_action(&actions[lane..lane + 1], 2))
+        // Push *direction*; the lane pass scales by the per-lane
+        // `force_mag` (±1.0 · m is an exact sign transfer, so the
+        // default is bitwise the old ±FORCE_MAG input).
+        if discrete_action(&actions[lane..lane + 1], 2) == 1 {
+            1.0
+        } else {
+            -1.0
+        }
     }
 
     fn step_lanes<const W: usize>(
         &self,
         s: [F32s<W>; 4],
         u: F32s<W>,
+        p: &[F32s<W>; MAX_PARAMS],
     ) -> ([F32s<W>; 4], Mask<W>, F32s<W>) {
-        let s2 = cartpole::dynamics_lanes(s, u);
+        let force = u * p[2];
+        let s2 = cartpole::dynamics_lanes_p(s, force, p[0], p[1]);
         let fell = cartpole::fell_lanes(s2[0], s2[2]);
         (s2, fell, F32s::splat(1.0))
     }

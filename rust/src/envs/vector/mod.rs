@@ -119,6 +119,13 @@ use super::spec::EnvSpec;
 use crate::rng::Pcg32;
 use crate::simd::{F32s, LanePass, Mask};
 
+/// Maximum number of per-lane physics parameters a kernel can expose
+/// through [`VecEnv::set_param_lanes`]. Fixed-size so [`SoaKernel`] can
+/// keep the parameter lanes in plain arrays with no per-step branching;
+/// every current kernel uses ≤ 3 (`registry::supported_params` is the
+/// authoritative per-task list).
+pub const MAX_PARAMS: usize = 4;
+
 /// Destination rows for a batch of observations. `row(lane)` returns the
 /// final storage for lane `lane`'s observation (length `obs_dim`) — a
 /// state-queue slot, an output-buffer row, or any other pre-allocated
@@ -172,6 +179,29 @@ pub trait VecEnv: Send {
         let _ = lane_pass;
     }
 
+    /// Physics parameter names this kernel accepts through
+    /// [`Self::set_param_lanes`], in parameter-index order (the order
+    /// the scenario layer draws jitter streams in — part of the
+    /// replayability contract). Empty for kernels with no overridable
+    /// parameters. Wrappers forward to their inner kernel.
+    fn param_names(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// Override physics parameter `name` per lane (`values.len()` must
+    /// equal [`Self::num_envs`]). Returns `false` if the kernel does
+    /// not expose `name` — callers validate against
+    /// [`Self::param_names`] / `registry::supported_params` first, so a
+    /// `false` from a wired path is a bug. Parameters persist across
+    /// [`Self::reset_lane`] (a lane keeps its drawn physics for the
+    /// whole pool lifetime — the scenario replayability contract), and
+    /// the defaults are the task constants, bitwise (pinned by the
+    /// classic kernels' `param_defaults_are_bitwise` tests).
+    fn set_param_lanes(&mut self, name: &str, values: &[f32]) -> bool {
+        let _ = (name, values);
+        false
+    }
+
     /// Reset lane `lane`, writing its initial observation into `obs`
     /// (length `spec().obs_dim()`).
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]);
@@ -210,21 +240,45 @@ pub trait LaneDynamics<const S: usize>: Send {
     /// Fresh episode state.
     fn reset_state(&self, rng: &mut Pcg32) -> [f32; S];
 
+    /// Overridable physics parameter names, in the index order of the
+    /// `p` argument to [`Self::step1`] / [`Self::step_lanes`]. Empty
+    /// (the default) for kernels whose dynamics are not parameterized.
+    fn param_names(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// Default value per parameter slot — the task constants. Slots
+    /// past `param_names().len()` are ignored (0.0 by convention). The
+    /// driver seeds every lane with these, so an un-overridden kernel
+    /// feeds the dynamics the exact constant bits.
+    fn default_params(&self) -> [f32; MAX_PARAMS] {
+        [0.0; MAX_PARAMS]
+    }
+
     /// Width-1 reference step: decode lane `lane`'s action row from
-    /// `actions` and apply the scalar dynamics. Returns
+    /// `actions` and apply the scalar dynamics with the lane's physics
+    /// parameters `p` (slots in [`Self::param_names`] order). Returns
     /// `(next state, done, reward)`.
-    fn step1(&self, s: [f32; S], actions: &[f32], lane: usize) -> ([f32; S], bool, f32);
+    fn step1(
+        &self,
+        s: [f32; S],
+        actions: &[f32],
+        lane: usize,
+        p: &[f32; MAX_PARAMS],
+    ) -> ([f32; S], bool, f32);
 
     /// Scalar control input for the SIMD pass (the driver feeds `0.0`
     /// to masked/tail lanes; their results are discarded).
     fn input(&self, actions: &[f32], lane: usize) -> f32;
 
-    /// Lane-group twin of [`Self::step1`]. Returns
-    /// `(next state, done mask, reward lanes)`.
+    /// Lane-group twin of [`Self::step1`] (`p` holds the lane-group's
+    /// parameter vectors — broadcast defaults when nothing is
+    /// overridden). Returns `(next state, done mask, reward lanes)`.
     fn step_lanes<const W: usize>(
         &self,
         s: [F32s<W>; S],
         u: F32s<W>,
+        p: &[F32s<W>; MAX_PARAMS],
     ) -> ([F32s<W>; S], Mask<W>, F32s<W>);
 
     /// Write the observation for state `s`.
@@ -241,6 +295,12 @@ pub struct SoaKernel<const S: usize, K: LaneDynamics<S>> {
     rng: Vec<Pcg32>,
     /// SoA state lanes, one `Vec` per state dimension.
     state: [Vec<f32>; S],
+    /// Per-lane physics parameter lanes (scenario pools), one `Vec`
+    /// per [`LaneDynamics::param_names`] slot, seeded with
+    /// [`LaneDynamics::default_params`]. Never touched by resets.
+    params: [Vec<f32>; MAX_PARAMS],
+    /// Copy of the defaults, used to pad SIMD tail lanes.
+    defaults: [f32; MAX_PARAMS],
     steps: Vec<u32>,
     /// Resolved SIMD lane width (1 = scalar reference loop).
     width: usize,
@@ -258,10 +318,13 @@ impl<const S: usize, K: LaneDynamics<S>> SoaKernel<S, K> {
             1,
             "SoaKernel supports act_dim == 1 kernels only"
         );
+        let defaults = k.default_params();
         SoaKernel {
             spec: k.spec(),
             rng: (0..count).map(|l| k.rng_for(seed, first_env_id + l as u64)).collect(),
             state: std::array::from_fn(|_| vec![0.0; count]),
+            params: std::array::from_fn(|j| vec![defaults[j]; count]),
+            defaults,
             steps: vec![0; count],
             // Scalar reference until configured: the wired paths (pool,
             // executors) always call `set_lane_pass`, which is also the
@@ -288,7 +351,8 @@ impl<const S: usize, K: LaneDynamics<S>> SoaKernel<S, K> {
                 continue;
             }
             let s: [f32; S] = std::array::from_fn(|j| self.state[j][lane]);
-            let (s2, done, reward) = self.k.step1(s, actions, lane);
+            let p: [f32; MAX_PARAMS] = std::array::from_fn(|j| self.params[j][lane]);
+            let (s2, done, reward) = self.k.step1(s, actions, lane, &p);
             for (j, arr) in self.state.iter_mut().enumerate() {
                 arr[lane] = s2[j];
             }
@@ -325,6 +389,11 @@ impl<const S: usize, K: LaneDynamics<S>> SoaKernel<S, K> {
             // a valid state).
             let state: [F32s<W>; S] =
                 std::array::from_fn(|j| F32s::load_or(&self.state[j][g..g + n], 0.0));
+            // Parameter lanes ride along like state (tail lanes padded
+            // with the defaults — a valid parameterization).
+            let p: [F32s<W>; MAX_PARAMS] = std::array::from_fn(|j| {
+                F32s::load_or(&self.params[j][g..g + n], self.defaults[j])
+            });
             let u = F32s::<W>::from_fn(|i| {
                 let lane = g + i;
                 if i < n && reset_mask[lane] == 0 {
@@ -333,7 +402,7 @@ impl<const S: usize, K: LaneDynamics<S>> SoaKernel<S, K> {
                     0.0
                 }
             });
-            let (s2, term, reward) = self.k.step_lanes(state, u);
+            let (s2, term, reward) = self.k.step_lanes(state, u, &p);
             // Masked store: only stepped lanes take the new state.
             for i in 0..n {
                 let lane = g + i;
@@ -366,6 +435,19 @@ impl<const S: usize, K: LaneDynamics<S>> VecEnv for SoaKernel<S, K> {
 
     fn set_lane_pass(&mut self, lane_pass: LanePass) {
         self.width = lane_pass.width();
+    }
+
+    fn param_names(&self) -> &'static [&'static str] {
+        self.k.param_names()
+    }
+
+    fn set_param_lanes(&mut self, name: &str, values: &[f32]) -> bool {
+        let Some(idx) = self.k.param_names().iter().position(|&n| n == name) else {
+            return false;
+        };
+        assert_eq!(values.len(), self.num_envs(), "param lane count for {name}");
+        self.params[idx].copy_from_slice(values);
+        true
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {

@@ -3,7 +3,7 @@
 //! shared with [`crate::envs::classic::mountain_car`]; bitwise identical
 //! to the scalar env at every lane width.
 
-use super::{LaneDynamics, SoaKernel};
+use super::{LaneDynamics, SoaKernel, MAX_PARAMS};
 use crate::envs::classic::mountain_car;
 use crate::envs::env::discrete_action;
 use crate::envs::spec::EnvSpec;
@@ -11,7 +11,8 @@ use crate::rng::Pcg32;
 use crate::simd::{F32s, Mask};
 
 /// MountainCar's dynamics/terminal/reward rules for the shared driver.
-/// State lanes are `[pos, vel]`.
+/// State lanes are `[pos, vel]`. Overridable physics (scenario pools):
+/// `force` (push strength), `gravity`.
 pub struct MountainCarDyn;
 
 impl LaneDynamics<2> for MountainCarDyn {
@@ -31,14 +32,24 @@ impl LaneDynamics<2> for MountainCarDyn {
         [mountain_car::reset_pos(rng), 0.0]
     }
 
-    fn step1(&self, s: [f32; 2], actions: &[f32], lane: usize) -> ([f32; 2], bool, f32) {
+    fn param_names(&self) -> &'static [&'static str] {
+        &["force", "gravity"]
+    }
+
+    fn default_params(&self) -> [f32; MAX_PARAMS] {
+        [mountain_car::FORCE, mountain_car::GRAVITY, 0.0, 0.0]
+    }
+
+    fn step1(
+        &self,
+        s: [f32; 2],
+        actions: &[f32],
+        lane: usize,
+        p: &[f32; MAX_PARAMS],
+    ) -> ([f32; 2], bool, f32) {
         let a = discrete_action(&actions[lane..lane + 1], 3);
-        let (pos, vel) = mountain_car::dynamics(s[0], s[1], a);
-        (
-            [pos, vel],
-            mountain_car::at_goal(pos),
-            -1.0,
-        )
+        let (pos, vel) = mountain_car::dynamics_p(s[0], s[1], a, p[0], p[1]);
+        ([pos, vel], mountain_car::at_goal(pos), -1.0)
     }
 
     fn input(&self, actions: &[f32], lane: usize) -> f32 {
@@ -49,8 +60,9 @@ impl LaneDynamics<2> for MountainCarDyn {
         &self,
         s: [F32s<W>; 2],
         u: F32s<W>,
+        p: &[F32s<W>; MAX_PARAMS],
     ) -> ([F32s<W>; 2], Mask<W>, F32s<W>) {
-        let (pos, vel) = mountain_car::dynamics_lanes(s[0], s[1], u);
+        let (pos, vel) = mountain_car::dynamics_lanes_p(s[0], s[1], u, p[0], p[1]);
         let goal = mountain_car::at_goal_lanes(pos);
         ([pos, vel], goal, F32s::splat(-1.0))
     }

@@ -3,7 +3,7 @@
 //! with [`crate::envs::classic::pendulum`]; bitwise identical to the
 //! scalar env at every lane width.
 
-use super::{LaneDynamics, SoaKernel};
+use super::{LaneDynamics, SoaKernel, MAX_PARAMS};
 use crate::envs::classic::pendulum;
 use crate::envs::spec::EnvSpec;
 use crate::rng::Pcg32;
@@ -11,7 +11,8 @@ use crate::simd::{F32s, Mask};
 
 /// Pendulum's dynamics/reward rules for the shared driver. State lanes
 /// are `[theta, theta_dot]`; the env never terminates (done is always
-/// false, episodes truncate at `MAX_STEPS`).
+/// false, episodes truncate at `MAX_STEPS`). Overridable physics
+/// (scenario pools): `gravity`, `mass`, `length`.
 pub struct PendulumDyn;
 
 impl LaneDynamics<2> for PendulumDyn {
@@ -32,8 +33,23 @@ impl LaneDynamics<2> for PendulumDyn {
         [theta, theta_dot]
     }
 
-    fn step1(&self, s: [f32; 2], actions: &[f32], lane: usize) -> ([f32; 2], bool, f32) {
-        let (theta, theta_dot, cost) = pendulum::dynamics(s[0], s[1], actions[lane]);
+    fn param_names(&self) -> &'static [&'static str] {
+        &["gravity", "mass", "length"]
+    }
+
+    fn default_params(&self) -> [f32; MAX_PARAMS] {
+        [pendulum::G, pendulum::M, pendulum::L, 0.0]
+    }
+
+    fn step1(
+        &self,
+        s: [f32; 2],
+        actions: &[f32],
+        lane: usize,
+        p: &[f32; MAX_PARAMS],
+    ) -> ([f32; 2], bool, f32) {
+        let (theta, theta_dot, cost) =
+            pendulum::dynamics_p(s[0], s[1], actions[lane], p[0], p[1], p[2]);
         ([theta, theta_dot], false, -cost)
     }
 
@@ -45,8 +61,9 @@ impl LaneDynamics<2> for PendulumDyn {
         &self,
         s: [F32s<W>; 2],
         u: F32s<W>,
+        p: &[F32s<W>; MAX_PARAMS],
     ) -> ([F32s<W>; 2], Mask<W>, F32s<W>) {
-        let (theta, theta_dot, cost) = pendulum::dynamics_lanes(s[0], s[1], u);
+        let (theta, theta_dot, cost) = pendulum::dynamics_lanes_p(s[0], s[1], u, p[0], p[1], p[2]);
         ([theta, theta_dot], Mask([false; W]), -cost)
     }
 

@@ -234,6 +234,19 @@ impl VecEnv for WalkerVec {
         self.width = lane_pass.width();
     }
 
+    fn param_names(&self) -> &'static [&'static str] {
+        &["gravity", "gear_scale"]
+    }
+
+    fn set_param_lanes(&mut self, name: &str, values: &[f32]) -> bool {
+        match name {
+            "gravity" => self.batch.set_gravity_lanes(values),
+            "gear_scale" => self.batch.set_gear_scale_lanes(values),
+            _ => return false,
+        }
+        true
+    }
+
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
         self.batch.reset_lane(lane);
         self.batch.apply_reset_noise(lane, &mut self.rng[lane]);
@@ -339,6 +352,14 @@ impl VecEnv for CheetahRunVec {
 
     fn set_lane_pass(&mut self, lane_pass: LanePass) {
         self.inner.set_lane_pass(lane_pass);
+    }
+
+    fn param_names(&self) -> &'static [&'static str] {
+        self.inner.param_names()
+    }
+
+    fn set_param_lanes(&mut self, name: &str, values: &[f32]) -> bool {
+        self.inner.set_param_lanes(name, values)
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {

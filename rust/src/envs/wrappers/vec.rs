@@ -71,6 +71,14 @@ impl VecEnv for TimeLimitVec {
         self.inner.set_lane_pass(lane_pass);
     }
 
+    fn param_names(&self) -> &'static [&'static str] {
+        self.inner.param_names()
+    }
+
+    fn set_param_lanes(&mut self, name: &str, values: &[f32]) -> bool {
+        self.inner.set_param_lanes(name, values)
+    }
+
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
         self.t[lane] = 0;
         self.inner.reset_lane(lane, obs);
@@ -117,6 +125,14 @@ impl VecEnv for RewardClipVec {
 
     fn set_lane_pass(&mut self, lane_pass: crate::simd::LanePass) {
         self.inner.set_lane_pass(lane_pass);
+    }
+
+    fn param_names(&self) -> &'static [&'static str] {
+        self.inner.param_names()
+    }
+
+    fn set_param_lanes(&mut self, name: &str, values: &[f32]) -> bool {
+        self.inner.set_param_lanes(name, values)
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
@@ -201,6 +217,14 @@ impl VecEnv for NormalizeObsVec {
 
     fn set_lane_pass(&mut self, lane_pass: crate::simd::LanePass) {
         self.inner.set_lane_pass(lane_pass);
+    }
+
+    fn param_names(&self) -> &'static [&'static str] {
+        self.inner.param_names()
+    }
+
+    fn set_param_lanes(&mut self, name: &str, values: &[f32]) -> bool {
+        self.inner.set_param_lanes(name, values)
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {

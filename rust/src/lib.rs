@@ -107,6 +107,46 @@
 //! `VecNormalize`-style, one statistic across a chunk's lanes) exists
 //! only on the vectorized surface and is rejected by the scalar one.
 //!
+//! ## Heterogeneous scenario pools
+//!
+//! A [`config::ScenarioConfig`] (dependency-free `.scn` text, exact
+//! `parse`/`to_text` round-trip — see `examples/scenarios/mixed.scn`)
+//! describes an ordered list of **lane groups**: a task, a lane count,
+//! a per-group wrapper stack, an optional seed, fixed `param.*`
+//! physics overrides and seeded `jitter.*` per-lane ranges. One
+//! pool then executes the mix: `PoolConfig::scenario` (CLI:
+//! `envpool bench --scenario file.scn`, `envpool train --scenario`)
+//! builds one full-width kernel per group and composes them behind
+//! [`pool::GroupedVecEnv`] — a stable global `env_id → (group, lane)`
+//! map, per-group obs arenas over group-offset rows (union-width rows,
+//! zero-padded tails; chunking never splits a group), and per-group
+//! action re-striding from the union action layout. Group kernels are
+//! seeded with the **group seed** and group-local env ids, so each
+//! group's per-env episodes are **bitwise identical** to a homogeneous
+//! pool with the same task/seed/wrappers (`tests/scenario.rs` pins the
+//! 3-group classic trio at widths 1/4/8 and a classic+walker+Atari mix
+//! at width 1 across both `ExecMode`s, under mid-run auto-resets).
+//! Domain randomization is first-class: every classic/walker kernel
+//! takes **per-lane parameter lanes** (SoA, broadcast constants by
+//! default — bitwise-unchanged when no override is set), and jitters
+//! are drawn at construction from a dedicated `Pcg32` stream keyed by
+//! `(group seed ^ JITTER_SALT, parameter index)` — independent of
+//! exec mode, threads and chunking, so a scenario file + pool seed is
+//! exactly replayable. The Table 2h bench
+//! (`benches/table2h_hetero.rs`) gates the composition overhead: the
+//! mixed pool must hold ≥ 0.9× the aggregate throughput of the same
+//! groups run as separate homogeneous pools.
+//!
+//! | surface | heterogeneous (scenario) support |
+//! |---|---|
+//! | `EnvPool` sync, `ExecMode::Scalar` | ✓ per-lane `VecLaneEnv` views (group-seeded, width-1 kernels) |
+//! | `EnvPool` sync, `ExecMode::Vectorized` | ✓ one chunk per group, full-width group kernels |
+//! | async pools / `NumaPool` | ✗ rejected at config validation (sharding would split groups) |
+//! | pool-level `PoolConfig::wrappers` | ✗ rejected — wrappers live on each group |
+//! | `EnvSpec` | union spec (max obs/action dims, zero-padded) + per-group [`envs::spec::GroupView`]s |
+//! | PPO trainer (`--scenario`) | ✓ on `envpool-sync[-vec]` for uniform-spec scenarios (single policy head) |
+//! | physics params (`param.*` / `jitter.*`) | classic + walker families ([`envs::registry::supported_params`]); Acrobot/Atari: none |
+//!
 //! ## Compute-tier backend matrix
 //!
 //! `envpool train` / `envpool profile` drive a

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //! - `envpool info`                      — list tasks and specs
-//! - `envpool bench ...`                 — pure env-simulation throughput
+//! - `envpool bench ...`                 — pure env-simulation throughput;
+//!                                         `--scenario file.scn` benches a
+//!                                         heterogeneous mixed-task pool
 //! - `envpool train ...`                 — PPO training; `--backend
 //!                                         {auto,pjrt,native}` selects the
 //!                                         compute tier (native is pure
@@ -100,6 +102,34 @@ fn cmd_bench(args: &Args) -> i32 {
             return 2;
         }
     };
+    // `--scenario <file>` benches a heterogeneous mixed-task pool
+    // instead of a single `--env`.
+    if let Some(path) = args.opt("scenario") {
+        let sc = match envpool::config::ScenarioConfig::load(path) {
+            Ok(sc) => sc,
+            Err(e) => {
+                eprintln!("cannot load scenario {path}: {e}");
+                return 2;
+            }
+        };
+        return match envpool::coordinator::throughput::run_throughput_scenario(
+            &sc, &executor, threads, steps, seed, lane_pass,
+        ) {
+            Ok(fps) => {
+                println!(
+                    "scenario={path} executor={executor} num_envs={} threads={threads} \
+                     lane_width={} steps={steps} fps={fps:.0}",
+                    sc.num_envs(),
+                    lane_pass.width()
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("bench failed: {e}");
+                1
+            }
+        };
+    }
     match envpool::coordinator::throughput::run_throughput_lanes(
         &task, &executor, num_envs, batch_size, threads, steps, seed, lane_pass,
     ) {

@@ -9,11 +9,18 @@
 //! [`StateBufferQueue::slot_obs_mut`]) — the paper's zero-copy invariant
 //! is preserved end to end.
 //!
-//! Chunk size is `K = ceil(num_envs / num_threads)` (see the chunking
-//! math in [`crate::envs::vector`]); env `e` lives in chunk `e / K`,
-//! lane `e % K`. A chunk becomes runnable when all of its member envs
-//! have a pending action — the per-env "at most one outstanding action"
-//! protocol makes a simple atomic counter sufficient.
+//! Homogeneous pools use chunk size `K = ceil(num_envs / num_threads)`
+//! (see the chunking math in [`crate::envs::vector`]); heterogeneous
+//! scenario pools build **one chunk per lane group** (a chunk never
+//! splits a group), so chunk lengths and per-chunk action/observation
+//! widths may vary. Routing is therefore a precomputed `env →
+//! (chunk, lane)` table rather than division, and each chunk stages
+//! actions at **its own** kernel stride while the pool-level buffers
+//! run at the union stride; observation rows narrower than the state
+//! queue's are zero-padded at the write site. A chunk becomes runnable
+//! when all of its member envs have a pending action — the per-env "at
+//! most one outstanding action" protocol makes a simple atomic counter
+//! sufficient.
 //!
 //! All-lanes-or-nothing dispatch constrains asynchronous mode: with
 //! `batch_size > num_chunks`, every chunk can be left partially armed
@@ -64,12 +71,21 @@ pub struct Chunk {
     pending: AtomicUsize,
     first_env: u32,
     len: usize,
+    /// This chunk's kernel action width (= pool width for homogeneous
+    /// pools; may be narrower than the union in a scenario pool).
+    act_dim: usize,
+    /// This chunk's kernel observation width (queue rows at the union
+    /// width are zero-padded past it).
+    obs_dim: usize,
 }
 
 impl Chunk {
-    /// Wrap a vector backend as a dispatchable chunk.
-    pub fn new(envs: Box<dyn VecEnv>, first_env: u32, act_dim: usize) -> Chunk {
+    /// Wrap a vector backend as a dispatchable chunk. Action and
+    /// observation widths come from the backend's own spec.
+    pub fn new(envs: Box<dyn VecEnv>, first_env: u32) -> Chunk {
         let len = envs.num_envs();
+        let act_dim = envs.spec().action_space.dim();
+        let obs_dim = envs.spec().obs_dim();
         Chunk {
             state: Mutex::new(ChunkState {
                 envs,
@@ -81,15 +97,20 @@ impl Chunk {
             pending: AtomicUsize::new(0),
             first_env,
             len,
+            act_dim,
+            obs_dim,
         }
     }
 }
 
 /// [`ObsArena`] over acquired state-queue slots: lane `l`'s observation
-/// row is ticket `l`'s block memory.
+/// row is ticket `l`'s block memory, truncated to the chunk's own
+/// observation width with the union padding tail zero-filled (a no-op
+/// slice for homogeneous pools, where `dim` equals the row width).
 struct QueueArena<'a> {
     queue: &'a StateBufferQueue,
     tickets: &'a [SlotTicket],
+    dim: usize,
 }
 
 impl ObsArena for QueueArena<'_> {
@@ -98,7 +119,9 @@ impl ObsArena for QueueArena<'_> {
         // Safety: each ticket was freshly acquired for this batch and is
         // committed exactly once after the kernel finishes; rows of
         // distinct tickets are disjoint.
-        unsafe { self.queue.slot_obs_mut(self.tickets[lane]) }
+        let r = unsafe { self.queue.slot_obs_mut(self.tickets[lane]) };
+        r[self.dim..].fill(0.0);
+        &mut r[..self.dim]
     }
 }
 
@@ -109,7 +132,11 @@ pub struct ChunkedThreadPool {
     queue: Arc<ActionBufferQueue<ChunkTask>>,
     chunks: Arc<Vec<Chunk>>,
     chunk_size: usize,
+    /// Pool-level (union) action stride of the caller's flat buffers.
     act_dim: usize,
+    /// Global env id → owning chunk (supports the ragged chunk lengths
+    /// of scenario pools; for homogeneous pools this is just `e / K`).
+    env_to_chunk: Vec<u32>,
     /// Total env steps executed (throughput accounting).
     pub steps: Arc<AtomicU64>,
 }
@@ -135,6 +162,15 @@ impl ChunkedThreadPool {
     ) -> ChunkedThreadPool {
         let num_threads = num_threads.clamp(1, chunks.len().max(1));
         let queue = Arc::new(ActionBufferQueue::new(2 * chunks.len() + num_threads));
+        let mut env_to_chunk = Vec::new();
+        for (c, chunk) in chunks.iter().enumerate() {
+            assert_eq!(
+                chunk.first_env as usize,
+                env_to_chunk.len(),
+                "chunks must cover env ids contiguously"
+            );
+            env_to_chunk.extend(std::iter::repeat(c as u32).take(chunk.len));
+        }
         let chunks = Arc::new(chunks);
         let steps = Arc::new(AtomicU64::new(0));
         let handles = (0..num_threads)
@@ -154,7 +190,7 @@ impl ChunkedThreadPool {
                     .expect("spawn chunk worker")
             })
             .collect();
-        ChunkedThreadPool { handles, queue, chunks, chunk_size, act_dim, steps }
+        ChunkedThreadPool { handles, queue, chunks, chunk_size, act_dim, env_to_chunk, steps }
     }
 
     pub fn num_threads(&self) -> usize {
@@ -178,21 +214,25 @@ impl ChunkedThreadPool {
     /// env (chunk members complete — and are therefore re-sent —
     /// together).
     pub fn send_actions(&self, actions: &[f32], env_ids: &[u32]) {
-        let adim = self.act_dim;
+        // Caller rows run at the pool (union) stride; each chunk stages
+        // at its kernel's own stride — extra union lanes are padding a
+        // narrower kernel never reads.
+        let src = self.act_dim;
         let mut k = 0;
         while k < env_ids.len() {
-            let c = env_ids[k] as usize / self.chunk_size;
+            let c = self.env_to_chunk[env_ids[k] as usize] as usize;
             let chunk = &self.chunks[c];
+            let dst = chunk.act_dim;
             let start = k;
-            while k < env_ids.len() && env_ids[k] as usize / self.chunk_size == c {
+            while k < env_ids.len() && self.env_to_chunk[env_ids[k] as usize] as usize == c {
                 k += 1;
             }
             {
                 let mut slot = chunk.actions.lock().unwrap();
                 for j in start..k {
-                    let lane = env_ids[j] as usize % self.chunk_size;
-                    slot[lane * adim..(lane + 1) * adim]
-                        .copy_from_slice(&actions[j * adim..(j + 1) * adim]);
+                    let lane = (env_ids[j] - chunk.first_env) as usize;
+                    slot[lane * dst..(lane + 1) * dst]
+                        .copy_from_slice(&actions[j * src..j * src + dst]);
                 }
             }
             let run = k - start;
@@ -256,7 +296,8 @@ fn worker_loop(
                     let Some(t) = states.acquire() else { return };
                     // Safety: fresh ticket, committed immediately below.
                     let obs = unsafe { states.slot_obs_mut(t) };
-                    st.envs.reset_lane(lane, obs);
+                    obs[c.obs_dim..].fill(0.0);
+                    st.envs.reset_lane(lane, &mut obs[..c.obs_dim]);
                     st.needs_reset[lane] = 0;
                     states.commit(t, c.first_env + lane as u32, 0.0, false, false);
                 }
@@ -272,7 +313,8 @@ fn worker_loop(
                 }
                 {
                     let actions = c.actions.lock().unwrap();
-                    let mut arena = QueueArena { queue: states, tickets: &st.tickets };
+                    let mut arena =
+                        QueueArena { queue: states, tickets: &st.tickets, dim: c.obs_dim };
                     st.envs.step_batch(&actions, &st.needs_reset, &mut arena, &mut st.results);
                 }
                 for lane in 0..c.len {
@@ -309,7 +351,7 @@ mod tests {
                 let envs =
                     registry::make_vec_env("CartPole-v1", 7, (c * chunk_size) as u64, chunk_size)
                         .unwrap();
-                Chunk::new(envs, (c * chunk_size) as u32, 1)
+                Chunk::new(envs, (c * chunk_size) as u32)
             })
             .collect();
         let mut pool = ChunkedThreadPool::spawn(2, chunks, states.clone(), chunk_size, 1, false);
@@ -340,7 +382,7 @@ mod tests {
                 let envs =
                     registry::make_vec_env("CartPole-v1", 3, (c * chunk_size) as u64, chunk_size)
                         .unwrap();
-                Chunk::new(envs, (c * chunk_size) as u32, 1)
+                Chunk::new(envs, (c * chunk_size) as u32)
             })
             .collect();
         let mut pool = ChunkedThreadPool::spawn(8, chunks, states.clone(), chunk_size, 1, false);

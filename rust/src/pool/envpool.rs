@@ -51,6 +51,13 @@ pub struct PoolConfig {
     /// `ExecMode::Scalar`). Every width is bitwise identical — a pure
     /// throughput knob; see [`crate::simd::LanePass`].
     pub lane_pass: crate::simd::LanePass,
+    /// Heterogeneous scenario: mixed-task lane groups with per-group
+    /// wrappers, seeds and physics overrides
+    /// ([`crate::config::ScenarioConfig`]). When set, `task_id` and
+    /// `wrappers` are ignored (each group carries its own) and
+    /// `num_envs` must equal the scenario's total lane count. `None`
+    /// (the default) leaves every existing path bitwise untouched.
+    pub scenario: Option<crate::config::ScenarioConfig>,
 }
 
 impl PoolConfig {
@@ -65,6 +72,7 @@ impl PoolConfig {
             exec_mode: ExecMode::Scalar,
             wrappers: WrapConfig::none(),
             lane_pass: crate::simd::LanePass::Auto,
+            scenario: None,
         }
     }
 
@@ -112,6 +120,15 @@ impl PoolConfig {
         self
     }
 
+    /// Run a heterogeneous scenario (see [`PoolConfig::scenario`]).
+    /// Sets `num_envs` to the scenario's total lane count; set
+    /// `batch_size` (or call [`Self::sync`]) afterwards.
+    pub fn scenario(mut self, sc: crate::config::ScenarioConfig) -> Self {
+        self.num_envs = sc.num_envs();
+        self.scenario = Some(sc);
+        self
+    }
+
     /// Synchronous-mode config (`batch_size = num_envs`).
     pub fn sync(mut self) -> Self {
         self.batch_size = self.num_envs;
@@ -119,6 +136,24 @@ impl PoolConfig {
     }
 
     fn validate(&self) -> Result<()> {
+        if let Some(sc) = &self.scenario {
+            sc.validate()?;
+            if self.num_envs != sc.num_envs() {
+                return Err(Error::Config(format!(
+                    "num_envs {} does not match the scenario's total lane count {} \
+                     (the .scenario() builder sets it; don't override it afterwards)",
+                    self.num_envs,
+                    sc.num_envs()
+                )));
+            }
+            if !self.wrappers.is_empty() {
+                return Err(Error::Config(
+                    "pool-level wrappers cannot combine with a scenario; put the \
+                     wrapper stack on each scenario group instead"
+                        .into(),
+                ));
+            }
+        }
         if self.num_envs == 0 {
             return Err(Error::Config("num_envs must be > 0".into()));
         }
@@ -167,15 +202,30 @@ impl EnvPool {
     /// its own RNG stream), pre-allocate the state queue, spawn workers.
     pub fn make(cfg: PoolConfig) -> Result<EnvPool> {
         cfg.validate()?;
-        let spec = registry::spec_for_wrapped(&cfg.task_id, &cfg.wrappers)?;
+        let spec = match &cfg.scenario {
+            // Union spec with per-group views; queue rows and action
+            // buffers run at the union widths.
+            Some(sc) => registry::scenario_spec(sc)?,
+            None => registry::spec_for_wrapped(&cfg.task_id, &cfg.wrappers)?,
+        };
         let act_dim = spec.action_space.dim();
         let states = Arc::new(StateBufferQueue::new(cfg.num_envs, cfg.batch_size, spec.obs_dim()));
         let engine = match cfg.exec_mode {
             ExecMode::Scalar => {
                 let mut slots = Vec::with_capacity(cfg.num_envs);
                 for i in 0..cfg.num_envs {
-                    let w = &cfg.wrappers;
-                    let env = registry::make_env_wrapped(&cfg.task_id, cfg.seed, i as u64, w)?;
+                    let env = match &cfg.scenario {
+                        // Env i = lane (i - first) of its group, built as
+                        // a one-lane kernel (bitwise the grouped lanes).
+                        Some(sc) => {
+                            let (gi, lane) = sc.locate(i);
+                            registry::make_scenario_env(sc, gi, lane, cfg.seed)?
+                        }
+                        None => {
+                            let w = &cfg.wrappers;
+                            registry::make_env_wrapped(&cfg.task_id, cfg.seed, i as u64, w)?
+                        }
+                    };
                     slots.push(EnvSlot {
                         env: Mutex::new(env),
                         action: Mutex::new(vec![0.0; act_dim]),
@@ -195,13 +245,25 @@ impl EnvPool {
                 Engine::Scalar { envs, queue, workers: Some(workers) }
             }
             ExecMode::Vectorized => {
-                // Chunking math: K = ceil(N / threads); the last chunk
-                // takes the remainder (see `envs::vector` module docs).
-                // With N < threads this yields fewer chunks than
-                // requested workers; `ChunkedThreadPool::spawn` clamps
-                // the worker count to the chunk count.
-                let chunk_size = cfg.num_envs.div_ceil(cfg.num_threads);
-                let num_chunks = cfg.num_envs.div_ceil(chunk_size);
+                // Chunking math (homogeneous): K = ceil(N / threads);
+                // the last chunk takes the remainder (see `envs::vector`
+                // module docs). With N < threads this yields fewer
+                // chunks than requested workers;
+                // `ChunkedThreadPool::spawn` clamps the worker count to
+                // the chunk count. Scenario pools instead build **one
+                // chunk per lane group** — chunking never splits a
+                // group, so every group's kernel keeps its full lane
+                // width and its group-local env ids.
+                let (chunk_size, num_chunks) = match &cfg.scenario {
+                    Some(sc) => {
+                        let widest = sc.groups.iter().map(|g| g.count).max().unwrap_or(1);
+                        (widest, sc.groups.len())
+                    }
+                    None => {
+                        let k = cfg.num_envs.div_ceil(cfg.num_threads);
+                        (k, cfg.num_envs.div_ceil(k))
+                    }
+                };
                 // Liveness constraint for async mode: a chunk only steps
                 // once ALL its envs have actions, so with M > num_chunks
                 // every chunk can be left partially armed while the
@@ -221,19 +283,30 @@ impl EnvPool {
                     )));
                 }
                 let mut chunks = Vec::new();
-                let mut first = 0usize;
-                while first < cfg.num_envs {
-                    let len = chunk_size.min(cfg.num_envs - first);
-                    let mut backend = registry::make_vec_env_wrapped(
-                        &cfg.task_id,
-                        cfg.seed,
-                        first as u64,
-                        len,
-                        &cfg.wrappers,
-                    )?;
-                    backend.set_lane_pass(cfg.lane_pass);
-                    chunks.push(Chunk::new(backend, first as u32, act_dim));
-                    first += len;
+                match &cfg.scenario {
+                    Some(sc) => {
+                        for gi in 0..sc.groups.len() {
+                            let mut backend = registry::make_scenario_group(sc, gi, cfg.seed)?;
+                            backend.set_lane_pass(cfg.lane_pass);
+                            chunks.push(Chunk::new(backend, sc.first_env(gi) as u32));
+                        }
+                    }
+                    None => {
+                        let mut first = 0usize;
+                        while first < cfg.num_envs {
+                            let len = chunk_size.min(cfg.num_envs - first);
+                            let mut backend = registry::make_vec_env_wrapped(
+                                &cfg.task_id,
+                                cfg.seed,
+                                first as u64,
+                                len,
+                                &cfg.wrappers,
+                            )?;
+                            backend.set_lane_pass(cfg.lane_pass);
+                            chunks.push(Chunk::new(backend, first as u32));
+                            first += len;
+                        }
+                    }
                 }
                 let pool = ChunkedThreadPool::spawn(
                     cfg.num_threads,
@@ -717,6 +790,60 @@ mod tests {
         assert!(st.iter().any(|&t| t != 0), "time limit must truncate");
         assert_eq!(sr, vr, "wrapped rewards diverge between exec modes");
         assert_eq!(st, vt, "wrapped truncations diverge between exec modes");
+    }
+
+    #[test]
+    fn scenario_pool_round_trips_in_both_exec_modes() {
+        // A ragged two-group scenario must run behind the same facade:
+        // union-width rows, zero padding past each group's own width.
+        let sc = crate::config::ScenarioConfig::parse(
+            "[group]\ntask = CartPole-v1\ncount = 3\n\
+             [group]\ntask = Pendulum-v1\ncount = 2\n",
+        )
+        .unwrap();
+        for mode in [ExecMode::Scalar, ExecMode::Vectorized] {
+            let cfg = PoolConfig::new("ignored")
+                .scenario(sc.clone())
+                .num_threads(2)
+                .seed(5)
+                .exec_mode(mode)
+                .sync();
+            let mut pool = EnvPool::make(cfg).unwrap();
+            assert!(pool.spec().is_grouped());
+            assert_eq!(pool.spec().obs_dim(), 4);
+            let mut out = pool.make_output();
+            pool.reset_into(&mut out).unwrap();
+            assert_eq!(out.len(), 5);
+            for _ in 0..30 {
+                let ids = out.env_ids.clone();
+                let actions = vec![0.0f32; ids.len()];
+                pool.step_into(&actions, &ids, &mut out).unwrap();
+                for (k, &id) in out.env_ids.iter().enumerate() {
+                    assert!(out.obs_row(k).iter().all(|x| x.is_finite()));
+                    if id >= 3 {
+                        // Pendulum rows: 3 live lanes + exact 0.0 pad.
+                        assert_eq!(out.obs_row(k)[3], 0.0, "mode {mode:?} env {id}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_rejects_inconsistent_config() {
+        let sc = crate::config::ScenarioConfig::parse(
+            "[group]\ntask = CartPole-v1\ncount = 2\n",
+        )
+        .unwrap();
+        // num_envs overridden after .scenario() must be rejected.
+        let cfg = PoolConfig::new("x").scenario(sc.clone()).num_envs(7).sync();
+        assert!(EnvPool::make(cfg).is_err());
+        // Pool-level wrappers cannot combine with a scenario.
+        let cfg = PoolConfig::new("x")
+            .scenario(sc)
+            .wrappers(crate::envs::WrapConfig { reward_clip: true, ..Default::default() })
+            .sync();
+        assert!(EnvPool::make(cfg).is_err());
     }
 
     #[test]

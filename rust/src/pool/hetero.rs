@@ -1,0 +1,366 @@
+//! Heterogeneous scenario pools: several task groups behind one
+//! [`VecEnv`].
+//!
+//! A scenario ([`crate::config::ScenarioConfig`]) declares contiguous
+//! *lane groups* — `{task, count, wrappers, seed, physics overrides}` —
+//! and the registry builds each group as the task's real full-width
+//! kernel ([`crate::envs::registry::make_scenario_group`]). This module
+//! composes those per-group kernels into a single pool backend:
+//!
+//! - [`GroupedVecEnv`] implements [`VecEnv`] over the **union spec**
+//!   (widest observation/action across groups; see
+//!   [`crate::envs::registry::scenario_spec`]). Global env id `e` maps
+//!   to `(group, lane)` through a precomputed table; groups are
+//!   contiguous runs, so a group's slice of the global `reset_mask` /
+//!   `out` arrays needs no staging. Observations are written **ragged
+//!   through the caller's arena**: each group sees a [`GroupArena`]
+//!   view that offsets rows by the group's first env id, hands the
+//!   kernel only the group's own width, and zero-fills the padding tail
+//!   — kernels stay allocation-free and never learn about the union.
+//! - [`VecLaneEnv`] adapts a one-lane [`VecEnv`] to the scalar
+//!   [`Env`] trait, which is how `ExecMode::Scalar` runs scenarios:
+//!   each env is lane `l` of its group's kernel built at width 1
+//!   ([`crate::envs::registry::make_scenario_env`]). RNG streams are
+//!   keyed `(group seed, group-local lane)`, so the scalar and
+//!   vectorized scenario engines — and a homogeneous pool of the same
+//!   task/seed — produce bitwise-identical episodes
+//!   (`tests/scenario.rs` pins the three-way parity).
+//!
+//! Chunking: the pool's vectorized engine builds **one chunk per
+//! group** (never splitting a group across chunks and never fusing two
+//! groups), so each group steps on its own worker with its kernel's
+//! full lane width — the issue's "chunking never splits a group"
+//! invariant.
+
+use crate::envs::env::{Env, Step};
+use crate::envs::spec::EnvSpec;
+use crate::envs::vector::{ObsArena, SliceArena, VecEnv};
+use crate::simd::LanePass;
+
+/// Arena view a group's kernel writes through: rows are offset by the
+/// group's first global env id, truncated to the group's own
+/// observation width, and the union padding tail is zero-filled on
+/// every fetch (idempotent — masked-reset lanes may fetch twice).
+struct GroupArena<'a> {
+    inner: &'a mut dyn ObsArena,
+    first: usize,
+    dim: usize,
+}
+
+impl ObsArena for GroupArena<'_> {
+    #[inline]
+    fn row(&mut self, lane: usize) -> &mut [f32] {
+        let r = self.inner.row(self.first + lane);
+        r[self.dim..].fill(0.0);
+        &mut r[..self.dim]
+    }
+}
+
+/// A heterogeneous pool backend: one [`VecEnv`] kernel per scenario
+/// group, composed behind the [`VecEnv`] trait over the scenario's
+/// union spec. Built by [`crate::envs::registry::make_scenario_pool`].
+pub struct GroupedVecEnv {
+    groups: Vec<Box<dyn VecEnv>>,
+    /// Union spec; `spec.groups` carries the per-group views.
+    spec: EnvSpec,
+    /// Global env id → `(group index, group-local lane)`.
+    env_to_group: Vec<(u32, u32)>,
+    /// Per-group observation width (un-padded).
+    obs_dims: Vec<usize>,
+    /// Per-group action width (un-padded).
+    act_dims: Vec<usize>,
+    /// Staging buffer: global actions arrive at the union stride; each
+    /// group's kernel wants its own contiguous `[count, act_dim]`.
+    act_stage: Vec<f32>,
+}
+
+impl GroupedVecEnv {
+    /// Compose `backends` (one per view in `spec.groups`, same order)
+    /// behind the union `spec`. Panics if the backends disagree with
+    /// the views — both come from the registry, so a mismatch is a
+    /// construction bug, not a user error.
+    pub fn new(backends: Vec<Box<dyn VecEnv>>, spec: EnvSpec) -> Self {
+        assert!(spec.is_grouped(), "GroupedVecEnv needs a grouped union spec");
+        assert_eq!(backends.len(), spec.groups.len(), "one backend per group view");
+        let mut env_to_group = Vec::new();
+        let mut obs_dims = Vec::new();
+        let mut act_dims = Vec::new();
+        for (gi, (b, v)) in backends.iter().zip(&spec.groups).enumerate() {
+            assert_eq!(b.num_envs(), v.count, "group {gi} lane count");
+            assert_eq!(v.first_env, env_to_group.len(), "group {gi} must be contiguous");
+            assert!(v.spec.obs_dim() <= spec.obs_dim(), "union obs must cover group {gi}");
+            assert!(
+                v.spec.action_space.dim() <= spec.action_space.dim(),
+                "union action must cover group {gi}"
+            );
+            for l in 0..v.count {
+                env_to_group.push((gi as u32, l as u32));
+            }
+            obs_dims.push(v.spec.obs_dim());
+            act_dims.push(v.spec.action_space.dim());
+        }
+        let max_stage = spec
+            .groups
+            .iter()
+            .zip(&act_dims)
+            .map(|(v, &d)| v.count * d)
+            .max()
+            .unwrap();
+        GroupedVecEnv {
+            groups: backends,
+            spec,
+            env_to_group,
+            obs_dims,
+            act_dims,
+            act_stage: vec![0.0; max_stage],
+        }
+    }
+
+    /// Number of groups.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Map a global env id to `(group index, group-local lane)`.
+    pub fn locate(&self, env_id: usize) -> (usize, usize) {
+        let (g, l) = self.env_to_group[env_id];
+        (g as usize, l as usize)
+    }
+
+    /// Split into the per-group backends (one chunk per group — the
+    /// vectorized pool engine's entry point) together with the union
+    /// spec and each group's first global env id.
+    pub fn into_group_chunks(self) -> (EnvSpec, Vec<(usize, Box<dyn VecEnv>)>) {
+        let firsts: Vec<usize> = self.spec.groups.iter().map(|v| v.first_env).collect();
+        (self.spec, firsts.into_iter().zip(self.groups).collect())
+    }
+}
+
+impl VecEnv for GroupedVecEnv {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.env_to_group.len()
+    }
+
+    fn set_lane_pass(&mut self, lane_pass: LanePass) {
+        for g in &mut self.groups {
+            g.set_lane_pass(lane_pass);
+        }
+    }
+
+    fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
+        let (g, l) = self.locate(lane);
+        let d = self.obs_dims[g];
+        obs[d..].fill(0.0);
+        self.groups[g].reset_lane(l, &mut obs[..d]);
+    }
+
+    fn step_batch(
+        &mut self,
+        actions: &[f32],
+        reset_mask: &[u8],
+        arena: &mut dyn ObsArena,
+        out: &mut [Step],
+    ) {
+        let union_adim = self.spec.action_space.dim();
+        debug_assert_eq!(actions.len(), self.num_envs() * union_adim);
+        for (gi, group) in self.groups.iter_mut().enumerate() {
+            let first = self.spec.groups[gi].first_env;
+            let count = self.spec.groups[gi].count;
+            let adim = self.act_dims[gi];
+            // Re-stride this group's action rows from the union width
+            // to the kernel's own (a no-op copy when they match).
+            for l in 0..count {
+                let src = (first + l) * union_adim;
+                self.act_stage[l * adim..(l + 1) * adim]
+                    .copy_from_slice(&actions[src..src + adim]);
+            }
+            let mut garena =
+                GroupArena { inner: arena, first, dim: self.obs_dims[gi] };
+            group.step_batch(
+                &self.act_stage[..count * adim],
+                &reset_mask[first..first + count],
+                &mut garena,
+                &mut out[first..first + count],
+            );
+        }
+    }
+}
+
+/// Scalar [`Env`] view over a one-lane [`VecEnv`] kernel — how
+/// `ExecMode::Scalar` runs scenario envs without a scalar twin of the
+/// parameterized kernels. The spec it reports is the **group's own**
+/// (un-padded); the scalar pool pads rows to the union width at its
+/// write site.
+pub struct VecLaneEnv {
+    inner: Box<dyn VecEnv>,
+}
+
+impl VecLaneEnv {
+    /// Wrap a width-1 kernel.
+    pub fn new(inner: Box<dyn VecEnv>) -> Self {
+        assert_eq!(inner.num_envs(), 1, "VecLaneEnv adapts exactly one lane");
+        VecLaneEnv { inner }
+    }
+}
+
+impl Env for VecLaneEnv {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        let d = self.inner.spec().obs_dim();
+        self.inner.reset_lane(0, &mut obs[..d]);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let d = self.inner.spec().obs_dim();
+        let adim = self.inner.spec().action_space.dim();
+        let mut out = [Step::default()];
+        let mut arena = SliceArena::new(&mut obs[..d], d);
+        self.inner.step_batch(&action[..adim], &[0], &mut arena, &mut out);
+        out[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+    use crate::envs::registry;
+
+    const MIX: &str = "[group]\ntask = CartPole-v1\ncount = 3\n\
+                       [group]\ntask = Pendulum-v1\ncount = 2\n";
+
+    fn pool() -> GroupedVecEnv {
+        let sc = ScenarioConfig::parse(MIX).unwrap();
+        registry::make_scenario_pool(&sc, 7).unwrap()
+    }
+
+    #[test]
+    fn maps_global_ids_to_group_lanes() {
+        let p = pool();
+        assert_eq!(p.num_envs(), 5);
+        assert_eq!(p.num_groups(), 2);
+        assert_eq!(p.locate(0), (0, 0));
+        assert_eq!(p.locate(2), (0, 2));
+        assert_eq!(p.locate(3), (1, 0));
+        assert_eq!(p.locate(4), (1, 1));
+    }
+
+    #[test]
+    fn steps_ragged_groups_with_zero_padding() {
+        let mut p = pool();
+        let dim = p.spec().obs_dim();
+        let adim = p.spec().action_space.dim();
+        assert_eq!(dim, 4); // CartPole 4 lanes wide; Pendulum 3, padded.
+        let n = p.num_envs();
+        let mut obs = vec![f32::NAN; n * dim];
+        for e in 0..n {
+            p.reset_lane(e, &mut obs[e * dim..(e + 1) * dim]);
+        }
+        // Pendulum rows (envs 3,4) are padded with an exact 0.0 tail.
+        for e in 3..5 {
+            assert_eq!(obs[e * dim + 3], 0.0, "env {e} pad");
+        }
+        // CartPole rows use all four lanes (position may be any sign,
+        // but they were written — no NaN survives).
+        assert!(obs.iter().all(|v| v.is_finite()));
+
+        let actions = vec![0.0; n * adim];
+        let mut out = vec![Step::default(); n];
+        obs.fill(f32::NAN);
+        let mut arena = SliceArena::new(&mut obs, dim);
+        p.step_batch(&actions, &[0; 5], &mut arena, &mut out);
+        assert!(obs.iter().all(|v| v.is_finite()));
+        for e in 3..5 {
+            assert_eq!(obs[e * dim + 3], 0.0, "env {e} pad after step");
+        }
+        // Pendulum never terminates; CartPole may. Rewards flowed.
+        assert!(out[3].reward != 0.0 || out[4].reward != 0.0);
+    }
+
+    #[test]
+    fn group_lanes_match_homogeneous_kernels() {
+        // Each group must behave exactly like a standalone kernel of
+        // the same task built with the group seed — the parity contract
+        // make_scenario_group documents.
+        let sc = ScenarioConfig::parse(MIX).unwrap();
+        let mut p = registry::make_scenario_pool(&sc, 7).unwrap();
+        let dim = p.spec().obs_dim();
+        let mut homo = registry::make_vec_env("CartPole-v1", sc.group_seed(0, 7), 0, 3).unwrap();
+
+        let n = p.num_envs();
+        let mut obs = vec![0.0; n * dim];
+        for e in 0..n {
+            p.reset_lane(e, &mut obs[e * dim..(e + 1) * dim]);
+        }
+        let mut hobs = vec![0.0; 3 * 4];
+        for l in 0..3 {
+            homo.reset_lane(l, &mut hobs[l * 4..(l + 1) * 4]);
+        }
+        for l in 0..3 {
+            assert_eq!(obs[l * dim..l * dim + 4], hobs[l * 4..(l + 1) * 4]);
+        }
+
+        // One step, action 1 everywhere.
+        let actions = vec![1.0; n];
+        let mut out = vec![Step::default(); n];
+        let mut arena = SliceArena::new(&mut obs, dim);
+        p.step_batch(&actions, &[0; 5], &mut arena, &mut out);
+        let hact = vec![1.0; 3];
+        let mut hout = vec![Step::default(); 3];
+        let mut harena = SliceArena::new(&mut hobs, 4);
+        homo.step_batch(&hact, &[0; 3], &mut harena, &mut hout);
+        for l in 0..3 {
+            assert_eq!(obs[l * dim..l * dim + 4], hobs[l * 4..(l + 1) * 4]);
+            assert_eq!(out[l], hout[l]);
+        }
+    }
+
+    #[test]
+    fn vec_lane_env_matches_group_lane() {
+        // Scalar scenario envs are lanes of the same kernels: episode
+        // streams must be bitwise identical to the grouped backend.
+        let sc = ScenarioConfig::parse(MIX).unwrap();
+        let mut p = registry::make_scenario_pool(&sc, 7).unwrap();
+        let dim = p.spec().obs_dim();
+        let n = p.num_envs();
+        let mut obs = vec![0.0; n * dim];
+        for e in 0..n {
+            p.reset_lane(e, &mut obs[e * dim..(e + 1) * dim]);
+        }
+
+        // Env 4 = lane 1 of the Pendulum group.
+        let mut e = registry::make_scenario_env(&sc, 1, 1, 7).unwrap();
+        assert_eq!(e.spec().obs_dim(), 3);
+        let mut eobs = vec![0.0; 3];
+        e.reset(&mut eobs);
+        assert_eq!(obs[4 * dim..4 * dim + 3], eobs[..]);
+
+        for step in 0..5 {
+            let actions = vec![0.25; n * p.spec().action_space.dim()];
+            let mut out = vec![Step::default(); n];
+            let mut arena = SliceArena::new(&mut obs, dim);
+            p.step_batch(&actions, &[0; 5], &mut arena, &mut out);
+            let es = e.step(&[0.25], &mut eobs);
+            assert_eq!(obs[4 * dim..4 * dim + 3], eobs[..], "step {step}");
+            assert_eq!(out[4], es, "step {step}");
+        }
+    }
+
+    #[test]
+    fn into_group_chunks_preserves_layout() {
+        let (spec, chunks) = pool().into_group_chunks();
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].0, 0);
+        assert_eq!(chunks[0].1.num_envs(), 3);
+        assert_eq!(chunks[1].0, 3);
+        assert_eq!(chunks[1].1.num_envs(), 2);
+        assert!(spec.is_grouped());
+    }
+}

@@ -32,12 +32,14 @@ pub mod thread_pool;
 pub mod chunked;
 pub mod batch;
 pub mod envpool;
+pub mod hetero;
 pub mod numa;
 
 pub use action_queue::ActionBufferQueue;
 pub use batch::BatchedTransition;
 pub use chunked::ChunkedThreadPool;
 pub use envpool::{EnvPool, ExecMode, PoolConfig};
+pub use hetero::{GroupedVecEnv, VecLaneEnv};
 pub use numa::NumaPool;
 pub use state_queue::StateBufferQueue;
 pub use thread_pool::ThreadPool;

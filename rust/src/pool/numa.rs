@@ -27,6 +27,14 @@ impl NumaPool {
     /// its own `ChunkedThreadPool`), `wrappers`, `pin_cores` — is
     /// plumbed through to the shards unchanged.
     pub fn make(cfg: PoolConfig, nodes: usize) -> Result<NumaPool> {
+        if cfg.scenario.is_some() {
+            // Sharding would split scenario groups across nodes and
+            // re-seed each shard, breaking the group-contiguity and
+            // replayability contracts. Run scenarios on a single pool.
+            return Err(crate::Error::Config(
+                "scenario pools do not support NUMA sharding; use a single EnvPool".into(),
+            ));
+        }
         if nodes == 0
             || cfg.num_envs % nodes != 0
             || cfg.batch_size % nodes != 0

@@ -115,7 +115,14 @@ fn worker_loop(
                 *slot.needs_reset.lock().unwrap() = false;
                 // None = queue closed mid-teardown: stop producing.
                 let Some(t) = states.acquire() else { return };
-                states.write(t, env_id, 0.0, false, false, |obs| env.reset(obs));
+                // Scenario pools run the queue at the union observation
+                // width: hand the env its own row prefix and zero the
+                // padding (a no-op for homogeneous pools).
+                let d = env.spec().obs_dim();
+                states.write(t, env_id, 0.0, false, false, |obs| {
+                    obs[d..].fill(0.0);
+                    env.reset(&mut obs[..d]);
+                });
             }
             Task::Step { env_id } => {
                 let slot = &envs[env_id as usize];
@@ -123,16 +130,21 @@ fn worker_loop(
                 let action = slot.action.lock().unwrap();
                 let mut needs_reset = slot.needs_reset.lock().unwrap();
                 let Some(t) = states.acquire() else { return };
+                let d = env.spec().obs_dim();
                 if *needs_reset {
                     // EnvPool auto-reset: the action after a terminal
                     // transition triggers reset; its "step" result is the
                     // initial observation with zero reward.
                     *needs_reset = false;
-                    states.write(t, env_id, 0.0, false, false, |obs| env.reset(obs));
+                    states.write(t, env_id, 0.0, false, false, |obs| {
+                        obs[d..].fill(0.0);
+                        env.reset(&mut obs[..d]);
+                    });
                 } else {
                     let mut finished = false;
                     states.write_with(t, env_id, |obs| {
-                        let r = env.step(&action, obs);
+                        obs[d..].fill(0.0);
+                        let r = env.step(&action, &mut obs[..d]);
                         finished = r.finished();
                         (r.reward, r.done, r.truncated)
                     });

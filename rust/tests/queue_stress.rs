@@ -235,7 +235,7 @@ fn chunked_pool_clamps_surplus_workers_to_chunk_count() {
     let chunks: Vec<Chunk> = (0..n)
         .map(|c| {
             let envs = registry::make_vec_env("CartPole-v1", 9, c as u64, chunk_size).unwrap();
-            Chunk::new(envs, c as u32, 1)
+            Chunk::new(envs, c as u32)
         })
         .collect();
     let mut pool = ChunkedThreadPool::spawn(16, chunks, states.clone(), chunk_size, 1, false);

@@ -1,0 +1,308 @@
+//! Heterogeneous scenario pools: mixed-task parity and replayability.
+//!
+//! The contract under test (see `config/scenario.rs` and
+//! `pool/hetero.rs`): a group inside a mixed pool is seeded with the
+//! **group seed** and group-local env ids, so its per-env episodes are
+//! bitwise identical to a homogeneous pool built from the same task,
+//! seed and wrapper stack — routing through the union spec, the
+//! env_id -> (group, lane) map, the ragged obs arenas and the action
+//! re-striding must be invisible in the data.
+//!
+//! Bitwise scope mirrors the repo's SIMD parity contracts: classic
+//! control is bitwise at every lane width, the walker family and Atari
+//! at width 1 — so the all-width sweep uses a classic trio and the
+//! classic+walker+Atari mix pins width 1 across both exec modes.
+
+use envpool::config::ScenarioConfig;
+use envpool::envs::registry;
+use envpool::envs::spec::ActionSpace;
+use envpool::executors::{PoolVectorEnv, VectorEnv};
+use envpool::pool::{EnvPool, ExecMode, PoolConfig};
+use envpool::simd::LanePass;
+
+/// Everything a pool emitted over a run, in env-id-major stream order.
+#[derive(Debug, Clone, PartialEq)]
+struct Streams {
+    obs: Vec<f32>,
+    rew: Vec<f32>,
+    done: Vec<u8>,
+    trunc: Vec<u8>,
+}
+
+/// Deterministic action for `(lane, step)` under a **group's** action
+/// space — both sides of every comparison key actions off the group
+/// lane, so the mixed pool and the homogeneous oracle agree exactly.
+fn fill_action(space: &ActionSpace, lane: usize, step: usize, out: &mut [f32]) {
+    match *space {
+        ActionSpace::Discrete(k) => out[0] = ((step * 5 + lane * 3) % k) as f32,
+        ActionSpace::Continuous { dim, low, high } => {
+            for (d, slot) in out.iter_mut().enumerate().take(dim) {
+                let t = ((step * 7 + lane * 5 + d * 11) % 13) as f32 / 12.0;
+                *slot = low + t * (high - low);
+            }
+        }
+    }
+}
+
+/// Drive a sync pool for `steps` rounds. `lane_of(env)` gives the
+/// group-local lane and per-group action space used to key actions.
+fn drive(pool: EnvPool, steps: usize, lane_of: &dyn Fn(usize) -> (usize, ActionSpace)) -> Streams {
+    let spec = pool.spec().clone();
+    let union_adim = spec.action_space.dim();
+    let n = pool.config().num_envs;
+    let mut v = PoolVectorEnv::new(pool).unwrap();
+    let mut out = v.make_output();
+    let mut st = Streams { obs: Vec::new(), rew: Vec::new(), done: Vec::new(), trunc: Vec::new() };
+    v.reset(&mut out).unwrap();
+    st.obs.extend_from_slice(&out.obs);
+    let mut actions = vec![0.0f32; n * union_adim];
+    for step in 0..steps {
+        actions.fill(0.0);
+        for e in 0..n {
+            let (lane, space) = lane_of(e);
+            let adim = space.dim();
+            fill_action(&space, lane, step, &mut actions[e * union_adim..e * union_adim + adim]);
+        }
+        v.step(&actions, &mut out).unwrap();
+        st.obs.extend_from_slice(&out.obs);
+        st.rew.extend_from_slice(&out.rew);
+        st.done.extend_from_slice(&out.done);
+        st.trunc.extend_from_slice(&out.trunc);
+    }
+    st
+}
+
+/// Per-env slices of a mixed stream must equal the homogeneous group
+/// stream bitwise, and the union-row padding must be exactly zero.
+fn assert_group_parity(
+    mixed: &Streams,
+    homo: &Streams,
+    n_mixed: usize,
+    union_dim: usize,
+    first_env: usize,
+    count: usize,
+    group_dim: usize,
+    steps: usize,
+    ctx: &str,
+) {
+    for s in 0..=steps {
+        for l in 0..count {
+            let e = first_env + l;
+            let m = &mixed.obs[(s * n_mixed + e) * union_dim..(s * n_mixed + e + 1) * union_dim];
+            let h = &homo.obs[(s * count + l) * group_dim..(s * count + l + 1) * group_dim];
+            assert_eq!(&m[..group_dim], h, "{ctx}: obs diverge, step {s} env {e}");
+            assert!(
+                m[group_dim..].iter().all(|&x| x == 0.0),
+                "{ctx}: padding not zero, step {s} env {e}"
+            );
+        }
+    }
+    for s in 0..steps {
+        for l in 0..count {
+            let e = first_env + l;
+            assert_eq!(
+                mixed.rew[s * n_mixed + e],
+                homo.rew[s * count + l],
+                "{ctx}: rewards diverge, step {s} env {e}"
+            );
+            assert_eq!(
+                mixed.done[s * n_mixed + e],
+                homo.done[s * count + l],
+                "{ctx}: dones diverge, step {s} env {e}"
+            );
+            assert_eq!(
+                mixed.trunc[s * n_mixed + e],
+                homo.trunc[s * count + l],
+                "{ctx}: truncs diverge, step {s} env {e}"
+            );
+        }
+    }
+}
+
+fn mixed_pool(sc: &ScenarioConfig, seed: u64, mode: ExecMode, lp: LanePass) -> EnvPool {
+    EnvPool::make(
+        PoolConfig::new("scenario")
+            .scenario(sc.clone())
+            .sync()
+            .num_threads(sc.groups.len())
+            .seed(seed)
+            .exec_mode(mode)
+            .lane_pass(lp),
+    )
+    .unwrap()
+}
+
+fn homo_pool(sc: &ScenarioConfig, gi: usize, pool_seed: u64, mode: ExecMode, lp: LanePass) -> EnvPool {
+    let g = &sc.groups[gi];
+    EnvPool::make(
+        PoolConfig::new(&g.task_id)
+            .num_envs(g.count)
+            .batch_size(g.count)
+            .num_threads(1)
+            .seed(sc.group_seed(gi, pool_seed))
+            .exec_mode(mode)
+            .lane_pass(lp)
+            .wrappers(g.wrap.clone()),
+    )
+    .unwrap()
+}
+
+/// Run the full mixed-vs-homogeneous comparison for one scenario at one
+/// (exec mode, lane pass) point. `steps` is chosen so terminations and
+/// wrapper truncations auto-reset lanes mid-run on both sides.
+fn check_scenario_parity(sc: &ScenarioConfig, pool_seed: u64, mode: ExecMode, lp: LanePass, steps: usize) {
+    let spec = registry::scenario_spec(sc).unwrap();
+    let union_dim = spec.obs_dim();
+    let n = sc.num_envs();
+    let views = spec.groups.clone();
+    let lane_of = move |e: usize| {
+        let g = views.iter().find(|v| e >= v.first_env && e < v.first_env + v.count).unwrap();
+        (e - g.first_env, g.spec.action_space.clone())
+    };
+    let mixed = drive(mixed_pool(sc, pool_seed, mode, lp), steps, &lane_of);
+    for (gi, view) in spec.groups.iter().enumerate() {
+        let space = view.spec.action_space.clone();
+        let homo = drive(homo_pool(sc, gi, pool_seed, mode, lp), steps, &move |l| {
+            (l, space.clone())
+        });
+        assert_group_parity(
+            &mixed,
+            &homo,
+            n,
+            union_dim,
+            view.first_env,
+            view.count,
+            view.spec.obs_dim(),
+            steps,
+            &format!("{}/{mode:?}/width{}", view.task_id, lp.width()),
+        );
+    }
+}
+
+const CLASSIC_TRIO: &str = "\
+[group]
+task = CartPole-v1
+count = 4
+seed = 101
+time_limit = 50
+reward_clip = true
+
+[group]
+task = Pendulum-v1
+count = 4
+seed = 202
+
+[group]
+task = MountainCar-v0
+count = 8
+seed = 303
+";
+
+/// Classic control is bitwise at every lane width, so the 3-group
+/// classic mix must match its homogeneous oracles at widths 1, 4, 8 —
+/// with the CartPole group terminating and hitting its 50-step wrapper
+/// truncation (auto-resets) well inside the 70-step run.
+#[test]
+fn mixed_classic_pool_matches_homogeneous_pools_at_all_lane_widths() {
+    let sc = ScenarioConfig::parse(CLASSIC_TRIO).unwrap();
+    for lp in [LanePass::Scalar, LanePass::Width4, LanePass::Width8] {
+        check_scenario_parity(&sc, 7, ExecMode::Vectorized, lp, 70);
+    }
+}
+
+/// The paper-shaped mix — classic + walker + Atari — at lane width 1
+/// (the walker family's bitwise contract), across both exec modes:
+/// scalar per-env lanes and full-width vectorized group kernels must
+/// both reproduce the homogeneous pools exactly.
+#[test]
+fn mixed_classic_walker_atari_pool_matches_homogeneous_pools_in_both_exec_modes() {
+    let sc = ScenarioConfig::parse(
+        "\
+[group]
+task = CartPole-v1
+count = 2
+seed = 11
+time_limit = 40
+reward_clip = true
+
+[group]
+task = Hopper-v4
+count = 2
+seed = 22
+
+[group]
+task = Pong-v5
+count = 2
+seed = 33
+",
+    )
+    .unwrap();
+    for mode in [ExecMode::Scalar, ExecMode::Vectorized] {
+        check_scenario_parity(&sc, 9, mode, LanePass::Scalar, 50);
+    }
+}
+
+/// Replayability: the same scenario text + pool seed reproduces the
+/// same jittered physics and therefore bitwise-identical episode
+/// streams and returns; a different pool seed redraws the jitters (no
+/// explicit group seeds here) and the trajectories move.
+#[test]
+fn scenario_jitter_is_replayable_from_file_and_seed() {
+    const JITTERED: &str = "\
+[group]
+task = CartPole-v1
+count = 4
+time_limit = 60
+jitter.length = 0.4 0.6
+
+[group]
+task = Pendulum-v1
+count = 4
+jitter.gravity = 8.0 12.0
+";
+    let steps = 60;
+    let run = |pool_seed: u64| {
+        let sc = ScenarioConfig::parse(JITTERED).unwrap();
+        let spec = registry::scenario_spec(&sc).unwrap();
+        let views = spec.groups.clone();
+        let lane_of = move |e: usize| {
+            let g = views.iter().find(|v| e >= v.first_env && e < v.first_env + v.count).unwrap();
+            (e - g.first_env, g.spec.action_space.clone())
+        };
+        drive(mixed_pool(&sc, pool_seed, ExecMode::Vectorized, LanePass::Auto), steps, &lane_of)
+    };
+    let a = run(5);
+    let b = run(5);
+    assert_eq!(a, b, "same scenario + seed must replay bitwise");
+    let n = 8;
+    let returns = |st: &Streams, e: usize| -> f32 {
+        (0..steps).map(|s| st.rew[s * n + e]).sum()
+    };
+    for e in 0..n {
+        assert_eq!(returns(&a, e).to_bits(), returns(&b, e).to_bits(), "env {e} return drifted");
+    }
+    let c = run(6);
+    assert_ne!(a, c, "a different pool seed must redraw the jittered physics");
+}
+
+/// The checked-in example scenario must keep loading, round-trip
+/// through the canonical text form, and build a real grouped pool.
+#[test]
+fn checked_in_example_scenario_loads_and_round_trips() {
+    let path = format!("{}/../examples/scenarios/mixed.scn", env!("CARGO_MANIFEST_DIR"));
+    let sc = ScenarioConfig::load(&path).unwrap();
+    assert_eq!(
+        ScenarioConfig::parse(&sc.to_text()).unwrap(),
+        sc,
+        "mixed.scn must round-trip through to_text"
+    );
+    let tasks: Vec<&str> = sc.groups.iter().map(|g| g.task_id.as_str()).collect();
+    assert_eq!(tasks, ["CartPole-v1", "Hopper-v4", "Pong-v5"]);
+    let spec = registry::scenario_spec(&sc).unwrap();
+    assert!(spec.is_grouped());
+    assert_eq!(spec.obs_dim(), 4 * 84 * 84, "union obs must be the stacked Atari frame");
+    assert!(spec.uniform_group_spec().is_none(), "a 3-task mix has no uniform spec");
+    let pool = registry::make_scenario_pool(&sc, 0).unwrap();
+    use envpool::envs::vector::VecEnv as _;
+    assert_eq!(pool.num_envs(), sc.num_envs());
+}
