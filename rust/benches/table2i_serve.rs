@@ -1,0 +1,188 @@
+//! Bench: Table 2i — served-pool overhead (`envpool serve` / attach).
+//!
+//! CartPole, N = 256 envs. The in-process baseline steps a synchronous
+//! scalar pool directly; the served runs move the same 256 envs into a
+//! `PoolServer` and step them through `ShmClient`s — one client leasing
+//! all 256 envs, then two concurrent clients leasing 128 each. Clients
+//! pipeline up to two waves (ring credits) so the control-socket
+//! round-trip overlaps env stepping, exactly how a trainer would drive
+//! the attach surface.
+//!
+//! Acceptance gate (full mode only): the single attached client must
+//! reach >= 0.9x the in-process pool — the slab copy + two control
+//! frames per wave must cost less than 10% at CartPole wave rates.
+//!
+//! `cargo bench --bench table2i_serve` (ENVPOOL_BENCH_QUICK=1 for a fast
+//! CI pass that skips the gate).
+
+use envpool::bench_util::Bencher;
+use envpool::config::ServeConfig;
+use envpool::coordinator::throughput::run_throughput_lanes;
+use envpool::executors::serve::PoolServer;
+use envpool::executors::{ShmClient, VectorEnv};
+use envpool::metrics::table::{fmt_fps, Table};
+use envpool::simd::LanePass;
+use std::path::PathBuf;
+
+const N: usize = 256;
+const SEED: u64 = 7;
+const THREADS: usize = 4;
+
+fn sock(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("envpool-t2i-{name}-{}.sock", std::process::id()))
+}
+
+/// Attach with a bounded retry: the bencher re-runs its closure for
+/// warmup + sample iterations, and a lease freed by the previous
+/// iteration's `detach` is re-admitted only once the server has drained
+/// and reset it — a few milliseconds the next attach may race.
+fn attach_retry(socket: &std::path::Path, k: usize) -> ShmClient {
+    let t0 = std::time::Instant::now();
+    loop {
+        match ShmClient::attach(socket, k) {
+            Ok(c) => return c,
+            Err(e) => {
+                assert!(
+                    t0.elapsed() < std::time::Duration::from_secs(10),
+                    "attach never admitted: {e}"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Step `rounds` waves through an attached client, keeping up to two
+/// waves in flight (bounded by the ring credits).
+fn drive(client: &mut ShmClient, rounds: u64) {
+    let k = client.num_envs();
+    let mut out = client.make_output();
+    client.reset(&mut out).expect("reset");
+    let acts: Vec<f32> = (0..k).map(|i| (i % 2) as f32).collect();
+    let depth = client.max_outstanding().min(2) as u64;
+    let mut sent = 0u64;
+    let mut recvd = 0u64;
+    while sent < depth.min(rounds) {
+        client.send_wave(&acts).expect("send");
+        sent += 1;
+    }
+    while recvd < rounds {
+        client.recv_wave(&mut out).expect("recv");
+        recvd += 1;
+        if sent < rounds {
+            client.send_wave(&acts).expect("send");
+            sent += 1;
+        }
+    }
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+    let rounds: u64 = if quick { 64 } else { 2_000 };
+    let steps = rounds * N as u64;
+
+    println!("== Table 2i: served pool (serve/attach) vs in-process ==");
+    println!("(CartPole-v1, {N} envs, {THREADS} pool threads, {rounds} waves)");
+
+    // In-process baseline: the same envs, stepped without a wire.
+    let mut base_fps = 0.0;
+    b.run("table2i/in-process/sync-256", steps as f64, || {
+        base_fps = run_throughput_lanes(
+            "CartPole-v1",
+            "envpool-sync",
+            N,
+            N,
+            THREADS,
+            steps,
+            SEED,
+            LanePass::Auto,
+        )
+        .unwrap();
+    });
+
+    // Served, one client leasing all 256 envs.
+    let mut one_fps = 0.0;
+    {
+        let cfg = ServeConfig::new("CartPole-v1", sock("one"))
+            .max_clients(1)
+            .lease_size(N)
+            .num_threads(THREADS)
+            .seed(SEED);
+        let server = PoolServer::start(cfg).expect("server");
+        let mut client = ShmClient::attach(server.socket_path(), N).expect("attach");
+        let mut elapsed = 0.0;
+        b.run("table2i/served/1x256", steps as f64, || {
+            let t0 = std::time::Instant::now();
+            drive(&mut client, rounds);
+            elapsed = t0.elapsed().as_secs_f64();
+        });
+        one_fps = steps as f64 / elapsed;
+        client.detach().expect("detach");
+        server.stop();
+    }
+
+    // Served, two concurrent clients leasing 128 envs each.
+    let mut two_fps = 0.0;
+    {
+        let cfg = ServeConfig::new("CartPole-v1", sock("two"))
+            .max_clients(2)
+            .lease_size(N / 2)
+            .num_threads(THREADS)
+            .seed(SEED);
+        let server = PoolServer::start(cfg).expect("server");
+        let mut elapsed = 0.0;
+        b.run("table2i/served/2x128", steps as f64, || {
+            let clients: Vec<ShmClient> =
+                (0..2).map(|_| attach_retry(server.socket_path(), N / 2)).collect();
+            let t0 = std::time::Instant::now();
+            let handles: Vec<_> = clients
+                .into_iter()
+                .map(|mut c| std::thread::spawn(move || {
+                    drive(&mut c, rounds);
+                    c.detach().expect("detach");
+                }))
+                .collect();
+            for h in handles {
+                h.join().expect("client thread");
+            }
+            elapsed = t0.elapsed().as_secs_f64();
+        });
+        two_fps = steps as f64 / elapsed;
+        server.stop();
+    }
+
+    let ratio_one = one_fps / base_fps;
+    let ratio_two = two_fps / base_fps;
+    let mut t = Table::new(["Pool", "Clients x envs", "env-steps/s", "vs in-process"]);
+    t.row([
+        "in-process".to_string(),
+        format!("- x {N}"),
+        fmt_fps(base_fps),
+        "1.000".to_string(),
+    ]);
+    t.row([
+        "served".to_string(),
+        format!("1 x {N}"),
+        fmt_fps(one_fps),
+        format!("{ratio_one:.3}"),
+    ]);
+    t.row([
+        "served".to_string(),
+        format!("2 x {}", N / 2),
+        fmt_fps(two_fps),
+        format!("{ratio_two:.3}"),
+    ]);
+    println!("{}", t.render());
+    println!("  -> served(1x{N}) / in-process = {ratio_one:.3} (gate: >= 0.9, full mode only)");
+
+    if !quick {
+        assert!(
+            ratio_one >= 0.9,
+            "acceptance gate failed: attached client at {one_fps:.0} env-steps/s is \
+             {ratio_one:.3}x the in-process pool {base_fps:.0} (need >= 0.9x)"
+        );
+    }
+
+    b.write_snapshot("table2i").unwrap();
+}

@@ -4,8 +4,10 @@
 //! is explicit and validated.
 
 pub mod scenario;
+pub mod serve;
 mod train;
 pub use scenario::{ScenarioConfig, ScenarioGroup};
+pub use serve::ServeConfig;
 pub use train::{BackendKind, ExecutorKind, Precision, TrainConfig};
 
 use crate::{Error, Result};

@@ -1,0 +1,183 @@
+//! `envpool serve` configuration: where the control socket lives, where
+//! the shared-memory slabs are backed, and how the env id space is carved
+//! into client leases. Populated builder-style and overridable from CLI
+//! flags via [`ServeConfig::validate`]'s caller (see `main.rs`).
+
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Configuration for a pool server ([`crate::executors::serve::PoolServer`]).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Task id every lease serves, e.g. `"CartPole-v1"`.
+    pub task_id: String,
+    /// Unix socket path for the attach/step control channel.
+    pub socket_path: PathBuf,
+    /// Directory backing the obs/action slab files. `None` picks
+    /// `/dev/shm` when present (true shared memory on Linux) and the
+    /// system temp dir otherwise.
+    pub slab_dir: Option<PathBuf>,
+    /// Number of leases = maximum concurrently attached clients.
+    pub max_clients: usize,
+    /// Envs per lease (the pool runs `max_clients * lease_size` envs,
+    /// batch size `lease_size`).
+    pub lease_size: usize,
+    /// Worker threads for the underlying pool.
+    pub num_threads: usize,
+    /// Experiment seed.
+    pub seed: u64,
+    /// Slots in each per-lease obs/action ring. A client may pipeline at
+    /// most `ring_slots - 1` waves, so slots are never overwritten before
+    /// they are read.
+    pub ring_slots: usize,
+    /// Reclaim a lease whose client sent nothing (not even a heartbeat)
+    /// for this long. Socket EOF is the primary death signal — a SIGKILL
+    /// closes the socket immediately — so this only catches wedged-but-
+    /// alive clients; `None` disables the timer.
+    pub heartbeat_timeout: Option<Duration>,
+}
+
+impl ServeConfig {
+    pub fn new(task_id: &str, socket_path: impl Into<PathBuf>) -> Self {
+        ServeConfig {
+            task_id: task_id.to_string(),
+            socket_path: socket_path.into(),
+            slab_dir: None,
+            max_clients: 2,
+            lease_size: 8,
+            num_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            seed: 0,
+            ring_slots: 4,
+            heartbeat_timeout: None,
+        }
+    }
+
+    pub fn max_clients(mut self, n: usize) -> Self {
+        self.max_clients = n;
+        self
+    }
+
+    pub fn lease_size(mut self, k: usize) -> Self {
+        self.lease_size = k;
+        self
+    }
+
+    pub fn num_threads(mut self, t: usize) -> Self {
+        self.num_threads = t;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn ring_slots(mut self, n: usize) -> Self {
+        self.ring_slots = n;
+        self
+    }
+
+    pub fn slab_dir(mut self, d: impl Into<PathBuf>) -> Self {
+        self.slab_dir = Some(d.into());
+        self
+    }
+
+    pub fn heartbeat_timeout(mut self, d: Option<Duration>) -> Self {
+        self.heartbeat_timeout = d;
+        self
+    }
+
+    /// Bound on outstanding waves per lease, derived from the ring depth:
+    /// one slot is always kept free so the server never overwrites a slot
+    /// the client has not consumed.
+    pub fn max_outstanding(&self) -> usize {
+        self.ring_slots - 1
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_clients == 0 {
+            return Err(Error::Config("serve: max_clients must be > 0".into()));
+        }
+        if self.lease_size == 0 {
+            return Err(Error::Config("serve: lease_size must be > 0".into()));
+        }
+        if self.num_threads == 0 {
+            return Err(Error::Config("serve: num_threads must be > 0".into()));
+        }
+        if self.ring_slots < 2 {
+            return Err(Error::Config(
+                "serve: ring_slots must be >= 2 (one in flight + one being read)".into(),
+            ));
+        }
+        if self.socket_path.as_os_str().is_empty() {
+            return Err(Error::Config("serve: socket_path must be set".into()));
+        }
+        Ok(())
+    }
+
+    /// Resolve the slab directory: explicit > `/dev/shm` > temp dir.
+    pub fn resolved_slab_dir(&self) -> PathBuf {
+        if let Some(d) = &self.slab_dir {
+            return d.clone();
+        }
+        let shm = Path::new("/dev/shm");
+        if shm.is_dir() {
+            return shm.to_path_buf();
+        }
+        std::env::temp_dir()
+    }
+
+    /// Slab file path for one lease's observation (server→client) ring.
+    /// Names embed the socket file stem and the server pid so concurrent
+    /// servers (or a restarted one) never collide.
+    pub fn obs_slab_path(&self, lease: usize) -> PathBuf {
+        self.slab_path(lease, "obs")
+    }
+
+    /// Slab file path for one lease's action (client→server) ring.
+    pub fn act_slab_path(&self, lease: usize) -> PathBuf {
+        self.slab_path(lease, "act")
+    }
+
+    fn slab_path(&self, lease: usize, kind: &str) -> PathBuf {
+        let stem = self
+            .socket_path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "envpool".to_string());
+        self.resolved_slab_dir()
+            .join(format!("{stem}.{}.lease{lease}.{kind}", std::process::id()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_degenerate_shapes() {
+        let ok = ServeConfig::new("CartPole-v1", "/tmp/s.sock");
+        ok.validate().unwrap();
+        assert!(ok.clone().max_clients(0).validate().is_err());
+        assert!(ok.clone().lease_size(0).validate().is_err());
+        assert!(ok.clone().ring_slots(1).validate().is_err());
+        assert!(ServeConfig::new("CartPole-v1", "").validate().is_err());
+    }
+
+    #[test]
+    fn slab_paths_are_distinct_and_dir_resolves() {
+        let c = ServeConfig::new("CartPole-v1", "/tmp/pool.sock").slab_dir("/tmp/slabs");
+        assert_ne!(c.obs_slab_path(0), c.act_slab_path(0));
+        assert_ne!(c.obs_slab_path(0), c.obs_slab_path(1));
+        assert!(c.obs_slab_path(0).starts_with("/tmp/slabs"));
+        let auto = ServeConfig::new("CartPole-v1", "/tmp/pool.sock");
+        assert!(auto.resolved_slab_dir().is_dir());
+    }
+
+    #[test]
+    fn ring_depth_bounds_pipelining() {
+        let c = ServeConfig::new("CartPole-v1", "/tmp/s.sock").ring_slots(4);
+        assert_eq!(c.max_outstanding(), 3);
+    }
+}

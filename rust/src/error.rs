@@ -28,6 +28,13 @@ pub enum Error {
     /// IPC framing error in the subprocess executor.
     Ipc(String),
 
+    /// Attach handshake to a pool server was refused (socket level).
+    Attach(String),
+
+    /// Lease protocol violation on an attached client (backpressure
+    /// exceeded, wrong wave size, lease exhausted, ...).
+    Lease(String),
+
     /// Underlying I/O error.
     Io(std::io::Error),
 }
@@ -47,6 +54,8 @@ impl std::fmt::Display for Error {
             Error::Xla(msg) => write!(f, "xla: {msg}"),
             Error::Artifact(msg) => write!(f, "artifact: {msg}"),
             Error::Ipc(msg) => write!(f, "ipc: {msg}"),
+            Error::Attach(msg) => write!(f, "attach refused: {msg}"),
+            Error::Lease(msg) => write!(f, "lease: {msg}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -92,6 +101,8 @@ mod tests {
             "action batch length 2 != env id count 1"
         );
         assert_eq!(Error::Closed.to_string(), "pool is closed");
+        assert_eq!(Error::Attach("full".into()).to_string(), "attach refused: full");
+        assert_eq!(Error::Lease("overrun".into()).to_string(), "lease: overrun");
     }
 
     #[test]

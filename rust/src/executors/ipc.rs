@@ -31,7 +31,14 @@ const TAG_STEP: u8 = 2;
 const TAG_CLOSE: u8 = 3;
 const TAG_RESP: u8 = 4;
 
-fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+/// Default element cap for peers whose frame size is not known up front
+/// (tests, hand-rolled clients). 16 Mi f32s = 64 MiB of payload.
+pub(crate) const MAX_F32_ELEMS: usize = 16 * 1024 * 1024;
+
+/// Longest string accepted in a control frame (paths, task ids, errors).
+pub(crate) const MAX_STR_BYTES: usize = 4096;
+
+pub(crate) fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
     let mut buf = Vec::with_capacity(xs.len() * 4);
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
@@ -41,16 +48,64 @@ fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+/// Read a length-prefixed f32 vector, refusing to allocate anything for a
+/// frame whose claimed element count exceeds `max_elems`. The byte size is
+/// computed with `checked_mul` so a hostile length prefix cannot wrap the
+/// allocation size on 32-bit targets.
+pub(crate) fn read_f32s_bounded(r: &mut impl Read, max_elems: usize) -> Result<Vec<f32>> {
     let mut len4 = [0u8; 4];
     r.read_exact(&mut len4)?;
     let n = u32::from_le_bytes(len4) as usize;
-    if n > 64 * 1024 * 1024 {
-        return Err(Error::Ipc(format!("frame too large: {n}")));
+    if n > max_elems {
+        return Err(Error::Ipc(format!("frame too large: {n} f32s (cap {max_elems})")));
     }
-    let mut bytes = vec![0u8; n * 4];
+    let nbytes = n
+        .checked_mul(4)
+        .ok_or_else(|| Error::Ipc(format!("frame byte size overflows: {n} f32s")))?;
+    let mut bytes = vec![0u8; nbytes];
     r.read_exact(&mut bytes)?;
     Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+pub(crate) fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub(crate) fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub(crate) fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    if s.len() > MAX_STR_BYTES {
+        return Err(Error::Ipc(format!("string frame too large: {} bytes", s.len())));
+    }
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn read_str(r: &mut impl Read) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > MAX_STR_BYTES {
+        return Err(Error::Ipc(format!("string frame too large: {n} bytes")));
+    }
+    let mut bytes = vec![0u8; n];
+    r.read_exact(&mut bytes)?;
+    String::from_utf8(bytes).map_err(|_| Error::Ipc("string frame is not utf-8".into()))
 }
 
 impl Request {
@@ -68,12 +123,19 @@ impl Request {
     }
 
     pub fn read(r: &mut impl Read) -> Result<Request> {
+        Self::read_bounded(r, MAX_F32_ELEMS)
+    }
+
+    /// Like [`Request::read`] but with a caller-supplied cap on the action
+    /// length — the worker loop passes the spec's action dim so a corrupt
+    /// or hostile length prefix is rejected before any allocation.
+    pub fn read_bounded(r: &mut impl Read, max_action_elems: usize) -> Result<Request> {
         let mut tag = [0u8; 1];
         r.read_exact(&mut tag)?;
         Ok(match tag[0] {
             TAG_RESET => Request::Reset,
             TAG_CLOSE => Request::Close,
-            TAG_STEP => Request::Step(read_f32s(r)?),
+            TAG_STEP => Request::Step(read_f32s_bounded(r, max_action_elems)?),
             t => return Err(Error::Ipc(format!("bad request tag {t}"))),
         })
     }
@@ -90,6 +152,13 @@ impl Response {
     }
 
     pub fn read(r: &mut impl Read) -> Result<Response> {
+        Self::read_bounded(r, MAX_F32_ELEMS)
+    }
+
+    /// Like [`Response::read`] but the obs length claimed by the frame is
+    /// validated against `max_obs_elems` (the spec's obs dim on the gather
+    /// path) *before* the payload buffer is allocated.
+    pub fn read_bounded(r: &mut impl Read, max_obs_elems: usize) -> Result<Response> {
         let mut tag = [0u8; 1];
         r.read_exact(&mut tag)?;
         if tag[0] != TAG_RESP {
@@ -103,7 +172,7 @@ impl Response {
             rew: f32::from_le_bytes(rew4),
             done: flags[0] != 0,
             trunc: flags[1] != 0,
-            obs: read_f32s(r)?,
+            obs: read_f32s_bounded(r, max_obs_elems)?,
         })
     }
 }
@@ -119,10 +188,11 @@ pub fn worker_serve(
 ) -> Result<()> {
     let mut env = crate::envs::registry::make_env(task_id, seed, env_id)?;
     let dim = env.spec().obs_dim();
+    let act_dim = env.spec().action_space.dim();
     let mut obs = vec![0.0f32; dim];
     let mut needs_reset = false;
     loop {
-        match Request::read(r)? {
+        match Request::read_bounded(r, act_dim)? {
             Request::Close => return Ok(()),
             Request::Reset => {
                 env.reset(&mut obs);
@@ -135,6 +205,12 @@ pub fn worker_serve(
                     env.reset(&mut obs);
                     Response { obs: obs.clone(), rew: 0.0, done: false, trunc: false }.write(w)?;
                 } else {
+                    if a.len() != act_dim {
+                        return Err(Error::Ipc(format!(
+                            "action frame of {} f32s (expected {act_dim})",
+                            a.len()
+                        )));
+                    }
                     let s = env.step(&a, &mut obs);
                     needs_reset = s.finished();
                     Response { obs: obs.clone(), rew: s.reward, done: s.done, trunc: s.truncated }
@@ -172,6 +248,57 @@ mod tests {
     fn bad_tag_rejected() {
         assert!(Request::read(&mut [9u8].as_slice()).is_err());
         assert!(Response::read(&mut [9u8].as_slice()).is_err());
+    }
+
+    #[test]
+    fn hostile_length_prefix_rejected_before_alloc() {
+        // A corrupt/hostile Step frame claiming u32::MAX elements must be
+        // refused by the length check, not by a failed 16 GiB allocation
+        // (or a wrapped one on 32-bit, where n * 4 overflows usize).
+        let mut frame = vec![TAG_STEP];
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = Request::read(&mut frame.as_slice()).unwrap_err();
+        assert!(matches!(err, Error::Ipc(_)), "got {err}");
+        assert!(err.to_string().contains("frame too large"), "got {err}");
+
+        // The old guard admitted counts up to 64 Mi elements = 256 MiB of
+        // payload; a bounded reader that knows the action dim refuses
+        // anything above it without reading the payload.
+        let mut frame = vec![TAG_STEP];
+        frame.extend_from_slice(&(64u32 * 1024 * 1024).to_le_bytes());
+        let err = Request::read_bounded(&mut frame.as_slice(), 4).unwrap_err();
+        assert!(err.to_string().contains("frame too large"), "got {err}");
+
+        // Same for the response path gather() uses.
+        let mut frame = vec![TAG_RESP];
+        frame.extend_from_slice(&0.5f32.to_le_bytes());
+        frame.extend_from_slice(&[0u8, 0u8]);
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = Response::read_bounded(&mut frame.as_slice(), 4).unwrap_err();
+        assert!(err.to_string().contains("frame too large"), "got {err}");
+    }
+
+    #[test]
+    fn worker_rejects_wrong_action_length() {
+        // CartPole's action dim is 1; a 3-element action must error out of
+        // the serve loop, not reach env.step with a bad slice.
+        let mut req_bytes = Vec::new();
+        Request::Reset.write(&mut req_bytes).unwrap();
+        Request::Step(vec![1.0, 2.0, 3.0]).write(&mut req_bytes).unwrap();
+        let mut out = Vec::new();
+        let err =
+            worker_serve("CartPole-v1", 0, 0, &mut req_bytes.as_slice(), &mut out).unwrap_err();
+        assert!(err.to_string().contains("frame too large"), "got {err}");
+    }
+
+    #[test]
+    fn str_frames_bounded_roundtrip() {
+        let mut buf = Vec::new();
+        write_str(&mut buf, "CartPole-v1").unwrap();
+        assert_eq!(read_str(&mut buf.as_slice()).unwrap(), "CartPole-v1");
+        let mut hostile = Vec::new();
+        write_u32(&mut hostile, u32::MAX).unwrap();
+        assert!(read_str(&mut hostile.as_slice()).is_err());
     }
 
     #[test]

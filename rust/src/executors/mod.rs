@@ -14,6 +14,12 @@
 //! All executors (and [`crate::pool::EnvPool`] via an adapter) implement
 //! [`traits::VectorEnv`], so the PPO coordinator and the bench harnesses
 //! swap them freely.
+//!
+//! Beyond the baselines, [`serve`] exports the pool *across process
+//! boundaries*: a [`serve::PoolServer`] owns an EnvPool and leases env
+//! ranges to [`serve::ShmClient`]s over a Unix control socket plus
+//! shared-memory rings ([`shm`]) — `VectorEnv` for envs living in another
+//! process.
 
 pub mod traits;
 pub mod forloop;
@@ -21,9 +27,12 @@ pub mod vector_forloop;
 pub mod ipc;
 pub mod subprocess;
 pub mod sample_factory;
+pub mod shm;
+pub mod serve;
 
 pub use forloop::ForLoopExecutor;
 pub use sample_factory::SampleFactoryExecutor;
+pub use serve::{PoolServer, ShmClient};
 pub use subprocess::SubprocessExecutor;
 pub use traits::{PoolVectorEnv, VectorEnv};
 pub use vector_forloop::VecForLoopExecutor;

@@ -1,0 +1,941 @@
+//! `envpool serve`: the pool as a *process*, not a library call.
+//!
+//! A [`PoolServer`] owns a [`LeasePool`] (async scalar [`crate::pool::EnvPool`]
+//! carved into per-client leases) and listens on a Unix socket. A
+//! [`ShmClient`] attaches, receives a lease of `lease_size` envs, and then
+//! steps them through two channels:
+//!
+//! - **Control** (this module): tiny length-prefixed frames over the Unix
+//!   socket, reusing the [`super::ipc`] framing helpers — `Attach`,
+//!   `Step{seq}`, `Reset`, `Detach`, `Heartbeat` up; `Attached`,
+//!   `Refused`, `Batch{seq}`, `Error` down. Frames carry *sequence
+//!   numbers only*, never payloads.
+//! - **Data** ([`super::shm`]): per-lease obs/action rings in `/dev/shm`,
+//!   written with one positioned write per wave. A control frame is the
+//!   commit that makes a slab slot visible (two-phase, mirroring
+//!   `StateBufferQueue`'s `slot_obs_mut`/`commit`).
+//!
+//! Backpressure is a credit scheme: wave `seq` lives in ring slot
+//! `seq % ring_slots`, the client pipelines at most `ring_slots - 1`
+//! waves, and the server additionally bounds queued waves per lease
+//! ([`crate::pool::LeaseConfig::max_outstanding`]) — a hostile client
+//! that ignores its credits gets [`Error::Lease`] replies, not memory
+//! growth.
+//!
+//! Client death: SIGKILL closes the socket, the per-connection reader
+//! thread sees EOF and releases the lease; the lease drains its in-flight
+//! wave, resets its envs, and parks the fresh batch for the next client
+//! (`[serve] lease N reclaimed` in the log — the chaos tests and the CI
+//! serve-smoke job key on it). A heartbeat timeout optionally reaps
+//! wedged-but-alive clients the same way.
+
+use super::ipc::{read_str, read_u32, read_u64, write_str, write_u32, write_u64};
+use super::shm::{ActSlab, ObsSlab, SlabSpec};
+use super::traits::VectorEnv;
+use crate::config::ServeConfig;
+use crate::envs::registry;
+use crate::envs::spec::EnvSpec;
+use crate::pool::batch::BatchedTransition;
+use crate::pool::lease::{LeaseConfig, LeaseEvent, LeaseId, LeasePool, Wave};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::io::{BufReader, Read, Write};
+use std::net::Shutdown;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const TAG_ATTACH: u8 = 10;
+const TAG_STEP: u8 = 11;
+const TAG_RESET: u8 = 12;
+const TAG_DETACH: u8 = 13;
+const TAG_HEARTBEAT: u8 = 14;
+const TAG_ATTACHED: u8 = 20;
+const TAG_REFUSED: u8 = 21;
+const TAG_BATCH: u8 = 22;
+const TAG_ERROR: u8 = 23;
+
+/// Client → server control frames.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Ctrl {
+    Attach { num_envs: u32 },
+    Step { seq: u64 },
+    Reset,
+    Detach,
+    Heartbeat,
+}
+
+/// Server → client control frames.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Reply {
+    Attached {
+        lease: u32,
+        first_env: u32,
+        lease_size: u32,
+        ring_slots: u32,
+        obs_dim: u32,
+        act_dim: u32,
+        task_id: String,
+        obs_path: String,
+        act_path: String,
+    },
+    Refused { msg: String },
+    Batch { seq: u64 },
+    Error { msg: String },
+}
+
+impl Ctrl {
+    pub(crate) fn write(&self, w: &mut impl Write) -> Result<()> {
+        // Serialize into a scratch first: one write syscall per frame and
+        // no partially-written frames if peers race on the stream.
+        let mut b = Vec::with_capacity(16);
+        match self {
+            Ctrl::Attach { num_envs } => {
+                b.push(TAG_ATTACH);
+                write_u32(&mut b, *num_envs)?;
+            }
+            Ctrl::Step { seq } => {
+                b.push(TAG_STEP);
+                write_u64(&mut b, *seq)?;
+            }
+            Ctrl::Reset => b.push(TAG_RESET),
+            Ctrl::Detach => b.push(TAG_DETACH),
+            Ctrl::Heartbeat => b.push(TAG_HEARTBEAT),
+        }
+        w.write_all(&b)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub(crate) fn read(r: &mut impl Read) -> Result<Ctrl> {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        Ok(match tag[0] {
+            TAG_ATTACH => Ctrl::Attach { num_envs: read_u32(r)? },
+            TAG_STEP => Ctrl::Step { seq: read_u64(r)? },
+            TAG_RESET => Ctrl::Reset,
+            TAG_DETACH => Ctrl::Detach,
+            TAG_HEARTBEAT => Ctrl::Heartbeat,
+            t => return Err(Error::Ipc(format!("bad control tag {t}"))),
+        })
+    }
+}
+
+impl Reply {
+    pub(crate) fn write(&self, w: &mut impl Write) -> Result<()> {
+        let mut b = Vec::with_capacity(64);
+        match self {
+            Reply::Attached {
+                lease,
+                first_env,
+                lease_size,
+                ring_slots,
+                obs_dim,
+                act_dim,
+                task_id,
+                obs_path,
+                act_path,
+            } => {
+                b.push(TAG_ATTACHED);
+                for v in [*lease, *first_env, *lease_size, *ring_slots, *obs_dim, *act_dim] {
+                    write_u32(&mut b, v)?;
+                }
+                write_str(&mut b, task_id)?;
+                write_str(&mut b, obs_path)?;
+                write_str(&mut b, act_path)?;
+            }
+            Reply::Refused { msg } => {
+                b.push(TAG_REFUSED);
+                write_str(&mut b, msg)?;
+            }
+            Reply::Batch { seq } => {
+                b.push(TAG_BATCH);
+                write_u64(&mut b, *seq)?;
+            }
+            Reply::Error { msg } => {
+                b.push(TAG_ERROR);
+                write_str(&mut b, msg)?;
+            }
+        }
+        w.write_all(&b)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub(crate) fn read(r: &mut impl Read) -> Result<Reply> {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        Ok(match tag[0] {
+            TAG_ATTACHED => {
+                let lease = read_u32(r)?;
+                let first_env = read_u32(r)?;
+                let lease_size = read_u32(r)?;
+                let ring_slots = read_u32(r)?;
+                let obs_dim = read_u32(r)?;
+                let act_dim = read_u32(r)?;
+                Reply::Attached {
+                    lease,
+                    first_env,
+                    lease_size,
+                    ring_slots,
+                    obs_dim,
+                    act_dim,
+                    task_id: read_str(r)?,
+                    obs_path: read_str(r)?,
+                    act_path: read_str(r)?,
+                }
+            }
+            TAG_REFUSED => Reply::Refused { msg: read_str(r)? },
+            TAG_BATCH => Reply::Batch { seq: read_u64(r)? },
+            TAG_ERROR => Reply::Error { msg: read_str(r)? },
+            t => return Err(Error::Ipc(format!("bad reply tag {t}"))),
+        })
+    }
+}
+
+struct Conn {
+    id: usize,
+    /// Raw handle kept for `shutdown()` (unblocks the reader thread).
+    raw: UnixStream,
+    /// Write half; also serializes attach-reply vs batch-publish order.
+    w: Mutex<UnixStream>,
+    lease: Mutex<Option<LeaseId>>,
+    last_seen: Mutex<Instant>,
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    lp: LeasePool,
+    obs: Vec<Mutex<ObsSlab>>,
+    act: Vec<Mutex<ActSlab>>,
+    conns: Mutex<HashMap<usize, Arc<Conn>>>,
+    /// lease → conn id currently bound to it.
+    lease_conn: Mutex<Vec<Option<usize>>>,
+    next_conn: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Write a completed wave into the lease's obs ring (phase one) and
+    /// commit it with a `Batch` frame (phase two). No bound client —
+    /// because it died between routing and publishing — just drops the
+    /// wave; its lease is already on the reclaim path.
+    fn publish(&self, lease: LeaseId, seq: u64, wave: &Wave) {
+        {
+            let mut slab = self.obs[lease].lock().unwrap();
+            if let Err(e) = slab.publish(seq, &wave.obs, &wave.rew, &wave.done, &wave.trunc) {
+                eprintln!("[serve] lease {lease} obs slab write failed: {e}");
+                return;
+            }
+        }
+        // Copy the binding out before touching `conns`: `release()` locks
+        // these the other way around, and holding both here would invert.
+        let bound = self.lease_conn.lock().unwrap()[lease];
+        let conn = bound.and_then(|id| self.conns.lock().unwrap().get(&id).cloned());
+        if let Some(conn) = conn {
+            let mut w = conn.w.lock().unwrap();
+            if Reply::Batch { seq }.write(&mut *w).is_err() {
+                // Reader-side EOF will release the lease; nothing to do.
+            }
+        }
+    }
+
+    /// Drop a connection: unbind + reclaim its lease, close the socket.
+    fn release(&self, conn: &Conn, why: &str) {
+        let lease = conn.lease.lock().unwrap().take();
+        self.conns.lock().unwrap().remove(&conn.id);
+        let _ = conn.raw.shutdown(Shutdown::Both);
+        if let Some(lease) = lease {
+            self.lease_conn.lock().unwrap()[lease] = None;
+            println!("[serve] lease {lease} {why}; draining and reclaiming");
+            let _ = self.lp.detach(lease);
+        }
+    }
+}
+
+/// Handle to a running pool server; dropping it stops the server.
+pub struct PoolServer {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+    stopped: bool,
+}
+
+impl PoolServer {
+    /// Bind the socket, create the slab files, spawn the accept and pump
+    /// threads, and return immediately.
+    pub fn start(cfg: ServeConfig) -> Result<PoolServer> {
+        cfg.validate()?;
+        let mut lease_cfg = LeaseConfig::new(&cfg.task_id);
+        lease_cfg.max_clients = cfg.max_clients;
+        lease_cfg.lease_size = cfg.lease_size;
+        lease_cfg.num_threads = cfg.num_threads;
+        lease_cfg.seed = cfg.seed;
+        lease_cfg.max_outstanding = cfg.max_outstanding();
+        let lp = LeasePool::new(lease_cfg)?;
+        let slab_spec = SlabSpec {
+            lease_size: cfg.lease_size,
+            obs_dim: lp.obs_dim(),
+            act_dim: lp.act_dim(),
+            ring_slots: cfg.ring_slots,
+        };
+        let mut obs = Vec::with_capacity(cfg.max_clients);
+        let mut act = Vec::with_capacity(cfg.max_clients);
+        for l in 0..cfg.max_clients {
+            obs.push(Mutex::new(ObsSlab::create(&cfg.obs_slab_path(l), slab_spec)?));
+            act.push(Mutex::new(ActSlab::create(&cfg.act_slab_path(l), slab_spec)?));
+        }
+        // A stale socket file from a dead server refuses the bind; the
+        // path is ours by configuration, so replace it.
+        let _ = std::fs::remove_file(&cfg.socket_path);
+        let listener = UnixListener::bind(&cfg.socket_path)?;
+        listener.set_nonblocking(true)?;
+        println!(
+            "[serve] {} serving on {} ({} leases x {} envs, ring depth {})",
+            cfg.task_id,
+            cfg.socket_path.display(),
+            cfg.max_clients,
+            cfg.lease_size,
+            cfg.ring_slots,
+        );
+        let shared = Arc::new(Shared {
+            lease_conn: Mutex::new(vec![None; cfg.max_clients]),
+            cfg,
+            lp,
+            obs,
+            act,
+            conns: Mutex::new(HashMap::new()),
+            next_conn: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut threads = Vec::new();
+        {
+            let shared = shared.clone();
+            threads.push(std::thread::spawn(move || accept_loop(shared, listener)));
+        }
+        {
+            let shared = shared.clone();
+            threads.push(std::thread::spawn(move || pump_loop(shared)));
+        }
+        Ok(PoolServer { shared, threads, stopped: false })
+    }
+
+    pub fn socket_path(&self) -> &Path {
+        &self.shared.cfg.socket_path
+    }
+
+    /// Total attaches served (for tests/stats).
+    pub fn attaches(&self) -> u64 {
+        self.shared.lp.attaches()
+    }
+
+    /// Total completed lease reclaims (for tests/stats).
+    pub fn reclaims(&self) -> u64 {
+        self.shared.lp.reclaims()
+    }
+
+    /// Stop the server: close every client connection, join the service
+    /// threads, remove the socket and slab files.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        if self.stopped {
+            return;
+        }
+        self.stopped = true;
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        let conns: Vec<Arc<Conn>> =
+            self.shared.conns.lock().unwrap().values().cloned().collect();
+        for c in conns {
+            let _ = c.raw.shutdown(Shutdown::Both);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        let _ = std::fs::remove_file(&self.shared.cfg.socket_path);
+        for l in 0..self.shared.cfg.max_clients {
+            let _ = std::fs::remove_file(self.shared.cfg.obs_slab_path(l));
+            let _ = std::fs::remove_file(self.shared.cfg.act_slab_path(l));
+        }
+    }
+}
+
+impl Drop for PoolServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn accept_loop(shared: Arc<Shared>, listener: UnixListener) {
+    // Non-blocking accept + short sleeps so shutdown needs no wake-up
+    // connection; attach latency of ≤25ms is irrelevant next to lease
+    // reset time.
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+                let Ok(raw) = stream.try_clone() else { continue };
+                let Ok(wr) = stream.try_clone() else { continue };
+                let conn = Arc::new(Conn {
+                    id,
+                    raw,
+                    w: Mutex::new(wr),
+                    lease: Mutex::new(None),
+                    last_seen: Mutex::new(Instant::now()),
+                });
+                shared.conns.lock().unwrap().insert(id, conn.clone());
+                let shared = shared.clone();
+                std::thread::spawn(move || reader_loop(shared, conn, stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Per-connection reader: control frames in, lease calls out. Any read
+/// error (EOF above all — a SIGKILLed client closes its socket) releases
+/// the lease.
+fn reader_loop(shared: Arc<Shared>, conn: Arc<Conn>, stream: UnixStream) {
+    let mut r = BufReader::new(stream);
+    let mut act_buf: Vec<f32> = Vec::new();
+    let why = loop {
+        let ctrl = match Ctrl::read(&mut r) {
+            Ok(c) => c,
+            Err(_) => break "client disconnected",
+        };
+        *conn.last_seen.lock().unwrap() = Instant::now();
+        match ctrl {
+            Ctrl::Attach { num_envs } => {
+                // Hold the write half across attach + the Attached reply
+                // so a racing initial `Batch` (pump thread) cannot jump
+                // ahead of the handshake on the stream.
+                let mut w = conn.w.lock().unwrap();
+                if conn.lease.lock().unwrap().is_some() {
+                    let _ = Reply::Error { msg: "already attached".into() }.write(&mut *w);
+                    continue;
+                }
+                if num_envs as usize != shared.cfg.lease_size {
+                    let msg = format!(
+                        "this server leases exactly {} envs per client (asked for {num_envs})",
+                        shared.cfg.lease_size
+                    );
+                    let _ = Reply::Refused { msg }.write(&mut *w);
+                    continue;
+                }
+                match shared.lp.attach() {
+                    Err(e) => {
+                        let _ = Reply::Refused { msg: e.to_string() }.write(&mut *w);
+                    }
+                    Ok((lease, parked)) => {
+                        *conn.lease.lock().unwrap() = Some(lease);
+                        shared.lease_conn.lock().unwrap()[lease] = Some(conn.id);
+                        let first_env = shared.lp.first_env(lease);
+                        println!(
+                            "[serve] lease {lease} attached (envs {first_env}..{}) by conn {}",
+                            first_env + shared.cfg.lease_size as u32,
+                            conn.id
+                        );
+                        let reply = Reply::Attached {
+                            lease: lease as u32,
+                            first_env,
+                            lease_size: shared.cfg.lease_size as u32,
+                            ring_slots: shared.cfg.ring_slots as u32,
+                            obs_dim: shared.lp.obs_dim() as u32,
+                            act_dim: shared.lp.act_dim() as u32,
+                            task_id: shared.cfg.task_id.clone(),
+                            obs_path: shared.cfg.obs_slab_path(lease).display().to_string(),
+                            act_path: shared.cfg.act_slab_path(lease).display().to_string(),
+                        };
+                        if reply.write(&mut *w).is_err() {
+                            break "client disconnected during attach";
+                        }
+                        if let Some((seq, wave)) = parked {
+                            // Parked initial batch: publish it right here
+                            // (still under the write lock, after the
+                            // handshake frame).
+                            let ok = {
+                                let mut slab = shared.obs[lease].lock().unwrap();
+                                slab.publish(seq, &wave.obs, &wave.rew, &wave.done, &wave.trunc)
+                                    .is_ok()
+                            };
+                            shared.lp.recycle(wave);
+                            if !ok || Reply::Batch { seq }.write(&mut *w).is_err() {
+                                break "client disconnected during attach";
+                            }
+                        }
+                    }
+                }
+            }
+            Ctrl::Step { seq } => {
+                let Some(lease) = *conn.lease.lock().unwrap() else {
+                    let mut w = conn.w.lock().unwrap();
+                    let _ = Reply::Error { msg: "not attached".into() }.write(&mut *w);
+                    continue;
+                };
+                // The slab header check (count + seq) rejects stale or
+                // out-of-order submissions before they reach the pool.
+                let res = shared.act[lease]
+                    .lock()
+                    .unwrap()
+                    .consume(seq, &mut act_buf)
+                    .and_then(|()| shared.lp.submit(lease, &act_buf));
+                if let Err(e) = res {
+                    let fatal = !matches!(e, Error::Lease(_) | Error::Ipc(_));
+                    let mut w = conn.w.lock().unwrap();
+                    let _ = Reply::Error { msg: e.to_string() }.write(&mut *w);
+                    if fatal {
+                        break "pool error";
+                    }
+                }
+            }
+            Ctrl::Reset => {
+                let Some(lease) = *conn.lease.lock().unwrap() else {
+                    let mut w = conn.w.lock().unwrap();
+                    let _ = Reply::Error { msg: "not attached".into() }.write(&mut *w);
+                    continue;
+                };
+                if let Err(e) = shared.lp.request_reset(lease) {
+                    let mut w = conn.w.lock().unwrap();
+                    let _ = Reply::Error { msg: e.to_string() }.write(&mut *w);
+                }
+            }
+            Ctrl::Detach => break "client detached",
+            Ctrl::Heartbeat => {}
+        }
+    };
+    shared.release(&conn, why);
+}
+
+/// The single pool consumer: route completed waves to their clients and
+/// run the heartbeat reaper.
+fn pump_loop(shared: Arc<Shared>) {
+    let mut events: Vec<LeaseEvent> = Vec::new();
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        events.clear();
+        if shared.lp.pump(Duration::from_millis(50), &mut events).is_err() {
+            break; // pool closed/poisoned; server is done serving
+        }
+        for ev in events.drain(..) {
+            match ev {
+                LeaseEvent::Wave { lease, seq, wave } => {
+                    shared.publish(lease, seq, &wave);
+                    shared.lp.recycle(wave);
+                }
+                LeaseEvent::Reclaimed { lease } => {
+                    println!(
+                        "[serve] lease {lease} reclaimed: envs reset, \
+                         returned to admission pool"
+                    );
+                }
+            }
+        }
+        if let Some(hb) = shared.cfg.heartbeat_timeout {
+            let stale: Vec<Arc<Conn>> = shared
+                .conns
+                .lock()
+                .unwrap()
+                .values()
+                .filter(|c| {
+                    c.lease.lock().unwrap().is_some()
+                        && c.last_seen.lock().unwrap().elapsed() > hb
+                })
+                .cloned()
+                .collect();
+            for c in stale {
+                println!("[serve] conn {} missed its heartbeat window", c.id);
+                // EOF in the reader thread performs the actual release.
+                let _ = c.raw.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+/// Run a server until `max_seconds` elapses (forever when `None`) — the
+/// `envpool serve` subcommand body.
+pub fn serve_blocking(cfg: ServeConfig, max_seconds: Option<u64>) -> Result<()> {
+    let server = PoolServer::start(cfg)?;
+    let t0 = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if let Some(s) = max_seconds {
+            if t0.elapsed() >= Duration::from_secs(s) {
+                break;
+            }
+        }
+    }
+    println!(
+        "[serve] shutting down after {:.0?} ({} attaches, {} reclaims)",
+        t0.elapsed(),
+        server.attaches(),
+        server.reclaims()
+    );
+    server.stop();
+    Ok(())
+}
+
+/// Client side of `envpool serve`: a [`VectorEnv`] whose `lease_size`
+/// envs live in the server process, reached through the control socket +
+/// shared-memory rings. `reset` consumes the initial reset batch the
+/// server schedules at attach; `step` is `send_wave` + `recv_wave`, and
+/// the two halves are public so throughput-sensitive callers can pipeline
+/// up to [`ShmClient::max_outstanding`] waves.
+pub struct ShmClient {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+    obs: ObsSlab,
+    act: ActSlab,
+    spec: EnvSpec,
+    lease: u32,
+    first_env: u32,
+    k: usize,
+    ring_slots: usize,
+    /// Sequence number the next submitted wave will produce. Starts at 1:
+    /// seq 0 is the initial reset wave, already in flight server-side.
+    next_send: u64,
+    /// Next wave sequence to consume.
+    next_recv: u64,
+    detached: bool,
+}
+
+impl ShmClient {
+    /// Connect and attach, claiming a lease of exactly `num_envs` envs
+    /// (must match the server's `lease_size`).
+    pub fn attach(socket: &Path, num_envs: usize) -> Result<ShmClient> {
+        let stream = UnixStream::connect(socket).map_err(|e| {
+            Error::Attach(format!("cannot reach pool server at {}: {e}", socket.display()))
+        })?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        Ctrl::Attach { num_envs: num_envs as u32 }.write(&mut &writer)?;
+        match Reply::read(&mut reader)? {
+            Reply::Refused { msg } => Err(Error::Attach(msg)),
+            Reply::Attached {
+                lease,
+                first_env,
+                lease_size,
+                ring_slots,
+                obs_dim,
+                act_dim,
+                task_id,
+                obs_path,
+                act_path,
+            } => {
+                let spec = registry::spec_for(&task_id)?;
+                if spec.obs_dim() != obs_dim as usize
+                    || spec.action_space.dim() != act_dim as usize
+                {
+                    return Err(Error::Attach(format!(
+                        "server shapes ({obs_dim}, {act_dim}) disagree with this build's \
+                         spec for {task_id} ({}, {})",
+                        spec.obs_dim(),
+                        spec.action_space.dim()
+                    )));
+                }
+                let slab_spec = SlabSpec {
+                    lease_size: lease_size as usize,
+                    obs_dim: obs_dim as usize,
+                    act_dim: act_dim as usize,
+                    ring_slots: ring_slots as usize,
+                };
+                Ok(ShmClient {
+                    obs: ObsSlab::open(Path::new(&obs_path), slab_spec)?,
+                    act: ActSlab::open(Path::new(&act_path), slab_spec)?,
+                    reader,
+                    writer,
+                    spec,
+                    lease,
+                    first_env,
+                    k: lease_size as usize,
+                    ring_slots: ring_slots as usize,
+                    next_send: 1,
+                    next_recv: 0,
+                    detached: false,
+                })
+            }
+            other => Err(Error::Attach(format!("unexpected handshake reply {other:?}"))),
+        }
+    }
+
+    /// The lease this client holds.
+    pub fn lease(&self) -> u32 {
+        self.lease
+    }
+
+    /// Global env id of lease-local row 0.
+    pub fn first_env(&self) -> u32 {
+        self.first_env
+    }
+
+    /// Waves submitted (or scheduled, for the initial reset) and not yet
+    /// consumed.
+    pub fn outstanding(&self) -> usize {
+        (self.next_send - self.next_recv) as usize
+    }
+
+    /// Most waves that may be in flight at once: one ring slot stays free
+    /// so the server never overwrites a slot this client hasn't read.
+    pub fn max_outstanding(&self) -> usize {
+        self.ring_slots - 1
+    }
+
+    /// Pipelined half-step: write the action wave into the ring and
+    /// commit it with a `Step` frame, without waiting for the result.
+    pub fn send_wave(&mut self, actions: &[f32]) -> Result<()> {
+        if actions.len() != self.k * self.spec.action_space.dim() {
+            return Err(Error::Lease(format!(
+                "action wave of {} f32s (lease wants {} envs x {} dims)",
+                actions.len(),
+                self.k,
+                self.spec.action_space.dim()
+            )));
+        }
+        if self.outstanding() >= self.max_outstanding() {
+            return Err(Error::Lease(format!(
+                "client backpressure: {} waves in flight fills the ring (depth {})",
+                self.outstanding(),
+                self.ring_slots
+            )));
+        }
+        let seq = self.next_send;
+        self.act.publish(seq, actions)?;
+        Ctrl::Step { seq }.write(&mut &self.writer)?;
+        self.next_send += 1;
+        Ok(())
+    }
+
+    /// Blocking half-step: wait for the next wave's commit frame and read
+    /// it out of the ring in lease-local env order.
+    pub fn recv_wave(&mut self, out: &mut BatchedTransition) -> Result<()> {
+        if self.outstanding() == 0 {
+            return Err(Error::Lease("recv_wave with no wave in flight".into()));
+        }
+        loop {
+            let reply = Reply::read(&mut self.reader).map_err(|e| match e {
+                Error::Io(ref io)
+                    if io.kind() == std::io::ErrorKind::WouldBlock
+                        || io.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    Error::Ipc("control channel timed out waiting for a batch".into())
+                }
+                Error::Io(_) => Error::Ipc("pool server hung up".into()),
+                other => other,
+            })?;
+            match reply {
+                Reply::Batch { seq } => {
+                    if seq != self.next_recv {
+                        return Err(Error::Ipc(format!(
+                            "batch seq {seq} out of order (expected {})",
+                            self.next_recv
+                        )));
+                    }
+                    self.obs.consume(seq, self.first_env, out)?;
+                    self.next_recv += 1;
+                    return Ok(());
+                }
+                Reply::Error { msg } => return Err(Error::Lease(msg)),
+                other => {
+                    return Err(Error::Ipc(format!("unexpected reply {other:?}")));
+                }
+            }
+        }
+    }
+
+    /// Tell the server this client is alive without stepping (for slow
+    /// actors on servers with a heartbeat timeout).
+    pub fn heartbeat(&mut self) -> Result<()> {
+        Ctrl::Heartbeat.write(&mut &self.writer)
+    }
+
+    /// Graceful release: the server resets the envs and re-parks the
+    /// lease immediately instead of waiting for socket EOF.
+    pub fn detach(mut self) -> Result<()> {
+        self.detached = true;
+        Ctrl::Detach.write(&mut &self.writer)
+    }
+
+    /// Test hook: die like a SIGKILLed process — no `Detach`, just a
+    /// slammed socket.
+    #[doc(hidden)]
+    pub fn simulate_crash(mut self) {
+        self.detached = true;
+        let _ = self.writer.shutdown(Shutdown::Both);
+    }
+}
+
+impl Drop for ShmClient {
+    fn drop(&mut self) {
+        if !self.detached {
+            let _ = Ctrl::Detach.write(&mut &self.writer);
+        }
+    }
+}
+
+impl VectorEnv for ShmClient {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn num_envs(&self) -> usize {
+        self.k
+    }
+
+    fn reset(&mut self, out: &mut BatchedTransition) -> Result<()> {
+        if self.next_recv == 0 {
+            // The attach already scheduled the initial reset; its wave is
+            // the one in flight.
+            return self.recv_wave(out);
+        }
+        if self.outstanding() > 0 {
+            return Err(Error::Lease("reset with waves still in flight".into()));
+        }
+        Ctrl::Reset.write(&mut &self.writer)?;
+        self.next_send += 1;
+        self.recv_wave(out)
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut BatchedTransition) -> Result<()> {
+        self.send_wave(actions)?;
+        self.recv_wave(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    fn test_cfg(name: &str, clients: usize, k: usize) -> ServeConfig {
+        static NONCE: AtomicU32 = AtomicU32::new(0);
+        let n = NONCE.fetch_add(1, Ordering::Relaxed);
+        let sock = std::env::temp_dir()
+            .join(format!("envpool-serve-{name}-{}-{n}.sock", std::process::id()));
+        ServeConfig::new("CartPole-v1", sock)
+            .max_clients(clients)
+            .lease_size(k)
+            .num_threads(2)
+            .seed(7)
+    }
+
+    #[test]
+    fn ctrl_and_reply_frames_roundtrip() {
+        let frames = [
+            Ctrl::Attach { num_envs: 8 },
+            Ctrl::Step { seq: 42 },
+            Ctrl::Reset,
+            Ctrl::Detach,
+            Ctrl::Heartbeat,
+        ];
+        for f in frames {
+            let mut b = Vec::new();
+            f.write(&mut b).unwrap();
+            assert_eq!(Ctrl::read(&mut b.as_slice()).unwrap(), f);
+        }
+        let replies = [
+            Reply::Attached {
+                lease: 1,
+                first_env: 8,
+                lease_size: 8,
+                ring_slots: 4,
+                obs_dim: 4,
+                act_dim: 1,
+                task_id: "CartPole-v1".into(),
+                obs_path: "/dev/shm/a.obs".into(),
+                act_path: "/dev/shm/a.act".into(),
+            },
+            Reply::Refused { msg: "full".into() },
+            Reply::Batch { seq: 7 },
+            Reply::Error { msg: "nope".into() },
+        ];
+        for f in replies {
+            let mut b = Vec::new();
+            f.write(&mut b).unwrap();
+            assert_eq!(Reply::read(&mut b.as_slice()).unwrap(), f);
+        }
+        assert!(Ctrl::read(&mut [99u8].as_slice()).is_err());
+        assert!(Reply::read(&mut [99u8].as_slice()).is_err());
+    }
+
+    #[test]
+    fn attach_step_detach_end_to_end() {
+        let server = PoolServer::start(test_cfg("e2e", 1, 4)).unwrap();
+        let mut client = ShmClient::attach(server.socket_path(), 4).unwrap();
+        let mut out = client.make_output();
+        client.reset(&mut out).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out.env_ids, [0, 1, 2, 3]);
+        assert!(out.obs.iter().all(|x| x.is_finite()));
+        for t in 0..20 {
+            let acts: Vec<f32> = (0..4).map(|i| ((t + i) % 2) as f32).collect();
+            client.step(&acts, &mut out).unwrap();
+            assert_eq!(out.len(), 4, "step {t}");
+        }
+        client.detach().unwrap();
+        server.stop();
+    }
+
+    #[test]
+    fn wrong_lease_size_is_refused() {
+        let server = PoolServer::start(test_cfg("shape", 1, 4)).unwrap();
+        let err = ShmClient::attach(server.socket_path(), 64).unwrap_err();
+        assert!(matches!(err, Error::Attach(_)), "got {err}");
+        assert!(err.to_string().contains("leases exactly 4"), "got {err}");
+        server.stop();
+    }
+
+    #[test]
+    fn attach_beyond_capacity_is_refused_then_admitted_after_detach() {
+        let server = PoolServer::start(test_cfg("full", 1, 2)).unwrap();
+        let mut c1 = ShmClient::attach(server.socket_path(), 2).unwrap();
+        let mut out = c1.make_output();
+        c1.reset(&mut out).unwrap();
+        let err = ShmClient::attach(server.socket_path(), 2).unwrap_err();
+        assert!(err.to_string().contains("leases attached"), "got {err}");
+        c1.detach().unwrap();
+        // The lease drains + resets asynchronously; attach is allowed as
+        // soon as the slot is unbound, and the initial batch arrives once
+        // the reclaim completes.
+        let mut c2 = attach_with_retry(server.socket_path(), 2);
+        c2.reset(&mut out).unwrap();
+        assert!(out.obs.iter().all(|x| x.is_finite()));
+        server.stop();
+    }
+
+    #[test]
+    fn pipelined_waves_respect_ring_credits() {
+        let server = PoolServer::start(test_cfg("pipe", 1, 2)).unwrap();
+        let mut c = ShmClient::attach(server.socket_path(), 2).unwrap();
+        let mut out = c.make_output();
+        c.reset(&mut out).unwrap();
+        assert_eq!(c.max_outstanding(), 3);
+        for _ in 0..3 {
+            c.send_wave(&[0.0, 1.0]).unwrap();
+        }
+        let err = c.send_wave(&[0.0, 1.0]).unwrap_err();
+        assert!(err.to_string().contains("backpressure"), "got {err}");
+        for s in 1..=3u64 {
+            c.recv_wave(&mut out).unwrap();
+            assert_eq!(c.next_recv, s + 1);
+        }
+        c.detach().unwrap();
+        server.stop();
+    }
+
+    pub(super) fn attach_with_retry(socket: &Path, k: usize) -> ShmClient {
+        for _ in 0..100 {
+            match ShmClient::attach(socket, k) {
+                Ok(c) => return c,
+                Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        }
+        panic!("could not attach within retry budget");
+    }
+}

@@ -1,0 +1,320 @@
+//! Shared-memory slabs for `envpool serve`: per-lease observation and
+//! action rings backed by files in `/dev/shm` (tmpfs), written and read
+//! with positioned I/O (`pwrite`/`pread` via `std::os::unix::fs::FileExt`).
+//!
+//! The protocol mirrors the two-phase commit of
+//! [`crate::pool::state_queue::StateBufferQueue`]'s `slot_obs_mut` /
+//! `commit`: phase one writes the payload into a ring slot nobody is
+//! reading (the control channel's credit scheme guarantees it — a client
+//! pipelines at most `ring_slots - 1` waves); phase two is a tiny frame
+//! on the Unix control socket (`Batch{seq}` / `Step{seq}`) that makes the
+//! slot visible. The socket round-trip provides the happens-before edge:
+//! both peers touch the slab through the same kernel page cache, so a
+//! reader that has seen the commit frame sees the payload.
+//!
+//! Honest deviation from the "map once" ideal: the vendored crate set has
+//! no `libc`, so instead of `mmap` the slabs use one `pwrite`/`pread`
+//! syscall per *wave* (not per element or per env — the batching copy
+//! stays amortized). Swapping in a real `mmap` later is a change local to
+//! this module; layout, commit protocol and headers stay identical.
+//!
+//! Each slot carries a 16-byte header — magic, row count, wave sequence
+//! number — validated on every read, so a torn or stale slot surfaces as
+//! [`Error::Ipc`] instead of silent garbage.
+
+use crate::pool::batch::BatchedTransition;
+use crate::{Error, Result};
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+
+/// `"EPSH"` little-endian — envpool shared-memory header.
+const MAGIC: u32 = 0x4850_5345;
+const HDR_BYTES: usize = 16;
+
+/// Shape of one lease's rings; both peers must agree (the server sends
+/// the numbers in the `Attached` handshake reply).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlabSpec {
+    /// Envs per lease (rows per wave).
+    pub lease_size: usize,
+    /// Observation dim per env.
+    pub obs_dim: usize,
+    /// Action dim per env.
+    pub act_dim: usize,
+    /// Slots in the ring; wave `seq` lives in slot `seq % ring_slots`.
+    pub ring_slots: usize,
+}
+
+fn round64(n: usize) -> usize {
+    n.div_ceil(64) * 64
+}
+
+impl SlabSpec {
+    /// Bytes of one obs slot: header + per-env `[obs f32 x dim, rew f32,
+    /// done u8, trunc u8]` stored SoA, padded to a cache line.
+    pub fn obs_slot_bytes(&self) -> usize {
+        round64(HDR_BYTES + self.lease_size * (self.obs_dim * 4 + 4 + 1 + 1))
+    }
+
+    /// Bytes of one action slot: header + `lease_size * act_dim` f32s.
+    pub fn act_slot_bytes(&self) -> usize {
+        round64(HDR_BYTES + self.lease_size * self.act_dim * 4)
+    }
+
+    pub fn obs_file_bytes(&self) -> u64 {
+        (self.obs_slot_bytes() * self.ring_slots) as u64
+    }
+
+    pub fn act_file_bytes(&self) -> u64 {
+        (self.act_slot_bytes() * self.ring_slots) as u64
+    }
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_f32s(bytes: &[u8], out: &mut [f32]) {
+    for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+}
+
+fn check_header(bytes: &[u8], expect_rows: usize, expect_seq: u64, what: &str) -> Result<()> {
+    let magic = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    let rows = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+    let seq = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(Error::Ipc(format!("{what} slab slot has bad magic {magic:#x}")));
+    }
+    if rows != expect_rows || seq != expect_seq {
+        return Err(Error::Ipc(format!(
+            "{what} slab slot holds wave seq {seq} of {rows} rows (expected seq \
+             {expect_seq} of {expect_rows}) — commit protocol violated"
+        )));
+    }
+    Ok(())
+}
+
+fn header(rows: usize, seq: u64) -> [u8; HDR_BYTES] {
+    let mut h = [0u8; HDR_BYTES];
+    h[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    h[4..8].copy_from_slice(&(rows as u32).to_le_bytes());
+    h[8..16].copy_from_slice(&seq.to_le_bytes());
+    h
+}
+
+fn create_slab(path: &Path, bytes: u64) -> Result<File> {
+    let f = OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)?;
+    f.set_len(bytes)?;
+    Ok(f)
+}
+
+fn open_slab(path: &Path, bytes: u64, write: bool) -> Result<File> {
+    let f = OpenOptions::new().read(true).write(write).open(path)?;
+    let actual = f.metadata()?.len();
+    if actual != bytes {
+        return Err(Error::Attach(format!(
+            "slab {} is {actual} bytes, expected {bytes} — client/server shape mismatch",
+            path.display()
+        )));
+    }
+    Ok(f)
+}
+
+/// One lease's observation ring (server publishes, client consumes).
+pub struct ObsSlab {
+    file: File,
+    spec: SlabSpec,
+    buf: Vec<u8>,
+}
+
+impl ObsSlab {
+    /// Server side: create (or truncate) and size the backing file.
+    pub fn create(path: &Path, spec: SlabSpec) -> Result<ObsSlab> {
+        let file = create_slab(path, spec.obs_file_bytes())?;
+        Ok(ObsSlab { file, spec, buf: Vec::with_capacity(spec.obs_slot_bytes()) })
+    }
+
+    /// Client side: open the file the `Attached` reply named.
+    pub fn open(path: &Path, spec: SlabSpec) -> Result<ObsSlab> {
+        let file = open_slab(path, spec.obs_file_bytes(), false)?;
+        Ok(ObsSlab { file, spec, buf: vec![0; spec.obs_slot_bytes()] })
+    }
+
+    /// Phase one of the commit: write wave `seq` into its ring slot. The
+    /// caller sends the `Batch{seq}` control frame afterwards (phase two).
+    pub fn publish(
+        &mut self,
+        seq: u64,
+        obs: &[f32],
+        rew: &[f32],
+        done: &[u8],
+        trunc: &[u8],
+    ) -> Result<()> {
+        let k = self.spec.lease_size;
+        debug_assert_eq!(obs.len(), k * self.spec.obs_dim);
+        debug_assert_eq!(rew.len(), k);
+        self.buf.clear();
+        self.buf.extend_from_slice(&header(k, seq));
+        put_f32s(&mut self.buf, obs);
+        put_f32s(&mut self.buf, rew);
+        self.buf.extend_from_slice(done);
+        self.buf.extend_from_slice(trunc);
+        let slot = (seq as usize % self.spec.ring_slots) as u64;
+        self.file.write_at(&self.buf, slot * self.spec.obs_slot_bytes() as u64)?;
+        Ok(())
+    }
+
+    /// Consume wave `seq` after its commit frame arrived, filling `out`
+    /// in lease-local order with global env ids `first_env + i`.
+    pub fn consume(&mut self, seq: u64, first_env: u32, out: &mut BatchedTransition) -> Result<()> {
+        let k = self.spec.lease_size;
+        let d = self.spec.obs_dim;
+        let slot = (seq as usize % self.spec.ring_slots) as u64;
+        let used = HDR_BYTES + k * (d * 4 + 4 + 1 + 1);
+        self.buf.resize(self.spec.obs_slot_bytes(), 0);
+        self.file.read_exact_at(&mut self.buf[..used], slot * self.spec.obs_slot_bytes() as u64)?;
+        check_header(&self.buf, k, seq, "obs")?;
+        out.obs_dim = d;
+        out.obs.resize(k * d, 0.0);
+        out.rew.resize(k, 0.0);
+        out.done.resize(k, 0);
+        out.trunc.resize(k, 0);
+        out.env_ids.resize(k, 0);
+        let mut at = HDR_BYTES;
+        get_f32s(&self.buf[at..at + k * d * 4], &mut out.obs);
+        at += k * d * 4;
+        get_f32s(&self.buf[at..at + k * 4], &mut out.rew);
+        at += k * 4;
+        out.done.copy_from_slice(&self.buf[at..at + k]);
+        at += k;
+        out.trunc.copy_from_slice(&self.buf[at..at + k]);
+        for (i, id) in out.env_ids.iter_mut().enumerate() {
+            *id = first_env + i as u32;
+        }
+        Ok(())
+    }
+}
+
+/// One lease's action ring (client publishes, server consumes).
+pub struct ActSlab {
+    file: File,
+    spec: SlabSpec,
+    buf: Vec<u8>,
+}
+
+impl ActSlab {
+    /// Server side: create and size the backing file (the server owns
+    /// every slab file's lifetime; the client only opens them).
+    pub fn create(path: &Path, spec: SlabSpec) -> Result<ActSlab> {
+        let file = create_slab(path, spec.act_file_bytes())?;
+        Ok(ActSlab { file, spec, buf: vec![0; spec.act_slot_bytes()] })
+    }
+
+    /// Client side: open for writing actions.
+    pub fn open(path: &Path, spec: SlabSpec) -> Result<ActSlab> {
+        let file = open_slab(path, spec.act_file_bytes(), true)?;
+        Ok(ActSlab { file, spec, buf: Vec::with_capacity(spec.act_slot_bytes()) })
+    }
+
+    /// Phase one on the client: write the action wave that will produce
+    /// result `seq`; the `Step{seq}` control frame is the commit.
+    pub fn publish(&mut self, seq: u64, actions: &[f32]) -> Result<()> {
+        debug_assert_eq!(actions.len(), self.spec.lease_size * self.spec.act_dim);
+        self.buf.clear();
+        self.buf.extend_from_slice(&header(self.spec.lease_size, seq));
+        put_f32s(&mut self.buf, actions);
+        let slot = (seq as usize % self.spec.ring_slots) as u64;
+        self.file.write_at(&self.buf, slot * self.spec.act_slot_bytes() as u64)?;
+        Ok(())
+    }
+
+    /// Consume the action wave for result `seq` on the server.
+    pub fn consume(&mut self, seq: u64, out: &mut Vec<f32>) -> Result<()> {
+        let k = self.spec.lease_size;
+        let n = k * self.spec.act_dim;
+        let slot = (seq as usize % self.spec.ring_slots) as u64;
+        let used = HDR_BYTES + n * 4;
+        self.buf.resize(self.spec.act_slot_bytes(), 0);
+        self.file.read_exact_at(&mut self.buf[..used], slot * self.spec.act_slot_bytes() as u64)?;
+        check_header(&self.buf, k, seq, "act")?;
+        out.resize(n, 0.0);
+        get_f32s(&self.buf[HDR_BYTES..used], out);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SlabSpec {
+        SlabSpec { lease_size: 3, obs_dim: 4, act_dim: 2, ring_slots: 4 }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("envpool-shm-test-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn obs_wave_roundtrip_and_ring_wrap() {
+        let path = tmp("obs");
+        let mut server = ObsSlab::create(&path, spec()).unwrap();
+        let mut client = ObsSlab::open(&path, spec()).unwrap();
+        let mut out = BatchedTransition::with_capacity(3, 4);
+        for seq in 0..9u64 {
+            let obs: Vec<f32> = (0..12).map(|i| seq as f32 + i as f32 * 0.5).collect();
+            let rew = [seq as f32; 3];
+            server.publish(seq, &obs, &rew, &[0, 1, 0], &[1, 0, 0]).unwrap();
+            client.consume(seq, 10, &mut out).unwrap();
+            assert_eq!(out.obs, obs, "seq {seq}");
+            assert_eq!(out.rew, rew);
+            assert_eq!(out.done, [0, 1, 0]);
+            assert_eq!(out.trunc, [1, 0, 0]);
+            assert_eq!(out.env_ids, [10, 11, 12]);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn act_wave_roundtrip() {
+        let path = tmp("act");
+        let mut client = ActSlab::create(&path, spec()).unwrap();
+        let mut server = ActSlab::open(&path, spec()).unwrap();
+        let mut out = Vec::new();
+        client.publish(5, &[1.0, -2.0, 3.0, -4.0, 5.0, -6.0]).unwrap();
+        server.consume(5, &mut out).unwrap();
+        assert_eq!(out, [1.0, -2.0, 3.0, -4.0, 5.0, -6.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_or_torn_slot_is_rejected() {
+        let path = tmp("stale");
+        let mut server = ObsSlab::create(&path, spec()).unwrap();
+        let mut client = ObsSlab::open(&path, spec()).unwrap();
+        let mut out = BatchedTransition::with_capacity(3, 4);
+        // Nothing published yet: all-zero header fails the magic check.
+        let err = client.consume(0, 0, &mut out).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "got {err}");
+        // Publish seq 0, then ask for seq 4 (same ring slot, stale wave).
+        server.publish(0, &[0.0; 12], &[0.0; 3], &[0; 3], &[0; 3]).unwrap();
+        let err = client.consume(4, 0, &mut out).unwrap_err();
+        assert!(err.to_string().contains("commit protocol"), "got {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shape_mismatch_refused_at_open() {
+        let path = tmp("shape");
+        let _server = ObsSlab::create(&path, spec()).unwrap();
+        let bigger = SlabSpec { lease_size: 64, ..spec() };
+        let err = ObsSlab::open(&path, bigger).unwrap_err();
+        assert!(matches!(err, Error::Attach(_)), "got {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -13,11 +13,69 @@ use crate::pool::batch::BatchedTransition;
 use crate::{Error, Result};
 use std::io::{BufReader, BufWriter};
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// How long worker shutdown waits for a child to exit after `Close` (and
+/// stdin EOF) before escalating to `kill()`. The serve-mode client-death
+/// path reuses [`wait_child_bounded`] with the same deadline.
+pub(crate) const SHUTDOWN_DEADLINE: Duration = Duration::from_secs(2);
+
+/// Wait for `child` to exit, but never longer than `deadline`: poll
+/// `try_wait` with short sleeps, then `kill()` + reap. `std`'s `Child` has
+/// no timed wait, and an unbounded `wait()` hangs the caller forever on a
+/// wedged child — this is the bounded primitive every teardown path uses.
+pub(crate) fn wait_child_bounded(child: &mut Child, deadline: Duration) {
+    let t0 = Instant::now();
+    loop {
+        match child.try_wait() {
+            Ok(Some(_)) => return,
+            Ok(None) => {
+                if t0.elapsed() >= deadline {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return;
+            }
+        }
+    }
+}
 
 struct WorkerProc {
     child: Child,
-    tx: BufWriter<ChildStdin>,
+    // `Option` so shutdown can drop the writer (closing the child's stdin,
+    // which unblocks even a worker that ignores `Close`) before waiting.
+    tx: Option<BufWriter<ChildStdin>>,
     rx: BufReader<ChildStdout>,
+}
+
+impl WorkerProc {
+    fn tx(&mut self) -> Result<&mut BufWriter<ChildStdin>> {
+        self.tx.as_mut().ok_or_else(|| Error::Ipc("worker stdin already closed".into()))
+    }
+
+    /// Best-effort `Close`, then drop the pipe so the child sees EOF. Does
+    /// not wait — callers batch the close across all workers so children
+    /// shut down in parallel, then `Drop` reaps each with a bounded wait.
+    fn send_close(&mut self) {
+        if let Some(mut tx) = self.tx.take() {
+            let _ = Request::Close.write(&mut tx);
+        }
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        // Owning cleanup: also covers workers leaked mid-`new` when a later
+        // spawn fails — the partially-built Vec drops each proc here.
+        self.send_close();
+        wait_child_bounded(&mut self.child, SHUTDOWN_DEADLINE);
+    }
 }
 
 /// Process-per-env executor.
@@ -64,20 +122,32 @@ impl SubprocessExecutor {
                 .stdin(Stdio::piped())
                 .stdout(Stdio::piped())
                 .spawn()?;
-            let tx = BufWriter::new(child.stdin.take().expect("child stdin"));
+            let tx = Some(BufWriter::new(child.stdin.take().expect("child stdin")));
             let rx = BufReader::new(child.stdout.take().expect("child stdout"));
             workers.push(WorkerProc { child, tx, rx });
         }
         Ok(SubprocessExecutor { spec, workers })
     }
 
+    /// Test hook: SIGKILL worker `i` without tearing down its bookkeeping,
+    /// so chaos tests can assert the next `step` fails with `Error::Ipc`
+    /// instead of hanging, and that `Drop` still completes in bounded time.
+    #[doc(hidden)]
+    pub fn kill_worker(&mut self, i: usize) {
+        let _ = self.workers[i].child.kill();
+        let _ = self.workers[i].child.wait();
+    }
+
     fn gather(&mut self, out: &mut BatchedTransition) -> Result<()> {
         // The batching copy Python pays: collect each worker's response
-        // and copy it into the batch arrays.
+        // and copy it into the batch arrays. The obs length is validated
+        // against the spec dim by the bounded reader *before* any payload
+        // allocation, and a dead worker's EOF surfaces as `Error::Ipc`.
         let dim = self.spec.obs_dim();
         out.obs_dim = dim;
         for (i, w) in self.workers.iter_mut().enumerate() {
-            let resp: Response = Response::read(&mut w.rx)?;
+            let resp: Response = Response::read_bounded(&mut w.rx, dim)
+                .map_err(|e| Error::Ipc(format!("worker {i} response: {e}")))?;
             if resp.obs.len() != dim {
                 return Err(Error::Ipc(format!(
                     "worker {i} sent obs of {} (expected {dim})",
@@ -104,17 +174,22 @@ impl VectorEnv for SubprocessExecutor {
     }
 
     fn reset(&mut self, out: &mut BatchedTransition) -> Result<()> {
-        for w in &mut self.workers {
-            Request::Reset.write(&mut w.tx)?;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            let tx = w.tx()?;
+            Request::Reset.write(tx).map_err(|e| Error::Ipc(format!("worker {i} reset: {e}")))?;
         }
         self.gather(out)
     }
 
     fn step(&mut self, actions: &[f32], out: &mut BatchedTransition) -> Result<()> {
         let adim = self.spec.action_space.dim();
-        // scatter: serialize + write each env's action (IPC copy #1)
+        // scatter: serialize + write each env's action (IPC copy #1). A
+        // dead worker's broken pipe is reported as Error::Ipc, not Io.
         for (i, w) in self.workers.iter_mut().enumerate() {
-            Request::Step(actions[i * adim..(i + 1) * adim].to_vec()).write(&mut w.tx)?;
+            let tx = w.tx()?;
+            Request::Step(actions[i * adim..(i + 1) * adim].to_vec())
+                .write(tx)
+                .map_err(|e| Error::Ipc(format!("worker {i} step: {e}")))?;
         }
         // barrier + gather (IPC copy #2 + batching copy)
         self.gather(out)
@@ -123,11 +198,11 @@ impl VectorEnv for SubprocessExecutor {
 
 impl Drop for SubprocessExecutor {
     fn drop(&mut self) {
+        // Fan the Close out to every worker first so they all shut down
+        // concurrently; each WorkerProc then reaps its child with a
+        // bounded wait (kill after SHUTDOWN_DEADLINE) in its own Drop.
         for w in &mut self.workers {
-            let _ = Request::Close.write(&mut w.tx);
-        }
-        for w in &mut self.workers {
-            let _ = w.child.wait();
+            w.send_close();
         }
     }
 }

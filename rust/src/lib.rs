@@ -147,6 +147,39 @@
 //! | PPO trainer (`--scenario`) | ✓ on `envpool-sync[-vec]` for uniform-spec scenarios (single policy head) |
 //! | physics params (`param.*` / `jitter.*`) | classic + walker families ([`envs::registry::supported_params`]); Acrobot/Atari: none |
 //!
+//! ## Serving the pool across processes
+//!
+//! `envpool serve` moves the pool out of the trainer's process: a
+//! [`executors::serve::PoolServer`] owns one asynchronous scalar
+//! [`pool::EnvPool`] (`max_clients × lease_size` envs, batch size
+//! `lease_size`) and leases disjoint env ranges to clients. A
+//! [`executors::ShmClient`] (`envpool attach`, or in-process via
+//! [`executors::serve::PoolServer::start`] + `ShmClient::attach`) is a
+//! full [`executors::VectorEnv`] whose envs live in the server. Data
+//! rides per-lease shared-memory rings ([`executors::shm`]) with a
+//! two-phase commit — positioned slab write, then a tiny sequence-number
+//! frame on the Unix control socket — mirroring the in-process state
+//! queue's `slot_obs_mut`/`commit` split; control frames reuse the
+//! [`executors::ipc`] length-prefixed framing with hostile-input bounds.
+//! Clients may pipeline up to `ring_slots - 1` waves (checked on both
+//! sides). A dead client (socket EOF or missed `--heartbeat-ms` window)
+//! has its lease drained, its envs reset, and the fresh initial batch
+//! parked for the next attach, so served trajectories stay reproducible:
+//! each env is seeded `(seed, env_id)` exactly as in-process, and every
+//! attach begins with exactly one reset of the lease's envs
+//! (`tests/serve.rs` pins two attached clients against an in-process
+//! pool, episode-for-episode).
+//!
+//! | surface | served (`serve`/`attach`) behavior |
+//! |---|---|
+//! | exec mode | `ExecMode::Scalar` only (lease reclaim resets individual env ids; chunked kernels reset whole groups) |
+//! | batching | full waves per lease (`lease_size` actions per `Step`), async across leases |
+//! | clients | `--max-clients` leases; attach refused beyond capacity; re-attach after reclaim |
+//! | backpressure | ring credits (`ring_slots - 1` outstanding waves) enforced client- and server-side |
+//! | client death | EOF/heartbeat → drain in-flight wave, reset lease envs, park initial batch, log `lease N reclaimed` |
+//! | determinism | per-env `(seed, env_id)` streams; one reset per attach; matches in-process pool per env id |
+//! | transport | tmpfs-backed slabs + positioned I/O (no `mmap`: std-only, see [`executors::shm`] docs) |
+//!
 //! ## Compute-tier backend matrix
 //!
 //! `envpool train` / `envpool profile` drive a

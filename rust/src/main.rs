@@ -26,6 +26,16 @@
 //!                                         `--max-policy-lag L` bounds its
 //!                                         mid-update sampling staleness
 //! - `envpool profile ...`               — Figure-4 time breakdown
+//! - `envpool serve ...`                 — own a pool and lease env ranges
+//!                                         to other processes over a Unix
+//!                                         socket + shared-memory rings
+//!                                         (`--env --socket --max-clients
+//!                                         --lease-size --ring-slots
+//!                                         --heartbeat-ms --max-seconds`)
+//! - `envpool attach ...`                — attach to a running server,
+//!                                         step a leased env range with a
+//!                                         fixed policy, report fps
+//!                                         (`--socket --num-envs --steps`)
 //! - `envpool worker --task T --seed S --env-id I`
 //!                                       — subprocess-executor worker
 //!                                         (internal; speaks IPC on stdio)
@@ -44,9 +54,11 @@ fn main() {
         "bench" => cmd_bench(&args),
         "train" => cmd_train(&args),
         "profile" => cmd_profile(&args),
+        "serve" => cmd_serve(&args),
+        "attach" => cmd_attach(&args),
         _ => {
             eprintln!(
-                "usage: envpool <worker|info|bench|train|profile> [--key value ...]\n\
+                "usage: envpool <worker|info|bench|train|profile|serve|attach> [--key value ...]\n\
                  see README.md for the full flag reference"
             );
             2
@@ -185,6 +197,85 @@ fn cmd_train(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Own a pool and serve it to other processes (`envpool serve`).
+fn cmd_serve(args: &Args) -> i32 {
+    let task = args.get("env", "CartPole-v1").to_string();
+    let socket = args.get("socket", "/tmp/envpool.sock").to_string();
+    let mut cfg = envpool::config::ServeConfig::new(&task, socket)
+        .max_clients(args.parse_or("max-clients", 2))
+        .lease_size(args.parse_or("lease-size", 8))
+        .seed(args.parse_or("seed", 0))
+        .ring_slots(args.parse_or("ring-slots", 4));
+    let threads: usize = args.parse_or("num-threads", 0);
+    if threads > 0 {
+        cfg = cfg.num_threads(threads);
+    }
+    if let Some(d) = args.opt("slab-dir") {
+        cfg = cfg.slab_dir(d);
+    }
+    let hb_ms: u64 = args.parse_or("heartbeat-ms", 0);
+    if hb_ms > 0 {
+        cfg = cfg.heartbeat_timeout(Some(std::time::Duration::from_millis(hb_ms)));
+    }
+    // `--max-seconds` lets CI run a self-terminating server; 0 = forever.
+    let max_seconds: u64 = args.parse_or("max-seconds", 0);
+    let max = if max_seconds > 0 { Some(max_seconds) } else { None };
+    match envpool::executors::serve::serve_blocking(cfg, max) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+/// Attach to a running pool server and step the lease (`envpool attach`).
+fn cmd_attach(args: &Args) -> i32 {
+    use envpool::executors::{ShmClient, VectorEnv};
+    let socket = args.get("socket", "/tmp/envpool.sock").to_string();
+    let num_envs: usize = args.parse_or("num-envs", 8);
+    let steps: u64 = args.parse_or("steps", 10_000);
+    let mut client = match ShmClient::attach(std::path::Path::new(&socket), num_envs) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("attach failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "attached lease {} (envs {}..{}) via {socket}",
+        client.lease(),
+        client.first_env(),
+        client.first_env() + num_envs as u32
+    );
+    let act_dim = client.spec().action_space.dim();
+    let mut out = client.make_output();
+    if let Err(e) = client.reset(&mut out) {
+        eprintln!("reset failed: {e}");
+        return 1;
+    }
+    let mut acts = vec![0.0f32; num_envs * act_dim];
+    let t0 = std::time::Instant::now();
+    for t in 0..steps {
+        for i in 0..num_envs {
+            for d in 0..act_dim {
+                acts[i * act_dim + d] = ((t as usize + i) % 2) as f32;
+            }
+        }
+        if let Err(e) = client.step(&acts, &mut out) {
+            eprintln!("step {t} failed: {e}");
+            return 1;
+        }
+    }
+    let fps = (steps * num_envs as u64) as f64 / t0.elapsed().as_secs_f64();
+    println!("attach: num_envs={num_envs} steps={steps} fps={fps:.0}");
+    if let Err(e) = client.detach() {
+        eprintln!("detach failed: {e}");
+        return 1;
+    }
+    0
 }
 
 fn cmd_profile(args: &Args) -> i32 {

@@ -377,6 +377,29 @@ impl EnvPool {
         queue.blocking_enqueue(t);
     }
 
+    /// Schedule an explicit reset for a subset of envs; each produces one
+    /// row on the state queue like any step. The serve-mode lease table
+    /// uses this to recycle a dead client's envs without touching the
+    /// rest of the pool. Scalar engine only: chunked kernels step whole
+    /// groups and cannot reset individual lanes out of band.
+    pub fn schedule_resets(&self, env_ids: &[u32]) -> Result<()> {
+        for &id in env_ids {
+            if id as usize >= self.cfg.num_envs {
+                return Err(Error::BadEnvId { id: id as usize, num_envs: self.cfg.num_envs });
+            }
+        }
+        match &self.engine {
+            Engine::Scalar { queue, .. } => {
+                queue.enqueue_batch(env_ids.iter().map(|&id| Task::Reset { env_id: id }));
+                Ok(())
+            }
+            Engine::Chunked { .. } => Err(Error::Config(
+                "schedule_resets requires ExecMode::Scalar (chunked kernels reset whole groups)"
+                    .into(),
+            )),
+        }
+    }
+
     /// Send a batch of actions. `actions` is row-major
     /// `[env_ids.len(), act_dim]`; `env_ids` routes each row (use the ids
     /// from the last `recv`). Returns immediately (paper §3.1).

@@ -1,0 +1,640 @@
+//! Lease table over [`EnvPool`] — the server side of `envpool serve`.
+//!
+//! The pool's `env_id` space is carved into `max_clients` contiguous
+//! **leases** of `lease_size` envs each; a client attaches to one lease
+//! and drives exactly its envs. The pool itself runs **async scalar**
+//! with `batch_size == lease_size`, and every submission is a *full wave*
+//! (one action per leased env), so the number of in-flight rows is always
+//! a multiple of the batch size — state-queue blocks always fill and the
+//! pool stays live no matter how many leases are attached.
+//!
+//! Rows coming back from [`EnvPool::recv_into_timeout`] are routed by
+//! `env_id / lease_size` into per-lease wave buffers; a buffer that
+//! reaches `lease_size` rows is a completed wave, surfaced to the caller
+//! as a [`LeaseEvent::Wave`] in lease-local env order.
+//!
+//! Client death is handled without touching other leases: the lease
+//! **drains** any in-flight wave (discarding the rows), schedules one
+//! explicit reset per env ([`EnvPool::schedule_resets`]), and **parks**
+//! the completed reset wave. The next client to attach receives the
+//! parked wave as its initial batch — so every attach observes exactly
+//! one reset per env, which keeps served trajectories bitwise equal to an
+//! in-process pool over the same seeds.
+//!
+//! This type is transport-agnostic and fully testable in-process; the
+//! Unix-socket + shared-memory-slab wiring lives in
+//! [`crate::executors::serve`] / [`crate::executors::shm`].
+
+use super::envpool::{EnvPool, ExecMode, PoolConfig};
+use crate::envs::spec::EnvSpec;
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Index of a lease in the table (also its slot in the slab directory).
+pub type LeaseId = usize;
+
+/// Construction parameters for a [`LeasePool`].
+#[derive(Debug, Clone)]
+pub struct LeaseConfig {
+    /// Task id served to every lease, e.g. `"CartPole-v1"`.
+    pub task_id: String,
+    /// Number of leases (= maximum concurrently attached clients).
+    pub max_clients: usize,
+    /// Envs per lease; also the pool's batch size.
+    pub lease_size: usize,
+    /// Worker threads for the underlying pool.
+    pub num_threads: usize,
+    /// Experiment seed (env `i` seeds as `(seed, i)`, like any pool).
+    pub seed: u64,
+    /// Bound on outstanding waves per lease: one in the pool plus up to
+    /// `max_outstanding - 1` queued server-side. A submit beyond the
+    /// bound is refused with [`Error::Lease`] — the backpressure signal.
+    pub max_outstanding: usize,
+}
+
+impl LeaseConfig {
+    pub fn new(task_id: &str) -> Self {
+        LeaseConfig {
+            task_id: task_id.to_string(),
+            max_clients: 2,
+            lease_size: 8,
+            num_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            seed: 0,
+            max_outstanding: 2,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_clients == 0 {
+            return Err(Error::Config("max_clients must be > 0".into()));
+        }
+        if self.lease_size == 0 {
+            return Err(Error::Config("lease_size must be > 0".into()));
+        }
+        if self.max_outstanding == 0 {
+            return Err(Error::Config("max_outstanding must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// One completed batch for one lease, rows in lease-local env order
+/// (row `i` is global env `first_env + i`). Buffers are recycled through
+/// [`LeasePool::recycle`]; steady state allocates nothing.
+#[derive(Debug, Default)]
+pub struct Wave {
+    pub obs: Vec<f32>,
+    pub rew: Vec<f32>,
+    pub done: Vec<u8>,
+    pub trunc: Vec<u8>,
+    filled: usize,
+    mask: Vec<bool>,
+}
+
+impl Wave {
+    fn with_shape(k: usize, obs_dim: usize) -> Wave {
+        Wave {
+            obs: vec![0.0; k * obs_dim],
+            rew: vec![0.0; k],
+            done: vec![0; k],
+            trunc: vec![0; k],
+            filled: 0,
+            mask: vec![false; k],
+        }
+    }
+
+    fn clear(&mut self) {
+        self.filled = 0;
+        self.mask.iter_mut().for_each(|m| *m = false);
+    }
+}
+
+/// What [`LeasePool::pump`] surfaced this tick.
+#[derive(Debug)]
+pub enum LeaseEvent {
+    /// A completed wave for an attached client; `seq` counts from 0 per
+    /// attach (seq 0 is the initial reset batch).
+    Wave { lease: LeaseId, seq: u64, wave: Wave },
+    /// A detached lease finished draining + resetting: its envs are fresh
+    /// and parked, and the lease is back in the admission pool.
+    Reclaimed { lease: LeaseId },
+}
+
+/// Where a lease's *envs* are in their recycle cycle (orthogonal to
+/// whether a client is currently attached).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lifecycle {
+    /// Unknown state — must be reset before serving (initial state).
+    Dirty,
+    /// A dead client's wave is still in flight; rows are discarded as
+    /// they return, then a reset is scheduled.
+    Draining,
+    /// A reset wave is in flight (becomes the initial batch if a client
+    /// is attached, or parks as `Fresh` otherwise).
+    Resetting,
+    /// Reset done and parked; the next attach gets the wave instantly.
+    Fresh,
+    /// Serving episodes for an attached client.
+    Live,
+}
+
+struct Lease {
+    attached: bool,
+    lifecycle: Lifecycle,
+    /// Rows currently inside the pool for this lease (0 or `lease_size`).
+    in_flight: usize,
+    /// Action waves accepted but not yet submitted to the pool (the pool
+    /// holds at most one wave per lease — `EnvSlot` has a single action
+    /// buffer, so a second send would overwrite the first).
+    pending: VecDeque<Vec<f32>>,
+    /// Accumulates the currently returning wave.
+    wave: Wave,
+    /// Completed reset wave kept for the next attach.
+    parked: Option<Wave>,
+    /// Next wave sequence number for the attached client.
+    seq: u64,
+    /// This lease's global env ids, precomputed for `send`.
+    env_ids: Vec<u32>,
+}
+
+/// Lease table + routing over an async scalar [`EnvPool`]. All methods
+/// take `&self`; attach/submit/detach lock the table briefly while
+/// `pump` (single consumer) drains the pool's state queue.
+pub struct LeasePool {
+    pool: EnvPool,
+    spec: EnvSpec,
+    k: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    max_outstanding: usize,
+    table: Mutex<Table>,
+    scratch: Mutex<super::batch::BatchedTransition>,
+    attaches: AtomicU64,
+    reclaims: AtomicU64,
+}
+
+struct Table {
+    leases: Vec<Lease>,
+    spare: Vec<Wave>,
+}
+
+impl LeasePool {
+    pub fn new(cfg: LeaseConfig) -> Result<LeasePool> {
+        cfg.validate()?;
+        let num_envs = cfg.max_clients * cfg.lease_size;
+        let pool = EnvPool::make(
+            PoolConfig::new(&cfg.task_id)
+                .num_envs(num_envs)
+                .batch_size(cfg.lease_size)
+                .num_threads(cfg.num_threads)
+                .seed(cfg.seed)
+                .exec_mode(ExecMode::Scalar),
+        )?;
+        let spec = pool.spec().clone();
+        let obs_dim = spec.obs_dim();
+        let act_dim = spec.action_space.dim();
+        let k = cfg.lease_size;
+        let leases = (0..cfg.max_clients)
+            .map(|l| Lease {
+                attached: false,
+                lifecycle: Lifecycle::Dirty,
+                in_flight: 0,
+                pending: VecDeque::new(),
+                wave: Wave::with_shape(k, obs_dim),
+                parked: None,
+                seq: 0,
+                env_ids: (l * k..(l + 1) * k).map(|i| i as u32).collect(),
+            })
+            .collect();
+        let scratch = Mutex::new(pool.make_output());
+        Ok(LeasePool {
+            pool,
+            spec,
+            k,
+            obs_dim,
+            act_dim,
+            max_outstanding: cfg.max_outstanding,
+            table: Mutex::new(Table { leases, spare: Vec::new() }),
+            scratch,
+            attaches: AtomicU64::new(0),
+            reclaims: AtomicU64::new(0),
+        })
+    }
+
+    pub fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    pub fn lease_size(&self) -> usize {
+        self.k
+    }
+
+    pub fn max_clients(&self) -> usize {
+        self.table.lock().unwrap().leases.len()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    /// First global env id of a lease (its rows are `first..first + k`).
+    pub fn first_env(&self, lease: LeaseId) -> u32 {
+        (lease * self.k) as u32
+    }
+
+    /// Total attaches served (monotone; for stats/tests).
+    pub fn attaches(&self) -> u64 {
+        self.attaches.load(Ordering::Relaxed)
+    }
+
+    /// Total completed reclaims (detached lease fully reset + parked).
+    pub fn reclaims(&self) -> u64 {
+        self.reclaims.load(Ordering::Relaxed)
+    }
+
+    /// Claim the lowest unattached lease. Returns the lease id and, when
+    /// its envs were already reset and parked, the initial wave (seq 0)
+    /// to deliver immediately. Otherwise the initial wave surfaces later
+    /// through [`Self::pump`] once the (scheduled) reset completes.
+    pub fn attach(&self) -> Result<(LeaseId, Option<(u64, Wave)>)> {
+        let mut t = self.table.lock().unwrap();
+        let Some(id) = t.leases.iter().position(|l| !l.attached) else {
+            let n = t.leases.len();
+            return Err(Error::Attach(format!("all {n} leases attached")));
+        };
+        let lease = &mut t.leases[id];
+        lease.attached = true;
+        lease.seq = 0;
+        lease.pending.clear();
+        self.attaches.fetch_add(1, Ordering::Relaxed);
+        match lease.lifecycle {
+            Lifecycle::Fresh => {
+                let wave = lease.parked.take().expect("Fresh lease has a parked wave");
+                lease.lifecycle = Lifecycle::Live;
+                lease.seq = 1;
+                Ok((id, Some((0, wave))))
+            }
+            Lifecycle::Dirty => {
+                self.pool.schedule_resets(&lease.env_ids)?;
+                lease.in_flight = self.k;
+                lease.lifecycle = Lifecycle::Resetting;
+                Ok((id, None))
+            }
+            // A reclaim is still in progress; the reset wave in flight
+            // (or about to be scheduled) becomes this client's initial
+            // batch when it completes.
+            Lifecycle::Draining | Lifecycle::Resetting => Ok((id, None)),
+            Lifecycle::Live => unreachable!("Live lease cannot be unattached"),
+        }
+    }
+
+    /// Submit one full action wave (`lease_size * act_dim` f32s, rows in
+    /// lease-local env order). At most one wave rides the pool per lease;
+    /// extras queue server-side up to the `max_outstanding` bound, beyond
+    /// which the submit is refused — the backpressure contract.
+    pub fn submit(&self, lease: LeaseId, actions: &[f32]) -> Result<()> {
+        let mut t = self.table.lock().unwrap();
+        let l = t
+            .leases
+            .get_mut(lease)
+            .ok_or_else(|| Error::Lease(format!("no such lease {lease}")))?;
+        if !l.attached {
+            return Err(Error::Lease(format!("lease {lease} is not attached")));
+        }
+        if l.lifecycle != Lifecycle::Live {
+            return Err(Error::Lease(format!(
+                "lease {lease} cannot step before its initial reset batch is delivered"
+            )));
+        }
+        if actions.len() != self.k * self.act_dim {
+            return Err(Error::Lease(format!(
+                "action wave of {} f32s (lease wants {} envs x {} dims)",
+                actions.len(),
+                self.k,
+                self.act_dim
+            )));
+        }
+        let outstanding = usize::from(l.in_flight > 0) + l.pending.len();
+        if outstanding >= self.max_outstanding {
+            return Err(Error::Lease(format!(
+                "lease {lease} backpressure: {outstanding} waves outstanding (max {})",
+                self.max_outstanding
+            )));
+        }
+        if l.in_flight == 0 {
+            debug_assert!(l.pending.is_empty(), "pending drains before in_flight clears");
+            self.pool.send(actions, &l.env_ids)?;
+            l.in_flight = self.k;
+        } else {
+            l.pending.push_back(actions.to_vec());
+        }
+        Ok(())
+    }
+
+    /// Client-requested re-reset of a live lease (no waves outstanding).
+    /// The reset wave arrives as the next [`LeaseEvent::Wave`].
+    pub fn request_reset(&self, lease: LeaseId) -> Result<()> {
+        let mut t = self.table.lock().unwrap();
+        let l = t
+            .leases
+            .get_mut(lease)
+            .ok_or_else(|| Error::Lease(format!("no such lease {lease}")))?;
+        if !l.attached || l.lifecycle != Lifecycle::Live {
+            return Err(Error::Lease(format!("lease {lease} is not live")));
+        }
+        if l.in_flight > 0 || !l.pending.is_empty() {
+            return Err(Error::Lease(format!(
+                "lease {lease} cannot reset with waves outstanding"
+            )));
+        }
+        self.pool.schedule_resets(&l.env_ids)?;
+        l.in_flight = self.k;
+        l.lifecycle = Lifecycle::Resetting;
+        Ok(())
+    }
+
+    /// Release a lease — graceful detach and client-death reclaim share
+    /// this path (idempotent; a reader-thread EOF after an explicit
+    /// detach is a no-op). Queued waves are dropped; any in-flight wave
+    /// drains first (rows discarded), then every env is reset and the
+    /// fresh wave parks for the next attach. Completion is signalled by
+    /// [`LeaseEvent::Reclaimed`] out of [`Self::pump`].
+    pub fn detach(&self, lease: LeaseId) -> Result<()> {
+        let mut t = self.table.lock().unwrap();
+        let l = t
+            .leases
+            .get_mut(lease)
+            .ok_or_else(|| Error::Lease(format!("no such lease {lease}")))?;
+        if !l.attached {
+            return Ok(());
+        }
+        l.attached = false;
+        l.pending.clear();
+        match l.lifecycle {
+            Lifecycle::Live => {
+                if l.in_flight > 0 {
+                    // Keep the partially-routed wave accumulating — rows
+                    // still in the pool complete it, and route() discards
+                    // it wholesale once full.
+                    l.lifecycle = Lifecycle::Draining;
+                } else {
+                    self.pool.schedule_resets(&l.env_ids)?;
+                    l.in_flight = self.k;
+                    l.lifecycle = Lifecycle::Resetting;
+                }
+            }
+            // Reset already in flight — it will park as Fresh now that
+            // the client is gone.
+            Lifecycle::Resetting => {}
+            // Unattached lifecycles can't be reached with attached=true.
+            Lifecycle::Dirty | Lifecycle::Draining | Lifecycle::Fresh => {}
+        }
+        Ok(())
+    }
+
+    /// Drain ready pool batches and route rows into per-lease waves.
+    /// Blocks at most `timeout` waiting for the *first* batch; anything
+    /// already queued behind it is drained without blocking. Completed
+    /// waves and reclaim completions are appended to `events`.
+    pub fn pump(&self, timeout: Duration, events: &mut Vec<LeaseEvent>) -> Result<()> {
+        let mut scratch = self.scratch.lock().unwrap();
+        let mut got = self.pool.recv_into_timeout(&mut scratch, timeout)?;
+        while got {
+            self.route(&scratch, events)?;
+            got = self.pool.recv_into_timeout(&mut scratch, Duration::ZERO)?;
+        }
+        Ok(())
+    }
+
+    /// Return a published wave's buffer for reuse.
+    pub fn recycle(&self, mut wave: Wave) {
+        wave.clear();
+        self.table.lock().unwrap().spare.push(wave);
+    }
+
+    fn route(
+        &self,
+        batch: &super::batch::BatchedTransition,
+        events: &mut Vec<LeaseEvent>,
+    ) -> Result<()> {
+        let d = self.obs_dim;
+        let mut t = self.table.lock().unwrap();
+        for row in 0..batch.len() {
+            let env_id = batch.env_ids[row] as usize;
+            let lease = env_id / self.k;
+            let local = env_id % self.k;
+            let completed = {
+                let l = &mut t.leases[lease];
+                debug_assert!(!l.wave.mask[local], "env {env_id} produced two rows in one wave");
+                l.wave.mask[local] = true;
+                l.wave.obs[local * d..(local + 1) * d]
+                    .copy_from_slice(&batch.obs[row * d..(row + 1) * d]);
+                l.wave.rew[local] = batch.rew[row];
+                l.wave.done[local] = batch.done[row];
+                l.wave.trunc[local] = batch.trunc[row];
+                l.wave.filled += 1;
+                l.in_flight -= 1;
+                l.wave.filled == self.k
+            };
+            if !completed {
+                continue;
+            }
+            // Completed wave: swap it out against a spare buffer.
+            let mut full = match t.spare.pop() {
+                Some(w) if w.mask.len() == self.k => w,
+                _ => Wave::with_shape(self.k, d),
+            };
+            std::mem::swap(&mut t.leases[lease].wave, &mut full);
+            t.leases[lease].wave.clear();
+            let (lifecycle, attached) = {
+                let l = &t.leases[lease];
+                (l.lifecycle, l.attached)
+            };
+            match (lifecycle, attached) {
+                (Lifecycle::Live, true) => {
+                    let l = &mut t.leases[lease];
+                    let seq = l.seq;
+                    l.seq += 1;
+                    if let Some(next) = l.pending.pop_front() {
+                        self.pool.send(&next, &l.env_ids)?;
+                        l.in_flight = self.k;
+                    }
+                    events.push(LeaseEvent::Wave { lease, seq, wave: full });
+                }
+                (Lifecycle::Resetting, true) => {
+                    let l = &mut t.leases[lease];
+                    l.lifecycle = Lifecycle::Live;
+                    let seq = l.seq;
+                    l.seq += 1;
+                    events.push(LeaseEvent::Wave { lease, seq, wave: full });
+                }
+                (Lifecycle::Resetting, false) => {
+                    let l = &mut t.leases[lease];
+                    l.lifecycle = Lifecycle::Fresh;
+                    l.parked = Some(full);
+                    self.reclaims.fetch_add(1, Ordering::Relaxed);
+                    events.push(LeaseEvent::Reclaimed { lease });
+                }
+                // Note `Draining` drains regardless of `attached`: a new
+                // client may claim the lease mid-drain, and the reset
+                // scheduled here then becomes its initial batch.
+                (Lifecycle::Draining, _) | (Lifecycle::Live, false) => {
+                    // Dead client's wave fully drained: discard the rows,
+                    // recycle the buffer, reset the envs.
+                    t.spare.push(full);
+                    self.pool.schedule_resets(&t.leases[lease].env_ids)?;
+                    let l = &mut t.leases[lease];
+                    l.in_flight = self.k;
+                    l.lifecycle = Lifecycle::Resetting;
+                }
+                (state, attached) => {
+                    debug_assert!(false, "wave completed in {state:?}/attached={attached}");
+                    t.spare.push(full);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pump_until(
+        lp: &LeasePool,
+        pred: impl Fn(&LeaseEvent) -> bool,
+        what: &str,
+    ) -> LeaseEvent {
+        let mut events = Vec::new();
+        for _ in 0..2000 {
+            lp.pump(Duration::from_millis(5), &mut events).unwrap();
+            if let Some(i) = events.iter().position(&pred) {
+                return events.swap_remove(i);
+            }
+        }
+        panic!("no {what} event within timeout");
+    }
+
+    fn cfg(clients: usize, k: usize) -> LeaseConfig {
+        let mut c = LeaseConfig::new("CartPole-v1");
+        c.max_clients = clients;
+        c.lease_size = k;
+        c.num_threads = 2;
+        c.seed = 7;
+        c
+    }
+
+    #[test]
+    fn attach_initial_wave_then_step() {
+        let lp = LeasePool::new(cfg(2, 4)).unwrap();
+        let (id, parked) = lp.attach().unwrap();
+        assert_eq!(id, 0);
+        assert!(parked.is_none(), "cold lease has no parked wave");
+        let ev = pump_until(&lp, |e| matches!(e, LeaseEvent::Wave { .. }), "initial wave");
+        let LeaseEvent::Wave { lease, seq, wave } = ev else { unreachable!() };
+        assert_eq!((lease, seq), (0, 0));
+        assert_eq!(wave.obs.len(), 4 * lp.obs_dim());
+        assert!(wave.obs.iter().all(|x| x.is_finite()));
+        assert!(wave.done.iter().all(|&d| d == 0), "reset rows are not terminal");
+        lp.recycle(wave);
+
+        lp.submit(0, &[0.0; 4]).unwrap();
+        let ev = pump_until(&lp, |e| matches!(e, LeaseEvent::Wave { seq: 1, .. }), "step wave");
+        let LeaseEvent::Wave { wave, .. } = ev else { unreachable!() };
+        assert!(wave.rew.iter().all(|&r| r == 1.0), "CartPole pays 1 per step");
+        lp.recycle(wave);
+    }
+
+    #[test]
+    fn backpressure_bounds_outstanding_waves() {
+        let lp = LeasePool::new(cfg(1, 4)).unwrap();
+        let (id, _) = lp.attach().unwrap();
+        pump_until(&lp, |e| matches!(e, LeaseEvent::Wave { .. }), "initial wave");
+        // Without pumping, in_flight never clears: wave 1 rides the pool,
+        // wave 2 queues, wave 3 must be refused.
+        lp.submit(id, &[0.0; 4]).unwrap();
+        lp.submit(id, &[0.0; 4]).unwrap();
+        let err = lp.submit(id, &[0.0; 4]).unwrap_err();
+        assert!(matches!(err, Error::Lease(_)), "got {err}");
+        assert!(err.to_string().contains("backpressure"), "got {err}");
+        // Pumping both waves out clears the window again.
+        pump_until(&lp, |e| matches!(e, LeaseEvent::Wave { seq: 2, .. }), "queued wave");
+        lp.submit(id, &[0.0; 4]).unwrap();
+    }
+
+    #[test]
+    fn submit_validates_shape_and_state() {
+        let lp = LeasePool::new(cfg(1, 4)).unwrap();
+        let (id, _) = lp.attach().unwrap();
+        // Before the initial batch: not yet live.
+        assert!(lp.submit(id, &[0.0; 4]).is_err());
+        pump_until(&lp, |e| matches!(e, LeaseEvent::Wave { .. }), "initial wave");
+        // Wrong wave width.
+        let err = lp.submit(id, &[0.0; 3]).unwrap_err();
+        assert!(err.to_string().contains("action wave"), "got {err}");
+        // Unknown lease id.
+        assert!(lp.submit(9, &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn attach_exhaustion_is_refused() {
+        let lp = LeasePool::new(cfg(1, 2)).unwrap();
+        lp.attach().unwrap();
+        let err = lp.attach().unwrap_err();
+        assert!(matches!(err, Error::Attach(_)), "got {err}");
+    }
+
+    #[test]
+    fn detach_drains_resets_and_parks_for_reattach() {
+        let lp = LeasePool::new(cfg(1, 4)).unwrap();
+        let (id, _) = lp.attach().unwrap();
+        pump_until(&lp, |e| matches!(e, LeaseEvent::Wave { .. }), "initial wave");
+        // Die with a wave in flight: drain → reset → park.
+        lp.submit(id, &[0.0; 4]).unwrap();
+        lp.detach(id).unwrap();
+        lp.detach(id).unwrap(); // idempotent (EOF after explicit detach)
+        pump_until(&lp, |e| matches!(e, LeaseEvent::Reclaimed { .. }), "reclaim");
+        assert_eq!(lp.reclaims(), 1);
+        // Reattach gets the parked wave instantly, seq starts over at 0.
+        let (id2, parked) = lp.attach().unwrap();
+        assert_eq!(id2, id);
+        let (seq, wave) = parked.expect("reclaimed lease parks an initial wave");
+        assert_eq!(seq, 0);
+        assert!(wave.obs.iter().all(|x| x.is_finite()));
+        assert!(wave.done.iter().all(|&d| d == 0));
+        lp.recycle(wave);
+        // And the lease steps normally again.
+        lp.submit(id2, &[1.0; 4]).unwrap();
+        pump_until(&lp, |e| matches!(e, LeaseEvent::Wave { seq: 1, .. }), "step after reattach");
+        assert_eq!(lp.attaches(), 2);
+    }
+
+    #[test]
+    fn two_leases_are_independent() {
+        let lp = LeasePool::new(cfg(2, 2)).unwrap();
+        let (a, _) = lp.attach().unwrap();
+        let (b, _) = lp.attach().unwrap();
+        assert_ne!(a, b);
+        pump_until(&lp, |e| matches!(e, LeaseEvent::Wave { lease, .. } if *lease == a), "init a");
+        pump_until(&lp, |e| matches!(e, LeaseEvent::Wave { lease, .. } if *lease == b), "init b");
+        // Killing a never stalls b.
+        lp.detach(a).unwrap();
+        for s in 1..=3u64 {
+            lp.submit(b, &[0.0; 2]).unwrap();
+            pump_until(
+                &lp,
+                |e| matches!(e, LeaseEvent::Wave { lease, seq, .. } if *lease == b && *seq == s),
+                "b steps while a reclaims",
+            );
+        }
+        pump_until(&lp, |e| matches!(e, LeaseEvent::Reclaimed { lease } if *lease == a), "a parks");
+    }
+}

@@ -33,6 +33,7 @@ pub mod chunked;
 pub mod batch;
 pub mod envpool;
 pub mod hetero;
+pub mod lease;
 pub mod numa;
 
 pub use action_queue::ActionBufferQueue;
@@ -40,6 +41,7 @@ pub use batch::BatchedTransition;
 pub use chunked::ChunkedThreadPool;
 pub use envpool::{EnvPool, ExecMode, PoolConfig};
 pub use hetero::{GroupedVecEnv, VecLaneEnv};
+pub use lease::{LeaseConfig, LeaseEvent, LeaseId, LeasePool, Wave};
 pub use numa::NumaPool;
 pub use state_queue::StateBufferQueue;
 pub use thread_pool::ThreadPool;

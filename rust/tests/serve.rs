@@ -1,0 +1,218 @@
+//! End-to-end tests for `envpool serve`: shared-memory clients stepping a
+//! live server, trajectory parity against the in-process pool, and
+//! client-death chaos (both an in-process crashed client and a real
+//! SIGKILLed `envpool attach` subprocess).
+
+use envpool::config::ServeConfig;
+use envpool::executors::serve::PoolServer;
+use envpool::executors::{PoolVectorEnv, ShmClient, VectorEnv};
+use envpool::pool::{EnvPool, ExecMode, PoolConfig};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+fn sock_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("envpool-it-{name}-{}.sock", std::process::id()))
+}
+
+fn serve_cfg(name: &str, clients: usize, lease: usize, seed: u64) -> ServeConfig {
+    ServeConfig::new("CartPole-v1", sock_path(name))
+        .max_clients(clients)
+        .lease_size(lease)
+        .num_threads(2)
+        .seed(seed)
+}
+
+/// Attach with retries: a lease freed by detach/death becomes claimable
+/// immediately but admission can race the reclaim by a few milliseconds.
+fn attach_retry(socket: &Path, k: usize) -> ShmClient {
+    let t0 = Instant::now();
+    loop {
+        match ShmClient::attach(socket, k) {
+            Ok(c) => return c,
+            Err(e) => {
+                assert!(t0.elapsed() < Duration::from_secs(10), "attach never admitted: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// The shared deterministic policy: action for global env id `g` at step
+/// `t`. Both the served clients and the in-process reference use it, so
+/// trajectories must match env-for-env. Five-step runs in one direction
+/// (phase-shifted by env id) destabilize CartPole quickly, so every first
+/// episode terminates well inside the test budget.
+fn policy(t: usize, g: usize) -> f32 {
+    ((t / 5 + g) % 2) as f32
+}
+
+/// (episode length, episode return) of each env's first episode.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+struct Episode {
+    len: u32,
+    ret: f32,
+}
+
+/// Two clients with disjoint leases must see exactly the per-env episodes
+/// an in-process pool produces with the same seed and policy: env streams
+/// are keyed `(seed, env_id)` and every attach resets its lease once.
+#[test]
+fn two_attached_clients_match_the_in_process_pool() {
+    const K: usize = 4;
+    const N: usize = 2 * K;
+    const SEED: u64 = 9;
+    const STEPS: usize = 400;
+
+    // Reference: all 8 envs in one synchronous in-process pool.
+    let pool = EnvPool::make(
+        PoolConfig::new("CartPole-v1")
+            .num_envs(N)
+            .batch_size(N)
+            .num_threads(2)
+            .seed(SEED)
+            .exec_mode(ExecMode::Scalar),
+    )
+    .unwrap();
+    let mut reference = PoolVectorEnv::new(pool).unwrap();
+    let mut out = reference.make_output();
+    reference.reset(&mut out).unwrap();
+    let reference_reset_obs = out.obs.clone();
+    let mut want = [Episode::default(); N];
+    let mut open = [true; N];
+    for t in 0..STEPS {
+        let acts: Vec<f32> = (0..N).map(|g| policy(t, g)).collect();
+        reference.step(&acts, &mut out).unwrap();
+        for g in 0..N {
+            if open[g] {
+                want[g].len += 1;
+                want[g].ret += out.rew[g];
+                open[g] &= out.done[g] == 0 && out.trunc[g] == 0;
+            }
+        }
+    }
+    assert!(open.iter().all(|o| !o), "400 steps must finish every first episode");
+
+    // Served: the same 8 envs behind two attached clients.
+    let server = PoolServer::start(serve_cfg("determinism", 2, K, SEED)).unwrap();
+    let mut a = ShmClient::attach(server.socket_path(), K).unwrap();
+    let mut b = ShmClient::attach(server.socket_path(), K).unwrap();
+    let mut got = [Episode::default(); N];
+    let mut open = [true; N];
+    for client in [&mut a, &mut b] {
+        let first = client.first_env() as usize;
+        let mut out = client.make_output();
+        client.reset(&mut out).unwrap();
+        let dim = client.spec().obs_dim();
+        assert_eq!(
+            out.obs,
+            reference_reset_obs[first * dim..(first + K) * dim],
+            "reset obs of envs {first}..{} disagree with the in-process pool",
+            first + K
+        );
+        for t in 0..STEPS {
+            let acts: Vec<f32> = (0..K).map(|i| policy(t, first + i)).collect();
+            client.step(&acts, &mut out).unwrap();
+            for i in 0..K {
+                let g = first + i;
+                if open[g] {
+                    got[g].len += 1;
+                    got[g].ret += out.rew[i];
+                    open[g] &= out.done[i] == 0 && out.trunc[i] == 0;
+                }
+            }
+        }
+    }
+    assert_eq!(got, want, "served first episodes diverge from the in-process pool");
+    a.detach().unwrap();
+    b.detach().unwrap();
+    server.stop();
+}
+
+/// An in-process client that dies without detaching (slammed socket, no
+/// goodbye) must have its lease drained, reset, and handed to the next
+/// client with a sane initial batch.
+#[test]
+fn crashed_client_lease_is_reclaimed_for_the_next_attach() {
+    const K: usize = 2;
+    let server = PoolServer::start(serve_cfg("crash", 1, K, 11)).unwrap();
+
+    let mut c1 = ShmClient::attach(server.socket_path(), K).unwrap();
+    let mut out = c1.make_output();
+    c1.reset(&mut out).unwrap();
+    // Die with a wave still in flight so the reclaim has to drain it.
+    c1.send_wave(&[1.0, 0.0]).unwrap();
+    c1.simulate_crash();
+
+    let t0 = Instant::now();
+    while server.reclaims() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "lease never reclaimed");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let mut c2 = attach_retry(server.socket_path(), K);
+    let mut out = c2.make_output();
+    c2.reset(&mut out).unwrap();
+    assert_eq!(out.len(), K);
+    assert!(out.obs.iter().all(|x| x.is_finite()), "post-reclaim obs not sane: {:?}", out.obs);
+    for t in 0..10 {
+        let acts: Vec<f32> = (0..K).map(|i| policy(t, i)).collect();
+        c2.step(&acts, &mut out).unwrap();
+    }
+    assert_eq!(server.attaches(), 2);
+    c2.detach().unwrap();
+    server.stop();
+}
+
+/// The full kill-a-client story: a *real* `envpool attach` process is
+/// SIGKILLed mid-run; the server must reclaim the lease and admit a fresh
+/// client that sees freshly-reset envs.
+#[test]
+fn sigkilled_attach_subprocess_is_reclaimed() {
+    const K: usize = 4;
+    let server = PoolServer::start(serve_cfg("sigkill", 1, K, 13)).unwrap();
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_envpool"))
+        .args([
+            "attach",
+            "--socket",
+            &server.socket_path().display().to_string(),
+            "--num-envs",
+            &K.to_string(),
+            // Far more steps than it will live to take.
+            "--steps",
+            "100000000",
+        ])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn envpool attach");
+
+    // Wait until it actually holds the lease, then kill it mid-batch.
+    let t0 = Instant::now();
+    while server.attaches() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(30), "client never attached");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    std::thread::sleep(Duration::from_millis(100)); // let it step a while
+    child.kill().expect("SIGKILL the attached client");
+    let _ = child.wait();
+
+    let t0 = Instant::now();
+    while server.reclaims() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "lease never reclaimed after SIGKILL");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let mut c = attach_retry(server.socket_path(), K);
+    let mut out = c.make_output();
+    c.reset(&mut out).unwrap();
+    assert_eq!(out.len(), K);
+    assert_eq!(out.env_ids, [0, 1, 2, 3]);
+    assert!(out.obs.iter().all(|x| x.is_finite()));
+    for t in 0..20 {
+        let acts: Vec<f32> = (0..K).map(|i| policy(t, i)).collect();
+        c.step(&acts, &mut out).unwrap();
+    }
+    c.detach().unwrap();
+    server.stop();
+}

@@ -1,0 +1,53 @@
+//! Chaos tests for the subprocess executor's failure paths: a worker
+//! killed mid-run must surface as `Error::Ipc` on the next step (never a
+//! hang), and executor teardown must complete in bounded time even when
+//! children are already dead.
+
+use envpool::executors::{SubprocessExecutor, VectorEnv};
+use envpool::Error;
+use std::time::{Duration, Instant};
+
+fn executor(num_envs: usize) -> SubprocessExecutor {
+    // CARGO_BIN_EXE_* is provided to integration tests at compile time.
+    std::env::set_var("ENVPOOL_WORKER_BIN", env!("CARGO_BIN_EXE_envpool"));
+    SubprocessExecutor::new("CartPole-v1", num_envs, 3).unwrap()
+}
+
+#[test]
+fn killed_worker_surfaces_as_ipc_error_not_a_hang() {
+    let mut ex = executor(3);
+    let mut out = ex.make_output();
+    ex.reset(&mut out).unwrap();
+    let acts = vec![1.0f32; 3];
+    ex.step(&acts, &mut out).unwrap();
+
+    ex.kill_worker(1);
+    let t0 = Instant::now();
+    // Depending on timing the failure lands on the scatter (broken pipe)
+    // or the gather (EOF on the dead worker's stdout); both must be Ipc.
+    let err = ex.step(&acts, &mut out).unwrap_err();
+    assert!(matches!(err, Error::Ipc(_)), "expected Error::Ipc, got {err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "step against a dead worker took {:?}",
+        t0.elapsed()
+    );
+    assert!(err.to_string().contains("worker 1"), "got {err}");
+}
+
+#[test]
+fn drop_with_dead_workers_completes_in_bounded_time() {
+    let mut ex = executor(2);
+    let mut out = ex.make_output();
+    ex.reset(&mut out).unwrap();
+    ex.kill_worker(0);
+    let t0 = Instant::now();
+    drop(ex);
+    // Close fan-out + bounded reap: well under the per-worker shutdown
+    // deadline, and crucially not an unbounded `wait()` hang.
+    assert!(
+        t0.elapsed() < Duration::from_secs(6),
+        "teardown with a dead worker took {:?}",
+        t0.elapsed()
+    );
+}
