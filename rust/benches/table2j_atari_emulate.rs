@@ -1,0 +1,173 @@
+//! Bench: Table 2j — the batched Atari emulator gate. Isolates the
+//! emulator **tick pass** (the part PR 10 batched) from the pixel
+//! pipeline: renders + preprocessing are ~30k byte ops per env-step and
+//! dominate the end-to-end Atari cost, so an end-to-end ratio would
+//! measure the (already-gated, Table 2g.3) slab pass and bury the tick
+//! math in the noise floor.
+//!
+//! Timed paths, both over the same N=256 Pong games with identical
+//! per-lane RNG streams and the same deterministic action tape,
+//! resetting any finished game in place so all lanes stay live:
+//!
+//! - **scalar-lane**: `K` scalar [`Pong`] games ticked one lane at a
+//!   time through `Game::tick` (the per-env reference path);
+//! - **batched**: one [`PongLanes`] SoA batch ticked through masked
+//!   lane-group passes ([`LaneGame::tick_pass`]) at widths 1/4/8 and at
+//!   the auto-detected width.
+//!
+//! Because the pass is bitwise identical to the scalar tick, both paths
+//! produce the *same trajectories* — the bench cross-checks reward/done
+//! checksums so a rotted pass can't win the gate by computing garbage.
+//!
+//! Gate (full mode; `ENVPOOL_BENCH_QUICK=1` runs the shapes but skips
+//! the assertion): batched at auto width >= 1.5x scalar-lane. End-to-end
+//! `Pong-v5` forloop-vec rows (width 1 vs auto) are recorded for the
+//! snapshot without a gate, as calibration context.
+
+use envpool::bench_util::Bencher;
+use envpool::coordinator::throughput::run_throughput_lanes;
+use envpool::envs::atari::game::Game;
+use envpool::envs::atari::pong::Pong;
+use envpool::envs::vector::{LaneGame, PongLanes};
+use envpool::metrics::table::{fmt_fps, Table};
+use envpool::rng::Pcg32;
+use envpool::simd::LanePass;
+
+/// Lane count (Table 2's large-batch column).
+const N: usize = 256;
+
+/// Per-lane game RNG streams, keyed exactly as the engine keys them
+/// (`preproc::game_rng`: seed ^ "ATAR", stream = env id).
+fn game_rngs(seed: u64) -> Vec<Pcg32> {
+    (0..N).map(|l| Pcg32::new(seed ^ 0x4154_4152, l as u64)).collect()
+}
+
+/// Deterministic `[tick, lane]` action tape shared by every timed path.
+fn action_tape(ticks: usize) -> Vec<usize> {
+    let mut rng = Pcg32::new(0xAC_7A9E, 1);
+    (0..ticks * N).map(|_| rng.below(6) as usize).collect()
+}
+
+/// Reward/done checksum — rewards are small integers, so f64 summation
+/// is exact and any cross-path divergence is a hard mismatch.
+#[derive(PartialEq, Debug, Default)]
+struct Checksum {
+    reward: f64,
+    dones: u64,
+}
+
+/// Tick the scalar reference lanes through the whole tape.
+fn run_scalar(ticks: usize, tape: &[usize]) -> Checksum {
+    let mut games: Vec<Pong> = (0..N).map(|_| Pong::new()).collect();
+    let mut rngs = game_rngs(7);
+    for (g, r) in games.iter_mut().zip(rngs.iter_mut()) {
+        g.reset(r);
+    }
+    let mut sum = Checksum::default();
+    for t in 0..ticks {
+        for l in 0..N {
+            let (rew, over) = games[l].tick(tape[t * N + l], &mut rngs[l]);
+            sum.reward += rew as f64;
+            if over {
+                sum.dones += 1;
+                games[l].reset(&mut rngs[l]);
+            }
+        }
+    }
+    sum
+}
+
+/// Tick the SoA batch through the whole tape at one lane-group width.
+fn run_batched<const W: usize>(ticks: usize, tape: &[usize]) -> Checksum {
+    let mut lanes = PongLanes::new(N);
+    let mut rngs = game_rngs(7);
+    for l in 0..N {
+        lanes.reset_lane(l, &mut rngs[l]);
+    }
+    let step = vec![1u8; N];
+    let mut rew = vec![0.0f32; N];
+    let mut done = vec![0u8; N];
+    let mut sum = Checksum::default();
+    for t in 0..ticks {
+        lanes.tick_pass::<W>(&tape[t * N..(t + 1) * N], &step, &mut rngs, &mut rew, &mut done);
+        for l in 0..N {
+            sum.reward += rew[l] as f64;
+            if done[l] != 0 {
+                sum.dones += 1;
+                lanes.reset_lane(l, &mut rngs[l]);
+            }
+        }
+    }
+    sum
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("ENVPOOL_BENCH_QUICK").is_ok();
+    let ticks: usize = if quick { 500 } else { 20_000 };
+    let tape = action_tape(ticks);
+    let units = (ticks * N) as f64; // lane-ticks per invocation
+
+    println!("== Table 2j: Pong emulator tick pass (N={N}, {ticks} ticks) lane-ticks/s ==");
+    let mut ref_sum = Checksum::default();
+    let rs = b.run("table2j/tick/scalar_lanes", units, || {
+        ref_sum = run_scalar(ticks, &tape);
+        std::hint::black_box(&ref_sum);
+    });
+    let mut rows = Vec::new();
+    let mut by_width = |name: &str, w: usize| {
+        let mut sum = Checksum::default();
+        let r = b.run(&format!("table2j/tick/batched_w{w}{name}"), units, || {
+            sum = match w {
+                8 => run_batched::<8>(ticks, &tape),
+                4 => run_batched::<4>(ticks, &tape),
+                _ => run_batched::<1>(ticks, &tape),
+            };
+            std::hint::black_box(&sum);
+        });
+        assert_eq!(
+            sum, ref_sum,
+            "batched W={w} trajectories diverged from the scalar reference"
+        );
+        rows.push((format!("batched tick pass W={w}{name}"), r.throughput()));
+        r
+    };
+    by_width("", 1);
+    by_width("", 4);
+    by_width("", 8);
+    let auto_w = LanePass::Auto.width();
+    let ra = by_width("_auto", auto_w);
+    let gate = ra.throughput() / rs.throughput();
+
+    let mut t = Table::new(["Path", "lane-ticks/s", "vs scalar-lane"]);
+    t.row(["scalar-lane tick loop".into(), fmt_fps(rs.throughput()), "1.00x".into()]);
+    for (name, tput) in &rows {
+        t.row([name.clone(), fmt_fps(*tput), format!("{:.2}x", tput / rs.throughput())]);
+    }
+    println!("{}", t.render());
+
+    // End-to-end context rows (no gate): the full Pong-v5 step with
+    // renders + slab preprocessing, emulator at width 1 vs auto. The
+    // expected delta here is small — see the module docs.
+    let e2e_steps: u64 = if quick { 1_024 } else { 32_000 };
+    println!("== Table 2j context: Pong-v5 forloop-vec N={N} end-to-end env-steps/s ==");
+    for (tag, lp) in [("w1", LanePass::Scalar), ("auto", LanePass::Auto)] {
+        b.run(&format!("table2j/e2e/forloop-vec_{tag}"), e2e_steps as f64, || {
+            let f = run_throughput_lanes("Pong-v5", "forloop-vec", N, N, 1, e2e_steps, 0, lp)
+                .unwrap();
+            std::hint::black_box(f);
+        });
+    }
+
+    b.write_snapshot("table2j").unwrap();
+
+    if quick {
+        println!("(quick mode: skipping the Table 2j acceptance assertion)");
+    } else {
+        assert!(
+            gate >= 1.5,
+            "acceptance gate failed: batched(auto W={auto_w})/scalar-lane = {gate:.2}x < 1.5x"
+        );
+        println!("acceptance gate OK: batched(auto W={auto_w})/scalar-lane = {gate:.2}x");
+    }
+}

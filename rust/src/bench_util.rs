@@ -174,23 +174,112 @@ fn json_num(x: f64) -> String {
     if x.is_finite() { format!("{x}") } else { "null".to_string() }
 }
 
-/// Commit the snapshot is measured at: `$GITHUB_SHA` in CI, else
-/// `git rev-parse HEAD`, else `"unknown"` (benches must not fail over
-/// provenance metadata).
+/// Commit the snapshot is measured at. Resolution order:
+///
+/// 1. `$GITHUB_SHA` (GitHub Actions), then `$GIT_COMMIT` (Jenkins and
+///    most other CI systems) — first non-empty wins.
+/// 2. `git rev-parse HEAD` (needs a `git` binary on `PATH`).
+/// 3. Reading the repository metadata directly: `$GIT_DIR` if set, else
+///    `.git` in the working directory, else `../.git` (bench targets run
+///    from `rust/`, one level below the repo root). Handles detached
+///    heads, loose refs, packed refs and `gitdir:` worktree indirection.
+/// 4. `"unknown"` — benches must not fail over provenance metadata.
+///
+/// The filesystem fallback matters in minimal containers: the CI
+/// snapshot check flags all-`null` measurement rows, and a snapshot
+/// that can't name its commit is almost as useless as one with no
+/// numbers.
 fn git_sha() -> String {
-    if let Ok(s) = std::env::var("GITHUB_SHA") {
-        if !s.is_empty() {
-            return s;
+    for var in ["GITHUB_SHA", "GIT_COMMIT"] {
+        if let Ok(s) = std::env::var(var) {
+            let s = s.trim().to_string();
+            if !s.is_empty() {
+                return s;
+            }
         }
     }
-    std::process::Command::new("git")
+    if let Some(s) = std::process::Command::new("git")
         .args(["rev-parse", "HEAD"])
         .output()
         .ok()
         .filter(|o| o.status.success())
         .and_then(|o| String::from_utf8(o.stdout).ok())
         .map(|s| s.trim().to_string())
-        .unwrap_or_else(|| "unknown".to_string())
+        .filter(|s| !s.is_empty())
+    {
+        return s;
+    }
+    let candidates: Vec<PathBuf> = std::env::var("GIT_DIR")
+        .ok()
+        .map(PathBuf::from)
+        .into_iter()
+        .chain([PathBuf::from(".git"), PathBuf::from("../.git")])
+        .collect();
+    for cand in candidates {
+        if let Some(dir) = resolve_git_dir(&cand) {
+            if let Some(sha) = sha_from_git_dir(&dir) {
+                return sha;
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+/// Resolve a `.git` path to the actual git directory. A worktree's
+/// `.git` is a *file* containing `gitdir: <path>`; follow one level of
+/// that indirection (relative paths resolve against the gitfile's
+/// parent).
+fn resolve_git_dir(path: &Path) -> Option<PathBuf> {
+    if path.is_dir() {
+        return Some(path.to_path_buf());
+    }
+    if path.is_file() {
+        let body = std::fs::read_to_string(path).ok()?;
+        let target = body.strip_prefix("gitdir:")?.trim();
+        let target = Path::new(target);
+        let dir = if target.is_absolute() {
+            target.to_path_buf()
+        } else {
+            path.parent()?.join(target)
+        };
+        return dir.is_dir().then_some(dir);
+    }
+    None
+}
+
+/// Read `HEAD` out of a resolved git directory: a detached HEAD is the
+/// sha itself; a `ref: <name>` line is followed through the loose ref
+/// file, then `packed-refs` (skipping `#` comments and `^` peel lines).
+fn sha_from_git_dir(dir: &Path) -> Option<String> {
+    let head = std::fs::read_to_string(dir.join("HEAD")).ok()?;
+    let head = head.trim();
+    if let Some(refname) = head.strip_prefix("ref:") {
+        let refname = refname.trim();
+        if let Ok(s) = std::fs::read_to_string(dir.join(refname)) {
+            let s = s.trim().to_string();
+            if looks_like_sha(&s) {
+                return Some(s);
+            }
+        }
+        let packed = std::fs::read_to_string(dir.join("packed-refs")).ok()?;
+        for line in packed.lines() {
+            if line.starts_with('#') || line.starts_with('^') {
+                continue;
+            }
+            if let Some((sha, name)) = line.split_once(' ') {
+                if name.trim() == refname && looks_like_sha(sha.trim()) {
+                    return Some(sha.trim().to_string());
+                }
+            }
+        }
+        return None;
+    }
+    looks_like_sha(head).then(|| head.to_string())
+}
+
+/// 40+ hex chars (SHA-1 now, SHA-256 repos later).
+fn looks_like_sha(s: &str) -> bool {
+    s.len() >= 40 && s.chars().all(|c| c.is_ascii_hexdigit())
 }
 
 #[cfg(test)]
@@ -240,5 +329,94 @@ mod tests {
         assert_eq!(json_num(f64::NAN), "null");
         assert_eq!(json_num(f64::INFINITY), "null");
         assert_eq!(json_num(1.5), "1.5");
+    }
+
+    #[test]
+    fn sha_shape_check() {
+        assert!(looks_like_sha("0123456789abcdef0123456789abcdef01234567"));
+        assert!(looks_like_sha(&"a".repeat(64))); // SHA-256 repo format
+        assert!(!looks_like_sha("deadbeef")); // too short
+        assert!(!looks_like_sha(&"g".repeat(40))); // not hex
+        assert!(!looks_like_sha("ref: refs/heads/main"));
+    }
+
+    /// Build a throwaway fake `.git` directory for the fallback tests.
+    fn fake_git_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("envpool_gitsha_{}_{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("refs/heads")).unwrap();
+        dir
+    }
+
+    #[test]
+    fn detached_head_resolves_directly() {
+        let sha = "1111111111111111111111111111111111111111";
+        let dir = fake_git_dir("detached");
+        std::fs::write(dir.join("HEAD"), format!("{sha}\n")).unwrap();
+        assert_eq!(sha_from_git_dir(&dir).as_deref(), Some(sha));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn loose_ref_resolves_through_head() {
+        let sha = "2222222222222222222222222222222222222222";
+        let dir = fake_git_dir("loose");
+        std::fs::write(dir.join("HEAD"), "ref: refs/heads/main\n").unwrap();
+        std::fs::write(dir.join("refs/heads/main"), format!("{sha}\n")).unwrap();
+        assert_eq!(sha_from_git_dir(&dir).as_deref(), Some(sha));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn packed_ref_resolves_when_loose_ref_missing() {
+        let sha = "3333333333333333333333333333333333333333";
+        let peel = "4444444444444444444444444444444444444444";
+        let dir = fake_git_dir("packed");
+        std::fs::write(dir.join("HEAD"), "ref: refs/heads/main\n").unwrap();
+        std::fs::write(
+            dir.join("packed-refs"),
+            format!(
+                "# pack-refs with: peeled fully-peeled sorted\n\
+                 {sha} refs/heads/main\n^{peel}\n\
+                 5555555555555555555555555555555555555555 refs/heads/other\n"
+            ),
+        )
+        .unwrap();
+        assert_eq!(sha_from_git_dir(&dir).as_deref(), Some(sha));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gitfile_indirection_resolves_relative_target() {
+        let sha = "6666666666666666666666666666666666666666";
+        let real = fake_git_dir("worktree_real");
+        std::fs::write(real.join("HEAD"), format!("{sha}\n")).unwrap();
+        // A worktree checkout: `.git` is a file pointing at the real dir.
+        let wt = std::env::temp_dir()
+            .join(format!("envpool_gitsha_worktree_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&wt);
+        std::fs::create_dir_all(&wt).unwrap();
+        let gitfile = wt.join(".git");
+        std::fs::write(&gitfile, format!("gitdir: {}\n", real.display())).unwrap();
+        let resolved = resolve_git_dir(&gitfile).expect("gitfile should resolve");
+        assert_eq!(sha_from_git_dir(&resolved).as_deref(), Some(sha));
+        // Missing / bogus paths resolve to None, never panic.
+        assert!(resolve_git_dir(&wt.join("nope")).is_none());
+        std::fs::write(wt.join("bogus"), "not a gitfile").unwrap();
+        assert!(resolve_git_dir(&wt.join("bogus")).is_none());
+        std::fs::remove_dir_all(&wt).unwrap();
+        std::fs::remove_dir_all(&real).unwrap();
+    }
+
+    #[test]
+    fn truncated_git_dir_yields_none() {
+        let dir = fake_git_dir("broken");
+        // No HEAD at all.
+        assert!(sha_from_git_dir(&dir).is_none());
+        // HEAD points at a ref that exists nowhere (no loose, no packed).
+        std::fs::write(dir.join("HEAD"), "ref: refs/heads/gone\n").unwrap();
+        assert!(sha_from_git_dir(&dir).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

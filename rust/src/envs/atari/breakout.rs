@@ -6,18 +6,20 @@ use super::game::{Game, Rect};
 use super::NATIVE;
 use crate::rng::Pcg32;
 
-const ROWS: usize = 6;
-const COLS: usize = 18;
-const BRICK_W: f32 = NATIVE as f32 / COLS as f32;
-const BRICK_H: f32 = 5.0;
-const BRICK_TOP: f32 = 30.0;
-const PADDLE_W: f32 = 18.0;
-const PADDLE_H: f32 = 4.0;
-const PADDLE_Y: f32 = NATIVE as f32 - 10.0;
-const BALL: f32 = 3.0;
-const PADDLE_SPEED: f32 = 4.0;
+// Shared with the SoA lane twin (`envs::vector::atari_emulate`), which
+// must reproduce scalar `tick`/`render` bitwise from the same numbers.
+pub(crate) const ROWS: usize = 6;
+pub(crate) const COLS: usize = 18;
+pub(crate) const BRICK_W: f32 = NATIVE as f32 / COLS as f32;
+pub(crate) const BRICK_H: f32 = 5.0;
+pub(crate) const BRICK_TOP: f32 = 30.0;
+pub(crate) const PADDLE_W: f32 = 18.0;
+pub(crate) const PADDLE_H: f32 = 4.0;
+pub(crate) const PADDLE_Y: f32 = NATIVE as f32 - 10.0;
+pub(crate) const BALL: f32 = 3.0;
+pub(crate) const PADDLE_SPEED: f32 = 4.0;
 /// Row scores, top row worth most — matches Atari Breakout (7/7/4/4/1/1).
-const ROW_SCORE: [f32; ROWS] = [7.0, 7.0, 4.0, 4.0, 1.0, 1.0];
+pub(crate) const ROW_SCORE: [f32; ROWS] = [7.0, 7.0, 4.0, 4.0, 1.0, 1.0];
 
 pub struct Breakout {
     bricks: [[bool; COLS]; ROWS],
@@ -234,6 +236,69 @@ mod tests {
         }
         assert!(done, "idle play must end the game");
         assert_eq!(g.lives(), 0);
+    }
+
+    // Rasterization pin on exact hand-computable regions of the fresh
+    // screen (brick-column geometry involves BRICK_W = 168/18 rounding,
+    // so bricks are pinned differentially below instead).
+    #[test]
+    fn render_golden_regions_fresh_game() {
+        let g = Breakout::new(); // paddle centered at 84
+        let mut f = vec![0u8; NATIVE * NATIVE];
+        g.render(&mut f);
+        // Paddle: rect(84, 158, 18, 4) ⇒ x∈[75,93), y∈[156,160).
+        for y in 156..160 {
+            for x in 75..93 {
+                assert_eq!(f[y * NATIVE + x], 220, "paddle at ({x},{y})");
+            }
+            assert_eq!(f[y * NATIVE + 74], 30);
+            assert_eq!(f[y * NATIVE + 93], 30);
+        }
+        // Lives bar: 5 lives · 4 px at (row 2, x=4..24), shade 180.
+        for x in 4..24 {
+            assert_eq!(f[2 * NATIVE + x], 180, "lives bar at x={x}");
+        }
+        assert_eq!(f[2 * NATIVE + 3], 30);
+        assert_eq!(f[2 * NATIVE + 24], 30);
+        // Ball not in play; background above the bricks and below them.
+        assert!(!f.contains(&255));
+        assert_eq!(f[0], 30);
+        assert_eq!(f[29 * NATIVE + 84], 30, "row above brick field");
+        assert_eq!(f[100 * NATIVE + 84], 30, "open field below bricks");
+        // Brick field rows carry the per-row shade ramp 120 + 20r at
+        // each row's vertical center (rows 30..60, 5 px per row).
+        for r in 0..ROWS {
+            let y = (BRICK_TOP + (r as f32 + 0.5) * BRICK_H) as usize;
+            assert_eq!(f[y * NATIVE + 84], 120 + (r * 20) as u8, "brick row {r}");
+        }
+    }
+
+    // Differential brick pin: clearing one brick must turn exactly its
+    // rectangle (and nothing else) from the row shade back to
+    // background, with the area bounded by the brick cell size.
+    #[test]
+    fn render_cleared_brick_restores_background() {
+        let mut g = Breakout::new();
+        let mut before = vec![0u8; NATIVE * NATIVE];
+        g.render(&mut before);
+        g.bricks[2][7] = false;
+        let mut after = vec![0u8; NATIVE * NATIVE];
+        g.render(&mut after);
+        let changed: Vec<usize> =
+            (0..before.len()).filter(|&i| before[i] != after[i]).collect();
+        assert!(
+            (30..=60).contains(&changed.len()),
+            "one brick is ~(BRICK_W-1)×(BRICK_H-1) px, changed {}",
+            changed.len()
+        );
+        for &i in &changed {
+            assert_eq!(before[i], 120 + 2 * 20, "was row-2 shade");
+            assert_eq!(after[i], 30, "now background");
+            let (y, x) = (i / NATIVE, i % NATIVE);
+            // Row 2 occupies y∈[40,45); brick 7 of 18 sits left of center.
+            assert!((40..45).contains(&y), "brick row 2 y bound, got {y}");
+            assert!((60..80).contains(&x), "brick col 7 x bound, got {x}");
+        }
     }
 
     #[test]

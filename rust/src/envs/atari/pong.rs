@@ -6,13 +6,15 @@ use super::game::{Game, Rect};
 use super::NATIVE;
 use crate::rng::Pcg32;
 
-const PADDLE_W: f32 = 4.0;
-const PADDLE_H: f32 = 22.0;
-const BALL: f32 = 4.0;
-const PADDLE_SPEED: f32 = 4.0;
-const AI_SPEED: f32 = 2.6; // slightly slower than the agent: beatable
-const SERVE_DELAY: u32 = 20;
-const WIN_SCORE: u32 = 21;
+// Shared with the SoA lane twin (`envs::vector::atari_emulate`), which
+// must reproduce scalar `tick`/`render` bitwise from the same numbers.
+pub(crate) const PADDLE_W: f32 = 4.0;
+pub(crate) const PADDLE_H: f32 = 22.0;
+pub(crate) const BALL: f32 = 4.0;
+pub(crate) const PADDLE_SPEED: f32 = 4.0;
+pub(crate) const AI_SPEED: f32 = 2.6; // slightly slower than the agent: beatable
+pub(crate) const SERVE_DELAY: u32 = 20;
+pub(crate) const WIN_SCORE: u32 = 21;
 
 pub struct Pong {
     ball: Rect,
@@ -225,5 +227,60 @@ mod tests {
         g.render(&mut f);
         let lit = f.iter().filter(|&&p| p > 100).count();
         assert!(lit > 50, "paddles/line should be visible, {lit} bright px");
+    }
+
+    // Golden rasterization pin for the fresh-game screen. Every term is
+    // integer-exact in f32, so the sum is a hard constant:
+    //   background   28224 px · 44      = 1_241_856
+    //   center line     84 px · (90-44) = +3_864   (21 dashes × 4 rows)
+    //   two paddles  2·88 px · (200-44) = +27_456  (4×22 px each)
+    //   ball hidden (serve_timer = 20), score bars length 0.
+    // The SoA lane rasterizer (`envs::vector::atari_emulate`) must hit
+    // the same constant — it anchors the bitwise claim to real pixels.
+    #[test]
+    fn render_golden_frame_sum_fresh_game() {
+        let g = Pong::new();
+        let mut f = vec![0u8; NATIVE * NATIVE];
+        g.render(&mut f);
+        let sum: u64 = f.iter().map(|&p| p as u64).sum();
+        assert_eq!(sum, 1_273_176);
+        // Paddle bodies, exactly: left x∈[8,12), right x∈[156,160),
+        // both y∈[73,95).
+        for y in 73..95 {
+            for x in 8..12 {
+                assert_eq!(f[y * NATIVE + x], 200, "left paddle at ({x},{y})");
+            }
+            for x in 156..160 {
+                assert_eq!(f[y * NATIVE + x], 200, "right paddle at ({x},{y})");
+            }
+        }
+        assert_eq!(f[72 * NATIVE + 10], 44, "row above paddle is background");
+        assert_eq!(f[95 * NATIVE + 10], 44, "row below paddle is background");
+    }
+
+    // Golden sum for a constructed mid-rally state: ball at integer-
+    // friendly (50, 60) (16 px · 255, away from net/paddles), scores
+    // 2:3 drawn as 6 px + 9 px bars at 160 on row 4.
+    #[test]
+    fn render_golden_frame_sum_ball_and_scores() {
+        let mut g = Pong::new();
+        g.serve_timer = 0;
+        g.ball.x = 50.0;
+        g.ball.y = 60.0;
+        g.score_left = 2;
+        g.score_right = 3;
+        let mut f = vec![0u8; NATIVE * NATIVE];
+        g.render(&mut f);
+        let sum: u64 = f.iter().map(|&p| p as u64).sum();
+        // 1_273_176 + 16·(255-44) + (6+9)·(160-44)
+        assert_eq!(sum, 1_278_292);
+        assert_eq!(f.iter().filter(|&&p| p == 255).count(), 16, "ball is 4×4");
+        // Score bars: left starts at x=20, right ends at x=148.
+        assert_eq!(f[4 * NATIVE + 20], 160);
+        assert_eq!(f[4 * NATIVE + 25], 160);
+        assert_eq!(f[4 * NATIVE + 26], 44);
+        assert_eq!(f[4 * NATIVE + 139], 160);
+        assert_eq!(f[4 * NATIVE + 147], 160);
+        assert_eq!(f[4 * NATIVE + 148], 44);
     }
 }

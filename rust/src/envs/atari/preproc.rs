@@ -9,9 +9,10 @@
 //! emulator phase and a pure pixel phase:
 //!
 //! - [`PreprocCore::step_emulate`] / [`PreprocCore::reset_emulate`] —
-//!   emulator ticks and native renders (inherently scalar per lane,
-//!   data-dependent control flow), producing an [`EmulatePhase`]
-//!   record;
+//!   emulator ticks and native renders, producing an [`EmulatePhase`]
+//!   record. The scalar methods here are the *reference*; the batched
+//!   kernel replaces them with masked SoA lane-group tick passes
+//!   (`envs::vector::atari_emulate`) that are bitwise identical;
 //! - [`PreprocCore::step_finish`] / [`PreprocCore::reset_finish`] —
 //!   the pure lane math (2-frame max-pool, 2×2 max downsample, stack
 //!   push, episodic-life/truncation bookkeeping) over caller-owned
@@ -39,13 +40,26 @@ pub(crate) const MAX_STEPS: usize = 27_000;
 /// The spec of an Atari task over `game` (shared by scalar env and
 /// batched kernel).
 pub(crate) fn spec_for<G: Game>(game: &G) -> EnvSpec {
+    spec_for_parts(game.name(), game.n_actions())
+}
+
+/// [`spec_for`] without a game instance — the batched kernel builds its
+/// spec from the lane state's name/action count, even at zero lanes.
+pub(crate) fn spec_for_parts(name: &str, n_actions: usize) -> EnvSpec {
     EnvSpec {
-        id: format!("{}-v5", game.name()),
+        id: format!("{name}-v5"),
         obs_shape: vec![STACK, SCREEN, SCREEN],
-        action_space: ActionSpace::Discrete(game.n_actions()),
+        action_space: ActionSpace::Discrete(n_actions),
         max_episode_steps: MAX_STEPS,
         groups: vec![],
     }
+}
+
+/// The per-env *game* RNG stream. One shared constructor so the scalar
+/// env and the batched emulator draw the identical `Pcg32` sequence for
+/// lane `env_id` (the salt is ASCII `ATAR`).
+pub(crate) fn game_rng(seed: u64, env_id: u64) -> Pcg32 {
+    Pcg32::new(seed ^ 0x41544152, env_id)
 }
 
 /// Result of the emulator phase of one step: everything the pixel
@@ -65,15 +79,17 @@ pub(crate) struct EmulatePhase {
     pub lives: u32,
 }
 
-/// One environment's preprocessing **control** state: RNG stream,
-/// stack-ring head, step/life counters. All the semantics of an Atari
-/// env step (frameskip, max-pool, episodic life, truncation) live in
-/// the methods here; the pixel buffers (two native frames + the stack
+/// One environment's preprocessing **control** state: stack-ring head,
+/// step/life counters. All the semantics of an Atari env step
+/// (frameskip, max-pool, episodic life, truncation) live in the
+/// methods here; the pixel buffers (two native frames + the stack
 /// ring) are borrowed per call, so the scalar env can own them per
 /// lane while the batched kernel packs every lane into one contiguous
-/// slab (see module docs).
+/// slab (see module docs). The *game* RNG is likewise borrowed (built
+/// via [`game_rng`]): the scalar [`PreprocState`] owns one per env,
+/// the batched kernel owns one per lane so its lane passes can draw
+/// per-lane in lane order.
 pub(crate) struct PreprocCore {
-    rng: Pcg32,
     /// Index of the *newest* plane in the stack ring.
     head: usize,
     steps: usize,
@@ -83,15 +99,12 @@ pub(crate) struct PreprocCore {
 }
 
 impl PreprocCore {
-    pub(crate) fn new(n_actions: usize, seed: u64, env_id: u64) -> Self {
-        PreprocCore {
-            rng: Pcg32::new(seed ^ 0x41544152, env_id),
-            head: 0,
-            steps: 0,
-            episodic_life: false,
-            lives: 0,
-            n_actions,
-        }
+    pub(crate) fn new(n_actions: usize) -> Self {
+        PreprocCore { head: 0, steps: 0, episodic_life: false, lives: 0, n_actions }
+    }
+
+    pub(crate) fn n_actions(&self) -> usize {
+        self.n_actions
     }
 
     pub(crate) fn set_episodic_life(&mut self, on: bool) {
@@ -118,15 +131,35 @@ impl PreprocCore {
         }
     }
 
+    /// Does a reset need a **full** game reset (vs. the episodic-life
+    /// continuation, which keeps the game running)? `lives` is the
+    /// game's current life counter.
+    pub(crate) fn reset_wants_full(&self, lives: u32) -> bool {
+        !self.episodic_life || lives == 0 || self.steps == 0
+    }
+
+    /// Episode-start bookkeeping shared by every reset path: snapshot
+    /// the life counter, zero the step count.
+    pub(crate) fn begin_episode(&mut self, lives: u32) {
+        self.lives = lives;
+        self.steps = 0;
+    }
+
     /// Emulator half of a reset: full game reset only when the game is
     /// actually over (episodic-life continuation otherwise, as the
-    /// standard wrapper does), then the first native render.
-    pub(crate) fn reset_emulate<G: Game>(&mut self, game: &mut G, frame_a: &mut [u8]) {
-        if !self.episodic_life || game.lives() == 0 || self.steps == 0 {
-            game.reset(&mut self.rng);
+    /// standard wrapper does), then the first native render. The
+    /// batched kernel runs the same [`Self::reset_wants_full`] /
+    /// [`Self::begin_episode`] protocol against its lane state.
+    pub(crate) fn reset_emulate<G: Game>(
+        &mut self,
+        game: &mut G,
+        rng: &mut Pcg32,
+        frame_a: &mut [u8],
+    ) {
+        if self.reset_wants_full(game.lives()) {
+            game.reset(rng);
         }
-        self.lives = game.lives();
-        self.steps = 0;
+        self.begin_episode(game.lives());
         game.render(frame_a);
     }
 
@@ -139,17 +172,26 @@ impl PreprocCore {
 
     /// Full reset (scalar path); the batched kernel runs the two halves
     /// in its phased loops instead.
-    pub(crate) fn reset<G: Game>(&mut self, game: &mut G, frame_a: &mut [u8], stack: &mut [f32]) {
-        self.reset_emulate(game, frame_a);
+    pub(crate) fn reset<G: Game>(
+        &mut self,
+        game: &mut G,
+        rng: &mut Pcg32,
+        frame_a: &mut [u8],
+        stack: &mut [f32],
+    ) {
+        self.reset_emulate(game, rng, frame_a);
         self.reset_finish(frame_a, stack);
     }
 
     /// Emulator half of a step: frameskip ticks + native renders. No
     /// pixel math happens here — the caller completes the step with
-    /// [`Self::step_finish`].
+    /// [`Self::step_finish`]. The batched twin is
+    /// `vector::atari_emulate::step_emulate_batch`, which runs this
+    /// exact skip protocol as masked lane-group tick passes.
     pub(crate) fn step_emulate<G: Game>(
         &mut self,
         game: &mut G,
+        rng: &mut Pcg32,
         action: &[f32],
         frame_a: &mut [u8],
         frame_b: &mut [u8],
@@ -161,7 +203,7 @@ impl PreprocCore {
         // frameskip with max-pool of the last two frames (the pool
         // itself is deferred to the pixel phase)
         for k in 0..FRAMESKIP {
-            let (r, d) = game.tick(a, &mut self.rng);
+            let (r, d) = game.tick(a, rng);
             reward += r;
             if k == FRAMESKIP - 2 {
                 game.render(frame_b);
@@ -217,6 +259,8 @@ impl PreprocCore {
 /// path, so the two stay bitwise identical.
 pub(crate) struct PreprocState {
     core: PreprocCore,
+    /// The game's RNG stream (see [`game_rng`]).
+    rng: Pcg32,
     /// Two native frame buffers for the flicker max-pool.
     frame_a: Vec<u8>,
     frame_b: Vec<u8>,
@@ -227,7 +271,8 @@ pub(crate) struct PreprocState {
 impl PreprocState {
     pub(crate) fn new(n_actions: usize, seed: u64, env_id: u64) -> Self {
         PreprocState {
-            core: PreprocCore::new(n_actions, seed, env_id),
+            core: PreprocCore::new(n_actions),
+            rng: game_rng(seed, env_id),
             frame_a: vec![0; NATIVE * NATIVE],
             frame_b: vec![0; NATIVE * NATIVE],
             stack: vec![0.0; STACK * SCREEN * SCREEN],
@@ -245,14 +290,20 @@ impl PreprocState {
 
     /// Reset the episode (see [`PreprocCore::reset`]).
     pub(crate) fn reset<G: Game>(&mut self, game: &mut G) {
-        self.core.reset(game, &mut self.frame_a, &mut self.stack);
+        self.core.reset(game, &mut self.rng, &mut self.frame_a, &mut self.stack);
     }
 
     /// One env step: frameskip with max-pool, episodic-life handling,
     /// truncation. The caller writes the observation afterwards via
     /// [`Self::write_obs`].
     pub(crate) fn step<G: Game>(&mut self, game: &mut G, action: &[f32]) -> Step {
-        let ph = self.core.step_emulate(game, action, &mut self.frame_a, &mut self.frame_b);
+        let ph = self.core.step_emulate(
+            game,
+            &mut self.rng,
+            action,
+            &mut self.frame_a,
+            &mut self.frame_b,
+        );
         self.core.step_finish(&mut self.frame_a, &self.frame_b, &mut self.stack, ph)
     }
 }

@@ -161,8 +161,9 @@ pub fn spec_for_wrapped(task_id: &str, wrap: &WrapConfig) -> Result<EnvSpec> {
 /// classic control to struct-of-arrays kernels (bitwise identical to the
 /// scalar envs), the walkers to [`WalkerVec`] (batch-resident
 /// `WorldBatch` physics, lane-grouped solver; bitwise at width 1,
-/// documented tolerance budget at wider lanes), Atari to the batched
-/// [`AtariVec`](super::vector::AtariVec) adapter (bitwise), and
+/// documented tolerance budget at wider lanes), Atari to
+/// [`AtariVec`](super::vector::AtariVec) (SoA game state, masked
+/// lane-group emulator passes — bitwise at every width), and
 /// `cheetah_run` to [`CheetahRunVec`]. There is **no scalar fallback**;
 /// [`super::vector::ScalarVec`] is an explicit opt-in for
 /// out-of-registry envs.

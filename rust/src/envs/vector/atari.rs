@@ -4,14 +4,18 @@
 //!
 //! CuLE's observation is that the win for Atari comes from batching the
 //! *simulator loop itself* — emulator ticks plus preprocessing — not
-//! just the transport. [`AtariVec`] owns the lanes' games plus one
-//! **contiguous pixel slab** (all native frames and stack rings packed
-//! lane-major) and serves a whole chunk per dispatch in three phases:
+//! just the transport. [`AtariVec`] owns the lanes' SoA game state
+//! ([`LaneGame`]) plus one **contiguous pixel slab** (all native frames
+//! and stack rings packed lane-major) and serves a whole chunk per
+//! dispatch in three phases:
 //!
-//! 1. **Emulate** (scalar per lane — data-dependent control flow):
-//!    frameskip ticks + native renders via
-//!    [`PreprocCore::step_emulate`], recording an [`EmulatePhase`] per
-//!    lane in a preallocated scratch row (no per-step allocation).
+//! 1. **Emulate** (batched): the frameskip loop runs as masked
+//!    lane-group tick passes over the SoA game state
+//!    ([`step_emulate_batch`] /
+//!    [`LaneGame::tick_pass`]) at the configured
+//!    [`LanePass`] width, recording an [`EmulatePhase`] per lane in a
+//!    preallocated scratch row (no per-step allocation). Reset lanes
+//!    take the scalar per-lane reset path first and sit out the pass.
 //! 2. **Pixel pass** (pure lane math, contiguous): 2-frame max-pool,
 //!    2×2 max downsample and stack push for every lane back-to-back
 //!    via [`PreprocCore::step_finish`] — the slab keeps the pass
@@ -22,30 +26,35 @@
 //!
 //! Preprocessing semantics live in one place —
 //! [`PreprocCore`](crate::envs::atari::preproc) — shared verbatim with
-//! the scalar [`AtariEnv`](crate::envs::atari::AtariEnv), so this path
-//! is **bitwise identical** to stepping `K` scalar envs (pinned by
-//! `tests/vector_parity.rs` and the in-file tests). Deferring a lane's
-//! pixel phase behind other lanes' emulator phases is safe because the
-//! phases share no state: the emulate phase never reads the stack and
-//! the pixel phase never touches the game.
+//! the scalar [`AtariEnv`](crate::envs::atari::AtariEnv), and the lane
+//! passes are bitwise twins of the scalar games **at every width**
+//! (see `atari_emulate`), so this path is **bitwise identical** to
+//! stepping `K` scalar envs (pinned by `tests/vector_parity.rs`,
+//! `tests/atari_emulate_parity.rs` and the in-file tests).
 
+use super::atari_emulate::{step_emulate_batch, BreakoutLanes, EmulateScratch, LaneGame, PongLanes};
 use super::{ObsArena, VecEnv};
-use crate::envs::atari::game::Game;
-use crate::envs::atari::preproc::{spec_for, EmulatePhase, PreprocCore};
-use crate::envs::atari::{breakout::Breakout, pong::Pong, NATIVE, SCREEN, STACK};
+use crate::envs::atari::preproc::{game_rng, spec_for_parts, EmulatePhase, PreprocCore};
+use crate::envs::atari::{NATIVE, SCREEN, STACK};
 use crate::envs::env::Step;
 use crate::envs::spec::EnvSpec;
+use crate::rng::Pcg32;
+use crate::simd::LanePass;
 
 /// Bytes of one native frame plane.
 const FRAME: usize = NATIVE * NATIVE;
 /// Floats of one lane's stack ring.
 const RING: usize = STACK * SCREEN * SCREEN;
 
-/// SoA-of-lanes Atari batch: `K` games stepped per dispatch, pixel
-/// state packed into contiguous lane-major slabs.
-pub struct AtariVec<G: Game> {
+/// SoA-of-lanes Atari batch: `K` games stepped per dispatch through
+/// masked lane-group tick passes, pixel state packed into contiguous
+/// lane-major slabs.
+pub struct AtariVec<L: LaneGame> {
     spec: EnvSpec,
-    games: Vec<G>,
+    pub(crate) lanes: L,
+    /// Per-lane game RNG streams (keyed by env id exactly as the scalar
+    /// constructor does — see [`game_rng`]).
+    rngs: Vec<Pcg32>,
     ctl: Vec<PreprocCore>,
     /// `[K, NATIVE²]` newest native frames (pooled in place).
     frames_a: Vec<u8>,
@@ -56,70 +65,95 @@ pub struct AtariVec<G: Game> {
     /// Per-dispatch emulate-phase results (`None` marks a reset lane);
     /// preallocated so `step_batch` never allocates.
     phases: Vec<Option<EmulatePhase>>,
+    scratch: EmulateScratch,
+    /// Lane-group width for the emulator tick passes (bitwise identical
+    /// at every width; see `atari_emulate`).
+    width: usize,
 }
 
-impl<G: Game> AtariVec<G> {
-    /// Batch of `count` envs built by `make`, with global ids
-    /// `first_env_id..+count` (RNG streams keyed per id, exactly as the
-    /// scalar constructor does).
-    pub fn new(
-        make: impl Fn() -> G,
-        seed: u64,
-        first_env_id: u64,
-        count: usize,
-        episodic_life: bool,
-    ) -> Self {
-        let games: Vec<G> = (0..count).map(|_| make()).collect();
-        let ctl: Vec<PreprocCore> = games
-            .iter()
-            .enumerate()
-            .map(|(l, game)| {
-                let mut c = PreprocCore::new(game.n_actions(), seed, first_env_id + l as u64);
+impl<L: LaneGame> AtariVec<L> {
+    /// Batch over `lanes`, with global ids `first_env_id..+count` (RNG
+    /// streams keyed per id, exactly as the scalar constructor does).
+    pub fn new(lanes: L, seed: u64, first_env_id: u64, episodic_life: bool) -> Self {
+        let count = lanes.count();
+        let rngs: Vec<Pcg32> =
+            (0..count).map(|l| game_rng(seed, first_env_id + l as u64)).collect();
+        let ctl: Vec<PreprocCore> = (0..count)
+            .map(|_| {
+                let mut c = PreprocCore::new(lanes.n_actions());
                 c.set_episodic_life(episodic_life);
                 c
             })
             .collect();
-        // Derive the spec from lane 0 (a probe instance only for the
-        // degenerate empty batch).
-        let spec = match games.first() {
-            Some(g) => spec_for(g),
-            None => spec_for(&make()),
-        };
+        let spec = spec_for_parts(lanes.name(), lanes.n_actions());
         AtariVec {
             spec,
-            games,
+            lanes,
+            rngs,
             ctl,
             frames_a: vec![0; count * FRAME],
             frames_b: vec![0; count * FRAME],
             stacks: vec![0.0; count * RING],
             phases: vec![None; count],
+            scratch: EmulateScratch::new(count),
+            width: LanePass::Scalar.width(),
         }
+    }
+
+    /// Emulator half of a reset for one lane: full game reset only when
+    /// the episodic-life continuation doesn't apply (the batched twin
+    /// of [`PreprocCore::reset_emulate`], same predicate, same single
+    /// RNG draw), then the first native render into the slab.
+    fn reset_emulate_lane(&mut self, lane: usize) {
+        if self.ctl[lane].reset_wants_full(self.lanes.lives(lane)) {
+            self.lanes.reset_lane(lane, &mut self.rngs[lane]);
+        }
+        self.ctl[lane].begin_episode(self.lanes.lives(lane));
+        self.lanes.render_lane(lane, &mut self.frames_a[lane * FRAME..(lane + 1) * FRAME]);
+    }
+
+    /// The batched emulator phase at one monomorphized width.
+    fn emulate_batch<const W: usize>(&mut self, actions: &[f32]) {
+        step_emulate_batch::<L, W>(
+            &mut self.lanes,
+            &mut self.rngs,
+            actions,
+            &mut self.scratch,
+            &mut self.frames_a,
+            &mut self.frames_b,
+            &mut self.phases,
+        );
     }
 }
 
 /// Batched `Pong-v5` (same construction flags as `preproc::pong`).
-pub fn pong_vec(seed: u64, first_env_id: u64, count: usize) -> AtariVec<Pong> {
-    AtariVec::new(Pong::new, seed, first_env_id, count, false)
+pub fn pong_vec(seed: u64, first_env_id: u64, count: usize) -> AtariVec<PongLanes> {
+    AtariVec::new(PongLanes::new(count), seed, first_env_id, false)
 }
 
 /// Batched `Breakout-v5` (episodic-life on, as `preproc::breakout`).
-pub fn breakout_vec(seed: u64, first_env_id: u64, count: usize) -> AtariVec<Breakout> {
-    AtariVec::new(Breakout::new, seed, first_env_id, count, true)
+pub fn breakout_vec(seed: u64, first_env_id: u64, count: usize) -> AtariVec<BreakoutLanes> {
+    AtariVec::new(BreakoutLanes::new(count), seed, first_env_id, true)
 }
 
-impl<G: Game> VecEnv for AtariVec<G> {
+impl<L: LaneGame> VecEnv for AtariVec<L> {
     fn spec(&self) -> &EnvSpec {
         &self.spec
     }
 
     fn num_envs(&self) -> usize {
-        self.games.len()
+        self.lanes.count()
+    }
+
+    fn set_lane_pass(&mut self, lane_pass: LanePass) {
+        self.width = lane_pass.width();
     }
 
     fn reset_lane(&mut self, lane: usize, obs: &mut [f32]) {
-        let fa = &mut self.frames_a[lane * FRAME..(lane + 1) * FRAME];
+        self.reset_emulate_lane(lane);
+        let fa = &self.frames_a[lane * FRAME..(lane + 1) * FRAME];
         let stack = &mut self.stacks[lane * RING..(lane + 1) * RING];
-        self.ctl[lane].reset(&mut self.games[lane], fa, stack);
+        self.ctl[lane].reset_finish(fa, stack);
         self.ctl[lane].write_obs(stack, obs);
     }
 
@@ -130,26 +164,26 @@ impl<G: Game> VecEnv for AtariVec<G> {
         arena: &mut dyn ObsArena,
         out: &mut [Step],
     ) {
-        let k = self.games.len();
+        let k = self.lanes.count();
         debug_assert_eq!(actions.len(), k);
         debug_assert_eq!(reset_mask.len(), k);
         debug_assert_eq!(out.len(), k);
 
-        // Phase 1 — emulator lanes (scalar): ticks + native renders.
+        // Phase 1 — emulator. Reset lanes take the scalar per-lane
+        // reset path (rare, data-dependent, one RNG draw) and sit out
+        // the pass; everyone else goes through the batched frameskip
+        // driver at the configured lane-group width.
         for lane in 0..k {
-            let fa = &mut self.frames_a[lane * FRAME..(lane + 1) * FRAME];
-            self.phases[lane] = if reset_mask[lane] != 0 {
-                self.ctl[lane].reset_emulate(&mut self.games[lane], fa);
-                None
-            } else {
-                let fb = &mut self.frames_b[lane * FRAME..(lane + 1) * FRAME];
-                Some(self.ctl[lane].step_emulate(
-                    &mut self.games[lane],
-                    &actions[lane..lane + 1],
-                    fa,
-                    fb,
-                ))
-            };
+            self.scratch.skip[lane] = (reset_mask[lane] == 0) as u8;
+            if reset_mask[lane] != 0 {
+                self.phases[lane] = None;
+                self.reset_emulate_lane(lane);
+            }
+        }
+        match self.width {
+            8 => self.emulate_batch::<8>(actions),
+            4 => self.emulate_batch::<4>(actions),
+            _ => self.emulate_batch::<1>(actions),
         }
 
         // Phase 2 — SoA pixel pass: max-pool + downsample + stack push,
@@ -213,6 +247,43 @@ mod tests {
     }
 
     #[test]
+    fn pong_vec_bitwise_at_every_lane_width() {
+        // The emulator lane pass must not change a single bit across
+        // widths: run the same action tape at widths 1/4/8 and compare
+        // rewards/dones/obs bit for bit.
+        let run = |lp: LanePass| {
+            let n = 5;
+            let mut v = pong_vec(17, 0, n);
+            v.set_lane_pass(lp);
+            let dim = v.spec().obs_dim();
+            let mut obs = vec![0.0f32; n * dim];
+            for l in 0..n {
+                let row = &mut obs[l * dim..(l + 1) * dim];
+                v.reset_lane(l, row);
+            }
+            let mask = vec![0u8; n];
+            let mut results = vec![Step::default(); n];
+            let mut sig: Vec<u32> = Vec::new();
+            for t in 0..40 {
+                let actions: Vec<f32> = (0..n).map(|l| ((t + 2 * l) % 6) as f32).collect();
+                let mut arena = SliceArena::new(&mut obs, dim);
+                v.step_batch(&actions, &mask, &mut arena, &mut results);
+                drop(arena);
+                for r in &results {
+                    sig.push(r.reward.to_bits());
+                    sig.push(r.done as u32);
+                }
+                sig.push(obs[dim / 2].to_bits());
+                sig.push(obs[3 * dim + 7].to_bits());
+            }
+            sig
+        };
+        let w1 = run(LanePass::Scalar);
+        assert_eq!(w1, run(LanePass::Width4), "width 4 diverged from width 1");
+        assert_eq!(w1, run(LanePass::Width8), "width 8 diverged from width 1");
+    }
+
+    #[test]
     fn masked_reset_lanes_match_scalar_resets_bitwise() {
         // The phased slab path must keep reset lanes (emulate-half +
         // pixel-half split across the batch phases) bitwise identical
@@ -270,7 +341,7 @@ mod tests {
                 v.step_batch(&[1.0], &mask, &mut arena, &mut results);
             }
             if results[0].done {
-                assert!(v.games[0].lives() > 0, "episodic life ends before game over");
+                assert!(v.lanes.lives(0) > 0, "episodic life ends before game over");
                 return;
             }
             mask[0] = results[0].finished() as u8;

@@ -1,0 +1,871 @@
+//! Batched Atari emulation: SoA game state with masked lane-group tick
+//! passes (the CuLE construction — see PAPERS.md).
+//!
+//! The scalar [`Game`](crate::envs::atari::game::Game) impls advance
+//! one lane per call through data-dependent branches. This module holds
+//! the *same* game state laid out struct-of-arrays — one `[lane]` array
+//! per field — and advances a whole lane group per native frame with
+//! branches converted to [`Mask`] selects over [`F32s<W>`](F32s):
+//!
+//! - every f32 update is the identical per-lane scalar operation (add,
+//!   mul, `clamp`, `abs`, `signum`, compare), applied through a select
+//!   so untaken lanes keep their old bits — **bitwise identical to the
+//!   scalar tick at every width**, a stronger contract than classic
+//!   control's because there are no cross-lane reductions or trig;
+//! - RNG draws (serves) and integer/bitset updates (scores, bricks,
+//!   lives, serve timers) stay scalar *per lane, in lane order*.
+//!   Streams can't interleave across lanes anyway: each lane owns an
+//!   independent `Pcg32` keyed by env id (see
+//!   [`game_rng`](crate::envs::atari::preproc::game_rng)).
+//!
+//! [`step_emulate_batch`] drives [`LaneGame::tick_pass`] through the
+//! frameskip loop with the exact reward/done/render/pool bookkeeping of
+//! the scalar [`PreprocCore::step_emulate`], rasterizing into the
+//! caller's lane-major native-frame slabs via the shared
+//! [`render`](crate::envs::atari::render) primitives. `LanePass` /
+//! `ENVPOOL_LANE_WIDTH` select the width exactly as for classic
+//! control; the scalar games remain the reference implementation
+//! (width 1 is the `ScalarVec`-style view), pinned by the in-file
+//! tests and `tests/atari_emulate_parity.rs`.
+
+use crate::envs::atari::preproc::EmulatePhase;
+use crate::envs::atari::{breakout, pong, render, FRAMESKIP, NATIVE};
+use crate::envs::env::discrete_action;
+use crate::rng::Pcg32;
+use crate::simd::{F32s, Mask};
+
+/// Bytes of one native frame plane.
+const FRAME: usize = NATIVE * NATIVE;
+
+/// One game's state for a whole batch of lanes, advanced a lane group
+/// at a time. Implementations must be bitwise twins of the scalar
+/// [`Game`](crate::envs::atari::game::Game): same state transitions,
+/// same RNG draw order per lane, same rasterization.
+pub trait LaneGame: Send {
+    /// Number of lanes held.
+    fn count(&self) -> usize;
+
+    /// Discrete (minimal) action count — matches the scalar game.
+    fn n_actions(&self) -> usize;
+
+    /// Task id suffix, e.g. `"Pong"`.
+    fn name(&self) -> &'static str;
+
+    /// Full game reset of one lane (the scalar `Game::reset` twin).
+    fn reset_lane(&mut self, lane: usize, rng: &mut Pcg32);
+
+    /// Remaining lives of one lane (1 if the game has no life system).
+    fn lives(&self, lane: usize) -> u32;
+
+    /// Rasterize one lane's screen (the scalar `Game::render` twin).
+    fn render_lane(&self, lane: usize, frame: &mut [u8]);
+
+    /// Advance every lane with `step[lane] != 0` by one native frame.
+    /// Writes per-lane reward/done for stepped lanes (untouched
+    /// otherwise). `W` is the lane-group width; results are bitwise
+    /// identical at every width.
+    fn tick_pass<const W: usize>(
+        &mut self,
+        actions: &[usize],
+        step: &[u8],
+        rngs: &mut [Pcg32],
+        reward: &mut [f32],
+        done: &mut [u8],
+    );
+}
+
+/// Masked store: lane `i` of `v` is written to `dst[i]` iff the mask
+/// lane is set — the store-side half of branch→select conversion.
+#[inline(always)]
+fn store_masked<const W: usize>(dst: &mut [f32], v: F32s<W>, m: Mask<W>, n: usize) {
+    for i in 0..n {
+        if m.0[i] {
+            dst[i] = v.0[i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pong lanes
+// ---------------------------------------------------------------------------
+
+/// SoA [`Pong`](crate::envs::atari::pong::Pong): one array per scalar
+/// field, `[lane]` indexed.
+pub struct PongLanes {
+    count: usize,
+    ball_x: Vec<f32>,
+    ball_y: Vec<f32>,
+    vx: Vec<f32>,
+    vy: Vec<f32>,
+    left_y: Vec<f32>,
+    right_y: Vec<f32>,
+    score_left: Vec<u32>,
+    score_right: Vec<u32>,
+    serve_timer: Vec<u32>,
+    serving_right: Vec<bool>,
+    over: Vec<bool>,
+}
+
+impl PongLanes {
+    /// `count` lanes, each in the scalar `Pong::new()` state.
+    pub fn new(count: usize) -> Self {
+        PongLanes {
+            count,
+            ball_x: vec![84.0; count],
+            ball_y: vec![84.0; count],
+            vx: vec![0.0; count],
+            vy: vec![0.0; count],
+            left_y: vec![84.0; count],
+            right_y: vec![84.0; count],
+            score_left: vec![0; count],
+            score_right: vec![0; count],
+            serve_timer: vec![pong::SERVE_DELAY; count],
+            serving_right: vec![true; count],
+            over: vec![false; count],
+        }
+    }
+
+    /// One lane group (`W` lanes from `g`, `n` valid) of the scalar
+    /// `Pong::tick`, branches as selects. Kept in one function so the
+    /// statement order mirrors the scalar code line for line.
+    #[allow(clippy::too_many_arguments)]
+    fn tick_group<const W: usize>(
+        &mut self,
+        g: usize,
+        n: usize,
+        actions: &[usize],
+        step: &[u8],
+        rngs: &mut [Pcg32],
+        reward: &mut [f32],
+        done: &mut [u8],
+    ) {
+        let nf = NATIVE as f32;
+        let half = pong::PADDLE_H / 2.0;
+
+        // Over lanes are the scalar early return: (0.0, true), state
+        // untouched. Everything below is masked by `active`.
+        let active =
+            Mask::<W>::from_fn(|i| i < n && step[g + i] != 0 && !self.over[g + i]);
+
+        // Agent paddle: UP = 2/4, DOWN = 3/5.
+        let dy = F32s::<W>::from_fn(|i| {
+            if i < n {
+                match actions[g + i] {
+                    2 | 4 => -pong::PADDLE_SPEED,
+                    3 | 5 => pong::PADDLE_SPEED,
+                    _ => 0.0,
+                }
+            } else {
+                0.0
+            }
+        });
+        let right0 = F32s::<W>::load_or(&self.right_y[g..g + n], 84.0);
+        let right_y = active.select_f32((right0 + dy).clamp(half, nf - half), right0);
+        store_masked(&mut self.right_y[g..g + n], right_y, active, n);
+
+        // AI paddle tracks the ball with capped speed + deadzone.
+        let bally = F32s::<W>::load_or(&self.ball_y[g..g + n], 84.0);
+        let left0 = F32s::<W>::load_or(&self.left_y[g..g + n], 84.0);
+        let diff = bally - left0;
+        let tracked =
+            (left0 + diff.signum() * F32s::splat(pong::AI_SPEED)).clamp(half, nf - half);
+        let ai_move = active & diff.abs().gt(F32s::splat(2.0));
+        let left_y = ai_move.select_f32(tracked, left0);
+        store_masked(&mut self.left_y[g..g + n], left_y, ai_move, n);
+
+        // Serve pause: integer timers + RNG draws stay per lane, in
+        // lane order (each lane's stream is independent, so grouping
+        // cannot reorder draws within a lane).
+        let mut pause = [false; W];
+        for i in 0..n {
+            let l = g + i;
+            if active.0[i] && self.serve_timer[l] > 0 {
+                pause[i] = true;
+                self.serve_timer[l] -= 1;
+                if self.serve_timer[l] == 0 {
+                    // Scalar `serve()`: two draws, then direction by server.
+                    self.ball_x[l] = nf / 2.0;
+                    self.ball_y[l] = rngs[l].range(40.0, nf - 40.0);
+                    let dir = if self.serving_right[l] { 1.0 } else { -1.0 };
+                    self.vx[l] = dir * 2.2;
+                    self.vy[l] = rngs[l].range(-1.8, 1.8);
+                }
+            }
+        }
+        let play = active & !Mask(pause);
+
+        // Ball advance (serve writes above only touched paused lanes,
+        // which `play` masks out — loads here serve the play lanes).
+        let bx0 = F32s::<W>::load_or(&self.ball_x[g..g + n], 84.0);
+        let vx0 = F32s::<W>::load_or(&self.vx[g..g + n], 0.0);
+        let vy0 = F32s::<W>::load_or(&self.vy[g..g + n], 0.0);
+        let bx = bx0 + vx0;
+        let mut by = bally + vy0;
+        let mut vy = vy0;
+
+        // Wall bounces (exclusive if / else-if: `hi` is evaluated on
+        // the post-`lo` ball like the scalar else-branch, and the two
+        // can't both fire).
+        let lo = by.lt(F32s::splat(pong::BALL / 2.0));
+        by = lo.select_f32(F32s::splat(pong::BALL / 2.0), by);
+        vy = lo.select_f32(vy.abs(), vy);
+        let hi = by.gt(F32s::splat(nf - pong::BALL / 2.0));
+        by = hi.select_f32(F32s::splat(nf - pong::BALL / 2.0), by);
+        vy = hi.select_f32(-vy.abs(), vy);
+
+        // Paddle collisions: `Rect::intersects` inlined, the vx-sign
+        // guards make the two arms mutually exclusive exactly as the
+        // scalar else-if does.
+        let two = F32s::splat(2.0);
+        let wsum = F32s::splat(pong::BALL + pong::PADDLE_W);
+        let hsum = F32s::splat(pong::BALL + pong::PADDLE_H);
+        let int_l = ((bx - F32s::splat(10.0)).abs() * two).lt(wsum)
+            & ((by - left_y).abs() * two).lt(hsum);
+        let int_r = ((bx - F32s::splat(nf - 10.0)).abs() * two).lt(wsum)
+            & ((by - right_y).abs() * two).lt(hsum);
+        let hit_l = vx0.lt(F32s::splat(0.0)) & int_l;
+        let hit_r = vx0.gt(F32s::splat(0.0)) & int_r;
+        // Reflect with rally speed-up, english by contact offset (the
+        // operation order matches the scalar `/ half * 1.2` exactly —
+        // f32 is not associative, so no algebraic rearranging).
+        let vx_hit = -vx0 * F32s::splat(1.03);
+        let vy_l = vy + (by - left_y) / F32s::splat(half) * F32s::splat(1.2);
+        let vy_r = vy + (by - right_y) / F32s::splat(half) * F32s::splat(1.2);
+        let mut vx = (hit_l | hit_r).select_f32(vx_hit, vx0);
+        vy = hit_l.select_f32(vy_l, hit_r.select_f32(vy_r, vy));
+        vx = vx.clamp(-6.0, 6.0);
+        vy = vy.clamp(-4.0, 4.0);
+
+        // Store + scoring (integer) + outputs, per lane.
+        for i in 0..n {
+            let l = g + i;
+            let mut rew = 0.0;
+            if play.0[i] {
+                self.ball_x[l] = bx.0[i];
+                self.ball_y[l] = by.0[i];
+                self.vx[l] = vx.0[i];
+                self.vy[l] = vy.0[i];
+                if bx.0[i] < 0.0 {
+                    self.score_right[l] += 1;
+                    rew = 1.0;
+                    self.serving_right[l] = false;
+                    self.serve_timer[l] = pong::SERVE_DELAY;
+                } else if bx.0[i] > nf {
+                    self.score_left[l] += 1;
+                    rew = -1.0;
+                    self.serving_right[l] = true;
+                    self.serve_timer[l] = pong::SERVE_DELAY;
+                }
+                if self.score_left[l] >= pong::WIN_SCORE
+                    || self.score_right[l] >= pong::WIN_SCORE
+                {
+                    self.over[l] = true;
+                }
+            }
+            if i < n && step[l] != 0 {
+                reward[l] = rew;
+                done[l] = self.over[l] as u8;
+            }
+        }
+    }
+}
+
+impl LaneGame for PongLanes {
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn n_actions(&self) -> usize {
+        6
+    }
+
+    fn name(&self) -> &'static str {
+        "Pong"
+    }
+
+    fn reset_lane(&mut self, lane: usize, rng: &mut Pcg32) {
+        // Scalar: `*self = Pong::new()` then one draw for ball.y.
+        self.ball_x[lane] = 84.0;
+        self.ball_y[lane] = rng.range(60.0, 108.0);
+        self.vx[lane] = 0.0;
+        self.vy[lane] = 0.0;
+        self.left_y[lane] = 84.0;
+        self.right_y[lane] = 84.0;
+        self.score_left[lane] = 0;
+        self.score_right[lane] = 0;
+        self.serve_timer[lane] = pong::SERVE_DELAY;
+        self.serving_right[lane] = true;
+        self.over[lane] = false;
+    }
+
+    fn lives(&self, _lane: usize) -> u32 {
+        1
+    }
+
+    fn render_lane(&self, lane: usize, frame: &mut [u8]) {
+        render::clear(frame, 44);
+        render::vline_dashed(frame, NATIVE / 2, 90);
+        render::rect(frame, 10.0, self.left_y[lane], pong::PADDLE_W, pong::PADDLE_H, 200);
+        render::rect(
+            frame,
+            NATIVE as f32 - 10.0,
+            self.right_y[lane],
+            pong::PADDLE_W,
+            pong::PADDLE_H,
+            200,
+        );
+        if self.serve_timer[lane] == 0 {
+            render::rect(frame, self.ball_x[lane], self.ball_y[lane], pong::BALL, pong::BALL, 255);
+        }
+        render::hbar(frame, 4, 20, self.score_left[lane] as usize * 3, 160);
+        render::hbar(
+            frame,
+            4,
+            NATIVE - 20 - self.score_right[lane] as usize * 3,
+            self.score_right[lane] as usize * 3,
+            160,
+        );
+    }
+
+    fn tick_pass<const W: usize>(
+        &mut self,
+        actions: &[usize],
+        step: &[u8],
+        rngs: &mut [Pcg32],
+        reward: &mut [f32],
+        done: &mut [u8],
+    ) {
+        let k = self.count;
+        let mut g = 0;
+        while g < k {
+            let n = W.min(k - g);
+            self.tick_group::<W>(g, n, actions, step, rngs, reward, done);
+            g += W;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Breakout lanes
+// ---------------------------------------------------------------------------
+
+/// SoA [`Breakout`](crate::envs::atari::breakout::Breakout). The brick
+/// wall is one `u32` bitset per (row, lane) — bit `c` set means brick
+/// `(row, c)` is alive — stored row-major (`[row * count + lane]`).
+pub struct BreakoutLanes {
+    count: usize,
+    bricks: Vec<u32>,
+    remaining: Vec<u32>,
+    paddle_x: Vec<f32>,
+    ball_x: Vec<f32>,
+    ball_y: Vec<f32>,
+    vx: Vec<f32>,
+    vy: Vec<f32>,
+    in_play: Vec<bool>,
+    lives: Vec<u32>,
+    over: Vec<bool>,
+}
+
+/// All `COLS` brick bits set.
+const FULL_ROW: u32 = (1u32 << breakout::COLS) - 1;
+
+impl BreakoutLanes {
+    /// `count` lanes, each in the scalar `Breakout::new()` state.
+    pub fn new(count: usize) -> Self {
+        BreakoutLanes {
+            count,
+            bricks: vec![FULL_ROW; breakout::ROWS * count],
+            remaining: vec![(breakout::ROWS * breakout::COLS) as u32; count],
+            paddle_x: vec![84.0; count],
+            ball_x: vec![84.0; count],
+            ball_y: vec![120.0; count],
+            vx: vec![0.0; count],
+            vy: vec![0.0; count],
+            in_play: vec![false; count],
+            lives: vec![5; count],
+            over: vec![false; count],
+        }
+    }
+
+    /// Is brick `(r, c)` of `lane` alive? (test/render helper)
+    fn brick(&self, lane: usize, r: usize, c: usize) -> bool {
+        self.bricks[r * self.count + lane] >> c & 1 != 0
+    }
+
+    /// One lane group of the scalar `Breakout::tick`, branches as
+    /// selects; the brick phase (bitset + integer + data-dependent
+    /// early return) stays a per-lane scalar island between the wall
+    /// and paddle select phases, exactly where the scalar code runs it.
+    #[allow(clippy::too_many_arguments)]
+    fn tick_group<const W: usize>(
+        &mut self,
+        g: usize,
+        n: usize,
+        actions: &[usize],
+        step: &[u8],
+        rngs: &mut [Pcg32],
+        reward: &mut [f32],
+        done: &mut [u8],
+    ) {
+        let nf = NATIVE as f32;
+        let half_p = breakout::PADDLE_W / 2.0;
+
+        let active =
+            Mask::<W>::from_fn(|i| i < n && step[g + i] != 0 && !self.over[g + i]);
+
+        // Action phase. FIRE serves (reads the pre-clamp paddle, which
+        // is already in range since FIRE doesn't move it); the draw is
+        // per lane in lane order.
+        for i in 0..n {
+            let l = g + i;
+            if active.0[i] && actions[l] == 1 && !self.in_play[l] {
+                self.ball_x[l] = self.paddle_x[l];
+                self.ball_y[l] = breakout::PADDLE_Y - 8.0;
+                self.vx[l] = rngs[l].range(-1.5, 1.5);
+                self.vy[l] = -2.2;
+                self.in_play[l] = true;
+            }
+        }
+        let dpad = F32s::<W>::from_fn(|i| {
+            if i < n {
+                match actions[g + i] {
+                    2 => breakout::PADDLE_SPEED,
+                    3 => -breakout::PADDLE_SPEED,
+                    _ => 0.0,
+                }
+            } else {
+                0.0
+            }
+        });
+        let pad0 = F32s::<W>::load_or(&self.paddle_x[g..g + n], 84.0);
+        let pad = active.select_f32((pad0 + dpad).clamp(half_p, nf - half_p), pad0);
+        store_masked(&mut self.paddle_x[g..g + n], pad, active, n);
+
+        // Out-of-play lanes early-return (0.0, false) after the paddle
+        // move; just-served lanes are in play this same tick.
+        let play = Mask::<W>::from_fn(|i| active.0[i] && self.in_play[g + i]);
+
+        // Ball advance + side/top walls.
+        let bx0 = F32s::<W>::load_or(&self.ball_x[g..g + n], 84.0);
+        let by0 = F32s::<W>::load_or(&self.ball_y[g..g + n], 120.0);
+        let vx0 = F32s::<W>::load_or(&self.vx[g..g + n], 0.0);
+        let vy0 = F32s::<W>::load_or(&self.vy[g..g + n], 0.0);
+        let mut bx = bx0 + vx0;
+        let mut by = by0 + vy0;
+        let mut vx = vx0;
+        let mut vy = vy0;
+        let lo_x = bx.lt(F32s::splat(breakout::BALL / 2.0));
+        bx = lo_x.select_f32(F32s::splat(breakout::BALL / 2.0), bx);
+        vx = lo_x.select_f32(vx.abs(), vx);
+        let hi_x = bx.gt(F32s::splat(nf - breakout::BALL / 2.0));
+        bx = hi_x.select_f32(F32s::splat(nf - breakout::BALL / 2.0), bx);
+        vx = hi_x.select_f32(-vx.abs(), vx);
+        let lo_y = by.lt(F32s::splat(breakout::BALL / 2.0));
+        by = lo_y.select_f32(F32s::splat(breakout::BALL / 2.0), by);
+        vy = lo_y.select_f32(vy.abs(), vy);
+
+        // Brick phase (per-lane island). A cleared wall is the scalar
+        // early return: the lane freezes before the paddle/lost phases.
+        let mut rew_arr = [0.0f32; W];
+        let mut cleared = [false; W];
+        let mut vy_arr = vy.0;
+        for i in 0..n {
+            if !play.0[i] {
+                continue;
+            }
+            let l = g + i;
+            let (x, y) = (bx.0[i], by.0[i]);
+            if y >= breakout::BRICK_TOP
+                && y < breakout::BRICK_TOP + breakout::ROWS as f32 * breakout::BRICK_H
+            {
+                let r = ((y - breakout::BRICK_TOP) / breakout::BRICK_H) as usize;
+                let c = (x / breakout::BRICK_W) as usize;
+                if r < breakout::ROWS && c < breakout::COLS && self.brick(l, r, c) {
+                    self.bricks[r * self.count + l] &= !(1u32 << c);
+                    self.remaining[l] -= 1;
+                    rew_arr[i] = breakout::ROW_SCORE[r];
+                    vy_arr[i] = -vy_arr[i];
+                    // ball speeds up when reaching the upper rows
+                    if r < 2 {
+                        vy_arr[i] = vy_arr[i].signum() * vy_arr[i].abs().max(3.0);
+                    }
+                    if self.remaining[l] == 0 {
+                        self.over[l] = true;
+                        cleared[i] = true;
+                    }
+                }
+            }
+        }
+        let vy_brick = F32s(vy_arr);
+        let fly = play & !Mask(cleared);
+
+        // Paddle bounce with english (guarded on downward motion).
+        let two = F32s::splat(2.0);
+        let int_p = ((bx - pad).abs() * two)
+            .lt(F32s::splat(breakout::BALL + breakout::PADDLE_W))
+            & ((by - F32s::splat(breakout::PADDLE_Y)).abs() * two)
+                .lt(F32s::splat(breakout::BALL + breakout::PADDLE_H));
+        let hit = fly & vy_brick.gt(F32s::splat(0.0)) & int_p;
+        let vy_fin = hit.select_f32(-vy_brick.abs(), vy_brick);
+        // `/ half_p * 1.5` in scalar order — f32 is not associative.
+        let vx_eng =
+            (vx + (bx - pad) / F32s::splat(half_p) * F32s::splat(1.5)).clamp(-3.5, 3.5);
+        let vx_fin = hit.select_f32(vx_eng, vx);
+
+        // Store + ball-lost (integer) + outputs, per lane.
+        for i in 0..n {
+            let l = g + i;
+            if play.0[i] {
+                self.ball_x[l] = bx.0[i];
+                self.ball_y[l] = by.0[i];
+                if cleared[i] {
+                    // Early-returned lane: paddle/lost phases skipped.
+                    self.vx[l] = vx.0[i];
+                    self.vy[l] = vy_brick.0[i];
+                } else {
+                    self.vx[l] = vx_fin.0[i];
+                    self.vy[l] = vy_fin.0[i];
+                    if by.0[i] > nf {
+                        self.lives[l] -= 1;
+                        self.in_play[l] = false;
+                        if self.lives[l] == 0 {
+                            self.over[l] = true;
+                        }
+                    }
+                }
+            }
+            if i < n && step[l] != 0 {
+                reward[l] = rew_arr[i];
+                done[l] = self.over[l] as u8;
+            }
+        }
+    }
+}
+
+impl LaneGame for BreakoutLanes {
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn n_actions(&self) -> usize {
+        4
+    }
+
+    fn name(&self) -> &'static str {
+        "Breakout"
+    }
+
+    fn reset_lane(&mut self, lane: usize, rng: &mut Pcg32) {
+        // Scalar: `*self = Breakout::new()` then one draw for paddle_x.
+        for r in 0..breakout::ROWS {
+            self.bricks[r * self.count + lane] = FULL_ROW;
+        }
+        self.remaining[lane] = (breakout::ROWS * breakout::COLS) as u32;
+        self.paddle_x[lane] = rng.range(40.0, NATIVE as f32 - 40.0);
+        self.ball_x[lane] = 84.0;
+        self.ball_y[lane] = 120.0;
+        self.vx[lane] = 0.0;
+        self.vy[lane] = 0.0;
+        self.in_play[lane] = false;
+        self.lives[lane] = 5;
+        self.over[lane] = false;
+    }
+
+    fn lives(&self, lane: usize) -> u32 {
+        self.lives[lane]
+    }
+
+    fn render_lane(&self, lane: usize, frame: &mut [u8]) {
+        render::clear(frame, 30);
+        for r in 0..breakout::ROWS {
+            let shade = 120 + (r * 20) as u8;
+            let row = self.bricks[r * self.count + lane];
+            for c in 0..breakout::COLS {
+                if row >> c & 1 != 0 {
+                    render::rect(
+                        frame,
+                        (c as f32 + 0.5) * breakout::BRICK_W,
+                        breakout::BRICK_TOP + (r as f32 + 0.5) * breakout::BRICK_H,
+                        breakout::BRICK_W - 1.0,
+                        breakout::BRICK_H - 1.0,
+                        shade,
+                    );
+                }
+            }
+        }
+        render::rect(
+            frame,
+            self.paddle_x[lane],
+            breakout::PADDLE_Y,
+            breakout::PADDLE_W,
+            breakout::PADDLE_H,
+            220,
+        );
+        if self.in_play[lane] {
+            render::rect(
+                frame,
+                self.ball_x[lane],
+                self.ball_y[lane],
+                breakout::BALL,
+                breakout::BALL,
+                255,
+            );
+        }
+        render::hbar(frame, 2, 4, self.lives[lane] as usize * 4, 180);
+    }
+
+    fn tick_pass<const W: usize>(
+        &mut self,
+        actions: &[usize],
+        step: &[u8],
+        rngs: &mut [Pcg32],
+        reward: &mut [f32],
+        done: &mut [u8],
+    ) {
+        let k = self.count;
+        let mut g = 0;
+        while g < k {
+            let n = W.min(k - g);
+            self.tick_group::<W>(g, n, actions, step, rngs, reward, done);
+            g += W;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched frameskip driver
+// ---------------------------------------------------------------------------
+
+/// Preallocated scratch for [`step_emulate_batch`] — one row per lane,
+/// reused every dispatch so the batched step never allocates.
+pub struct EmulateScratch {
+    /// Decoded minimal-set action per lane.
+    acts: Vec<usize>,
+    /// Lane still ticking within the current skip.
+    alive: Vec<u8>,
+    /// Per-tick outputs from the lane pass.
+    rew: Vec<f32>,
+    done: Vec<u8>,
+    /// Skip accumulators (scalar `step_emulate` locals, one per lane).
+    acc_rew: Vec<f32>,
+    acc_done: Vec<bool>,
+    pool: Vec<bool>,
+    /// Inverted reset mask (`1` = step this lane), fed to the passes.
+    pub(crate) skip: Vec<u8>,
+}
+
+impl EmulateScratch {
+    pub fn new(count: usize) -> Self {
+        EmulateScratch {
+            acts: vec![0; count],
+            alive: vec![0; count],
+            rew: vec![0.0; count],
+            done: vec![0; count],
+            acc_rew: vec![0.0; count],
+            acc_done: vec![false; count],
+            pool: vec![false; count],
+            skip: vec![0; count],
+        }
+    }
+}
+
+/// Batched twin of [`PreprocCore::step_emulate`]: the frameskip loop as
+/// `FRAMESKIP` masked lane-group tick passes, with per-lane render and
+/// pool bookkeeping identical to the scalar loop — `frame_b` rendered
+/// after the second-to-last tick, `frame_a` + pool after the last, an
+/// early `frame_a` render (no pool) for lanes that die mid-skip, which
+/// then stop ticking. Lanes with `skip == 0` are untouched. `frames_a`
+/// / `frames_b` are the lane-major native-frame slabs.
+pub(crate) fn step_emulate_batch<L: LaneGame, const W: usize>(
+    lanes: &mut L,
+    rngs: &mut [Pcg32],
+    actions: &[f32],
+    sc: &mut EmulateScratch,
+    frames_a: &mut [u8],
+    frames_b: &mut [u8],
+    phases: &mut [Option<EmulatePhase>],
+) {
+    let k = lanes.count();
+    let n_act = lanes.n_actions();
+    for l in 0..k {
+        sc.alive[l] = sc.skip[l];
+        sc.acc_rew[l] = 0.0;
+        sc.acc_done[l] = false;
+        sc.pool[l] = false;
+        if sc.skip[l] != 0 {
+            sc.acts[l] = discrete_action(&actions[l..l + 1], n_act);
+        }
+    }
+    for tick in 0..FRAMESKIP {
+        if !sc.alive.iter().any(|&a| a != 0) {
+            break;
+        }
+        lanes.tick_pass::<W>(&sc.acts, &sc.alive, rngs, &mut sc.rew, &mut sc.done);
+        for l in 0..k {
+            if sc.alive[l] == 0 {
+                continue;
+            }
+            sc.acc_rew[l] += sc.rew[l];
+            if tick == FRAMESKIP - 2 {
+                lanes.render_lane(l, &mut frames_b[l * FRAME..(l + 1) * FRAME]);
+            } else if tick == FRAMESKIP - 1 {
+                lanes.render_lane(l, &mut frames_a[l * FRAME..(l + 1) * FRAME]);
+                sc.pool[l] = true;
+            }
+            if sc.done[l] != 0 {
+                sc.acc_done[l] = true;
+                // render whatever we have if we died early in the skip
+                if tick < FRAMESKIP - 1 {
+                    lanes.render_lane(l, &mut frames_a[l * FRAME..(l + 1) * FRAME]);
+                }
+                sc.alive[l] = 0;
+            }
+        }
+    }
+    for l in 0..k {
+        if sc.skip[l] != 0 {
+            phases[l] = Some(EmulatePhase {
+                reward: sc.acc_rew[l],
+                done: sc.acc_done[l],
+                pool: sc.pool[l],
+                lives: lanes.lives(l),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::atari::breakout::Breakout;
+    use crate::envs::atari::game::Game;
+    use crate::envs::atari::pong::Pong;
+
+    /// Drive `K` lanes and `K` scalar games through identical action /
+    /// RNG streams with forced mid-run resets; every tick must agree
+    /// bitwise on (reward, done, lives) and periodically on the full
+    /// rendered frame.
+    fn assert_lane_parity<const W: usize, L: LaneGame, G: Game, F: FnMut() -> G>(
+        mut lanes: L,
+        mut mk: F,
+        n_actions: u32,
+        seed: u64,
+        ticks: usize,
+    ) {
+        let k = lanes.count();
+        let mut rngs: Vec<Pcg32> = (0..k).map(|l| Pcg32::new(seed, l as u64)).collect();
+        let mut srngs = rngs.clone();
+        let mut games: Vec<G> = (0..k).map(|_| mk()).collect();
+        for l in 0..k {
+            lanes.reset_lane(l, &mut rngs[l]);
+            games[l].reset(&mut srngs[l]);
+        }
+        let mut arng = Pcg32::new(seed ^ 0xACC, 99);
+        let mut acts = vec![0usize; k];
+        let step = vec![1u8; k];
+        let mut rew = vec![0.0f32; k];
+        let mut done = vec![0u8; k];
+        let (mut fl, mut fs) = (vec![0u8; FRAME], vec![0u8; FRAME]);
+        for t in 0..ticks {
+            if t % 131 == 47 {
+                // Forced mid-run reset of one lane (stream stays shared).
+                let l = arng.below(k as u32) as usize;
+                lanes.reset_lane(l, &mut rngs[l]);
+                games[l].reset(&mut srngs[l]);
+            }
+            for a in acts.iter_mut() {
+                *a = arng.below(n_actions) as usize;
+            }
+            lanes.tick_pass::<W>(&acts, &step, &mut rngs, &mut rew, &mut done);
+            for l in 0..k {
+                let (r, d) = games[l].tick(acts[l], &mut srngs[l]);
+                assert_eq!(rew[l].to_bits(), r.to_bits(), "reward t={t} lane={l} W={W}");
+                assert_eq!(done[l] != 0, d, "done t={t} lane={l} W={W}");
+                assert_eq!(lanes.lives(l), games[l].lives(), "lives t={t} lane={l}");
+                if (t + l) % 17 == 0 {
+                    lanes.render_lane(l, &mut fl);
+                    games[l].render(&mut fs);
+                    assert!(fl == fs, "frame mismatch t={t} lane={l} W={W}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pong_lane_pass_bitwise_at_all_widths() {
+        // K=9: a full width-8 group plus a tail lane, two width-4
+        // groups + tail, and the width-1 path.
+        assert_lane_parity::<1, _, _, _>(PongLanes::new(9), Pong::new, 6, 5, 2000);
+        assert_lane_parity::<4, _, _, _>(PongLanes::new(9), Pong::new, 6, 5, 2000);
+        assert_lane_parity::<8, _, _, _>(PongLanes::new(9), Pong::new, 6, 5, 2000);
+    }
+
+    #[test]
+    fn breakout_lane_pass_bitwise_at_all_widths() {
+        assert_lane_parity::<1, _, _, _>(BreakoutLanes::new(9), Breakout::new, 4, 11, 2000);
+        assert_lane_parity::<4, _, _, _>(BreakoutLanes::new(9), Breakout::new, 4, 11, 2000);
+        assert_lane_parity::<8, _, _, _>(BreakoutLanes::new(9), Breakout::new, 4, 11, 2000);
+    }
+
+    #[test]
+    fn unstepped_lanes_are_untouched() {
+        let k = 6;
+        let mut lanes = PongLanes::new(k);
+        let mut rngs: Vec<Pcg32> = (0..k).map(|l| Pcg32::new(3, l as u64)).collect();
+        for l in 0..k {
+            lanes.reset_lane(l, &mut rngs[l]);
+        }
+        let (mut f0, mut f1) = (vec![0u8; FRAME], vec![0u8; FRAME]);
+        lanes.render_lane(2, &mut f0);
+        // Step every lane except 2 for a while.
+        let step: Vec<u8> = (0..k).map(|l| (l != 2) as u8).collect();
+        let acts = vec![0usize; k];
+        let mut rew = vec![0.0f32; k];
+        let mut done = vec![0u8; k];
+        for _ in 0..50 {
+            lanes.tick_pass::<8>(&acts, &step, &mut rngs, &mut rew, &mut done);
+        }
+        lanes.render_lane(2, &mut f1);
+        assert_eq!(f0, f1, "masked-out lane must not advance");
+    }
+
+    #[test]
+    fn batched_driver_matches_scalar_step_emulate() {
+        // One lane through the batched driver vs the scalar core: the
+        // EmulatePhase records and both frame slabs must match exactly,
+        // including early-death renders around scoring ticks.
+        use crate::envs::atari::preproc::{game_rng, PreprocCore};
+        let mut lanes = PongLanes::new(1);
+        let mut rngs = vec![game_rng(21, 0)];
+        let mut srng = game_rng(21, 0);
+        let mut game = Pong::new();
+        lanes.reset_lane(0, &mut rngs[0]);
+        game.reset(&mut srng);
+        let mut core = PreprocCore::new(6);
+        let mut sc = EmulateScratch::new(1);
+        sc.skip[0] = 1;
+        let (mut fa, mut fb) = (vec![0u8; FRAME], vec![0u8; FRAME]);
+        let (mut sfa, mut sfb) = (vec![0u8; FRAME], vec![0u8; FRAME]);
+        let mut phases = vec![None; 1];
+        for t in 0..200 {
+            let a = [(t % 6) as f32];
+            step_emulate_batch::<_, 8>(
+                &mut lanes,
+                &mut rngs,
+                &a,
+                &mut sc,
+                &mut fa,
+                &mut fb,
+                &mut phases,
+            );
+            let ph = core.step_emulate(&mut game, &mut srng, &a, &mut sfa, &mut sfb);
+            let bp = phases[0].expect("stepped lane has a phase");
+            assert_eq!(bp.reward.to_bits(), ph.reward.to_bits(), "t={t}");
+            assert_eq!(bp.done, ph.done, "t={t}");
+            assert_eq!(bp.pool, ph.pool, "t={t}");
+            assert_eq!(bp.lives, ph.lives, "t={t}");
+            assert!(fa == sfa, "frame_a mismatch t={t}");
+            assert!(fb == sfb, "frame_b mismatch t={t}");
+        }
+    }
+}

@@ -51,6 +51,11 @@
 //!   trig twins and follow the **documented, asserted tolerance
 //!   budget** pinned by `tests/mujoco_batch_parity.rs` (see
 //!   [`walker`] for the contract).
+//! - **Atari**: the *emulator itself* runs lane-grouped — SoA game
+//!   state with masked select-based tick passes ([`atari_emulate`]).
+//!   Pure per-lane f32 arithmetic (no cross-lane math, no trig), so
+//!   every width is **bitwise identical** to the scalar `Game::tick`,
+//!   pinned by `tests/atari_emulate_parity.rs`.
 //!
 //! # Every family is batch-first
 //!
@@ -60,11 +65,12 @@
 //! in a shared [`WorldBatch`](crate::envs::mujoco::WorldBatch) core
 //! (the scalar walker env is a width-1 view over the same kernel;
 //! since the body-major rewrite every solver lane group is one
-//! contiguous slice of the batch state), [`AtariVec`] steps emulator
-//! lanes in one call with all pixel state packed into contiguous
-//! lane-major slabs — the pure preprocessing math runs as a separate
-//! SoA pass over the slabs, sharing `PreprocCore` verbatim with the
-//! scalar env — and [`CheetahRunVec`] layers the dm_control reward
+//! contiguous slice of the batch state), [`AtariVec`] holds SoA game
+//! state and runs the emulator frameskip as masked lane-group tick
+//! passes with all pixel state packed into contiguous lane-major
+//! slabs — the pure preprocessing math runs as a separate SoA pass
+//! over the slabs, sharing `PreprocCore` verbatim with the scalar
+//! env — and [`CheetahRunVec`] layers the dm_control reward
 //! shaping batch-wise. [`ScalarVec`] — a chunk of
 //! boxed scalar envs behind this interface — remains as an *explicit
 //! opt-in* for out-of-registry envs; `registry::make_vec_env` never
@@ -100,6 +106,7 @@
 
 pub mod acrobot;
 pub mod atari;
+pub mod atari_emulate;
 pub mod cartpole;
 pub mod mountain_car;
 pub mod pendulum;
@@ -108,6 +115,7 @@ pub mod walker;
 
 pub use acrobot::AcrobotVec;
 pub use atari::AtariVec;
+pub use atari_emulate::{BreakoutLanes, LaneGame, PongLanes};
 pub use cartpole::CartPoleVec;
 pub use mountain_car::MountainCarVec;
 pub use pendulum::PendulumVec;

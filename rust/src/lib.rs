@@ -68,18 +68,23 @@
 //! instead of a strided gather; width 1 is bitwise with the pre-batch
 //! scalar path (the scalar env *is* a width-1 view), widths 4/8 follow
 //! a **documented, asserted tolerance budget**
-//! (`tests/mujoco_batch_parity.rs`). Atari preprocessing is
-//! **slab-resident**: [`envs::vector::AtariVec`] packs all lanes'
-//! native frames and stack rings contiguously and runs the pure pixel
-//! math (2-frame max-pool, 2×2 downsample, stack push, readout) as a
-//! lane-streaming SoA pass after the scalar emulator phase — bitwise
-//! identical to the per-env path (shared `PreprocCore`).
+//! (`tests/mujoco_batch_parity.rs`). The Atari path batches the
+//! **emulator itself** on top of its slab-resident pixel state:
+//! [`envs::vector::AtariVec`] holds per-game SoA lane state
+//! ([`envs::vector::atari_emulate`]) and runs the frameskip loop as
+//! **masked lane-group tick passes** (branches become selects that
+//! apply the identical scalar operation per lane; RNG draws stay
+//! per-lane in lane order), then packs all lanes' native frames and
+//! stack rings contiguously and runs the pure pixel math (2-frame
+//! max-pool, 2×2 downsample, stack push, readout) as a lane-streaming
+//! SoA pass — bitwise identical to the per-env path **at every lane
+//! width** (shared `PreprocCore`; `tests/atari_emulate_parity.rs`).
 //!
 //! | env family | `ExecMode::Scalar` | SoA kernel | SIMD lane pass | parity |
 //! |---|---|---|---|---|
 //! | classic control (4 tasks) | per-env tasks | `CartPoleVec`, ... (shared `SoaKernel` driver) | full dynamics (incl. RK4 / trig) | bitwise at every width |
 //! | MuJoCo walkers (`Hopper/HalfCheetah/Ant-v4`) | per-env tasks (each a width-1 `WorldBatch` view) | `WalkerVec` over batch-resident, body-major `WorldBatch` (contiguous body/joint/contact lane groups) | full constraint solver (masked lane groups) + batch task pass | bitwise at width 1; asserted tolerance budget at 4/8 |
-//! | Atari (`Pong/Breakout-v5`) | per-env tasks | `AtariVec` (scalar emulator lanes + contiguous pixel slab, SoA preproc pass, shared `PreprocCore`) | — (emulator-bound) | bitwise |
+//! | Atari (`Pong/Breakout-v5`) | per-env tasks | `AtariVec` (SoA game state + contiguous pixel slab, SoA preproc pass, shared `PreprocCore`) | masked lane-group emulator tick passes (`atari_emulate`) | bitwise at every width |
 //! | dm_control (`cheetah_run`) | per-env tasks (width-1 view) | `CheetahRunVec` (shaping over `WalkerVec`) | inherits `WalkerVec` | bitwise at width 1; tolerance budget at 4/8 |
 //! | wrappers (`TimeLimit`/`RewardClip`/`NormalizeObs`) | one-lane adapters | batch-wise `VecWrapper` layer (forwards `set_lane_pass`) | — | bitwise (shared cores) |
 //!

@@ -137,6 +137,15 @@ macro_rules! lane_type {
                 Self::from_fn(|i| self.0[i].abs())
             }
 
+            /// Per-lane `signum` (`<$elem>::signum` semantics: ±1.0
+            /// carrying the lane's sign, NaN for NaN — identical to the
+            /// scalar `.signum()` calls it replaces, so lane passes
+            /// built from it stay bitwise).
+            #[inline(always)]
+            pub fn signum(self) -> Self {
+                Self::from_fn(|i| self.0[i].signum())
+            }
+
             /// Per-lane square root (IEEE-exact, so bitwise identical to
             /// the scalar `.sqrt()` calls it replaces).
             #[inline(always)]
@@ -231,6 +240,13 @@ impl<const N: usize> Mask<N> {
 }
 
 impl<const N: usize> Mask<N> {
+    /// Build a mask from a function of the lane index (used by the
+    /// masked lane-group passes to fold step/tail conditions in).
+    #[inline(always)]
+    pub fn from_fn(f: impl FnMut(usize) -> bool) -> Self {
+        Mask(std::array::from_fn(f))
+    }
+
     /// Any lane set?
     #[inline(always)]
     pub fn any(self) -> bool {
@@ -242,7 +258,6 @@ impl<const N: usize> Mask<N> {
     pub fn all(self) -> bool {
         self.0.iter().all(|&b| b)
     }
-
 }
 
 impl<const N: usize> std::ops::BitOr for Mask<N> {

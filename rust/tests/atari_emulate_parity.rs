@@ -1,0 +1,192 @@
+//! Parity suite for the batched Atari emulator (`envs::vector::atari_emulate`).
+//!
+//! The lane-group tick passes promise **bitwise identity** with the
+//! scalar `Game::tick` reference at every lane width — branches become
+//! masked selects that apply the identical scalar operation per lane,
+//! RNG draws stay scalar per lane in lane order, and f32 expressions
+//! keep the exact scalar operation order. This file pins that promise
+//! end to end, on full `(4, 84, 84)` observation tensors:
+//!
+//! - widths 1/4/8 against per-env scalar references, random actions;
+//! - forced mid-batch resets rotating through the lanes at each width;
+//! - episodic-life Breakout under the pool's auto-reset protocol
+//!   (life-loss `done` with the game not over → continuation reset);
+//! - both `ExecMode`s through the full pool engines.
+
+use envpool::coordinator::throughput::random_actions;
+use envpool::envs::atari::preproc;
+use envpool::envs::vector::atari::{breakout_vec, pong_vec};
+use envpool::envs::vector::{AtariVec, LaneGame};
+use envpool::envs::{Env, SliceArena, Step, VecEnv};
+use envpool::executors::{ForLoopExecutor, VecForLoopExecutor, VectorEnv};
+use envpool::pool::{EnvPool, ExecMode, PoolConfig};
+use envpool::rng::Pcg32;
+use envpool::simd::LanePass;
+
+const WIDTHS: [LanePass; 3] = [LanePass::Scalar, LanePass::Width4, LanePass::Width8];
+
+/// Scalar vs vectorized for-loop executors, lock-step on one random
+/// action stream, full-tensor bitwise compare each step.
+fn check_executor_parity(task: &str, n: usize, seed: u64, steps: usize, lp: LanePass) {
+    let mut a = ForLoopExecutor::new(task, n, seed).unwrap();
+    let mut b = VecForLoopExecutor::new_with_lanes(task, n, seed, lp).unwrap();
+    let space = a.spec().action_space.clone();
+    let mut oa = a.make_output();
+    let mut ob = b.make_output();
+    a.reset(&mut oa).unwrap();
+    b.reset(&mut ob).unwrap();
+    assert!(oa.obs == ob.obs, "{task} {lp:?}: reset obs diverge");
+    let mut arng = Pcg32::new(seed ^ 0xA7A21, 3);
+    let mut actions = Vec::new();
+    for s in 0..steps {
+        random_actions(&space, n, &mut arng, &mut actions);
+        a.step(&actions, &mut oa).unwrap();
+        b.step(&actions, &mut ob).unwrap();
+        assert_eq!(oa.rew, ob.rew, "{task} {lp:?}: rewards diverge at step {s}");
+        assert_eq!(oa.done, ob.done, "{task} {lp:?}: dones diverge at step {s}");
+        assert!(oa.obs == ob.obs, "{task} {lp:?}: obs diverge at step {s}");
+    }
+}
+
+#[test]
+fn executors_bitwise_at_widths_1_4_8_random_actions() {
+    for task in ["Pong-v5", "Breakout-v5"] {
+        for lp in WIDTHS {
+            check_executor_parity(task, 5, 31, 25, lp);
+        }
+    }
+}
+
+/// Drive an [`AtariVec`] and a row of scalar reference envs through the
+/// same action tape with a reset mask rotating through the lanes, at
+/// one lane width. `mask_from_done` switches from forced rotation to
+/// the pool's auto-reset protocol (reset exactly the lanes whose
+/// previous transition finished).
+fn check_masked_parity<L: LaneGame, E: Env>(
+    mut v: AtariVec<L>,
+    mut scalars: Vec<E>,
+    n_act: u32,
+    steps: usize,
+    mask_from_done: bool,
+    tag: &str,
+) -> usize {
+    let n = scalars.len();
+    let dim = v.spec().obs_dim();
+    let mut vobs = vec![0.0f32; n * dim];
+    let mut sobs = vec![0.0f32; dim];
+    for (l, env) in scalars.iter_mut().enumerate() {
+        v.reset_lane(l, &mut vobs[l * dim..(l + 1) * dim]);
+        env.reset(&mut sobs);
+        assert!(vobs[l * dim..(l + 1) * dim] == sobs[..], "{tag}: reset lane {l}");
+    }
+    let mut arng = Pcg32::new(0x5EED ^ n_act as u64, 9);
+    let mut results = vec![Step::default(); n];
+    let mut mask = vec![0u8; n];
+    let mut dones = 0usize;
+    for t in 0..steps {
+        if !mask_from_done {
+            mask.iter_mut().for_each(|m| *m = 0);
+            if t % 3 == 2 {
+                mask[t % n] = 1; // forced mid-batch reset
+            }
+        }
+        let actions: Vec<f32> = (0..n).map(|_| arng.below(n_act) as f32).collect();
+        {
+            let mut arena = SliceArena::new(&mut vobs, dim);
+            v.step_batch(&actions, &mask, &mut arena, &mut results);
+        }
+        for (l, env) in scalars.iter_mut().enumerate() {
+            if mask[l] != 0 {
+                env.reset(&mut sobs);
+                assert_eq!(results[l], Step::default(), "{tag}: reset step {t} lane {l}");
+            } else {
+                let s = env.step(&actions[l..l + 1], &mut sobs);
+                assert_eq!(results[l], s, "{tag}: step {t} lane {l}");
+                dones += s.done as usize;
+            }
+            assert!(vobs[l * dim..(l + 1) * dim] == sobs[..], "{tag}: obs {t} lane {l}");
+        }
+        if mask_from_done {
+            for l in 0..n {
+                mask[l] = results[l].finished() as u8;
+            }
+        }
+    }
+    dones
+}
+
+#[test]
+fn forced_midbatch_resets_bitwise_at_widths_1_4_8() {
+    for lp in WIDTHS {
+        let mut v = pong_vec(14, 0, 3);
+        v.set_lane_pass(lp);
+        let scalars: Vec<_> = (0..3).map(|i| preproc::pong(14, i)).collect();
+        check_masked_parity(v, scalars, 6, 20, false, &format!("pong {lp:?}"));
+
+        let mut v = breakout_vec(14, 0, 3);
+        v.set_lane_pass(lp);
+        let scalars: Vec<_> = (0..3).map(|i| preproc::breakout(14, i)).collect();
+        check_masked_parity(v, scalars, 4, 20, false, &format!("breakout {lp:?}"));
+    }
+}
+
+#[test]
+fn episodic_life_breakout_auto_resets_bitwise() {
+    // Breakout runs with episodic life: losing a ball reports `done`
+    // while the game is not over, and the following reset is a
+    // *continuation* (no full game reset, the brick wall survives).
+    // Under the pool's auto-reset protocol the batched path must track
+    // the scalar wrapper through those continuation resets bit for bit.
+    // Long horizon so lives are actually lost; run the wider passes
+    // (width 1 is pinned by the other tests).
+    for lp in [LanePass::Width4, LanePass::Width8] {
+        let mut v = breakout_vec(8, 0, 2);
+        v.set_lane_pass(lp);
+        let scalars: Vec<_> = (0..2).map(|i| preproc::breakout(8, i)).collect();
+        let dones =
+            check_masked_parity(v, scalars, 4, 1500, true, &format!("ep-life {lp:?}"));
+        assert!(dones > 0, "{lp:?}: horizon too short — no life was ever lost");
+    }
+}
+
+#[test]
+fn pool_exec_modes_bitwise_for_pong_and_breakout() {
+    // Scalar pool engine (per-env tasks over width-1 views) vs the
+    // chunked vectorized engine running the batched emulator at Auto
+    // width: rewards, dones and full observation streams bit for bit.
+    for task in ["Pong-v5", "Breakout-v5"] {
+        let run = |mode: ExecMode| -> (Vec<f32>, Vec<f32>, Vec<u8>) {
+            let pool = EnvPool::make(
+                PoolConfig::new(task)
+                    .num_envs(4)
+                    .batch_size(4)
+                    .num_threads(2)
+                    .seed(19)
+                    .exec_mode(mode)
+                    .lane_pass(LanePass::Auto),
+            )
+            .unwrap();
+            let mut ex = envpool::executors::PoolVectorEnv::new(pool).unwrap();
+            let mut out = ex.make_output();
+            ex.reset(&mut out).unwrap();
+            let space = ex.spec().action_space.clone();
+            let mut arng = Pcg32::new(19, 6);
+            let mut actions = Vec::new();
+            let (mut obs, mut rew, mut done) = (Vec::new(), Vec::new(), Vec::new());
+            obs.extend_from_slice(&out.obs);
+            for _ in 0..15 {
+                random_actions(&space, 4, &mut arng, &mut actions);
+                ex.step(&actions, &mut out).unwrap();
+                obs.extend_from_slice(&out.obs);
+                rew.extend_from_slice(&out.rew);
+                done.extend_from_slice(&out.done);
+            }
+            (obs, rew, done)
+        };
+        let scalar = run(ExecMode::Scalar);
+        let vector = run(ExecMode::Vectorized);
+        assert_eq!(scalar.1, vector.1, "{task}: pool rewards diverge");
+        assert_eq!(scalar.2, vector.2, "{task}: pool dones diverge");
+        assert!(scalar.0 == vector.0, "{task}: pool obs diverge");
+    }
+}

@@ -63,8 +63,11 @@ fn walker_family_vec_kernels_bitwise_identical_to_scalar_at_width1() {
 #[test]
 fn atari_vec_kernels_bitwise_identical_to_scalar() {
     // Batched emulator lanes + shared preprocessing: bitwise parity on
-    // the full (4, 84, 84) observation tensors (lane width irrelevant:
-    // the emulator has no lane pass).
+    // the full (4, 84, 84) observation tensors. The emulator itself now
+    // runs as masked lane-group tick passes, but its contract is bitwise
+    // at *every* width (selects apply the identical scalar ops per lane),
+    // so Auto is fine here; `tests/atari_emulate_parity.rs` pins each
+    // width explicitly.
     for task in ["Pong-v5", "Breakout-v5"] {
         check_forloop_parity_lanes(task, 2, 9, 30, envpool::simd::LanePass::Auto);
     }
